@@ -1,0 +1,57 @@
+//! Quickstart: load an AOT-compiled MoE layer and run a forward pass.
+//!
+//! ```bash
+//! make artifacts            # once: python lowers the HLO programs
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the whole three-layer story in ~50 lines: the Pallas kernels
+//! and the JAX layer were lowered at build time; at run time Rust loads
+//! the HLO text, compiles it on the PJRT CPU client, and executes it —
+//! no python anywhere.
+
+use fastmoe::rng::Rng;
+use fastmoe::runtime::Runtime;
+use fastmoe::tensor::{HostTensor, TensorF32};
+
+fn main() -> fastmoe::Result<()> {
+    // 1. Open the artifact directory (reads manifest.json).
+    let rt = Runtime::open_default()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 2. Compile the fused MoE layer (gate → scatter → experts → combine).
+    let exe = rt.executable("quickstart_moe")?;
+    let meta = &exe.meta;
+    println!(
+        "artifact `{}`: {} experts, top-{}, batch {} × d_model {}",
+        meta.name,
+        meta.meta_usize("n_expert").unwrap(),
+        meta.meta_usize("top_k").unwrap(),
+        meta.meta_usize("nb").unwrap(),
+        meta.meta_usize("d_model").unwrap(),
+    );
+
+    // 3. Build random inputs straight from the manifest ABI.
+    let mut rng = Rng::new(42);
+    let inputs: Vec<HostTensor> = meta
+        .inputs
+        .iter()
+        .map(|spec| {
+            let mut t = TensorF32::zeros(&spec.shape);
+            rng.fill_normal(&mut t.data, 0.5);
+            HostTensor::F32(t)
+        })
+        .collect();
+
+    // 4. Execute and inspect.
+    let outputs = exe.run(&inputs)?;
+    let y = outputs[0].as_f32()?;
+    println!(
+        "output: shape {:?}, ‖y‖₂ = {:.4}, first row: {:?}",
+        y.shape,
+        y.l2_norm(),
+        &y.row(0)[..4.min(y.shape[1])]
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,407 @@
+"""AOT lowering driver: every run-time HLO program is produced here, once.
+
+``python -m compile.aot --out-dir ../artifacts --preset default``
+
+For each artifact we lower a jitted Layer-2 closure to **HLO text** (not a
+serialized ``HloModuleProto`` — jax >= 0.5 emits 64-bit instruction ids
+that the xla_extension 0.5.1 parser rejects; the text parser reassigns
+ids and round-trips cleanly) and record its ABI — input/output names,
+shapes, dtypes — plus the parameter registry of each model in
+``manifest.json``.  The Rust runtime (rust/src/runtime) consumes only the
+manifest and the ``.hlo.txt`` files.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import hashlib
+import json
+import os
+import sys
+import time
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import gpt, stages, train
+from .kernels import expert_ffn as expert_ffn_mod
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Preset:
+    """One compile-time configuration of every artifact family."""
+
+    name: str
+    # fig-5 fused layer family
+    nb: int
+    d_model: int
+    d_hidden: int
+    top_k: int
+    expert_counts: Tuple[int, ...]
+    # distributed stage family
+    ne_local: int
+    worker_counts: Tuple[int, ...]
+    buckets: Tuple[int, ...]
+    # fig-7 model family
+    gpt: gpt.GptConfig
+    gpt_batch: int
+    lr: float = 3e-4
+
+
+def _gpt_cfg(moe: bool, **kw) -> gpt.GptConfig:
+    return gpt.GptConfig(moe=moe, **kw)
+
+
+PRESETS: Dict[str, Preset] = {
+    "tiny": Preset(
+        name="tiny",
+        nb=64, d_model=32, d_hidden=64, top_k=2, expert_counts=(1, 2, 4),
+        ne_local=2, worker_counts=(1, 2, 4), buckets=(16, 32, 64, 128),
+        gpt=_gpt_cfg(True, vocab=64, seq=16, n_layer=2, d_model=32, n_head=2,
+                     d_hidden=64, n_expert=4, top_k=2),
+        gpt_batch=2,
+    ),
+    "default": Preset(
+        name="default",
+        nb=512, d_model=256, d_hidden=1024, top_k=2,
+        expert_counts=(1, 2, 4, 8, 16),
+        ne_local=4, worker_counts=(1, 2, 4, 8),
+        buckets=(64, 128, 256, 512, 1024, 2048),
+        gpt=_gpt_cfg(True, vocab=256, seq=128, n_layer=4, d_model=256,
+                     n_head=8, d_hidden=1024, n_expert=16, top_k=2),
+        gpt_batch=4,
+    ),
+    # Paper-scale shapes (V100 experiment of §5): compile-only sanity —
+    # lowering these proves the kernels/BlockSpecs handle the real sizes.
+    "paper": Preset(
+        name="paper",
+        nb=4096, d_model=1024, d_hidden=4096, top_k=2,
+        expert_counts=(2, 4, 8, 16),
+        ne_local=4, worker_counts=(2, 4, 8), buckets=(1024, 2048, 4096, 8192),
+        gpt=_gpt_cfg(True, vocab=50257, seq=1024, n_layer=12, d_model=1024,
+                     n_head=16, d_hidden=4096, n_expert=96, top_k=2),
+        gpt_batch=1,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Lowering machinery
+# ---------------------------------------------------------------------------
+
+DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    fn: Callable
+    inputs: List[Tuple[str, jax.ShapeDtypeStruct]]
+    meta: Dict
+
+    def lower(self) -> Tuple[str, List[Dict], List[Dict]]:
+        in_specs = [s for _, s in self.inputs]
+        # keep_unused: the positional ABI is part of the manifest
+        # contract — jit must not prune arguments the backward pass
+        # doesn't read (e.g. b2 in expert_bwd).
+        lowered = jax.jit(self.fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        out_tree = jax.eval_shape(self.fn, *in_specs)
+        outs = jax.tree_util.tree_leaves(out_tree)
+        in_desc = [
+            {"name": n, "shape": list(s.shape), "dtype": DTYPE_NAMES[s.dtype]}
+            for n, s in self.inputs
+        ]
+        out_desc = [
+            {"index": i, "shape": list(o.shape), "dtype": DTYPE_NAMES[o.dtype]}
+            for i, o in enumerate(outs)
+        ]
+        return text, in_desc, out_desc
+
+
+def f32(*shape):
+    return spec(shape, jnp.float32)
+
+
+def i32(*shape):
+    return spec(shape, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry per preset
+# ---------------------------------------------------------------------------
+
+def build_artifacts(p: Preset) -> List[Artifact]:
+    arts: List[Artifact] = []
+    d, dh, k, nb = p.d_model, p.d_hidden, p.top_k, p.nb
+
+    # ---- Figure 5: fused FastMoE layer vs naive baseline, fwd and grad ----
+    for ne in p.expert_counts:
+        cap = gpt.layers.capacity_for(nb, k, ne)
+        de = dh  # fig-5 compares at fixed expert size, like the paper
+        layer_inputs = [
+            ("x", f32(nb, d)), ("wg", f32(d, ne)), ("bg", f32(ne)),
+            ("w1", f32(ne, d, de)), ("b1", f32(ne, de)),
+            ("w2", f32(ne, de, d)), ("b2", f32(ne, d)),
+        ]
+        meta = {"family": "fig5", "nb": nb, "d_model": d, "d_hidden": de,
+                "n_expert": ne, "top_k": k, "capacity": cap}
+        arts.append(Artifact(
+            f"moe_fwd_e{ne}",
+            functools.partial(stages.fused_moe_fwd, k=k, capacity=cap),
+            layer_inputs, {**meta, "kind": "fused_fwd"}))
+        arts.append(Artifact(
+            f"moe_grad_e{ne}",
+            functools.partial(stages.fused_moe_grad, k=k, capacity=cap),
+            layer_inputs, {**meta, "kind": "fused_grad"}))
+        arts.append(Artifact(
+            f"naive_fwd_e{ne}",
+            functools.partial(stages.naive_moe_fwd, k=k),
+            layer_inputs, {**meta, "kind": "naive_fwd"}))
+        arts.append(Artifact(
+            f"naive_grad_e{ne}",
+            functools.partial(stages.naive_moe_grad, k=k),
+            layer_inputs, {**meta, "kind": "naive_grad"}))
+
+    # ---- Figure 3 support: single dense FFN (per-sample GEMV loop driver
+    # slices rows out of it; the sweep itself is built with XlaBuilder) ----
+    arts.append(Artifact(
+        "dense_ffn",
+        stages.dense_ffn_fwd,
+        [("x", f32(nb, d)), ("w1", f32(d, dh)), ("b1", f32(dh)),
+         ("w2", f32(dh, d)), ("b2", f32(d))],
+        {"family": "fig3", "nb": nb, "d_model": d, "d_hidden": dh,
+         "kind": "dense_fwd"}))
+
+    # ---- Distributed stage graphs (Figure 6 / distributed examples) ----
+    for w in p.worker_counts:
+        eg = w * p.ne_local
+        arts.append(Artifact(
+            f"gate_fwd_w{w}", stages.gate_fwd,
+            [("x", f32(nb, d)), ("wg", f32(d, eg)), ("bg", f32(eg))],
+            {"family": "stage", "kind": "gate_fwd", "nb": nb, "d_model": d,
+             "n_expert_global": eg, "workers": w}))
+        arts.append(Artifact(
+            f"gate_bwd_w{w}", stages.gate_bwd,
+            [("x", f32(nb, d)), ("wg", f32(d, eg)), ("dscores", f32(nb, eg))],
+            {"family": "stage", "kind": "gate_bwd", "nb": nb, "d_model": d,
+             "n_expert_global": eg, "workers": w}))
+    for b in p.buckets:
+        de = dh
+        shard = [
+            ("xs", f32(p.ne_local, b, d)),
+            ("w1", f32(p.ne_local, d, de)), ("b1", f32(p.ne_local, de)),
+            ("w2", f32(p.ne_local, de, d)), ("b2", f32(p.ne_local, d)),
+        ]
+        arts.append(Artifact(
+            f"expert_fwd_b{b}", stages.expert_fwd, shard,
+            {"family": "stage", "kind": "expert_fwd", "bucket": b,
+             "ne_local": p.ne_local, "d_model": d, "d_hidden": de}))
+        arts.append(Artifact(
+            f"expert_bwd_b{b}", stages.expert_bwd,
+            shard + [("dys", f32(p.ne_local, b, d))],
+            {"family": "stage", "kind": "expert_bwd", "bucket": b,
+             "ne_local": p.ne_local, "d_model": d, "d_hidden": de}))
+    n_slots = nb * k
+    arts.append(Artifact(
+        "combine_fwd", stages.combine_fwd,
+        [("ys", f32(n_slots, d)), ("slots", i32(nb, k)), ("w", f32(nb, k))],
+        {"family": "stage", "kind": "combine_fwd", "nb": nb, "top_k": k,
+         "n_slots": n_slots, "d_model": d}))
+    arts.append(Artifact(
+        "combine_bwd", stages.combine_bwd,
+        [("ys", f32(n_slots, d)), ("slots", i32(nb, k)), ("w", f32(nb, k)),
+         ("dout", f32(nb, d))],
+        {"family": "stage", "kind": "combine_bwd", "nb": nb, "top_k": k,
+         "n_slots": n_slots, "d_model": d}))
+
+    # ---- Figure 7: fused GPT train/eval/grad steps, MoE and dense ----
+    for moe in (True, False):
+        cfg = dataclasses.replace(p.gpt, moe=moe)
+        tag = "moe" if moe else "dense"
+        specs = gpt.param_specs(cfg)
+        tok = i32(p.gpt_batch, cfg.seq)
+        pspecs = [(s.name, f32(*s.shape)) for s in specs]
+
+        step_fn, _ = train.make_train_step(cfg, lr=p.lr)
+        arts.append(Artifact(
+            f"train_step_{tag}", step_fn,
+            [("tokens", tok), ("targets", tok), ("step", f32())]
+            + pspecs
+            + [(f"m:{n}", s) for n, s in pspecs]
+            + [(f"v:{n}", s) for n, s in pspecs],
+            {"family": "fig7", "kind": "train_step", "model": f"gpt_{tag}",
+             "batch": p.gpt_batch, "lr": p.lr}))
+
+        eval_fn, _ = train.make_eval_step(cfg)
+        arts.append(Artifact(
+            f"eval_step_{tag}", eval_fn,
+            [("tokens", tok), ("targets", tok)] + pspecs,
+            {"family": "fig7", "kind": "eval_step", "model": f"gpt_{tag}",
+             "batch": p.gpt_batch}))
+
+        grad_fn, _ = train.make_grad_step(cfg)
+        arts.append(Artifact(
+            f"grad_step_{tag}", grad_fn,
+            [("tokens", tok), ("targets", tok)] + pspecs,
+            {"family": "fig7", "kind": "grad_step", "model": f"gpt_{tag}",
+             "batch": p.gpt_batch}))
+
+    # ---- §6 future-work feature: balance-loss train step ----
+    cfg_bal = dataclasses.replace(p.gpt, moe=True)
+    specs = gpt.param_specs(cfg_bal)
+    tok = i32(p.gpt_batch, cfg_bal.seq)
+    pspecs = [(s.name, f32(*s.shape)) for s in specs]
+    bal_fn, _ = train.make_train_step(cfg_bal, lr=p.lr, balance_coef=0.01)
+    arts.append(Artifact(
+        "train_step_moe_bal", bal_fn,
+        [("tokens", tok), ("targets", tok), ("step", f32())]
+        + pspecs
+        + [(f"m:{n}", s) for n, s in pspecs]
+        + [(f"v:{n}", s) for n, s in pspecs],
+        {"family": "fig7", "kind": "train_step", "model": "gpt_moe_bal",
+         "batch": p.gpt_batch, "lr": p.lr, "balance_coef": 0.01}))
+
+    # ---- quickstart: one small fused MoE layer ----
+    qne, qnb, qd, qdh = 4, 64, 32, 64
+    qcap = gpt.layers.capacity_for(qnb, 2, qne)
+    arts.append(Artifact(
+        "quickstart_moe",
+        functools.partial(stages.fused_moe_fwd, k=2, capacity=qcap),
+        [("x", f32(qnb, qd)), ("wg", f32(qd, qne)), ("bg", f32(qne)),
+         ("w1", f32(qne, qd, qdh)), ("b1", f32(qne, qdh)),
+         ("w2", f32(qne, qdh, qd)), ("b2", f32(qne, qd))],
+        {"family": "quickstart", "kind": "fused_fwd", "nb": qnb,
+         "d_model": qd, "d_hidden": qdh, "n_expert": qne, "top_k": 2,
+         "capacity": qcap}))
+
+    return arts
+
+
+def model_manifest(p: Preset) -> Dict:
+    models = {}
+    for moe in (True, False):
+        cfg = dataclasses.replace(p.gpt, moe=moe)
+        tag = "moe" if moe else "dense"
+        models[f"gpt_{tag}"] = {
+            "config": {
+                "vocab": cfg.vocab, "seq": cfg.seq, "n_layer": cfg.n_layer,
+                "d_model": cfg.d_model, "n_head": cfg.n_head,
+                "d_hidden": cfg.d_hidden, "moe": cfg.moe,
+                "n_expert": cfg.n_expert, "top_k": cfg.top_k,
+                "batch": p.gpt_batch,
+                "flops_per_token": gpt.model_flops_per_token(cfg),
+            },
+            "params": [
+                {"name": s.name, "shape": list(s.shape), "init": s.init,
+                 "tag": s.tag}
+                for s in gpt.param_specs(cfg)
+            ],
+            "train_step": f"train_step_{tag}",
+            "eval_step": f"eval_step_{tag}",
+            "grad_step": f"grad_step_{tag}",
+        }
+    # gpt_moe with the balance-loss train step; identical registry
+    models["gpt_moe_bal"] = dict(
+        models["gpt_moe"], train_step="train_step_moe_bal"
+    )
+    return models
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="default", choices=sorted(PRESETS))
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    ap.add_argument("--report", action="store_true",
+                    help="print VMEM/roofline estimates and exit")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the manifest is up to date")
+    args = ap.parse_args(argv)
+
+    p = PRESETS[args.preset]
+    if args.report:
+        vf = expert_ffn_mod.vmem_floats(p.d_model, p.d_hidden)
+        print(f"preset={p.name}")
+        print(f"expert_ffn VMEM/step: {vf} floats = {vf*4/2**20:.2f} MiB "
+              f"(budget ~16 MiB)")
+        for moe in (True, False):
+            cfg = dataclasses.replace(p.gpt, moe=moe)
+            n_params = sum(
+                int(jnp.prod(jnp.array(s.shape))) for s in gpt.param_specs(cfg)
+            )
+            print(f"gpt_{'moe' if moe else 'dense'}: params={n_params:,} "
+                  f"flops/token={gpt.model_flops_per_token(cfg):,}")
+        return 0
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    arts = build_artifacts(p)
+    if args.only:
+        arts = [a for a in arts if args.only in a.name]
+
+    manifest = {
+        "version": 1,
+        "preset": p.name,
+        "preset_params": {
+            "nb": p.nb, "d_model": p.d_model, "d_hidden": p.d_hidden,
+            "top_k": p.top_k, "expert_counts": list(p.expert_counts),
+            "ne_local": p.ne_local, "worker_counts": list(p.worker_counts),
+            "buckets": list(p.buckets),
+        },
+        "artifacts": [],
+        "models": model_manifest(p),
+    }
+
+    t_all = time.time()
+    for a in arts:
+        path = os.path.join(args.out_dir, f"{a.name}.hlo.txt")
+        t0 = time.time()
+        text, in_desc, out_desc = a.lower()
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"].append({
+            "name": a.name,
+            "file": f"{a.name}.hlo.txt",
+            "sha256_16": digest,
+            "inputs": in_desc,
+            "outputs": out_desc,
+            "meta": a.meta,
+        })
+        print(f"  lowered {a.name:24s} {len(text)//1024:6d} KiB "
+              f"in {time.time()-t0:6.1f}s", flush=True)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(arts)} artifacts + manifest.json "
+          f"({time.time()-t_all:.1f}s total)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,231 @@
+"""The GPT model of §5.4: a Megatron-style decoder with MoE or dense FFNs.
+
+Parameters live in an explicit *registry* — an ordered list of
+``(name, shape, init, sync_tag)`` — rather than an opaque pytree, because
+the Rust coordinator owns the parameter store at run time: it initialises
+tensors from the manifest (never calling python), feeds them to the
+train-step executable positionally, and synchronises gradients according
+to the FastMoE §3.2 tags:
+
+* ``world``          — replicated everywhere (the gate), all-reduce over
+                       all workers;
+* ``data_parallel``  — replicated within a DP group (attention, norms,
+                       embeddings);
+* ``none``           — expert-parallel shards, never synchronised.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class GptConfig:
+    """Model hyper-parameters (mirrors rust/src/config)."""
+
+    vocab: int = 256
+    seq: int = 128
+    n_layer: int = 4
+    d_model: int = 256
+    n_head: int = 8
+    d_hidden: int = 1024        # dense FFN hidden size
+    moe: bool = True
+    n_expert: int = 16          # global expert count when moe=True
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    # When moe=True the hidden size is divided so that per-token FLOPs
+    # match the dense baseline with top_k experts active (§5.4: "d_h …
+    # halved so that the valid FLOPs of the model are almost identical").
+    @property
+    def d_hidden_expert(self) -> int:
+        return max(8, self.d_hidden // self.top_k)
+
+    @property
+    def tokens_per_batch(self) -> int:
+        return self.seq
+
+    def capacity(self, n_tokens: int) -> int:
+        return layers.capacity_for(
+            n_tokens, self.top_k, self.n_expert, self.capacity_factor
+        )
+
+
+# ---------------------------------------------------------------------------
+# Parameter registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    init: str          # "normal:<std>" | "zeros" | "ones"
+    tag: str           # "world" | "data_parallel" | "none"
+
+
+def param_specs(cfg: GptConfig) -> List[ParamSpec]:
+    """The ordered parameter registry for a model config."""
+    P: List[ParamSpec] = []
+    d, dh, v = cfg.d_model, cfg.d_hidden, cfg.vocab
+    std = 0.02
+    resid_std = std / max(1.0, (2 * cfg.n_layer) ** 0.5)
+
+    P.append(ParamSpec("embed/tok", (v, d), f"normal:{std}", "data_parallel"))
+    P.append(ParamSpec("embed/pos", (cfg.seq, d), f"normal:{std}", "data_parallel"))
+    for l in range(cfg.n_layer):
+        pre = f"layer{l}"
+        P += [
+            ParamSpec(f"{pre}/ln1/g", (d,), "ones", "data_parallel"),
+            ParamSpec(f"{pre}/ln1/b", (d,), "zeros", "data_parallel"),
+            ParamSpec(f"{pre}/attn/wqkv", (d, 3 * d), f"normal:{std}", "data_parallel"),
+            ParamSpec(f"{pre}/attn/bqkv", (3 * d,), "zeros", "data_parallel"),
+            ParamSpec(f"{pre}/attn/wo", (d, d), f"normal:{resid_std}", "data_parallel"),
+            ParamSpec(f"{pre}/attn/bo", (d,), "zeros", "data_parallel"),
+            ParamSpec(f"{pre}/ln2/g", (d,), "ones", "data_parallel"),
+            ParamSpec(f"{pre}/ln2/b", (d,), "zeros", "data_parallel"),
+        ]
+        if cfg.moe:
+            de = cfg.d_hidden_expert
+            ne = cfg.n_expert
+            P += [
+                ParamSpec(f"{pre}/moe/gate/w", (d, ne), f"normal:{std}", "world"),
+                ParamSpec(f"{pre}/moe/gate/b", (ne,), "zeros", "world"),
+                ParamSpec(f"{pre}/moe/expert/w1", (ne, d, de), f"normal:{std}", "none"),
+                ParamSpec(f"{pre}/moe/expert/b1", (ne, de), "zeros", "none"),
+                ParamSpec(f"{pre}/moe/expert/w2", (ne, de, d), f"normal:{resid_std}", "none"),
+                ParamSpec(f"{pre}/moe/expert/b2", (ne, d), "zeros", "none"),
+            ]
+        else:
+            P += [
+                ParamSpec(f"{pre}/ffn/w1", (d, dh), f"normal:{std}", "data_parallel"),
+                ParamSpec(f"{pre}/ffn/b1", (dh,), "zeros", "data_parallel"),
+                ParamSpec(f"{pre}/ffn/w2", (dh, d), f"normal:{resid_std}", "data_parallel"),
+                ParamSpec(f"{pre}/ffn/b2", (d,), "zeros", "data_parallel"),
+            ]
+    P += [
+        ParamSpec("final_ln/g", (d,), "ones", "data_parallel"),
+        ParamSpec("final_ln/b", (d,), "zeros", "data_parallel"),
+        ParamSpec("head/w", (d, v), f"normal:{std}", "data_parallel"),
+    ]
+    return P
+
+
+def init_params(cfg: GptConfig, key) -> Dict[str, jax.Array]:
+    """Initialise parameters per the registry (python-side mirror of the
+    Rust initialiser; used only by python tests)."""
+    out = {}
+    for spec in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if spec.init == "zeros":
+            out[spec.name] = jnp.zeros(spec.shape, jnp.float32)
+        elif spec.init == "ones":
+            out[spec.name] = jnp.ones(spec.shape, jnp.float32)
+        else:
+            std = float(spec.init.split(":")[1])
+            out[spec.name] = std * jax.random.normal(sub, spec.shape, jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def gpt_logits(params: Dict[str, jax.Array], tokens, cfg: GptConfig,
+               *, interpret: bool = True, with_aux: bool = False):
+    """Forward over ``tokens: [batch, seq] int32`` -> ``[batch, seq, vocab]``.
+
+    The MoE FFN flattens (batch, seq) into one token batch so experts see
+    a single contiguous GEMM per layer — exactly the paper's batching
+    principle.
+    """
+    b, s = tokens.shape
+    assert s == cfg.seq, f"seq {s} != cfg.seq {cfg.seq}"
+    x = params["embed/tok"][tokens] + params["embed/pos"][None, :, :]
+
+    n_tok = b * s
+    cap = cfg.capacity(n_tok)
+    aux_total = jnp.float32(0.0)
+    for l in range(cfg.n_layer):
+        pre = f"layer{l}"
+        h = layers.layernorm(x, params[f"{pre}/ln1/g"], params[f"{pre}/ln1/b"])
+        att = jax.vmap(
+            lambda hh: layers.causal_attention(
+                hh,
+                params[f"{pre}/attn/wqkv"],
+                params[f"{pre}/attn/bqkv"],
+                params[f"{pre}/attn/wo"],
+                params[f"{pre}/attn/bo"],
+                cfg.n_head,
+            )
+        )(h)
+        x = x + att
+        h = layers.layernorm(x, params[f"{pre}/ln2/g"], params[f"{pre}/ln2/b"])
+        flat = h.reshape(n_tok, cfg.d_model)
+        if cfg.moe:
+            margs = (
+                flat,
+                params[f"{pre}/moe/gate/w"],
+                params[f"{pre}/moe/gate/b"],
+                params[f"{pre}/moe/expert/w1"],
+                params[f"{pre}/moe/expert/b1"],
+                params[f"{pre}/moe/expert/w2"],
+                params[f"{pre}/moe/expert/b2"],
+            )
+            if with_aux:
+                y, aux = layers.moe_ffn_with_aux(
+                    *margs, k=cfg.top_k, capacity=cap, interpret=interpret
+                )
+                aux_total = aux_total + aux
+            else:
+                y = layers.moe_ffn(
+                    *margs, k=cfg.top_k, capacity=cap, interpret=interpret
+                )
+        else:
+            y = layers.dense_ffn(
+                flat,
+                params[f"{pre}/ffn/w1"],
+                params[f"{pre}/ffn/b1"],
+                params[f"{pre}/ffn/w2"],
+                params[f"{pre}/ffn/b2"],
+            )
+        x = x + y.reshape(b, s, cfg.d_model)
+
+    x = layers.layernorm(x, params["final_ln/g"], params["final_ln/b"])
+    logits = x @ params["head/w"]
+    if with_aux:
+        return logits, aux_total / max(1, cfg.n_layer)
+    return logits
+
+
+def lm_loss(params, tokens, targets, cfg: GptConfig, *, interpret: bool = True,
+            balance_coef: float = 0.0):
+    """Mean cross-entropy next-token loss (the paper's ``lm loss``),
+    optionally plus the GShard balance loss (§6 future work)."""
+    if balance_coef > 0.0:
+        logits, aux = gpt_logits(params, tokens, cfg, interpret=interpret,
+                                 with_aux=True)
+    else:
+        logits = gpt_logits(params, tokens, cfg, interpret=interpret)
+        aux = 0.0
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + balance_coef * aux
+
+
+def model_flops_per_token(cfg: GptConfig) -> int:
+    """Matmul FLOPs per token per fwd pass (the paper's Fig-6 metric)."""
+    d, s = cfg.d_model, cfg.seq
+    attn = 2 * d * 3 * d + 2 * s * d + 2 * s * d + 2 * d * d  # qkv + scores + av + proj
+    if cfg.moe:
+        ffn = cfg.top_k * (2 * d * cfg.d_hidden_expert * 2)
+        gate = 2 * d * cfg.n_expert
+    else:
+        ffn = 2 * d * cfg.d_hidden * 2
+        gate = 0
+    head = 2 * d * cfg.vocab
+    return cfg.n_layer * (attn + ffn + gate) + head

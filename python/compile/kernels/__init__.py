@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for the FastMoE reproduction.
+
+Every kernel here is the compute hot-spot of one stage of an MoE layer:
+
+* :mod:`gate`       — gate score GEMM (``x @ Wg + bg``), row-block tiled.
+* :mod:`scatter`    — row scatter (tokens -> expert-contiguous slots) and
+                      the weighted gather/combine that reverses it.
+* :mod:`expert_ffn` — the grouped per-expert FFN (the ``FMoELinear``
+                      analog): grid over (expert, row-block, hidden-block)
+                      with f32 accumulation.
+
+All kernels lower with ``interpret=True`` so the emitted HLO runs on the
+CPU PJRT client; block shapes are nevertheless chosen for the TPU
+MXU/VMEM mapping documented in DESIGN.md §7.  Numerical correctness is
+pinned to the pure-jnp oracles in :mod:`ref` by ``python/tests``.
+"""
+
+from .gate import gate_scores
+from .scatter import combine_rows, scatter_rows
+from .expert_ffn import expert_ffn
+
+__all__ = ["gate_scores", "scatter_rows", "combine_rows", "expert_ffn"]

@@ -1,0 +1,206 @@
+"""Grouped per-expert FFN kernel — the ``FMoELinear`` analog.
+
+This is the paper's compute hot-spot.  FastMoE's CUDA version batches the
+rows of each expert into one GEMM and overlaps experts on CUDA streams.
+The TPU mapping (DESIGN.md §7): a 3-D grid over
+
+    (expert e, row-block c, hidden-block h)
+
+where each step performs two MXU matmuls on VMEM tiles and accumulates
+the second projection in f32:
+
+    y[e, c] += gelu(x[e, c] @ w1[e, :, h] + b1[e, h]) @ w2[e, h, :]
+
+Because GeLU is elementwise over the hidden axis, tiling the hidden
+dimension commutes with the activation, so the y-block is revisited
+(classic k-loop accumulation) and the peak VMEM per step is
+
+    bm*d_m + d_m*bh + bh + bh*d_m + bm*d_m   floats,
+
+reported per artifact by ``aot.py --report``.  Streams are unnecessary on
+TPU: the expert axis is just the slowest grid dimension, and cross-expert
+overlap moves up to the Rust coordinator (worker shards).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+DEFAULT_BLOCK_HIDDEN = 512
+
+
+def _ffn_whole_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """Single-step variant: all operands resident, one grouped einsum.
+
+    Used when lowering for the CPU PJRT backend: interpret-mode pallas
+    pays ~10 ms of callback machinery *per grid step* (measured in
+    EXPERIMENTS.md §Perf), so CPU artifacts collapse the grid; the tiled
+    kernel above is the TPU mapping and stays under test.
+    """
+    x = x_ref[...].astype(jnp.float32)
+    w1 = w1_ref[...].astype(jnp.float32)
+    b1 = b1_ref[...].astype(jnp.float32)
+    w2 = w2_ref[...].astype(jnp.float32)
+    b2 = b2_ref[...].astype(jnp.float32)
+    h = jax.nn.gelu(jnp.einsum("ecd,edh->ech", x, w1) + b1[:, None, :])
+    o_ref[...] = (jnp.einsum("ech,ehd->ecd", h, w2) + b2[:, None, :]).astype(
+        o_ref.dtype
+    )
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    h_idx = pl.program_id(2)
+    n_h = pl.num_programs(2)
+
+    x = x_ref[0].astype(jnp.float32)     # [bm, d_m]
+    w1 = w1_ref[0].astype(jnp.float32)   # [d_m, bh]
+    b1 = b1_ref[0].astype(jnp.float32)   # [bh]
+    w2 = w2_ref[0].astype(jnp.float32)   # [bh, d_m]
+    b2 = b2_ref[0].astype(jnp.float32)   # [d_m]
+
+    h = jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1[None, :]
+    h = jax.nn.gelu(h)
+    acc = jnp.dot(h, w2, preferred_element_type=jnp.float32)
+
+    @pl.when(h_idx == 0)
+    def _init():
+        o_ref[0] = (acc + b2[None, :]).astype(o_ref.dtype)
+
+    @pl.when(h_idx != 0)
+    def _accum():
+        o_ref[0] = (o_ref[0].astype(jnp.float32) + acc).astype(o_ref.dtype)
+
+    del n_h
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "block_hidden", "interpret", "whole")
+)
+def _expert_ffn_call(
+    x,
+    w1,
+    b1,
+    w2,
+    b2,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_hidden: int = DEFAULT_BLOCK_HIDDEN,
+    interpret: bool = True,
+    whole: bool = False,
+):
+    if whole:
+        return pl.pallas_call(
+            _ffn_whole_kernel,
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=interpret,
+        )(x, w1, b1, w2, b2)
+    """Apply each expert's two-layer GeLU FFN to its row batch.
+
+    Args:
+      x:  ``[n_e, cap, d_m]`` expert-contiguous inputs (zeros at padding).
+      w1: ``[n_e, d_m, d_h]``; b1: ``[n_e, d_h]``.
+      w2: ``[n_e, d_h, d_m]``; b2: ``[n_e, d_m]``.
+      block_rows / block_hidden: VMEM tile sizes for the row and hidden
+        grid axes (padded up when the dims are smaller).
+
+    Returns:
+      ``[n_e, cap, d_m]`` expert outputs (same dtype as ``x``).
+
+    Note: padding rows (zero inputs) produce ``gelu(b1) @ w2 + b2`` —
+    *not* zero.  The combine step never reads padding slots, so this is
+    harmless in the MoE layer; the oracle in ``ref.py`` matches this
+    behaviour exactly so tests stay honest.
+    """
+    n_e, cap, d_m = x.shape
+    assert w1.shape[0] == n_e and w1.shape[1] == d_m
+    d_h = w1.shape[2]
+    assert b1.shape == (n_e, d_h)
+    assert w2.shape == (n_e, d_h, d_m)
+    assert b2.shape == (n_e, d_m)
+
+    bm = min(block_rows, cap)
+    bh = min(block_hidden, d_h)
+    pad_c = (-cap) % bm
+    pad_h = (-d_h) % bh
+    if pad_c:
+        x = jnp.pad(x, ((0, 0), (0, pad_c), (0, 0)))
+    if pad_h:
+        w1 = jnp.pad(w1, ((0, 0), (0, 0), (0, pad_h)))
+        b1 = jnp.pad(b1, ((0, 0), (0, pad_h)))
+        # Padding the hidden axis adds gelu(0)=0 rows times w2 zeros: but
+        # gelu(b1_pad=0)=0, and w2 pad rows are zero, so the sum is exact.
+        w2 = jnp.pad(w2, ((0, 0), (0, pad_h), (0, 0)))
+    grid = (n_e, (cap + pad_c) // bm, (d_h + pad_h) // bh)
+
+    out = pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, d_m), lambda e, c, h: (e, c, 0)),
+            pl.BlockSpec((1, d_m, bh), lambda e, c, h: (e, 0, h)),
+            pl.BlockSpec((1, bh), lambda e, c, h: (e, h)),
+            pl.BlockSpec((1, bh, d_m), lambda e, c, h: (e, h, 0)),
+            pl.BlockSpec((1, d_m), lambda e, c, h: (e, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, d_m), lambda e, c, h: (e, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_e, cap + pad_c, d_m), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+    return out[:, :cap]
+
+
+def expert_ffn(x, w1, b1, w2, b2, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+               block_hidden: int = DEFAULT_BLOCK_HIDDEN,
+               interpret: bool = True, whole: bool = False):
+    """Differentiable wrapper around the grouped-FFN Pallas kernel.
+
+    The backward pass is recompute-style (FastMoE's CUDA backward also
+    re-runs the first GEMM rather than saving the huge hidden tensor):
+    the pre-activations are rebuilt from ``x`` and the five cotangents
+    are batched-over-experts f32 GEMMs.
+    """
+
+    def impl(x_, w1_, b1_, w2_, b2_):
+        return _expert_ffn_call(x_, w1_, b1_, w2_, b2_,
+                                block_rows=block_rows,
+                                block_hidden=block_hidden,
+                                interpret=interpret, whole=whole)
+
+    f = jax.custom_vjp(impl)
+
+    def fwd(x_, w1_, b1_, w2_, b2_):
+        return impl(x_, w1_, b1_, w2_, b2_), (x_, w1_, b1_, w2_, b2_)
+
+    def bwd(res, dy):
+        x_, w1_, b1_, w2_, b2_ = res
+        x32 = x_.astype(jnp.float32)
+        w1_32 = w1_.astype(jnp.float32)
+        w2_32 = w2_.astype(jnp.float32)
+        dy32 = dy.astype(jnp.float32)
+        # Recompute pre-activations: s[e] = x[e] @ w1[e] + b1[e]
+        s = jnp.einsum("ecd,edh->ech", x32, w1_32) + b1_.astype(jnp.float32)[:, None, :]
+        h, gelu_vjp = jax.vjp(jax.nn.gelu, s)
+        dh_pre = jnp.einsum("ecd,ehd->ech", dy32, w2_32)
+        (ds,) = gelu_vjp(dh_pre)
+        dx = jnp.einsum("ech,edh->ecd", ds, w1_32).astype(x_.dtype)
+        dw1 = jnp.einsum("ecd,ech->edh", x32, ds).astype(w1_.dtype)
+        db1 = jnp.sum(ds, axis=1).astype(b1_.dtype)
+        dw2 = jnp.einsum("ech,ecd->ehd", h, dy32).astype(w2_.dtype)
+        db2 = jnp.sum(dy32, axis=1).astype(b2_.dtype)
+        return dx, dw1, db1, dw2, db2
+
+    f.defvjp(fwd, bwd)
+    return f(x, w1, b1, w2, b2)
+
+
+def vmem_floats(d_m: int, d_h: int, block_rows: int = DEFAULT_BLOCK_ROWS,
+                block_hidden: int = DEFAULT_BLOCK_HIDDEN) -> int:
+    """Peak VMEM floats per grid step (for aot.py --report / DESIGN.md §7)."""
+    bm = block_rows
+    bh = min(block_hidden, d_h)
+    return bm * d_m + d_m * bh + bh + bh * d_m + d_m + bm * d_m

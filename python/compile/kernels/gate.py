@@ -1,0 +1,101 @@
+"""Gate score kernel: ``scores = x @ Wg + bg``.
+
+The gate of an MoE layer scores every token against every expert.  It is
+a skinny GEMM (``n_e`` is small compared to ``d_m``), so the kernel tiles
+only the token dimension: each grid step loads one row block of ``x``
+plus the whole (small) gate weight into VMEM and issues a single MXU
+matmul.  Accumulation is always f32 regardless of the input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-block: multiple of 8 sublanes; 128 keeps the MXU systolic array busy
+# and bounds the VMEM footprint at bm*(d_m + n_e)*4 bytes per step.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _gate_kernel(x_ref, wg_ref, bg_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    wg = wg_ref[...].astype(jnp.float32)
+    bg = bg_ref[...].astype(jnp.float32)
+    o_ref[...] = (jnp.dot(x, wg, preferred_element_type=jnp.float32) + bg[None, :]).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _gate_scores_call(x, wg, bg, *, block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
+    """Compute gate scores for every (token, expert) pair.
+
+    Args:
+      x:  ``[n_b, d_m]`` token features.
+      wg: ``[d_m, n_e]`` gate weight.
+      bg: ``[n_e]`` gate bias.
+      block_rows: token-dimension tile size (padded up if ``n_b`` smaller).
+      interpret: run the Pallas kernel in interpret mode (required for the
+        CPU PJRT path; see DESIGN.md §7).
+
+    Returns:
+      ``[n_b, n_e]`` f32 scores (pre-softmax logits).
+    """
+    n_b, d_m = x.shape
+    d_m2, n_e = wg.shape
+    assert d_m == d_m2, f"gate dim mismatch: {d_m} vs {d_m2}"
+    assert bg.shape == (n_e,)
+
+    bm = min(block_rows, n_b)
+    pad = (-n_b) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = ((n_b + pad) // bm,)
+
+    out = pl.pallas_call(
+        _gate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d_m), lambda i: (i, 0)),
+            pl.BlockSpec((d_m, n_e), lambda i: (0, 0)),
+            pl.BlockSpec((n_e,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n_e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_b + pad, n_e), jnp.float32),
+        interpret=interpret,
+    )(x, wg, bg)
+    return out[:n_b]
+
+
+def gate_scores(x, wg, bg, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                interpret: bool = True):
+    """Differentiable wrapper around the Pallas gate kernel.
+
+    Pallas calls have no automatic transpose rule, so the backward pass
+    is supplied explicitly: the three gate GEMM cotangents as plain f32
+    XLA matmuls (on TPU these hit the MXU exactly like a kernel would;
+    the paper's contribution is the *forward* dispatch machinery).
+    """
+
+    def impl(x_, wg_, bg_):
+        return _gate_scores_call(x_, wg_, bg_, block_rows=block_rows,
+                                 interpret=interpret)
+
+    f = jax.custom_vjp(impl)
+
+    def fwd(x_, wg_, bg_):
+        return impl(x_, wg_, bg_), (x_, wg_)
+
+    def bwd(res, ds):
+        x_, wg_ = res
+        ds32 = ds.astype(jnp.float32)
+        dx = (ds32 @ wg_.astype(jnp.float32).T).astype(x_.dtype)
+        dwg = (x_.astype(jnp.float32).T @ ds32).astype(wg_.dtype)
+        dbg = jnp.sum(ds32, axis=0).astype(bg.dtype)
+        return dx, dwg, dbg
+
+    f.defvjp(fwd, bwd)
+    return f(x, wg, bg)

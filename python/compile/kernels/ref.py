@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are deliberately written with the most obvious jnp formulation —
+no pallas, no tiling, no padding tricks — and serve as the correctness
+ground truth for ``python/tests/test_kernels.py`` (hypothesis sweeps) and,
+transitively, for the Rust integration tests that execute the lowered
+HLO artifacts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gate_scores_ref(x, wg, bg):
+    """``[n_b, d_m] @ [d_m, n_e] + [n_e] -> f32 [n_b, n_e]``."""
+    return (x.astype(jnp.float32) @ wg.astype(jnp.float32)) + bg.astype(jnp.float32)
+
+
+def scatter_rows_ref(x, src, n_slots):
+    """Slot s gets row ``x[src[s]]``; src < 0 (padding) gets zeros."""
+    gathered = jnp.where(
+        (src >= 0)[:, None],
+        x[jnp.clip(src, 0, x.shape[0] - 1)],
+        jnp.zeros((n_slots, x.shape[1]), x.dtype),
+    )
+    return gathered
+
+
+def combine_rows_ref(y, slots, w):
+    """``out[i] = sum_j w[i,j] * y[slots[i,j]]``, OOB slots contribute 0."""
+    n_slots = y.shape[0]
+    valid = (slots >= 0) & (slots < n_slots)
+    g = y[jnp.clip(slots, 0, n_slots - 1)].astype(jnp.float32)  # [n_b, k, d_m]
+    g = jnp.where(valid[..., None], g, 0.0)
+    return jnp.sum(g * w.astype(jnp.float32)[..., None], axis=1).astype(y.dtype)
+
+
+def expert_ffn_ref(x, w1, b1, w2, b2):
+    """Per-expert ``gelu(x @ w1 + b1) @ w2 + b2`` in f32 accumulation."""
+
+    def one(xe, w1e, b1e, w2e, b2e):
+        h = jax.nn.gelu(
+            xe.astype(jnp.float32) @ w1e.astype(jnp.float32) + b1e.astype(jnp.float32)
+        )
+        return (h @ w2e.astype(jnp.float32) + b2e.astype(jnp.float32)).astype(x.dtype)
+
+    return jax.vmap(one)(x, w1, b1, w2, b2)
+
+
+def topk_compat(x, k):
+    """Top-k via argsort (ties -> lower index), returning (values, idx).
+
+    ``jax.lax.top_k`` lowers to the `topk` HLO instruction, which the
+    pinned XLA 0.5.1 text parser predates; argsort lowers to `sort`,
+    which round-trips.  Semantics match `lax.top_k` exactly for our use
+    (stable descending order).
+    """
+    # indices are a non-differentiable routing choice: stop gradients
+    # before the sort (also sidesteps sort-JVP entirely)
+    idx = jnp.argsort(jax.lax.stop_gradient(-x), axis=-1, stable=True)[..., :k]
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    return vals, idx
+
+
+def topk_gate_ref(scores, k):
+    """Softmax -> top-k -> renormalised weights (Algorithm 1).
+
+    Returns ``(weights [n_b, k] f32, indices [n_b, k] i32)``.
+    """
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    w, idx = topk_compat(probs, k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return w, idx.astype(jnp.int32)
+
+
+def moe_layer_ref(x, wg, bg, w1, b1, w2, b2, k, capacity):
+    """Whole-layer oracle: loop over tokens/choices, no batching at all.
+
+    The most literal transcription of Algorithm 1 plus GShard-style
+    capacity dropping (token order priority within each expert).  Used to
+    validate the fused pallas layer end to end.
+    """
+    n_b = x.shape[0]
+    n_e = wg.shape[1]
+    scores = gate_scores_ref(x, wg, bg)
+    w, idx = topk_gate_ref(scores, k)
+
+    # Capacity bookkeeping in plain python semantics via cumsum ranks.
+    flat_e = idx.reshape(-1)  # [n_b * k], token-major
+    onehot = jax.nn.one_hot(flat_e, n_e, dtype=jnp.int32)
+    rank = jnp.cumsum(onehot, axis=0) - 1  # occurrences before+self per expert
+    pos_in_e = jnp.take_along_axis(rank, flat_e[:, None], axis=1)[:, 0]
+    kept = pos_in_e < capacity
+
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    ffn_all = expert_ffn_ref(
+        jnp.broadcast_to(x, (n_e,) + x.shape), w1, b1, w2, b2
+    )  # [n_e, n_b, d_m]: every expert applied to every token (oracle only)
+    for i in range(n_b):
+        for j in range(k):
+            flat = i * k + j
+            e = flat_e[flat]
+            contrib = jnp.where(
+                kept[flat], w[i, j] * ffn_all[e, i].astype(jnp.float32), 0.0
+            )
+            y = y.at[i].add(contrib)
+    return y.astype(x.dtype)

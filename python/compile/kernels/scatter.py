@@ -1,0 +1,200 @@
+"""Row scatter / weighted gather kernels (FastMoE's §4 data shuffle).
+
+FastMoE's core single-device insight: tokens routed to the same expert
+must be *contiguous* so the expert sees one batched GEMM instead of many
+GEMVs.  ``scatter_rows`` materialises the expert-contiguous layout from a
+slot->source index map; ``combine_rows`` reverses it, weighting each of a
+token's ``k`` expert outputs by its gate score (Algorithm 1's synthesis
+step).
+
+Index conventions (shared with the Rust ``moe::DispatchPlan``):
+
+* ``src[s]``  — for output slot ``s``, the source token row, or ``-1``
+  for a padding slot (capacity slack).  Padding slots produce zero rows.
+* ``slots[i, j]`` — for token ``i``, the slot holding its ``j``-th expert
+  output, or an out-of-range sentinel (``>= n_slots``) when the
+  assignment was dropped by capacity; dropped assignments contribute 0.
+
+On TPU the index map is a scalar-prefetch operand; under interpret mode
+the same kernel body runs with numpy semantics.  The feature matrix is
+kept whole in VMEM per grid step (documented trade-off: row-permute is
+bandwidth-bound, so blocking the *output* rows is what matters).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _scatter_kernel(src_ref, x_ref, o_ref):
+    src = src_ref[...]
+    x = x_ref[...]
+    # Negative indices would *wrap* under jnp.take, so remap the -1
+    # padding sentinel to an out-of-range index first; mode="fill" then
+    # yields exact zero rows for every padding slot.
+    src = jnp.where(src < 0, x.shape[0], src)
+    o_ref[...] = jnp.take(x, src, axis=0, mode="fill", fill_value=0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots", "block_rows", "interpret"))
+def _scatter_rows_call(x, src, *, n_slots: int, block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
+    """Scatter token rows into expert-contiguous slots.
+
+    Args:
+      x:   ``[n_b, d_m]`` token features.
+      src: ``[n_slots]`` int32 source row per slot (``-1`` = padding).
+      n_slots: total slot count (``n_e * capacity`` in the fused layer).
+
+    Returns:
+      ``[n_slots, d_m]`` scattered features, zeros at padding slots.
+    """
+    n_b, d_m = x.shape
+    assert src.shape == (n_slots,)
+    bm = min(block_rows, n_slots)
+    pad = (-n_slots) % bm
+    if pad:
+        src = jnp.pad(src, (0, pad), constant_values=-1)
+    grid = ((n_slots + pad) // bm,)
+
+    out = pl.pallas_call(
+        _scatter_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((n_b, d_m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d_m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_slots + pad, d_m), x.dtype),
+        interpret=interpret,
+    )(src, x)
+    return out[:n_slots]
+
+
+def scatter_rows(x, src, *, n_slots: int, block_rows: int = DEFAULT_BLOCK_ROWS,
+                 interpret: bool = True):
+    """Differentiable wrapper: forward is the Pallas scatter; backward is
+    the transposed movement, a segment scatter-add back to token order
+    (``dx[src[s]] += dxs[s]``), expressed as an XLA scatter-add."""
+
+    def impl(x_):
+        return _scatter_rows_call(x_, src, n_slots=n_slots,
+                                  block_rows=block_rows, interpret=interpret)
+
+    f = jax.custom_vjp(impl)
+
+    def fwd(x_):
+        return impl(x_), (x_.shape[0],)
+
+    def bwd(res, dxs):
+        (n_b,) = res
+        valid = src >= 0
+        idx = jnp.where(valid, src, n_b)  # OOB -> dropped by mode="drop"
+        contrib = jnp.where(valid[:, None], dxs.astype(jnp.float32), 0.0)
+        dx = (
+            jnp.zeros((n_b + 1, dxs.shape[1]), jnp.float32)
+            .at[idx]
+            .add(contrib, mode="drop")[:n_b]
+        )
+        return (dx.astype(x.dtype),)
+
+    f.defvjp(fwd, bwd)
+    return f(x)
+
+
+def _combine_kernel(slots_ref, w_ref, y_ref, o_ref):
+    slots = slots_ref[...]          # [bm, k]
+    w = w_ref[...].astype(jnp.float32)  # [bm, k]
+    y = y_ref[...].astype(jnp.float32)  # [n_slots, d_m]
+    # Gather each token's k expert outputs; OOB sentinel -> zero row.
+    # (negative would wrap under jnp.take, remap like the scatter kernel)
+    slots = jnp.where(slots < 0, y.shape[0], slots)
+    g = jnp.take(y, slots, axis=0, mode="fill", fill_value=0)  # [bm, k, d_m]
+    o_ref[...] = jnp.sum(g * w[..., None], axis=1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _combine_rows_call(y, slots, w, *, block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
+    """Weighted gather: recombine expert outputs into token order.
+
+    Args:
+      y:     ``[n_slots, d_m]`` expert outputs in scattered slot order.
+      slots: ``[n_b, k]`` int32 slot per (token, choice); OOB = dropped.
+      w:     ``[n_b, k]`` gate weights.
+
+    Returns:
+      ``[n_b, d_m]`` combined outputs, ``out[i] = sum_j w[i,j] * y[slots[i,j]]``.
+    """
+    n_slots, d_m = y.shape
+    n_b, k = slots.shape
+    assert w.shape == (n_b, k)
+    bm = min(block_rows, n_b)
+    pad = (-n_b) % bm
+    if pad:
+        slots = jnp.pad(slots, ((0, pad), (0, 0)), constant_values=n_slots)
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    grid = ((n_b + pad) // bm,)
+
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((n_slots, d_m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d_m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_b + pad, d_m), y.dtype),
+        interpret=interpret,
+    )(slots, w, y)
+    return out[:n_b]
+
+
+def combine_rows(y, slots, w, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                 interpret: bool = True):
+    """Differentiable wrapper around the Pallas combine.
+
+    Backward (both cotangents follow Algorithm 1's synthesis step):
+      ``dy[slots[i,j]] += w[i,j] * dout[i]``   (scatter-add) and
+      ``dw[i,j] = <y[slots[i,j]], dout[i]>``   (per-assignment dot).
+    """
+
+    def impl(y_, w_):
+        return _combine_rows_call(y_, slots, w_, block_rows=block_rows,
+                                  interpret=interpret)
+
+    f = jax.custom_vjp(impl)
+
+    def fwd(y_, w_):
+        return impl(y_, w_), (y_, w_)
+
+    def bwd(res, dout):
+        y_, w_ = res
+        n_slots, d_m = y_.shape
+        n_b, k = slots.shape
+        dout32 = dout.astype(jnp.float32)
+        valid = (slots >= 0) & (slots < n_slots)
+        flat_slots = jnp.where(valid, slots, n_slots).reshape(-1)
+        contrib = (w_.astype(jnp.float32)[..., None] * dout32[:, None, :])
+        contrib = jnp.where(valid[..., None], contrib, 0.0).reshape(-1, d_m)
+        dy = (
+            jnp.zeros((n_slots + 1, d_m), jnp.float32)
+            .at[flat_slots]
+            .add(contrib, mode="drop")[:n_slots]
+        ).astype(y_.dtype)
+        g = jnp.take(
+            y_.astype(jnp.float32),
+            jnp.where(valid, slots, n_slots),
+            axis=0, mode="fill", fill_value=0,
+        )  # [n_b, k, d_m]
+        dw = jnp.sum(g * dout32[:, None, :], axis=-1)
+        dw = jnp.where(valid, dw, 0.0).astype(w_.dtype)
+        return dy, dw
+
+    f.defvjp(fwd, bwd)
+    return f(y, w)

@@ -1,0 +1,189 @@
+"""Layer-2 building blocks: attention, layernorm, MoE-FFN, dense FFN.
+
+This module is the JAX analog of FastMoE's ``FMoETransformerMLP`` plus
+the surrounding Megatron-style transformer block.  The MoE FFN composes
+the Layer-1 Pallas kernels (gate GEMM -> scatter -> grouped expert FFN ->
+weighted combine) around a GShard-style capacity-bounded top-k dispatch.
+
+Everything here is build-time python: ``aot.py`` lowers jitted closures
+of these functions to HLO text once, and the Rust runtime replays them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import combine_rows, expert_ffn, gate_scores, scatter_rows
+from .kernels.ref import topk_gate_ref
+
+
+# ---------------------------------------------------------------------------
+# Plain transformer pieces (jnp — XLA fuses these well; the paper's
+# hot-spot, and our Pallas budget, is the MoE FFN).
+# ---------------------------------------------------------------------------
+
+def layernorm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def causal_attention(x, wqkv, bqkv, wo, bo, n_head: int):
+    """Multi-head causal self-attention over ``x: [seq, d_m]``."""
+    seq, d_m = x.shape
+    d_head = d_m // n_head
+    qkv = x @ wqkv + bqkv                      # [seq, 3*d_m]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(seq, n_head, d_head).transpose(1, 0, 2)
+
+    q, k, v = heads(q), heads(k), heads(v)     # [h, seq, d_head]
+    att = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(d_head))
+    mask = jnp.tril(jnp.ones((seq, seq), bool))
+    att = jnp.where(mask[None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", att, v)   # [h, seq, d_head]
+    out = out.transpose(1, 0, 2).reshape(seq, d_m)
+    return out @ wo + bo
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch (GShard-style capacity-bounded top-k) — pure jnp index math;
+# the data movement it parameterises is done by the Pallas kernels.
+# ---------------------------------------------------------------------------
+
+def moe_dispatch(idx, n_e: int, capacity: int):
+    """Build scatter/combine index maps from top-k expert assignments.
+
+    Args:
+      idx: ``[n_b, k]`` int32 expert ids per token (top-k order).
+      n_e: number of experts; capacity: max rows per expert.
+
+    Returns:
+      ``src``   ``[n_e * capacity]`` int32: source token per slot, -1 pad.
+      ``slots`` ``[n_b, k]`` int32: slot per assignment, OOB when dropped.
+
+    Within one expert, slots are granted in token order (token 0 first),
+    matching the Rust ``DispatchPlan`` and the paper's drop policy.
+    """
+    n_b, k = idx.shape
+    n_slots = n_e * capacity
+    flat_e = idx.reshape(-1)                                   # [n_b*k]
+    onehot = (flat_e[:, None] == jnp.arange(n_e)[None, :]).astype(jnp.int32)
+    rank = jnp.cumsum(onehot, axis=0) - 1                      # [n_b*k, n_e]
+    pos_in_e = jnp.take_along_axis(rank, flat_e[:, None], axis=1)[:, 0]
+    kept = pos_in_e < capacity
+    slot = flat_e * capacity + pos_in_e                        # valid iff kept
+    slots = jnp.where(kept, slot, n_slots).astype(jnp.int32).reshape(n_b, k)
+
+    token_of_flat = (jnp.arange(n_b * k) // k).astype(jnp.int32)
+    src = jnp.full((n_slots + 1,), -1, jnp.int32)
+    src = src.at[jnp.where(kept, slot, n_slots)].set(
+        jnp.where(kept, token_of_flat, -1), mode="drop"
+    )[:n_slots]
+    return src, slots
+
+
+_BIG = 1 << 30  # block size covering any dim: single-grid-step kernels
+
+
+def moe_ffn(x, wg, bg, w1, b1, w2, b2, *, k: int, capacity: int,
+            interpret: bool = True, fast: bool = True):
+    """The FastMoE MoE-FFN over a flat token batch ``x: [n_b, d_m]``.
+
+    gate GEMM (L1) -> softmax/top-k -> dispatch -> scatter (L1) ->
+    grouped expert FFN (L1) -> weighted combine (L1).
+
+    ``fast=True`` lowers the kernels with whole-array blocks (one grid
+    step): the right configuration for the CPU PJRT backend, where
+    interpret-mode pallas pays ~10 ms of callback machinery per grid
+    step (EXPERIMENTS.md §Perf).  ``fast=False`` keeps the tiled TPU
+    BlockSpecs (DESIGN.md §7).
+    """
+    n_b, d_m = x.shape
+    n_e = wg.shape[1]
+    k = min(k, n_e)  # e.g. the fig-5 n_e=1 point degenerates to top-1
+    br = _BIG if fast else 128
+    scores = gate_scores(x, wg, bg, block_rows=br, interpret=interpret)
+    w, idx = topk_gate_ref(scores, k)
+    src, slots = moe_dispatch(idx, n_e, capacity)
+    xs = scatter_rows(x, src, n_slots=n_e * capacity, block_rows=br,
+                      interpret=interpret)
+    ys = expert_ffn(xs.reshape(n_e, capacity, d_m), w1, b1, w2, b2,
+                    interpret=interpret, whole=fast)
+    return combine_rows(ys.reshape(n_e * capacity, d_m), slots, w,
+                        block_rows=br, interpret=interpret)
+
+
+def naive_moe_ffn(x, wg, bg, w1, b1, w2, b2, *, k: int):
+    """The Rau-(2019)-style baseline: no batched dispatch, no kernels.
+
+    Every expert runs over the *whole* batch and the result is masked by
+    the gate weights — the straightforward "pure framework ops" MoE that
+    the paper benchmarks against in Figure 5.  Cost grows linearly with
+    the number of experts regardless of how few tokens each receives.
+    """
+    n_e = wg.shape[1]
+    k = min(k, n_e)
+    scores = x.astype(jnp.float32) @ wg.astype(jnp.float32) + bg
+    w, idx = topk_gate_ref(scores, k)
+    # dense [n_b, n_e] gate weight matrix (0 where an expert is unselected)
+    full_w = jnp.zeros((x.shape[0], n_e), jnp.float32).at[
+        jnp.arange(x.shape[0])[:, None], idx
+    ].set(w)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for e in range(n_e):  # deliberate python loop == sequential experts
+        h = jax.nn.gelu(x.astype(jnp.float32) @ w1[e] + b1[e])
+        ye = h @ w2[e] + b2[e]
+        out = out + full_w[:, e : e + 1] * ye
+    return out.astype(x.dtype)
+
+
+def dense_ffn(x, w1, b1, w2, b2):
+    """Plain transformer FFN (the non-MoE baseline of §5.4)."""
+    h = jax.nn.gelu(x.astype(jnp.float32) @ w1.astype(jnp.float32) + b1)
+    return (h @ w2.astype(jnp.float32) + b2).astype(x.dtype)
+
+
+def moe_ffn_with_aux(x, wg, bg, w1, b1, w2, b2, *, k: int, capacity: int,
+                     interpret: bool = True, fast: bool = True):
+    """MoE FFN that also returns the GShard auxiliary balance loss.
+
+    The paper lists load-balance loss support as future work (§6); this
+    implements it: ``aux = n_e · Σ_e f_e · p_e`` where ``f_e`` is the
+    fraction of assignments routed to expert e and ``p_e`` the mean
+    softmax gate probability of e.  Minimised (=1) at a uniform load.
+    """
+    n_b, _ = x.shape
+    n_e = wg.shape[1]
+    k = min(k, n_e)
+    br = _BIG if fast else 128
+    scores = gate_scores(x, wg, bg, block_rows=br, interpret=interpret)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    w, idx = topk_gate_ref(scores, k)
+    src, slots = moe_dispatch(idx, n_e, capacity)
+
+    # f_e from the (non-differentiable) routing counts; p_e carries grads
+    counts = jnp.sum(
+        (idx.reshape(-1)[:, None] == jnp.arange(n_e)[None, :]).astype(jnp.float32),
+        axis=0,
+    )
+    f = counts / jnp.maximum(1.0, jnp.sum(counts))
+    p = jnp.mean(probs, axis=0)
+    aux = n_e * jnp.sum(jax.lax.stop_gradient(f) * p)
+
+    xs = scatter_rows(x, src, n_slots=n_e * capacity, block_rows=br,
+                      interpret=interpret)
+    ys = expert_ffn(xs.reshape(n_e, capacity, x.shape[1]), w1, b1, w2, b2,
+                    interpret=interpret, whole=fast)
+    y = combine_rows(ys.reshape(n_e * capacity, x.shape[1]), slots, w,
+                     interpret=interpret)
+    return y, aux
+
+
+def capacity_for(n_b: int, k: int, n_e: int, factor: float = 1.25) -> int:
+    """GShard capacity rule, rounded up to a multiple of 8 (sublanes)."""
+    cap = int((n_b * k / n_e) * factor + 0.999)
+    return max(8, (cap + 7) // 8 * 8)

@@ -1,0 +1,170 @@
+"""Stage-split graphs for the distributed runtime + fused fig-5 layers.
+
+The distributed (expert-parallel) MoE layer runs as a chain of small HLO
+programs with the Rust coordinator doing the routing between them
+(DESIGN.md §4).  Forward:
+
+    gate_fwd -> [host: top-k softmax, counts, Fig-2 all-to-all, scatter]
+    expert_fwd (bucketed rows) -> [host: all-to-all back] -> combine_fwd
+
+Backward mirrors it with ``combine_bwd``, ``expert_bwd`` (recompute-style
+vjp) and ``gate_bwd``.  Expert row counts vary per iteration, so expert
+graphs are compiled per power-of-two *bucket* and inputs are zero-padded
+to the bucket — the static-shape analog of FastMoE's dynamic buffers.
+
+Gating convention (identical in fused, staged and Rust code): select
+top-k raw scores, then softmax over exactly those k scores.  For
+renormalised-softmax gates this is mathematically the same weights, and
+it makes the host-side backward a local k-way softmax Jacobian.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .kernels import combine_rows, expert_ffn, gate_scores
+
+
+# ---------------------------------------------------------------------------
+# Gate stages
+# ---------------------------------------------------------------------------
+
+_BIG = 1 << 30  # whole-array blocks: single grid step (CPU PJRT config)
+
+
+def gate_fwd(x, wg, bg, *, interpret: bool = True):
+    """``[n_b, d_m] -> [n_b, n_e_global]`` raw gate scores (L1 kernel)."""
+    return (gate_scores(x, wg, bg, block_rows=_BIG, interpret=interpret),)
+
+
+def gate_bwd(x, wg, dscores):
+    """Backward of the gate GEMM: returns ``(dx, dwg, dbg)``."""
+    x32 = x.astype(jnp.float32)
+    ds = dscores.astype(jnp.float32)
+    dx = ds @ wg.astype(jnp.float32).T
+    dwg = x32.T @ ds
+    dbg = jnp.sum(ds, axis=0)
+    return dx.astype(x.dtype), dwg, dbg
+
+
+# ---------------------------------------------------------------------------
+# Expert shard stages (bucketed)
+# ---------------------------------------------------------------------------
+
+def expert_fwd(xs, w1, b1, w2, b2, *, interpret: bool = True):
+    """Grouped FFN over one worker's expert shard: ``[n_e_l, B, d_m]``."""
+    return (expert_ffn(xs, w1, b1, w2, b2, interpret=interpret, whole=True),)
+
+
+def expert_bwd(xs, w1, b1, w2, b2, dys, *, interpret: bool = True):
+    """Recompute-style vjp of :func:`expert_fwd`.
+
+    Returns ``(dxs, dw1, db1, dw2, db2)``.  Padding rows carry zero
+    cotangents (the host zero-fills them), so their spurious forward
+    values contribute nothing.
+    """
+    def f(xs_, w1_, b1_, w2_, b2_):
+        return expert_ffn(xs_, w1_, b1_, w2_, b2_, interpret=interpret,
+                          whole=True)
+
+    _, vjp = jax.vjp(f, xs, w1, b1, w2, b2)
+    return vjp(dys)
+
+
+# ---------------------------------------------------------------------------
+# Combine stages
+# ---------------------------------------------------------------------------
+
+def combine_fwd(ys, slots, w, *, interpret: bool = True):
+    """Weighted gather back to token order: ``(y_slots, slots, w) -> out``."""
+    return (combine_rows(ys, slots, w, block_rows=_BIG, interpret=interpret),)
+
+
+def combine_bwd(ys, slots, w, dout, *, interpret: bool = True):
+    """vjp of :func:`combine_fwd` wrt ``(ys, w)`` -> ``(dys, dw)``."""
+    def f(ys_, w_):
+        return combine_rows(ys_, slots, w_, block_rows=_BIG,
+                            interpret=interpret)
+
+    _, vjp = jax.vjp(f, ys, w)
+    return vjp(dout)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-device layers (Figure 5)
+# ---------------------------------------------------------------------------
+
+def fused_moe_fwd(x, wg, bg, w1, b1, w2, b2, *, k: int, capacity: int,
+                  interpret: bool = True):
+    """Whole MoE layer in one program (the FastMoE single-GPU path)."""
+    return (
+        layers.moe_ffn(x, wg, bg, w1, b1, w2, b2, k=k, capacity=capacity,
+                       interpret=interpret),
+    )
+
+
+def fused_moe_grad(x, wg, bg, w1, b1, w2, b2, *, k: int, capacity: int,
+                   interpret: bool = True):
+    """Training-shaped fused layer: loss = mean(y²)/2, grads wrt all inputs.
+
+    Returns ``(loss, dx, dwg, dbg, dw1, db1, dw2, db2)`` — the fig-5
+    "forward + backward" configuration.
+    """
+    def loss_fn(x_, wg_, bg_, w1_, b1_, w2_, b2_):
+        y = layers.moe_ffn(x_, wg_, bg_, w1_, b1_, w2_, b2_, k=k,
+                           capacity=capacity, interpret=interpret)
+        return 0.5 * jnp.mean(jnp.square(y.astype(jnp.float32)))
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2, 3, 4, 5, 6))(
+        x, wg, bg, w1, b1, w2, b2
+    )
+    return (loss,) + grads
+
+
+def naive_moe_fwd(x, wg, bg, w1, b1, w2, b2, *, k: int):
+    """The pure-framework-ops baseline layer (no kernels, no dispatch)."""
+    return (layers.naive_moe_ffn(x, wg, bg, w1, b1, w2, b2, k=k),)
+
+
+def naive_moe_grad(x, wg, bg, w1, b1, w2, b2, *, k: int):
+    def loss_fn(x_, wg_, bg_, w1_, b1_, w2_, b2_):
+        y = layers.naive_moe_ffn(x_, wg_, bg_, w1_, b1_, w2_, b2_, k=k)
+        return 0.5 * jnp.mean(jnp.square(y.astype(jnp.float32)))
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2, 3, 4, 5, 6))(
+        x, wg, bg, w1, b1, w2, b2
+    )
+    return (loss,) + grads
+
+
+def dense_ffn_fwd(x, w1, b1, w2, b2):
+    """Dense FFN reference layer (per-sample-loop baseline feeds it row
+    slices; fig-3's GEMM-vs-GEMV cliff is driven from Rust XlaBuilder)."""
+    return (layers.dense_ffn(x, w1, b1, w2, b2),)
+
+
+# ---------------------------------------------------------------------------
+# Host-side gating reference (mirrors rust/src/moe/topk.rs; python tests
+# pin the Rust implementation to this).
+# ---------------------------------------------------------------------------
+
+def topk_softmax(scores, k: int):
+    """Top-k raw scores -> softmax over the selected k. Returns (w, idx)."""
+    from .kernels.ref import topk_compat
+
+    s, idx = topk_compat(scores.astype(jnp.float32), k)
+    w = jax.nn.softmax(s, axis=-1)
+    return w, idx.astype(jnp.int32)
+
+
+def topk_softmax_bwd(scores, k: int, dw):
+    """Backward of :func:`topk_softmax` wrt raw scores (scatter k-way
+    softmax Jacobian into the full score matrix)."""
+    def f(s):
+        w, _ = topk_softmax(s, k)
+        return w
+
+    _, vjp = jax.vjp(f, scores)
+    return vjp(dw)[0]

@@ -1,0 +1,111 @@
+"""Fused train/eval steps (Layer-2) lowered once by aot.py.
+
+The train step is one HLO program: forward, backward, and the Adam
+update.  The Rust coordinator owns the parameter and optimizer tensors
+and calls this executable with them positionally every iteration —
+python is never on the iteration path.
+
+Positional ABI (recorded in the manifest and relied on by
+``rust/src/model``):
+
+    inputs  = [tokens, targets, step] + params + m + v
+    outputs = (loss,) + new_params + new_m + new_v
+
+where ``params``/``m``/``v`` follow the registry order of
+:func:`compile.gpt.param_specs`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import gpt
+
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def adam_update(p, g, m, v, step, lr: float, weight_decay: float = 0.0):
+    """Single-tensor Adam with bias correction; matches rust/src/model/adam.rs."""
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m / (1.0 - ADAM_B1**step)
+    vhat = v / (1.0 - ADAM_B2**step)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + weight_decay * p)
+    return p, m, v
+
+
+def make_train_step(cfg: gpt.GptConfig, lr: float = 3e-4,
+                    *, interpret: bool = True, balance_coef: float = 0.0):
+    """Return ``step(tokens, targets, step_no, *flat_state)`` for lowering.
+
+    ``balance_coef > 0`` adds the GShard load-balance auxiliary loss
+    (the paper's §6 future-work feature)."""
+    specs = gpt.param_specs(cfg)
+    names = [s.name for s in specs]
+    n = len(names)
+
+    def unflatten(flat: List[jax.Array]) -> Dict[str, jax.Array]:
+        return dict(zip(names, flat))
+
+    def step_fn(tokens, targets, step_no, *flat_state):
+        assert len(flat_state) == 3 * n
+        params = unflatten(list(flat_state[:n]))
+        m_st = list(flat_state[n : 2 * n])
+        v_st = list(flat_state[2 * n :])
+
+        def loss_fn(p):
+            return gpt.lm_loss(p, tokens, targets, cfg, interpret=interpret,
+                               balance_coef=balance_coef)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_p, new_m, new_v = [], [], []
+        for i, name in enumerate(names):
+            p2, m2, v2 = adam_update(
+                params[name], grads[name], m_st[i], v_st[i], step_no, lr
+            )
+            new_p.append(p2)
+            new_m.append(m2)
+            new_v.append(v2)
+        return tuple([loss] + new_p + new_m + new_v)
+
+    return step_fn, specs
+
+
+def make_eval_step(cfg: gpt.GptConfig, *, interpret: bool = True):
+    """Return ``eval(tokens, targets, *params) -> (loss,)`` for lowering."""
+    specs = gpt.param_specs(cfg)
+    names = [s.name for s in specs]
+
+    def eval_fn(tokens, targets, *flat_params):
+        params = dict(zip(names, flat_params))
+        return (gpt.lm_loss(params, tokens, targets, cfg, interpret=interpret),)
+
+    return eval_fn, specs
+
+
+def make_grad_step(cfg: gpt.GptConfig, *, interpret: bool = True):
+    """Return ``grad(tokens, targets, *params) -> (loss, *grads)``.
+
+    Used by the *distributed* fig-7 path: each worker computes grads on
+    its shard of the batch; the Rust ``GradSync`` all-reduces them by tag
+    and the host-side Adam (rust/src/model/adam.rs) applies the update.
+    """
+    specs = gpt.param_specs(cfg)
+    names = [s.name for s in specs]
+
+    def grad_fn(tokens, targets, *flat_params):
+        params = dict(zip(names, flat_params))
+
+        def loss_fn(p):
+            return gpt.lm_loss(p, tokens, targets, cfg, interpret=interpret)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return tuple([loss] + [grads[nm] for nm in names])
+
+    return grad_fn, specs

@@ -1,0 +1,16 @@
+"""Shared fixtures: seeded numpy generators and common shape strategies."""
+
+import os
+import sys
+
+# allow `pytest python/tests/` from the repo root (the `compile`
+# package lives in python/)
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xFA57)

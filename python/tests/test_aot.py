@@ -1,0 +1,91 @@
+"""AOT pipeline integrity: manifest completeness, ABI descriptions,
+round-trippable HLO text."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, gpt
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART_DIR, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def test_presets_well_formed():
+    for name, p in aot.PRESETS.items():
+        assert p.name == name
+        assert p.top_k <= min(p.expert_counts) or min(p.expert_counts) == 1
+        assert all(b > 0 for b in p.buckets)
+        assert list(p.buckets) == sorted(p.buckets)
+        # bucket list must cover the worst case: every token of the batch
+        # routed to ONE local expert from every worker
+        assert max(p.buckets) >= p.nb * p.top_k // p.ne_local
+
+
+def test_artifact_registry_names_unique():
+    arts = aot.build_artifacts(aot.PRESETS["tiny"])
+    names = [a.name for a in arts]
+    assert len(set(names)) == len(names)
+    for a in arts:
+        assert a.meta.get("family"), a.name
+
+
+@needs_artifacts
+def test_manifest_covers_every_family():
+    with open(MANIFEST) as f:
+        m = json.load(f)
+    fams = {a["meta"]["family"] for a in m["artifacts"]}
+    assert {"fig5", "fig3", "stage", "fig7", "quickstart"} <= fams
+    # every artifact file exists and is non-trivial HLO text
+    for a in m["artifacts"]:
+        p = os.path.join(ART_DIR, a["file"])
+        assert os.path.exists(p), a["name"]
+        with open(p) as f:
+            head = f.read(200)
+        assert "HloModule" in head, a["name"]
+
+
+@needs_artifacts
+def test_manifest_abi_matches_param_registry():
+    with open(MANIFEST) as f:
+        m = json.load(f)
+    for model_name, model in m["models"].items():
+        cfg = model["config"]
+        gcfg = gpt.GptConfig(
+            vocab=cfg["vocab"], seq=cfg["seq"], n_layer=cfg["n_layer"],
+            d_model=cfg["d_model"], n_head=cfg["n_head"],
+            d_hidden=cfg["d_hidden"], moe=cfg["moe"],
+            n_expert=cfg["n_expert"], top_k=cfg["top_k"],
+        )
+        specs = gpt.param_specs(gcfg)
+        assert [p["name"] for p in model["params"]] == [s.name for s in specs]
+        assert [tuple(p["shape"]) for p in model["params"]] == [
+            s.shape for s in specs
+        ]
+        # the train step ABI: tokens, targets, step, params, m, v
+        art = {a["name"]: a for a in m["artifacts"]}[model["train_step"]]
+        n = len(specs)
+        assert len(art["inputs"]) == 3 + 3 * n
+        assert len(art["outputs"]) == 1 + 3 * n
+        assert art["inputs"][0]["dtype"] == "i32"
+        # param slots match registry shapes positionally
+        for i, s in enumerate(specs):
+            assert tuple(art["inputs"][3 + i]["shape"]) == s.shape
+
+
+@needs_artifacts
+def test_every_init_spec_is_parseable():
+    with open(MANIFEST) as f:
+        m = json.load(f)
+    for model in m["models"].values():
+        for p in model["params"]:
+            init = p["init"]
+            assert init in ("zeros", "ones") or init.startswith("normal:")
+            if init.startswith("normal:"):
+                float(init.split(":")[1])
+            assert p["tag"] in ("world", "data_parallel", "none")

@@ -1,0 +1,62 @@
+"""§6 future-work feature: the GShard balance loss implementation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import layers
+
+
+def _mk(rng, nb=24, dm=8, dh=16, ne=4):
+    return dict(
+        x=jnp.asarray(rng.standard_normal((nb, dm)), jnp.float32),
+        wg=jnp.asarray(rng.standard_normal((dm, ne)), jnp.float32),
+        bg=jnp.zeros(ne, jnp.float32),
+        w1=jnp.asarray(rng.standard_normal((ne, dm, dh)) * 0.3, jnp.float32),
+        b1=jnp.zeros((ne, dh), jnp.float32),
+        w2=jnp.asarray(rng.standard_normal((ne, dh, dm)) * 0.3, jnp.float32),
+        b2=jnp.zeros((ne, dm), jnp.float32),
+    )
+
+
+def test_aux_output_matches_plain_layer(rng):
+    p = _mk(rng)
+    y0 = layers.moe_ffn(**p, k=2, capacity=48)
+    y1, aux = layers.moe_ffn_with_aux(**p, k=2, capacity=48)
+    np.testing.assert_allclose(y0, y1, rtol=1e-5, atol=1e-6)
+    assert float(aux) >= 1.0 - 1e-3  # n_e·Σf·p is minimised at 1
+
+
+def test_aux_is_one_when_perfectly_balanced():
+    # gate bias forces a uniform softmax; idx distribution round-robins
+    nb, dm, ne = 16, 4, 4
+    p = dict(
+        x=jnp.zeros((nb, dm), jnp.float32),
+        wg=jnp.zeros((dm, ne), jnp.float32),
+        bg=jnp.zeros(ne, jnp.float32),
+        w1=jnp.zeros((ne, dm, 8), jnp.float32),
+        b1=jnp.zeros((ne, 8), jnp.float32),
+        w2=jnp.zeros((ne, 8, dm), jnp.float32),
+        b2=jnp.zeros((ne, dm), jnp.float32),
+    )
+    _, aux = layers.moe_ffn_with_aux(**p, k=2, capacity=nb * 2)
+    # probs uniform (=1/4 each); f uniform over chosen experts
+    assert abs(float(aux) - 1.0) < 1e-5
+
+
+def test_aux_gradient_pushes_toward_balance(rng):
+    """The gate gradient of the aux loss must reduce the probability of
+    the over-loaded expert."""
+    p = _mk(rng, nb=32)
+    # bias the gate hard toward expert 0
+    p["bg"] = jnp.asarray([5.0, 0.0, 0.0, 0.0], jnp.float32)
+
+    def aux_only(bg):
+        q = dict(p, bg=bg)
+        _, aux = layers.moe_ffn_with_aux(**q, k=2, capacity=64)
+        return aux
+
+    g = jax.grad(aux_only)(p["bg"])
+    # gradient on the hot expert's bias must be the most positive one
+    # (gradient descent will lower it)
+    assert int(jnp.argmax(g)) == 0, np.asarray(g)

@@ -1,0 +1,216 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes and block sizes — the core correctness
+signal for the whole stack (the Rust runtime executes HLO lowered from
+exactly these kernels).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    combine_rows,
+    expert_ffn,
+    gate_scores,
+    ref,
+    scatter_rows,
+)
+
+F_DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-4, atol=2e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# gate_scores
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(1, 200),
+    dm=st.integers(1, 96),
+    ne=st.integers(1, 32),
+    block=st.sampled_from([8, 32, 128]),
+    dtype=F_DTYPES,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gate_scores_matches_ref(nb, dm, ne, block, dtype, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((nb, dm)), dtype)
+    wg = jnp.asarray(r.standard_normal((dm, ne)), dtype)
+    bg = jnp.asarray(r.standard_normal(ne), jnp.float32)
+    got = gate_scores(x, wg, bg, block_rows=block)
+    want = ref.gate_scores_ref(x, wg, bg)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# scatter_rows
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(1, 128),
+    dm=st.integers(1, 64),
+    n_slots=st.integers(1, 256),
+    block=st.sampled_from([8, 64, 128]),
+    dtype=F_DTYPES,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_scatter_rows_matches_ref(nb, dm, n_slots, block, dtype, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((nb, dm)), dtype)
+    src = jnp.asarray(r.integers(-1, nb, n_slots), jnp.int32)
+    got = scatter_rows(x, src, n_slots=n_slots, block_rows=block)
+    want = ref.scatter_rows_ref(x, src, n_slots)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=0, atol=0
+    )  # pure data movement must be exact
+
+
+def test_scatter_all_padding():
+    x = jnp.ones((4, 8), jnp.float32)
+    src = jnp.full((16,), -1, jnp.int32)
+    out = scatter_rows(x, src, n_slots=16)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# combine_rows
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(1, 128),
+    dm=st.integers(1, 64),
+    n_slots=st.integers(1, 200),
+    k=st.integers(1, 4),
+    block=st.sampled_from([8, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_combine_rows_matches_ref(nb, dm, n_slots, k, block, seed):
+    r = np.random.default_rng(seed)
+    y = jnp.asarray(r.standard_normal((n_slots, dm)), jnp.float32)
+    # include OOB sentinels (dropped assignments)
+    slots = jnp.asarray(r.integers(0, n_slots + 3, (nb, k)), jnp.int32)
+    w = jnp.asarray(r.random((nb, k)), jnp.float32)
+    got = combine_rows(y, slots, w, block_rows=block)
+    want = ref.combine_rows_ref(y, slots, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_combine_all_dropped_is_zero():
+    y = jnp.ones((8, 4), jnp.float32)
+    slots = jnp.full((5, 2), 8, jnp.int32)  # all OOB
+    w = jnp.ones((5, 2), jnp.float32)
+    out = combine_rows(y, slots, w)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# expert_ffn
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ne=st.integers(1, 8),
+    cap=st.integers(1, 64),
+    dm=st.integers(1, 48),
+    dh=st.integers(1, 96),
+    br=st.sampled_from([8, 16, 128]),
+    bh=st.sampled_from([16, 32, 512]),
+    dtype=F_DTYPES,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_expert_ffn_matches_ref(ne, cap, dm, dh, br, bh, dtype, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((ne, cap, dm)), dtype)
+    w1 = jnp.asarray(r.standard_normal((ne, dm, dh)) * 0.2, dtype)
+    b1 = jnp.asarray(r.standard_normal((ne, dh)) * 0.1, jnp.float32).astype(dtype)
+    w2 = jnp.asarray(r.standard_normal((ne, dh, dm)) * 0.2, dtype)
+    b2 = jnp.asarray(r.standard_normal((ne, dm)) * 0.1, jnp.float32).astype(dtype)
+    got = expert_ffn(x, w1, b1, w2, b2, block_rows=br, block_hidden=bh)
+    want = ref.expert_ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_expert_ffn_hidden_accumulation_exact():
+    """Tiling the hidden axis must not change the result (k-loop accum)."""
+    r = np.random.default_rng(7)
+    x = jnp.asarray(r.standard_normal((2, 16, 8)), jnp.float32)
+    w1 = jnp.asarray(r.standard_normal((2, 8, 64)) * 0.3, jnp.float32)
+    b1 = jnp.asarray(r.standard_normal((2, 64)) * 0.1, jnp.float32)
+    w2 = jnp.asarray(r.standard_normal((2, 64, 8)) * 0.3, jnp.float32)
+    b2 = jnp.asarray(r.standard_normal((2, 8)) * 0.1, jnp.float32)
+    full = expert_ffn(x, w1, b1, w2, b2, block_hidden=64)
+    tiled = expert_ffn(x, w1, b1, w2, b2, block_hidden=16)
+    np.testing.assert_allclose(full, tiled, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Gradients through the custom VJPs
+# ---------------------------------------------------------------------------
+
+def test_gate_scores_grad_matches_ref(rng):
+    x = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    bg = jnp.asarray(rng.standard_normal(8), jnp.float32)
+
+    def f_kern(x, wg, bg):
+        return jnp.sum(jnp.sin(gate_scores(x, wg, bg)))
+
+    def f_ref(x, wg, bg):
+        return jnp.sum(jnp.sin(ref.gate_scores_ref(x, wg, bg)))
+
+    g1 = jax.grad(f_kern, argnums=(0, 1, 2))(x, wg, bg)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(x, wg, bg)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_scatter_combine_grads_roundtrip(rng):
+    """scatter with a true permutation then combine(k=1, w=1) is identity;
+    its gradient must be the identity too."""
+    nb, dm = 16, 8
+    x = jnp.asarray(rng.standard_normal((nb, dm)), jnp.float32)
+    perm = rng.permutation(nb).astype(np.int32)
+    src = jnp.asarray(perm)
+    slots = jnp.asarray(np.argsort(perm)[:, None].astype(np.int32))
+    w = jnp.ones((nb, 1), jnp.float32)
+
+    def f(x):
+        xs = scatter_rows(x, src, n_slots=nb)
+        return jnp.sum(combine_rows(xs, slots, w) * jnp.arange(nb)[:, None])
+
+    g = jax.grad(f)(x)
+    want = jnp.broadcast_to(jnp.arange(nb, dtype=jnp.float32)[:, None], (nb, dm))
+    np.testing.assert_allclose(g, want, rtol=1e-6)
+
+
+def test_expert_ffn_grad_matches_ref(rng):
+    ne, cap, dm, dh = 3, 12, 8, 16
+    x = jnp.asarray(rng.standard_normal((ne, cap, dm)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((ne, dm, dh)) * 0.3, jnp.float32)
+    b1 = jnp.asarray(rng.standard_normal((ne, dh)) * 0.1, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((ne, dh, dm)) * 0.3, jnp.float32)
+    b2 = jnp.asarray(rng.standard_normal((ne, dm)) * 0.1, jnp.float32)
+
+    def mk(fn):
+        def f(*args):
+            return 0.5 * jnp.mean(fn(*args) ** 2)
+        return f
+
+    g1 = jax.grad(mk(expert_ffn), argnums=tuple(range(5)))(x, w1, b1, w2, b2)
+    g2 = jax.grad(mk(ref.expert_ffn_ref), argnums=tuple(range(5)))(x, w1, b1, w2, b2)
+    for a, b, nm in zip(g1, g2, ["x", "w1", "b1", "w2", "b2"]):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=1e-6, err_msg=nm)

@@ -1,0 +1,267 @@
+"""GPT model + train step: shapes, FLOPs parity, loss decrease, stages."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import gpt, stages, train
+
+TINY = gpt.GptConfig(
+    vocab=64, seq=16, n_layer=2, d_model=32, n_head=2, d_hidden=64,
+    moe=True, n_expert=4, top_k=2,
+)
+TINY_DENSE = dataclasses.replace(TINY, moe=False)
+
+
+@pytest.fixture(scope="module")
+def params_moe():
+    return gpt.init_params(TINY, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def params_dense():
+    return gpt.init_params(TINY_DENSE, jax.random.PRNGKey(0))
+
+
+def _batch(cfg, b=2, seed=0):
+    r = np.random.default_rng(seed)
+    tok = jnp.asarray(r.integers(0, cfg.vocab, (b, cfg.seq)), jnp.int32)
+    tgt = jnp.asarray(r.integers(0, cfg.vocab, (b, cfg.seq)), jnp.int32)
+    return tok, tgt
+
+
+def test_registry_tags_partition():
+    """Every parameter has exactly one sync tag; experts are `none`,
+    the gate is `world` (FastMoE §3.2)."""
+    specs = gpt.param_specs(TINY)
+    for s in specs:
+        assert s.tag in ("world", "data_parallel", "none")
+        if "/moe/gate/" in s.name:
+            assert s.tag == "world"
+        if "/moe/expert/" in s.name:
+            assert s.tag == "none"
+        if "/attn/" in s.name or s.name.startswith("embed"):
+            assert s.tag == "data_parallel"
+    assert len({s.name for s in specs}) == len(specs)
+
+
+def test_logits_shape(params_moe):
+    tok, _ = _batch(TINY)
+    logits = gpt.gpt_logits(params_moe, tok, TINY)
+    assert logits.shape == (2, TINY.seq, TINY.vocab)
+
+
+def test_initial_loss_near_uniform(params_moe):
+    tok, tgt = _batch(TINY)
+    loss = gpt.lm_loss(params_moe, tok, tgt, TINY)
+    assert abs(float(loss) - np.log(TINY.vocab)) < 0.5
+
+
+def test_flops_parity_moe_vs_dense():
+    """§5.4: expert hidden size is divided by top_k so per-token FLOPs of
+    MoE and dense models match (up to the negligible gate)."""
+    f_moe = gpt.model_flops_per_token(TINY)
+    f_dense = gpt.model_flops_per_token(TINY_DENSE)
+    gate = TINY.n_layer * 2 * TINY.d_model * TINY.n_expert
+    assert abs(f_moe - f_dense) <= gate
+
+
+def test_train_step_decreases_loss(params_moe):
+    cfg = TINY
+    step_fn, specs = train.make_train_step(cfg, lr=1e-2)
+    names = [s.name for s in specs]
+    flat = [params_moe[n] for n in names]
+    m = [jnp.zeros_like(p) for p in flat]
+    v = [jnp.zeros_like(p) for p in flat]
+    tok, tgt = _batch(cfg)
+
+    jit_step = jax.jit(step_fn)
+    losses = []
+    for i in range(5):
+        out = jit_step(tok, tgt, jnp.float32(i + 1), *flat, *m, *v)
+        losses.append(float(out[0]))
+        n = len(names)
+        flat = list(out[1 : 1 + n])
+        m = list(out[1 + n : 1 + 2 * n])
+        v = list(out[1 + 2 * n :])
+    assert losses[-1] < losses[0], losses
+
+
+def test_grad_step_matches_train_direction(params_moe):
+    """grad_step's gradients applied via the python Adam mirror must equal
+    the fused train_step output (same math, two ABIs)."""
+    cfg = TINY
+    step_fn, specs = train.make_train_step(cfg, lr=1e-3)
+    grad_fn, _ = train.make_grad_step(cfg)
+    names = [s.name for s in specs]
+    flat = [params_moe[n] for n in names]
+    m = [jnp.zeros_like(p) for p in flat]
+    v = [jnp.zeros_like(p) for p in flat]
+    tok, tgt = _batch(cfg)
+
+    fused = step_fn(tok, tgt, jnp.float32(1.0), *flat, *m, *v)
+    gout = grad_fn(tok, tgt, *flat)
+    np.testing.assert_allclose(float(fused[0]), float(gout[0]), rtol=1e-5)
+    n = len(names)
+    for i in range(n):
+        p2, _, _ = train.adam_update(
+            flat[i], gout[1 + i], m[i], v[i], jnp.float32(1.0), 1e-3
+        )
+        np.testing.assert_allclose(fused[1 + i], p2, rtol=1e-5, atol=1e-7,
+                                   err_msg=names[i])
+
+
+def test_eval_step_matches_loss(params_moe):
+    cfg = TINY
+    eval_fn, specs = train.make_eval_step(cfg)
+    names = [s.name for s in specs]
+    tok, tgt = _batch(cfg)
+    (loss,) = eval_fn(tok, tgt, *[params_moe[n] for n in names])
+    direct = gpt.lm_loss(params_moe, tok, tgt, cfg)
+    np.testing.assert_allclose(float(loss), float(direct), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Stage graphs vs fused layer: the distributed path must be the same math
+# ---------------------------------------------------------------------------
+
+def test_staged_moe_layer_equals_fused(rng):
+    """Emulate the Rust coordinator's stage chain in numpy and check it
+    reproduces the fused MoE layer exactly (no capacity drops)."""
+    from compile import layers
+
+    nb, dm, dh, ne, k = 24, 8, 16, 4, 2
+    x = jnp.asarray(rng.standard_normal((nb, dm)), jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((dm, ne)), jnp.float32)
+    bg = jnp.asarray(rng.standard_normal(ne) * 0.1, jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((ne, dm, dh)) * 0.3, jnp.float32)
+    b1 = jnp.asarray(rng.standard_normal((ne, dh)) * 0.1, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((ne, dh, dm)) * 0.3, jnp.float32)
+    b2 = jnp.asarray(rng.standard_normal((ne, dm)) * 0.1, jnp.float32)
+
+    fused = layers.moe_ffn(x, wg, bg, w1, b1, w2, b2, k=k, capacity=nb * k)
+
+    # --- stage chain (host logic in numpy, kernels via stages.*) ---
+    (scores,) = stages.gate_fwd(x, wg, bg)
+    w_gate, idx = stages.topk_softmax(scores, k)
+    w_gate, idx = np.asarray(w_gate), np.asarray(idx)
+
+    # host dispatch: slot per assignment ordered by expert (like Rust)
+    flat_e = idx.reshape(-1)
+    order = np.argsort(flat_e, kind="stable")
+    slots = np.empty(nb * k, np.int32)
+    slots[order] = np.arange(nb * k)
+    counts = np.bincount(flat_e, minlength=ne)
+
+    # pack rows in slot order (host scatter), bucket per expert = max count
+    cap = max(1, int(counts.max()))
+    xs = np.zeros((ne, cap, dm), np.float32)
+    xnp = np.asarray(x)
+    token_of_flat = np.arange(nb * k) // k
+    offs = np.zeros(ne, np.int64)
+    start = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    for a in order:  # assignments grouped by expert
+        e = flat_e[a]
+        xs[e, offs[e]] = xnp[token_of_flat[a]]
+        offs[e] += 1
+
+    (ys,) = stages.expert_fwd(jnp.asarray(xs), w1, b1, w2, b2)
+    ys = np.asarray(ys)
+
+    # unpack back to slot-ordered flat rows
+    y_slots = np.zeros((nb * k, dm), np.float32)
+    offs[:] = 0
+    for a in order:
+        e = flat_e[a]
+        y_slots[slots[a]] = ys[e, offs[e]]
+        offs[e] += 1
+
+    (out,) = stages.combine_fwd(
+        jnp.asarray(y_slots),
+        jnp.asarray(slots.reshape(nb, k)),
+        jnp.asarray(w_gate),
+    )
+    np.testing.assert_allclose(out, fused, rtol=2e-4, atol=2e-5)
+
+
+def test_topk_softmax_equals_renormalized_softmax(rng):
+    """The two gating formulations used in fused vs staged paths are the
+    same function — this equality is what licenses the split."""
+    scores = jnp.asarray(rng.standard_normal((40, 8)), jnp.float32)
+    from compile.kernels.ref import topk_gate_ref
+
+    w1, i1 = stages.topk_softmax(scores, 2)
+    w2, i2 = topk_gate_ref(scores, 2)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(w1, w2, rtol=1e-5)
+
+
+def test_gate_bwd_matches_autodiff(rng):
+    x = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((8, 6)), jnp.float32)
+    bg = jnp.asarray(rng.standard_normal(6), jnp.float32)
+    ds = jnp.asarray(rng.standard_normal((16, 6)), jnp.float32)
+
+    def f(x, wg, bg):
+        (s,) = stages.gate_fwd(x, wg, bg)
+        return jnp.sum(s * ds)
+
+    want = jax.grad(f, argnums=(0, 1, 2))(x, wg, bg)
+    got = stages.gate_bwd(x, wg, ds)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_expert_bwd_matches_autodiff(rng):
+    ne, b, dm, dh = 2, 8, 4, 8
+    xs = jnp.asarray(rng.standard_normal((ne, b, dm)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((ne, dm, dh)) * 0.3, jnp.float32)
+    b1 = jnp.asarray(rng.standard_normal((ne, dh)) * 0.1, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((ne, dh, dm)) * 0.3, jnp.float32)
+    b2 = jnp.asarray(rng.standard_normal((ne, dm)) * 0.1, jnp.float32)
+    dys = jnp.asarray(rng.standard_normal((ne, b, dm)), jnp.float32)
+
+    got = stages.expert_bwd(xs, w1, b1, w2, b2, dys)
+
+    def f(xs, w1, b1, w2, b2):
+        (y,) = stages.expert_fwd(xs, w1, b1, w2, b2)
+        return jnp.sum(y * dys)
+
+    want = jax.grad(f, argnums=tuple(range(5)))(xs, w1, b1, w2, b2)
+    for a, b_, nm in zip(got, want, ["dxs", "dw1", "db1", "dw2", "db2"]):
+        np.testing.assert_allclose(a, b_, rtol=5e-4, atol=1e-5, err_msg=nm)
+
+
+def test_combine_bwd_matches_autodiff(rng):
+    nb, k, dm = 12, 2, 6
+    n_slots = nb * k
+    ys = jnp.asarray(rng.standard_normal((n_slots, dm)), jnp.float32)
+    slots = jnp.asarray(rng.permutation(n_slots).reshape(nb, k).astype(np.int32))
+    w = jnp.asarray(rng.random((nb, k)), jnp.float32)
+    dout = jnp.asarray(rng.standard_normal((nb, dm)), jnp.float32)
+
+    got = stages.combine_bwd(ys, slots, w, dout)
+
+    def f(ys, w):
+        (o,) = stages.combine_fwd(ys, slots, w)
+        return jnp.sum(o * dout)
+
+    want = jax.grad(f, argnums=(0, 1))(ys, w)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_topk_softmax_bwd_matches_autodiff(rng):
+    scores = jnp.asarray(rng.standard_normal((10, 6)), jnp.float32)
+    dw = jnp.asarray(rng.standard_normal((10, 2)), jnp.float32)
+    got = stages.topk_softmax_bwd(scores, 2, dw)
+
+    def f(s):
+        w, _ = stages.topk_softmax(s, 2)
+        return jnp.sum(w * dw)
+
+    want = jax.grad(f)(scores)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)

@@ -1,0 +1,96 @@
+//! Figure 5: single-device MoE layer latency vs number of experts —
+//! FastMoE (batched dispatch + grouped expert GEMM) against the naive
+//! pure-framework-ops baseline (Rau 2019-style: every expert over the
+//! whole batch, masked), forward-only and forward+backward.
+//!
+//! ```bash
+//! cargo bench --bench fig5_single
+//! ```
+//!
+//! Expected shape (paper Fig. 5): FastMoE latency roughly flat in the
+//! expert count; the baseline grows ~linearly; the gap widens with
+//! more experts.
+
+use std::collections::BTreeSet;
+
+use fastmoe::bench::{bench, BenchOpts, Table};
+use fastmoe::metrics::CsvWriter;
+use fastmoe::rng::Rng;
+use fastmoe::runtime::Runtime;
+use fastmoe::tensor::{HostTensor, TensorF32};
+
+fn inputs_for(rt: &Runtime, name: &str, rng: &mut Rng) -> Vec<HostTensor> {
+    let meta = &rt.manifest.artifact(name).unwrap().inputs;
+    meta.iter()
+        .map(|s| {
+            let mut t = TensorF32::zeros(&s.shape);
+            rng.fill_normal(&mut t.data, 0.3);
+            HostTensor::F32(t)
+        })
+        .collect()
+}
+
+fn main() -> fastmoe::Result<()> {
+    let rt = Runtime::open_default()?;
+    let opts = BenchOpts::from_env();
+    let fig5 = rt.manifest.family("fig5");
+    let expert_counts: BTreeSet<usize> = fig5
+        .iter()
+        .filter_map(|a| a.meta_usize("n_expert"))
+        .collect();
+    let some = fig5.first().expect("fig5 artifacts missing (make artifacts)");
+    println!(
+        "Figure 5 — MoE layer latency vs experts (nb={}, d_m={}, d_h={}, k={})\n",
+        some.meta_usize("nb").unwrap(),
+        some.meta_usize("d_model").unwrap(),
+        some.meta_usize("d_hidden").unwrap(),
+        some.meta_usize("top_k").unwrap(),
+    );
+
+    let mut table = Table::new(&[
+        "experts",
+        "fastmoe_fwd_ms",
+        "naive_fwd_ms",
+        "fwd_speedup",
+        "fastmoe_train_ms",
+        "naive_train_ms",
+        "train_speedup",
+    ]);
+    let mut csv = CsvWriter::create(
+        "runs/fig5_single.csv",
+        &["experts", "moe_fwd_ms", "naive_fwd_ms", "moe_train_ms", "naive_train_ms"],
+    )?;
+    let mut rng = Rng::new(5);
+
+    for &ne in &expert_counts {
+        let mut ms = [0f64; 4];
+        for (i, kind) in ["moe_fwd", "naive_fwd", "moe_grad", "naive_grad"]
+            .iter()
+            .enumerate()
+        {
+            let name = format!("{kind}_e{ne}");
+            let exe = rt.executable(&name)?;
+            let inputs = inputs_for(&rt, &name, &mut rng);
+            let r = bench(&name, &opts, || {
+                let _ = exe.run(&inputs).unwrap();
+            });
+            ms[i] = r.mean_secs() * 1e3;
+        }
+        // "train" = fwd + bwd: the grad artifacts contain both
+        table.row(vec![
+            ne.to_string(),
+            format!("{:.2}", ms[0]),
+            format!("{:.2}", ms[1]),
+            format!("{:.2}x", ms[1] / ms[0]),
+            format!("{:.2}", ms[2]),
+            format!("{:.2}", ms[3]),
+            format!("{:.2}x", ms[3] / ms[2]),
+        ]);
+        csv.rowf(&[ne as f64, ms[0], ms[1], ms[2], ms[3]])?;
+        println!("  e{ne}: fwd {:.2} vs {:.2} ms, train {:.2} vs {:.2} ms", ms[0], ms[1], ms[2], ms[3]);
+    }
+
+    println!("\n{}", table.render());
+    println!("runs/fig5_single.csv written");
+    Ok(())
+}

@@ -1,0 +1,177 @@
+//! Benchmark harness substrate (no `criterion` in the offline registry).
+//!
+//! Warmup + timed iterations with mean/p50/p95, GFLOP/s helpers, and a
+//! fixed-width table printer so each `rust/benches/fig*.rs` binary emits
+//! rows shaped like the paper's tables/figures.
+
+use std::time::Instant;
+
+use crate::metrics::Summary;
+
+/// One benchmark configuration.
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        // the paper: "several warm-up rounds … executed 16 times"
+        Self { warmup: 3, iters: 16 }
+    }
+}
+
+impl BenchOpts {
+    /// Scale iteration counts down for very slow cases.
+    pub fn quick() -> Self {
+        Self { warmup: 1, iters: 5 }
+    }
+
+    pub fn from_env() -> Self {
+        let mut o = Self::default();
+        if let Ok(v) = std::env::var("FASTMOE_BENCH_ITERS") {
+            if let Ok(n) = v.parse() {
+                o.iters = n;
+            }
+        }
+        if let Ok(v) = std::env::var("FASTMOE_BENCH_WARMUP") {
+            if let Ok(n) = v.parse() {
+                o.warmup = n;
+            }
+        }
+        o
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub secs: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.secs.mean()
+    }
+
+    pub fn gflops(&self, flops: f64) -> f64 {
+        crate::util::gflops(flops, self.secs.mean())
+    }
+}
+
+/// Time `f` with warmup; `f` should perform one full operation.
+pub fn bench<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> BenchResult {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut secs = Summary::new();
+    for _ in 0..opts.iters {
+        let t = Instant::now();
+        f();
+        secs.add(t.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), secs }
+}
+
+/// Fixed-width results table, paper-figure style.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Also emit the table as CSV (for EXPERIMENTS.md regeneration).
+    pub fn to_csv(&self) -> String {
+        let mut s = self.headers.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// `fmt` helpers for table cells.
+pub fn ms(secs: f64) -> String {
+    format!("{:.3}", secs * 1e3)
+}
+
+pub fn gf(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut calls = 0;
+        let r = bench("t", &BenchOpts { warmup: 2, iters: 5 }, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(r.secs.n, 5);
+        assert!(r.mean_secs() >= 0.0);
+    }
+
+    #[test]
+    fn gflops_sane() {
+        let r = bench("t", &BenchOpts { warmup: 0, iters: 3 }, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        let g = r.gflops(2e6); // 2 MFLOP in ~2 ms → ~1 GFLOP/s
+        assert!(g > 0.1 && g < 10.0, "g={g}");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["n", "value"]);
+        t.row(vec!["1".into(), "10.0".into()]);
+        t.row(vec!["100".into(), "3.5".into()]);
+        let s = t.render();
+        assert!(s.contains("n  value") || s.contains("  n  value"));
+        assert_eq!(s.lines().count(), 4);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().next().unwrap(), "n,value");
+    }
+}

@@ -1,0 +1,178 @@
+//! Command-line argument parsing substrate (no `clap` offline).
+//!
+//! Supports `binary <subcommand> --key value --flag positional…` with
+//! typed accessors, defaults, and generated usage text.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    ///
+    /// `bool_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        bool_flags: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Cli("empty option name".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        Error::Cli(format!("option --{name} needs a value"))
+                    })?;
+                    out.options.insert(name.to_string(), v);
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> Result<Args> {
+        Args::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Cli(format!("--{name} expects an integer, got `{v}`"))
+            }),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Cli(format!("--{name} expects a number, got `{v}`"))
+            }),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Cli(format!("--{name} expects an integer, got `{v}`"))
+            }),
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--workers 1,2,4,8`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse::<usize>().map_err(|_| {
+                        Error::Cli(format!("--{name}: bad element `{p}`"))
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Usage text builder for subcommand help.
+pub struct Usage {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<(&'static str, &'static str)>,
+}
+
+impl Usage {
+    pub fn render(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n",
+            self.name, self.about, self.name);
+        for (c, about) in &self.commands {
+            s.push_str(&format!("  {c:<18} {about}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = Args::parse(argv("train --steps 100 --verbose x.toml"), &["verbose"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["x.toml"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(argv("bench --iters=5 --lr=0.1"), &[]).unwrap();
+        assert_eq!(a.usize_or("iters", 0).unwrap(), 5);
+        assert!((a.f64_or("lr", 0.0).unwrap() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(argv("x --steps"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(argv("x --steps nan?"), &[]).unwrap();
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(argv("x --ws 1,2,4"), &[]).unwrap();
+        assert_eq!(a.usize_list_or("ws", &[]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.usize_list_or("other", &[8]).unwrap(), vec![8]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv("run"), &[]).unwrap();
+        assert_eq!(a.str_or("model", "gpt_moe"), "gpt_moe");
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,552 @@
+//! Collective communication substrate (the NCCL analog).
+//!
+//! Two backends share one [`Comm`] trait whose collectives are built
+//! from point-to-point sends, exactly as the paper describes for its
+//! global exchanges:
+//!
+//! * [`CommHandle`] — thread-backed channels (one process, used by the
+//!   benches so timing isn't polluted by the kernel's socket stack);
+//! * [`tcp::TcpGroup`] — real sockets over a full mesh, usable across
+//!   processes and hosts (the paper's "multiple GPUs on multiple
+//!   nodes" topology; `fastmoe dist-moe --backend tcp` spawns worker
+//!   *processes*).
+//!
+//! Provided collectives:
+//!
+//! * [`Comm::all_to_all_v`] — the Figure-2 protocol: phase 1 exchanges
+//!   per-peer *counts*, receivers size their buffers, phase 2 exchanges
+//!   the data.
+//! * [`Comm::all_reduce_sum`] — ring all-reduce (reduce-scatter +
+//!   all-gather), the gradient-sync primitive.
+//! * `all_gather`, `broadcast`, `barrier`, subgroup all-reduce.
+//!
+//! Every handle records bytes sent per collective, which
+//! [`crate::sim::NetModel`] converts into simulated wire time for the
+//! Figure-6 scalability study.
+
+pub mod tcp;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+
+use crate::error::{Error, Result};
+use crate::metrics::Counters;
+
+/// A tagged point-to-point message.
+pub(crate) struct Msg {
+    pub src: usize,
+    pub tag: u64,
+    pub data: Vec<f32>,
+}
+
+/// The process-group interface: p2p primitives required, collectives
+/// provided (identical across backends).
+pub trait Comm {
+    fn rank(&self) -> usize;
+    fn size(&self) -> usize;
+    fn counters(&mut self) -> &mut Counters;
+
+    /// Send `data` to `dst` under `tag` (non-blocking or buffered).
+    fn send(&mut self, dst: usize, tag: u64, data: Vec<f32>) -> Result<()>;
+
+    /// Blocking receive of the message with (src, tag); out-of-order
+    /// arrivals must be parked, not dropped.
+    fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<f32>>;
+
+    /// Monotonic per-handle collective sequence number (tag namespace).
+    fn next_seq(&mut self) -> u64;
+
+    /// Synchronisation barrier. Default: an empty all-to-all (every
+    /// pair exchanges a count) — O(n²) messages but always correct.
+    fn barrier(&mut self) -> Result<()> {
+        let empties: Vec<Vec<f32>> = (0..self.size()).map(|_| Vec::new()).collect();
+        let _ = self.all_to_all_v(empties)?;
+        Ok(())
+    }
+
+    /// Variable all-to-all (Figure 2): `send[p]` goes to peer `p`; the
+    /// return value's `recv[p]` came from peer `p`.
+    ///
+    /// Phase 1 exchanges the lengths (the paper's "exchange the size of
+    /// expert inputs"), phase 2 the payloads. Counters record both.
+    fn all_to_all_v(&mut self, send: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let size = self.size();
+        let rank = self.rank();
+        if send.len() != size {
+            return Err(Error::Comm(format!(
+                "all_to_all_v: {} buffers for {} peers",
+                send.len(),
+                size
+            )));
+        }
+        let seq = self.next_seq();
+        let tag_count = seq << 8;
+        let tag_data = (seq << 8) | 1;
+        self.counters().add("a2a_calls", 1);
+
+        // Phase 1: counts.
+        for p in 0..size {
+            if p != rank {
+                self.send(p, tag_count, vec![send[p].len() as f32])?;
+            }
+        }
+        let mut incoming = vec![0usize; size];
+        incoming[rank] = send[rank].len();
+        for p in 0..size {
+            if p != rank {
+                let c = self.recv(p, tag_count)?;
+                incoming[p] = c[0] as usize;
+            }
+        }
+        self.counters()
+            .add("a2a_count_bytes", (4 * (size - 1)) as u64);
+
+        // Phase 2: payloads ("the workers start exchanging data directly").
+        let mut out: Vec<Vec<f32>> = (0..size).map(|_| Vec::new()).collect();
+        let mut send = send;
+        out[rank] = std::mem::take(&mut send[rank]);
+        let mut data_bytes = 0u64;
+        for p in 0..size {
+            if p != rank {
+                let buf = std::mem::take(&mut send[p]);
+                data_bytes += (buf.len() * 4) as u64;
+                self.send(p, tag_data, buf)?;
+            }
+        }
+        self.counters().add("a2a_data_bytes", data_bytes);
+        for p in 0..size {
+            if p != rank {
+                let data = self.recv(p, tag_data)?;
+                if data.len() != incoming[p] {
+                    return Err(Error::Comm(format!(
+                        "a2a: peer {p} announced {} floats, sent {}",
+                        incoming[p],
+                        data.len()
+                    )));
+                }
+                out[p] = data;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Ring all-reduce (sum): reduce-scatter then all-gather, the
+    /// standard 2(n-1)/n-bandwidth algorithm NCCL uses.
+    fn all_reduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {
+        let n = self.size();
+        let rank = self.rank();
+        if n == 1 {
+            return Ok(());
+        }
+        let seq = self.next_seq();
+        self.counters().add("allreduce_calls", 1);
+        self.counters()
+            .add("allreduce_bytes", (buf.len() * 4 * 2 * (n - 1) / n) as u64);
+        let len = buf.len();
+        let chunk = |i: usize| -> std::ops::Range<usize> {
+            let per = len / n;
+            let s = i * per;
+            let e = if i + 1 == n { len } else { s + per };
+            s..e
+        };
+        let next = (rank + 1) % n;
+        let prev = (rank + n - 1) % n;
+
+        // Reduce-scatter.
+        for step in 0..n - 1 {
+            let send_idx = (rank + n - step) % n;
+            let recv_idx = (rank + n - step - 1) % n;
+            let tag = (seq << 8) | (2 + step as u64);
+            self.send(next, tag, buf[chunk(send_idx)].to_vec())?;
+            let data = self.recv(prev, tag)?;
+            for (x, y) in buf[chunk(recv_idx)].iter_mut().zip(&data) {
+                *x += y;
+            }
+        }
+        // All-gather.
+        for step in 0..n - 1 {
+            let send_idx = (rank + 1 + n - step) % n;
+            let recv_idx = (rank + n - step) % n;
+            let tag = (seq << 8) | (64 + step as u64);
+            self.send(next, tag, buf[chunk(send_idx)].to_vec())?;
+            let data = self.recv(prev, tag)?;
+            buf[chunk(recv_idx)].copy_from_slice(&data);
+        }
+        Ok(())
+    }
+
+    /// All-reduce over a subgroup (data-parallel groups). `group` must
+    /// contain this rank and be identical on all members.
+    fn all_reduce_sum_group(&mut self, buf: &mut [f32], group: &[usize]) -> Result<()> {
+        if group.len() <= 1 {
+            return Ok(());
+        }
+        let rank = self.rank();
+        let me = group
+            .iter()
+            .position(|&r| r == rank)
+            .ok_or_else(|| Error::Comm("rank not in group".into()))?;
+        let seq = self.next_seq();
+        self.counters().add(
+            "allreduce_bytes",
+            (buf.len() * 4 * 2 * (group.len() - 1) / group.len()) as u64,
+        );
+        // gather onto group[0], sum, broadcast back
+        let tag = (seq << 8) | 7;
+        if me == 0 {
+            let mut acc = buf.to_vec();
+            for &p in &group[1..] {
+                let data = self.recv(p, tag)?;
+                for (x, y) in acc.iter_mut().zip(&data) {
+                    *x += y;
+                }
+            }
+            for &p in &group[1..] {
+                self.send(p, tag + 1, acc.clone())?;
+            }
+            buf.copy_from_slice(&acc);
+        } else {
+            self.send(group[0], tag, buf.to_vec())?;
+            let data = self.recv(group[0], tag + 1)?;
+            buf.copy_from_slice(&data);
+        }
+        Ok(())
+    }
+
+    /// Gather equal-size buffers from all ranks (concatenated by rank).
+    fn all_gather(&mut self, mine: &[f32]) -> Result<Vec<f32>> {
+        let send: Vec<Vec<f32>> = (0..self.size()).map(|_| mine.to_vec()).collect();
+        let parts = self.all_to_all_v(send)?;
+        let mut out = Vec::with_capacity(mine.len() * self.size());
+        for p in parts {
+            if p.len() != mine.len() {
+                return Err(Error::Comm("all_gather: ragged input".into()));
+            }
+            out.extend_from_slice(&p);
+        }
+        Ok(out)
+    }
+
+    /// Broadcast from `root` (everyone returns root's buffer).
+    fn broadcast(&mut self, buf: &mut Vec<f32>, root: usize) -> Result<()> {
+        let seq = self.next_seq();
+        let tag = (seq << 8) | 9;
+        if self.rank() == root {
+            for p in 0..self.size() {
+                if p != root {
+                    self.send(p, tag, buf.clone())?;
+                }
+            }
+        } else {
+            *buf = self.recv(root, tag)?;
+        }
+        Ok(())
+    }
+}
+
+/// One worker's endpoint into a thread-backed (single-process) group.
+pub struct CommHandle {
+    rank: usize,
+    size: usize,
+    senders: Vec<Sender<Msg>>,
+    receiver: Receiver<Msg>,
+    /// Messages that arrived out of order (wrong tag/src), parked.
+    parked: Vec<Msg>,
+    barrier: Arc<Barrier>,
+    seq: u64,
+    pub counters: Counters,
+}
+
+/// Create a local (thread-backed) group of `size` workers.
+pub fn local_group(size: usize) -> Vec<CommHandle> {
+    assert!(size > 0);
+    let mut senders = Vec::with_capacity(size);
+    let mut receivers = Vec::with_capacity(size);
+    for _ in 0..size {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    let barrier = Arc::new(Barrier::new(size));
+    receivers
+        .into_iter()
+        .enumerate()
+        .map(|(rank, receiver)| CommHandle {
+            rank,
+            size,
+            senders: senders.clone(),
+            receiver,
+            parked: Vec::new(),
+            barrier: barrier.clone(),
+            seq: 0,
+            counters: Counters::new(),
+        })
+        .collect()
+}
+
+impl Comm for CommHandle {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn counters(&mut self) -> &mut Counters {
+        &mut self.counters
+    }
+
+    fn send(&mut self, dst: usize, tag: u64, data: Vec<f32>) -> Result<()> {
+        self.counters.add("bytes_sent", (data.len() * 4) as u64);
+        self.senders[dst]
+            .send(Msg { src: self.rank, tag, data })
+            .map_err(|_| Error::Comm(format!("peer {dst} hung up")))
+    }
+
+    fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<f32>> {
+        if let Some(i) = self
+            .parked
+            .iter()
+            .position(|m| m.src == src && m.tag == tag)
+        {
+            return Ok(self.parked.swap_remove(i).data);
+        }
+        loop {
+            let msg = self
+                .receiver
+                .recv()
+                .map_err(|_| Error::Comm("channel closed".into()))?;
+            if msg.src == src && msg.tag == tag {
+                return Ok(msg.data);
+            }
+            self.parked.push(msg);
+        }
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    /// Threads share an OS barrier — cheaper than the message fallback.
+    fn barrier(&mut self) -> Result<()> {
+        self.barrier.wait();
+        Ok(())
+    }
+}
+
+/// Spawn `size` workers, run `f(handle)` on each, join, propagate errors.
+pub fn run_workers<T, F>(size: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send + 'static,
+    F: Fn(CommHandle) -> Result<T> + Send + Sync + 'static,
+{
+    let handles = local_group(size);
+    let f = Arc::new(f);
+    let mut joins = Vec::new();
+    for h in handles {
+        let f = f.clone();
+        let rank = h.rank;
+        joins.push((
+            rank,
+            std::thread::Builder::new()
+                .name(format!("worker-{rank}"))
+                .spawn(move || f(h))
+                .expect("spawn"),
+        ));
+    }
+    let mut out = Vec::with_capacity(size);
+    for (rank, j) in joins {
+        match j.join() {
+            Ok(Ok(v)) => out.push(v),
+            Ok(Err(e)) => {
+                return Err(Error::Worker { rank, msg: e.to_string() })
+            }
+            Err(_) => {
+                return Err(Error::Worker { rank, msg: "panicked".into() })
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, prop_assert, prop_assert_eq, PropResult};
+
+    #[test]
+    fn all_to_all_v_routes_correctly() {
+        let out = run_workers(4, |mut h| {
+            let r = h.rank() as f32;
+            // send [r, p] to each peer p
+            let send: Vec<Vec<f32>> =
+                (0..4).map(|p| vec![r, p as f32]).collect();
+            let recv = h.all_to_all_v(send)?;
+            for (p, buf) in recv.iter().enumerate() {
+                assert_eq!(buf, &vec![p as f32, r]);
+            }
+            Ok(())
+        });
+        out.unwrap();
+    }
+
+    #[test]
+    fn all_to_all_v_variable_sizes() {
+        run_workers(3, |mut h| {
+            let r = h.rank();
+            // rank r sends r+p floats to peer p
+            let send: Vec<Vec<f32>> =
+                (0..3).map(|p| vec![1.0; r + p]).collect();
+            let recv = h.all_to_all_v(send)?;
+            for (p, buf) in recv.iter().enumerate() {
+                assert_eq!(buf.len(), p + r);
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn ring_all_reduce_sums() {
+        for n in [1, 2, 3, 4, 8] {
+            run_workers(n, move |mut h| {
+                let mut buf: Vec<f32> =
+                    (0..37).map(|i| (h.rank() * 100 + i) as f32).collect();
+                let want: Vec<f32> = (0..37)
+                    .map(|i| {
+                        (0..n).map(|r| (r * 100 + i) as f32).sum::<f32>()
+                    })
+                    .collect();
+                h.all_reduce_sum(&mut buf)?;
+                assert_eq!(buf, want, "n={n}");
+                Ok(())
+            })
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn subgroup_all_reduce() {
+        run_workers(4, |mut h| {
+            let group: Vec<usize> = if h.rank() % 2 == 0 {
+                vec![0, 2]
+            } else {
+                vec![1, 3]
+            };
+            let mut buf = vec![h.rank() as f32 + 1.0; 5];
+            h.all_reduce_sum_group(&mut buf, &group)?;
+            let want = if h.rank() % 2 == 0 { 4.0 } else { 6.0 }; // 1+3 / 2+4
+            assert!(buf.iter().all(|&x| x == want));
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn all_gather_concatenates() {
+        run_workers(3, |mut h| {
+            let mine = vec![h.rank() as f32; 2];
+            let all = h.all_gather(&mine)?;
+            assert_eq!(all, vec![0., 0., 1., 1., 2., 2.]);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn broadcast_from_each_root() {
+        run_workers(3, |mut h| {
+            for root in 0..3 {
+                let mut buf = if h.rank() == root {
+                    vec![root as f32 * 10.0; 4]
+                } else {
+                    vec![]
+                };
+                h.broadcast(&mut buf, root)?;
+                assert_eq!(buf, vec![root as f32 * 10.0; 4]);
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn worker_error_propagates_with_rank() {
+        let res = run_workers(3, |h| {
+            if h.rank() == 1 {
+                Err(Error::msg("boom"))
+            } else {
+                Ok(())
+            }
+        });
+        match res {
+            Err(Error::Worker { rank: 1, msg }) => assert!(msg.contains("boom")),
+            other => panic!("expected worker error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn prop_all_reduce_equals_sequential_sum() {
+        check("ring all-reduce = sum", 20, |g| {
+            let n = *g.choose(&[1usize, 2, 3, 4, 5, 8]);
+            let len = g.usize_in(1, 200);
+            let data: Vec<Vec<f32>> = (0..n)
+                .map(|_| g.vec_f32(len, -8.0, 8.0))
+                .collect();
+            let want: Vec<f32> = (0..len)
+                .map(|i| data.iter().map(|d| d[i]).sum())
+                .collect();
+            let data2 = data.clone();
+            let got = run_workers(n, move |mut h| {
+                let mut buf = data2[h.rank()].clone();
+                h.all_reduce_sum(&mut buf)?;
+                Ok(buf)
+            })
+            .map_err(|e| e.to_string())?;
+            for r in 0..n {
+                for i in 0..len {
+                    prop_assert(
+                        (got[r][i] - want[i]).abs() < 1e-3,
+                        format!("rank {r} idx {i}: {} vs {}", got[r][i], want[i]),
+                    )?;
+                }
+            }
+            Ok(()) as PropResult
+        });
+    }
+
+    #[test]
+    fn prop_all_to_all_conserves_floats() {
+        check("a2a conserves data", 20, |g| {
+            let n = *g.choose(&[2usize, 3, 4]);
+            let sizes: Vec<Vec<usize>> = (0..n)
+                .map(|_| g.vec_usize(n, 0, 50))
+                .collect();
+            let sizes2 = sizes.clone();
+            let got = run_workers(n, move |mut h| {
+                let r = h.rank();
+                let send: Vec<Vec<f32>> = (0..n)
+                    .map(|p| vec![(r * n + p) as f32; sizes2[r][p]])
+                    .collect();
+                let total_sent: usize = send.iter().map(|b| b.len()).sum();
+                let recv = h.all_to_all_v(send)?;
+                // payload correctness: from peer p we see value p*n+r
+                for (p, buf) in recv.iter().enumerate() {
+                    for &v in buf {
+                        if v != (p * n + r) as f32 {
+                            return Err(Error::Comm("wrong payload".into()));
+                        }
+                    }
+                }
+                let total_recv: usize = recv.iter().map(|b| b.len()).sum();
+                Ok((total_sent, total_recv))
+            })
+            .map_err(|e| e.to_string())?;
+            let sent: usize = got.iter().map(|(s, _)| s).sum();
+            let recv: usize = got.iter().map(|(_, r)| r).sum();
+            prop_assert_eq(sent, recv)
+        });
+    }
+}

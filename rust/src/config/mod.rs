@@ -1,0 +1,283 @@
+//! Typed configuration + a TOML-subset parser + the `fmoefy` transform.
+//!
+//! The launcher reads a TOML-subset config file (sections, scalar keys,
+//! flat arrays — everything our configs need), merges CLI overrides, and
+//! produces the typed configs the rest of the system consumes.
+//!
+//! [`fmoefy`] reproduces the paper's Listing 1: take a *dense* model
+//! config and return the MoE version of it — FFNs replaced by an expert
+//! pool with the hidden size divided by `top_k` so per-token FLOPs stay
+//! constant (§5.4).
+
+mod toml;
+
+pub use toml::TomlValue;
+
+use crate::error::{Error, Result};
+
+/// Model hyper-parameters (mirrors `python/compile/gpt.py::GptConfig`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub seq: usize,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub d_hidden: usize,
+    pub moe: bool,
+    pub n_expert: usize,
+    pub top_k: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self {
+            vocab: 256,
+            seq: 128,
+            n_layer: 4,
+            d_model: 256,
+            n_head: 8,
+            d_hidden: 1024,
+            moe: true,
+            n_expert: 16,
+            top_k: 2,
+        }
+    }
+}
+
+impl ModelConfig {
+    /// Expert hidden size under FLOPs parity (§5.4).
+    pub fn d_hidden_expert(&self) -> usize {
+        (self.d_hidden / self.top_k).max(8)
+    }
+
+    /// Approximate parameter count (matches the python registry).
+    pub fn n_params(&self) -> usize {
+        let d = self.d_model;
+        let mut n = self.vocab * d + self.seq * d; // embeddings
+        for _ in 0..self.n_layer {
+            n += 2 * d + d * 3 * d + 3 * d + d * d + d + 2 * d; // ln1+attn+ln2
+            if self.moe {
+                let de = self.d_hidden_expert();
+                n += d * self.n_expert + self.n_expert; // gate
+                n += self.n_expert * (d * de + de + de * d + d);
+            } else {
+                n += d * self.d_hidden + self.d_hidden + self.d_hidden * d + d;
+            }
+        }
+        n += 2 * d + d * self.vocab; // final ln + head
+        n
+    }
+}
+
+/// Training-loop configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    pub model: String, // manifest model name, e.g. "gpt_moe"
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub seed: u64,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub checkpoint_every: usize,
+    pub out_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "gpt_moe".into(),
+            steps: 200,
+            batch: 4,
+            lr: 3e-4,
+            seed: 42,
+            log_every: 10,
+            eval_every: 50,
+            checkpoint_every: 0,
+            out_dir: "runs".into(),
+        }
+    }
+}
+
+/// Distributed-runtime configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DistConfig {
+    pub workers: usize,
+    pub ne_local: usize,
+    pub top_k: usize,
+    /// Network preset for simulated wire time: "ib-edr", "pcie3", "none".
+    pub net: String,
+    pub seed: u64,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        Self { workers: 4, ne_local: 4, top_k: 2, net: "ib-edr".into(), seed: 7 }
+    }
+}
+
+/// `fmoefy(model, num_experts)` — Listing 1 of the paper as a config
+/// transform: dense FFN -> expert pool at constant per-token FLOPs.
+pub fn fmoefy(dense: &ModelConfig, n_expert: usize, top_k: usize) -> Result<ModelConfig> {
+    if dense.moe {
+        return Err(Error::Config("fmoefy: model is already MoE".into()));
+    }
+    if n_expert == 0 || top_k == 0 || top_k > n_expert {
+        return Err(Error::Config(format!(
+            "fmoefy: bad expert config n_expert={n_expert} top_k={top_k}"
+        )));
+    }
+    let mut m = dense.clone();
+    m.moe = true;
+    m.n_expert = n_expert;
+    m.top_k = top_k;
+    Ok(m)
+}
+
+/// Load a config file section into the typed structs.
+pub struct ConfigFile {
+    root: TomlValue,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<Self> {
+        Ok(Self { root: toml::parse(text)? })
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    fn section(&self, name: &str) -> Option<&TomlValue> {
+        self.root.get(name)
+    }
+
+    pub fn model(&self) -> Result<ModelConfig> {
+        let mut m = ModelConfig::default();
+        if let Some(s) = self.section("model") {
+            m.vocab = s.usize_or("vocab", m.vocab);
+            m.seq = s.usize_or("seq", m.seq);
+            m.n_layer = s.usize_or("n_layer", m.n_layer);
+            m.d_model = s.usize_or("d_model", m.d_model);
+            m.n_head = s.usize_or("n_head", m.n_head);
+            m.d_hidden = s.usize_or("d_hidden", m.d_hidden);
+            m.moe = s.bool_or("moe", m.moe);
+            m.n_expert = s.usize_or("n_expert", m.n_expert);
+            m.top_k = s.usize_or("top_k", m.top_k);
+        }
+        if m.d_model % m.n_head != 0 {
+            return Err(Error::Config(format!(
+                "d_model {} not divisible by n_head {}",
+                m.d_model, m.n_head
+            )));
+        }
+        Ok(m)
+    }
+
+    pub fn train(&self) -> Result<TrainConfig> {
+        let mut t = TrainConfig::default();
+        if let Some(s) = self.section("train") {
+            t.model = s.str_or("model", &t.model);
+            t.steps = s.usize_or("steps", t.steps);
+            t.batch = s.usize_or("batch", t.batch);
+            t.lr = s.f64_or("lr", t.lr);
+            t.seed = s.usize_or("seed", t.seed as usize) as u64;
+            t.log_every = s.usize_or("log_every", t.log_every);
+            t.eval_every = s.usize_or("eval_every", t.eval_every);
+            t.checkpoint_every = s.usize_or("checkpoint_every", t.checkpoint_every);
+            t.out_dir = s.str_or("out_dir", &t.out_dir);
+        }
+        if t.steps == 0 {
+            return Err(Error::Config("train.steps must be > 0".into()));
+        }
+        Ok(t)
+    }
+
+    pub fn dist(&self) -> Result<DistConfig> {
+        let mut d = DistConfig::default();
+        if let Some(s) = self.section("dist") {
+            d.workers = s.usize_or("workers", d.workers);
+            d.ne_local = s.usize_or("ne_local", d.ne_local);
+            d.top_k = s.usize_or("top_k", d.top_k);
+            d.net = s.str_or("net", &d.net);
+            d.seed = s.usize_or("seed", d.seed as usize) as u64;
+        }
+        if d.workers == 0 || !d.workers.is_power_of_two() {
+            return Err(Error::Config(format!(
+                "dist.workers must be a positive power of two, got {}",
+                d.workers
+            )));
+        }
+        Ok(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# training config
+[model]
+d_model = 128
+n_layer = 2
+moe = false
+
+[train]
+steps = 50
+lr = 0.001
+model = "gpt_dense"
+
+[dist]
+workers = 8
+net = "ib-edr"
+"#;
+
+    #[test]
+    fn parse_sections() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        let m = c.model().unwrap();
+        assert_eq!(m.d_model, 128);
+        assert_eq!(m.n_layer, 2);
+        assert!(!m.moe);
+        assert_eq!(m.vocab, 256); // default preserved
+        let t = c.train().unwrap();
+        assert_eq!(t.steps, 50);
+        assert!((t.lr - 0.001).abs() < 1e-12);
+        assert_eq!(t.model, "gpt_dense");
+        let d = c.dist().unwrap();
+        assert_eq!(d.workers, 8);
+    }
+
+    #[test]
+    fn validation_errors() {
+        let c = ConfigFile::parse("[model]\nd_model = 100\nn_head = 7\n").unwrap();
+        assert!(c.model().is_err());
+        let c = ConfigFile::parse("[dist]\nworkers = 3\n").unwrap();
+        assert!(c.dist().is_err());
+        let c = ConfigFile::parse("[train]\nsteps = 0\n").unwrap();
+        assert!(c.train().is_err());
+    }
+
+    #[test]
+    fn fmoefy_listing1() {
+        let dense = ModelConfig { moe: false, ..Default::default() };
+        let moe = fmoefy(&dense, 96, 2).unwrap();
+        assert!(moe.moe);
+        assert_eq!(moe.n_expert, 96);
+        // FLOPs parity: expert hidden halved for top-2
+        assert_eq!(moe.d_hidden_expert(), dense.d_hidden / 2);
+        // idempotence guard
+        assert!(fmoefy(&moe, 8, 2).is_err());
+        assert!(fmoefy(&dense, 4, 8).is_err());
+    }
+
+    #[test]
+    fn n_params_moe_exceeds_dense() {
+        let dense = ModelConfig { moe: false, ..Default::default() };
+        let moe = fmoefy(&dense, 16, 2).unwrap();
+        // the whole point of MoE: more parameters at equal FLOPs
+        assert!(moe.n_params() > 3 * dense.n_params());
+    }
+}

@@ -1,0 +1,279 @@
+//! TOML-subset parser (substrate; no `toml` crate offline).
+//!
+//! Supported grammar — everything the fastmoe configs use:
+//!
+//! ```toml
+//! # comment
+//! top_level_key = 1
+//! [section]            # or [a.b] nested sections
+//! string = "value"
+//! int = 42
+//! float = 3.5          # also 1e-4
+//! boolean = true
+//! array = [1, 2, 3]    # flat arrays of scalars
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed TOML value tree.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+    Table(BTreeMap<String, TomlValue>),
+}
+
+impl TomlValue {
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        match self {
+            TomlValue::Table(t) => t.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.as_i64())
+            .map(|i| i.max(0) as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+/// Parse a TOML-subset document into a table tree.
+pub fn parse(text: &str) -> Result<TomlValue> {
+    let mut root = BTreeMap::new();
+    let mut path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            path = name.split('.').map(|s| s.trim().to_string()).collect();
+            ensure_table(&mut root, &path, lineno)?;
+        } else {
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(value.trim(), lineno)?;
+            insert(&mut root, &path, key, value, lineno)?;
+        }
+    }
+    Ok(TomlValue::Table(root))
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("toml line {}: {msg}", lineno + 1))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` outside of a string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table(
+    root: &mut BTreeMap<String, TomlValue>,
+    path: &[String],
+    lineno: usize,
+) -> Result<()> {
+    let mut cur = root;
+    for p in path {
+        let entry = cur
+            .entry(p.clone())
+            .or_insert_with(|| TomlValue::Table(BTreeMap::new()));
+        match entry {
+            TomlValue::Table(t) => cur = t,
+            _ => return Err(err(lineno, "section name collides with a key")),
+        }
+    }
+    Ok(())
+}
+
+fn insert(
+    root: &mut BTreeMap<String, TomlValue>,
+    path: &[String],
+    key: &str,
+    value: TomlValue,
+    lineno: usize,
+) -> Result<()> {
+    let mut cur = root;
+    for p in path {
+        match cur.get_mut(p) {
+            Some(TomlValue::Table(t)) => cur = t,
+            _ => return Err(err(lineno, "internal section error")),
+        }
+    }
+    if cur.insert(key.to_string(), value).is_some() {
+        return Err(err(lineno, &format!("duplicate key `{key}`")));
+    }
+    Ok(())
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue> {
+    if s.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(lineno, "embedded quote in string"));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?
+            .trim();
+        let mut items = Vec::new();
+        if !inner.is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part.trim(), lineno)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(lineno, &format!("cannot parse value `{s}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_sections() {
+        let t = parse("a = 1\n[s]\nb = \"x\"\nc = 2.5\nd = true\n").unwrap();
+        assert_eq!(t.get("a").unwrap().as_i64(), Some(1));
+        let s = t.get("s").unwrap();
+        assert_eq!(s.get("b").unwrap().as_str(), Some("x"));
+        assert_eq!(s.get("c").unwrap().as_f64(), Some(2.5));
+        assert_eq!(s.get("d").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let t = parse("# top\n\na = 1 # trailing\ns = \"has # inside\"\n").unwrap();
+        assert_eq!(t.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(t.get("s").unwrap().as_str(), Some("has # inside"));
+    }
+
+    #[test]
+    fn nested_sections() {
+        let t = parse("[a.b]\nx = 1\n[a.c]\ny = 2\n").unwrap();
+        let a = t.get("a").unwrap();
+        assert_eq!(a.get("b").unwrap().get("x").unwrap().as_i64(), Some(1));
+        assert_eq!(a.get("c").unwrap().get("y").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn arrays() {
+        let t = parse("xs = [1, 2, 3]\nys = []\nzs = [1.5, 2]\n").unwrap();
+        let xs = match t.get("xs").unwrap() {
+            TomlValue::Array(a) => a,
+            _ => panic!(),
+        };
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("a\n").is_err());
+        assert!(parse("a = \n").is_err());
+        assert!(parse("a = 1\na = 2\n").is_err());
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("v = \"oops\n").is_err());
+        assert!(parse("v = what\n").is_err());
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let t = parse("a = -5\nb = 1e-4\nc = -2.5e3\n").unwrap();
+        assert_eq!(t.get("a").unwrap().as_i64(), Some(-5));
+        assert!((t.get("b").unwrap().as_f64().unwrap() - 1e-4).abs() < 1e-12);
+        assert!((t.get("c").unwrap().as_f64().unwrap() + 2500.0).abs() < 1e-9);
+    }
+}

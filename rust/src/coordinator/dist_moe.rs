@@ -1,0 +1,329 @@
+//! The distributed (expert-parallel) MoE layer — the heart of FastMoE.
+//!
+//! Each worker owns `ne_local` experts and runs, per iteration, the
+//! stage chain of DESIGN.md §4 with the Figure-2 exchange in the
+//! middle.  All heavy math is AOT-compiled HLO; this file is exactly
+//! the coordination the paper contributes: counting, planning, packing,
+//! exchanging, bucketing, and the mirrored backward chain.
+
+use std::sync::Arc;
+
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+use crate::metrics::Counters;
+use crate::moe::{
+    topk_softmax, topk_softmax_bwd, DispatchPlan, ExpertBatch, GateAssign,
+};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::tensor::{HostTensor, TensorF32};
+
+/// Per-worker parameters + compiled stage executables for one MoE layer.
+pub struct DistMoeLayer {
+    rt: Arc<Runtime>,
+    pub workers: usize,
+    pub rank: usize,
+    pub ne_local: usize,
+    pub k: usize,
+    pub nb: usize,
+    pub dm: usize,
+    pub dh: usize,
+    buckets: Vec<usize>,
+    // replicated gate (tag: world)
+    pub wg: TensorF32,
+    pub bg: TensorF32,
+    // local expert shard (tag: none)
+    pub w1: TensorF32,
+    pub b1: TensorF32,
+    pub w2: TensorF32,
+    pub b2: TensorF32,
+}
+
+/// Forward residuals needed by the backward chain.
+pub struct MoeLayerState {
+    pub assign: GateAssign,
+    pub plan: DispatchPlan,
+    pub eb: ExpertBatch,
+    /// Expert outputs in packed slot order (combine input), saved for
+    /// combine_bwd.
+    pub y_slots: TensorF32,
+    /// This worker's token features (gate_bwd + scatter transpose).
+    pub x: TensorF32,
+    /// Per-global-expert counts this worker routed (load monitor food).
+    pub counts_global: Vec<u32>,
+}
+
+/// Gradients produced by the backward pass.
+pub struct LayerGrads {
+    pub dx: TensorF32,
+    pub dwg: TensorF32,
+    pub dbg: TensorF32,
+    pub dw1: TensorF32,
+    pub db1: TensorF32,
+    pub dw2: TensorF32,
+    pub db2: TensorF32,
+}
+
+impl DistMoeLayer {
+    /// Initialise a worker's shard. Gate weights are derived from
+    /// `seed` only (identical on every worker — it is `world`-tagged);
+    /// expert weights are derived from `(seed, rank)`.
+    pub fn init(
+        rt: Arc<Runtime>,
+        workers: usize,
+        rank: usize,
+        seed: u64,
+    ) -> Result<DistMoeLayer> {
+        let m = &rt.manifest;
+        let gate = m
+            .artifact(&format!("gate_fwd_w{workers}"))
+            .ok_or_else(|| {
+                Error::ArtifactNotFound(format!(
+                    "gate_fwd_w{workers} (worker count not in preset)"
+                ))
+            })?;
+        let nb = gate.inputs[0].shape[0];
+        let dm = gate.inputs[0].shape[1];
+        let ne_global = gate.inputs[1].shape[1];
+        let ne_local = ne_global / workers;
+        let combine = m
+            .artifact("combine_fwd")
+            .ok_or_else(|| Error::ArtifactNotFound("combine_fwd".into()))?;
+        let k = combine.inputs[1].shape[1];
+        let buckets = m.buckets();
+        if buckets.is_empty() {
+            return Err(Error::Manifest("no expert buckets in manifest".into()));
+        }
+        // dh from any expert artifact
+        let eart = m
+            .artifact(&format!("expert_fwd_b{}", buckets[0]))
+            .ok_or_else(|| Error::ArtifactNotFound("expert_fwd".into()))?;
+        let dh = eart.inputs[1].shape[2];
+        if eart.inputs[0].shape[0] != ne_local {
+            return Err(Error::Manifest(format!(
+                "expert artifact has {} local experts, topology wants {}",
+                eart.inputs[0].shape[0], ne_local
+            )));
+        }
+
+        let mut gate_rng = Rng::new(seed ^ 0x6a7e);
+        let mut wg = TensorF32::zeros(&[dm, ne_global]);
+        gate_rng.fill_normal(&mut wg.data, 0.02);
+        let bg = TensorF32::zeros(&[ne_global]);
+
+        let mut erng = Rng::new(seed ^ (0xe0 + rank as u64));
+        let mut w1 = TensorF32::zeros(&[ne_local, dm, dh]);
+        erng.fill_normal(&mut w1.data, 0.02);
+        let b1 = TensorF32::zeros(&[ne_local, dh]);
+        let mut w2 = TensorF32::zeros(&[ne_local, dh, dm]);
+        erng.fill_normal(&mut w2.data, 0.02);
+        let b2 = TensorF32::zeros(&[ne_local, dm]);
+
+        Ok(DistMoeLayer {
+            rt, workers, rank, ne_local, k, nb, dm, dh, buckets,
+            wg, bg, w1, b1, w2, b2,
+        })
+    }
+
+    /// Pre-compile every stage executable this layer can touch.
+    pub fn warm(&self) -> Result<()> {
+        self.rt.executable(&format!("gate_fwd_w{}", self.workers))?;
+        self.rt.executable(&format!("gate_bwd_w{}", self.workers))?;
+        self.rt.executable("combine_fwd")?;
+        self.rt.executable("combine_bwd")?;
+        for &b in &self.buckets {
+            self.rt.executable(&format!("expert_fwd_b{b}"))?;
+            self.rt.executable(&format!("expert_bwd_b{b}"))?;
+        }
+        Ok(())
+    }
+
+    /// Matmul FLOPs this worker performed for `state` (fig-6 metric):
+    /// gate GEMM + both expert GEMMs over real (unpadded) rows.
+    pub fn flops(&self, state: &MoeLayerState) -> f64 {
+        let gate = 2.0 * self.nb as f64 * self.dm as f64
+            * (self.workers * self.ne_local) as f64;
+        let rows: usize = state.eb.rows_per_expert.iter().sum();
+        let expert = 2.0 * 2.0 * rows as f64 * self.dm as f64 * self.dh as f64;
+        gate + expert
+    }
+
+    /// Forward pass over this worker's `x: [nb, dm]`.
+    ///
+    /// `counters` records exchange volumes for the net model.
+    pub fn forward(
+        &self,
+        comm: &mut impl Comm,
+        x: TensorF32,
+        counters: &mut Counters,
+    ) -> Result<(TensorF32, MoeLayerState)> {
+        let ne_global = self.workers * self.ne_local;
+
+        // ---- gate scores (L1 kernel via HLO) ----
+        let gate = self.rt.executable(&format!("gate_fwd_w{}", self.workers))?;
+        let out = gate.run(&[
+            x.clone().into(),
+            self.wg.clone().into(),
+            self.bg.clone().into(),
+        ])?;
+        let scores = out.into_iter().next().unwrap().into_f32()?;
+
+        // ---- host gating + plan (the paper's "local shuffle") ----
+        let assign = topk_softmax(&scores, self.k)?;
+        let plan = DispatchPlan::build(&assign, self.workers, self.ne_local)?;
+        let mut counts_global = vec![0u32; ne_global];
+        for &e in &assign.idx {
+            counts_global[e as usize] += 1;
+        }
+
+        // ---- Figure 2 phase 1: exchange per-expert counts ----
+        let count_bufs: Vec<Vec<f32>> = plan
+            .send_counts
+            .iter()
+            .map(|c| c.iter().map(|&x| x as f32).collect())
+            .collect();
+        let recv_count_bufs = comm.all_to_all_v(count_bufs)?;
+        let recv_counts: Vec<Vec<u32>> = recv_count_bufs
+            .iter()
+            .map(|b| b.iter().map(|&x| x as u32).collect())
+            .collect();
+
+        // ---- Figure 2 phase 2: exchange token rows ----
+        let send = plan.pack(&x)?;
+        let sent_bytes: usize = send.iter().map(|b| b.len() * 4).sum();
+        counters.add("moe_a2a_bytes", sent_bytes as u64);
+        let recv = comm.all_to_all_v(send)?;
+
+        // ---- bucketed expert shard execution ----
+        let eb = ExpertBatch::build(recv_counts, &recv, self.ne_local, self.dm, &self.buckets)?;
+        counters.add("moe_bucket_rows", (eb.bucket * eb.ne_local) as u64);
+        counters.add(
+            "moe_real_rows",
+            eb.rows_per_expert.iter().sum::<usize>() as u64,
+        );
+        let efwd = self.rt.executable(&format!("expert_fwd_b{}", eb.bucket))?;
+        let out = efwd.run(&[
+            eb.xs.clone().into(),
+            self.w1.clone().into(),
+            self.b1.clone().into(),
+            self.w2.clone().into(),
+            self.b2.clone().into(),
+        ])?;
+        let ys = out.into_iter().next().unwrap().into_f32()?;
+
+        // ---- return exchange + combine ----
+        let ret = eb.split_outputs(&ys)?;
+        counters.add(
+            "moe_a2a_bytes",
+            ret.iter().map(|b| b.len() * 4).sum::<usize>() as u64,
+        );
+        let back = comm.all_to_all_v(ret)?;
+        let y_slots = plan.unpack_returned(&back, self.dm)?;
+
+        let combine = self.rt.executable("combine_fwd")?;
+        let w_t = TensorF32::from_vec(&[self.nb, self.k], assign.w.clone())?;
+        let out = combine.run(&[
+            y_slots.clone().into(),
+            HostTensor::I32(plan.slots_i32()),
+            w_t.into(),
+        ])?;
+        let y = out.into_iter().next().unwrap().into_f32()?;
+
+        Ok((y, MoeLayerState { assign, plan, eb, y_slots, x, counts_global }))
+    }
+
+    /// Backward pass: `dy: [nb, dm]` → input + parameter gradients.
+    pub fn backward(
+        &self,
+        comm: &mut impl Comm,
+        state: &MoeLayerState,
+        dy: &TensorF32,
+        counters: &mut Counters,
+    ) -> Result<LayerGrads> {
+        let ne_global = self.workers * self.ne_local;
+        let plan = &state.plan;
+
+        // ---- combine backward (L1 transpose) ----
+        let cbwd = self.rt.executable("combine_bwd")?;
+        let w_t = TensorF32::from_vec(&[self.nb, self.k], state.assign.w.clone())?;
+        let out = cbwd.run(&[
+            state.y_slots.clone().into(),
+            HostTensor::I32(plan.slots_i32()),
+            w_t.into(),
+            dy.clone().into(),
+        ])?;
+        let mut it = out.into_iter();
+        let dys = it.next().unwrap().into_f32()?; // [nb*k, dm] packed order
+        let dw = it.next().unwrap().into_f32()?; // [nb, k]
+
+        // ---- gate backward: softmax-topk Jacobian + gate GEMM ----
+        let dscores = topk_softmax_bwd(&state.assign, &dw.data, ne_global)?;
+        let gbwd = self.rt.executable(&format!("gate_bwd_w{}", self.workers))?;
+        let out = gbwd.run(&[
+            state.x.clone().into(),
+            self.wg.clone().into(),
+            dscores.into(),
+        ])?;
+        let mut it = out.into_iter();
+        let mut dx = it.next().unwrap().into_f32()?;
+        let dwg = it.next().unwrap().into_f32()?;
+        let dbg = it.next().unwrap().into_f32()?;
+
+        // ---- reverse exchange of output cotangents ----
+        // dys is already in packed order; split by destination rows.
+        let mut send: Vec<Vec<f32>> = Vec::with_capacity(self.workers);
+        let mut pos = 0usize;
+        for w in 0..self.workers {
+            let rows = plan.send_rows[w];
+            send.push(dys.data[pos * self.dm..(pos + rows) * self.dm].to_vec());
+            pos += rows;
+        }
+        counters.add(
+            "moe_a2a_bytes",
+            send.iter().map(|b| b.len() * 4).sum::<usize>() as u64,
+        );
+        let recv = comm.all_to_all_v(send)?;
+        let dys_in = state.eb.rebatch(&recv)?;
+
+        // ---- expert shard backward (recompute-style artifact) ----
+        let ebwd = self
+            .rt
+            .executable(&format!("expert_bwd_b{}", state.eb.bucket))?;
+        let out = ebwd.run(&[
+            state.eb.xs.clone().into(),
+            self.w1.clone().into(),
+            self.b1.clone().into(),
+            self.w2.clone().into(),
+            self.b2.clone().into(),
+            dys_in.into(),
+        ])?;
+        let mut it = out.into_iter();
+        let dxs = it.next().unwrap().into_f32()?;
+        let dw1 = it.next().unwrap().into_f32()?;
+        let db1 = it.next().unwrap().into_f32()?;
+        let dw2 = it.next().unwrap().into_f32()?;
+        let db2 = it.next().unwrap().into_f32()?;
+
+        // ---- route input cotangents back to token owners ----
+        let ret = state.eb.split_outputs(&dxs)?;
+        counters.add(
+            "moe_a2a_bytes",
+            ret.iter().map(|b| b.len() * 4).sum::<usize>() as u64,
+        );
+        let back = comm.all_to_all_v(ret)?;
+        let dx_packed = plan.unpack_returned(&back, self.dm)?;
+
+        // scatter-transpose: dx[token] += dx_packed[slot(assignment)]
+        for a in 0..plan.nb * plan.k {
+            let token = a / plan.k;
+            let s = plan.slots[a] as usize;
+            let src = &dx_packed.data[s * self.dm..(s + 1) * self.dm];
+            let dst = &mut dx.data[token * self.dm..(token + 1) * self.dm];
+            for (d, v) in dst.iter_mut().zip(src) {
+                *d += v;
+            }
+        }
+
+        Ok(LayerGrads { dx, dwg, dbg, dw1, db1, dw2, db2 })
+    }
+}

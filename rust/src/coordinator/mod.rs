@@ -1,0 +1,136 @@
+//! The Layer-3 coordinator — FastMoE's system contribution.
+//!
+//! * [`DistMoeLayer`] (`dist_moe`) — the expert-parallel MoE layer: the
+//!   Figure-2 two-phase exchange, bucketed expert execution, and the
+//!   full manual backward chain over the stage artifacts.
+//! * [`Trainer`] / [`DistTrainer`] (`trainer`) — the fused single-graph
+//!   training loop (Figure 7) and its data-parallel multi-worker
+//!   variant with tag-aware gradient synchronisation.
+//! * [`GradSync`] — the heterogeneity-aware synchronisation module of
+//!   §3.2: parameters tagged `world` / `data_parallel` are averaged over
+//!   their groups, `none` (expert shards) are left alone in sharded
+//!   mode.
+
+mod dist_moe;
+mod trainer;
+
+pub use dist_moe::{DistMoeLayer, LayerGrads, MoeLayerState};
+pub use trainer::{DistTrainer, StepStats, Trainer};
+
+use crate::comm::Comm;
+use crate::error::Result;
+use crate::runtime::SyncTag;
+use crate::tensor::TensorF32;
+
+/// How `SyncTag::None` parameters are handled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpertMode {
+    /// Expert params physically sharded per worker (stage mode): never
+    /// synchronised — each shard already saw every token routed to it.
+    Sharded,
+    /// Expert params replicated on every worker (the DP-emulated fig-7
+    /// path): averaged like `world`, which is mathematically identical
+    /// to one global expert updated with all routed tokens.
+    Replicated,
+}
+
+/// Tag-aware gradient synchroniser (the paper's customised DDP).
+pub struct GradSync {
+    /// Ranks of this worker's data-parallel group (must include self).
+    pub dp_group: Vec<usize>,
+    pub mode: ExpertMode,
+}
+
+impl GradSync {
+    /// Everyone in one DP group (pure data/expert parallelism).
+    pub fn world(size: usize, mode: ExpertMode) -> GradSync {
+        GradSync { dp_group: (0..size).collect(), mode }
+    }
+
+    /// Average gradients according to their tags.
+    ///
+    /// * `world` — all-reduce over **all** ranks.
+    /// * `data_parallel` — all-reduce over `dp_group`.
+    /// * `none` — skipped (Sharded) or treated as `world` (Replicated).
+    pub fn sync(
+        &self,
+        comm: &mut impl Comm,
+        grads: &mut [TensorF32],
+        tags: &[SyncTag],
+    ) -> Result<()> {
+        assert_eq!(grads.len(), tags.len());
+        let world: Vec<usize> = (0..comm.size()).collect();
+        for (g, &tag) in grads.iter_mut().zip(tags) {
+            let group: Option<&[usize]> = match tag {
+                SyncTag::World => Some(&world),
+                SyncTag::DataParallel => Some(&self.dp_group),
+                SyncTag::None => match self.mode {
+                    ExpertMode::Sharded => None,
+                    ExpertMode::Replicated => Some(&world),
+                },
+            };
+            if let Some(group) = group {
+                if group.len() > 1 {
+                    if group.len() == comm.size() {
+                        comm.all_reduce_sum(&mut g.data)?;
+                    } else {
+                        comm.all_reduce_sum_group(&mut g.data, group)?;
+                    }
+                    let scale = 1.0 / group.len() as f32;
+                    for x in g.data.iter_mut() {
+                        *x *= scale;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_workers;
+    use crate::runtime::SyncTag::*;
+
+    #[test]
+    fn grad_sync_respects_tags() {
+        let got = run_workers(4, |mut h| {
+            let r = h.rank() as f32;
+            let mut grads = vec![
+                TensorF32::from_vec(&[2], vec![r, r]).unwrap(), // world
+                TensorF32::from_vec(&[2], vec![r, r]).unwrap(), // dp
+                TensorF32::from_vec(&[2], vec![r, r]).unwrap(), // none
+            ];
+            let tags = [World, DataParallel, None];
+            // dp groups: {0,1} and {2,3}
+            let dp = if h.rank() < 2 { vec![0, 1] } else { vec![2, 3] };
+            let sync = GradSync { dp_group: dp, mode: ExpertMode::Sharded };
+            sync.sync(&mut h, &mut grads, &tags)?;
+            Ok((h.rank(), grads))
+        })
+        .unwrap();
+        for (rank, grads) in got {
+            // world: mean(0,1,2,3) = 1.5 everywhere
+            assert_eq!(grads[0].data, vec![1.5, 1.5], "rank {rank}");
+            // dp: mean within the pair
+            let want_dp = if rank < 2 { 0.5 } else { 2.5 };
+            assert_eq!(grads[1].data, vec![want_dp, want_dp]);
+            // none: untouched
+            assert_eq!(grads[2].data, vec![rank as f32, rank as f32]);
+        }
+    }
+
+    #[test]
+    fn replicated_mode_averages_experts() {
+        let got = run_workers(2, |mut h| {
+            let r = h.rank() as f32;
+            let mut grads = vec![TensorF32::from_vec(&[1], vec![r]).unwrap()];
+            let sync = GradSync::world(2, ExpertMode::Replicated);
+            sync.sync(&mut h, &mut grads, &[None])?;
+            Ok(grads[0].data[0])
+        })
+        .unwrap();
+        assert_eq!(got, vec![0.5, 0.5]);
+    }
+}

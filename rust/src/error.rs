@@ -1,0 +1,54 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All failure modes of the Layer-3 system.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json parse error at byte {pos}: {msg}")]
+    Json { pos: usize, msg: String },
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("artifact `{0}` not found (run `make artifacts`?)")]
+    ArtifactNotFound(String),
+
+    #[error("ABI mismatch for `{artifact}`: {msg}")]
+    Abi { artifact: String, msg: String },
+
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("communication error: {0}")]
+    Comm(String),
+
+    #[error("worker {rank} failed: {msg}")]
+    Worker { rank: usize, msg: String },
+
+    #[error("checkpoint error: {0}")]
+    Checkpoint(String),
+
+    #[error("cli error: {0}")]
+    Cli(String),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error::Msg(s.into())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,49 @@
+//! # fastmoe — a fast Mixture-of-Expert training system (reproduction)
+//!
+//! A from-scratch reproduction of *FastMoE: A Fast Mixture-of-Expert
+//! Training System* (He et al., 2021) on a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build time)** — Pallas kernels and JAX model graphs in
+//!   `python/compile`, lowered once to `artifacts/*.hlo.txt`.
+//! * **Layer 3 (this crate)** — the training system itself: the PJRT
+//!   runtime that executes the AOT artifacts, the collective
+//!   communication substrate, the expert-parallel dispatch machinery
+//!   (Figure 2 of the paper), the heterogeneity-aware gradient
+//!   synchronizer, the data pipeline, and the training loop.
+//!
+//! Python is never on the iteration path: once artifacts are built, the
+//! `fastmoe` binary (and the examples) are self-contained.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`runtime`] | PJRT client + artifact registry + executable cache |
+//! | [`comm`] | process groups, all-to-all-v, ring all-reduce, … |
+//! | [`moe`] | gating, dispatch plans, capacity buckets, load monitor |
+//! | [`coordinator`] | workers, the distributed MoE layer, grad sync, train loop |
+//! | [`model`] | parameter store, Adam, checkpoints |
+//! | [`data`] | synthetic corpus, tokenizer, batching |
+//! | [`tensor`] | host tensors and the math used outside XLA |
+//! | [`sim`] | analytic network timing model (IB EDR / PCIe presets) |
+//! | [`config`], [`cli`], [`metrics`], [`bench`], [`testing`], [`rng`], [`util`] | substrates (no external deps available offline) |
+
+pub mod bench;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod metrics;
+pub mod model;
+pub mod moe;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+pub use error::{Error, Result};

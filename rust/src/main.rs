@@ -1,0 +1,333 @@
+//! `fastmoe` — the launcher binary.
+//!
+//! ```text
+//! fastmoe info                         # artifact + model inventory
+//! fastmoe train [--model gpt_moe] [--steps N] [--config cfg.toml] …
+//! fastmoe dist-train [--workers W] …   # DP-emulated multi-worker run
+//! fastmoe dist-moe [--workers W] …     # expert-parallel layer demo
+//! fastmoe fmoefy --experts N           # Listing-1 config transform
+//! ```
+//!
+//! Benchmarks live under `cargo bench` (one binary per paper figure);
+//! examples under `cargo run --example …`.
+
+use std::sync::Arc;
+
+use fastmoe::cli::{Args, Usage};
+use fastmoe::comm::{self, Comm};
+use fastmoe::config::{fmoefy, ConfigFile, ModelConfig, TrainConfig};
+use fastmoe::coordinator::{DistMoeLayer, DistTrainer, Trainer};
+use fastmoe::data::{BatchIter, Corpus};
+use fastmoe::error::Result;
+use fastmoe::metrics::{Counters, CsvWriter, Stopwatch};
+use fastmoe::model::save_checkpoint;
+use fastmoe::rng::Rng;
+use fastmoe::runtime::Runtime;
+use fastmoe::tensor::TensorF32;
+use fastmoe::util;
+
+fn main() {
+    let usage = Usage {
+        name: "fastmoe",
+        about: "FastMoE reproduction — Rust coordinator over AOT XLA artifacts",
+        commands: vec![
+            ("info", "print artifact and model inventory"),
+            ("train", "single-worker fused training loop (Figure 7)"),
+            ("dist-train", "multi-worker training with tag-aware grad sync"),
+            ("dist-moe", "expert-parallel MoE layer demo (Figure 2 protocol)"),
+            ("fmoefy", "Listing-1: dense config -> MoE config at equal FLOPs"),
+        ],
+    };
+    let args = match Args::from_env(&["verbose", "moe", "dense"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage.render());
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    let code = match cmd.as_str() {
+        "info" => run(info(&args)),
+        "train" => run(train(&args)),
+        "dist-train" => run(dist_train(&args)),
+        "dist-moe" => run(dist_moe(&args)),
+        "_tcp-worker" => run(tcp_worker(&args)),
+        "fmoefy" => run(cmd_fmoefy(&args)),
+        _ => {
+            println!("{}", usage.render());
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(r: Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn info(_args: &Args) -> Result<()> {
+    let rt = Runtime::open_default()?;
+    println!("platform: {}", rt.platform());
+    println!("preset:   {}", rt.manifest.preset);
+    println!("\nmodels:");
+    for (name, m) in &rt.manifest.models {
+        println!(
+            "  {name:<12} params={:>12}  train={} eval={} grad={}",
+            m.n_params(),
+            m.train_step,
+            m.eval_step,
+            m.grad_step
+        );
+    }
+    println!("\nartifacts ({}):", rt.manifest.artifacts.len());
+    for a in &rt.manifest.artifacts {
+        println!(
+            "  {:<22} {:<10} in={} out={}",
+            a.name,
+            a.family(),
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn train_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        ConfigFile::load(path)?.train()?
+    } else {
+        TrainConfig::default()
+    };
+    cfg.model = args.str_or("model", &cfg.model);
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.lr = args.f64_or("lr", cfg.lr)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.log_every = args.usize_or("log-every", cfg.log_every)?;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
+    cfg.checkpoint_every = args.usize_or("checkpoint-every", cfg.checkpoint_every)?;
+    cfg.out_dir = args.str_or("out", &cfg.out_dir);
+    Ok(cfg)
+}
+
+fn train(args: &Args) -> Result<()> {
+    let cfg = train_config(args)?;
+    let rt = Runtime::open_default()?;
+    let mut tr = Trainer::new(&rt, &cfg.model, cfg.seed)?;
+    let vocab = tr.entry.config_usize("vocab").unwrap_or(256);
+    let seq = tr.entry.config_usize("seq").unwrap_or(128);
+    let batch = tr.entry.config_usize("batch").unwrap_or(4);
+    println!(
+        "training {} ({} params) for {} steps, batch {}x{}, lr {}",
+        cfg.model,
+        tr.params.n_elements(),
+        cfg.steps,
+        batch,
+        seq,
+        cfg.lr
+    );
+    let corpus = Corpus::synthetic(vocab, 2_000_000.min(200 * batch * seq * cfg.steps.max(1)), cfg.seed);
+    let mut train_it = BatchIter::new(&corpus, batch, seq, cfg.seed ^ 1);
+    let mut eval_it = BatchIter::new(&corpus, batch, seq, cfg.seed ^ 2);
+    let csv_path = format!("{}/{}_loss.csv", cfg.out_dir, cfg.model);
+    let mut csv = CsvWriter::create(&csv_path, &["step", "wall_s", "loss", "eval_loss"])?;
+    let watch = Stopwatch::start();
+    let mut eval_loss = f64::NAN;
+    for _ in 0..cfg.steps {
+        let stats = tr.train_step(&train_it.next_batch())?;
+        if stats.step % cfg.eval_every as u64 == 0 {
+            eval_loss = tr.eval(&eval_it.next_batch())? as f64;
+        }
+        if stats.step % cfg.log_every as u64 == 0 || stats.step == 1 {
+            println!(
+                "step {:>5}  loss {:.4}  eval {:.4}  {:>8}/step  ({:.1} GFLOP/s)",
+                stats.step,
+                stats.loss,
+                eval_loss,
+                util::fmt_duration(std::time::Duration::from_secs_f64(stats.secs)),
+                util::gflops(tr.step_flops(), stats.secs),
+            );
+        }
+        csv.rowf(&[stats.step as f64, watch.secs(), stats.loss as f64, eval_loss])?;
+        if cfg.checkpoint_every > 0 && stats.step % cfg.checkpoint_every as u64 == 0 {
+            let p = format!("{}/{}_step{}.fmoe", cfg.out_dir, cfg.model, stats.step);
+            save_checkpoint(&p, &tr.params)?;
+            println!("checkpoint: {p}");
+        }
+    }
+    println!("done in {}; loss curve: {csv_path}", util::fmt_duration(watch.elapsed()));
+    Ok(())
+}
+
+fn dist_train(args: &Args) -> Result<()> {
+    let cfg = train_config(args)?;
+    let workers = args.usize_or("workers", 2)?;
+    let rt = Arc::new(Runtime::open_default()?);
+    println!("dist-train: {} workers, model {}, {} steps", workers, cfg.model, cfg.steps);
+    let model = cfg.model.clone();
+    let steps = cfg.steps;
+    let lr = cfg.lr as f32;
+    let seed = cfg.seed;
+    let losses = comm::run_workers(workers, move |mut h| {
+        let mut tr = DistTrainer::new(&rt, &model, seed, workers, lr)?;
+        let vocab = tr.entry.config_usize("vocab").unwrap_or(256);
+        let seq = tr.entry.config_usize("seq").unwrap_or(128);
+        let batch = tr.entry.config_usize("batch").unwrap_or(4);
+        let corpus = Corpus::synthetic(vocab, 500_000, seed);
+        let mut it = BatchIter::shard(&corpus, batch, seq, seed, h.rank());
+        let mut hist = Vec::new();
+        for step in 0..steps {
+            let loss = tr.train_step(&mut h, &it.next_batch())?;
+            if h.rank() == 0 && (step % 10 == 0 || step + 1 == steps) {
+                println!("step {:>5}  global loss {:.4}", step + 1, loss);
+            }
+            hist.push(loss);
+        }
+        Ok(hist)
+    })?;
+    let last = losses[0].last().copied().unwrap_or(f32::NAN);
+    println!("final global loss: {last:.4}");
+    Ok(())
+}
+
+/// `dist-moe --backend tcp`: spawn one OS *process* per worker (the
+/// paper's multi-node topology on localhost); each child runs
+/// `_tcp-worker` and joins a TCP full mesh.
+fn dist_moe_tcp(args: &Args) -> Result<()> {
+    let workers = args.usize_or("workers", 2)?;
+    let iters = args.usize_or("iters", 2)?;
+    let seed = args.u64_or("seed", 7)?;
+    let port = args.usize_or("port", 47500)? as u16;
+    let exe = std::env::current_exe()?;
+    println!("dist-moe (tcp): spawning {workers} worker processes on ports {port}..");
+    let mut children = Vec::new();
+    for rank in 0..workers {
+        children.push(
+            std::process::Command::new(&exe)
+                .args([
+                    "_tcp-worker",
+                    "--rank", &rank.to_string(),
+                    "--workers", &workers.to_string(),
+                    "--iters", &iters.to_string(),
+                    "--seed", &seed.to_string(),
+                    "--port", &port.to_string(),
+                ])
+                .spawn()?,
+        );
+    }
+    let mut failed = false;
+    for (rank, mut c) in children.into_iter().enumerate() {
+        let status = c.wait()?;
+        if !status.success() {
+            eprintln!("worker process {rank} failed: {status}");
+            failed = true;
+        }
+    }
+    if failed {
+        return Err(fastmoe::Error::msg("a tcp worker process failed"));
+    }
+    println!("dist-moe (tcp) OK — {workers} processes completed");
+    Ok(())
+}
+
+/// Hidden per-process worker entry point for `dist-moe --backend tcp`.
+fn tcp_worker(args: &Args) -> Result<()> {
+    let rank = args.usize_or("rank", 0)?;
+    let workers = args.usize_or("workers", 2)?;
+    let iters = args.usize_or("iters", 2)?;
+    let seed = args.u64_or("seed", 7)?;
+    let port = args.usize_or("port", 47500)? as u16;
+    let mut group = fastmoe::comm::tcp::TcpGroup::connect_local(rank, workers, port)?;
+    let rt = Arc::new(Runtime::open_default()?);
+    let layer = DistMoeLayer::init(rt, workers, rank, seed)?;
+    layer.warm()?;
+    let mut counters = Counters::new();
+    let mut rng = Rng::new(seed ^ rank as u64);
+    let watch = Stopwatch::start();
+    let mut flops = 0.0;
+    for _ in 0..iters {
+        let mut x = TensorF32::zeros(&[layer.nb, layer.dm]);
+        rng.fill_normal(&mut x.data, 1.0);
+        let (y, state) = layer.forward(&mut group, x, &mut counters)?;
+        let dy = TensorF32::full(&[layer.nb, layer.dm], 1.0 / layer.nb as f32);
+        let _ = layer.backward(&mut group, &state, &dy, &mut counters)?;
+        flops += 3.0 * layer.flops(&state);
+        if !y.data.iter().all(|v| v.is_finite()) {
+            return Err(fastmoe::Error::msg("non-finite output"));
+        }
+    }
+    group.barrier()?;
+    println!(
+        "  [pid {}] tcp worker {rank}/{workers}: {:.2}s, {:.2} GFLOP/s, sent {}",
+        std::process::id(),
+        watch.secs(),
+        util::gflops(flops, watch.secs()),
+        util::fmt_bytes(group.counters.get("bytes_sent") as usize),
+    );
+    Ok(())
+}
+
+fn dist_moe(args: &Args) -> Result<()> {
+    if args.str_or("backend", "local") == "tcp" {
+        return dist_moe_tcp(args);
+    }
+    let workers = args.usize_or("workers", 4)?;
+    let iters = args.usize_or("iters", 4)?;
+    let seed = args.u64_or("seed", 7)?;
+    let rt = Arc::new(Runtime::open_default()?);
+    println!("dist-moe: {workers} workers, {iters} iterations");
+    let stats = comm::run_workers(workers, move |mut h| {
+        let layer = DistMoeLayer::init(rt.clone(), workers, h.rank(), seed)?;
+        layer.warm()?;
+        let mut counters = Counters::new();
+        let mut rng = Rng::new(seed ^ h.rank() as u64);
+        let mut flops = 0.0;
+        let watch = Stopwatch::start();
+        for _ in 0..iters {
+            let mut x = TensorF32::zeros(&[layer.nb, layer.dm]);
+            rng.fill_normal(&mut x.data, 1.0);
+            let (y, state) = layer.forward(&mut h, x, &mut counters)?;
+            let dy = TensorF32::full(&[layer.nb, layer.dm], 1.0 / layer.nb as f32);
+            let _ = layer.backward(&mut h, &state, &dy, &mut counters)?;
+            flops += 3.0 * layer.flops(&state);
+            assert!(y.data.iter().all(|v| v.is_finite()));
+        }
+        let secs = watch.secs();
+        Ok((h.rank(), secs, flops, counters))
+    })?;
+    for (rank, secs, flops, counters) in &stats {
+        println!(
+            "worker {rank}: {:.2}s  {:.2} GFLOP/s  a2a {}  padding {:.1}%",
+            secs,
+            util::gflops(*flops, *secs),
+            util::fmt_bytes(counters.get("moe_a2a_bytes") as usize),
+            100.0
+                * (1.0
+                    - counters.get("moe_real_rows") as f64
+                        / counters.get("moe_bucket_rows").max(1) as f64),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fmoefy(args: &Args) -> Result<()> {
+    let experts = args.usize_or("experts", 16)?;
+    let top_k = args.usize_or("top-k", 2)?;
+    let dense = ModelConfig { moe: false, ..Default::default() };
+    let moe = fmoefy(&dense, experts, top_k)?;
+    println!("dense: d_hidden={} params={}", dense.d_hidden, dense.n_params());
+    println!(
+        "moe:   n_expert={} top_k={} d_hidden_expert={} params={} ({}x)",
+        moe.n_expert,
+        moe.top_k,
+        moe.d_hidden_expert(),
+        moe.n_params(),
+        moe.n_params() / dense.n_params().max(1)
+    );
+    Ok(())
+}

@@ -1,0 +1,214 @@
+//! Metrics: timers, counters, throughput accounting, CSV/JSONL sinks.
+//!
+//! Every experiment binary logs through this module so EXPERIMENTS.md
+//! rows can be regenerated from the emitted files.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+
+/// Wall-clock stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Streaming summary statistics (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self { min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.samples.push(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+}
+
+/// Named counters (bytes sent, tokens dropped, …).
+#[derive(Default, Debug, Clone)]
+pub struct Counters {
+    map: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.map.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.map.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &u64)> {
+        self.map.iter()
+    }
+
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, v) in &other.map {
+            self.add(k, *v);
+        }
+    }
+}
+
+/// CSV writer with a fixed header.
+pub struct CsvWriter {
+    file: std::fs::File,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &str, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(Self { file, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> Result<()> {
+        debug_assert_eq!(values.len(), self.cols, "csv row arity");
+        writeln!(self.file, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, values: &[f64]) -> Result<()> {
+        self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+}
+
+/// Matmul FLOPs of an `[m,k]·[k,n]` product.
+pub fn matmul_flops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+/// Forward matmul FLOPs of one MoE FFN layer application over `rows`
+/// tokens-assignments (two GEMMs per expert row).
+pub fn moe_ffn_flops(rows: usize, d_model: usize, d_hidden: usize) -> f64 {
+    2.0 * matmul_flops(rows, d_model, d_hidden)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_stats() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(x);
+        }
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.std() - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        let mut s = Summary::new();
+        s.add(10.0);
+        assert_eq!(s.p50(), 10.0);
+        assert_eq!(s.p95(), 10.0);
+        assert_eq!(Summary::new().p50(), 0.0);
+    }
+
+    #[test]
+    fn counters_merge() {
+        let mut a = Counters::new();
+        a.add("bytes", 10);
+        let mut b = Counters::new();
+        b.add("bytes", 5);
+        b.add("drops", 1);
+        a.merge(&b);
+        assert_eq!(a.get("bytes"), 15);
+        assert_eq!(a.get("drops"), 1);
+        assert_eq!(a.get("missing"), 0);
+    }
+
+    #[test]
+    fn csv_writes_rows() {
+        let path = std::env::temp_dir().join("fastmoe_csv_test.csv");
+        let path = path.to_str().unwrap();
+        {
+            let mut w = CsvWriter::create(path, &["a", "b"]).unwrap();
+            w.rowf(&[1.0, 2.0]).unwrap();
+            w.row(&["x".into(), "y".into()]).unwrap();
+        }
+        let text = std::fs::read_to_string(path).unwrap();
+        assert_eq!(text, "a,b\n1,2\nx,y\n");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn flops_formulas() {
+        assert_eq!(matmul_flops(2, 3, 4), 48.0);
+        assert_eq!(moe_ffn_flops(10, 4, 8), 2.0 * 2.0 * 10.0 * 4.0 * 8.0);
+    }
+}

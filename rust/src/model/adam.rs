@@ -1,0 +1,118 @@
+//! Host-side Adam — bit-compatible with `python/compile/train.py`.
+//!
+//! Used on the distributed path (grad_step artifact + GradSync + this);
+//! the fused path runs the same update inside the train-step HLO.
+
+use crate::error::{Error, Result};
+use crate::tensor::TensorF32;
+
+pub const B1: f32 = 0.9;
+pub const B2: f32 = 0.999;
+pub const EPS: f32 = 1e-8;
+
+/// Adam state for one parameter set.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub m: Vec<TensorF32>,
+    pub v: Vec<TensorF32>,
+    pub step: u64,
+}
+
+impl Adam {
+    pub fn new(shapes: &[TensorF32], lr: f32) -> Adam {
+        Adam {
+            lr,
+            weight_decay: 0.0,
+            m: shapes.iter().map(|t| TensorF32::zeros(&t.shape)).collect(),
+            v: shapes.iter().map(|t| TensorF32::zeros(&t.shape)).collect(),
+            step: 0,
+        }
+    }
+
+    /// Apply one update over all parameters given their gradients.
+    pub fn update(&mut self, params: &mut [TensorF32], grads: &[TensorF32]) -> Result<()> {
+        if params.len() != self.m.len() || grads.len() != self.m.len() {
+            return Err(Error::Shape("adam arity".into()));
+        }
+        self.step += 1;
+        let t = self.step as f32;
+        let bc1 = 1.0 - B1.powf(t);
+        let bc2 = 1.0 - B2.powf(t);
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            if p.shape != g.shape {
+                return Err(Error::Shape(format!(
+                    "adam: param {:?} vs grad {:?}",
+                    p.shape, g.shape
+                )));
+            }
+            for i in 0..p.data.len() {
+                let gi = g.data[i];
+                m.data[i] = B1 * m.data[i] + (1.0 - B1) * gi;
+                v.data[i] = B2 * v.data[i] + (1.0 - B2) * gi * gi;
+                let mhat = m.data[i] / bc1;
+                let vhat = v.data[i] / bc2;
+                p.data[i] -= self.lr
+                    * (mhat / (vhat.sqrt() + EPS) + self.weight_decay * p.data[i]);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_closed_form() {
+        // With zero state, step 1 gives p -= lr * g/(|g| + eps·√bc2/…)
+        // ≈ p -= lr * sign(g) for any g (bias corrections cancel).
+        let mut p = vec![TensorF32::from_vec(&[2], vec![1.0, -2.0]).unwrap()];
+        let g = vec![TensorF32::from_vec(&[2], vec![0.5, -0.25]).unwrap()];
+        let mut opt = Adam::new(&p, 0.1);
+        opt.update(&mut p, &g).unwrap();
+        assert!((p[0].data[0] - (1.0 - 0.1)).abs() < 1e-4, "{}", p[0].data[0]);
+        assert!((p[0].data[1] - (-2.0 + 0.1)).abs() < 1e-4);
+        assert_eq!(opt.step, 1);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimise f(x) = (x-3)², grad = 2(x-3)
+        let mut p = vec![TensorF32::from_vec(&[1], vec![0.0]).unwrap()];
+        let mut opt = Adam::new(&p, 0.1);
+        for _ in 0..300 {
+            let g = vec![TensorF32::from_vec(&[1], vec![2.0 * (p[0].data[0] - 3.0)]).unwrap()];
+            opt.update(&mut p, &g).unwrap();
+        }
+        assert!((p[0].data[0] - 3.0).abs() < 0.05, "x={}", p[0].data[0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut p = vec![TensorF32::zeros(&[2])];
+        let g = vec![TensorF32::zeros(&[3])];
+        let mut opt = Adam::new(&p, 0.1);
+        assert!(opt.update(&mut p, &g).is_err());
+    }
+
+    #[test]
+    fn matches_python_reference_values() {
+        // Pinned against compile/train.py adam_update on a worked example:
+        // p=1.0, g=0.3, m=v=0, step=1, lr=0.01 → m=0.03, v=9e-5,
+        // mhat=0.3, vhat=0.09, p' = 1 - 0.01*0.3/(0.3+1e-8) ≈ 0.99
+        let mut p = vec![TensorF32::from_vec(&[1], vec![1.0]).unwrap()];
+        let g = vec![TensorF32::from_vec(&[1], vec![0.3]).unwrap()];
+        let mut opt = Adam::new(&p, 0.01);
+        opt.update(&mut p, &g).unwrap();
+        assert!((p[0].data[0] - 0.99).abs() < 1e-6, "{}", p[0].data[0]);
+        assert!((opt.m[0].data[0] - 0.03).abs() < 1e-8);
+        assert!((opt.v[0].data[0] - 9e-5).abs() < 5e-9); // f32 (1-B2) rounding
+    }
+}

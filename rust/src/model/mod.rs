@@ -1,0 +1,167 @@
+//! Model state owned by the coordinator: parameter store (with the
+//! FastMoE sync tags), host-side Adam, and checkpointing.
+//!
+//! The fused fig-7 path keeps Adam *inside* the train-step HLO; the
+//! distributed path computes gradients per worker (`grad_step`
+//! artifact), synchronises them via [`crate::coordinator::GradSync`],
+//! and applies [`Adam`] here on the host.  Both produce identical math
+//! (pinned against each other in `rust/tests/`).
+
+mod adam;
+mod checkpoint;
+
+pub use adam::Adam;
+pub use checkpoint::{load_checkpoint, save_checkpoint};
+
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+use crate::runtime::{ModelEntry, ParamEntry, SyncTag};
+use crate::tensor::TensorF32;
+
+/// Named, ordered parameter tensors with sync tags.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub entries: Vec<ParamEntry>,
+    pub tensors: Vec<TensorF32>,
+}
+
+impl ParamStore {
+    /// Initialise from the manifest registry, python-free.
+    ///
+    /// `normal:<std>` draws are derived from `seed` *per parameter name*
+    /// so initialisation is independent of registry order and identical
+    /// across workers (FastMoE replicates non-expert params everywhere).
+    pub fn init(model: &ModelEntry, seed: u64) -> Result<ParamStore> {
+        let mut tensors = Vec::with_capacity(model.params.len());
+        for p in &model.params {
+            let mut t = TensorF32::zeros(&p.shape);
+            if p.init == "zeros" {
+                // already zero
+            } else if p.init == "ones" {
+                t.data.fill(1.0);
+            } else if let Some(stds) = p.init.strip_prefix("normal:") {
+                let std: f32 = stds
+                    .parse()
+                    .map_err(|_| Error::Manifest(format!("bad init `{}`", p.init)))?;
+                let mut rng = Rng::new(seed ^ name_hash(&p.name));
+                rng.fill_normal(&mut t.data, std);
+            } else {
+                return Err(Error::Manifest(format!("unknown init `{}`", p.init)));
+            }
+            tensors.push(t);
+        }
+        Ok(ParamStore { entries: model.params.clone(), tensors })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.entries.iter().position(|e| e.name == name)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&TensorF32> {
+        self.index_of(name).map(|i| &self.tensors[i])
+    }
+
+    /// Indices of parameters with a given sync tag.
+    pub fn tagged(&self, tag: SyncTag) -> Vec<usize> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.tag == tag)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Zero-filled gradient/optimizer buffers with matching shapes.
+    pub fn zeros_like(&self) -> Vec<TensorF32> {
+        self.tensors
+            .iter()
+            .map(|t| TensorF32::zeros(&t.shape))
+            .collect()
+    }
+
+    /// Sanity check: all tensors finite (failure-injection tests poke this).
+    pub fn all_finite(&self) -> bool {
+        self.tensors
+            .iter()
+            .all(|t| t.data.iter().all(|v| v.is_finite()))
+    }
+}
+
+fn name_hash(name: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn sample_model() -> ModelEntry {
+        let text = r#"{
+          "preset": "t", "artifacts": [],
+          "models": {"m": {
+            "config": {},
+            "params": [
+              {"name": "gate/w", "shape": [4, 2], "init": "normal:0.5", "tag": "world"},
+              {"name": "expert/w", "shape": [2, 3], "init": "normal:0.5", "tag": "none"},
+              {"name": "ln/g", "shape": [4], "init": "ones", "tag": "data_parallel"},
+              {"name": "ln/b", "shape": [4], "init": "zeros", "tag": "data_parallel"}
+            ],
+            "train_step": "", "eval_step": "", "grad_step": ""}}
+        }"#;
+        Manifest::parse(text).unwrap().model("m").unwrap().clone()
+    }
+
+    #[test]
+    fn init_respects_specs() {
+        let ps = ParamStore::init(&sample_model(), 1).unwrap();
+        assert_eq!(ps.len(), 4);
+        assert!(ps.by_name("ln/g").unwrap().data.iter().all(|&x| x == 1.0));
+        assert!(ps.by_name("ln/b").unwrap().data.iter().all(|&x| x == 0.0));
+        let w = ps.by_name("gate/w").unwrap();
+        assert!(w.data.iter().any(|&x| x != 0.0));
+        // std≈0.5: values should mostly be within 3σ
+        assert!(w.data.iter().all(|&x| x.abs() < 3.0));
+        assert_eq!(ps.n_elements(), 8 + 6 + 4 + 4);
+        assert!(ps.all_finite());
+    }
+
+    #[test]
+    fn init_is_deterministic_and_order_independent() {
+        let a = ParamStore::init(&sample_model(), 7).unwrap();
+        let b = ParamStore::init(&sample_model(), 7).unwrap();
+        assert_eq!(a.tensors, b.tensors);
+        let c = ParamStore::init(&sample_model(), 8).unwrap();
+        assert_ne!(a.by_name("gate/w"), c.by_name("gate/w"));
+    }
+
+    #[test]
+    fn tags_partition() {
+        let ps = ParamStore::init(&sample_model(), 1).unwrap();
+        let w = ps.tagged(SyncTag::World);
+        let d = ps.tagged(SyncTag::DataParallel);
+        let n = ps.tagged(SyncTag::None);
+        assert_eq!(w, vec![0]);
+        assert_eq!(n, vec![1]);
+        assert_eq!(d, vec![2, 3]);
+        assert_eq!(w.len() + d.len() + n.len(), ps.len());
+    }
+}

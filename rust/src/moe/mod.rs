@@ -1,0 +1,616 @@
+//! MoE dispatch machinery — the paper's §3.2/§4 logic on the host side.
+//!
+//! In stage mode the Rust coordinator owns everything between the HLO
+//! programs: top-k gating over the gate scores, counting tokens per
+//! (worker, expert), building the [`DispatchPlan`] (the *local data
+//! shuffle*), packing rows for the Figure-2 all-to-all (the *global data
+//! exchange*), re-batching incoming rows per local expert with
+//! power-of-two capacity [`bucket_for`] padding, and the reverse path.
+//!
+//! Slot convention (shared with `python/compile/kernels/scatter.py`):
+//! assignment `a = token*k + j` gets packed position `slots[a]`; packed
+//! rows are ordered by (destination worker, local expert, token).
+
+mod monitor;
+
+pub use monitor::{balance_loss, LoadMonitor};
+
+use crate::error::{Error, Result};
+use crate::tensor::{ops, TensorF32};
+
+/// Top-k gate selection + k-way softmax weights (matches
+/// `stages.topk_softmax`; ties toward the lower expert id).
+#[derive(Clone, Debug)]
+pub struct GateAssign {
+    pub nb: usize,
+    pub k: usize,
+    /// Chosen expert per assignment, `[nb * k]`, token-major.
+    pub idx: Vec<u32>,
+    /// Gate weight per assignment, `[nb * k]`.
+    pub w: Vec<f32>,
+}
+
+/// Select top-k experts per row of `scores: [nb, n_e]` and softmax the
+/// selected raw scores.
+pub fn topk_softmax(scores: &TensorF32, k: usize) -> Result<GateAssign> {
+    let (nb, ne) = scores.dims2()?;
+    if k == 0 || k > ne {
+        return Err(Error::Shape(format!("top-k {k} of {ne} experts")));
+    }
+    let mut idx = Vec::with_capacity(nb * k);
+    let mut w = Vec::with_capacity(nb * k);
+    let mut sel = vec![0.0f32; k];
+    for i in 0..nb {
+        let row = scores.row(i);
+        let top = ops::topk_indices(row, k);
+        for (j, &e) in top.iter().enumerate() {
+            sel[j] = row[e];
+            idx.push(e as u32);
+        }
+        ops::softmax_slice(&mut sel);
+        w.extend_from_slice(&sel);
+    }
+    Ok(GateAssign { nb, k, idx, w })
+}
+
+/// Backward of [`topk_softmax`]: scatter the k-way softmax Jacobian into
+/// a full `[nb, n_e]` score-gradient matrix.
+pub fn topk_softmax_bwd(
+    assign: &GateAssign,
+    dw: &[f32],
+    ne: usize,
+) -> Result<TensorF32> {
+    if dw.len() != assign.nb * assign.k {
+        return Err(Error::Shape("dw arity".into()));
+    }
+    let mut dscores = TensorF32::zeros(&[assign.nb, ne]);
+    let k = assign.k;
+    let mut ds = vec![0.0f32; k];
+    for i in 0..assign.nb {
+        let wrow = &assign.w[i * k..(i + 1) * k];
+        let dwrow = &dw[i * k..(i + 1) * k];
+        ops::softmax_slice_bwd(wrow, dwrow, &mut ds);
+        for j in 0..k {
+            let e = assign.idx[i * k + j] as usize;
+            dscores.data[i * ne + e] += ds[j];
+        }
+    }
+    Ok(dscores)
+}
+
+/// The local shuffle + global exchange plan for one iteration.
+#[derive(Clone, Debug)]
+pub struct DispatchPlan {
+    pub nb: usize,
+    pub k: usize,
+    pub workers: usize,
+    pub ne_local: usize,
+    /// Assignment ids in packed (worker, local expert, token) order.
+    pub order: Vec<u32>,
+    /// Packed position per assignment, `[nb * k]` (inverse of `order`).
+    pub slots: Vec<i32>,
+    /// Rows sent to each destination worker.
+    pub send_rows: Vec<usize>,
+    /// Per destination worker, rows per local expert (the Figure-2
+    /// "number of samples assigned to each expert on each worker").
+    pub send_counts: Vec<Vec<u32>>,
+}
+
+impl DispatchPlan {
+    /// Build the plan from gate assignments.  Global expert `e` lives on
+    /// worker `e / ne_local` as local expert `e % ne_local`.
+    pub fn build(assign: &GateAssign, workers: usize, ne_local: usize) -> Result<Self> {
+        let n_assign = assign.nb * assign.k;
+        let ne_global = workers * ne_local;
+        for &e in &assign.idx {
+            if e as usize >= ne_global {
+                return Err(Error::Shape(format!(
+                    "expert id {e} out of range ({ne_global} global experts)"
+                )));
+            }
+        }
+        // counting sort by (worker, local expert) == by global expert id,
+        // stable in token order — O(n + E)
+        let mut counts_global = vec![0u32; ne_global];
+        for &e in &assign.idx {
+            counts_global[e as usize] += 1;
+        }
+        let mut offsets = vec![0u32; ne_global + 1];
+        for e in 0..ne_global {
+            offsets[e + 1] = offsets[e] + counts_global[e];
+        }
+        let mut order = vec![0u32; n_assign];
+        let mut cursor = offsets.clone();
+        for (a, &e) in assign.idx.iter().enumerate() {
+            let pos = cursor[e as usize];
+            order[pos as usize] = a as u32;
+            cursor[e as usize] += 1;
+        }
+        let mut slots = vec![0i32; n_assign];
+        for (pos, &a) in order.iter().enumerate() {
+            slots[a as usize] = pos as i32;
+        }
+        let send_counts: Vec<Vec<u32>> = (0..workers)
+            .map(|wkr| {
+                (0..ne_local)
+                    .map(|e| counts_global[wkr * ne_local + e])
+                    .collect()
+            })
+            .collect();
+        let send_rows = send_counts
+            .iter()
+            .map(|c| c.iter().map(|&x| x as usize).sum())
+            .collect();
+        Ok(DispatchPlan {
+            nb: assign.nb,
+            k: assign.k,
+            workers,
+            ne_local,
+            order,
+            slots,
+            send_rows,
+            send_counts,
+        })
+    }
+
+    /// Pack token features into per-destination-worker buffers in packed
+    /// order (the scatter of §4, fused with the send staging).
+    pub fn pack(&self, x: &TensorF32) -> Result<Vec<Vec<f32>>> {
+        let (nb, dm) = x.dims2()?;
+        if nb != self.nb {
+            return Err(Error::Shape("pack: batch mismatch".into()));
+        }
+        let mut out: Vec<Vec<f32>> = self
+            .send_rows
+            .iter()
+            .map(|&r| Vec::with_capacity(r * dm))
+            .collect();
+        let mut pos = 0usize;
+        for wkr in 0..self.workers {
+            let rows = self.send_rows[wkr];
+            let buf = &mut out[wkr];
+            for _ in 0..rows {
+                let a = self.order[pos] as usize;
+                let token = a / self.k;
+                buf.extend_from_slice(x.row(token));
+                pos += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Reassemble per-peer returned buffers into `[nb*k, dm]` rows in
+    /// packed order (the input expected by the combine kernel).
+    pub fn unpack_returned(&self, parts: &[Vec<f32>], dm: usize) -> Result<TensorF32> {
+        if parts.len() != self.workers {
+            return Err(Error::Shape("unpack: wrong peer count".into()));
+        }
+        let n_assign = self.nb * self.k;
+        let mut ys = TensorF32::zeros(&[n_assign, dm]);
+        let mut pos = 0usize;
+        for (wkr, part) in parts.iter().enumerate() {
+            let rows = self.send_rows[wkr];
+            if part.len() != rows * dm {
+                return Err(Error::Shape(format!(
+                    "unpack: peer {wkr} returned {} floats, expected {}",
+                    part.len(),
+                    rows * dm
+                )));
+            }
+            ys.data[pos * dm..(pos + rows) * dm].copy_from_slice(part);
+            pos += rows;
+        }
+        Ok(ys)
+    }
+
+    /// Slots as an `[nb, k]` i32 tensor (combine-kernel input).
+    pub fn slots_i32(&self) -> crate::tensor::TensorI32 {
+        crate::tensor::TensorI32 {
+            shape: vec![self.nb, self.k],
+            data: self.slots.clone(),
+        }
+    }
+}
+
+/// Rows arriving at one worker, regrouped per local expert and padded to
+/// a capacity bucket — the receiver side of Figure 2.
+#[derive(Clone, Debug)]
+pub struct ExpertBatch {
+    pub ne_local: usize,
+    pub bucket: usize,
+    pub dm: usize,
+    /// `[ne_local, bucket, dm]` zero-padded expert inputs.
+    pub xs: TensorF32,
+    /// Incoming rows per (peer, local expert).
+    pub recv_counts: Vec<Vec<u32>>,
+    /// Total rows per local expert.
+    pub rows_per_expert: Vec<usize>,
+}
+
+impl ExpertBatch {
+    /// Regroup incoming rows (grouped by expert *within* each peer
+    /// buffer) into per-expert contiguous blocks across peers.
+    pub fn build(
+        recv_counts: Vec<Vec<u32>>,
+        recv_parts: &[Vec<f32>],
+        ne_local: usize,
+        dm: usize,
+        buckets: &[usize],
+    ) -> Result<ExpertBatch> {
+        let peers = recv_counts.len();
+        if recv_parts.len() != peers {
+            return Err(Error::Shape("recv parts/counts mismatch".into()));
+        }
+        let mut rows_per_expert = vec![0usize; ne_local];
+        for counts in &recv_counts {
+            if counts.len() != ne_local {
+                return Err(Error::Shape("recv counts arity".into()));
+            }
+            for (e, &c) in counts.iter().enumerate() {
+                rows_per_expert[e] += c as usize;
+            }
+        }
+        let max_rows = rows_per_expert.iter().copied().max().unwrap_or(0);
+        let bucket = bucket_for(max_rows.max(1), buckets)?;
+
+        let mut xs = TensorF32::zeros(&[ne_local, bucket, dm]);
+        let mut fill = vec![0usize; ne_local];
+        for (p, part) in recv_parts.iter().enumerate() {
+            let mut off = 0usize;
+            for e in 0..ne_local {
+                let rows = recv_counts[p][e] as usize;
+                let src = &part[off * dm..(off + rows) * dm];
+                let dst_start = (e * bucket + fill[e]) * dm;
+                xs.data[dst_start..dst_start + rows * dm].copy_from_slice(src);
+                fill[e] += rows;
+                off += rows;
+            }
+            if off * dm != part.len() {
+                return Err(Error::Shape(format!(
+                    "peer {p} buffer has {} floats, counts say {}",
+                    part.len(),
+                    off * dm
+                )));
+            }
+        }
+        Ok(ExpertBatch { ne_local, bucket, dm, xs, recv_counts, rows_per_expert })
+    }
+
+    /// Split expert outputs `[ne_local, bucket, dm]` back into per-peer
+    /// return buffers (inverse of `build`, same grouping as arrival).
+    pub fn split_outputs(&self, ys: &TensorF32) -> Result<Vec<Vec<f32>>> {
+        if ys.shape != vec![self.ne_local, self.bucket, self.dm] {
+            return Err(Error::Shape(format!(
+                "split_outputs: got {:?}, expected [{}, {}, {}]",
+                ys.shape, self.ne_local, self.bucket, self.dm
+            )));
+        }
+        let peers = self.recv_counts.len();
+        let mut out: Vec<Vec<f32>> = (0..peers).map(|_| Vec::new()).collect();
+        let mut taken = vec![0usize; self.ne_local];
+        for p in 0..peers {
+            for e in 0..self.ne_local {
+                let rows = self.recv_counts[p][e] as usize;
+                let start = (e * self.bucket + taken[e]) * self.dm;
+                out[p].extend_from_slice(&ys.data[start..start + rows * self.dm]);
+                taken[e] += rows;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Zero-padded cotangent container shaped like `xs` (backward path).
+    pub fn zeros_like(&self) -> TensorF32 {
+        TensorF32::zeros(&[self.ne_local, self.bucket, self.dm])
+    }
+
+    /// Regroup another set of per-peer buffers (e.g. output cotangents
+    /// on the backward pass) into this batch's exact layout — same
+    /// counts, same bucket, padding rows zero.
+    pub fn rebatch(&self, parts: &[Vec<f32>]) -> Result<TensorF32> {
+        if parts.len() != self.recv_counts.len() {
+            return Err(Error::Shape("rebatch: peer count".into()));
+        }
+        let mut xs = self.zeros_like();
+        let mut fill = vec![0usize; self.ne_local];
+        for (p, part) in parts.iter().enumerate() {
+            let mut off = 0usize;
+            for e in 0..self.ne_local {
+                let rows = self.recv_counts[p][e] as usize;
+                let src = &part[off * self.dm..(off + rows) * self.dm];
+                let dst = (e * self.bucket + fill[e]) * self.dm;
+                xs.data[dst..dst + rows * self.dm].copy_from_slice(src);
+                fill[e] += rows;
+                off += rows;
+            }
+            if off * self.dm != part.len() {
+                return Err(Error::Shape("rebatch: ragged buffer".into()));
+            }
+        }
+        Ok(xs)
+    }
+}
+
+/// Smallest compiled bucket that fits `n` rows.
+pub fn bucket_for(n: usize, buckets: &[usize]) -> Result<usize> {
+    buckets
+        .iter()
+        .copied()
+        .filter(|&b| b >= n)
+        .min()
+        .ok_or_else(|| {
+            Error::Shape(format!(
+                "no capacity bucket fits {n} rows (have {buckets:?}); \
+                 re-run aot.py with larger buckets"
+            ))
+        })
+}
+
+/// Combine weighted expert outputs on the host (test oracle for the
+/// combine kernel; the hot path uses the HLO artifact).
+pub fn combine_host(
+    ys: &TensorF32,
+    assign: &GateAssign,
+    slots: &[i32],
+) -> Result<TensorF32> {
+    let (n_rows, dm) = ys.dims2()?;
+    if n_rows != assign.nb * assign.k {
+        return Err(Error::Shape("combine rows".into()));
+    }
+    let mut out = TensorF32::zeros(&[assign.nb, dm]);
+    for i in 0..assign.nb {
+        for j in 0..assign.k {
+            let a = i * assign.k + j;
+            let s = slots[a] as usize;
+            let wgt = assign.w[a];
+            let src = &ys.data[s * dm..(s + 1) * dm];
+            let dst = &mut out.data[i * dm..(i + 1) * dm];
+            for (d, v) in dst.iter_mut().zip(src) {
+                *d += wgt * v;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::{check, prop_assert, prop_assert_eq};
+
+    fn scores(nb: usize, ne: usize, seed: u64) -> TensorF32 {
+        let mut t = TensorF32::zeros(&[nb, ne]);
+        Rng::new(seed).fill_normal(&mut t.data, 1.0);
+        t
+    }
+
+    #[test]
+    fn topk_weights_normalised_and_sorted() {
+        let s = scores(10, 6, 1);
+        let a = topk_softmax(&s, 3).unwrap();
+        for i in 0..10 {
+            let wsum: f32 = a.w[i * 3..(i + 1) * 3].iter().sum();
+            assert!((wsum - 1.0).abs() < 1e-5);
+            // weights descend with score rank
+            assert!(a.w[i * 3] >= a.w[i * 3 + 1] && a.w[i * 3 + 1] >= a.w[i * 3 + 2]);
+            // chosen experts are distinct
+            let mut e: Vec<u32> = a.idx[i * 3..(i + 1) * 3].to_vec();
+            e.sort_unstable();
+            e.dedup();
+            assert_eq!(e.len(), 3);
+        }
+    }
+
+    #[test]
+    fn topk_rejects_bad_k() {
+        let s = scores(4, 2, 1);
+        assert!(topk_softmax(&s, 0).is_err());
+        assert!(topk_softmax(&s, 3).is_err());
+    }
+
+    #[test]
+    fn plan_is_permutation_and_counts_conserve() {
+        let s = scores(50, 8, 2);
+        let a = topk_softmax(&s, 2).unwrap();
+        let plan = DispatchPlan::build(&a, 4, 2).unwrap();
+        // order is a permutation of assignments
+        let mut o = plan.order.clone();
+        o.sort_unstable();
+        assert_eq!(o, (0..100u32).collect::<Vec<_>>());
+        // slots invert order
+        for (pos, &aid) in plan.order.iter().enumerate() {
+            assert_eq!(plan.slots[aid as usize], pos as i32);
+        }
+        // counts sum to assignments
+        let total: usize = plan.send_rows.iter().sum();
+        assert_eq!(total, 100);
+        // per-worker counts match send_rows
+        for w in 0..4 {
+            let c: u32 = plan.send_counts[w].iter().sum();
+            assert_eq!(c as usize, plan.send_rows[w]);
+        }
+    }
+
+    #[test]
+    fn packed_order_groups_by_worker_then_expert() {
+        let s = scores(40, 6, 3);
+        let a = topk_softmax(&s, 2).unwrap();
+        let plan = DispatchPlan::build(&a, 3, 2).unwrap();
+        let mut last_key = 0u32;
+        for &aid in &plan.order {
+            let e = a.idx[aid as usize];
+            assert!(e >= last_key, "packed order not sorted by expert");
+            last_key = e;
+        }
+    }
+
+    #[test]
+    fn pack_moves_correct_rows() {
+        let nb = 6;
+        let mut x = TensorF32::zeros(&[nb, 2]);
+        for i in 0..nb {
+            x.data[i * 2] = i as f32;
+            x.data[i * 2 + 1] = 100.0 + i as f32;
+        }
+        let s = scores(nb, 4, 4);
+        let a = topk_softmax(&s, 2).unwrap();
+        let plan = DispatchPlan::build(&a, 2, 2).unwrap();
+        let bufs = plan.pack(&x).unwrap();
+        // reconstruct: walking the packed order must visit x rows
+        let mut pos = 0;
+        for (w, buf) in bufs.iter().enumerate() {
+            assert_eq!(buf.len(), plan.send_rows[w] * 2);
+            for r in 0..plan.send_rows[w] {
+                let aid = plan.order[pos] as usize;
+                let tok = aid / 2;
+                assert_eq!(buf[r * 2], tok as f32);
+                pos += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn expert_batch_roundtrip() {
+        // two peers, two local experts, known rows
+        let dm = 3;
+        let recv_counts = vec![vec![2u32, 1], vec![1, 2]];
+        // peer buffers grouped by expert: peer0 = [e0r0, e0r1, e1r0]
+        let row = |v: f32| vec![v, v, v];
+        let p0: Vec<f32> = [row(1.), row(2.), row(10.)].concat();
+        let p1: Vec<f32> = [row(3.), row(20.), row(21.)].concat();
+        let eb = ExpertBatch::build(
+            recv_counts.clone(),
+            &[p0.clone(), p1.clone()],
+            2,
+            dm,
+            &[4, 8],
+        )
+        .unwrap();
+        assert_eq!(eb.bucket, 4);
+        assert_eq!(eb.rows_per_expert, vec![3, 3]);
+        // expert 0 block: rows 1,2 (peer0) then 3 (peer1), padded with 0
+        assert_eq!(&eb.xs.data[0..12], &[1., 1., 1., 2., 2., 2., 3., 3., 3., 0., 0., 0.]);
+        // identity "compute": split back must reproduce the peer buffers
+        let back = eb.split_outputs(&eb.xs).unwrap();
+        assert_eq!(back[0], p0);
+        assert_eq!(back[1], p1);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(bucket_for(1, &[16, 32]).unwrap(), 16);
+        assert_eq!(bucket_for(16, &[16, 32]).unwrap(), 16);
+        assert_eq!(bucket_for(17, &[16, 32]).unwrap(), 32);
+        assert!(bucket_for(33, &[16, 32]).is_err());
+    }
+
+    #[test]
+    fn prop_plan_pack_unpack_roundtrip() {
+        check("scatter∘gather = identity through the plan", 40, |g| {
+            let nb = g.usize_in(1, 60);
+            let workers = *g.choose(&[1usize, 2, 4]);
+            let ne_local = g.usize_in(1, 3);
+            let ne = workers * ne_local;
+            let k = g.usize_in(1, ne.min(3));
+            let dm = g.usize_in(1, 8);
+            let s = scores(nb, ne, g.rng.next_u64());
+            let a = topk_softmax(&s, k).map_err(|e| e.to_string())?;
+            let plan =
+                DispatchPlan::build(&a, workers, ne_local).map_err(|e| e.to_string())?;
+            let mut x = TensorF32::zeros(&[nb, dm]);
+            g.rng.fill_normal(&mut x.data, 1.0);
+
+            // send -> (identity expert) -> return -> combine with w=…:
+            let bufs = plan.pack(&x).map_err(|e| e.to_string())?;
+            // conservation of rows
+            let total: usize = bufs.iter().map(|b| b.len()).sum();
+            prop_assert_eq(total, nb * k * dm)?;
+            let ys = plan
+                .unpack_returned(&bufs, dm)
+                .map_err(|e| e.to_string())?;
+            let out = combine_host(&ys, &a, &plan.slots).map_err(|e| e.to_string())?;
+            // identity experts + weights summing to 1 ⇒ out == x
+            for i in 0..nb * dm {
+                prop_assert(
+                    (out.data[i] - x.data[i]).abs() < 1e-4,
+                    format!("mismatch at {i}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_expert_batch_conserves_rows() {
+        check("expert batch regroup conserves rows", 40, |g| {
+            let peers = g.usize_in(1, 4);
+            let ne_local = g.usize_in(1, 4);
+            let dm = g.usize_in(1, 6);
+            let counts: Vec<Vec<u32>> = (0..peers)
+                .map(|_| (0..ne_local).map(|_| g.usize_in(0, 9) as u32).collect())
+                .collect();
+            let mut val = 0.0f32;
+            let parts: Vec<Vec<f32>> = counts
+                .iter()
+                .map(|cs| {
+                    let rows: u32 = cs.iter().sum();
+                    (0..rows as usize * dm)
+                        .map(|_| {
+                            val += 1.0;
+                            val
+                        })
+                        .collect()
+                })
+                .collect();
+            let eb = ExpertBatch::build(counts, &parts, ne_local, dm, &[16, 64, 256])
+                .map_err(|e| e.to_string())?;
+            let back = eb.split_outputs(&eb.xs).map_err(|e| e.to_string())?;
+            for (p, buf) in back.iter().enumerate() {
+                prop_assert(
+                    buf == &parts[p],
+                    format!("peer {p} buffer not reproduced"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn topk_bwd_matches_finite_diff() {
+        let s = scores(6, 5, 9);
+        let k = 2;
+        let a = topk_softmax(&s, k).unwrap();
+        let mut rng = Rng::new(10);
+        let dw: Vec<f32> = (0..6 * k).map(|_| rng.normal() as f32).collect();
+        let ds = topk_softmax_bwd(&a, &dw, 5).unwrap();
+        let eps = 1e-3f32;
+        for i in 0..6 {
+            for e in 0..5 {
+                let mut sp = s.clone();
+                sp.data[i * 5 + e] += eps;
+                let mut sm = s.clone();
+                sm.data[i * 5 + e] -= eps;
+                let ap = topk_softmax(&sp, k).unwrap();
+                let am = topk_softmax(&sm, k).unwrap();
+                // finite diff only valid when the top-k set is stable
+                if ap.idx != a.idx || am.idx != a.idx {
+                    continue;
+                }
+                let f = |x: &GateAssign| -> f32 {
+                    x.w[i * k..(i + 1) * k]
+                        .iter()
+                        .zip(&dw[i * k..(i + 1) * k])
+                        .map(|(a, b)| a * b)
+                        .sum()
+                };
+                let fd = (f(&ap) - f(&am)) / (2.0 * eps);
+                assert!(
+                    (fd - ds.data[i * 5 + e]).abs() < 2e-3,
+                    "i={i} e={e}: fd={fd} ds={}",
+                    ds.data[i * 5 + e]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Load-balance monitoring — the paper's §6 "future work", implemented.
+//!
+//! Tracks per-expert token counts across iterations, reports imbalance
+//! statistics, and computes the GShard-style auxiliary balance loss
+//! `n_e · Σ_e f_e · p_e` (fraction of tokens routed to expert e times
+//! the mean gate probability of e), which the training loop can add to
+//! the LM loss.
+
+use crate::tensor::TensorF32;
+
+/// Running per-expert load statistics.
+#[derive(Clone, Debug)]
+pub struct LoadMonitor {
+    pub n_expert: usize,
+    /// Exponential moving average of the per-iteration load fraction.
+    ema: Vec<f64>,
+    /// Cumulative counts over all iterations.
+    total: Vec<u64>,
+    decay: f64,
+    iterations: u64,
+}
+
+impl LoadMonitor {
+    pub fn new(n_expert: usize) -> Self {
+        Self {
+            n_expert,
+            ema: vec![1.0 / n_expert as f64; n_expert],
+            total: vec![0; n_expert],
+            decay: 0.99,
+            iterations: 0,
+        }
+    }
+
+    /// Record one iteration's per-expert token counts.
+    pub fn record(&mut self, counts: &[u32]) {
+        assert_eq!(counts.len(), self.n_expert);
+        let total: u64 = counts.iter().map(|&c| c as u64).sum();
+        self.iterations += 1;
+        if total == 0 {
+            return;
+        }
+        for (e, &c) in counts.iter().enumerate() {
+            self.total[e] += c as u64;
+            let frac = c as f64 / total as f64;
+            self.ema[e] = self.decay * self.ema[e] + (1.0 - self.decay) * frac;
+        }
+    }
+
+    /// max/mean load ratio over the EMA (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let mean: f64 = self.ema.iter().sum::<f64>() / self.n_expert as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        self.ema.iter().cloned().fold(0.0, f64::max) / mean
+    }
+
+    /// Coefficient of variation of cumulative loads.
+    pub fn cv(&self) -> f64 {
+        let n = self.n_expert as f64;
+        let mean = self.total.iter().sum::<u64>() as f64 / n;
+        if mean <= 0.0 {
+            return 0.0;
+        }
+        let var = self
+            .total
+            .iter()
+            .map(|&c| (c as f64 - mean).powi(2))
+            .sum::<f64>()
+            / n;
+        var.sqrt() / mean
+    }
+
+    /// Experts that received < `frac` of the fair share, cumulatively.
+    pub fn starved(&self, frac: f64) -> Vec<usize> {
+        let fair = self.total.iter().sum::<u64>() as f64 / self.n_expert as f64;
+        self.total
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| (c as f64) < frac * fair)
+            .map(|(e, _)| e)
+            .collect()
+    }
+
+    pub fn totals(&self) -> &[u64] {
+        &self.total
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.iterations
+    }
+}
+
+/// GShard auxiliary balance loss from one iteration's counts and the
+/// full softmax gate probabilities `probs: [nb, n_e]`.
+pub fn balance_loss(counts: &[u32], probs: &TensorF32) -> f64 {
+    let (nb, ne) = match probs.dims2() {
+        Ok(d) => d,
+        Err(_) => return 0.0,
+    };
+    debug_assert_eq!(counts.len(), ne);
+    let total: u64 = counts.iter().map(|&c| c as u64).sum();
+    if total == 0 || nb == 0 {
+        return 0.0;
+    }
+    let mut loss = 0.0;
+    for e in 0..ne {
+        let f_e = counts[e] as f64 / total as f64;
+        let p_e: f64 = (0..nb)
+            .map(|i| probs.data[i * ne + e] as f64)
+            .sum::<f64>()
+            / nb as f64;
+        loss += f_e * p_e;
+    }
+    loss * ne as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_load_is_one() {
+        let mut m = LoadMonitor::new(4);
+        for _ in 0..100 {
+            m.record(&[10, 10, 10, 10]);
+        }
+        assert!((m.imbalance() - 1.0).abs() < 1e-9);
+        assert_eq!(m.cv(), 0.0);
+        assert!(m.starved(0.5).is_empty());
+    }
+
+    #[test]
+    fn skewed_load_detected() {
+        let mut m = LoadMonitor::new(4);
+        for _ in 0..200 {
+            m.record(&[97, 1, 1, 1]);
+        }
+        assert!(m.imbalance() > 3.0, "imbalance={}", m.imbalance());
+        assert_eq!(m.starved(0.5), vec![1, 2, 3]);
+        assert!(m.cv() > 1.0);
+    }
+
+    #[test]
+    fn zero_iteration_safe() {
+        let mut m = LoadMonitor::new(2);
+        m.record(&[0, 0]);
+        assert!((m.imbalance() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn balance_loss_minimised_when_uniform() {
+        // uniform probs + uniform counts => loss == 1.0 (the minimum)
+        let ne = 4;
+        let probs = TensorF32::full(&[8, ne], 1.0 / ne as f32);
+        let uniform = balance_loss(&[2, 2, 2, 2], &probs);
+        assert!((uniform - 1.0).abs() < 1e-6);
+        // concentrated counts with matching concentrated probs => higher
+        let mut conc = TensorF32::zeros(&[8, ne]);
+        for i in 0..8 {
+            conc.data[i * ne] = 1.0;
+        }
+        let skew = balance_loss(&[8, 0, 0, 0], &conc);
+        assert!(skew > 3.9, "skew={skew}");
+    }
+}

@@ -1,0 +1,303 @@
+//! `manifest.json` model: the ABI contract between aot.py and Rust.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+/// One AOT artifact: file + positional ABI + free-form meta.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+impl ArtifactMeta {
+    /// Meta field as usize (bucket, n_expert, …).
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize())
+    }
+
+    pub fn family(&self) -> &str {
+        self.meta.get("family").and_then(|v| v.as_str()).unwrap_or("")
+    }
+
+    pub fn kind(&self) -> &str {
+        self.meta.get("kind").and_then(|v| v.as_str()).unwrap_or("")
+    }
+}
+
+/// One parameter of a model registry (ordered!).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String, // "normal:<std>" | "zeros" | "ones"
+    pub tag: SyncTag,
+}
+
+/// FastMoE §3.2 gradient-synchronisation tags.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SyncTag {
+    /// Replicated on every worker (the gate network).
+    World,
+    /// Replicated within a data-parallel group (attention, norms, …).
+    DataParallel,
+    /// Expert-parallel shard, never synchronised.
+    None,
+}
+
+impl SyncTag {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "world" => Ok(SyncTag::World),
+            "data_parallel" => Ok(SyncTag::DataParallel),
+            "none" => Ok(SyncTag::None),
+            other => Err(Error::Manifest(format!("unknown sync tag `{other}`"))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SyncTag::World => "world",
+            SyncTag::DataParallel => "data_parallel",
+            SyncTag::None => "none",
+        }
+    }
+}
+
+/// A model registry entry: ordered params + step artifact names + config.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub params: Vec<ParamEntry>,
+    pub train_step: String,
+    pub eval_step: String,
+    pub grad_step: String,
+    pub config: Json,
+}
+
+impl ModelEntry {
+    pub fn n_params(&self) -> usize {
+        self.params
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum()
+    }
+
+    pub fn config_usize(&self, key: &str) -> Option<usize> {
+        self.config.get(key).and_then(|v| v.as_usize())
+    }
+}
+
+/// The whole parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub preset_params: Json,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub models: BTreeMap<String, ModelEntry>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let preset = j.str_or("preset", "unknown");
+        let preset_params = j.get("preset_params").cloned().unwrap_or(Json::Null);
+
+        let mut artifacts = Vec::new();
+        for a in j
+            .req("artifacts")?
+            .as_array()
+            .ok_or_else(|| Error::Manifest("artifacts not an array".into()))?
+        {
+            artifacts.push(parse_artifact(a)?);
+        }
+
+        let mut models = BTreeMap::new();
+        if let Some(Json::Object(m)) = j.get("models") {
+            for (name, entry) in m {
+                models.insert(name.clone(), parse_model(name, entry)?);
+            }
+        }
+
+        let by_name = artifacts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.name.clone(), i))
+            .collect();
+
+        Ok(Manifest { preset, preset_params, artifacts, models, by_name })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.by_name.get(name).map(|&i| &self.artifacts[i])
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("unknown model `{name}`")))
+    }
+
+    /// Artifacts of one family ("fig5", "stage", …), manifest order.
+    pub fn family(&self, family: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.family() == family)
+            .collect()
+    }
+
+    /// Available expert-fwd buckets, ascending.
+    pub fn buckets(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind() == "expert_fwd")
+            .filter_map(|a| a.meta_usize("bucket"))
+            .collect();
+        b.sort_unstable();
+        b
+    }
+}
+
+fn parse_spec(j: &Json, idx: usize) -> Result<TensorSpec> {
+    let shape = j
+        .req("shape")?
+        .as_array()
+        .ok_or_else(|| Error::Manifest("shape not array".into()))?
+        .iter()
+        .map(|v| {
+            v.as_usize()
+                .ok_or_else(|| Error::Manifest("bad shape element".into()))
+        })
+        .collect::<Result<Vec<usize>>>()?;
+    let dtype = j.str_or("dtype", "f32");
+    let name = j.str_or("name", &format!("arg{idx}"));
+    Ok(TensorSpec { name, shape, dtype })
+}
+
+fn parse_artifact(j: &Json) -> Result<ArtifactMeta> {
+    let name = j
+        .req("name")?
+        .as_str()
+        .ok_or_else(|| Error::Manifest("artifact name not a string".into()))?
+        .to_string();
+    let file = j.str_or("file", &format!("{name}.hlo.txt"));
+    let inputs = j
+        .req("inputs")?
+        .as_array()
+        .ok_or_else(|| Error::Manifest("inputs not array".into()))?
+        .iter()
+        .enumerate()
+        .map(|(i, s)| parse_spec(s, i))
+        .collect::<Result<Vec<_>>>()?;
+    let outputs = j
+        .req("outputs")?
+        .as_array()
+        .ok_or_else(|| Error::Manifest("outputs not array".into()))?
+        .iter()
+        .enumerate()
+        .map(|(i, s)| parse_spec(s, i))
+        .collect::<Result<Vec<_>>>()?;
+    let meta = j.get("meta").cloned().unwrap_or(Json::Null);
+    Ok(ArtifactMeta { name, file, inputs, outputs, meta })
+}
+
+fn parse_model(name: &str, j: &Json) -> Result<ModelEntry> {
+    let mut params = Vec::new();
+    for p in j
+        .req("params")?
+        .as_array()
+        .ok_or_else(|| Error::Manifest("params not array".into()))?
+    {
+        let pname = p
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| Error::Manifest("param name".into()))?
+            .to_string();
+        let shape = p
+            .req("shape")?
+            .as_array()
+            .ok_or_else(|| Error::Manifest("param shape".into()))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| Error::Manifest("dim".into())))
+            .collect::<Result<Vec<usize>>>()?;
+        let init = p.str_or("init", "zeros");
+        let tag = SyncTag::parse(&p.str_or("tag", "data_parallel"))?;
+        params.push(ParamEntry { name: pname, shape, init, tag });
+    }
+    Ok(ModelEntry {
+        name: name.to_string(),
+        params,
+        train_step: j.str_or("train_step", ""),
+        eval_step: j.str_or("eval_step", ""),
+        grad_step: j.str_or("grad_step", ""),
+        config: j.get("config").cloned().unwrap_or(Json::Null),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "preset": "tiny",
+      "preset_params": {"nb": 64},
+      "artifacts": [
+        {"name": "a", "file": "a.hlo.txt",
+         "inputs": [{"name": "x", "shape": [2, 3], "dtype": "f32"}],
+         "outputs": [{"index": 0, "shape": [2], "dtype": "i32"}],
+         "meta": {"family": "stage", "kind": "expert_fwd", "bucket": 64}},
+        {"name": "b", "file": "b.hlo.txt", "inputs": [], "outputs": [],
+         "meta": {"family": "stage", "kind": "expert_fwd", "bucket": 16}}
+      ],
+      "models": {
+        "m": {"config": {"seq": 4},
+              "params": [{"name": "w", "shape": [2, 2],
+                          "init": "normal:0.02", "tag": "none"}],
+              "train_step": "ts", "eval_step": "es", "grad_step": "gs"}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.preset, "tiny");
+        let a = m.artifact("a").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.outputs[0].dtype, "i32");
+        assert_eq!(a.meta_usize("bucket"), Some(64));
+        assert_eq!(m.buckets(), vec![16, 64]);
+        let model = m.model("m").unwrap();
+        assert_eq!(model.params[0].tag, SyncTag::None);
+        assert_eq!(model.n_params(), 4);
+        assert_eq!(model.config_usize("seq"), Some(4));
+        assert!(m.model("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_tag() {
+        let bad = SAMPLE.replace("\"none\"", "\"sometimes\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn family_filter() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.family("stage").len(), 2);
+        assert_eq!(m.family("fig5").len(), 0);
+    }
+}

@@ -1,0 +1,339 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute from Rust.
+//!
+//! The build path (`make artifacts`) lowers every Layer-1/2 program to
+//! HLO **text** plus a `manifest.json` describing each program's ABI.
+//! This module is the only place that touches the `xla` crate:
+//!
+//! * [`Manifest`] — parsed manifest: artifact ABIs + model registries.
+//! * [`Runtime`] — a PJRT CPU client plus a compile-once executable
+//!   cache keyed by artifact name.
+//! * [`Executable::run`] — positional `HostTensor` in / out with full
+//!   ABI checking, so an artifact/coordinator mismatch is a typed error
+//!   rather than a segfault three layers down.
+
+mod manifest;
+
+pub use manifest::{ArtifactMeta, Manifest, ModelEntry, ParamEntry, SyncTag, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::tensor::{HostTensor, TensorF32, TensorI32};
+
+/// A compiled artifact with its ABI.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// Safety: the PJRT CPU client is thread-safe for compilation and
+// execution (it is driven from many threads inside TF/JAX); the xla
+// crate just hasn't marked its wrappers. All mutation is behind the
+// C++ API's own synchronisation.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+/// The PJRT runtime: client + artifact registry + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Open the artifact directory (compiles nothing yet).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} ({e}); run `make artifacts`",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, manifest, dir, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Locate the artifacts directory: `$FASTMOE_ARTIFACTS`, then
+    /// `./artifacts`, then `<crate root>/artifacts`.
+    pub fn open_default() -> Result<Self> {
+        if let Ok(dir) = std::env::var("FASTMOE_ARTIFACTS") {
+            return Self::open(dir);
+        }
+        for cand in ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")] {
+            if Path::new(cand).join("manifest.json").exists() {
+                return Self::open(cand);
+            }
+        }
+        Err(Error::Manifest(
+            "no artifacts directory found (run `make artifacts` or set \
+             FASTMOE_ARTIFACTS)"
+                .into(),
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| Error::ArtifactNotFound(name.to_string()))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::msg("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let e = Arc::new(Executable { meta, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Pre-compile a set of artifacts (worker warm-up).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Build + compile a computation with the XlaBuilder (fig-3 GEMM
+    /// sweep builds matmuls of arbitrary shapes at run time).
+    pub fn compile_computation(
+        &self,
+        comp: &xla::XlaComputation,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        Ok(self.client.compile(comp)?)
+    }
+
+    /// Transfer a host tensor to a device-resident buffer.
+    ///
+    /// The buffer-based execute path (`Executable::run_buffers`) is both
+    /// the fast path (no host→device transfer per call for persistent
+    /// state) and the *leak-free* path: the pinned xla_extension's
+    /// literal-argument `execute` leaks its implicit transfer buffers
+    /// (~40 KiB/call measured — EXPERIMENTS.md §Perf), while
+    /// `execute_b` with explicit buffers is clean.
+    pub fn to_buffer(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let lit = to_literal(t)?;
+        Ok(self.client.buffer_from_host_literal(None, &lit)?)
+    }
+}
+
+impl Executable {
+    /// Execute with positional host tensors; checks the ABI both ways.
+    ///
+    /// Arguments go through explicit device buffers + `execute_b`: the
+    /// pinned xla_extension's literal-argument `execute` leaks its
+    /// implicit transfer buffers (~40 KiB/call, which OOM-killed a
+    /// 300-step training run — EXPERIMENTS.md §Perf iteration 2);
+    /// the explicit-buffer path is leak-free and lets callers keep
+    /// persistent state device-side.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.check_inputs(inputs)?;
+        let client = self.exe.client();
+        // literals must outlive execution: the CPU PJRT host→device
+        // transfer is asynchronous and reads the literal's memory.
+        let mut literals = Vec::with_capacity(inputs.len());
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let lit = to_literal(t)?;
+            bufs.push(client.buffer_from_host_literal(None, &lit)?);
+            literals.push(lit);
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let out = self.run_buffers(&refs)?;
+        let tuple = out[0].to_literal_sync()?;
+        drop(literals);
+        self.decode_outputs(tuple)
+    }
+
+    /// Execute raw literals (perf path: callers may keep literals around).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self.exe.execute::<xla::Literal>(literals)?;
+        Ok(result[0][0].to_literal_sync()?)
+    }
+
+    /// Execute with device-resident argument buffers (see
+    /// [`Runtime::to_buffer`]); returns the raw output buffers of the
+    /// result tuple — callers keep state device-side across calls.
+    pub fn run_buffers(
+        &self,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut result = self.exe.execute_b(args)?;
+        Ok(std::mem::take(&mut result[0]))
+    }
+
+    /// Decode one output buffer per the manifest output spec at `idx`.
+    pub fn buffer_to_host(
+        &self,
+        idx: usize,
+        buf: &xla::PjRtBuffer,
+    ) -> Result<HostTensor> {
+        let lit = buf.to_literal_sync()?;
+        from_literal(lit, &self.meta.outputs[idx])
+    }
+
+    fn check_inputs(&self, inputs: &[HostTensor]) -> Result<()> {
+        let spec = &self.meta.inputs;
+        if inputs.len() != spec.len() {
+            return Err(Error::Abi {
+                artifact: self.meta.name.clone(),
+                msg: format!("expected {} inputs, got {}", spec.len(), inputs.len()),
+            });
+        }
+        for (i, (t, s)) in inputs.iter().zip(spec).enumerate() {
+            if t.shape() != s.shape.as_slice() || t.dtype() != s.dtype {
+                return Err(Error::Abi {
+                    artifact: self.meta.name.clone(),
+                    msg: format!(
+                        "input {i} (`{}`): expected {:?} {}, got {:?} {}",
+                        s.name, s.shape, s.dtype, t.shape(), t.dtype()
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn decode_outputs(&self, tuple: xla::Literal) -> Result<Vec<HostTensor>> {
+        let mut tuple = tuple;
+        let parts = tuple.decompose_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            return Err(Error::Abi {
+                artifact: self.meta.name.clone(),
+                msg: format!(
+                    "expected {} outputs, got {}",
+                    self.meta.outputs.len(),
+                    parts.len()
+                ),
+            });
+        }
+        parts
+            .into_iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, spec)| from_literal(lit, spec))
+            .collect()
+    }
+}
+
+/// HostTensor -> PJRT literal.
+pub fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let (ty, dims, bytes) = match t {
+        HostTensor::F32(t) => (xla::ElementType::F32, &t.shape, t.as_bytes()),
+        HostTensor::I32(t) => (xla::ElementType::S32, &t.shape, t.as_bytes()),
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        ty, dims, bytes,
+    )?)
+}
+
+/// PJRT literal -> HostTensor, validated against the manifest spec.
+pub fn from_literal(lit: xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+    let shape = spec.shape.clone();
+    match spec.dtype.as_str() {
+        "f32" => {
+            let data = lit.to_vec::<f32>()?;
+            Ok(TensorF32::from_vec(&shape, data)?.into())
+        }
+        "i32" => {
+            let data = lit.to_vec::<i32>()?;
+            Ok(TensorI32::from_vec(&shape, data)?.into())
+        }
+        other => Err(Error::Manifest(format!("unsupported dtype `{other}`"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        Runtime::open_default().ok()
+    }
+
+    #[test]
+    fn manifest_loads_and_lists_artifacts() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.manifest.artifacts.len() >= 10);
+        assert!(rt.manifest.artifact("quickstart_moe").is_some());
+        assert!(rt.manifest.artifact("definitely_missing").is_none());
+    }
+
+    #[test]
+    fn unknown_artifact_is_typed_error() {
+        let Some(rt) = runtime() else { return };
+        match rt.executable("nope") {
+            Err(Error::ArtifactNotFound(n)) => assert_eq!(n, "nope"),
+            Err(other) => panic!("expected ArtifactNotFound, got {other}"),
+            Ok(_) => panic!("expected ArtifactNotFound, got Ok"),
+        }
+    }
+
+    #[test]
+    fn quickstart_artifact_runs_and_matches_host_gate() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.executable("quickstart_moe").unwrap();
+        let meta = exe.meta.clone();
+        let mut rng = crate::rng::Rng::new(3);
+        let inputs: Vec<HostTensor> = meta
+            .inputs
+            .iter()
+            .map(|s| {
+                let mut t = TensorF32::zeros(&s.shape);
+                rng.fill_normal(&mut t.data, 0.3);
+                HostTensor::F32(t)
+            })
+            .collect();
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let y = out[0].as_f32().unwrap();
+        assert_eq!(y.shape, meta.inputs[0].shape); // same shape as x
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        // executable cache: second fetch hits the cache
+        let before = rt.cached();
+        let _ = rt.executable("quickstart_moe").unwrap();
+        assert_eq!(rt.cached(), before);
+    }
+
+    #[test]
+    fn abi_mismatch_is_rejected() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.executable("quickstart_moe").unwrap();
+        // wrong arity
+        assert!(matches!(exe.run(&[]), Err(Error::Abi { .. })));
+        // wrong shape
+        let bad: Vec<HostTensor> = exe
+            .meta
+            .inputs
+            .iter()
+            .map(|_| HostTensor::F32(TensorF32::zeros(&[1, 1])))
+            .collect();
+        assert!(matches!(exe.run(&bad), Err(Error::Abi { .. })));
+    }
+}

@@ -1,0 +1,5 @@
+//! Simulated hardware models.
+
+mod net;
+
+pub use net::{NetModel, NetPreset};

@@ -1,0 +1,141 @@
+//! Analytic α-β network timing model.
+//!
+//! The paper's testbed is 8 nodes × 1 V100 over Infiniband EDR.  Our
+//! in-process channels move data at memcpy speed, so for the Figure-6
+//! scalability study we account *simulated wire time* for each
+//! collective with the classic latency/bandwidth (α-β) model:
+//!
+//!   t(message of b bytes) = α + b / β
+//!
+//! All-to-all across `n` workers sends `n-1` messages per worker in
+//! parallel network directions; with a non-blocking switch (the paper's
+//! EDR switch + 8 HCAs) each worker's egress is the bottleneck:
+//!
+//!   t_a2a = α·(n-1) + (bytes_sent_by_worker) / β
+//!
+//! Ring all-reduce of `s` bytes: 2(n-1) steps of s/n bytes each.
+
+/// Preset link parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetPreset {
+    /// Infiniband EDR: 100 Gb/s ≈ 12.5 GB/s, ~1.5 µs MPI-level latency.
+    IbEdr,
+    /// PCIe 3.0 x16 host link: ~12 GB/s but higher software latency.
+    Pcie3,
+    /// Infinite network (disable simulated wire time).
+    None,
+}
+
+impl NetPreset {
+    pub fn parse(s: &str) -> Option<NetPreset> {
+        match s {
+            "ib-edr" | "ib_edr" | "ib" => Some(NetPreset::IbEdr),
+            "pcie3" | "pcie" => Some(NetPreset::Pcie3),
+            "none" | "infinite" => Some(NetPreset::None),
+            _ => None,
+        }
+    }
+}
+
+/// The α-β model with per-collective helpers.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// Per-message latency, seconds.
+    pub alpha: f64,
+    /// Link bandwidth, bytes/second.
+    pub beta: f64,
+    pub enabled: bool,
+}
+
+impl NetModel {
+    pub fn preset(p: NetPreset) -> NetModel {
+        match p {
+            NetPreset::IbEdr => NetModel {
+                alpha: 1.5e-6,
+                beta: 12.5e9,
+                enabled: true,
+            },
+            NetPreset::Pcie3 => NetModel {
+                alpha: 5.0e-6,
+                beta: 12.0e9,
+                enabled: true,
+            },
+            NetPreset::None => NetModel { alpha: 0.0, beta: f64::INFINITY, enabled: false },
+        }
+    }
+
+    /// Wire time of one point-to-point message.
+    pub fn p2p(&self, bytes: usize) -> f64 {
+        if !self.enabled {
+            return 0.0;
+        }
+        self.alpha + bytes as f64 / self.beta
+    }
+
+    /// All-to-all among `n` workers where this worker sends
+    /// `bytes_out` in total (egress-bound, non-blocking switch).
+    pub fn all_to_all(&self, n: usize, bytes_out: usize) -> f64 {
+        if !self.enabled || n <= 1 {
+            return 0.0;
+        }
+        self.alpha * (n - 1) as f64 + bytes_out as f64 / self.beta
+    }
+
+    /// Ring all-reduce of a `bytes`-sized buffer among `n` workers.
+    pub fn all_reduce(&self, n: usize, bytes: usize) -> f64 {
+        if !self.enabled || n <= 1 {
+            return 0.0;
+        }
+        let steps = 2 * (n - 1);
+        let per_step = bytes as f64 / n as f64;
+        steps as f64 * (self.alpha + per_step / self.beta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse() {
+        assert_eq!(NetPreset::parse("ib-edr"), Some(NetPreset::IbEdr));
+        assert_eq!(NetPreset::parse("none"), Some(NetPreset::None));
+        assert_eq!(NetPreset::parse("smoke-signal"), None);
+    }
+
+    #[test]
+    fn p2p_scales_with_bytes() {
+        let m = NetModel::preset(NetPreset::IbEdr);
+        let t1 = m.p2p(1 << 20);
+        let t2 = m.p2p(2 << 20);
+        assert!(t2 > t1);
+        // 1 MiB at 12.5 GB/s ≈ 84 µs ≫ α
+        assert!((t1 - (1.5e-6 + 1048576.0 / 12.5e9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disabled_is_free() {
+        let m = NetModel::preset(NetPreset::None);
+        assert_eq!(m.p2p(usize::MAX / 2), 0.0);
+        assert_eq!(m.all_to_all(8, 1 << 30), 0.0);
+        assert_eq!(m.all_reduce(8, 1 << 30), 0.0);
+    }
+
+    #[test]
+    fn all_reduce_bandwidth_term_shrinks_with_n() {
+        let m = NetModel::preset(NetPreset::IbEdr);
+        let big = 256 << 20;
+        // 2(n-1)/n · s/β is increasing in n but bounded by 2s/β
+        let t2 = m.all_reduce(2, big);
+        let t8 = m.all_reduce(8, big);
+        assert!(t8 > t2);
+        assert!(t8 < 2.0 * big as f64 / m.beta + 16.0 * m.alpha);
+    }
+
+    #[test]
+    fn single_worker_is_free() {
+        let m = NetModel::preset(NetPreset::IbEdr);
+        assert_eq!(m.all_to_all(1, 123), 0.0);
+        assert_eq!(m.all_reduce(1, 123), 0.0);
+    }
+}

@@ -1,0 +1,227 @@
+//! Host tensors — the data that crosses the Rust ⇄ PJRT boundary.
+//!
+//! A deliberately small row-major f32/i32 tensor type.  Heavy math stays
+//! in the AOT-compiled XLA programs; this module only provides what the
+//! coordinator itself needs: buffer management, the elementwise math of
+//! gradient sync / Adam, row packing for the all-to-all, and small
+//! reference matmuls for tests.
+
+pub mod ops;
+
+pub use ops::*;
+
+use crate::error::{Error, Result};
+
+/// Row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Row-major i32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+/// A host tensor of either runtime dtype (mirrors the manifest ABI).
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(TensorF32),
+    I32(TensorI32),
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl TensorF32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        if numel(shape) != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} needs {} elements, got {}",
+                shape,
+                numel(shape),
+                data.len()
+            )));
+        }
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows × cols view of a rank-2 tensor.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        match self.shape.as_slice() {
+            [r, c] => Ok((*r, *c)),
+            s => Err(Error::Shape(format!("expected rank-2, got {s:?}"))),
+        }
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let (_, c) = (self.shape[0], self.shape[1]);
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.shape[1];
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    /// Raw little-endian byte view (for PJRT literal construction).
+    pub fn as_bytes(&self) -> &[u8] {
+        // Safety: f32 has no invalid bit patterns and we only reinterpret
+        // for reading; alignment of u8 is 1.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * 4,
+            )
+        }
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+impl TensorI32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        if numel(shape) != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} needs {} elements, got {}",
+                shape,
+                numel(shape),
+                data.len()
+            )));
+        }
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * 4,
+            )
+        }
+    }
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(t) => &t.shape,
+            HostTensor::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            HostTensor::F32(_) => "f32",
+            HostTensor::I32(_) => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&TensorF32> {
+        match self {
+            HostTensor::F32(t) => Ok(t),
+            _ => Err(Error::Shape("expected f32 tensor".into())),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<TensorF32> {
+        match self {
+            HostTensor::F32(t) => Ok(t),
+            _ => Err(Error::Shape("expected f32 tensor".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&TensorI32> {
+        match self {
+            HostTensor::I32(t) => Ok(t),
+            _ => Err(Error::Shape("expected i32 tensor".into())),
+        }
+    }
+}
+
+impl From<TensorF32> for HostTensor {
+    fn from(t: TensorF32) -> Self {
+        HostTensor::F32(t)
+    }
+}
+
+impl From<TensorI32> for HostTensor {
+    fn from(t: TensorI32) -> Self {
+        HostTensor::I32(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_checks_shape() {
+        assert!(TensorF32::from_vec(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(TensorF32::from_vec(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn rows() {
+        let t = TensorF32::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let t = TensorF32::from_vec(&[3], vec![1.0, -2.5, 3.25]).unwrap();
+        let b = t.as_bytes();
+        assert_eq!(b.len(), 12);
+        let back = f32::from_le_bytes([b[4], b[5], b[6], b[7]]);
+        assert_eq!(back, -2.5);
+    }
+
+    #[test]
+    fn host_tensor_dtype_guards() {
+        let f: HostTensor = TensorF32::zeros(&[2]).into();
+        assert!(f.as_f32().is_ok());
+        assert!(f.as_i32().is_err());
+        assert_eq!(f.dtype(), "f32");
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let s = TensorF32::scalar(4.0);
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert_eq!(s.numel(), 1);
+    }
+}

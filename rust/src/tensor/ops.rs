@@ -1,0 +1,234 @@
+//! Host-side tensor math.
+//!
+//! Used by the coordinator (gradient averaging, host Adam, gating
+//! softmax) and by tests as a slow-but-obvious reference for the XLA
+//! artifacts.  The hot paths the paper cares about run inside XLA; these
+//! loops only touch coordinator-sized data.
+
+use super::TensorF32;
+use crate::error::{Error, Result};
+
+/// `a += b` elementwise.
+pub fn add_assign(a: &mut TensorF32, b: &TensorF32) -> Result<()> {
+    if a.shape != b.shape {
+        return Err(Error::Shape(format!(
+            "add_assign {:?} vs {:?}",
+            a.shape, b.shape
+        )));
+    }
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += y;
+    }
+    Ok(())
+}
+
+/// `a *= s` elementwise.
+pub fn scale(a: &mut TensorF32, s: f32) {
+    for x in a.data.iter_mut() {
+        *x *= s;
+    }
+}
+
+/// `a += alpha * b` (axpy).
+pub fn axpy(a: &mut TensorF32, alpha: f32, b: &TensorF32) -> Result<()> {
+    if a.shape != b.shape {
+        return Err(Error::Shape(format!("axpy {:?} vs {:?}", a.shape, b.shape)));
+    }
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += alpha * y;
+    }
+    Ok(())
+}
+
+/// Naive reference matmul `[m,k] @ [k,n] -> [m,n]` (tests / tiny sizes).
+pub fn matmul(a: &TensorF32, b: &TensorF32) -> Result<TensorF32> {
+    let (m, k) = a.dims2()?;
+    let (k2, n) = b.dims2()?;
+    if k != k2 {
+        return Err(Error::Shape(format!("matmul inner {k} vs {k2}")));
+    }
+    let mut out = TensorF32::zeros(&[m, n]);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a.data[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Row-wise softmax in place over the last axis of a rank-2 tensor.
+pub fn softmax_rows(t: &mut TensorF32) -> Result<()> {
+    let (r, c) = t.dims2()?;
+    for i in 0..r {
+        let row = &mut t.data[i * c..(i + 1) * c];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for x in row.iter_mut() {
+            *x = (*x - mx).exp();
+            sum += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    Ok(())
+}
+
+/// Softmax of a small slice (used for k-way gate weights).
+pub fn softmax_slice(xs: &mut [f32]) {
+    let mx = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in xs.iter_mut() {
+        *x = (*x - mx).exp();
+        sum += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= sum;
+    }
+}
+
+/// Backward of `softmax_slice`: given `w = softmax(s)` and `dw`,
+/// `ds_i = w_i * (dw_i - Σ_j w_j dw_j)`.
+pub fn softmax_slice_bwd(w: &[f32], dw: &[f32], ds: &mut [f32]) {
+    let dot: f32 = w.iter().zip(dw).map(|(a, b)| a * b).sum();
+    for i in 0..w.len() {
+        ds[i] = w[i] * (dw[i] - dot);
+    }
+}
+
+/// Indices of the top-k values of a row, ties broken toward the lower
+/// index (matches `jax.lax.top_k`).
+pub fn topk_indices(row: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| {
+        row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Mean of all elements.
+pub fn mean(t: &TensorF32) -> f32 {
+    if t.data.is_empty() {
+        return 0.0;
+    }
+    t.data.iter().sum::<f32>() / t.data.len() as f32
+}
+
+/// Max absolute difference between two tensors (test helper).
+pub fn max_abs_diff(a: &TensorF32, b: &TensorF32) -> Result<f32> {
+    if a.shape != b.shape {
+        return Err(Error::Shape(format!(
+            "max_abs_diff {:?} vs {:?}",
+            a.shape, b.shape
+        )));
+    }
+    Ok(a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max))
+}
+
+/// Copy row `src_row` of `src` into row `dst_row` of `dst` (pack helper).
+pub fn copy_row(dst: &mut TensorF32, dst_row: usize, src: &TensorF32, src_row: usize) {
+    let c = src.shape[1];
+    debug_assert_eq!(dst.shape[1], c);
+    let s = &src.data[src_row * c..(src_row + 1) * c];
+    dst.data[dst_row * c..(dst_row + 1) * c].copy_from_slice(s);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(rows: usize, cols: usize, v: Vec<f32>) -> TensorF32 {
+        TensorF32::from_vec(&[rows, cols], v).unwrap()
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = t2(2, 2, vec![1., 2., 3., 4.]);
+        let b = t2(2, 2, vec![1., 0., 0., 1.]);
+        assert_eq!(matmul(&a, &b).unwrap(), a);
+        let c = matmul(&a, &a).unwrap();
+        assert_eq!(c.data, vec![7., 10., 15., 22.]);
+    }
+
+    #[test]
+    fn matmul_shape_errors() {
+        let a = t2(2, 3, vec![0.0; 6]);
+        let b = t2(2, 3, vec![0.0; 6]);
+        assert!(matmul(&a, &b).is_err());
+    }
+
+    #[test]
+    fn softmax_rows_normalises() {
+        let mut t = t2(2, 3, vec![1., 2., 3., 1000., 1000., 1000.]);
+        softmax_rows(&mut t).unwrap();
+        for r in 0..2 {
+            let s: f32 = t.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        // large inputs must not overflow
+        assert!((t.data[3] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_bwd_matches_finite_diff() {
+        let s = [0.3f32, -0.7, 1.1];
+        let dw = [0.5f32, -0.2, 0.9];
+        let mut w = s;
+        softmax_slice(&mut w);
+        let mut ds = [0.0f32; 3];
+        softmax_slice_bwd(&w, &dw, &mut ds);
+        let eps = 1e-3f32;
+        for i in 0..3 {
+            let mut sp = s;
+            sp[i] += eps;
+            let mut wp = sp;
+            softmax_slice(&mut wp);
+            let mut sm = s;
+            sm[i] -= eps;
+            let mut wm = sm;
+            softmax_slice(&mut wm);
+            let fd: f32 = (0..3).map(|j| (wp[j] - wm[j]) / (2.0 * eps) * dw[j]).sum();
+            assert!((fd - ds[i]).abs() < 1e-3, "i={i} fd={fd} ds={}", ds[i]);
+        }
+    }
+
+    #[test]
+    fn topk_matches_sort_and_tiebreak() {
+        assert_eq!(topk_indices(&[1.0, 3.0, 2.0], 2), vec![1, 2]);
+        assert_eq!(topk_indices(&[5.0, 5.0, 1.0], 2), vec![0, 1]); // tie -> lower idx
+        assert_eq!(topk_indices(&[2.0], 1), vec![0]);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = t2(1, 3, vec![1., 2., 3.]);
+        let b = t2(1, 3, vec![10., 10., 10.]);
+        axpy(&mut a, 0.5, &b).unwrap();
+        assert_eq!(a.data, vec![6., 7., 8.]);
+        scale(&mut a, 2.0);
+        assert_eq!(a.data, vec![12., 14., 16.]);
+    }
+
+    #[test]
+    fn copy_row_moves_data() {
+        let src = t2(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let mut dst = TensorF32::zeros(&[2, 3]);
+        copy_row(&mut dst, 0, &src, 1);
+        assert_eq!(dst.row(0), &[4., 5., 6.]);
+        assert_eq!(dst.row(1), &[0., 0., 0.]);
+    }
+}

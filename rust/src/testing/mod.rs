@@ -1,0 +1,156 @@
+//! proptest-lite: a tiny seeded property-testing harness (substrate; no
+//! `proptest` in the offline registry).
+//!
+//! Properties run `cases` times with generated inputs; on failure the
+//! harness re-runs with simple input shrinking (halving generated sizes)
+//! and reports the seed so the exact case can be replayed.
+//!
+//! ```ignore
+//! check("tokens conserved", 200, |g| {
+//!     let n = g.usize_in(1, 64);
+//!     /* … build inputs from g … */
+//!     prop_assert(total_in == total_out, "lost tokens")
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Property outcome: `Ok(())` or a failure description.
+pub type PropResult = Result<(), String>;
+
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{a:?} != {b:?}"))
+    }
+}
+
+/// Input generator handed to properties; wraps a seeded RNG with a size
+/// budget that the shrinker reduces on failure.
+pub struct Gen {
+    pub rng: Rng,
+    /// Current size multiplier in (0, 1]; shrink lowers it.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed), size: 1.0 }
+    }
+
+    /// Integer in `[lo, hi]` scaled by the current shrink size.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + if span == 0 { 0 } else { self.rng.below(span + 1) }
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f32()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `prop` for `cases` random cases; panics with seed + shrink report
+/// on the first failure (so `cargo test` surfaces it).
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    let base_seed = env_seed().unwrap_or(0xFA57_0001);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            // shrink: retry same seed with smaller size budgets
+            let mut best = (1.0f64, msg.clone());
+            let mut sz = 0.5;
+            while sz > 0.01 {
+                let mut g2 = Gen::new(seed);
+                g2.size = sz;
+                match prop(&mut g2) {
+                    Err(m) => {
+                        best = (sz, m);
+                        sz *= 0.5;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property `{name}` failed (seed={seed}, case={case}, \
+                 min_size={:.3}): {}\nreplay: FASTMOE_PROP_SEED={seed}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("FASTMOE_PROP_SEED").ok()?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum is commutative", 50, |g| {
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            prop_assert((a + b - (b + a)).abs() < 1e-6, "not commutative")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generator_ranges() {
+        let mut g = Gen::new(1);
+        for _ in 0..100 {
+            let v = g.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+        }
+        let xs = g.vec_f32(16, -1.0, 1.0);
+        assert_eq!(xs.len(), 16);
+        assert!(xs.iter().all(|x| (-1.0..1.0).contains(x)));
+    }
+
+    #[test]
+    fn shrink_reduces_sizes() {
+        let mut g = Gen::new(2);
+        g.size = 0.1;
+        // span 0..100 shrunk to ~0..10
+        for _ in 0..50 {
+            assert!(g.usize_in(0, 100) <= 11);
+        }
+    }
+}

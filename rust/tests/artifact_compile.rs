@@ -1,0 +1,62 @@
+//! Every artifact in the manifest must parse and compile on the PJRT
+//! CPU client — catches HLO-dialect drift between jax and the pinned
+//! XLA 0.5.1 text parser wholesale.
+
+use fastmoe::runtime::Runtime;
+
+#[test]
+fn every_artifact_compiles() {
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(_) => {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+    };
+    let names: Vec<String> = rt
+        .manifest
+        .artifacts
+        .iter()
+        .map(|a| a.name.clone())
+        .collect();
+    assert!(names.len() >= 30, "suspiciously few artifacts: {}", names.len());
+    let mut failures = Vec::new();
+    for name in &names {
+        if let Err(e) = rt.executable(name) {
+            failures.push(format!("{name}: {e}"));
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "{} artifacts failed to compile:\n{}",
+        failures.len(),
+        failures.join("\n")
+    );
+}
+
+#[test]
+fn manifest_families_complete() {
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(_) => return,
+    };
+    let m = &rt.manifest;
+    for fam in ["fig5", "fig3", "stage", "fig7", "quickstart"] {
+        assert!(!m.family(fam).is_empty(), "family {fam} missing");
+    }
+    assert!(!m.buckets().is_empty());
+    // every fig-5 expert count has all four variants
+    let fig5 = m.family("fig5");
+    let counts: std::collections::BTreeSet<usize> = fig5
+        .iter()
+        .filter_map(|a| a.meta_usize("n_expert"))
+        .collect();
+    for e in &counts {
+        for kind in ["moe_fwd", "moe_grad", "naive_fwd", "naive_grad"] {
+            assert!(
+                m.artifact(&format!("{kind}_e{e}")).is_some(),
+                "missing {kind}_e{e}"
+            );
+        }
+    }
+}

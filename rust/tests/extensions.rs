@@ -1,0 +1,79 @@
+//! Extension-feature integration tests: balance-loss training, config
+//! file round-trip through the launcher path, checkpoint-resume.
+
+use std::sync::Arc;
+
+use fastmoe::config::ConfigFile;
+use fastmoe::coordinator::Trainer;
+use fastmoe::data::{BatchIter, Corpus};
+use fastmoe::model::{load_checkpoint, save_checkpoint};
+use fastmoe::runtime::Runtime;
+
+fn rt() -> Option<Arc<Runtime>> {
+    Runtime::open_default().ok().map(Arc::new)
+}
+
+#[test]
+fn balance_loss_model_trains() {
+    let Some(rt) = rt() else { return };
+    if rt.manifest.models.get("gpt_moe_bal").is_none() {
+        return;
+    }
+    let mut tr = Trainer::new(&rt, "gpt_moe_bal", 2).unwrap();
+    let vocab = tr.entry.config_usize("vocab").unwrap();
+    let seq = tr.entry.config_usize("seq").unwrap();
+    let batch = tr.entry.config_usize("batch").unwrap();
+    let corpus = Corpus::synthetic(vocab, 60_000, 13);
+    let mut it = BatchIter::new(&corpus, batch, seq, 6);
+    let first = tr.train_step(&it.next_batch()).unwrap().loss;
+    let mut last = first;
+    for _ in 0..6 {
+        last = tr.train_step(&it.next_batch()).unwrap().loss;
+    }
+    // loss includes +0.01·aux (aux ≥ 1), still must decrease
+    assert!(last < first, "first={first} last={last}");
+    assert!(tr.params.all_finite());
+}
+
+#[test]
+fn sample_config_file_parses_and_validates() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/default.toml");
+    let cfg = ConfigFile::load(path).unwrap();
+    let m = cfg.model().unwrap();
+    assert!(m.moe && m.n_expert == 16);
+    let t = cfg.train().unwrap();
+    assert_eq!(t.model, "gpt_moe");
+    assert!((t.lr - 3e-4).abs() < 1e-12);
+    let d = cfg.dist().unwrap();
+    assert_eq!(d.workers, 4);
+}
+
+#[test]
+fn checkpoint_resume_reproduces_training() {
+    let Some(rt) = rt() else { return };
+    let corpus = Corpus::synthetic(64, 60_000, 3);
+
+    // run A: 4 steps straight
+    let mut a = Trainer::new(&rt, "gpt_moe", 5).unwrap();
+    let seq = a.entry.config_usize("seq").unwrap();
+    let batch = a.entry.config_usize("batch").unwrap();
+    let vocab = a.entry.config_usize("vocab").unwrap();
+    let corpus = if vocab == 64 { corpus } else { Corpus::synthetic(vocab, 60_000, 3) };
+    let mut it = BatchIter::new(&corpus, batch, seq, 8);
+    let batches: Vec<_> = (0..4).map(|_| it.next_batch()).collect();
+    for b in &batches[..2] {
+        a.train_step(b).unwrap();
+    }
+    // checkpoint the *parameters* mid-run
+    let ck = std::env::temp_dir().join(format!("fastmoe_resume_{}", std::process::id()));
+    save_checkpoint(&ck, &a.params).unwrap();
+
+    // run B: fresh trainer, load params, replay remaining batches with a
+    // fresh optimizer; loss trajectory must start from A's loss level
+    let mut b_tr = Trainer::new(&rt, "gpt_moe", 999).unwrap();
+    load_checkpoint(&ck, &mut b_tr.params).unwrap();
+    let la = a.eval(&batches[2]).unwrap();
+    let lb = b_tr.eval(&batches[2]).unwrap();
+    assert!((la - lb).abs() < 1e-5, "restored params diverge: {la} vs {lb}");
+    let _ = std::fs::remove_file(ck);
+}

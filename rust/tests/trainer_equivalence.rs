@@ -1,0 +1,119 @@
+//! The two training ABIs must agree: the fused in-graph train step
+//! (tokens→new params, Adam inside XLA) and the distributed path
+//! (grad_step artifact + GradSync + host Adam) are the same math.
+
+use std::sync::Arc;
+
+use fastmoe::comm::{run_workers, Comm};
+use fastmoe::coordinator::{DistTrainer, Trainer};
+use fastmoe::data::{BatchIter, Corpus};
+use fastmoe::runtime::Runtime;
+use fastmoe::tensor::ops;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    Runtime::open_default().ok().map(Arc::new)
+}
+
+#[test]
+fn host_adam_path_equals_fused_path() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let model = "gpt_moe";
+    let seed = 33;
+    let steps = 3;
+
+    // --- fused path ---
+    let mut fused = Trainer::new(&rt, model, seed).unwrap();
+    let vocab = fused.entry.config_usize("vocab").unwrap();
+    let seq = fused.entry.config_usize("seq").unwrap();
+    let batch = fused.entry.config_usize("batch").unwrap();
+    let lr = 3e-4f32; // the preset lr used when lowering train_step
+    let corpus = Corpus::synthetic(vocab, 100_000, 9);
+    let mut it = BatchIter::new(&corpus, batch, seq, 21);
+    let batches: Vec<_> = (0..steps).map(|_| it.next_batch()).collect();
+    let mut fused_losses = Vec::new();
+    for b in &batches {
+        fused_losses.push(fused.train_step(b).unwrap().loss);
+    }
+
+    // --- distributed path, world size 1 (no sync effects) ---
+    let rt2 = rt.clone();
+    let batches2 = batches.clone();
+    let (dist_losses, dist_params) = run_workers(1, move |mut h| {
+        let mut tr = DistTrainer::new(&rt2, "gpt_moe", seed, 1, lr)?;
+        let mut losses = Vec::new();
+        for b in &batches2 {
+            losses.push(tr.train_step(&mut h, b)?);
+        }
+        Ok((losses, tr.params))
+    })
+    .unwrap()
+    .remove(0);
+
+    for (s, (a, b)) in fused_losses.iter().zip(&dist_losses).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-4 * (1.0 + a.abs()),
+            "step {s}: fused loss {a} vs dist {b}"
+        );
+    }
+    // parameters agree after `steps` updates
+    for (i, (a, b)) in fused
+        .params
+        .tensors
+        .iter()
+        .zip(&dist_params.tensors)
+        .enumerate()
+    {
+        let diff = ops::max_abs_diff(a, b).unwrap();
+        let scale = 1e-3 + b.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(
+            diff < 2e-3 * scale,
+            "param {} (`{}`): diff {diff}",
+            i,
+            fused.params.entries[i].name
+        );
+    }
+}
+
+#[test]
+fn multi_worker_training_decreases_loss_and_stays_in_sync() {
+    let Some(rt) = runtime() else { return };
+    let workers = 2;
+    let out = run_workers(workers, {
+        let rt = rt.clone();
+        move |mut h| {
+            let mut tr = DistTrainer::new(&rt, "gpt_moe", 77, workers, 1e-3)?;
+            let vocab = tr.entry.config_usize("vocab").unwrap();
+            let seq = tr.entry.config_usize("seq").unwrap();
+            let batch = tr.entry.config_usize("batch").unwrap();
+            let corpus = Corpus::synthetic(vocab, 100_000, 4);
+            let mut it = BatchIter::shard(&corpus, batch, seq, 10, h.rank());
+            let mut losses = Vec::new();
+            for _ in 0..6 {
+                losses.push(tr.train_step(&mut h, &it.next_batch())?);
+            }
+            Ok((losses, tr.params))
+        }
+    })
+    .unwrap();
+
+    let (l0, p0) = &out[0];
+    let (l1, p1) = &out[1];
+    // both workers report the identical global loss
+    for (a, b) in l0.iter().zip(l1) {
+        assert_eq!(a, b, "global loss must be identical on all workers");
+    }
+    assert!(l0.last().unwrap() < l0.first().unwrap(), "{l0:?}");
+    // replicated parameters stay bit-identical across workers
+    for (i, (a, b)) in p0.tensors.iter().zip(&p1.tensors).enumerate() {
+        let diff = ops::max_abs_diff(a, b).unwrap();
+        assert!(
+            diff < 1e-6,
+            "param {} (`{}`) diverged across workers: {diff}",
+            i,
+            p0.entries[i].name
+        );
+    }
+}
