@@ -1,24 +1,31 @@
 //! Expert-parallel MoE layer across workers — the Figure-2 machinery
-//! live, with per-worker load and traffic statistics.
+//! live, with pluggable gates and per-worker load / traffic statistics.
 //!
 //! ```bash
 //! cargo run --release --example distributed_moe -- --workers 4 --iters 8
+//! # compare routing policies on the same seed:
+//! cargo run --release --example distributed_moe -- --gate switch --capacity-factor 1.25
+//! cargo run --release --example distributed_moe -- --gate noisy_topk --noise-std 0.5
+//! # or select the gate from a config file's [moe] section:
+//! cargo run --release --example distributed_moe -- --config moe.toml
 //! ```
 //!
-//! Each worker thread owns `ne_local` experts and a PJRT executable
-//! set.  Every iteration: gate → top-k → count exchange → row exchange
-//! → bucketed grouped-FFN → reverse exchange → weighted combine, then
-//! the mirrored backward chain.  The load monitor prints per-expert
-//! token counts — the paper's future-work load-balance feature.
+//! Each worker thread owns `ne_local` experts; the layer is assembled
+//! by `MoeLayerBuilder` from the `[moe]` config section (CLI flags
+//! override).  Every iteration: gate GEMM → `Gate::route` → count
+//! exchange → row exchange → bucketed `ExpertShard::forward` → reverse
+//! exchange → weighted combine, then the mirrored backward chain and
+//! an Adam step over all layer parameters.  The per-step stats include
+//! the GShard balance loss, so gates can be compared on load balance.
 
 use std::sync::Arc;
 
 use fastmoe::bench::Table;
 use fastmoe::cli::Args;
 use fastmoe::comm::{run_workers, Comm};
-use fastmoe::coordinator::DistMoeLayer;
+use fastmoe::config::MoeConfig;
+use fastmoe::coordinator::{MoeLayerBuilder, MoeLayerTrainer};
 use fastmoe::metrics::{Counters, Stopwatch};
-use fastmoe::moe::LoadMonitor;
 use fastmoe::rng::Rng;
 use fastmoe::runtime::Runtime;
 use fastmoe::sim::{NetModel, NetPreset};
@@ -30,47 +37,57 @@ fn main() -> fastmoe::Result<()> {
     let workers = args.usize_or("workers", 4)?;
     let iters = args.usize_or("iters", 8)?;
     let seed = args.u64_or("seed", 7)?;
+    let lr = args.f64_or("lr", 1e-3)? as f32;
     let net = NetModel::preset(
         NetPreset::parse(&args.str_or("net", "ib-edr")).unwrap_or(NetPreset::IbEdr),
     );
-    let rt = Arc::new(Runtime::open_default()?);
 
-    println!("distributed MoE layer: {workers} workers × local experts, {iters} iters");
+    // [moe] section (if a config is given) + CLI overrides: this is the
+    // whole story of selecting a non-default gate.
+    let moe_cfg = MoeConfig::from_args(&args)?;
+
+    let rt = Arc::new(Runtime::open_default()?);
+    println!(
+        "distributed MoE layer: {workers} workers, {iters} iters, gate `{}`",
+        moe_cfg.gate
+    );
+
+    let builder = MoeLayerBuilder::from_config(&moe_cfg).seed(seed);
     let results = run_workers(workers, {
         let rt = rt.clone();
         move |mut h| {
-            let layer = DistMoeLayer::init(rt.clone(), workers, h.rank(), seed)?;
+            let layer = builder.build_for(rt.clone(), &h)?;
             layer.warm()?;
-            let ne_global = workers * layer.ne_local;
-            let mut monitor = LoadMonitor::new(ne_global);
+            let mut tr = MoeLayerTrainer::new(layer, lr);
             let mut counters = Counters::new();
             let mut rng = Rng::new(seed ^ (h.rank() as u64 + 1));
             let mut flops = 0.0f64;
+            let mut balance = 0.0f64;
             h.barrier();
             let watch = Stopwatch::start();
             for _ in 0..iters {
-                let mut x = TensorF32::zeros(&[layer.nb, layer.dm]);
+                let mut x = TensorF32::zeros(&[tr.layer.nb, tr.layer.dm]);
                 rng.fill_normal(&mut x.data, 1.0);
-                let (y, state) = layer.forward(&mut h, x, &mut counters)?;
-                monitor.record(&state.counts_global);
-                let dy = TensorF32::full(&[layer.nb, layer.dm], 1.0 / layer.nb as f32);
-                let grads = layer.backward(&mut h, &state, &dy, &mut counters)?;
-                flops += 3.0 * layer.flops(&state);
-                debug_assert!(y.data.iter().all(|v| v.is_finite()));
-                debug_assert!(grads.dx.data.iter().all(|v| v.is_finite()));
+                let s = tr.train_step(&mut h, x, &mut counters)?;
+                flops += s.flops;
+                balance += s.balance;
+                debug_assert!(s.loss.is_finite());
             }
             h.barrier();
             let secs = watch.secs();
             counters.merge(&h.counters);
-            Ok((h.rank(), secs, flops, counters, monitor))
+            let totals = tr.monitor.totals().to_vec();
+            Ok((h.rank(), secs, flops, counters, balance / iters.max(1) as f64, totals))
         }
     })?;
 
     let mut table = Table::new(&[
         "worker", "time_s", "GFLOP/s", "a2a_traffic", "sim_wire_ms", "pad_overhead",
+        "balance_loss",
     ]);
-    let mut monitor_all = LoadMonitor::new(results[0].4.n_expert);
-    for (rank, secs, flops, counters, monitor) in &results {
+    let ne_global = results[0].5.len();
+    let mut totals_all = vec![0u64; ne_global];
+    for (rank, secs, flops, counters, balance, totals) in &results {
         let bytes = counters.get("moe_a2a_bytes") as usize;
         let wire = net.all_to_all(workers, bytes) * 1e3;
         let pad = 1.0
@@ -83,26 +100,27 @@ fn main() -> fastmoe::Result<()> {
             util::fmt_bytes(bytes),
             format!("{wire:.2}"),
             format!("{:.1}%", pad * 100.0),
+            format!("{balance:.3}"),
         ]);
-        for _ in 0..1 {
-            // merge totals for a global view
-            let totals: Vec<u32> = monitor.totals().iter().map(|&x| x as u32).collect();
-            monitor_all.record(&totals);
+        for (e, &c) in totals.iter().enumerate() {
+            totals_all[e] += c;
         }
     }
     println!("\n{}", table.render());
 
     println!("global expert load (tokens over all iterations):");
-    let totals = monitor_all.totals();
-    let max = *totals.iter().max().unwrap_or(&1) as f64;
-    for (e, &c) in totals.iter().enumerate() {
-        let bar = "#".repeat((40.0 * c as f64 / max) as usize);
-        println!("  expert {e:>3} [worker {}] {c:>8} {bar}", e / (totals.len() / workers));
+    let max = *totals_all.iter().max().unwrap_or(&1) as f64;
+    for (e, &c) in totals_all.iter().enumerate() {
+        let bar = "#".repeat((40.0 * c as f64 / max.max(1.0)) as usize);
+        println!(
+            "  expert {e:>3} [worker {}] {c:>8} {bar}",
+            e / (ne_global / workers)
+        );
     }
+    let mean = totals_all.iter().sum::<u64>() as f64 / ne_global.max(1) as f64;
     println!(
-        "imbalance (max/mean): {:.2}   cv: {:.3}",
-        monitor_all.imbalance(),
-        monitor_all.cv()
+        "imbalance (max/mean over run): {:.2}",
+        if mean > 0.0 { max / mean } else { 1.0 }
     );
     Ok(())
 }

@@ -1,22 +1,33 @@
-//! Quickstart: load an AOT-compiled MoE layer and run a forward pass.
+//! Quickstart: run an AOT-compiled MoE layer, then assemble the
+//! expert-parallel layer through the hierarchical `MoeLayerBuilder`.
 //!
 //! ```bash
 //! make artifacts            # once: python lowers the HLO programs
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! This is the whole three-layer story in ~50 lines: the Pallas kernels
+//! Part 1 is the three-layer story in a few lines: the Pallas kernels
 //! and the JAX layer were lowered at build time; at run time Rust loads
 //! the HLO text, compiles it on the PJRT CPU client, and executes it —
 //! no python anywhere.
+//!
+//! Part 2 is the paper's §3.1 hierarchy: the same dispatch substrate
+//! with a *config-selected* gate policy — here `noisy_topk` from an
+//! inline `[moe]` section — driven through `MoeLayerBuilder`.
 
+use std::sync::Arc;
+
+use fastmoe::comm::run_workers;
+use fastmoe::config::ConfigFile;
+use fastmoe::coordinator::MoeLayerBuilder;
+use fastmoe::metrics::Counters;
 use fastmoe::rng::Rng;
 use fastmoe::runtime::Runtime;
 use fastmoe::tensor::{HostTensor, TensorF32};
 
 fn main() -> fastmoe::Result<()> {
     // 1. Open the artifact directory (reads manifest.json).
-    let rt = Runtime::open_default()?;
+    let rt = Arc::new(Runtime::open_default()?);
     println!("PJRT platform: {}", rt.platform());
 
     // 2. Compile the fused MoE layer (gate → scatter → experts → combine).
@@ -52,6 +63,38 @@ fn main() -> fastmoe::Result<()> {
         y.l2_norm(),
         &y.row(0)[..4.min(y.shape[1])]
     );
+
+    // 5. The hierarchical API: pick a non-default gate from config and
+    //    let the builder assemble gate + expert shard + dispatch.
+    let cfg = ConfigFile::parse(
+        "[moe]\ngate = \"noisy_topk\"\nnoise_std = 0.5\n",
+    )?
+    .moe()?;
+    let workers = 2;
+    if rt.manifest.artifact(&format!("gate_fwd_w{workers}")).is_none() {
+        println!("(no {workers}-worker stage artifacts; skipping builder demo)");
+        println!("quickstart OK");
+        return Ok(());
+    }
+    let builder = MoeLayerBuilder::from_config(&cfg).seed(7);
+    let norms = run_workers(workers, {
+        let rt = rt.clone();
+        move |mut h| {
+            let layer = builder.build_for(rt.clone(), &h)?;
+            let mut x = TensorF32::zeros(&[layer.nb, layer.dm]);
+            Rng::new(99).fill_normal(&mut x.data, 1.0);
+            let mut counters = Counters::new();
+            let (y, state) = layer.forward(&mut h, x, &mut counters)?;
+            Ok((y.l2_norm(), state.balance))
+        }
+    })?;
+    for (rank, (norm, balance)) in norms.iter().enumerate() {
+        println!(
+            "builder demo (gate `{}`): worker {rank} ‖y‖₂ = {norm:.4}, \
+             balance_loss = {balance:.3}",
+            cfg.gate
+        );
+    }
     println!("quickstart OK");
     Ok(())
 }

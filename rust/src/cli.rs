@@ -93,6 +93,24 @@ impl Args {
         }
     }
 
+    /// Enumerated option: the value (or `default`) must be one of
+    /// `choices`, e.g. `--gate topk|switch|noisy_topk`.
+    pub fn choice_or(
+        &self,
+        name: &str,
+        choices: &[&str],
+        default: &str,
+    ) -> Result<String> {
+        let v = self.str_or(name, default);
+        if choices.contains(&v.as_str()) {
+            Ok(v)
+        } else {
+            Err(Error::Cli(format!(
+                "--{name} expects one of {choices:?}, got `{v}`"
+            )))
+        }
+    }
+
     /// Comma-separated usize list, e.g. `--workers 1,2,4,8`.
     pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
         match self.get(name) {
@@ -167,6 +185,18 @@ mod tests {
         let a = Args::parse(argv("x --ws 1,2,4"), &[]).unwrap();
         assert_eq!(a.usize_list_or("ws", &[]).unwrap(), vec![1, 2, 4]);
         assert_eq!(a.usize_list_or("other", &[8]).unwrap(), vec![8]);
+    }
+
+    #[test]
+    fn choice_validation() {
+        let a = Args::parse(argv("x --gate switch"), &[]).unwrap();
+        let kinds = ["topk", "switch", "noisy_topk"];
+        assert_eq!(a.choice_or("gate", &kinds, "topk").unwrap(), "switch");
+        // default passes through
+        assert_eq!(a.choice_or("other", &kinds, "topk").unwrap(), "topk");
+        // unknown value is an error
+        let b = Args::parse(argv("x --gate random"), &[]).unwrap();
+        assert!(b.choice_or("gate", &kinds, "topk").is_err());
     }
 
     #[test]

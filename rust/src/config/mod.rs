@@ -100,6 +100,51 @@ impl Default for TrainConfig {
     }
 }
 
+/// MoE layer-assembly configuration — the `[moe]` config section,
+/// consumed by `coordinator::MoeLayerBuilder`.
+///
+/// ```toml
+/// [moe]
+/// gate = "switch"        # "topk" (default) | "switch" | "noisy_topk"
+/// capacity_factor = 1.25 # switch gate: per-expert capacity multiplier
+/// noise_std = 1.0        # noisy_topk gate: score-noise std dev
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct MoeConfig {
+    /// Gate kind: "topk" | "switch" | "noisy_topk".
+    pub gate: String,
+    /// Switch gate: each expert accepts up to
+    /// `ceil(capacity_factor * nb / n_e)` tokens per batch.
+    pub capacity_factor: f64,
+    /// Noisy top-k gate: std dev of the Gaussian score noise.
+    pub noise_std: f64,
+}
+
+impl Default for MoeConfig {
+    fn default() -> Self {
+        Self { gate: "topk".into(), capacity_factor: 1.25, noise_std: 1.0 }
+    }
+}
+
+impl MoeConfig {
+    /// The `[moe]` section of an optional `--config` file, with
+    /// `--gate`, `--capacity-factor` and `--noise-std` CLI overrides —
+    /// the one merge rule shared by the launcher and the examples.
+    pub fn from_args(args: &crate::cli::Args) -> Result<MoeConfig> {
+        let mut cfg = if let Some(path) = args.get("config") {
+            ConfigFile::load(path)?.moe()?
+        } else {
+            MoeConfig::default()
+        };
+        cfg.gate = args.choice_or("gate", GATE_KINDS, &cfg.gate)?;
+        cfg.capacity_factor = args.f64_or("capacity-factor", cfg.capacity_factor)?;
+        cfg.noise_std = args.f64_or("noise-std", cfg.noise_std)?;
+        Ok(cfg)
+    }
+}
+
+pub const GATE_KINDS: &[&str] = &["topk", "switch", "noisy_topk"];
+
 /// Distributed-runtime configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DistConfig {
@@ -194,6 +239,34 @@ impl ConfigFile {
         Ok(t)
     }
 
+    pub fn moe(&self) -> Result<MoeConfig> {
+        let mut m = MoeConfig::default();
+        if let Some(s) = self.section("moe") {
+            m.gate = s.str_or("gate", &m.gate);
+            m.capacity_factor = s.f64_or("capacity_factor", m.capacity_factor);
+            m.noise_std = s.f64_or("noise_std", m.noise_std);
+        }
+        if !GATE_KINDS.contains(&m.gate.as_str()) {
+            return Err(Error::Config(format!(
+                "moe.gate must be one of {GATE_KINDS:?}, got `{}`",
+                m.gate
+            )));
+        }
+        if !m.capacity_factor.is_finite() || m.capacity_factor <= 0.0 {
+            return Err(Error::Config(format!(
+                "moe.capacity_factor must be > 0, got {}",
+                m.capacity_factor
+            )));
+        }
+        if m.noise_std < 0.0 {
+            return Err(Error::Config(format!(
+                "moe.noise_std must be >= 0, got {}",
+                m.noise_std
+            )));
+        }
+        Ok(m)
+    }
+
     pub fn dist(&self) -> Result<DistConfig> {
         let mut d = DistConfig::default();
         if let Some(s) = self.section("dist") {
@@ -232,6 +305,10 @@ model = "gpt_dense"
 [dist]
 workers = 8
 net = "ib-edr"
+
+[moe]
+gate = "switch"
+capacity_factor = 1.5
 "#;
 
     #[test]
@@ -248,6 +325,26 @@ net = "ib-edr"
         assert_eq!(t.model, "gpt_dense");
         let d = c.dist().unwrap();
         assert_eq!(d.workers, 8);
+        let moe = c.moe().unwrap();
+        assert_eq!(moe.gate, "switch");
+        assert!((moe.capacity_factor - 1.5).abs() < 1e-12);
+        assert!((moe.noise_std - 1.0).abs() < 1e-12); // default preserved
+    }
+
+    #[test]
+    fn moe_section_defaults_and_validation() {
+        // no [moe] section at all → defaults
+        let c = ConfigFile::parse("[train]\nsteps = 1\n").unwrap();
+        assert_eq!(c.moe().unwrap(), MoeConfig::default());
+        // bad gate name
+        let c = ConfigFile::parse("[moe]\ngate = \"random\"\n").unwrap();
+        assert!(c.moe().is_err());
+        // bad capacity factor
+        let c = ConfigFile::parse("[moe]\ncapacity_factor = 0\n").unwrap();
+        assert!(c.moe().is_err());
+        // bad noise std
+        let c = ConfigFile::parse("[moe]\nnoise_std = -1.0\n").unwrap();
+        assert!(c.moe().is_err());
     }
 
     #[test]

@@ -12,6 +12,15 @@
 //! boolean = true
 //! array = [1, 2, 3]    # flat arrays of scalars
 //! ```
+//!
+//! Recognised sections and keys (defaults in `config::*Config`):
+//!
+//! | section   | keys |
+//! |-----------|------|
+//! | `[model]` | `vocab`, `seq`, `n_layer`, `d_model`, `n_head`, `d_hidden`, `moe`, `n_expert`, `top_k` |
+//! | `[train]` | `model`, `steps`, `batch`, `lr`, `seed`, `log_every`, `eval_every`, `checkpoint_every`, `out_dir` |
+//! | `[dist]`  | `workers`, `ne_local`, `top_k`, `net`, `seed` |
+//! | `[moe]`   | `gate` (`"topk"` \| `"switch"` \| `"noisy_topk"`), `capacity_factor` (switch: per-expert capacity multiplier), `noise_std` (noisy_topk: score-noise std dev) |
 
 use std::collections::BTreeMap;
 

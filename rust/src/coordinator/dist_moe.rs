@@ -3,22 +3,204 @@
 //! Each worker owns `ne_local` experts and runs, per iteration, the
 //! stage chain of DESIGN.md §4 with the Figure-2 exchange in the
 //! middle.  All heavy math is AOT-compiled HLO; this file is exactly
-//! the coordination the paper contributes: counting, planning, packing,
+//! the coordination the paper contributes: planning, packing,
 //! exchanging, bucketing, and the mirrored backward chain.
+//!
+//! Following §3.1's hierarchical interface, the layer itself is thin
+//! orchestration over two swappable policies:
+//!
+//! * the [`Gate`] (which experts, at what weight) — see
+//!   [`crate::moe::gate`];
+//! * the [`ExpertShard`] (what an expert computes) — see
+//!   [`crate::moe::expert`].
+//!
+//! Layers are assembled by [`MoeLayerBuilder`], normally from the
+//! `[moe]` config section:
+//!
+//! ```ignore
+//! let layer = MoeLayerBuilder::from_config(&cfg.moe()?)
+//!     .seed(seed)
+//!     .build(rt, workers, rank)?;
+//! ```
+//!
+//! [`DistMoeLayer::init`] remains as the seed-compatible shorthand for
+//! the default top-k softmax gate + FFN shard (bit-identical routing
+//! and weights to the pre-trait layer).
 
 use std::sync::Arc;
 
 use crate::comm::Comm;
+use crate::config::MoeConfig;
 use crate::error::{Error, Result};
 use crate::metrics::Counters;
+use crate::model::Adam;
 use crate::moe::{
-    topk_softmax, topk_softmax_bwd, DispatchPlan, ExpertBatch, GateAssign,
+    balance_loss, gate, DispatchPlan, ExpertBatch, ExpertShard, FfnExpertShard,
+    Gate, GateAssign,
 };
 use crate::rng::Rng;
 use crate::runtime::Runtime;
-use crate::tensor::{HostTensor, TensorF32};
+use crate::tensor::{ops, HostTensor, TensorF32};
 
-/// Per-worker parameters + compiled stage executables for one MoE layer.
+/// Manifest-derived geometry shared by every layer built on a runtime.
+#[derive(Clone, Debug)]
+struct LayerGeom {
+    nb: usize,
+    dm: usize,
+    dh: usize,
+    ne_local: usize,
+    k: usize,
+    buckets: Vec<usize>,
+}
+
+/// Probe the artifact manifest for the layer geometry of a topology.
+fn probe_geometry(rt: &Runtime, workers: usize) -> Result<LayerGeom> {
+    let m = &rt.manifest;
+    let gate = m
+        .artifact(&format!("gate_fwd_w{workers}"))
+        .ok_or_else(|| {
+            Error::ArtifactNotFound(format!(
+                "gate_fwd_w{workers} (worker count not in preset)"
+            ))
+        })?;
+    let nb = gate.inputs[0].shape[0];
+    let dm = gate.inputs[0].shape[1];
+    let ne_global = gate.inputs[1].shape[1];
+    let ne_local = ne_global / workers;
+    let combine = m
+        .artifact("combine_fwd")
+        .ok_or_else(|| Error::ArtifactNotFound("combine_fwd".into()))?;
+    let k = combine.inputs[1].shape[1];
+    let buckets = m.buckets();
+    if buckets.is_empty() {
+        return Err(Error::Manifest("no expert buckets in manifest".into()));
+    }
+    // dh from any expert artifact
+    let eart = m
+        .artifact(&format!("expert_fwd_b{}", buckets[0]))
+        .ok_or_else(|| Error::ArtifactNotFound("expert_fwd".into()))?;
+    let dh = eart.inputs[1].shape[2];
+    if eart.inputs[0].shape[0] != ne_local {
+        return Err(Error::Manifest(format!(
+            "expert artifact has {} local experts, topology wants {}",
+            eart.inputs[0].shape[0], ne_local
+        )));
+    }
+    Ok(LayerGeom { nb, dm, dh, ne_local, k, buckets })
+}
+
+/// Assembles a [`DistMoeLayer`] from a gate policy + expert shard.
+///
+/// The builder owns everything that *selects* modules (the `[moe]`
+/// config section, the init seed); geometry comes from the artifact
+/// manifest at [`MoeLayerBuilder::build`] time.
+#[derive(Clone, Debug)]
+pub struct MoeLayerBuilder {
+    cfg: MoeConfig,
+    seed: u64,
+}
+
+impl Default for MoeLayerBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MoeLayerBuilder {
+    /// Default modules: top-k softmax gate + FFN expert shard.
+    pub fn new() -> MoeLayerBuilder {
+        MoeLayerBuilder { cfg: MoeConfig::default(), seed: 0 }
+    }
+
+    /// Select modules from a `[moe]` config section.
+    pub fn from_config(cfg: &MoeConfig) -> MoeLayerBuilder {
+        MoeLayerBuilder { cfg: cfg.clone(), seed: 0 }
+    }
+
+    /// Seed for parameter init (and the noisy gate's noise stream).
+    pub fn seed(mut self, seed: u64) -> MoeLayerBuilder {
+        self.seed = seed;
+        self
+    }
+
+    /// Override the gate kind ("topk" | "switch" | "noisy_topk").
+    pub fn gate(mut self, name: &str) -> MoeLayerBuilder {
+        self.cfg.gate = name.to_string();
+        self
+    }
+
+    /// Override the switch-gate capacity factor.
+    pub fn capacity_factor(mut self, cf: f64) -> MoeLayerBuilder {
+        self.cfg.capacity_factor = cf;
+        self
+    }
+
+    /// Override the noisy-gate noise std.
+    pub fn noise_std(mut self, std: f64) -> MoeLayerBuilder {
+        self.cfg.noise_std = std;
+        self
+    }
+
+    /// Build one worker's layer for a `(workers, rank)` comm topology.
+    ///
+    /// Gate weights are derived from `seed` only (identical on every
+    /// worker — they are `world`-tagged); expert weights from
+    /// `(seed, rank)`.  Both derivations are bit-identical to the seed
+    /// system's `DistMoeLayer::init`.
+    pub fn build(
+        &self,
+        rt: Arc<Runtime>,
+        workers: usize,
+        rank: usize,
+    ) -> Result<DistMoeLayer> {
+        let g = probe_geometry(&rt, workers)?;
+        let ne_global = workers * g.ne_local;
+
+        let mut gate_rng = Rng::new(self.seed ^ 0x6a7e);
+        let mut wg = TensorF32::zeros(&[g.dm, ne_global]);
+        gate_rng.fill_normal(&mut wg.data, 0.02);
+        let bg = TensorF32::zeros(&[ne_global]);
+
+        let expert: Box<dyn ExpertShard> = Box::new(FfnExpertShard::init(
+            rt.clone(),
+            g.ne_local,
+            g.dm,
+            g.dh,
+            g.buckets.clone(),
+            self.seed,
+            rank,
+        ));
+        let gate = gate::from_config(&self.cfg, self.seed)?;
+
+        Ok(DistMoeLayer {
+            rt,
+            workers,
+            rank,
+            ne_local: g.ne_local,
+            k: g.k,
+            nb: g.nb,
+            dm: g.dm,
+            dh: g.dh,
+            buckets: g.buckets,
+            wg,
+            bg,
+            gate,
+            expert,
+        })
+    }
+
+    /// Convenience: build for an existing comm handle's topology.
+    pub fn build_for(
+        &self,
+        rt: Arc<Runtime>,
+        comm: &impl Comm,
+    ) -> Result<DistMoeLayer> {
+        self.build(rt, comm.size(), comm.rank())
+    }
+}
+
+/// Per-worker gate parameters + pluggable gate/expert modules for one
+/// MoE layer.
 pub struct DistMoeLayer {
     rt: Arc<Runtime>,
     pub workers: usize,
@@ -27,16 +209,15 @@ pub struct DistMoeLayer {
     pub k: usize,
     pub nb: usize,
     pub dm: usize,
+    /// Expert hidden width from the manifest (FFN shard geometry; kept
+    /// on the layer because the fused comparison artifacts share it).
     pub dh: usize,
     buckets: Vec<usize>,
-    // replicated gate (tag: world)
+    // replicated gate GEMM parameters (tag: world)
     pub wg: TensorF32,
     pub bg: TensorF32,
-    // local expert shard (tag: none)
-    pub w1: TensorF32,
-    pub b1: TensorF32,
-    pub w2: TensorF32,
-    pub b2: TensorF32,
+    gate: Box<dyn Gate>,
+    expert: Box<dyn ExpertShard>,
 }
 
 /// Forward residuals needed by the backward chain.
@@ -49,8 +230,18 @@ pub struct MoeLayerState {
     pub y_slots: TensorF32,
     /// This worker's token features (gate_bwd + scatter transpose).
     pub x: TensorF32,
-    /// Per-global-expert counts this worker routed (load monitor food).
+    /// Per-global-expert counts this worker routed (load monitor food;
+    /// shared with `plan.counts_global`).  Counts every assignment
+    /// slot, including zero-weight drops/fillers, because every slot
+    /// transits the exchange.
     pub counts_global: Vec<u32>,
+    /// Per-global-expert counts of *kept* (weight > 0) assignments —
+    /// the histogram load metrics should use.  Identical to
+    /// `counts_global` for gates that never zero-weight.
+    pub counts_kept: Vec<u32>,
+    /// GShard auxiliary balance loss of this iteration's routing
+    /// (over the kept counts).
+    pub balance: f64,
 }
 
 /// Gradients produced by the backward pass.
@@ -58,71 +249,65 @@ pub struct LayerGrads {
     pub dx: TensorF32,
     pub dwg: TensorF32,
     pub dbg: TensorF32,
-    pub dw1: TensorF32,
-    pub db1: TensorF32,
-    pub dw2: TensorF32,
-    pub db2: TensorF32,
+    /// Expert-shard gradients as named slots, in
+    /// [`ExpertShard::params`] order.
+    pub expert: Vec<(&'static str, TensorF32)>,
+}
+
+impl LayerGrads {
+    /// Look an expert gradient up by slot name.
+    pub fn expert_grad(&self, name: &str) -> Option<&TensorF32> {
+        self.expert.iter().find(|(n, _)| *n == name).map(|(_, t)| t)
+    }
 }
 
 impl DistMoeLayer {
-    /// Initialise a worker's shard. Gate weights are derived from
-    /// `seed` only (identical on every worker — it is `world`-tagged);
-    /// expert weights are derived from `(seed, rank)`.
+    /// Seed-compatible shorthand: default top-k softmax gate + FFN
+    /// shard, weights derived exactly as the pre-trait layer did.
     pub fn init(
         rt: Arc<Runtime>,
         workers: usize,
         rank: usize,
         seed: u64,
     ) -> Result<DistMoeLayer> {
-        let m = &rt.manifest;
-        let gate = m
-            .artifact(&format!("gate_fwd_w{workers}"))
-            .ok_or_else(|| {
-                Error::ArtifactNotFound(format!(
-                    "gate_fwd_w{workers} (worker count not in preset)"
-                ))
-            })?;
-        let nb = gate.inputs[0].shape[0];
-        let dm = gate.inputs[0].shape[1];
-        let ne_global = gate.inputs[1].shape[1];
-        let ne_local = ne_global / workers;
-        let combine = m
-            .artifact("combine_fwd")
-            .ok_or_else(|| Error::ArtifactNotFound("combine_fwd".into()))?;
-        let k = combine.inputs[1].shape[1];
-        let buckets = m.buckets();
-        if buckets.is_empty() {
-            return Err(Error::Manifest("no expert buckets in manifest".into()));
+        MoeLayerBuilder::new().seed(seed).build(rt, workers, rank)
+    }
+
+    /// The routing policy this layer was built with.
+    pub fn gate(&self) -> &dyn Gate {
+        self.gate.as_ref()
+    }
+
+    /// The expert shard this layer was built with.
+    pub fn expert(&self) -> &dyn ExpertShard {
+        self.expert.as_ref()
+    }
+
+    /// All trainable parameters as named slots: gate GEMM first
+    /// (`wg`, `bg`), then the expert shard's slots.
+    pub fn params(&self) -> Vec<(&'static str, &TensorF32)> {
+        let mut v = vec![("wg", &self.wg), ("bg", &self.bg)];
+        v.extend(self.expert.params());
+        v
+    }
+
+    /// Apply one optimiser step over all layer parameters from a
+    /// backward pass's gradients (same slot order as [`Self::params`]).
+    pub fn apply_grads(&mut self, opt: &mut Adam, grads: &LayerGrads) -> Result<()> {
+        {
+            let pnames: Vec<&str> = self.expert.params().iter().map(|(n, _)| *n).collect();
+            let gnames: Vec<&str> = grads.expert.iter().map(|(n, _)| *n).collect();
+            if pnames != gnames {
+                return Err(Error::Shape(format!(
+                    "expert grad slots {gnames:?} do not match params {pnames:?}"
+                )));
+            }
         }
-        // dh from any expert artifact
-        let eart = m
-            .artifact(&format!("expert_fwd_b{}", buckets[0]))
-            .ok_or_else(|| Error::ArtifactNotFound("expert_fwd".into()))?;
-        let dh = eart.inputs[1].shape[2];
-        if eart.inputs[0].shape[0] != ne_local {
-            return Err(Error::Manifest(format!(
-                "expert artifact has {} local experts, topology wants {}",
-                eart.inputs[0].shape[0], ne_local
-            )));
-        }
-
-        let mut gate_rng = Rng::new(seed ^ 0x6a7e);
-        let mut wg = TensorF32::zeros(&[dm, ne_global]);
-        gate_rng.fill_normal(&mut wg.data, 0.02);
-        let bg = TensorF32::zeros(&[ne_global]);
-
-        let mut erng = Rng::new(seed ^ (0xe0 + rank as u64));
-        let mut w1 = TensorF32::zeros(&[ne_local, dm, dh]);
-        erng.fill_normal(&mut w1.data, 0.02);
-        let b1 = TensorF32::zeros(&[ne_local, dh]);
-        let mut w2 = TensorF32::zeros(&[ne_local, dh, dm]);
-        erng.fill_normal(&mut w2.data, 0.02);
-        let b2 = TensorF32::zeros(&[ne_local, dm]);
-
-        Ok(DistMoeLayer {
-            rt, workers, rank, ne_local, k, nb, dm, dh, buckets,
-            wg, bg, w1, b1, w2, b2,
-        })
+        let mut gs: Vec<&TensorF32> = vec![&grads.dwg, &grads.dbg];
+        gs.extend(grads.expert.iter().map(|(_, g)| g));
+        let mut ps: Vec<&mut TensorF32> = vec![&mut self.wg, &mut self.bg];
+        ps.extend(self.expert.params_mut().into_iter().map(|(_, t)| t));
+        opt.update_refs(&mut ps, &gs)
     }
 
     /// Pre-compile every stage executable this layer can touch.
@@ -131,21 +316,16 @@ impl DistMoeLayer {
         self.rt.executable(&format!("gate_bwd_w{}", self.workers))?;
         self.rt.executable("combine_fwd")?;
         self.rt.executable("combine_bwd")?;
-        for &b in &self.buckets {
-            self.rt.executable(&format!("expert_fwd_b{b}"))?;
-            self.rt.executable(&format!("expert_bwd_b{b}"))?;
-        }
-        Ok(())
+        self.expert.warm()
     }
 
     /// Matmul FLOPs this worker performed for `state` (fig-6 metric):
-    /// gate GEMM + both expert GEMMs over real (unpadded) rows.
+    /// gate GEMM + the expert shard over real (unpadded) rows.
     pub fn flops(&self, state: &MoeLayerState) -> f64 {
         let gate = 2.0 * self.nb as f64 * self.dm as f64
             * (self.workers * self.ne_local) as f64;
         let rows: usize = state.eb.rows_per_expert.iter().sum();
-        let expert = 2.0 * 2.0 * rows as f64 * self.dm as f64 * self.dh as f64;
-        gate + expert
+        gate + self.expert.flops(rows)
     }
 
     /// Forward pass over this worker's `x: [nb, dm]`.
@@ -157,8 +337,6 @@ impl DistMoeLayer {
         x: TensorF32,
         counters: &mut Counters,
     ) -> Result<(TensorF32, MoeLayerState)> {
-        let ne_global = self.workers * self.ne_local;
-
         // ---- gate scores (L1 kernel via HLO) ----
         let gate = self.rt.executable(&format!("gate_fwd_w{}", self.workers))?;
         let out = gate.run(&[
@@ -169,12 +347,8 @@ impl DistMoeLayer {
         let scores = out.into_iter().next().unwrap().into_f32()?;
 
         // ---- host gating + plan (the paper's "local shuffle") ----
-        let assign = topk_softmax(&scores, self.k)?;
+        let assign = self.gate.route(&scores, self.k)?;
         let plan = DispatchPlan::build(&assign, self.workers, self.ne_local)?;
-        let mut counts_global = vec![0u32; ne_global];
-        for &e in &assign.idx {
-            counts_global[e as usize] += 1;
-        }
 
         // ---- Figure 2 phase 1: exchange per-expert counts ----
         let count_bufs: Vec<Vec<f32>> = plan
@@ -201,15 +375,7 @@ impl DistMoeLayer {
             "moe_real_rows",
             eb.rows_per_expert.iter().sum::<usize>() as u64,
         );
-        let efwd = self.rt.executable(&format!("expert_fwd_b{}", eb.bucket))?;
-        let out = efwd.run(&[
-            eb.xs.clone().into(),
-            self.w1.clone().into(),
-            self.b1.clone().into(),
-            self.w2.clone().into(),
-            self.b2.clone().into(),
-        ])?;
-        let ys = out.into_iter().next().unwrap().into_f32()?;
+        let ys = self.expert.forward(&eb)?;
 
         // ---- return exchange + combine ----
         let ret = eb.split_outputs(&ys)?;
@@ -229,7 +395,26 @@ impl DistMoeLayer {
         ])?;
         let y = out.into_iter().next().unwrap().into_f32()?;
 
-        Ok((y, MoeLayerState { assign, plan, eb, y_slots, x, counts_global }))
+        // ---- per-step routing metrics (monitor food) ----
+        // Load metrics count only kept (weight > 0) assignments so
+        // capacity gates' zero-weight drop/filler slots don't read as
+        // phantom load; the dispatch histogram keeps counting them
+        // because they really transit the exchange.
+        let counts_kept = assign.kept_counts(self.workers * self.ne_local);
+        let balance = match &assign.probs {
+            Some(p) => balance_loss(&counts_kept, p),
+            None => {
+                let mut p = scores.clone();
+                ops::softmax_rows(&mut p)?;
+                balance_loss(&counts_kept, &p)
+            }
+        };
+        let counts_global = plan.counts_global.clone();
+
+        Ok((
+            y,
+            MoeLayerState { assign, plan, eb, y_slots, x, counts_global, counts_kept, balance },
+        ))
     }
 
     /// Backward pass: `dy: [nb, dm]` → input + parameter gradients.
@@ -256,8 +441,11 @@ impl DistMoeLayer {
         let dys = it.next().unwrap().into_f32()?; // [nb*k, dm] packed order
         let dw = it.next().unwrap().into_f32()?; // [nb, k]
 
-        // ---- gate backward: softmax-topk Jacobian + gate GEMM ----
-        let dscores = topk_softmax_bwd(&state.assign, &dw.data, ne_global)?;
+        // ---- gate backward: routing Jacobian + gate GEMM ----
+        let mut dscores = self.gate.route_bwd(&state.assign, &dw.data, ne_global)?;
+        // balance-loss gradient hook (no-op until a later PR wires it)
+        self.gate
+            .balance_grad(&state.assign, &state.counts_global, &mut dscores);
         let gbwd = self.rt.executable(&format!("gate_bwd_w{}", self.workers))?;
         let out = gbwd.run(&[
             state.x.clone().into(),
@@ -286,23 +474,7 @@ impl DistMoeLayer {
         let dys_in = state.eb.rebatch(&recv)?;
 
         // ---- expert shard backward (recompute-style artifact) ----
-        let ebwd = self
-            .rt
-            .executable(&format!("expert_bwd_b{}", state.eb.bucket))?;
-        let out = ebwd.run(&[
-            state.eb.xs.clone().into(),
-            self.w1.clone().into(),
-            self.b1.clone().into(),
-            self.w2.clone().into(),
-            self.b2.clone().into(),
-            dys_in.into(),
-        ])?;
-        let mut it = out.into_iter();
-        let dxs = it.next().unwrap().into_f32()?;
-        let dw1 = it.next().unwrap().into_f32()?;
-        let db1 = it.next().unwrap().into_f32()?;
-        let dw2 = it.next().unwrap().into_f32()?;
-        let db2 = it.next().unwrap().into_f32()?;
+        let (dxs, expert_grads) = self.expert.backward(&state.eb, dys_in)?;
 
         // ---- route input cotangents back to token owners ----
         let ret = state.eb.split_outputs(&dxs)?;
@@ -324,6 +496,28 @@ impl DistMoeLayer {
             }
         }
 
-        Ok(LayerGrads { dx, dwg, dbg, dw1, db1, dw2, db2 })
+        Ok(LayerGrads { dx, dwg, dbg, expert: expert_grads })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_carries_config_overrides() {
+        let b = MoeLayerBuilder::new()
+            .gate("switch")
+            .capacity_factor(1.5)
+            .noise_std(0.25)
+            .seed(9);
+        assert_eq!(b.cfg.gate, "switch");
+        assert!((b.cfg.capacity_factor - 1.5).abs() < 1e-12);
+        assert!((b.cfg.noise_std - 0.25).abs() < 1e-12);
+        assert_eq!(b.seed, 9);
+        // gate selection itself is validated without a runtime
+        assert!(gate::from_config(&b.cfg, b.seed).is_ok());
+        let bad = MoeLayerBuilder::new().gate("mystery");
+        assert!(gate::from_config(&bad.cfg, 0).is_err());
     }
 }

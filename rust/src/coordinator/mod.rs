@@ -1,11 +1,18 @@
 //! The Layer-3 coordinator — FastMoE's system contribution.
 //!
 //! * [`DistMoeLayer`] (`dist_moe`) — the expert-parallel MoE layer: the
-//!   Figure-2 two-phase exchange, bucketed expert execution, and the
-//!   full manual backward chain over the stage artifacts.
-//! * [`Trainer`] / [`DistTrainer`] (`trainer`) — the fused single-graph
-//!   training loop (Figure 7) and its data-parallel multi-worker
-//!   variant with tag-aware gradient synchronisation.
+//!   Figure-2 two-phase exchange and the full manual backward chain,
+//!   as thin orchestration over the pluggable
+//!   [`Gate`](crate::moe::Gate) /
+//!   [`ExpertShard`](crate::moe::ExpertShard) hierarchy.
+//! * [`MoeLayerBuilder`] — assembles a layer from the `[moe]` config
+//!   section (gate kind, capacity factor, noise std) and the artifact
+//!   manifest's geometry.
+//! * [`Trainer`] / [`DistTrainer`] / [`MoeLayerTrainer`] (`trainer`) —
+//!   the fused single-graph training loop (Figure 7), its
+//!   data-parallel multi-worker variant with tag-aware gradient
+//!   synchronisation, and the expert-parallel layer trainer with
+//!   per-step balance-loss metrics.
 //! * [`GradSync`] — the heterogeneity-aware synchronisation module of
 //!   §3.2: parameters tagged `world` / `data_parallel` are averaged over
 //!   their groups, `none` (expert shards) are left alone in sharded
@@ -14,8 +21,8 @@
 mod dist_moe;
 mod trainer;
 
-pub use dist_moe::{DistMoeLayer, LayerGrads, MoeLayerState};
-pub use trainer::{DistTrainer, StepStats, Trainer};
+pub use dist_moe::{DistMoeLayer, LayerGrads, MoeLayerBuilder, MoeLayerState};
+pub use trainer::{DistTrainer, MoeLayerTrainer, MoeStepStats, StepStats, Trainer};
 
 use crate::comm::Comm;
 use crate::error::Result;

@@ -6,14 +6,18 @@
 //! multi-worker variant built on `grad_step_*` + [`GradSync`] + the
 //! host [`Adam`] — the paper's hybrid data/expert-parallel training,
 //! with identical math (pinned by `rust/tests/trainer_equivalence.rs`).
+//! [`MoeLayerTrainer`] trains a builder-assembled expert-parallel
+//! [`DistMoeLayer`] directly, logging the load-balance loss per step.
 
 use std::sync::Arc;
 
-use super::{ExpertMode, GradSync};
+use super::{DistMoeLayer, ExpertMode, GradSync};
 use crate::comm::Comm;
 use crate::data::Batch;
 use crate::error::{Error, Result};
+use crate::metrics::Counters;
 use crate::model::{Adam, ParamStore};
+use crate::moe::LoadMonitor;
 use crate::runtime::{Executable, ModelEntry, Runtime};
 use crate::tensor::{HostTensor, TensorF32};
 
@@ -174,6 +178,97 @@ impl DistTrainer {
         let mut loss_buf = vec![local_loss];
         comm.all_reduce_sum(&mut loss_buf)?;
         Ok(loss_buf[0] / comm.size() as f32)
+    }
+}
+
+/// Per-step statistics of the expert-parallel layer trainer, including
+/// the §6 load-balance signal.
+#[derive(Clone, Copy, Debug)]
+pub struct MoeStepStats {
+    pub step: u64,
+    /// Energy loss `0.5 · mean(y²)` the demo objective minimises.
+    pub loss: f32,
+    /// GShard auxiliary balance loss of this step's routing (1.0 is
+    /// the balanced minimum).
+    pub balance: f64,
+    /// Running max/mean expert-load ratio from the monitor.
+    pub imbalance: f64,
+    /// Matmul FLOPs of the step (fwd + bwd ≈ 3× fwd).
+    pub flops: f64,
+    pub secs: f64,
+}
+
+/// Trains one expert-parallel [`DistMoeLayer`] (gate GEMM + expert
+/// shard) against the energy objective `0.5 · mean(y²)` — the
+/// layer-level training loop used by `fastmoe dist-moe` and the
+/// `distributed_moe` example.
+///
+/// Every step records per-expert token counts into the [`LoadMonitor`]
+/// and reports the balance loss, so gate policies can be compared on
+/// load balance directly from the step log.
+pub struct MoeLayerTrainer {
+    pub layer: DistMoeLayer,
+    opt: Adam,
+    pub monitor: LoadMonitor,
+    pub step: u64,
+}
+
+impl MoeLayerTrainer {
+    pub fn new(layer: DistMoeLayer, lr: f32) -> MoeLayerTrainer {
+        let shapes: Vec<TensorF32> = layer
+            .params()
+            .into_iter()
+            .map(|(_, t)| TensorF32::zeros(&t.shape))
+            .collect();
+        let opt = Adam::new(&shapes, lr);
+        let monitor = LoadMonitor::new(layer.workers * layer.ne_local);
+        MoeLayerTrainer { layer, opt, monitor, step: 0 }
+    }
+
+    /// One forward + backward + optimiser step over `x: [nb, dm]`.
+    pub fn train_step(
+        &mut self,
+        comm: &mut impl Comm,
+        x: TensorF32,
+        counters: &mut Counters,
+    ) -> Result<MoeStepStats> {
+        let t0 = std::time::Instant::now();
+        self.step += 1;
+        let (y, state) = self.layer.forward(comm, x, counters)?;
+        let n = y.data.len() as f32;
+        let loss = 0.5 * y.data.iter().map(|v| v * v).sum::<f32>() / n;
+        // d(0.5·mean(y²))/dy = y / numel
+        let mut dy = y;
+        for v in dy.data.iter_mut() {
+            *v /= n;
+        }
+        let mut grads = self.layer.backward(comm, &state, &dy, counters)?;
+        // Gate params are replicated (tag: world): average their grads
+        // across workers before stepping, or the replicas diverge.
+        // Expert shards are `none`-tagged — each shard already saw every
+        // token routed to it, so its local grads are final.
+        let ws = comm.size();
+        if ws > 1 {
+            comm.all_reduce_sum(&mut grads.dwg.data)?;
+            comm.all_reduce_sum(&mut grads.dbg.data)?;
+            let scale = 1.0 / ws as f32;
+            for v in grads.dwg.data.iter_mut() {
+                *v *= scale;
+            }
+            for v in grads.dbg.data.iter_mut() {
+                *v *= scale;
+            }
+        }
+        self.monitor.record(&state.counts_kept);
+        self.layer.apply_grads(&mut self.opt, &grads)?;
+        Ok(MoeStepStats {
+            step: self.step,
+            loss,
+            balance: state.balance,
+            imbalance: self.monitor.imbalance(),
+            flops: 3.0 * self.layer.flops(&state),
+            secs: t0.elapsed().as_secs_f64(),
+        })
     }
 }
 

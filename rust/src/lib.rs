@@ -21,8 +21,8 @@
 //! |---|---|
 //! | [`runtime`] | PJRT client + artifact registry + executable cache |
 //! | [`comm`] | process groups, all-to-all-v, ring all-reduce, … |
-//! | [`moe`] | gating, dispatch plans, capacity buckets, load monitor |
-//! | [`coordinator`] | workers, the distributed MoE layer, grad sync, train loop |
+//! | [`moe`] | the §3.1 hierarchy: [`moe::Gate`] policies (top-k / switch / noisy top-k), [`moe::ExpertShard`] shards (FFN), over the fixed dispatch substrate (plans, capacity buckets, load monitor, balance loss) |
+//! | [`coordinator`] | workers, the distributed MoE layer + [`coordinator::MoeLayerBuilder`] (assembles gate/expert from the `[moe]` config), grad sync, train loops |
 //! | [`model`] | parameter store, Adam, checkpoints |
 //! | [`data`] | synthetic corpus, tokenizer, batching |
 //! | [`tensor`] | host tensors and the math used outside XLA |

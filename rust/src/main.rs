@@ -4,7 +4,8 @@
 //! fastmoe info                         # artifact + model inventory
 //! fastmoe train [--model gpt_moe] [--steps N] [--config cfg.toml] …
 //! fastmoe dist-train [--workers W] …   # DP-emulated multi-worker run
-//! fastmoe dist-moe [--workers W] …     # expert-parallel layer demo
+//! fastmoe dist-moe [--workers W] [--gate topk|switch|noisy_topk] …
+//!                                      # expert-parallel layer demo
 //! fastmoe fmoefy --experts N           # Listing-1 config transform
 //! ```
 //!
@@ -15,8 +16,8 @@ use std::sync::Arc;
 
 use fastmoe::cli::{Args, Usage};
 use fastmoe::comm::{self, Comm};
-use fastmoe::config::{fmoefy, ConfigFile, ModelConfig, TrainConfig};
-use fastmoe::coordinator::{DistMoeLayer, DistTrainer, Trainer};
+use fastmoe::config::{fmoefy, ConfigFile, ModelConfig, MoeConfig, TrainConfig};
+use fastmoe::coordinator::{DistTrainer, MoeLayerBuilder, MoeLayerTrainer, Trainer};
 use fastmoe::data::{BatchIter, Corpus};
 use fastmoe::error::Result;
 use fastmoe::metrics::{Counters, CsvWriter, Stopwatch};
@@ -34,7 +35,7 @@ fn main() {
             ("info", "print artifact and model inventory"),
             ("train", "single-worker fused training loop (Figure 7)"),
             ("dist-train", "multi-worker training with tag-aware grad sync"),
-            ("dist-moe", "expert-parallel MoE layer demo (Figure 2 protocol)"),
+            ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk)"),
             ("fmoefy", "Listing-1: dense config -> MoE config at equal FLOPs"),
         ],
     };
@@ -203,6 +204,7 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
     let iters = args.usize_or("iters", 2)?;
     let seed = args.u64_or("seed", 7)?;
     let port = args.usize_or("port", 47500)? as u16;
+    let moe_cfg = MoeConfig::from_args(args)?;
     let exe = std::env::current_exe()?;
     println!("dist-moe (tcp): spawning {workers} worker processes on ports {port}..");
     let mut children = Vec::new();
@@ -216,6 +218,9 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
                     "--iters", &iters.to_string(),
                     "--seed", &seed.to_string(),
                     "--port", &port.to_string(),
+                    "--gate", &moe_cfg.gate,
+                    "--capacity-factor", &moe_cfg.capacity_factor.to_string(),
+                    "--noise-std", &moe_cfg.noise_std.to_string(),
                 ])
                 .spawn()?,
         );
@@ -244,7 +249,9 @@ fn tcp_worker(args: &Args) -> Result<()> {
     let port = args.usize_or("port", 47500)? as u16;
     let mut group = fastmoe::comm::tcp::TcpGroup::connect_local(rank, workers, port)?;
     let rt = Arc::new(Runtime::open_default()?);
-    let layer = DistMoeLayer::init(rt, workers, rank, seed)?;
+    let layer = MoeLayerBuilder::from_config(&MoeConfig::from_args(args)?)
+        .seed(seed)
+        .build(rt, workers, rank)?;
     layer.warm()?;
     let mut counters = Counters::new();
     let mut rng = Rng::new(seed ^ rank as u64);
@@ -279,30 +286,39 @@ fn dist_moe(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", 4)?;
     let iters = args.usize_or("iters", 4)?;
     let seed = args.u64_or("seed", 7)?;
+    let lr = args.f64_or("lr", 1e-3)? as f32;
+    let moe_cfg = MoeConfig::from_args(args)?;
     let rt = Arc::new(Runtime::open_default()?);
-    println!("dist-moe: {workers} workers, {iters} iterations");
+    println!(
+        "dist-moe: {workers} workers, {iters} iterations, gate `{}`",
+        moe_cfg.gate
+    );
     let stats = comm::run_workers(workers, move |mut h| {
-        let layer = DistMoeLayer::init(rt.clone(), workers, h.rank(), seed)?;
+        let layer = MoeLayerBuilder::from_config(&moe_cfg)
+            .seed(seed)
+            .build_for(rt.clone(), &h)?;
         layer.warm()?;
+        let mut tr = MoeLayerTrainer::new(layer, lr);
         let mut counters = Counters::new();
         let mut rng = Rng::new(seed ^ h.rank() as u64);
         let mut flops = 0.0;
+        let mut balance = 0.0;
         let watch = Stopwatch::start();
         for _ in 0..iters {
-            let mut x = TensorF32::zeros(&[layer.nb, layer.dm]);
+            let mut x = TensorF32::zeros(&[tr.layer.nb, tr.layer.dm]);
             rng.fill_normal(&mut x.data, 1.0);
-            let (y, state) = layer.forward(&mut h, x, &mut counters)?;
-            let dy = TensorF32::full(&[layer.nb, layer.dm], 1.0 / layer.nb as f32);
-            let _ = layer.backward(&mut h, &state, &dy, &mut counters)?;
-            flops += 3.0 * layer.flops(&state);
-            assert!(y.data.iter().all(|v| v.is_finite()));
+            let s = tr.train_step(&mut h, x, &mut counters)?;
+            flops += s.flops;
+            balance += s.balance;
         }
         let secs = watch.secs();
-        Ok((h.rank(), secs, flops, counters))
+        let imbalance = tr.monitor.imbalance();
+        Ok((h.rank(), secs, flops, counters, balance / iters.max(1) as f64, imbalance))
     })?;
-    for (rank, secs, flops, counters) in &stats {
+    for (rank, secs, flops, counters, balance, imbalance) in &stats {
         println!(
-            "worker {rank}: {:.2}s  {:.2} GFLOP/s  a2a {}  padding {:.1}%",
+            "worker {rank}: {:.2}s  {:.2} GFLOP/s  a2a {}  padding {:.1}%  \
+             balance_loss {:.3}  imbalance {:.2}",
             secs,
             util::gflops(*flops, *secs),
             util::fmt_bytes(counters.get("moe_a2a_bytes") as usize),
@@ -310,6 +326,8 @@ fn dist_moe(args: &Args) -> Result<()> {
                 * (1.0
                     - counters.get("moe_real_rows") as f64
                         / counters.get("moe_bucket_rows").max(1) as f64),
+            balance,
+            imbalance,
         );
     }
     Ok(())

@@ -33,6 +33,20 @@ impl Adam {
 
     /// Apply one update over all parameters given their gradients.
     pub fn update(&mut self, params: &mut [TensorF32], grads: &[TensorF32]) -> Result<()> {
+        let mut ps: Vec<&mut TensorF32> = params.iter_mut().collect();
+        let gs: Vec<&TensorF32> = grads.iter().collect();
+        self.update_refs(&mut ps, &gs)
+    }
+
+    /// Same update over *borrowed* parameters — lets callers whose
+    /// tensors live in different owners (gate params on the layer,
+    /// expert params behind the `ExpertShard` trait's named slots)
+    /// drive one optimiser without copying into a contiguous vec.
+    pub fn update_refs(
+        &mut self,
+        params: &mut [&mut TensorF32],
+        grads: &[&TensorF32],
+    ) -> Result<()> {
         if params.len() != self.m.len() || grads.len() != self.m.len() {
             return Err(Error::Shape("adam arity".into()));
         }
@@ -92,6 +106,30 @@ mod tests {
             opt.update(&mut p, &g).unwrap();
         }
         assert!((p[0].data[0] - 3.0).abs() < 0.05, "x={}", p[0].data[0]);
+    }
+
+    #[test]
+    fn update_refs_matches_update_bitwise() {
+        let mut pa = vec![
+            TensorF32::from_vec(&[2], vec![1.0, -2.0]).unwrap(),
+            TensorF32::from_vec(&[3], vec![0.5, 0.0, -0.5]).unwrap(),
+        ];
+        let mut pb = pa.clone();
+        let g = vec![
+            TensorF32::from_vec(&[2], vec![0.5, -0.25]).unwrap(),
+            TensorF32::from_vec(&[3], vec![-0.1, 0.2, 0.3]).unwrap(),
+        ];
+        let mut oa = Adam::new(&pa, 0.05);
+        let mut ob = oa.clone();
+        for _ in 0..3 {
+            oa.update(&mut pa, &g).unwrap();
+            let (b0, b1) = pb.split_at_mut(1);
+            let mut refs = vec![&mut b0[0], &mut b1[0]];
+            ob.update_refs(&mut refs, &[&g[0], &g[1]]).unwrap();
+        }
+        assert_eq!(pa[0].data, pb[0].data);
+        assert_eq!(pa[1].data, pb[1].data);
+        assert_eq!(oa.step, ob.step);
     }
 
     #[test]

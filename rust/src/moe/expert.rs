@@ -1,0 +1,232 @@
+//! Pluggable expert shards — the bottom of the paper's §3.1 hierarchy.
+//!
+//! An [`ExpertShard`] owns one worker's expert parameters and knows how
+//! to run the bucketed HLO executables over an [`ExpertBatch`]: forward
+//! (`[ne_local, bucket, dm] -> [ne_local, bucket, dm]`), backward
+//! (input cotangents + parameter gradients), and parameter access as
+//! *named tensor slots* so optimisers and checkpoints never hardcode an
+//! expert architecture.
+//!
+//! [`FfnExpertShard`] is the seed architecture: the two-GEMM FFN
+//! (`w1/b1` → GeLU → `w2/b2`) compiled per capacity bucket as
+//! `expert_fwd_b{B}` / `expert_bwd_b{B}` artifacts.
+
+use std::sync::Arc;
+
+use super::ExpertBatch;
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::tensor::TensorF32;
+
+/// One worker's expert shard: parameters + bucketed HLO execution.
+///
+/// Gradients and parameters travel as `(slot name, tensor)` pairs in a
+/// stable order: `grads()` names from [`ExpertShard::backward`] must
+/// align 1:1 with [`ExpertShard::params`].
+pub trait ExpertShard: Send + Sync {
+    /// Short architecture name for logs ("ffn", …).
+    fn name(&self) -> &'static str;
+
+    /// Local expert count of this shard.
+    fn ne_local(&self) -> usize;
+
+    /// Token feature width.
+    fn dm(&self) -> usize;
+
+    /// Pre-compile every executable this shard can touch.
+    fn warm(&self) -> Result<()>;
+
+    /// Run the shard over a padded batch; returns `[ne_local, bucket, dm]`.
+    fn forward(&self, eb: &ExpertBatch) -> Result<TensorF32>;
+
+    /// Backward over the same batch: output cotangents
+    /// `dys: [ne_local, bucket, dm]` → (input cotangents of the same
+    /// shape, named parameter gradients in [`ExpertShard::params`] order).
+    fn backward(
+        &self,
+        eb: &ExpertBatch,
+        dys: TensorF32,
+    ) -> Result<(TensorF32, Vec<(&'static str, TensorF32)>)>;
+
+    /// Named parameter slots, in gradient order.
+    fn params(&self) -> Vec<(&'static str, &TensorF32)>;
+
+    /// Mutable named parameter slots (optimiser application).
+    fn params_mut(&mut self) -> Vec<(&'static str, &mut TensorF32)>;
+
+    /// Look one parameter up by slot name.
+    fn param(&self, name: &str) -> Option<&TensorF32> {
+        self.params().into_iter().find(|(n, _)| *n == name).map(|(_, t)| t)
+    }
+
+    /// Matmul FLOPs for `rows` real (unpadded) token rows through the
+    /// shard, forward only.
+    fn flops(&self, rows: usize) -> f64;
+}
+
+/// The seed FFN expert shard (w1/b1 → GeLU → w2/b2 per local expert).
+pub struct FfnExpertShard {
+    rt: Arc<Runtime>,
+    ne_local: usize,
+    dm: usize,
+    pub dh: usize,
+    buckets: Vec<usize>,
+    pub w1: TensorF32,
+    pub b1: TensorF32,
+    pub w2: TensorF32,
+    pub b2: TensorF32,
+}
+
+impl FfnExpertShard {
+    /// Initialise a shard from `(seed, rank)` — the exact seed-path
+    /// derivation of the original `DistMoeLayer::init` (weights are
+    /// bit-identical for a given `(seed, rank)`).
+    pub fn init(
+        rt: Arc<Runtime>,
+        ne_local: usize,
+        dm: usize,
+        dh: usize,
+        buckets: Vec<usize>,
+        seed: u64,
+        rank: usize,
+    ) -> FfnExpertShard {
+        let mut erng = Rng::new(seed ^ (0xe0 + rank as u64));
+        let mut w1 = TensorF32::zeros(&[ne_local, dm, dh]);
+        erng.fill_normal(&mut w1.data, 0.02);
+        let b1 = TensorF32::zeros(&[ne_local, dh]);
+        let mut w2 = TensorF32::zeros(&[ne_local, dh, dm]);
+        erng.fill_normal(&mut w2.data, 0.02);
+        let b2 = TensorF32::zeros(&[ne_local, dm]);
+        FfnExpertShard { rt, ne_local, dm, dh, buckets, w1, b1, w2, b2 }
+    }
+}
+
+impl ExpertShard for FfnExpertShard {
+    fn name(&self) -> &'static str {
+        "ffn"
+    }
+
+    fn ne_local(&self) -> usize {
+        self.ne_local
+    }
+
+    fn dm(&self) -> usize {
+        self.dm
+    }
+
+    fn warm(&self) -> Result<()> {
+        for &b in &self.buckets {
+            self.rt.executable(&format!("expert_fwd_b{b}"))?;
+            self.rt.executable(&format!("expert_bwd_b{b}"))?;
+        }
+        Ok(())
+    }
+
+    fn forward(&self, eb: &ExpertBatch) -> Result<TensorF32> {
+        if eb.ne_local != self.ne_local || eb.dm != self.dm {
+            return Err(Error::Shape(format!(
+                "ffn shard: batch is {}×…×{}, shard wants {}×…×{}",
+                eb.ne_local, eb.dm, self.ne_local, self.dm
+            )));
+        }
+        let efwd = self.rt.executable(&format!("expert_fwd_b{}", eb.bucket))?;
+        let out = efwd.run(&[
+            eb.xs.clone().into(),
+            self.w1.clone().into(),
+            self.b1.clone().into(),
+            self.w2.clone().into(),
+            self.b2.clone().into(),
+        ])?;
+        out.into_iter().next().unwrap().into_f32()
+    }
+
+    fn backward(
+        &self,
+        eb: &ExpertBatch,
+        dys: TensorF32,
+    ) -> Result<(TensorF32, Vec<(&'static str, TensorF32)>)> {
+        let ebwd = self.rt.executable(&format!("expert_bwd_b{}", eb.bucket))?;
+        let out = ebwd.run(&[
+            eb.xs.clone().into(),
+            self.w1.clone().into(),
+            self.b1.clone().into(),
+            self.w2.clone().into(),
+            self.b2.clone().into(),
+            dys.into(),
+        ])?;
+        let mut it = out.into_iter();
+        let dxs = it.next().unwrap().into_f32()?;
+        let dw1 = it.next().unwrap().into_f32()?;
+        let db1 = it.next().unwrap().into_f32()?;
+        let dw2 = it.next().unwrap().into_f32()?;
+        let db2 = it.next().unwrap().into_f32()?;
+        Ok((dxs, vec![("w1", dw1), ("b1", db1), ("w2", dw2), ("b2", db2)]))
+    }
+
+    fn params(&self) -> Vec<(&'static str, &TensorF32)> {
+        vec![
+            ("w1", &self.w1),
+            ("b1", &self.b1),
+            ("w2", &self.w2),
+            ("b2", &self.b2),
+        ]
+    }
+
+    fn params_mut(&mut self) -> Vec<(&'static str, &mut TensorF32)> {
+        vec![
+            ("w1", &mut self.w1),
+            ("b1", &mut self.b1),
+            ("w2", &mut self.w2),
+            ("b2", &mut self.b2),
+        ]
+    }
+
+    fn flops(&self, rows: usize) -> f64 {
+        2.0 * 2.0 * rows as f64 * self.dm as f64 * self.dh as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime-dependent behaviour is covered by the integration tests;
+    // here we pin the seed-path parameter derivation and the named-slot
+    // contract, which need no artifacts beyond an openable runtime.
+
+    #[test]
+    fn seed_path_matches_original_derivation() {
+        // Mirror the original DistMoeLayer::init expert-weight loop and
+        // check FfnExpertShard::init reproduces it bit-for-bit.
+        let (ne_local, dm, dh, seed, rank) = (2usize, 4usize, 8usize, 77u64, 1usize);
+        let mut erng = Rng::new(seed ^ (0xe0 + rank as u64));
+        let mut want_w1 = TensorF32::zeros(&[ne_local, dm, dh]);
+        erng.fill_normal(&mut want_w1.data, 0.02);
+        let mut want_w2 = TensorF32::zeros(&[ne_local, dh, dm]);
+        erng.fill_normal(&mut want_w2.data, 0.02);
+
+        let Ok(rt) = Runtime::open_default() else {
+            // No artifacts in this environment: the derivation above is
+            // still the contract; nothing further to execute.
+            return;
+        };
+        let s = FfnExpertShard::init(
+            Arc::new(rt),
+            ne_local,
+            dm,
+            dh,
+            vec![16],
+            seed,
+            rank,
+        );
+        assert_eq!(s.w1.data, want_w1.data);
+        assert_eq!(s.w2.data, want_w2.data);
+        assert!(s.b1.data.iter().all(|&v| v == 0.0));
+        assert!(s.b2.data.iter().all(|&v| v == 0.0));
+        assert_eq!(s.params().iter().map(|(n, _)| *n).collect::<Vec<_>>(),
+                   vec!["w1", "b1", "w2", "b2"]);
+        assert_eq!(s.param("w2").unwrap().shape, vec![ne_local, dh, dm]);
+        assert!(s.param("nope").is_none());
+    }
+}

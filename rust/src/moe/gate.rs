@@ -1,0 +1,426 @@
+//! Pluggable gating policies — the top of the paper's §3.1 hierarchy.
+//!
+//! The dispatch substrate (`DispatchPlan`, `ExpertBatch`, the Figure-2
+//! exchange) is fixed and high-performance; *which* experts a token
+//! visits and with what weight is a swappable policy behind the
+//! [`Gate`] trait.  Three gates ship with the system:
+//!
+//! * [`TopKSoftmaxGate`] — the seed behaviour: top-k selection + k-way
+//!   softmax over the selected raw scores.  Bit-identical to the free
+//!   functions [`topk_softmax`](super::topk_softmax) /
+//!   [`topk_softmax_bwd`](super::topk_softmax_bwd) it delegates to.
+//! * [`SwitchGate`] — Switch-Transformer top-1 routing with a capacity
+//!   factor: each token goes to its argmax expert weighted by the full
+//!   softmax probability; tokens over an expert's capacity are
+//!   *dropped* by zero-weighting their assignment.  Because every
+//!   assignment slot is still emitted (filler slots carry weight 0),
+//!   `DispatchPlan` and the combine kernel need no shape changes.
+//! * [`NoisyTopKGate`] — Shazeer-style noisy top-k: seeded Gaussian
+//!   noise (via [`crate::rng`]) is added to the scores before top-k
+//!   selection, so routing is exploratory yet exactly reproducible
+//!   from a seed.
+//!
+//! All gates operate on the *host* side over the `[nb, n_e]` score
+//! matrix the gate GEMM produced; the GEMM itself (scores = x·wg + bg)
+//! stays inside the layer's HLO artifact.  Every shipped gate also
+//! publishes the full row-softmax in `GateAssign::probs` to fund the
+//! per-step balance-loss metric — an O(nb·n_e) host pass, `d_model`×
+//! cheaper than the gate GEMM that precedes it (routing `idx`/`w`
+//! stay bit-identical either way).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{topk_softmax, topk_softmax_bwd, GateAssign};
+use crate::config::MoeConfig;
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+use crate::tensor::{ops, TensorF32};
+
+/// A routing policy over gate scores.
+///
+/// `k` is the *slot width* of the dispatch substrate (fixed by the
+/// compiled combine artifact): every gate must emit exactly `nb * k`
+/// assignments.  Gates that logically route to fewer experts (e.g.
+/// top-1 [`SwitchGate`]) pad with zero-weight filler slots.
+pub trait Gate: Send + Sync {
+    /// Short name for logs and config round-trips.
+    fn name(&self) -> &'static str;
+
+    /// Route one batch of scores `[nb, n_e]` into `nb * k` assignments.
+    fn route(&self, scores: &TensorF32, k: usize) -> Result<GateAssign>;
+
+    /// Backward of [`Gate::route`]: scatter the cotangent of the
+    /// assignment weights `dw: [nb * k]` into a full `[nb, n_e]`
+    /// score-gradient matrix.
+    fn route_bwd(&self, assign: &GateAssign, dw: &[f32], ne: usize) -> Result<TensorF32>;
+
+    /// Hook point for the auxiliary balance-loss gradient: a gate may
+    /// add `d(balance_loss)/d(scores)` into `dscores` given the
+    /// iteration's per-expert counts.  Default is a no-op; wiring a
+    /// real gradient through [`super::balance_loss`] is left for a
+    /// later PR (the forward value is already logged per step).
+    fn balance_grad(
+        &self,
+        _assign: &GateAssign,
+        _counts: &[u32],
+        _dscores: &mut TensorF32,
+    ) {
+    }
+}
+
+/// Construct a gate from the `[moe]` config section.
+///
+/// `seed` feeds the noise stream of [`NoisyTopKGate`] only; the other
+/// gates are deterministic functions of the scores.
+pub fn from_config(cfg: &MoeConfig, seed: u64) -> Result<Box<dyn Gate>> {
+    match cfg.gate.as_str() {
+        "topk" => Ok(Box::new(TopKSoftmaxGate)),
+        "switch" => Ok(Box::new(SwitchGate::new(cfg.capacity_factor as f32)?)),
+        "noisy_topk" => Ok(Box::new(NoisyTopKGate::new(
+            cfg.noise_std as f32,
+            seed ^ 0x901e,
+        )?)),
+        other => Err(Error::Config(format!(
+            "unknown gate `{other}` (expected topk | switch | noisy_topk)"
+        ))),
+    }
+}
+
+/// Full row-softmax of a score matrix (the balance-loss probabilities).
+fn full_softmax(scores: &TensorF32) -> Result<TensorF32> {
+    let mut p = scores.clone();
+    ops::softmax_rows(&mut p)?;
+    Ok(p)
+}
+
+// ---------------------------------------------------------------------
+// TopKSoftmaxGate
+// ---------------------------------------------------------------------
+
+/// The seed gate: top-k selection, k-way softmax over selected scores.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TopKSoftmaxGate;
+
+impl Gate for TopKSoftmaxGate {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn route(&self, scores: &TensorF32, k: usize) -> Result<GateAssign> {
+        let mut assign = topk_softmax(scores, k)?;
+        // idx/w above are bit-identical to the seed path; probs only
+        // feed the balance-loss monitor.
+        assign.probs = Some(full_softmax(scores)?);
+        Ok(assign)
+    }
+
+    fn route_bwd(&self, assign: &GateAssign, dw: &[f32], ne: usize) -> Result<TensorF32> {
+        topk_softmax_bwd(assign, dw, ne)
+    }
+}
+
+// ---------------------------------------------------------------------
+// SwitchGate
+// ---------------------------------------------------------------------
+
+/// Switch-Transformer top-1 gate with capacity factor and token drop.
+///
+/// Per row: `w = softmax(scores)[argmax]` if the argmax expert still
+/// has capacity, else `0` (the token is dropped — it still transits
+/// the exchange, weighted to zero, so no shapes change).  Slots
+/// `1..k` are filler assignments (next-ranked experts, weight 0).
+///
+/// Capacity is `ceil(capacity_factor * nb / n_e)` tokens per expert,
+/// counted over this worker's own routing decisions, greedily in
+/// token order (the Switch paper's policy).
+#[derive(Clone, Copy, Debug)]
+pub struct SwitchGate {
+    pub capacity_factor: f32,
+}
+
+impl SwitchGate {
+    pub fn new(capacity_factor: f32) -> Result<SwitchGate> {
+        if !capacity_factor.is_finite() || capacity_factor <= 0.0 {
+            return Err(Error::Config(format!(
+                "switch gate needs capacity_factor > 0, got {capacity_factor}"
+            )));
+        }
+        Ok(SwitchGate { capacity_factor })
+    }
+
+    /// Max tokens one expert accepts from a batch of `nb` rows.
+    pub fn capacity(&self, nb: usize, ne: usize) -> usize {
+        ((self.capacity_factor as f64 * nb as f64 / ne as f64).ceil() as usize).max(1)
+    }
+}
+
+impl Gate for SwitchGate {
+    fn name(&self) -> &'static str {
+        "switch"
+    }
+
+    fn route(&self, scores: &TensorF32, k: usize) -> Result<GateAssign> {
+        let (nb, ne) = scores.dims2()?;
+        if k == 0 || k > ne {
+            return Err(Error::Shape(format!("switch gate: {k} slots, {ne} experts")));
+        }
+        let probs = full_softmax(scores)?;
+        let cap = self.capacity(nb, ne);
+        let mut load = vec![0usize; ne];
+        let mut idx = Vec::with_capacity(nb * k);
+        let mut w = Vec::with_capacity(nb * k);
+        for i in 0..nb {
+            let top = ops::topk_indices(scores.row(i), k);
+            let e = top[0];
+            if load[e] < cap {
+                load[e] += 1;
+                w.push(probs.data[i * ne + e]);
+            } else {
+                w.push(0.0); // dropped: zero contribution to the combine
+            }
+            idx.push(e as u32);
+            for &f in &top[1..] {
+                idx.push(f as u32); // filler slots keep the nb*k shape
+                w.push(0.0);
+            }
+        }
+        Ok(GateAssign { nb, k, idx, w, probs: Some(probs) })
+    }
+
+    fn route_bwd(&self, assign: &GateAssign, dw: &[f32], ne: usize) -> Result<TensorF32> {
+        if dw.len() != assign.nb * assign.k {
+            return Err(Error::Shape("dw arity".into()));
+        }
+        let probs = assign
+            .probs
+            .as_ref()
+            .ok_or_else(|| Error::Shape("switch bwd: assignment lacks probs".into()))?;
+        let mut ds = TensorF32::zeros(&[assign.nb, ne]);
+        for i in 0..assign.nb {
+            let a = i * assign.k; // only slot 0 carries weight
+            if assign.w[a] == 0.0 {
+                continue; // dropped (or filler): w constant 0 ⇒ no grad
+            }
+            let e = assign.idx[a] as usize;
+            let p_e = probs.data[i * ne + e];
+            let d = dw[a];
+            // w = softmax(s)_e  ⇒  dw/ds_j = p_e (δ_je − p_j)
+            for j in 0..ne {
+                let p_j = probs.data[i * ne + j];
+                let delta = if j == e { 1.0 } else { 0.0 };
+                ds.data[i * ne + j] = d * p_e * (delta - p_j);
+            }
+        }
+        Ok(ds)
+    }
+}
+
+// ---------------------------------------------------------------------
+// NoisyTopKGate
+// ---------------------------------------------------------------------
+
+/// Noisy top-k: Gaussian noise on the scores before top-k selection.
+///
+/// The noise stream is derived from `(seed, call_counter)`, so a run
+/// is exactly reproducible from its seed while every iteration still
+/// sees fresh noise.  The noise is an additive constant w.r.t. the
+/// scores, so the backward pass is the plain top-k softmax Jacobian
+/// at the noisy operating point.
+#[derive(Debug)]
+pub struct NoisyTopKGate {
+    pub noise_std: f32,
+    seed: u64,
+    calls: AtomicU64,
+}
+
+impl NoisyTopKGate {
+    pub fn new(noise_std: f32, seed: u64) -> Result<NoisyTopKGate> {
+        if !noise_std.is_finite() || noise_std < 0.0 {
+            return Err(Error::Config(format!(
+                "noisy_topk gate needs noise_std >= 0, got {noise_std}"
+            )));
+        }
+        Ok(NoisyTopKGate { noise_std, seed, calls: AtomicU64::new(0) })
+    }
+}
+
+impl Gate for NoisyTopKGate {
+    fn name(&self) -> &'static str {
+        "noisy_topk"
+    }
+
+    fn route(&self, scores: &TensorF32, k: usize) -> Result<GateAssign> {
+        let call = self.calls.fetch_add(1, Ordering::Relaxed);
+        let mut noisy = scores.clone();
+        if self.noise_std > 0.0 {
+            let mut rng = Rng::new(self.seed ^ call.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            for v in noisy.data.iter_mut() {
+                *v += rng.normal() as f32 * self.noise_std;
+            }
+        }
+        let mut assign = topk_softmax(&noisy, k)?;
+        assign.probs = Some(full_softmax(&noisy)?);
+        Ok(assign)
+    }
+
+    fn route_bwd(&self, assign: &GateAssign, dw: &[f32], ne: usize) -> Result<TensorF32> {
+        // d(score + noise)/d(score) = 1: the seed Jacobian applies as-is.
+        topk_softmax_bwd(assign, dw, ne)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scores(nb: usize, ne: usize, seed: u64) -> TensorF32 {
+        let mut t = TensorF32::zeros(&[nb, ne]);
+        Rng::new(seed).fill_normal(&mut t.data, 1.0);
+        t
+    }
+
+    #[test]
+    fn topk_gate_matches_free_function_exactly() {
+        for seed in [1u64, 7, 99] {
+            let s = scores(32, 8, seed);
+            for k in [1usize, 2, 3] {
+                let want = topk_softmax(&s, k).unwrap();
+                let got = TopKSoftmaxGate.route(&s, k).unwrap();
+                assert_eq!(got.idx, want.idx, "seed {seed} k {k}: expert ids");
+                assert_eq!(got.w, want.w, "seed {seed} k {k}: weights (bitwise)");
+                // and the Jacobian path is the identical code
+                let dw: Vec<f32> = (0..32 * k).map(|i| (i as f32).sin()).collect();
+                let a = TopKSoftmaxGate.route_bwd(&got, &dw, 8).unwrap();
+                let b = topk_softmax_bwd(&want, &dw, 8).unwrap();
+                assert_eq!(a.data, b.data);
+            }
+        }
+    }
+
+    #[test]
+    fn switch_gate_respects_capacity_and_zero_weights_drops() {
+        let (nb, ne, k) = (64, 4, 2);
+        let s = scores(nb, ne, 3);
+        let gate = SwitchGate::new(0.5).unwrap(); // tight: forces drops
+        let cap = gate.capacity(nb, ne);
+        let a = gate.route(&s, k).unwrap();
+        assert_eq!(a.idx.len(), nb * k);
+        let mut kept = vec![0usize; ne];
+        let mut dropped = 0usize;
+        for i in 0..nb {
+            // slot 0 is the routed expert; slots 1.. are zero-weight filler
+            for j in 1..k {
+                assert_eq!(a.w[i * k + j], 0.0, "filler slot must be zero-weight");
+            }
+            let w0 = a.w[i * k];
+            let e0 = a.idx[i * k] as usize;
+            assert!(e0 < ne);
+            if w0 == 0.0 {
+                dropped += 1;
+            } else {
+                assert!(w0 > 0.0 && w0 <= 1.0);
+                kept[e0] += 1;
+            }
+        }
+        for (e, &c) in kept.iter().enumerate() {
+            assert!(c <= cap, "expert {e} kept {c} tokens, capacity {cap}");
+        }
+        // a 0.5 capacity factor over a random batch must actually drop
+        assert!(dropped > 0, "expected drops at capacity_factor=0.5");
+        // conservation: kept + dropped = nb
+        assert_eq!(kept.iter().sum::<usize>() + dropped, nb);
+    }
+
+    #[test]
+    fn switch_gate_generous_capacity_drops_nothing() {
+        let (nb, ne, k) = (40, 8, 2);
+        let s = scores(nb, ne, 11);
+        let gate = SwitchGate::new(8.0).unwrap();
+        let a = gate.route(&s, k).unwrap();
+        for i in 0..nb {
+            assert!(a.w[i * k] > 0.0, "token {i} dropped despite slack capacity");
+        }
+    }
+
+    #[test]
+    fn switch_bwd_matches_finite_diff() {
+        let (nb, ne, k) = (6, 5, 2);
+        let s = scores(nb, ne, 9);
+        let gate = SwitchGate::new(8.0).unwrap(); // no drops: smooth region
+        let a = gate.route(&s, k).unwrap();
+        let mut rng = Rng::new(10);
+        let dw: Vec<f32> = (0..nb * k).map(|_| rng.normal() as f32).collect();
+        let ds = gate.route_bwd(&a, &dw, ne).unwrap();
+        let eps = 1e-3f32;
+        for i in 0..nb {
+            for e in 0..ne {
+                let mut sp = s.clone();
+                sp.data[i * ne + e] += eps;
+                let mut sm = s.clone();
+                sm.data[i * ne + e] -= eps;
+                let ap = gate.route(&sp, k).unwrap();
+                let am = gate.route(&sm, k).unwrap();
+                if ap.idx != a.idx || am.idx != a.idx {
+                    continue; // argmax set changed: not differentiable here
+                }
+                let f = |x: &GateAssign| -> f32 {
+                    (0..nb * k).map(|a| x.w[a] * dw[a]).sum()
+                };
+                let fd = (f(&ap) - f(&am)) / (2.0 * eps);
+                assert!(
+                    (fd - ds.data[i * ne + e]).abs() < 2e-3,
+                    "i={i} e={e}: fd={fd} ds={}",
+                    ds.data[i * ne + e]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn noisy_gate_deterministic_under_seed() {
+        let s = scores(24, 6, 5);
+        let a = NoisyTopKGate::new(0.8, 42).unwrap();
+        let b = NoisyTopKGate::new(0.8, 42).unwrap();
+        // same seed ⇒ identical call sequences
+        for _ in 0..3 {
+            let ra = a.route(&s, 2).unwrap();
+            let rb = b.route(&s, 2).unwrap();
+            assert_eq!(ra.idx, rb.idx);
+            assert_eq!(ra.w, rb.w);
+        }
+        // successive calls draw fresh noise from the stream
+        let r1 = a.route(&s, 2).unwrap();
+        let r2 = a.route(&s, 2).unwrap();
+        assert!(r1.idx != r2.idx || r1.w != r2.w, "noise must vary per call");
+        // a different seed routes differently
+        let c = NoisyTopKGate::new(0.8, 43).unwrap();
+        let rc = c.route(&s, 2).unwrap();
+        let ra = NoisyTopKGate::new(0.8, 42).unwrap().route(&s, 2).unwrap();
+        assert!(rc.idx != ra.idx || rc.w != ra.w);
+    }
+
+    #[test]
+    fn noisy_gate_zero_std_is_plain_topk() {
+        let s = scores(16, 5, 8);
+        let g = NoisyTopKGate::new(0.0, 1).unwrap();
+        let want = topk_softmax(&s, 2).unwrap();
+        let got = g.route(&s, 2).unwrap();
+        assert_eq!(got.idx, want.idx);
+        assert_eq!(got.w, want.w);
+    }
+
+    #[test]
+    fn from_config_selects_and_validates() {
+        let mut cfg = MoeConfig::default();
+        assert_eq!(from_config(&cfg, 1).unwrap().name(), "topk");
+        cfg.gate = "switch".into();
+        assert_eq!(from_config(&cfg, 1).unwrap().name(), "switch");
+        cfg.gate = "noisy_topk".into();
+        assert_eq!(from_config(&cfg, 1).unwrap().name(), "noisy_topk");
+        cfg.gate = "mystery".into();
+        assert!(from_config(&cfg, 1).is_err());
+        cfg.gate = "switch".into();
+        cfg.capacity_factor = 0.0;
+        assert!(from_config(&cfg, 1).is_err());
+    }
+}

@@ -1,18 +1,33 @@
-//! MoE dispatch machinery — the paper's §3.2/§4 logic on the host side.
+//! MoE dispatch machinery — the paper's §3.2/§4 logic on the host side,
+//! organised as the §3.1 *hierarchical interface*:
 //!
-//! In stage mode the Rust coordinator owns everything between the HLO
-//! programs: top-k gating over the gate scores, counting tokens per
-//! (worker, expert), building the [`DispatchPlan`] (the *local data
-//! shuffle*), packing rows for the Figure-2 all-to-all (the *global data
-//! exchange*), re-batching incoming rows per local expert with
-//! power-of-two capacity [`bucket_for`] padding, and the reverse path.
+//! * **Gate policy** ([`gate`]) — the [`Gate`] trait routes score rows
+//!   into assignments.  [`TopKSoftmaxGate`] (seed behaviour),
+//!   [`SwitchGate`] (top-1 + capacity factor + token drop) and
+//!   [`NoisyTopKGate`] (seeded exploration noise) are interchangeable.
+//! * **Expert shard** ([`expert`]) — the [`ExpertShard`] trait owns one
+//!   worker's expert parameters and runs the bucketed HLO executables;
+//!   [`FfnExpertShard`] is the seed two-GEMM FFN.
+//! * **Dispatch substrate** (this module) — fixed high-performance
+//!   plumbing both plug into: counting tokens per (worker, expert),
+//!   building the [`DispatchPlan`] (the *local data shuffle*), packing
+//!   rows for the Figure-2 all-to-all (the *global data exchange*),
+//!   re-batching incoming rows per local expert with power-of-two
+//!   capacity [`bucket_for`] padding, and the reverse path.
+//!
+//! Layers are assembled from the three levels by
+//! `coordinator::MoeLayerBuilder`, driven by the `[moe]` config section.
 //!
 //! Slot convention (shared with `python/compile/kernels/scatter.py`):
 //! assignment `a = token*k + j` gets packed position `slots[a]`; packed
 //! rows are ordered by (destination worker, local expert, token).
 
+pub mod expert;
+pub mod gate;
 mod monitor;
 
+pub use expert::{ExpertShard, FfnExpertShard};
+pub use gate::{Gate, NoisyTopKGate, SwitchGate, TopKSoftmaxGate};
 pub use monitor::{balance_loss, LoadMonitor};
 
 use crate::error::{Error, Result};
@@ -26,8 +41,32 @@ pub struct GateAssign {
     pub k: usize,
     /// Chosen expert per assignment, `[nb * k]`, token-major.
     pub idx: Vec<u32>,
-    /// Gate weight per assignment, `[nb * k]`.
+    /// Gate weight per assignment, `[nb * k]`.  A zero weight marks a
+    /// dropped or filler assignment (capacity gates): the row still
+    /// transits the exchange but contributes nothing to the combine.
     pub w: Vec<f32>,
+    /// Full softmax probabilities `[nb, n_e]`, when the gate computes
+    /// them (feeds [`balance_loss`] and capacity-gate backward; `None`
+    /// on the raw [`topk_softmax`] fast path).
+    pub probs: Option<TensorF32>,
+}
+
+impl GateAssign {
+    /// Per-global-expert histogram of *kept* (weight > 0) assignments.
+    ///
+    /// Distinct from `DispatchPlan::counts_global`, which counts every
+    /// slot because every slot transits the exchange: capacity gates
+    /// emit zero-weight dropped/filler slots that carry no signal, so
+    /// load metrics (balance loss, monitor) must count only kept ones.
+    pub fn kept_counts(&self, ne: usize) -> Vec<u32> {
+        let mut counts = vec![0u32; ne];
+        for (a, &e) in self.idx.iter().enumerate() {
+            if self.w[a] > 0.0 {
+                counts[e as usize] += 1;
+            }
+        }
+        counts
+    }
 }
 
 /// Select top-k experts per row of `scores: [nb, n_e]` and softmax the
@@ -50,7 +89,7 @@ pub fn topk_softmax(scores: &TensorF32, k: usize) -> Result<GateAssign> {
         ops::softmax_slice(&mut sel);
         w.extend_from_slice(&sel);
     }
-    Ok(GateAssign { nb, k, idx, w })
+    Ok(GateAssign { nb, k, idx, w, probs: None })
 }
 
 /// Backward of [`topk_softmax`]: scatter the k-way softmax Jacobian into
@@ -94,6 +133,10 @@ pub struct DispatchPlan {
     /// Per destination worker, rows per local expert (the Figure-2
     /// "number of samples assigned to each expert on each worker").
     pub send_counts: Vec<Vec<u32>>,
+    /// Tokens this worker routed to each *global* expert, `[ne_global]`
+    /// — the counting-sort histogram, exposed so callers (load monitor,
+    /// balance loss) never recount the assignments.
+    pub counts_global: Vec<u32>,
 }
 
 impl DispatchPlan {
@@ -150,6 +193,7 @@ impl DispatchPlan {
             slots,
             send_rows,
             send_counts,
+            counts_global,
         })
     }
 
@@ -403,6 +447,18 @@ mod tests {
     }
 
     #[test]
+    fn kept_counts_ignore_zero_weight_slots() {
+        let a = GateAssign {
+            nb: 2,
+            k: 2,
+            idx: vec![0, 1, 2, 1],
+            w: vec![0.5, 0.0, 0.7, 0.3],
+            probs: None,
+        };
+        assert_eq!(a.kept_counts(4), vec![1, 1, 1, 0]);
+    }
+
+    #[test]
     fn topk_rejects_bad_k() {
         let s = scores(4, 2, 1);
         assert!(topk_softmax(&s, 0).is_err());
@@ -429,6 +485,11 @@ mod tests {
         for w in 0..4 {
             let c: u32 = plan.send_counts[w].iter().sum();
             assert_eq!(c as usize, plan.send_rows[w]);
+        }
+        // exposed global histogram is the same data, unsliced
+        assert_eq!(plan.counts_global.iter().sum::<u32>(), 100);
+        for w in 0..4 {
+            assert_eq!(&plan.counts_global[w * 2..(w + 1) * 2], &plan.send_counts[w][..]);
         }
     }
 

@@ -131,10 +131,11 @@ fn staged_layer_equals_fused_artifact() {
     let mut b2 = TensorF32::zeros(&[ne_global, dm]);
     for (rank, layer, _, _) in &results {
         let off = rank * nel;
-        w1.data[off * dm * dh..(off + nel) * dm * dh].copy_from_slice(&layer.w1.data);
-        b1.data[off * dh..(off + nel) * dh].copy_from_slice(&layer.b1.data);
-        w2.data[off * dh * dm..(off + nel) * dh * dm].copy_from_slice(&layer.w2.data);
-        b2.data[off * dm..(off + nel) * dm].copy_from_slice(&layer.b2.data);
+        let shard = |name: &str| &layer.expert().param(name).unwrap().data;
+        w1.data[off * dm * dh..(off + nel) * dm * dh].copy_from_slice(shard("w1"));
+        b1.data[off * dh..(off + nel) * dh].copy_from_slice(shard("b1"));
+        w2.data[off * dh * dm..(off + nel) * dh * dm].copy_from_slice(shard("w2"));
+        b2.data[off * dm..(off + nel) * dm].copy_from_slice(shard("b2"));
     }
     let mut x = TensorF32::zeros(&[l0.nb, dm]);
     Rng::new(99).fill_normal(&mut x.data, 1.0);
@@ -150,11 +151,6 @@ fn staged_layer_equals_fused_artifact() {
         assert_close(&grads.dbg, &fused.dbg, 5e-4, "dbg");
         // ---- expert shard grads = W × fused shard (W identical batches) ----
         let off = rank * nel;
-        let slice = |t: &TensorF32, per: usize| TensorF32 {
-            shape: vec![nel, per / dh.max(1), 0], // unused
-            data: vec![],
-        };
-        let _ = slice; // clarity below instead
         let take = |t: &TensorF32, stride: usize| -> Vec<f32> {
             t.data[off * stride..(off + nel) * stride].to_vec()
         };
@@ -170,10 +166,10 @@ fn staged_layer_equals_fused_artifact() {
                 );
             }
         };
-        cmp_scaled(&grads.dw1, &fused.dw1, dm * dh, "dw1");
-        cmp_scaled(&grads.db1, &fused.db1, dh, "db1");
-        cmp_scaled(&grads.dw2, &fused.dw2, dh * dm, "dw2");
-        cmp_scaled(&grads.db2, &fused.db2, dm, "db2");
+        cmp_scaled(grads.expert_grad("w1").unwrap(), &fused.dw1, dm * dh, "dw1");
+        cmp_scaled(grads.expert_grad("b1").unwrap(), &fused.db1, dh, "db1");
+        cmp_scaled(grads.expert_grad("w2").unwrap(), &fused.dw2, dh * dm, "dw2");
+        cmp_scaled(grads.expert_grad("b2").unwrap(), &fused.db2, dm, "db2");
     }
 }
 

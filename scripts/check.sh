@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 gate: format, lint, test. Run from anywhere in the repo.
+#
+#   scripts/check.sh            # fmt --check + clippy -D warnings + tests
+#   scripts/check.sh --fix      # rustfmt in write mode first
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH — install the rust toolchain" >&2
+    echo "       (rustup.rs, or the image's baked-in rust_pallas toolchain)" >&2
+    exit 1
+fi
+
+if [[ "${1:-}" == "--fix" ]]; then
+    cargo fmt
+else
+    cargo fmt --check
+fi
+cargo clippy --all-targets -- -D warnings
+cargo test -q
+echo "check.sh: all green"
