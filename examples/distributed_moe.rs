@@ -6,7 +6,9 @@
 //! # compare routing policies on the same seed:
 //! cargo run --release --example distributed_moe -- --gate switch --capacity-factor 1.25
 //! cargo run --release --example distributed_moe -- --gate noisy_topk --noise-std 0.5
-//! # or select the gate from a config file's [moe] section:
+//! # pipeline the exchanges against expert compute (§4 overlap):
+//! cargo run --release --example distributed_moe -- --overlap --chunks 4
+//! # or select everything from a config file's [moe]/[comm] sections:
 //! cargo run --release --example distributed_moe -- --config moe.toml
 //! ```
 //!
@@ -23,7 +25,7 @@ use std::sync::Arc;
 use fastmoe::bench::Table;
 use fastmoe::cli::Args;
 use fastmoe::comm::{run_workers, Comm};
-use fastmoe::config::MoeConfig;
+use fastmoe::config::{CommConfig, MoeConfig};
 use fastmoe::coordinator::{MoeLayerBuilder, MoeLayerTrainer};
 use fastmoe::metrics::{Counters, Stopwatch};
 use fastmoe::rng::Rng;
@@ -33,7 +35,7 @@ use fastmoe::tensor::TensorF32;
 use fastmoe::util;
 
 fn main() -> fastmoe::Result<()> {
-    let args = Args::from_env(&[])?;
+    let args = Args::from_env(&["overlap", "no-overlap"])?;
     let workers = args.usize_or("workers", 4)?;
     let iters = args.usize_or("iters", 8)?;
     let seed = args.u64_or("seed", 7)?;
@@ -42,17 +44,26 @@ fn main() -> fastmoe::Result<()> {
         NetPreset::parse(&args.str_or("net", "ib-edr")).unwrap_or(NetPreset::IbEdr),
     );
 
-    // [moe] section (if a config is given) + CLI overrides: this is the
-    // whole story of selecting a non-default gate.
+    // [moe]/[comm] sections (if a config is given) + CLI overrides:
+    // this is the whole story of selecting a non-default gate or the
+    // pipelined exchange schedule.
     let moe_cfg = MoeConfig::from_args(&args)?;
+    let comm_cfg = CommConfig::from_args(&args)?;
 
     let rt = Arc::new(Runtime::open_default()?);
     println!(
-        "distributed MoE layer: {workers} workers, {iters} iters, gate `{}`",
-        moe_cfg.gate
+        "distributed MoE layer: {workers} workers, {iters} iters, gate `{}`, overlap {}",
+        moe_cfg.gate,
+        if comm_cfg.overlap {
+            format!("on ({} chunks)", comm_cfg.chunks)
+        } else {
+            "off".into()
+        }
     );
 
-    let builder = MoeLayerBuilder::from_config(&moe_cfg).seed(seed);
+    let builder = MoeLayerBuilder::from_config(&moe_cfg)
+        .comm_config(&comm_cfg)
+        .seed(seed);
     let results = run_workers(workers, {
         let rt = rt.clone();
         move |mut h| {

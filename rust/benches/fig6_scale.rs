@@ -1,4 +1,5 @@
-//! Figure 6: cross-worker scalability of the distributed MoE layer.
+//! Figure 6: cross-worker scalability of the distributed MoE layer,
+//! blocking vs pipelined (overlap) exchange.
 //!
 //! Throughput (matmul FLOPs of the layer, fwd+bwd) against the number
 //! of expert-parallel workers.  The Figure-2 exchange runs on the real
@@ -14,34 +15,48 @@
 //! slowed by the same factor — otherwise communication would be
 //! invisibly cheap and the figure's shape unreproducible).
 //!
+//! Every worker count is scored twice from the same measured compute
+//! and exchange volume: blocking (`wire + compute`) and overlapped
+//! (`max(wire, compute)` per chunk with fill/drain ends — see
+//! `sim::NetModel::moe_step_overlapped`), quantifying §4's win of
+//! hiding the global exchange behind expert computation.
+//!
 //! ```bash
 //! cargo bench --bench fig6_scale                    # scaled IB-EDR (default)
-//! cargo bench --bench fig6_scale -- --net ib-edr    # unscaled wire time
+//! cargo bench --bench fig6_scale -- --overlap       # run the pipelined layer path
+//! cargo bench --bench fig6_scale -- --chunks 8      # overlap granularity
+//! cargo bench --bench fig6_scale -- --json out.json # machine-readable record
 //! cargo bench --bench fig6_scale -- --net none      # ablation: free network
 //! ```
 //!
 //! Expected shape (paper Fig. 6): going 1→2 workers roughly *halves*
 //! per-worker efficiency (communication appears); 2→8 grows aggregate
-//! throughput sub-linearly (paper: 10 → 25 TFLOPs, ≈2.5×).
+//! throughput sub-linearly (paper: 10 → 25 TFLOPs, ≈2.5×), and the
+//! overlapped score recovers part of the gap at every W ≥ 2.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use fastmoe::bench::Table;
 use fastmoe::cli::Args;
 use fastmoe::comm::{run_workers, Comm};
-use fastmoe::coordinator::DistMoeLayer;
+use fastmoe::coordinator::MoeLayerBuilder;
 use fastmoe::metrics::{Counters, CsvWriter, Stopwatch};
 use fastmoe::rng::Rng;
 use fastmoe::runtime::Runtime;
 use fastmoe::sim::{NetModel, NetPreset};
 use fastmoe::tensor::TensorF32;
 use fastmoe::util::gflops;
+use fastmoe::util::json::Json;
 
 fn main() -> fastmoe::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
-    let args = Args::parse(argv, &[])?;
+    let args = Args::parse(argv, &["overlap"])?;
     let iters = args.usize_or("iters", 4)?;
     let net_name = args.str_or("net", "ib-edr-scaled");
+    let chunks = args.usize_or("chunks", 4)?.max(1);
+    let overlap_path = args.has_flag("overlap");
+    let json_path = args.get("json").map(|s| s.to_string());
     // V100 fp32 ≈ 14 TFLOP/s against 12.5 GB/s EDR (the paper's nodes)
     const PAPER_DEVICE_GFLOPS: f64 = 14_000.0;
     let rt = Arc::new(Runtime::open_default()?);
@@ -56,29 +71,40 @@ fn main() -> fastmoe::Result<()> {
         .collect();
     worker_counts.sort_unstable();
     println!(
-        "Figure 6 — distributed MoE layer scalability (iters={iters}, net={net_name})\n"
+        "Figure 6 — distributed MoE layer scalability \
+         (iters={iters}, net={net_name}, chunks={chunks}, measured path: {})\n",
+        if overlap_path { "overlapped" } else { "blocking" }
     );
 
     let mut table = Table::new(&[
-        "workers", "experts", "compute_s/dev", "wire_ms/iter", "agg_GFLOP/s",
-        "efficiency", "a2a_MB/iter",
+        "workers", "experts", "compute_s/dev", "wire_ms/iter", "blocking_ms/iter",
+        "overlap_ms/iter", "speedup", "agg_GFLOP/s", "efficiency", "a2a_MB/iter",
     ]);
     let mut csv = CsvWriter::create(
         "runs/fig6_scale.csv",
-        &["workers", "agg_gflops", "compute_s_per_dev", "wire_ms_per_iter", "a2a_bytes_per_iter"],
+        &[
+            "workers", "agg_gflops", "agg_gflops_overlap", "compute_s_per_dev",
+            "wire_ms_per_iter", "blocking_ms_per_iter", "overlap_ms_per_iter",
+            "a2a_bytes_per_iter",
+        ],
     )?;
     let mut base: Option<f64> = None;
     let mut device_gflops: Option<f64> = None;
+    let mut json_rows: Vec<Json> = Vec::new();
 
     for &w in &worker_counts {
         let rt2 = rt.clone();
         let results = run_workers(w, move |mut h| {
-            let layer = DistMoeLayer::init(rt2.clone(), w, h.rank(), 11)?;
+            let layer = MoeLayerBuilder::new()
+                .seed(11)
+                .overlap(overlap_path)
+                .chunks(chunks)
+                .build(rt2.clone(), w, h.rank())?;
             layer.warm()?;
             let mut counters = Counters::new();
             let mut rng = Rng::new(100 + h.rank() as u64);
             let mut flops = 0.0f64;
-            h.barrier();
+            h.barrier()?;
             let watch = Stopwatch::start();
             for _ in 0..iters {
                 let mut x = TensorF32::zeros(&[layer.nb, layer.dm]);
@@ -88,7 +114,7 @@ fn main() -> fastmoe::Result<()> {
                 let _ = layer.backward(&mut h, &state, &dy, &mut counters)?;
                 flops += 3.0 * layer.flops(&state);
             }
-            h.barrier();
+            h.barrier()?;
             Ok((watch.secs(), flops, counters.get("moe_a2a_bytes")))
         })?;
 
@@ -99,6 +125,7 @@ fn main() -> fastmoe::Result<()> {
         let bytes_per_iter =
             results.iter().map(|r| r.2).max().unwrap_or(0) as usize / iters.max(1);
         let compute_per_dev = wall / w as f64;
+        let compute_per_iter = compute_per_dev / iters.max(1) as f64;
 
         // calibrate the scaled net from the single-worker measurement
         if device_gflops.is_none() {
@@ -118,8 +145,12 @@ fn main() -> fastmoe::Result<()> {
         };
 
         let wire_per_iter = net.all_to_all(w, bytes_per_iter);
-        let sim_iter = compute_per_dev / iters as f64 + wire_per_iter;
-        let agg = gflops(total_flops, sim_iter * iters as f64);
+        let blocking_iter = net.moe_step_blocking(w, bytes_per_iter, compute_per_iter);
+        let overlap_iter =
+            net.moe_step_overlapped(w, bytes_per_iter, compute_per_iter, chunks);
+        let speedup = blocking_iter / overlap_iter.max(1e-12);
+        let agg = gflops(total_flops, blocking_iter * iters as f64);
+        let agg_overlap = gflops(total_flops, overlap_iter * iters as f64);
         let ne_global = rt
             .manifest
             .artifact(&format!("gate_fwd_w{w}"))
@@ -134,6 +165,9 @@ fn main() -> fastmoe::Result<()> {
             ne_global.to_string(),
             format!("{compute_per_dev:.2}"),
             format!("{:.1}", wire_per_iter * 1e3),
+            format!("{:.1}", blocking_iter * 1e3),
+            format!("{:.1}", overlap_iter * 1e3),
+            format!("{speedup:.2}x"),
             format!("{agg:.2}"),
             format!("{:.0}%", eff * 100.0),
             format!("{:.2}", bytes_per_iter as f64 / 1e6),
@@ -141,18 +175,49 @@ fn main() -> fastmoe::Result<()> {
         csv.rowf(&[
             w as f64,
             agg,
+            agg_overlap,
             compute_per_dev,
             wire_per_iter * 1e3,
+            blocking_iter * 1e3,
+            overlap_iter * 1e3,
             bytes_per_iter as f64,
         ])?;
+        let mut row = BTreeMap::new();
+        row.insert("workers".into(), Json::Num(w as f64));
+        row.insert("chunks".into(), Json::Num(chunks as f64));
+        row.insert("compute_s_per_iter".into(), Json::Num(compute_per_iter));
+        row.insert("a2a_bytes_per_iter".into(), Json::Num(bytes_per_iter as f64));
+        row.insert("wire_s_per_iter".into(), Json::Num(wire_per_iter));
+        row.insert("blocking_s_per_iter".into(), Json::Num(blocking_iter));
+        row.insert("overlapped_s_per_iter".into(), Json::Num(overlap_iter));
+        row.insert("speedup".into(), Json::Num(speedup));
+        row.insert("agg_gflops_blocking".into(), Json::Num(agg));
+        row.insert("agg_gflops_overlapped".into(), Json::Num(agg_overlap));
+        json_rows.push(Json::Object(row));
         println!(
-            "  {w} workers: {agg:.2} GFLOP/s aggregate ({:.1} ms wire / {:.0} ms compute per iter)",
+            "  {w} workers: blocking {:.1} ms/iter vs overlapped {:.1} ms/iter \
+             ({speedup:.2}x; {:.1} ms wire, {:.0} ms compute)",
+            blocking_iter * 1e3,
+            overlap_iter * 1e3,
             wire_per_iter * 1e3,
-            compute_per_dev / iters as f64 * 1e3
+            compute_per_iter * 1e3,
         );
     }
 
     println!("\n{}", table.render());
     println!("runs/fig6_scale.csv written");
+    if let Some(path) = json_path {
+        let mut root = BTreeMap::new();
+        root.insert("bench".into(), Json::Str("fig6_scale".into()));
+        root.insert("net".into(), Json::Str(net_name));
+        root.insert(
+            "measured_path".into(),
+            Json::Str(if overlap_path { "overlapped".into() } else { "blocking".into() }),
+        );
+        root.insert("iters".into(), Json::Num(iters as f64));
+        root.insert("rows".into(), Json::Array(json_rows));
+        std::fs::write(&path, Json::Object(root).to_string())?;
+        println!("{path} written");
+    }
     Ok(())
 }

@@ -11,14 +11,22 @@
 //!   nodes" topology; `fastmoe dist-moe --backend tcp` spawns worker
 //!   *processes*).
 //!
-//! Provided collectives:
+//! The interface is two-level:
 //!
-//! * [`Comm::all_to_all_v`] — the Figure-2 protocol: phase 1 exchanges
-//!   per-peer *counts*, receivers size their buffers, phase 2 exchanges
-//!   the data.
-//! * [`Comm::all_reduce_sum`] — ring all-reduce (reduce-scatter +
-//!   all-gather), the gradient-sync primitive.
-//! * `all_gather`, `broadcast`, `barrier`, subgroup all-reduce.
+//! * **Transport** — blocking `send`/`recv` plus the nonblocking
+//!   [`Comm::isend`]/[`Comm::irecv`], which return [`CommRequest`]
+//!   handles completed by [`Comm::wait`]/[`Comm::wait_all`], and
+//!   [`Comm::flush`] to push queued frames ahead of a long compute.
+//!   The handles are what lets the MoE layer keep tokens on the wire
+//!   while the expert shard computes (§4's overlap).
+//! * **Collectives** — [`Comm::all_to_all_v`] (the Figure-2 protocol:
+//!   phase 1 exchanges per-peer *counts*, phase 2 the data) decomposes
+//!   into per-peer requests via [`Comm::all_to_all_v_start`], so
+//!   callers can consume arrivals as they land; plus
+//!   [`Comm::all_reduce_sum`] (ring reduce-scatter + all-gather),
+//!   `all_gather`, `broadcast`, subgroup all-reduce, and `barrier`
+//!   (dissemination, ⌈log₂ n⌉ rounds; the legacy O(n²) empty
+//!   all-to-all survives as [`Comm::barrier_a2a`]).
 //!
 //! Every handle records bytes sent per collective, which
 //! [`crate::sim::NetModel`] converts into simulated wire time for the
@@ -39,6 +47,127 @@ pub(crate) struct Msg {
     pub data: Vec<f32>,
 }
 
+/// Handle to an in-flight point-to-point operation, returned by
+/// [`Comm::isend`] / [`Comm::irecv`] and completed by [`Comm::wait`] /
+/// [`Comm::wait_all`].
+///
+/// Both backends buffer sends, so a send request is complete the
+/// moment it is issued; a receive request is a bookmark for a
+/// `(src, tag)` match that `wait` claims from the wire (or the parked
+/// out-of-order queue) when the caller is ready for the data.
+#[derive(Debug)]
+pub struct CommRequest {
+    kind: ReqKind,
+}
+
+#[derive(Debug)]
+enum ReqKind {
+    /// isend already queued its payload; nothing left to wait for.
+    SendDone,
+    /// irecv bookmark, completed by a matching wait.
+    Recv { src: usize, tag: u64 },
+}
+
+impl CommRequest {
+    pub(crate) fn send_done() -> CommRequest {
+        CommRequest { kind: ReqKind::SendDone }
+    }
+
+    pub(crate) fn recv_from(src: usize, tag: u64) -> CommRequest {
+        CommRequest { kind: ReqKind::Recv { src, tag } }
+    }
+
+    /// The `(src, tag)` a receive request is still waiting on, if any.
+    pub fn pending_recv(&self) -> Option<(usize, u64)> {
+        match self.kind {
+            ReqKind::SendDone => None,
+            ReqKind::Recv { src, tag } => Some((src, tag)),
+        }
+    }
+}
+
+/// An [`Comm::all_to_all_v`] whose payload phase is still in flight:
+/// one receive request per peer, which the caller can complete one at
+/// a time ([`PendingA2a::wait_peer`]) as arrivals land — the hook the
+/// pipelined MoE layer uses — or all at once ([`PendingA2a::finish`]).
+pub struct PendingA2a {
+    /// Outstanding per-peer receive requests (`None` = done or self).
+    reqs: Vec<Option<CommRequest>>,
+    /// Completed per-peer buffers (self's loopback buffer pre-filled).
+    bufs: Vec<Option<Vec<f32>>>,
+    /// Float counts announced in phase 1, validated on completion.
+    expected: Vec<usize>,
+}
+
+impl PendingA2a {
+    /// Floats peer `p` announced in the count phase.
+    pub fn expected(&self, p: usize) -> usize {
+        self.expected[p]
+    }
+
+    fn check(p: usize, want: usize, data: Vec<f32>) -> Result<Vec<f32>> {
+        if data.len() != want {
+            return Err(Error::Comm(format!(
+                "a2a: peer {p} announced {want} floats, sent {}",
+                data.len()
+            )));
+        }
+        Ok(data)
+    }
+
+    /// Complete one peer's payload receive (self completes instantly).
+    pub fn wait_peer<C: Comm + ?Sized>(
+        &mut self,
+        comm: &mut C,
+        p: usize,
+    ) -> Result<Vec<f32>> {
+        if let Some(buf) = self.bufs[p].take() {
+            return Ok(buf);
+        }
+        let req = self.reqs[p]
+            .take()
+            .ok_or_else(|| Error::Comm(format!("a2a: peer {p} already consumed")))?;
+        let data = comm.wait(req)?.unwrap_or_default();
+        Self::check(p, self.expected[p], data)
+    }
+
+    /// Complete every outstanding receive (in arrival order where the
+    /// backend supports it) and return the buffers indexed by peer.
+    ///
+    /// Errors if any peer was already drained via
+    /// [`PendingA2a::wait_peer`] — its data was handed out and cannot
+    /// appear in the result; drain the rest peer-by-peer instead.
+    pub fn finish<C: Comm + ?Sized>(mut self, comm: &mut C) -> Result<Vec<Vec<f32>>> {
+        let mut peers = Vec::new();
+        let mut reqs = Vec::new();
+        for (p, slot) in self.reqs.iter_mut().enumerate() {
+            match slot.take() {
+                Some(req) => {
+                    peers.push(p);
+                    reqs.push(req);
+                }
+                None if self.bufs[p].is_none() => {
+                    return Err(Error::Comm(format!(
+                        "a2a: peer {p} already consumed via wait_peer; \
+                         finish cannot return its buffer"
+                    )));
+                }
+                None => {}
+            }
+        }
+        let datas = comm.wait_all(reqs)?;
+        for (&p, data) in peers.iter().zip(datas) {
+            self.bufs[p] =
+                Some(Self::check(p, self.expected[p], data.unwrap_or_default())?);
+        }
+        Ok(self
+            .bufs
+            .into_iter()
+            .map(|b| b.unwrap_or_default())
+            .collect())
+    }
+}
+
 /// The process-group interface: p2p primitives required, collectives
 /// provided (identical across backends).
 pub trait Comm {
@@ -56,20 +185,87 @@ pub trait Comm {
     /// Monotonic per-handle collective sequence number (tag namespace).
     fn next_seq(&mut self) -> u64;
 
-    /// Synchronisation barrier. Default: an empty all-to-all (every
-    /// pair exchanges a count) — O(n²) messages but always correct.
+    /// Nonblocking send: queue `data` for `dst` and return a request
+    /// handle immediately.  The default delegates to the buffered
+    /// blocking `send`; backends override to defer flushing.
+    fn isend(&mut self, dst: usize, tag: u64, data: Vec<f32>) -> Result<CommRequest> {
+        self.send(dst, tag, data)?;
+        Ok(CommRequest::send_done())
+    }
+
+    /// Nonblocking receive: post interest in `(src, tag)` and return a
+    /// handle; the payload is claimed by [`Comm::wait`].
+    fn irecv(&mut self, src: usize, tag: u64) -> Result<CommRequest> {
+        Ok(CommRequest::recv_from(src, tag))
+    }
+
+    /// Block until `req` completes.  Send requests yield `None`,
+    /// receive requests yield the payload.
+    fn wait(&mut self, req: CommRequest) -> Result<Option<Vec<f32>>> {
+        match req.kind {
+            ReqKind::SendDone => Ok(None),
+            ReqKind::Recv { src, tag } => self.recv(src, tag).map(Some),
+        }
+    }
+
+    /// Complete a batch of requests; result `i` belongs to request `i`.
+    /// Backends override this to consume arrivals in whatever order
+    /// the wire delivers them, instead of the posted order.
+    fn wait_all(&mut self, reqs: Vec<CommRequest>) -> Result<Vec<Option<Vec<f32>>>> {
+        reqs.into_iter().map(|r| self.wait(r)).collect()
+    }
+
+    /// Push every queued `isend` toward the peers without blocking on
+    /// arrivals.  Call before a long local compute so buffered frames
+    /// travel *during* it — waits flush implicitly, but only when they
+    /// run.  No-op on backends whose sends are immediately visible.
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Synchronisation barrier — dissemination algorithm: ⌈log₂ n⌉
+    /// rounds in which every rank signals `(rank + 2^r) % n` and waits
+    /// on `(rank − 2^r) mod n`, O(n log n) empty messages total.  The
+    /// legacy O(n²) empty all-to-all survives as
+    /// [`Comm::barrier_a2a`] for tests that assert message counts.
     fn barrier(&mut self) -> Result<()> {
+        let n = self.size();
+        if n <= 1 {
+            return Ok(());
+        }
+        let rank = self.rank();
+        let seq = self.next_seq();
+        let mut dist = 1usize;
+        let mut round = 0u64;
+        while dist < n {
+            let tag = (seq << 8) | round;
+            self.send((rank + dist) % n, tag, Vec::new())?;
+            self.recv((rank + n - dist) % n, tag)?;
+            dist <<= 1;
+            round += 1;
+        }
+        self.counters().add("barrier_rounds", round);
+        Ok(())
+    }
+
+    /// Legacy barrier: an empty all-to-all (every pair exchanges a
+    /// count) — O(n²) messages, but a fixed and easily audited pattern
+    /// (bumps `a2a_calls` exactly once).
+    fn barrier_a2a(&mut self) -> Result<()> {
         let empties: Vec<Vec<f32>> = (0..self.size()).map(|_| Vec::new()).collect();
         let _ = self.all_to_all_v(empties)?;
         Ok(())
     }
 
-    /// Variable all-to-all (Figure 2): `send[p]` goes to peer `p`; the
-    /// return value's `recv[p]` came from peer `p`.
+    /// Start a variable all-to-all and return the in-flight payload
+    /// phase as per-peer requests (the decomposed Figure-2 protocol).
     ///
-    /// Phase 1 exchanges the lengths (the paper's "exchange the size of
-    /// expert inputs"), phase 2 the payloads. Counters record both.
-    fn all_to_all_v(&mut self, send: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+    /// Phase 1 (counts) completes inside this call — receivers need the
+    /// sizes to validate — and every payload isend is queued before it
+    /// returns, so by completion time all `n−1` outgoing buffers are on
+    /// the wire while the caller is free to overlap work and consume
+    /// arrivals one peer at a time.
+    fn all_to_all_v_start(&mut self, send: Vec<Vec<f32>>) -> Result<PendingA2a> {
         let size = self.size();
         let rank = self.rank();
         if send.len() != size {
@@ -85,49 +281,54 @@ pub trait Comm {
         self.counters().add("a2a_calls", 1);
 
         // Phase 1: counts.
-        for p in 0..size {
+        for (p, buf) in send.iter().enumerate() {
             if p != rank {
-                self.send(p, tag_count, vec![send[p].len() as f32])?;
+                self.isend(p, tag_count, vec![buf.len() as f32])?;
             }
         }
-        let mut incoming = vec![0usize; size];
-        incoming[rank] = send[rank].len();
+        let mut expected = vec![0usize; size];
+        expected[rank] = send[rank].len();
         for p in 0..size {
             if p != rank {
                 let c = self.recv(p, tag_count)?;
-                incoming[p] = c[0] as usize;
+                expected[p] = c[0] as usize;
             }
         }
         self.counters()
             .add("a2a_count_bytes", (4 * (size - 1)) as u64);
 
-        // Phase 2: payloads ("the workers start exchanging data directly").
-        let mut out: Vec<Vec<f32>> = (0..size).map(|_| Vec::new()).collect();
+        // Phase 2: queue every payload, bookmark every arrival.
         let mut send = send;
-        out[rank] = std::mem::take(&mut send[rank]);
+        let mut bufs: Vec<Option<Vec<f32>>> = (0..size).map(|_| None).collect();
+        bufs[rank] = Some(std::mem::take(&mut send[rank]));
         let mut data_bytes = 0u64;
-        for p in 0..size {
+        let mut reqs: Vec<Option<CommRequest>> = (0..size).map(|_| None).collect();
+        for (p, slot) in send.iter_mut().enumerate() {
             if p != rank {
-                let buf = std::mem::take(&mut send[p]);
+                let buf = std::mem::take(slot);
                 data_bytes += (buf.len() * 4) as u64;
-                self.send(p, tag_data, buf)?;
+                self.isend(p, tag_data, buf)?;
             }
         }
         self.counters().add("a2a_data_bytes", data_bytes);
-        for p in 0..size {
+        for (p, slot) in reqs.iter_mut().enumerate() {
             if p != rank {
-                let data = self.recv(p, tag_data)?;
-                if data.len() != incoming[p] {
-                    return Err(Error::Comm(format!(
-                        "a2a: peer {p} announced {} floats, sent {}",
-                        incoming[p],
-                        data.len()
-                    )));
-                }
-                out[p] = data;
+                *slot = Some(self.irecv(p, tag_data)?);
             }
         }
-        Ok(out)
+        Ok(PendingA2a { reqs, bufs, expected })
+    }
+
+    /// Variable all-to-all (Figure 2): `send[p]` goes to peer `p`; the
+    /// return value's `recv[p]` came from peer `p`.
+    ///
+    /// Phase 1 exchanges the lengths (the paper's "exchange the size of
+    /// expert inputs"), phase 2 the payloads. Counters record both.
+    /// This is [`Comm::all_to_all_v_start`] completed on the spot — the
+    /// blocking degenerate case of the decomposed protocol.
+    fn all_to_all_v(&mut self, send: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let pending = self.all_to_all_v_start(send)?;
+        pending.finish(self)
     }
 
     /// Ring all-reduce (sum): reduce-scatter then all-gather, the
@@ -329,6 +530,51 @@ impl Comm for CommHandle {
         self.seq
     }
 
+    /// Complete requests in *arrival order*: drain the channel and
+    /// satisfy whichever posted receive each message matches, parking
+    /// strays — the channel backend's "consume as they land".
+    fn wait_all(&mut self, reqs: Vec<CommRequest>) -> Result<Vec<Option<Vec<f32>>>> {
+        let mut out: Vec<Option<Vec<f32>>> = Vec::with_capacity(reqs.len());
+        // (slot, src, tag) still outstanding
+        let mut pending: Vec<(usize, usize, u64)> = Vec::new();
+        for (slot, req) in reqs.into_iter().enumerate() {
+            out.push(None);
+            if let Some((src, tag)) = req.pending_recv() {
+                pending.push((slot, src, tag));
+            }
+        }
+        pending.retain(|&(slot, src, tag)| {
+            match self
+                .parked
+                .iter()
+                .position(|m| m.src == src && m.tag == tag)
+            {
+                Some(i) => {
+                    out[slot] = Some(self.parked.swap_remove(i).data);
+                    false
+                }
+                None => true,
+            }
+        });
+        while !pending.is_empty() {
+            let msg = self
+                .receiver
+                .recv()
+                .map_err(|_| Error::Comm("channel closed".into()))?;
+            match pending
+                .iter()
+                .position(|&(_, src, tag)| src == msg.src && tag == msg.tag)
+            {
+                Some(i) => {
+                    let (slot, _, _) = pending.swap_remove(i);
+                    out[slot] = Some(msg.data);
+                }
+                None => self.parked.push(msg),
+            }
+        }
+        Ok(out)
+    }
+
     /// Threads share an OS barrier — cheaper than the message fallback.
     fn barrier(&mut self) -> Result<()> {
         self.barrier.wait();
@@ -515,6 +761,112 @@ mod tests {
             }
             Ok(()) as PropResult
         });
+    }
+
+    #[test]
+    fn isend_irecv_wait_roundtrip() {
+        run_workers(3, |mut h| {
+            let r = h.rank();
+            let n = h.size();
+            let tag = (h.next_seq() << 8) | 1;
+            for p in 0..n {
+                if p != r {
+                    h.isend(p, tag, vec![r as f32, p as f32])?;
+                }
+            }
+            for p in 0..n {
+                if p != r {
+                    let req = h.irecv(p, tag)?;
+                    assert_eq!(req.pending_recv(), Some((p, tag)));
+                    let data = h.wait(req)?.unwrap();
+                    assert_eq!(data, vec![p as f32, r as f32]);
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn wait_all_matches_results_to_requests() {
+        // Every rank sends two differently-tagged messages to every
+        // peer; wait_all must route each arrival to the right slot no
+        // matter the wire order.
+        run_workers(4, |mut h| {
+            let r = h.rank();
+            let n = h.size();
+            let seq = h.next_seq();
+            for p in 0..n {
+                if p != r {
+                    h.isend(p, (seq << 8) | 2, vec![(r * 10 + 2) as f32])?;
+                    h.isend(p, (seq << 8) | 1, vec![(r * 10 + 1) as f32])?;
+                }
+            }
+            let mut reqs = Vec::new();
+            let mut want = Vec::new();
+            for p in 0..n {
+                if p != r {
+                    for t in [1u64, 2] {
+                        reqs.push(h.irecv(p, (seq << 8) | t)?);
+                        want.push((p * 10) as f32 + t as f32);
+                    }
+                }
+            }
+            let got = h.wait_all(reqs)?;
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.as_deref(), Some(&[*w][..]));
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn a2a_start_consumes_peers_in_any_order() {
+        run_workers(4, |mut h| {
+            let r = h.rank();
+            let send: Vec<Vec<f32>> =
+                (0..4).map(|p| vec![(r * 4 + p) as f32; p + 1]).collect();
+            let mut pending = h.all_to_all_v_start(send)?;
+            // consume highest peer first — arrivals land out of order
+            for p in (0..4).rev() {
+                assert_eq!(pending.expected(p), r + 1);
+                let buf = pending.wait_peer(&mut h, p)?;
+                assert_eq!(buf, vec![(p * 4 + r) as f32; r + 1]);
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn a2a_finish_rejects_already_consumed_peers() {
+        run_workers(2, |mut h| {
+            let send: Vec<Vec<f32>> = (0..2).map(|p| vec![p as f32; 2]).collect();
+            let other = 1 - h.rank();
+            let mut pending = h.all_to_all_v_start(send)?;
+            let _ = pending.wait_peer(&mut h, other)?;
+            // double-drain of the same peer is an error…
+            assert!(pending.wait_peer(&mut h, other).is_err());
+            // …and so is finish, whose result could not include it
+            assert!(pending.finish(&mut h).is_err());
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn barrier_a2a_keeps_message_count_contract() {
+        run_workers(3, |mut h| {
+            h.barrier_a2a()?;
+            h.barrier_a2a()?;
+            assert_eq!(h.counters.get("a2a_calls"), 2);
+            // OS-barrier override: no a2a traffic from plain barrier()
+            h.barrier()?;
+            assert_eq!(h.counters.get("a2a_calls"), 2);
+            Ok(())
+        })
+        .unwrap();
     }
 
     #[test]

@@ -16,12 +16,19 @@
 //! connects to all lower ranks and accepts from all higher ranks, then
 //! identifies itself with its rank. A connect loop with retries makes
 //! start-up order irrelevant.
+//!
+//! Nonblocking transport: `isend` writes the frame into the per-peer
+//! user-space buffer *without* flushing; the next blocking operation
+//! (`recv`, `wait`, `wait_all`, `barrier`) — or an explicit
+//! `Comm::flush` before a long compute — flushes every dirty writer
+//! in one batch, so a pipelined caller pays one syscall burst per
+//! chunk instead of one flush per message.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
-use super::{Comm, Msg};
+use super::{Comm, CommRequest, Msg};
 use crate::error::{Error, Result};
 use crate::metrics::Counters;
 
@@ -32,6 +39,8 @@ pub struct TcpGroup {
     writers: Vec<Option<BufWriter<TcpStream>>>,
     readers: Vec<Option<BufReader<TcpStream>>>,
     parked: Vec<Msg>,
+    /// `isend` frames buffered but not yet flushed to the kernel.
+    flush_needed: bool,
     seq: u64,
     pub counters: Counters,
 }
@@ -91,6 +100,7 @@ impl TcpGroup {
             writers,
             readers,
             parked: Vec::new(),
+            flush_needed: false,
             seq: 0,
             counters: Counters::new(),
         })
@@ -109,6 +119,36 @@ impl TcpGroup {
                 }
             }
         }
+    }
+
+    /// Write one framed message into `dst`'s buffered writer (no flush).
+    fn write_frame(&mut self, dst: usize, tag: u64, data: &[f32]) -> Result<()> {
+        self.counters.add("bytes_sent", (data.len() * 4) as u64);
+        let rank = self.rank;
+        let w = self.writers[dst]
+            .as_mut()
+            .ok_or_else(|| Error::Comm(format!("no link to peer {dst}")))?;
+        w.write_all(&(rank as u32).to_le_bytes()).map_err(io_err)?;
+        w.write_all(&tag.to_le_bytes()).map_err(io_err)?;
+        w.write_all(&(data.len() as u64).to_le_bytes()).map_err(io_err)?;
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        w.write_all(bytes).map_err(io_err)?;
+        Ok(())
+    }
+
+    /// Push every buffered `isend` frame to the kernel.  Called before
+    /// any blocking read so no peer waits on bytes still in userspace.
+    fn flush_pending(&mut self) -> Result<()> {
+        if !self.flush_needed {
+            return Ok(());
+        }
+        self.flush_needed = false;
+        for w in self.writers.iter_mut().flatten() {
+            w.flush().map_err(io_err)?;
+        }
+        Ok(())
     }
 
     /// Blocking read of one framed message from a specific peer socket.
@@ -156,22 +196,27 @@ impl Comm for TcpGroup {
             self.parked.push(Msg { src: dst, tag, data });
             return Ok(());
         }
-        self.counters.add("bytes_sent", (data.len() * 4) as u64);
-        let w = self.writers[dst]
-            .as_mut()
-            .ok_or_else(|| Error::Comm(format!("no link to peer {dst}")))?;
-        w.write_all(&(self.rank as u32).to_le_bytes()).map_err(io_err)?;
-        w.write_all(&tag.to_le_bytes()).map_err(io_err)?;
-        w.write_all(&(data.len() as u64).to_le_bytes()).map_err(io_err)?;
-        let bytes = unsafe {
-            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-        };
-        w.write_all(bytes).map_err(io_err)?;
+        self.write_frame(dst, tag, &data)?;
+        let w = self.writers[dst].as_mut().expect("checked by write_frame");
         w.flush().map_err(io_err)?;
         Ok(())
     }
 
+    /// Nonblocking send: the frame lands in the per-peer user-space
+    /// buffer and is flushed in one syscall batch by the next blocking
+    /// operation (`recv`/`wait`/`wait_all`/`barrier` all flush first).
+    fn isend(&mut self, dst: usize, tag: u64, data: Vec<f32>) -> Result<CommRequest> {
+        if dst == self.rank {
+            self.parked.push(Msg { src: dst, tag, data });
+            return Ok(CommRequest::send_done());
+        }
+        self.write_frame(dst, tag, &data)?;
+        self.flush_needed = true;
+        Ok(CommRequest::send_done())
+    }
+
     fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<f32>> {
+        self.flush_pending()?;
         if let Some(i) = self
             .parked
             .iter()
@@ -186,6 +231,18 @@ impl Comm for TcpGroup {
             }
             self.parked.push(msg);
         }
+    }
+
+    /// Flush buffered isends once, then complete in posted order (each
+    /// peer is its own ordered byte stream, so out-of-order arrivals
+    /// only happen across peers and land in the parked queue).
+    fn wait_all(&mut self, reqs: Vec<CommRequest>) -> Result<Vec<Option<Vec<f32>>>> {
+        self.flush_pending()?;
+        reqs.into_iter().map(|r| self.wait(r)).collect()
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.flush_pending()
     }
 
     fn next_seq(&mut self) -> u64 {
@@ -247,6 +304,41 @@ mod tests {
             let mut v = if r == 0 { vec![9.0, 8.0] } else { vec![] };
             g.broadcast(&mut v, 0)?;
             assert_eq!(v, vec![9.0, 8.0]);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tcp_isend_defers_flush_until_wait() {
+        run_tcp(2, 47370, |mut g| {
+            let other = 1 - g.rank();
+            let tag = (g.next_seq() << 8) | 1;
+            g.isend(other, tag, vec![g.rank() as f32; 8])?;
+            assert!(g.flush_needed, "isend must not flush eagerly");
+            let req = g.irecv(other, tag)?;
+            let data = g.wait(req)?.unwrap();
+            assert!(!g.flush_needed, "wait must flush buffered isends");
+            assert_eq!(data, vec![other as f32; 8]);
+            // explicit flush pushes frames without blocking on arrivals
+            let tag2 = (g.next_seq() << 8) | 1;
+            g.isend(other, tag2, vec![7.0])?;
+            g.flush()?;
+            assert!(!g.flush_needed, "flush must clear the dirty flag");
+            assert_eq!(g.recv(other, tag2)?, vec![7.0]);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tcp_barrier_is_dissemination() {
+        run_tcp(3, 47390, |mut g| {
+            g.barrier()?;
+            g.barrier()?;
+            // ⌈log₂ 3⌉ = 2 rounds per barrier, no all-to-all traffic
+            assert_eq!(g.counters.get("barrier_rounds"), 4);
+            assert_eq!(g.counters.get("a2a_calls"), 0);
+            g.barrier_a2a()?;
+            assert_eq!(g.counters.get("a2a_calls"), 1);
             Ok(())
         });
     }

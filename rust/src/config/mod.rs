@@ -108,6 +108,7 @@ impl Default for TrainConfig {
 /// gate = "switch"        # "topk" (default) | "switch" | "noisy_topk"
 /// capacity_factor = 1.25 # switch gate: per-expert capacity multiplier
 /// noise_std = 1.0        # noisy_topk gate: score-noise std dev
+/// balance_coef = 0.01    # GShard balance-loss gradient weight (0 = off)
 /// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct MoeConfig {
@@ -118,18 +119,28 @@ pub struct MoeConfig {
     pub capacity_factor: f64,
     /// Noisy top-k gate: std dev of the Gaussian score noise.
     pub noise_std: f64,
+    /// Weight of the GShard auxiliary balance-loss gradient added to
+    /// the gate scores on the backward pass (`Gate::balance_grad`).
+    /// `0` (the default) disables it, preserving pre-wiring gradients.
+    pub balance_coef: f64,
 }
 
 impl Default for MoeConfig {
     fn default() -> Self {
-        Self { gate: "topk".into(), capacity_factor: 1.25, noise_std: 1.0 }
+        Self {
+            gate: "topk".into(),
+            capacity_factor: 1.25,
+            noise_std: 1.0,
+            balance_coef: 0.0,
+        }
     }
 }
 
 impl MoeConfig {
     /// The `[moe]` section of an optional `--config` file, with
-    /// `--gate`, `--capacity-factor` and `--noise-std` CLI overrides —
-    /// the one merge rule shared by the launcher and the examples.
+    /// `--gate`, `--capacity-factor`, `--noise-std` and
+    /// `--balance-coef` CLI overrides — the one merge rule shared by
+    /// the launcher and the examples.
     pub fn from_args(args: &crate::cli::Args) -> Result<MoeConfig> {
         let mut cfg = if let Some(path) = args.get("config") {
             ConfigFile::load(path)?.moe()?
@@ -139,6 +150,55 @@ impl MoeConfig {
         cfg.gate = args.choice_or("gate", GATE_KINDS, &cfg.gate)?;
         cfg.capacity_factor = args.f64_or("capacity-factor", cfg.capacity_factor)?;
         cfg.noise_std = args.f64_or("noise-std", cfg.noise_std)?;
+        cfg.balance_coef = args.f64_or("balance-coef", cfg.balance_coef)?;
+        Ok(cfg)
+    }
+}
+
+/// Communication configuration — the `[comm]` config section,
+/// consumed by `coordinator::MoeLayerBuilder` and the launcher.
+///
+/// ```toml
+/// [comm]
+/// overlap = true  # pipeline dispatch / expert compute / combine
+/// chunks = 4      # ring-offset peer groups per exchange (1 = blocking)
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommConfig {
+    /// Pipeline the MoE exchanges against expert compute (§4 overlap).
+    /// Off by default: the blocking path is the seed behaviour and the
+    /// `chunks = 1` degenerate case of the pipelined one.
+    pub overlap: bool,
+    /// Ring-offset peer groups per exchange; clamped to the worker
+    /// count at layer-build time.  Ignored unless `overlap` is on.
+    pub chunks: usize,
+}
+
+impl Default for CommConfig {
+    fn default() -> Self {
+        Self { overlap: false, chunks: 4 }
+    }
+}
+
+impl CommConfig {
+    /// The `[comm]` section of an optional `--config` file, with the
+    /// `--overlap` / `--no-overlap` flags and `--chunks N` overrides.
+    pub fn from_args(args: &crate::cli::Args) -> Result<CommConfig> {
+        let mut cfg = if let Some(path) = args.get("config") {
+            ConfigFile::load(path)?.comm()?
+        } else {
+            CommConfig::default()
+        };
+        if args.has_flag("overlap") {
+            cfg.overlap = true;
+        }
+        if args.has_flag("no-overlap") {
+            cfg.overlap = false;
+        }
+        cfg.chunks = args.usize_or("chunks", cfg.chunks)?;
+        if cfg.chunks == 0 {
+            return Err(Error::Cli("--chunks must be >= 1".into()));
+        }
         Ok(cfg)
     }
 }
@@ -245,6 +305,7 @@ impl ConfigFile {
             m.gate = s.str_or("gate", &m.gate);
             m.capacity_factor = s.f64_or("capacity_factor", m.capacity_factor);
             m.noise_std = s.f64_or("noise_std", m.noise_std);
+            m.balance_coef = s.f64_or("balance_coef", m.balance_coef);
         }
         if !GATE_KINDS.contains(&m.gate.as_str()) {
             return Err(Error::Config(format!(
@@ -264,7 +325,25 @@ impl ConfigFile {
                 m.noise_std
             )));
         }
+        if !m.balance_coef.is_finite() || m.balance_coef < 0.0 {
+            return Err(Error::Config(format!(
+                "moe.balance_coef must be >= 0, got {}",
+                m.balance_coef
+            )));
+        }
         Ok(m)
+    }
+
+    pub fn comm(&self) -> Result<CommConfig> {
+        let mut c = CommConfig::default();
+        if let Some(s) = self.section("comm") {
+            c.overlap = s.bool_or("overlap", c.overlap);
+            c.chunks = s.usize_or("chunks", c.chunks);
+        }
+        if c.chunks == 0 {
+            return Err(Error::Config("comm.chunks must be >= 1".into()));
+        }
+        Ok(c)
     }
 
     pub fn dist(&self) -> Result<DistConfig> {
@@ -309,6 +388,11 @@ net = "ib-edr"
 [moe]
 gate = "switch"
 capacity_factor = 1.5
+balance_coef = 0.01
+
+[comm]
+overlap = true
+chunks = 2
 "#;
 
     #[test]
@@ -329,6 +413,43 @@ capacity_factor = 1.5
         assert_eq!(moe.gate, "switch");
         assert!((moe.capacity_factor - 1.5).abs() < 1e-12);
         assert!((moe.noise_std - 1.0).abs() < 1e-12); // default preserved
+        assert!((moe.balance_coef - 0.01).abs() < 1e-12);
+        let comm = c.comm().unwrap();
+        assert!(comm.overlap);
+        assert_eq!(comm.chunks, 2);
+    }
+
+    #[test]
+    fn comm_section_defaults_and_validation() {
+        // no [comm] section at all → defaults (overlap off)
+        let c = ConfigFile::parse("[train]\nsteps = 1\n").unwrap();
+        assert_eq!(c.comm().unwrap(), CommConfig::default());
+        assert!(!c.comm().unwrap().overlap);
+        // zero chunks rejected
+        let c = ConfigFile::parse("[comm]\nchunks = 0\n").unwrap();
+        assert!(c.comm().is_err());
+        // CLI merge: flags flip overlap, --chunks overrides
+        let argv = |s: &str| {
+            crate::cli::Args::parse(
+                s.split_whitespace().map(|x| x.to_string()),
+                &["overlap", "no-overlap"],
+            )
+            .unwrap()
+        };
+        let cfg = CommConfig::from_args(&argv("x --overlap --chunks 8")).unwrap();
+        assert!(cfg.overlap);
+        assert_eq!(cfg.chunks, 8);
+        let cfg = CommConfig::from_args(&argv("x")).unwrap();
+        assert_eq!(cfg, CommConfig::default());
+        assert!(CommConfig::from_args(&argv("x --chunks 0")).is_err());
+    }
+
+    #[test]
+    fn balance_coef_validation() {
+        let c = ConfigFile::parse("[moe]\nbalance_coef = -0.5\n").unwrap();
+        assert!(c.moe().is_err());
+        let c = ConfigFile::parse("[moe]\nbalance_coef = 0.25\n").unwrap();
+        assert!((c.moe().unwrap().balance_coef - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -20,7 +20,8 @@
 //! | `[model]` | `vocab`, `seq`, `n_layer`, `d_model`, `n_head`, `d_hidden`, `moe`, `n_expert`, `top_k` |
 //! | `[train]` | `model`, `steps`, `batch`, `lr`, `seed`, `log_every`, `eval_every`, `checkpoint_every`, `out_dir` |
 //! | `[dist]`  | `workers`, `ne_local`, `top_k`, `net`, `seed` |
-//! | `[moe]`   | `gate` (`"topk"` \| `"switch"` \| `"noisy_topk"`), `capacity_factor` (switch: per-expert capacity multiplier), `noise_std` (noisy_topk: score-noise std dev) |
+//! | `[moe]`   | `gate` (`"topk"` \| `"switch"` \| `"noisy_topk"`), `capacity_factor` (switch: per-expert capacity multiplier), `noise_std` (noisy_topk: score-noise std dev), `balance_coef` (GShard balance-loss gradient weight, `0` = off) |
+//! | `[comm]`  | `overlap` (pipeline the MoE dispatch/compute/combine against the wire, default `false`), `chunks` (ring-offset peer groups per exchange; `1` = blocking, clamped to the worker count) |
 
 use std::collections::BTreeMap;
 

@@ -15,13 +15,23 @@
 //!   [`crate::moe::expert`].
 //!
 //! Layers are assembled by [`MoeLayerBuilder`], normally from the
-//! `[moe]` config section:
+//! `[moe]` and `[comm]` config sections:
 //!
 //! ```ignore
 //! let layer = MoeLayerBuilder::from_config(&cfg.moe()?)
+//!     .comm_config(&cfg.comm()?)
 //!     .seed(seed)
 //!     .build(rt, workers, rank)?;
 //! ```
+//!
+//! With `[comm] overlap = true` the Figure-2 exchanges run *pipelined*
+//! (the §4 performance story): the dispatch decomposes into ring-offset
+//! peer chunks over the nonblocking `isend`/`irecv` transport, chunk
+//! `c+1`'s tokens flying while chunk `c` runs through the expert shard
+//! and the return exchange streaming per chunk; the backward mirrors
+//! this and additionally hides the gate GEMM backward behind the
+//! cotangent flight.  `chunks = 1` (or `overlap = false`, the default)
+//! is the blocking path with bit-identical outputs.
 //!
 //! [`DistMoeLayer::init`] remains as the seed-compatible shorthand for
 //! the default top-k softmax gate + FFN shard (bit-identical routing
@@ -30,13 +40,13 @@
 use std::sync::Arc;
 
 use crate::comm::Comm;
-use crate::config::MoeConfig;
+use crate::config::{CommConfig, MoeConfig};
 use crate::error::{Error, Result};
 use crate::metrics::Counters;
 use crate::model::Adam;
 use crate::moe::{
-    balance_loss, gate, DispatchPlan, ExpertBatch, ExpertShard, FfnExpertShard,
-    Gate, GateAssign,
+    balance_loss, chunk_peer_groups, gate, post_chunk, wait_chunk, DispatchPlan,
+    ExpertBatch, ExpertShard, FfnExpertShard, Gate, GateAssign, PendingChunk,
 };
 use crate::rng::Rng;
 use crate::runtime::Runtime;
@@ -97,6 +107,7 @@ fn probe_geometry(rt: &Runtime, workers: usize) -> Result<LayerGeom> {
 #[derive(Clone, Debug)]
 pub struct MoeLayerBuilder {
     cfg: MoeConfig,
+    comm: CommConfig,
     seed: u64,
 }
 
@@ -107,14 +118,42 @@ impl Default for MoeLayerBuilder {
 }
 
 impl MoeLayerBuilder {
-    /// Default modules: top-k softmax gate + FFN expert shard.
+    /// Default modules: top-k softmax gate + FFN expert shard,
+    /// blocking (non-overlapped) exchanges.
     pub fn new() -> MoeLayerBuilder {
-        MoeLayerBuilder { cfg: MoeConfig::default(), seed: 0 }
+        MoeLayerBuilder {
+            cfg: MoeConfig::default(),
+            comm: CommConfig::default(),
+            seed: 0,
+        }
     }
 
     /// Select modules from a `[moe]` config section.
     pub fn from_config(cfg: &MoeConfig) -> MoeLayerBuilder {
-        MoeLayerBuilder { cfg: cfg.clone(), seed: 0 }
+        MoeLayerBuilder {
+            cfg: cfg.clone(),
+            comm: CommConfig::default(),
+            seed: 0,
+        }
+    }
+
+    /// Select the exchange schedule from a `[comm]` config section
+    /// (overlap on/off, chunk count).
+    pub fn comm_config(mut self, comm: &CommConfig) -> MoeLayerBuilder {
+        self.comm = comm.clone();
+        self
+    }
+
+    /// Override exchange/compute overlap directly.
+    pub fn overlap(mut self, on: bool) -> MoeLayerBuilder {
+        self.comm.overlap = on;
+        self
+    }
+
+    /// Override the exchange chunk count directly.
+    pub fn chunks(mut self, chunks: usize) -> MoeLayerBuilder {
+        self.comm.chunks = chunks;
+        self
     }
 
     /// Seed for parameter init (and the noisy gate's noise stream).
@@ -138,6 +177,12 @@ impl MoeLayerBuilder {
     /// Override the noisy-gate noise std.
     pub fn noise_std(mut self, std: f64) -> MoeLayerBuilder {
         self.cfg.noise_std = std;
+        self
+    }
+
+    /// Override the balance-loss gradient weight.
+    pub fn balance_coef(mut self, coef: f64) -> MoeLayerBuilder {
+        self.cfg.balance_coef = coef;
         self
     }
 
@@ -186,6 +231,9 @@ impl MoeLayerBuilder {
             bg,
             gate,
             expert,
+            overlap: self.comm.overlap,
+            chunks: self.comm.chunks.clamp(1, workers),
+            balance_coef: self.cfg.balance_coef as f32,
         })
     }
 
@@ -218,6 +266,12 @@ pub struct DistMoeLayer {
     pub bg: TensorF32,
     gate: Box<dyn Gate>,
     expert: Box<dyn ExpertShard>,
+    /// Pipeline the exchanges against expert compute (`[comm] overlap`).
+    pub overlap: bool,
+    /// Ring-offset peer chunks per exchange (clamped to `workers`).
+    pub chunks: usize,
+    /// GShard balance-loss gradient weight (`[moe] balance_coef`).
+    balance_coef: f32,
 }
 
 /// Forward residuals needed by the backward chain.
@@ -328,9 +382,17 @@ impl DistMoeLayer {
         gate + self.expert.flops(rows)
     }
 
+    /// Whether forward/backward take the chunked overlap path.
+    fn pipelined(&self) -> bool {
+        self.overlap && self.chunks > 1 && self.workers > 1
+    }
+
     /// Forward pass over this worker's `x: [nb, dm]`.
     ///
-    /// `counters` records exchange volumes for the net model.
+    /// `counters` records exchange volumes for the net model.  With
+    /// `[comm] overlap` the phase-2 exchange and the expert shard run
+    /// pipelined ([`Self::dispatch_compute_overlapped`]); outputs are
+    /// bit-identical either way.
     pub fn forward(
         &self,
         comm: &mut impl Comm,
@@ -362,29 +424,37 @@ impl DistMoeLayer {
             .map(|b| b.iter().map(|&x| x as u32).collect())
             .collect();
 
-        // ---- Figure 2 phase 2: exchange token rows ----
+        // ---- Figure 2 phase 2 + expert shard ----
         let send = plan.pack(&x)?;
         let sent_bytes: usize = send.iter().map(|b| b.len() * 4).sum();
         counters.add("moe_a2a_bytes", sent_bytes as u64);
-        let recv = comm.all_to_all_v(send)?;
-
-        // ---- bucketed expert shard execution ----
-        let eb = ExpertBatch::build(recv_counts, &recv, self.ne_local, self.dm, &self.buckets)?;
-        counters.add("moe_bucket_rows", (eb.bucket * eb.ne_local) as u64);
-        counters.add(
-            "moe_real_rows",
-            eb.rows_per_expert.iter().sum::<usize>() as u64,
-        );
-        let ys = self.expert.forward(&eb)?;
-
-        // ---- return exchange + combine ----
-        let ret = eb.split_outputs(&ys)?;
-        counters.add(
-            "moe_a2a_bytes",
-            ret.iter().map(|b| b.len() * 4).sum::<usize>() as u64,
-        );
-        let back = comm.all_to_all_v(ret)?;
-        let y_slots = plan.unpack_returned(&back, self.dm)?;
+        let (eb, y_slots) = if self.pipelined() {
+            self.dispatch_compute_overlapped(comm, &plan, send, recv_counts, counters)?
+        } else {
+            // blocking path — the `chunks = 1` degenerate case
+            let recv = comm.all_to_all_v(send)?;
+            let eb = ExpertBatch::build(
+                recv_counts,
+                &recv,
+                self.ne_local,
+                self.dm,
+                &self.buckets,
+            )?;
+            counters.add("moe_bucket_rows", (eb.bucket * eb.ne_local) as u64);
+            counters.add(
+                "moe_real_rows",
+                eb.rows_per_expert.iter().sum::<usize>() as u64,
+            );
+            let ys = self.expert.forward(&eb)?;
+            let ret = eb.split_outputs(&ys)?;
+            counters.add(
+                "moe_a2a_bytes",
+                ret.iter().map(|b| b.len() * 4).sum::<usize>() as u64,
+            );
+            let back = comm.all_to_all_v(ret)?;
+            let y_slots = plan.unpack_returned(&back, self.dm)?;
+            (eb, y_slots)
+        };
 
         let combine = self.rt.executable("combine_fwd")?;
         let w_t = TensorF32::from_vec(&[self.nb, self.k], assign.w.clone())?;
@@ -417,7 +487,186 @@ impl DistMoeLayer {
         ))
     }
 
+    /// Figure-2 phase 2 + expert execution, pipelined (the §4 overlap):
+    /// the exchange decomposes into ring-offset peer chunks; while
+    /// chunk `c`'s rows run through the expert shard, chunk `c+1`'s
+    /// tokens are already on the wire, and each chunk's outputs stream
+    /// back the moment they exist.  The combine input `y_slots` and the
+    /// saved full batch are assembled exactly as the blocking path
+    /// assembles them — expert math is row-independent — so outputs
+    /// stay bit-identical.
+    ///
+    /// Host-work trade-off, accepted for wire time: rows are copied
+    /// twice (into the backward residual and into the chunk's compute
+    /// batch), and each chunk pads to its own bucket, so
+    /// `moe_bucket_rows` (and total padded compute) can exceed the
+    /// blocking path's single bucket.  The win is hiding the exchange;
+    /// on a free network (`--net none`, or the thread backend's memcpy
+    /// wire) prefer `overlap = false`.
+    fn dispatch_compute_overlapped(
+        &self,
+        comm: &mut impl Comm,
+        plan: &DispatchPlan,
+        mut send: Vec<Vec<f32>>,
+        recv_counts: Vec<Vec<u32>>,
+        counters: &mut Counters,
+    ) -> Result<(ExpertBatch, TensorF32)> {
+        let w = self.workers;
+        let rank = self.rank;
+        let chunks = self.chunks.clamp(1, w);
+        let groups = chunk_peer_groups(rank, w, chunks);
+        counters.add("moe_overlap_chunks", chunks as u64);
+
+        // Tag reservation order is part of the wire protocol: every
+        // rank takes 2·chunks seqs in the same sequence.
+        let disp_tags: Vec<u64> =
+            (0..chunks).map(|_| (comm.next_seq() << 8) | 1).collect();
+        let ret_tags: Vec<u64> =
+            (0..chunks).map(|_| (comm.next_seq() << 8) | 1).collect();
+
+        // full-batch residual for the backward pass, filled in place as
+        // chunks land (same bucket selection and row layout as the
+        // blocking path, so `state.eb` stays bit-identical)
+        let mut eb = ExpertBatch::shell(
+            recv_counts.clone(),
+            self.ne_local,
+            self.dm,
+            &self.buckets,
+        )?;
+
+        let mut recv_parts: Vec<Option<Vec<f32>>> = (0..w).map(|_| None).collect();
+        let mut back_parts: Vec<Option<Vec<f32>>> = (0..w).map(|_| None).collect();
+        let mut disp_pend: Vec<PendingChunk> =
+            (0..chunks).map(|_| Vec::new()).collect();
+        let mut ret_pend: Vec<PendingChunk> =
+            (0..chunks).map(|_| Vec::new()).collect();
+
+        post_chunk(
+            comm, rank, &groups[0], disp_tags[0], &mut send, &mut recv_parts,
+            &mut disp_pend[0],
+        )?;
+        for c in 0..chunks {
+            // keep the next chunk's tokens in flight through this
+            // chunk's expert execution
+            if c + 1 < chunks {
+                post_chunk(
+                    comm, rank, &groups[c + 1], disp_tags[c + 1], &mut send,
+                    &mut recv_parts, &mut disp_pend[c + 1],
+                )?;
+            }
+            wait_chunk(comm, std::mem::take(&mut disp_pend[c]), &mut recv_parts)?;
+
+            // file this chunk's rows into the full-batch residual…
+            for &p in &groups[c].in_peers {
+                eb.fill_peer(p, recv_parts[p].as_deref().unwrap_or(&[]))?;
+            }
+            // …and regroup them as this chunk's compute batch
+            let counts_c: Vec<Vec<u32>> = groups[c]
+                .in_peers
+                .iter()
+                .map(|&p| recv_counts[p].clone())
+                .collect();
+            let parts_c: Vec<&[f32]> = groups[c]
+                .in_peers
+                .iter()
+                .map(|&p| recv_parts[p].as_deref().unwrap_or(&[]))
+                .collect();
+            let eb_c = ExpertBatch::build_from(
+                counts_c, &parts_c, self.ne_local, self.dm, &self.buckets,
+            )?;
+            counters.add("moe_bucket_rows", (eb_c.bucket * eb_c.ne_local) as u64);
+            counters.add(
+                "moe_real_rows",
+                eb_c.rows_per_expert.iter().sum::<usize>() as u64,
+            );
+            let ys_c = self.expert.forward(&eb_c)?;
+
+            // stream this chunk's outputs straight back
+            let ret_c = eb_c.split_outputs(&ys_c)?;
+            counters.add(
+                "moe_a2a_bytes",
+                ret_c.iter().map(|b| b.len() * 4).sum::<usize>() as u64,
+            );
+            let mut ret_abs: Vec<Vec<f32>> = (0..w).map(|_| Vec::new()).collect();
+            for (buf, &p) in ret_c.into_iter().zip(&groups[c].in_peers) {
+                ret_abs[p] = buf;
+            }
+            post_chunk(
+                comm, rank, &groups[c].reversed(), ret_tags[c], &mut ret_abs,
+                &mut back_parts, &mut ret_pend[c],
+            )?;
+            // wire buffers are copied out; free them inside the window
+            for &p in &groups[c].in_peers {
+                recv_parts[p] = None;
+            }
+        }
+        for pend in ret_pend {
+            wait_chunk(comm, pend, &mut back_parts)?;
+        }
+
+        let back: Vec<Vec<f32>> = back_parts
+            .into_iter()
+            .map(|b| b.unwrap_or_default())
+            .collect();
+        let y_slots = plan.unpack_returned(&back, self.dm)?;
+        Ok((eb, y_slots))
+    }
+
+    /// Gate backward: routing Jacobian + balance-loss gradient + gate
+    /// GEMM transpose.  Returns `(dx_from_gate, dwg, dbg)`.
+    fn gate_backward(
+        &self,
+        state: &MoeLayerState,
+        dw: &TensorF32,
+    ) -> Result<(TensorF32, TensorF32, TensorF32)> {
+        let ne_global = self.workers * self.ne_local;
+        let mut dscores = self.gate.route_bwd(&state.assign, &dw.data, ne_global)?;
+        // auxiliary balance-loss gradient over the *kept* counts (the
+        // histogram the forward loss uses), scaled by moe.balance_coef
+        self.gate.balance_grad(
+            &state.assign,
+            &state.counts_kept,
+            self.balance_coef,
+            &mut dscores,
+        );
+        let gbwd = self.rt.executable(&format!("gate_bwd_w{}", self.workers))?;
+        let out = gbwd.run(&[
+            state.x.clone().into(),
+            self.wg.clone().into(),
+            dscores.into(),
+        ])?;
+        let mut it = out.into_iter();
+        let dx = it.next().unwrap().into_f32()?;
+        let dwg = it.next().unwrap().into_f32()?;
+        let dbg = it.next().unwrap().into_f32()?;
+        Ok((dx, dwg, dbg))
+    }
+
+    /// Scatter-transpose `dx[token] += dx_packed[slot(assignment)]` —
+    /// one fixed assignment order on both paths, so the k-way f32
+    /// additions stay bit-identical regardless of arrival order.
+    fn scatter_transpose(
+        &self,
+        plan: &DispatchPlan,
+        dx_packed: &TensorF32,
+        dx: &mut TensorF32,
+    ) {
+        for a in 0..plan.nb * plan.k {
+            let token = a / plan.k;
+            let s = plan.slots[a] as usize;
+            let src = &dx_packed.data[s * self.dm..(s + 1) * self.dm];
+            let dst = &mut dx.data[token * self.dm..(token + 1) * self.dm];
+            for (d, v) in dst.iter_mut().zip(src) {
+                *d += v;
+            }
+        }
+    }
+
     /// Backward pass: `dy: [nb, dm]` → input + parameter gradients.
+    /// With `[comm] overlap` the cotangent exchanges run chunked, the
+    /// gate GEMM backward overlapping the dispatch flight
+    /// ([`Self::backward_overlapped`]); gradients are bit-identical
+    /// either way.
     pub fn backward(
         &self,
         comm: &mut impl Comm,
@@ -425,7 +674,6 @@ impl DistMoeLayer {
         dy: &TensorF32,
         counters: &mut Counters,
     ) -> Result<LayerGrads> {
-        let ne_global = self.workers * self.ne_local;
         let plan = &state.plan;
 
         // ---- combine backward (L1 transpose) ----
@@ -441,21 +689,12 @@ impl DistMoeLayer {
         let dys = it.next().unwrap().into_f32()?; // [nb*k, dm] packed order
         let dw = it.next().unwrap().into_f32()?; // [nb, k]
 
+        if self.pipelined() {
+            return self.backward_overlapped(comm, state, dys, &dw, counters);
+        }
+
         // ---- gate backward: routing Jacobian + gate GEMM ----
-        let mut dscores = self.gate.route_bwd(&state.assign, &dw.data, ne_global)?;
-        // balance-loss gradient hook (no-op until a later PR wires it)
-        self.gate
-            .balance_grad(&state.assign, &state.counts_global, &mut dscores);
-        let gbwd = self.rt.executable(&format!("gate_bwd_w{}", self.workers))?;
-        let out = gbwd.run(&[
-            state.x.clone().into(),
-            self.wg.clone().into(),
-            dscores.into(),
-        ])?;
-        let mut it = out.into_iter();
-        let mut dx = it.next().unwrap().into_f32()?;
-        let dwg = it.next().unwrap().into_f32()?;
-        let dbg = it.next().unwrap().into_f32()?;
+        let (mut dx, dwg, dbg) = self.gate_backward(state, &dw)?;
 
         // ---- reverse exchange of output cotangents ----
         // dys is already in packed order; split by destination rows.
@@ -485,17 +724,97 @@ impl DistMoeLayer {
         let back = comm.all_to_all_v(ret)?;
         let dx_packed = plan.unpack_returned(&back, self.dm)?;
 
-        // scatter-transpose: dx[token] += dx_packed[slot(assignment)]
-        for a in 0..plan.nb * plan.k {
-            let token = a / plan.k;
-            let s = plan.slots[a] as usize;
-            let src = &dx_packed.data[s * self.dm..(s + 1) * self.dm];
-            let dst = &mut dx.data[token * self.dm..(token + 1) * self.dm];
-            for (d, v) in dst.iter_mut().zip(src) {
-                *d += v;
-            }
-        }
+        self.scatter_transpose(plan, &dx_packed, &mut dx);
 
+        Ok(LayerGrads { dx, dwg, dbg, expert: expert_grads })
+    }
+
+    /// Backward with comm/compute overlap: every chunk of output
+    /// cotangents is queued *before* the gate GEMM backward runs, so
+    /// the gate compute hides the dispatch flight; the expert backward
+    /// then runs once over the full forward batch (keeping the
+    /// parameter-gradient reduction order — and therefore the bits —
+    /// identical to blocking), and the input-cotangent returns stream
+    /// back per chunk.
+    fn backward_overlapped(
+        &self,
+        comm: &mut impl Comm,
+        state: &MoeLayerState,
+        dys: TensorF32,
+        dw: &TensorF32,
+        counters: &mut Counters,
+    ) -> Result<LayerGrads> {
+        let plan = &state.plan;
+        let w = self.workers;
+        let rank = self.rank;
+        let chunks = self.chunks.clamp(1, w);
+        let groups = chunk_peer_groups(rank, w, chunks);
+        let offsets = plan.send_offsets();
+        counters.add("moe_overlap_chunks", chunks as u64);
+        let disp_tags: Vec<u64> =
+            (0..chunks).map(|_| (comm.next_seq() << 8) | 1).collect();
+        let ret_tags: Vec<u64> =
+            (0..chunks).map(|_| (comm.next_seq() << 8) | 1).collect();
+
+        // queue every chunk of packed cotangent rows
+        counters.add("moe_a2a_bytes", (plan.nb * plan.k * self.dm * 4) as u64);
+        let mut send: Vec<Vec<f32>> = (0..w)
+            .map(|p| dys.data[offsets[p] * self.dm..offsets[p + 1] * self.dm].to_vec())
+            .collect();
+        let mut recv_parts: Vec<Option<Vec<f32>>> = (0..w).map(|_| None).collect();
+        let mut disp_pend: Vec<PendingChunk> =
+            (0..chunks).map(|_| Vec::new()).collect();
+        for (c, group) in groups.iter().enumerate() {
+            post_chunk(
+                comm, rank, group, disp_tags[c], &mut send, &mut recv_parts,
+                &mut disp_pend[c],
+            )?;
+        }
+        // push queued frames to the kernel NOW — without this, a
+        // deferred-flush backend (TCP) would hold every cotangent in
+        // userspace through the gate GEMM and the overlap below would
+        // be fictional
+        comm.flush()?;
+
+        // gate backward overlaps the cotangent flight
+        let (mut dx, dwg, dbg) = self.gate_backward(state, dw)?;
+
+        for pend in disp_pend {
+            wait_chunk(comm, pend, &mut recv_parts)?;
+        }
+        let recv: Vec<Vec<f32>> = recv_parts
+            .into_iter()
+            .map(|p| p.unwrap_or_default())
+            .collect();
+        let dys_in = state.eb.rebatch(&recv)?;
+
+        // full-batch expert backward: same reduction order as blocking
+        let (dxs, expert_grads) = self.expert.backward(&state.eb, dys_in)?;
+
+        // streamed return of input cotangents
+        let mut ret = state.eb.split_outputs(&dxs)?;
+        counters.add(
+            "moe_a2a_bytes",
+            ret.iter().map(|b| b.len() * 4).sum::<usize>() as u64,
+        );
+        let mut back_parts: Vec<Option<Vec<f32>>> = (0..w).map(|_| None).collect();
+        let mut ret_pend: Vec<PendingChunk> =
+            (0..chunks).map(|_| Vec::new()).collect();
+        for (c, group) in groups.iter().enumerate() {
+            post_chunk(
+                comm, rank, &group.reversed(), ret_tags[c], &mut ret,
+                &mut back_parts, &mut ret_pend[c],
+            )?;
+        }
+        for pend in ret_pend {
+            wait_chunk(comm, pend, &mut back_parts)?;
+        }
+        let back: Vec<Vec<f32>> = back_parts
+            .into_iter()
+            .map(|b| b.unwrap_or_default())
+            .collect();
+        let dx_packed = plan.unpack_returned(&back, self.dm)?;
+        self.scatter_transpose(plan, &dx_packed, &mut dx);
         Ok(LayerGrads { dx, dwg, dbg, expert: expert_grads })
     }
 }
@@ -510,14 +829,30 @@ mod tests {
             .gate("switch")
             .capacity_factor(1.5)
             .noise_std(0.25)
+            .balance_coef(0.02)
+            .overlap(true)
+            .chunks(8)
             .seed(9);
         assert_eq!(b.cfg.gate, "switch");
         assert!((b.cfg.capacity_factor - 1.5).abs() < 1e-12);
         assert!((b.cfg.noise_std - 0.25).abs() < 1e-12);
+        assert!((b.cfg.balance_coef - 0.02).abs() < 1e-12);
+        assert!(b.comm.overlap);
+        assert_eq!(b.comm.chunks, 8);
         assert_eq!(b.seed, 9);
         // gate selection itself is validated without a runtime
         assert!(gate::from_config(&b.cfg, b.seed).is_ok());
         let bad = MoeLayerBuilder::new().gate("mystery");
         assert!(gate::from_config(&bad.cfg, 0).is_err());
+    }
+
+    #[test]
+    fn builder_adopts_comm_section() {
+        let comm = CommConfig { overlap: true, chunks: 2 };
+        let b = MoeLayerBuilder::new().comm_config(&comm);
+        assert_eq!(b.comm, comm);
+        // defaults keep the seed-identical blocking schedule
+        let d = MoeLayerBuilder::new();
+        assert!(!d.comm.overlap);
     }
 }

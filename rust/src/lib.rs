@@ -20,13 +20,13 @@
 //! | module | role |
 //! |---|---|
 //! | [`runtime`] | PJRT client + artifact registry + executable cache |
-//! | [`comm`] | process groups, all-to-all-v, ring all-reduce, … |
-//! | [`moe`] | the §3.1 hierarchy: [`moe::Gate`] policies (top-k / switch / noisy top-k), [`moe::ExpertShard`] shards (FFN), over the fixed dispatch substrate (plans, capacity buckets, load monitor, balance loss) |
-//! | [`coordinator`] | workers, the distributed MoE layer + [`coordinator::MoeLayerBuilder`] (assembles gate/expert from the `[moe]` config), grad sync, train loops |
+//! | [`comm`] | process groups: nonblocking `isend`/`irecv` + [`comm::CommRequest`] handles, decomposed all-to-all-v (consume arrivals as they land), ring all-reduce, dissemination barrier, … |
+//! | [`moe`] | the §3.1 hierarchy: [`moe::Gate`] policies (top-k / switch / noisy top-k, with the wired balance-loss gradient), [`moe::ExpertShard`] shards (FFN), over the fixed dispatch substrate (plans, ring-offset exchange chunks, capacity buckets, load monitor, balance loss) |
+//! | [`coordinator`] | workers, the distributed MoE layer + [`coordinator::MoeLayerBuilder`] (assembles gate/expert from `[moe]`, exchange schedule from `[comm]` — blocking or chunked dispatch/compute/combine overlap), grad sync, train loops |
 //! | [`model`] | parameter store, Adam, checkpoints |
 //! | [`data`] | synthetic corpus, tokenizer, batching |
 //! | [`tensor`] | host tensors and the math used outside XLA |
-//! | [`sim`] | analytic network timing model (IB EDR / PCIe presets) |
+//! | [`sim`] | analytic network timing model (IB EDR / PCIe presets; scores overlapped steps as max(wire, compute) per chunk) |
 //! | [`config`], [`cli`], [`metrics`], [`bench`], [`testing`], [`rng`], [`util`] | substrates (no external deps available offline) |
 
 pub mod bench;

@@ -4,7 +4,8 @@
 //! fastmoe info                         # artifact + model inventory
 //! fastmoe train [--model gpt_moe] [--steps N] [--config cfg.toml] …
 //! fastmoe dist-train [--workers W] …   # DP-emulated multi-worker run
-//! fastmoe dist-moe [--workers W] [--gate topk|switch|noisy_topk] …
+//! fastmoe dist-moe [--workers W] [--gate topk|switch|noisy_topk]
+//!                  [--overlap --chunks N] …
 //!                                      # expert-parallel layer demo
 //! fastmoe fmoefy --experts N           # Listing-1 config transform
 //! ```
@@ -16,7 +17,7 @@ use std::sync::Arc;
 
 use fastmoe::cli::{Args, Usage};
 use fastmoe::comm::{self, Comm};
-use fastmoe::config::{fmoefy, ConfigFile, ModelConfig, MoeConfig, TrainConfig};
+use fastmoe::config::{fmoefy, CommConfig, ConfigFile, ModelConfig, MoeConfig, TrainConfig};
 use fastmoe::coordinator::{DistTrainer, MoeLayerBuilder, MoeLayerTrainer, Trainer};
 use fastmoe::data::{BatchIter, Corpus};
 use fastmoe::error::Result;
@@ -35,11 +36,11 @@ fn main() {
             ("info", "print artifact and model inventory"),
             ("train", "single-worker fused training loop (Figure 7)"),
             ("dist-train", "multi-worker training with tag-aware grad sync"),
-            ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk)"),
+            ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk, --overlap --chunks N)"),
             ("fmoefy", "Listing-1: dense config -> MoE config at equal FLOPs"),
         ],
     };
-    let args = match Args::from_env(&["verbose", "moe", "dense"]) {
+    let args = match Args::from_env(&["verbose", "moe", "dense", "overlap", "no-overlap"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n\n{}", usage.render());
@@ -205,25 +206,28 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 7)?;
     let port = args.usize_or("port", 47500)? as u16;
     let moe_cfg = MoeConfig::from_args(args)?;
+    let comm_cfg = CommConfig::from_args(args)?;
     let exe = std::env::current_exe()?;
     println!("dist-moe (tcp): spawning {workers} worker processes on ports {port}..");
     let mut children = Vec::new();
     for rank in 0..workers {
-        children.push(
-            std::process::Command::new(&exe)
-                .args([
-                    "_tcp-worker",
-                    "--rank", &rank.to_string(),
-                    "--workers", &workers.to_string(),
-                    "--iters", &iters.to_string(),
-                    "--seed", &seed.to_string(),
-                    "--port", &port.to_string(),
-                    "--gate", &moe_cfg.gate,
-                    "--capacity-factor", &moe_cfg.capacity_factor.to_string(),
-                    "--noise-std", &moe_cfg.noise_std.to_string(),
-                ])
-                .spawn()?,
-        );
+        let mut argv = vec![
+            "_tcp-worker".to_string(),
+            "--rank".into(), rank.to_string(),
+            "--workers".into(), workers.to_string(),
+            "--iters".into(), iters.to_string(),
+            "--seed".into(), seed.to_string(),
+            "--port".into(), port.to_string(),
+            "--gate".into(), moe_cfg.gate.clone(),
+            "--capacity-factor".into(), moe_cfg.capacity_factor.to_string(),
+            "--noise-std".into(), moe_cfg.noise_std.to_string(),
+            "--balance-coef".into(), moe_cfg.balance_coef.to_string(),
+            "--chunks".into(), comm_cfg.chunks.to_string(),
+        ];
+        if comm_cfg.overlap {
+            argv.push("--overlap".into());
+        }
+        children.push(std::process::Command::new(&exe).args(&argv).spawn()?);
     }
     let mut failed = false;
     for (rank, mut c) in children.into_iter().enumerate() {
@@ -250,6 +254,7 @@ fn tcp_worker(args: &Args) -> Result<()> {
     let mut group = fastmoe::comm::tcp::TcpGroup::connect_local(rank, workers, port)?;
     let rt = Arc::new(Runtime::open_default()?);
     let layer = MoeLayerBuilder::from_config(&MoeConfig::from_args(args)?)
+        .comm_config(&CommConfig::from_args(args)?)
         .seed(seed)
         .build(rt, workers, rank)?;
     layer.warm()?;
@@ -288,13 +293,20 @@ fn dist_moe(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 7)?;
     let lr = args.f64_or("lr", 1e-3)? as f32;
     let moe_cfg = MoeConfig::from_args(args)?;
+    let comm_cfg = CommConfig::from_args(args)?;
     let rt = Arc::new(Runtime::open_default()?);
     println!(
-        "dist-moe: {workers} workers, {iters} iterations, gate `{}`",
-        moe_cfg.gate
+        "dist-moe: {workers} workers, {iters} iterations, gate `{}`, overlap {}",
+        moe_cfg.gate,
+        if comm_cfg.overlap {
+            format!("on ({} chunks)", comm_cfg.chunks)
+        } else {
+            "off".into()
+        }
     );
     let stats = comm::run_workers(workers, move |mut h| {
         let layer = MoeLayerBuilder::from_config(&moe_cfg)
+            .comm_config(&comm_cfg)
             .seed(seed)
             .build_for(rt.clone(), &h)?;
         layer.warm()?;

@@ -24,9 +24,11 @@
 //! matrix the gate GEMM produced; the GEMM itself (scores = x·wg + bg)
 //! stays inside the layer's HLO artifact.  Every shipped gate also
 //! publishes the full row-softmax in `GateAssign::probs` to fund the
-//! per-step balance-loss metric — an O(nb·n_e) host pass, `d_model`×
-//! cheaper than the gate GEMM that precedes it (routing `idx`/`w`
-//! stay bit-identical either way).
+//! per-step balance-loss metric *and* the [`Gate::balance_grad`]
+//! default, which backpropagates `moe.balance_coef ×` the GShard loss
+//! into the gate GEMM — an O(nb·n_e) host pass, `d_model`× cheaper
+//! than the gate GEMM that precedes it (routing `idx`/`w` stay
+//! bit-identical either way).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -54,17 +56,54 @@ pub trait Gate: Send + Sync {
     /// score-gradient matrix.
     fn route_bwd(&self, assign: &GateAssign, dw: &[f32], ne: usize) -> Result<TensorF32>;
 
-    /// Hook point for the auxiliary balance-loss gradient: a gate may
-    /// add `d(balance_loss)/d(scores)` into `dscores` given the
-    /// iteration's per-expert counts.  Default is a no-op; wiring a
-    /// real gradient through [`super::balance_loss`] is left for a
-    /// later PR (the forward value is already logged per step).
+    /// Add the auxiliary balance-loss gradient
+    /// `coef · d(balance_loss)/d(scores)` into `dscores`, given the
+    /// iteration's per-expert *kept* counts.
+    ///
+    /// The GShard loss (see [`super::balance_loss`]) is
+    /// `L = n_e · Σ_e f_e · p̄_e` with `f_e = counts_e / Σ counts`
+    /// treated as a constant (the routing fraction is
+    /// non-differentiable) and `p̄_e` the batch-mean softmax
+    /// probability.  Differentiating through the row softmax:
+    ///
+    /// ```text
+    /// ∂L/∂s_ij = p_ij · (g_j − Σ_e g_e · p_ie),   g_e = n_e · f_e / nb
+    /// ```
+    ///
+    /// so descent drains probability from overloaded experts.  The
+    /// default covers every gate that records `GateAssign::probs`; a
+    /// gate without full probabilities inherits a no-op, as does
+    /// `coef == 0` (the config default, preserving pre-wiring runs).
     fn balance_grad(
         &self,
-        _assign: &GateAssign,
-        _counts: &[u32],
-        _dscores: &mut TensorF32,
+        assign: &GateAssign,
+        counts: &[u32],
+        coef: f32,
+        dscores: &mut TensorF32,
     ) {
+        if coef == 0.0 {
+            return;
+        }
+        let Some(probs) = &assign.probs else { return };
+        let Ok((nb, ne)) = probs.dims2() else { return };
+        if counts.len() != ne || dscores.shape != probs.shape || nb == 0 {
+            return;
+        }
+        let total: u64 = counts.iter().map(|&c| c as u64).sum();
+        if total == 0 {
+            return;
+        }
+        let g: Vec<f32> = counts
+            .iter()
+            .map(|&c| ne as f32 * (c as f64 / total as f64) as f32 / nb as f32)
+            .collect();
+        for i in 0..nb {
+            let row = &probs.data[i * ne..(i + 1) * ne];
+            let dot: f32 = row.iter().zip(&g).map(|(p, ge)| p * ge).sum();
+            for j in 0..ne {
+                dscores.data[i * ne + j] += coef * row[j] * (g[j] - dot);
+            }
+        }
     }
 }
 
@@ -407,6 +446,92 @@ mod tests {
         let got = g.route(&s, 2).unwrap();
         assert_eq!(got.idx, want.idx);
         assert_eq!(got.w, want.w);
+    }
+
+    #[test]
+    fn balance_grad_zero_coef_and_balanced_routing_are_noops() {
+        let (nb, ne) = (8usize, 4usize);
+        // perfectly uniform probabilities + uniform counts
+        let a = GateAssign {
+            nb,
+            k: 1,
+            idx: (0..nb).map(|i| (i % ne) as u32).collect(),
+            w: vec![1.0; nb],
+            probs: Some(TensorF32::full(&[nb, ne], 1.0 / ne as f32)),
+        };
+        let counts = vec![2u32; ne];
+        let mut ds = TensorF32::zeros(&[nb, ne]);
+        TopKSoftmaxGate.balance_grad(&a, &counts, 0.0, &mut ds);
+        assert!(ds.data.iter().all(|&v| v == 0.0), "coef 0 must be a no-op");
+        TopKSoftmaxGate.balance_grad(&a, &counts, 1.0, &mut ds);
+        assert!(
+            ds.data.iter().all(|&v| v.abs() < 1e-7),
+            "balanced routing sits at the loss minimum"
+        );
+    }
+
+    #[test]
+    fn balance_grad_drains_the_hot_expert() {
+        let (nb, ne, k) = (16usize, 4usize, 2usize);
+        let mut s = TensorF32::zeros(&[nb, ne]);
+        for i in 0..nb {
+            s.data[i * ne] = 4.0; // every token prefers expert 0
+        }
+        let gate = TopKSoftmaxGate;
+        let a = gate.route(&s, k).unwrap();
+        let counts = a.kept_counts(ne);
+        assert_eq!(counts[0] as usize, nb);
+        let mut ds = TensorF32::zeros(&[nb, ne]);
+        gate.balance_grad(&a, &counts, 1.0, &mut ds);
+        for i in 0..nb {
+            let row = &ds.data[i * ne..(i + 1) * ne];
+            // descent (θ −= lr·ds) must lower the hot expert's score
+            assert!(row[0] > 0.0, "row {i}: hot expert grad {}", row[0]);
+            let sum: f32 = row.iter().sum();
+            assert!(sum.abs() < 1e-6, "row {i}: softmax grad rows sum to 0");
+        }
+    }
+
+    #[test]
+    fn balance_grad_moves_gate_weights_under_imbalanced_routing() {
+        // End-to-end direction without artifacts: scores = x·wg, the
+        // balance gradient alone (dw cotangent = 0) must produce a
+        // nonzero dwg = xᵀ·dscores, i.e. real gate-weight movement.
+        let (nb, dm, ne) = (12usize, 3usize, 4usize);
+        let mut x = TensorF32::zeros(&[nb, dm]);
+        Rng::new(4).fill_normal(&mut x.data, 1.0);
+        for v in x.data.iter_mut() {
+            *v = v.abs() + 0.1; // positive features: the biased column wins
+        }
+        let mut wg = TensorF32::zeros(&[dm, ne]);
+        Rng::new(5).fill_normal(&mut wg.data, 0.02);
+        // bias column 0 so routing collapses onto expert 0
+        for d in 0..dm {
+            wg.data[d * ne] += 2.0;
+        }
+        let scores = ops::matmul(&x, &wg).unwrap();
+        let gate = TopKSoftmaxGate;
+        let a = gate.route(&scores, 1).unwrap();
+        let counts = a.kept_counts(ne);
+        assert!(counts[0] as usize > nb / 2, "routing not imbalanced");
+        let mut ds = TensorF32::zeros(&[nb, ne]);
+        gate.balance_grad(&a, &counts, 0.5, &mut ds);
+        // dwg[d][e] = Σ_i x[i][d] · ds[i][e]
+        let mut dwg = TensorF32::zeros(&[dm, ne]);
+        for i in 0..nb {
+            for d in 0..dm {
+                for e in 0..ne {
+                    dwg.data[d * ne + e] += x.data[i * dm + d] * ds.data[i * ne + e];
+                }
+            }
+        }
+        assert!(dwg.l2_norm() > 1e-6, "balance loss must reach the gate GEMM");
+        let before = wg.clone();
+        ops::axpy(&mut wg, -0.1, &dwg).unwrap();
+        assert!(
+            ops::max_abs_diff(&wg, &before).unwrap() > 1e-7,
+            "gate weights did not move"
+        );
     }
 
     #[test]

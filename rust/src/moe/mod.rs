@@ -13,7 +13,10 @@
 //!   building the [`DispatchPlan`] (the *local data shuffle*), packing
 //!   rows for the Figure-2 all-to-all (the *global data exchange*),
 //!   re-batching incoming rows per local expert with power-of-two
-//!   capacity [`bucket_for`] padding, and the reverse path.
+//!   capacity [`bucket_for`] padding, and the reverse path.  For the
+//!   pipelined layer, [`chunk_peer_groups`] partitions the exchange
+//!   into ring-offset peer chunks so dispatch, expert compute, and the
+//!   return stream overlap (§4's hidden exchange).
 //!
 //! Layers are assembled from the three levels by
 //! `coordinator::MoeLayerBuilder`, driven by the `[moe]` config section.
@@ -30,6 +33,7 @@ pub use expert::{ExpertShard, FfnExpertShard};
 pub use gate::{Gate, NoisyTopKGate, SwitchGate, TopKSoftmaxGate};
 pub use monitor::{balance_loss, LoadMonitor};
 
+use crate::comm::{Comm, CommRequest};
 use crate::error::{Error, Result};
 use crate::tensor::{ops, TensorF32};
 
@@ -254,6 +258,118 @@ impl DispatchPlan {
             data: self.slots.clone(),
         }
     }
+
+    /// Packed-row offset of each destination worker's block: prefix
+    /// sums of `send_rows`, length `workers + 1`.  Slice `p`'s rows of
+    /// a packed `[nb*k, dm]` tensor are `offsets[p]..offsets[p+1]` —
+    /// the contiguous per-peer view the chunked exchange sends.
+    pub fn send_offsets(&self) -> Vec<usize> {
+        let mut offsets = Vec::with_capacity(self.workers + 1);
+        let mut acc = 0usize;
+        offsets.push(0);
+        for &r in &self.send_rows {
+            acc += r;
+            offsets.push(acc);
+        }
+        offsets
+    }
+}
+
+/// Peer groups of one pipelined-exchange chunk (ring-offset schedule).
+///
+/// Chunk `c` covers a contiguous range of ring offsets `o`; a worker
+/// dispatches to `(rank + o) % workers` and simultaneously hosts rows
+/// from `(rank − o) mod workers`, so every worker sends *and* receives
+/// `≈ workers/chunks` peers' worth of rows per chunk — the balanced
+/// decomposition the overlap schedule needs (contrast a naive
+/// "worker group c receives in chunk c" split, which would idle every
+/// other worker).  Each out-group is one *expert group*: the global
+/// experts hosted by those destination workers.
+#[derive(Clone, Debug)]
+pub struct ChunkPeers {
+    /// Peers this worker dispatches tokens to in the chunk (and later
+    /// receives expert outputs back from): `(rank + o) % workers`.
+    pub out_peers: Vec<usize>,
+    /// Peers whose tokens this worker hosts in the chunk (receives
+    /// dispatch from, returns outputs to): `(rank − o) mod workers`.
+    pub in_peers: Vec<usize>,
+}
+
+impl ChunkPeers {
+    /// The return direction of the same chunk: expert outputs flow
+    /// back along reversed edges (hosts send to the token owners).
+    pub fn reversed(&self) -> ChunkPeers {
+        ChunkPeers {
+            out_peers: self.in_peers.clone(),
+            in_peers: self.out_peers.clone(),
+        }
+    }
+}
+
+/// Partition the peer ring into `chunks` contiguous offset groups
+/// (sizes differ by at most one; `chunks` is clamped to `workers`).
+/// Offset 0 — the worker itself — lands in chunk 0, so local rows are
+/// computable before any remote bytes arrive.
+pub fn chunk_peer_groups(rank: usize, workers: usize, chunks: usize) -> Vec<ChunkPeers> {
+    let w = workers.max(1);
+    let c = chunks.clamp(1, w);
+    (0..c)
+        .map(|i| {
+            let lo = i * w / c;
+            let hi = (i + 1) * w / c;
+            ChunkPeers {
+                out_peers: (lo..hi).map(|o| (rank + o) % w).collect(),
+                in_peers: (lo..hi).map(|o| (rank + w - o) % w).collect(),
+            }
+        })
+        .collect()
+}
+
+/// Receive requests of one in-flight exchange chunk, by absolute peer.
+pub type PendingChunk = Vec<(usize, CommRequest)>;
+
+/// Queue one chunk's sends and bookmark its arrivals: isend this
+/// worker's buffers to the chunk's out-peers, irecv from its in-peers.
+/// Self rows short-circuit the wire into `self_part`.  Buffers are
+/// taken out of `send`, so each peer's slot can be posted only once.
+pub fn post_chunk<C: Comm>(
+    comm: &mut C,
+    rank: usize,
+    group: &ChunkPeers,
+    tag: u64,
+    send: &mut [Vec<f32>],
+    self_part: &mut [Option<Vec<f32>>],
+    pend: &mut PendingChunk,
+) -> Result<()> {
+    for &p in &group.out_peers {
+        let buf = std::mem::take(&mut send[p]);
+        if p == rank {
+            self_part[rank] = Some(buf);
+        } else {
+            comm.isend(p, tag, buf)?;
+        }
+    }
+    for &p in &group.in_peers {
+        if p != rank {
+            pend.push((p, comm.irecv(p, tag)?));
+        }
+    }
+    Ok(())
+}
+
+/// Complete one chunk's posted receives (arrival order where the
+/// backend supports it) and file the buffers by absolute peer.
+pub fn wait_chunk<C: Comm>(
+    comm: &mut C,
+    pend: PendingChunk,
+    parts: &mut [Option<Vec<f32>>],
+) -> Result<()> {
+    let (peers, reqs): (Vec<usize>, Vec<CommRequest>) = pend.into_iter().unzip();
+    let datas = comm.wait_all(reqs)?;
+    for (p, data) in peers.into_iter().zip(datas) {
+        parts[p] = Some(data.unwrap_or_default());
+    }
+    Ok(())
 }
 
 /// Rows arriving at one worker, regrouped per local expert and padded to
@@ -277,6 +393,20 @@ impl ExpertBatch {
     pub fn build(
         recv_counts: Vec<Vec<u32>>,
         recv_parts: &[Vec<f32>],
+        ne_local: usize,
+        dm: usize,
+        buckets: &[usize],
+    ) -> Result<ExpertBatch> {
+        let refs: Vec<&[f32]> = recv_parts.iter().map(|p| p.as_slice()).collect();
+        Self::build_from(recv_counts, &refs, ne_local, dm, buckets)
+    }
+
+    /// [`ExpertBatch::build`] over borrowed per-peer slices — the
+    /// chunked exchange assembles batches from buffers it also keeps
+    /// for the full-batch backward residual, so it can't give them up.
+    pub fn build_from(
+        recv_counts: Vec<Vec<u32>>,
+        recv_parts: &[&[f32]],
         ne_local: usize,
         dm: usize,
         buckets: &[usize],
@@ -318,6 +448,65 @@ impl ExpertBatch {
             }
         }
         Ok(ExpertBatch { ne_local, bucket, dm, xs, recv_counts, rows_per_expert })
+    }
+
+    /// Allocate the padded batch for known per-peer counts with every
+    /// row still zero — the receiving side of a *pipelined* exchange,
+    /// where buffers land chunk by chunk and are copied straight into
+    /// their final positions with [`ExpertBatch::fill_peer`].  Bucket
+    /// selection and layout match [`ExpertBatch::build`] exactly, so a
+    /// shell filled from every peer is bit-identical to a batch built
+    /// in one shot.
+    pub fn shell(
+        recv_counts: Vec<Vec<u32>>,
+        ne_local: usize,
+        dm: usize,
+        buckets: &[usize],
+    ) -> Result<ExpertBatch> {
+        let mut rows_per_expert = vec![0usize; ne_local];
+        for counts in &recv_counts {
+            if counts.len() != ne_local {
+                return Err(Error::Shape("recv counts arity".into()));
+            }
+            for (e, &c) in counts.iter().enumerate() {
+                rows_per_expert[e] += c as usize;
+            }
+        }
+        let max_rows = rows_per_expert.iter().copied().max().unwrap_or(0);
+        let bucket = bucket_for(max_rows.max(1), buckets)?;
+        let xs = TensorF32::zeros(&[ne_local, bucket, dm]);
+        Ok(ExpertBatch { ne_local, bucket, dm, xs, recv_counts, rows_per_expert })
+    }
+
+    /// Copy one peer's buffer (rows grouped by expert, as sent) into
+    /// its final rows of a [`ExpertBatch::shell`].  Positions depend
+    /// only on the counts, so peers may be filled in any arrival
+    /// order; filling the same peer twice just rewrites the same rows.
+    pub fn fill_peer(&mut self, p: usize, part: &[f32]) -> Result<()> {
+        let expect: usize = self.recv_counts[p].iter().map(|&c| c as usize).sum();
+        if part.len() != expect * self.dm {
+            return Err(Error::Shape(format!(
+                "peer {p} buffer has {} floats, counts say {}",
+                part.len(),
+                expect * self.dm
+            )));
+        }
+        // rows of peers q < p precede ours inside every expert block
+        let mut fill = vec![0usize; self.ne_local];
+        for counts in &self.recv_counts[..p] {
+            for (e, &c) in counts.iter().enumerate() {
+                fill[e] += c as usize;
+            }
+        }
+        let mut off = 0usize;
+        for e in 0..self.ne_local {
+            let rows = self.recv_counts[p][e] as usize;
+            let src = &part[off * self.dm..(off + rows) * self.dm];
+            let dst = (e * self.bucket + fill[e]) * self.dm;
+            self.xs.data[dst..dst + rows * self.dm].copy_from_slice(src);
+            off += rows;
+        }
+        Ok(())
     }
 
     /// Split expert outputs `[ne_local, bucket, dm]` back into per-peer
@@ -635,6 +824,111 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn send_offsets_are_prefix_sums() {
+        let s = scores(50, 8, 2);
+        let a = topk_softmax(&s, 2).unwrap();
+        let plan = DispatchPlan::build(&a, 4, 2).unwrap();
+        let offsets = plan.send_offsets();
+        assert_eq!(offsets.len(), 5);
+        assert_eq!(offsets[0], 0);
+        assert_eq!(offsets[4], 100);
+        for w in 0..4 {
+            assert_eq!(offsets[w + 1] - offsets[w], plan.send_rows[w]);
+        }
+    }
+
+    #[test]
+    fn chunk_peer_groups_cover_and_mirror() {
+        for workers in [1usize, 2, 3, 4, 7, 8] {
+            for chunks in [1usize, 2, 3, 4, 16] {
+                for rank in 0..workers {
+                    let groups = chunk_peer_groups(rank, workers, chunks);
+                    assert_eq!(groups.len(), chunks.clamp(1, workers));
+                    // self is in chunk 0, both directions
+                    assert!(groups[0].out_peers.contains(&rank));
+                    assert!(groups[0].in_peers.contains(&rank));
+                    // every peer appears exactly once per direction
+                    let mut outs: Vec<usize> =
+                        groups.iter().flat_map(|g| g.out_peers.clone()).collect();
+                    let mut ins: Vec<usize> =
+                        groups.iter().flat_map(|g| g.in_peers.clone()).collect();
+                    outs.sort_unstable();
+                    ins.sort_unstable();
+                    assert_eq!(outs, (0..workers).collect::<Vec<_>>());
+                    assert_eq!(ins, (0..workers).collect::<Vec<_>>());
+                }
+                // mirror property: r dispatches to p in chunk c exactly
+                // when p hosts r in its own chunk c — the invariant that
+                // makes the per-chunk tags line up across ranks.
+                for r in 0..workers {
+                    let gr = chunk_peer_groups(r, workers, chunks);
+                    for (c, g) in gr.iter().enumerate() {
+                        for &p in &g.out_peers {
+                            let gp = chunk_peer_groups(p, workers, chunks);
+                            assert!(
+                                gp[c].in_peers.contains(&r),
+                                "w={workers} c={chunks}: {r}→{p} not mirrored"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn build_from_matches_build() {
+        let dm = 2;
+        let recv_counts = vec![vec![1u32, 2], vec![2, 0]];
+        let p0: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let p1: Vec<f32> = (10..14).map(|i| i as f32).collect();
+        let owned = ExpertBatch::build(
+            recv_counts.clone(),
+            &[p0.clone(), p1.clone()],
+            2,
+            dm,
+            &[4],
+        )
+        .unwrap();
+        let borrowed = ExpertBatch::build_from(
+            recv_counts,
+            &[p0.as_slice(), p1.as_slice()],
+            2,
+            dm,
+            &[4],
+        )
+        .unwrap();
+        assert_eq!(owned.xs.data, borrowed.xs.data);
+        assert_eq!(owned.rows_per_expert, borrowed.rows_per_expert);
+        assert_eq!(owned.bucket, borrowed.bucket);
+    }
+
+    #[test]
+    fn shell_filled_in_any_order_matches_build() {
+        let dm = 2;
+        let recv_counts = vec![vec![1u32, 2], vec![2, 0], vec![0, 1]];
+        let parts: Vec<Vec<f32>> = [3usize, 2, 1]
+            .iter()
+            .enumerate()
+            .map(|(p, &rows)| {
+                (0..rows * dm).map(|i| (p * 100 + i) as f32).collect()
+            })
+            .collect();
+        let built =
+            ExpertBatch::build(recv_counts.clone(), &parts, 2, dm, &[4]).unwrap();
+        let mut shell = ExpertBatch::shell(recv_counts, 2, dm, &[4]).unwrap();
+        assert_eq!(shell.bucket, built.bucket);
+        assert_eq!(shell.rows_per_expert, built.rows_per_expert);
+        // fill peers out of order — positions depend only on counts
+        for &p in &[2usize, 0, 1] {
+            shell.fill_peer(p, &parts[p]).unwrap();
+        }
+        assert_eq!(shell.xs.data, built.xs.data);
+        // length validation
+        assert!(shell.fill_peer(0, &[1.0]).is_err());
     }
 
     #[test]

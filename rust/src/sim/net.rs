@@ -14,6 +14,12 @@
 //!   t_a2a = α·(n-1) + (bytes_sent_by_worker) / β
 //!
 //! Ring all-reduce of `s` bytes: 2(n-1) steps of s/n bytes each.
+//!
+//! Overlapped MoE steps (the `[comm] overlap` pipeline) are scored as
+//! `max(wire, compute)` per chunk with fill/drain ends — see
+//! [`NetModel::moe_step_overlapped`] vs the blocking
+//! [`NetModel::moe_step_blocking`] — so Figure 6 reflects the win of
+//! hiding the global exchange behind expert computation.
 
 /// Preset link parameters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -90,6 +96,42 @@ impl NetModel {
         let per_step = bytes as f64 / n as f64;
         steps as f64 * (self.alpha + per_step / self.beta)
     }
+
+    /// One blocking MoE exchange+compute phase: the full all-to-all
+    /// (`bytes_out` egress) strictly before `compute` seconds of
+    /// expert work — the `chunks = 1` baseline the paper improves on.
+    pub fn moe_step_blocking(&self, n: usize, bytes_out: usize, compute: f64) -> f64 {
+        self.all_to_all(n, bytes_out) + compute
+    }
+
+    /// The same phase pipelined over `chunks` ring-offset peer groups:
+    /// chunk `i+1`'s wire time hides behind chunk `i`'s compute (and
+    /// vice versa), so steady state costs `max(wire, compute)` per
+    /// chunk, plus one wire fill and one compute drain at the ends:
+    ///
+    /// ```text
+    /// t = w + (C−1)·max(w, k) + k,   w = wire/C,  k = compute/C
+    /// ```
+    ///
+    /// `chunks = 1` degenerates to [`NetModel::moe_step_blocking`]
+    /// exactly; with both wire and compute nonzero and `chunks > 1`
+    /// the pipelined time is strictly lower.
+    pub fn moe_step_overlapped(
+        &self,
+        n: usize,
+        bytes_out: usize,
+        compute: f64,
+        chunks: usize,
+    ) -> f64 {
+        if !self.enabled || n <= 1 {
+            return compute;
+        }
+        let c = chunks.clamp(1, n) as f64;
+        let wire_chunk =
+            self.alpha * ((n - 1) as f64 / c) + bytes_out as f64 / self.beta / c;
+        let comp_chunk = compute / c;
+        wire_chunk + (c - 1.0) * wire_chunk.max(comp_chunk) + comp_chunk
+    }
 }
 
 #[cfg(test)]
@@ -137,5 +179,47 @@ mod tests {
         let m = NetModel::preset(NetPreset::IbEdr);
         assert_eq!(m.all_to_all(1, 123), 0.0);
         assert_eq!(m.all_reduce(1, 123), 0.0);
+    }
+
+    #[test]
+    fn overlap_one_chunk_equals_blocking() {
+        let m = NetModel::preset(NetPreset::IbEdr);
+        let (n, bytes, compute) = (8usize, 4 << 20, 3e-3);
+        let blocking = m.moe_step_blocking(n, bytes, compute);
+        let degenerate = m.moe_step_overlapped(n, bytes, compute, 1);
+        assert!((blocking - degenerate).abs() < 1e-15);
+    }
+
+    #[test]
+    fn overlap_strictly_beats_blocking_with_work_on_both_sides() {
+        // the acceptance property: at ≥ 4 workers, nonzero wire and
+        // compute, chunked pipelining must score strictly lower
+        let m = NetModel::preset(NetPreset::IbEdr);
+        for n in [4usize, 8, 16] {
+            for chunks in [2usize, 4] {
+                for compute in [1e-4, 1e-2] {
+                    let bytes = 8 << 20;
+                    let blocking = m.moe_step_blocking(n, bytes, compute);
+                    let overlapped = m.moe_step_overlapped(n, bytes, compute, chunks);
+                    assert!(
+                        overlapped < blocking,
+                        "n={n} chunks={chunks} compute={compute}: \
+                         {overlapped} !< {blocking}"
+                    );
+                    // and never better than the max(wire, compute) bound
+                    assert!(
+                        overlapped >= m.all_to_all(n, bytes).max(compute) - 1e-15,
+                        "pipeline cannot beat its longest stage"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_disabled_net_is_pure_compute() {
+        let m = NetModel::preset(NetPreset::None);
+        assert_eq!(m.moe_step_overlapped(8, 1 << 30, 2.5, 4), 2.5);
+        assert_eq!(m.moe_step_blocking(8, 1 << 30, 2.5), 2.5);
     }
 }

@@ -1,0 +1,172 @@
+//! Comm-backend conformance: one shared test matrix, run over both
+//! backends — the thread-channel `CommHandle` and the socket
+//! `TcpGroup` — so the two implementations of the [`Comm`] trait can
+//! never drift apart on the behaviours the MoE layer leans on:
+//!
+//! * out-of-order tag matching (arrivals park, never drop)
+//! * empty buffers (zero-length p2p and ragged all-to-all)
+//! * large payloads through the framing layer
+//! * subgroup all-reduce
+//! * nonblocking request handles (`isend`/`irecv`/`wait_all`)
+//! * the decomposed all-to-all (`all_to_all_v_start`, arrivals
+//!   consumed in any order)
+//! * both barrier algorithms (dissemination + legacy empty a2a)
+
+use fastmoe::comm::tcp::TcpGroup;
+use fastmoe::comm::{run_workers, Comm};
+use fastmoe::Result;
+
+const WORKERS: usize = 4;
+
+/// The matrix: every entry must hold on every backend.
+fn conformance_suite<C: Comm>(h: &mut C) -> Result<()> {
+    out_of_order_tags(h)?;
+    empty_buffers(h)?;
+    large_payloads(h)?;
+    subgroup_all_reduce(h)?;
+    request_handles(h)?;
+    decomposed_a2a(h)?;
+    barrier_variants(h)?;
+    Ok(())
+}
+
+fn out_of_order_tags<C: Comm>(h: &mut C) -> Result<()> {
+    let n = h.size();
+    let r = h.rank();
+    let base = h.next_seq() << 8;
+    let next = (r + 1) % n;
+    let prev = (r + n - 1) % n;
+    // send tag 2 before tag 1; receive tag 1 first — the tag-2 frame
+    // must park, not vanish
+    h.send(next, base | 2, vec![r as f32, 2.0])?;
+    h.send(next, base | 1, vec![r as f32, 1.0])?;
+    let one = h.recv(prev, base | 1)?;
+    let two = h.recv(prev, base | 2)?;
+    assert_eq!(one, vec![prev as f32, 1.0]);
+    assert_eq!(two, vec![prev as f32, 2.0]);
+    Ok(())
+}
+
+fn empty_buffers<C: Comm>(h: &mut C) -> Result<()> {
+    let n = h.size();
+    let r = h.rank();
+    // zero-length point-to-point
+    let base = h.next_seq() << 8;
+    h.send((r + 1) % n, base | 1, Vec::new())?;
+    assert!(h.recv((r + n - 1) % n, base | 1)?.is_empty());
+    // all-to-all of nothing at all
+    let out = h.all_to_all_v((0..n).map(|_| Vec::new()).collect())?;
+    assert!(out.iter().all(|b| b.is_empty()));
+    // ragged: empty buffers only toward even ranks
+    let send: Vec<Vec<f32>> = (0..n)
+        .map(|p| if p % 2 == 0 { Vec::new() } else { vec![r as f32] })
+        .collect();
+    let out = h.all_to_all_v(send)?;
+    for (p, buf) in out.iter().enumerate() {
+        if r % 2 == 0 {
+            assert!(buf.is_empty(), "peer {p} sent to an even rank");
+        } else {
+            assert_eq!(buf, &vec![p as f32]);
+        }
+    }
+    Ok(())
+}
+
+fn large_payloads<C: Comm>(h: &mut C) -> Result<()> {
+    let n = h.size();
+    let r = h.rank();
+    let len = 60_000; // 240 KB per peer buffer
+    let send: Vec<Vec<f32>> = (0..n).map(|p| vec![(r * n + p) as f32; len]).collect();
+    let out = h.all_to_all_v(send)?;
+    for (p, buf) in out.iter().enumerate() {
+        assert_eq!(buf.len(), len);
+        assert!(buf.iter().all(|&v| v == (p * n + r) as f32));
+    }
+    Ok(())
+}
+
+fn subgroup_all_reduce<C: Comm>(h: &mut C) -> Result<()> {
+    let n = h.size();
+    let r = h.rank();
+    let group: Vec<usize> = (0..n).filter(|p| p % 2 == r % 2).collect();
+    let mut buf = vec![(r + 1) as f32; 6];
+    h.all_reduce_sum_group(&mut buf, &group)?;
+    let want: f32 = group.iter().map(|&p| (p + 1) as f32).sum();
+    assert!(buf.iter().all(|&x| x == want), "got {buf:?}, want {want}");
+    Ok(())
+}
+
+fn request_handles<C: Comm>(h: &mut C) -> Result<()> {
+    let n = h.size();
+    let r = h.rank();
+    let tag = (h.next_seq() << 8) | 3;
+    let mut reqs = Vec::new();
+    for p in 0..n {
+        if p != r {
+            reqs.push(h.isend(p, tag, vec![r as f32; p + 1])?);
+        }
+    }
+    // explicit flush between posting and waiting must be harmless on
+    // every backend (and is what lets compute hide the flight on TCP)
+    h.flush()?;
+    // receives posted in *reverse* peer order: results must still line
+    // up slot-for-slot with the requests
+    let mut want = Vec::new();
+    for p in (0..n).rev() {
+        if p != r {
+            reqs.push(h.irecv(p, tag)?);
+            want.push(vec![p as f32; r + 1]);
+        }
+    }
+    let results = h.wait_all(reqs)?;
+    let sends = n - 1;
+    for res in &results[..sends] {
+        assert!(res.is_none(), "send request produced data");
+    }
+    for (res, want) in results[sends..].iter().zip(&want) {
+        assert_eq!(res.as_ref(), Some(want));
+    }
+    Ok(())
+}
+
+fn decomposed_a2a<C: Comm>(h: &mut C) -> Result<()> {
+    let n = h.size();
+    let r = h.rank();
+    let send: Vec<Vec<f32>> =
+        (0..n).map(|p| vec![(r * 10 + p) as f32; r + p]).collect();
+    let mut pending = h.all_to_all_v_start(send)?;
+    // consume arrivals in reverse peer order
+    for p in (0..n).rev() {
+        assert_eq!(pending.expected(p), p + r);
+        let buf = pending.wait_peer(h, p)?;
+        assert_eq!(buf, vec![(p * 10 + r) as f32; p + r]);
+    }
+    Ok(())
+}
+
+fn barrier_variants<C: Comm>(h: &mut C) -> Result<()> {
+    h.barrier()?;
+    h.barrier_a2a()?;
+    h.barrier()?;
+    Ok(())
+}
+
+#[test]
+fn conformance_over_thread_channels() {
+    run_workers(WORKERS, |mut h| conformance_suite(&mut h)).unwrap();
+}
+
+#[test]
+fn conformance_over_tcp_mesh() {
+    let joins: Vec<_> = (0..WORKERS)
+        .map(|rank| {
+            std::thread::spawn(move || {
+                let mut g = TcpGroup::connect_local(rank, WORKERS, 47710).unwrap();
+                conformance_suite(&mut g).unwrap();
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
+}

@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# Perf trajectory: run the sim-backed Figure-6 scaling bench with the
+# exchange/compute overlap scored on AND off, and record the result as
+# BENCH_pr2.json at the repo root.
+#
+#   scripts/bench_report.sh            # default: 4 chunks, 4 iters
+#   CHUNKS=8 ITERS=8 scripts/bench_report.sh
+#
+# One bench invocation scores both modes (blocking `wire + compute` vs
+# overlapped `max(wire, compute)` per chunk) from the same measured
+# compute and exchange volume, so the comparison is apples-to-apples;
+# a second invocation actually *exercises* the pipelined layer path
+# (--overlap) as a correctness/perf sanity artifact under runs/.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+CHUNKS="${CHUNKS:-4}"
+ITERS="${ITERS:-4}"
+
+cd "$ROOT/rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH — install the rust toolchain" >&2
+    echo "       (rustup.rs, or the image's baked-in rust_pallas toolchain)" >&2
+    exit 1
+fi
+
+mkdir -p runs
+
+# 1. measured on the blocking path, scored both ways → the PR record
+cargo bench --bench fig6_scale -- \
+    --iters "$ITERS" --chunks "$CHUNKS" --json "$ROOT/BENCH_pr2.json"
+
+# 2. measured on the pipelined path (exercises chunked isend/irecv),
+#    kept as a side artifact
+cargo bench --bench fig6_scale -- \
+    --iters "$ITERS" --chunks "$CHUNKS" --overlap \
+    --json runs/fig6_overlap_measured.json
+
+echo "bench_report.sh: wrote $ROOT/BENCH_pr2.json (and runs/fig6_overlap_measured.json)"
