@@ -35,7 +35,7 @@ use fastmoe::tensor::TensorF32;
 use fastmoe::util;
 
 fn main() -> fastmoe::Result<()> {
-    let args = Args::from_env(&["overlap", "no-overlap"])?;
+    let args = Args::from_env(&["overlap", "no-overlap", "no-pool", "progress", "no-progress"])?;
     let workers = args.usize_or("workers", 4)?;
     let iters = args.usize_or("iters", 8)?;
     let seed = args.u64_or("seed", 7)?;
@@ -93,8 +93,8 @@ fn main() -> fastmoe::Result<()> {
     })?;
 
     let mut table = Table::new(&[
-        "worker", "time_s", "GFLOP/s", "a2a_traffic", "sim_wire_ms", "pad_overhead",
-        "balance_loss",
+        "worker", "time_s", "GFLOP/s", "a2a_traffic", "copied", "pool_hit/miss",
+        "sim_wire_ms", "pad_overhead", "balance_loss",
     ]);
     let ne_global = results[0].5.len();
     let mut totals_all = vec![0u64; ne_global];
@@ -109,6 +109,12 @@ fn main() -> fastmoe::Result<()> {
             format!("{secs:.2}"),
             format!("{:.2}", util::gflops(*flops, *secs)),
             util::fmt_bytes(bytes),
+            util::fmt_bytes(counters.get("moe_copy_bytes") as usize),
+            format!(
+                "{}/{}",
+                counters.get("pool_hits"),
+                counters.get("pool_misses")
+            ),
             format!("{wire:.2}"),
             format!("{:.1}%", pad * 100.0),
             format!("{balance:.3}"),

@@ -10,6 +10,11 @@
 //! Expected shape (paper Fig. 5): FastMoE latency roughly flat in the
 //! expert count; the baseline grows ~linearly; the gap widens with
 //! more experts.
+//!
+//! The `moe_fwd_zc_ms` column times the same forward through the
+//! zero-copy argument path (`Executable::run_refs`: borrowed inputs,
+//! no owned-tensor staging) — the single-device share of the PR-3
+//! bytes-copied win, visible next to the owned-argument `run`.
 
 use std::collections::BTreeSet;
 
@@ -17,7 +22,7 @@ use fastmoe::bench::{bench, BenchOpts, Table};
 use fastmoe::metrics::CsvWriter;
 use fastmoe::rng::Rng;
 use fastmoe::runtime::Runtime;
-use fastmoe::tensor::{HostTensor, TensorF32};
+use fastmoe::tensor::{HostTensor, HostTensorRef, TensorF32};
 
 fn inputs_for(rt: &Runtime, name: &str, rng: &mut Rng) -> Vec<HostTensor> {
     let meta = &rt.manifest.artifact(name).unwrap().inputs;
@@ -50,6 +55,7 @@ fn main() -> fastmoe::Result<()> {
     let mut table = Table::new(&[
         "experts",
         "fastmoe_fwd_ms",
+        "fastmoe_fwd_zc_ms",
         "naive_fwd_ms",
         "fwd_speedup",
         "fastmoe_train_ms",
@@ -58,12 +64,16 @@ fn main() -> fastmoe::Result<()> {
     ]);
     let mut csv = CsvWriter::create(
         "runs/fig5_single.csv",
-        &["experts", "moe_fwd_ms", "naive_fwd_ms", "moe_train_ms", "naive_train_ms"],
+        &[
+            "experts", "moe_fwd_ms", "moe_fwd_zc_ms", "naive_fwd_ms", "moe_train_ms",
+            "naive_train_ms",
+        ],
     )?;
     let mut rng = Rng::new(5);
 
     for &ne in &expert_counts {
         let mut ms = [0f64; 4];
+        let mut zc_ms = 0f64;
         for (i, kind) in ["moe_fwd", "naive_fwd", "moe_grad", "naive_grad"]
             .iter()
             .enumerate()
@@ -75,19 +85,32 @@ fn main() -> fastmoe::Result<()> {
                 let _ = exe.run(&inputs).unwrap();
             });
             ms[i] = r.mean_secs() * 1e3;
+            if *kind == "moe_fwd" {
+                // same forward, zero-copy argument staging
+                let refs: Vec<HostTensorRef> =
+                    inputs.iter().map(HostTensorRef::from).collect();
+                let r = bench(&format!("{name}_zc"), &opts, || {
+                    let _ = exe.run_refs(&refs).unwrap();
+                });
+                zc_ms = r.mean_secs() * 1e3;
+            }
         }
         // "train" = fwd + bwd: the grad artifacts contain both
         table.row(vec![
             ne.to_string(),
             format!("{:.2}", ms[0]),
+            format!("{:.2}", zc_ms),
             format!("{:.2}", ms[1]),
             format!("{:.2}x", ms[1] / ms[0]),
             format!("{:.2}", ms[2]),
             format!("{:.2}", ms[3]),
             format!("{:.2}x", ms[3] / ms[2]),
         ]);
-        csv.rowf(&[ne as f64, ms[0], ms[1], ms[2], ms[3]])?;
-        println!("  e{ne}: fwd {:.2} vs {:.2} ms, train {:.2} vs {:.2} ms", ms[0], ms[1], ms[2], ms[3]);
+        csv.rowf(&[ne as f64, ms[0], zc_ms, ms[1], ms[2], ms[3]])?;
+        println!(
+            "  e{ne}: fwd {:.2} (zc {:.2}) vs {:.2} ms, train {:.2} vs {:.2} ms",
+            ms[0], zc_ms, ms[1], ms[2], ms[3]
+        );
     }
 
     println!("\n{}", table.render());

@@ -15,11 +15,16 @@
 //! slowed by the same factor — otherwise communication would be
 //! invisibly cheap and the figure's shape unreproducible).
 //!
-//! Every worker count is scored twice from the same measured compute
-//! and exchange volume: blocking (`wire + compute`) and overlapped
-//! (`max(wire, compute)` per chunk with fill/drain ends — see
-//! `sim::NetModel::moe_step_overlapped`), quantifying §4's win of
-//! hiding the global exchange behind expert computation.
+//! Every worker count is scored *three* ways from the same measured
+//! compute, exchange volume and host copy/alloc counters: blocking
+//! (`wire + compute + host`), the PR-2 overlapped schedule
+//! (`max(wire, compute)` per chunk, plus the copy-heavy host term —
+//! per-chunk batches rebuilt from wire buffers, cloned padded into the
+//! executable, freshly allocated), and the PR-3 zero-copy overlapped
+//! schedule (same pipeline with exactly the measured copy/alloc
+//! bytes — single landing, slice-view staging, pooled buffers).  See
+//! `sim::NetModel::moe_step_overlapped_host`; the bench asserts
+//! zero-copy ≤ overlapped at every point.
 //!
 //! ```bash
 //! cargo bench --bench fig6_scale                    # scaled IB-EDR (default)
@@ -78,14 +83,16 @@ fn main() -> fastmoe::Result<()> {
 
     let mut table = Table::new(&[
         "workers", "experts", "compute_s/dev", "wire_ms/iter", "blocking_ms/iter",
-        "overlap_ms/iter", "speedup", "agg_GFLOP/s", "efficiency", "a2a_MB/iter",
+        "overlap_ms/iter", "zerocopy_ms/iter", "speedup", "zc_speedup",
+        "agg_GFLOP/s", "efficiency", "a2a_MB/iter", "copied_MB/iter",
     ]);
     let mut csv = CsvWriter::create(
         "runs/fig6_scale.csv",
         &[
-            "workers", "agg_gflops", "agg_gflops_overlap", "compute_s_per_dev",
-            "wire_ms_per_iter", "blocking_ms_per_iter", "overlap_ms_per_iter",
-            "a2a_bytes_per_iter",
+            "workers", "agg_gflops", "agg_gflops_overlap", "agg_gflops_zerocopy",
+            "compute_s_per_dev", "wire_ms_per_iter", "blocking_ms_per_iter",
+            "overlap_ms_per_iter", "zerocopy_ms_per_iter", "a2a_bytes_per_iter",
+            "copied_bytes_per_iter", "alloc_bytes_per_iter",
         ],
     )?;
     let mut base: Option<f64> = None;
@@ -113,9 +120,18 @@ fn main() -> fastmoe::Result<()> {
                 let dy = TensorF32::full(&[layer.nb, layer.dm], 1e-3);
                 let _ = layer.backward(&mut h, &state, &dy, &mut counters)?;
                 flops += 3.0 * layer.flops(&state);
+                layer.recycle(state);
             }
             h.barrier()?;
-            Ok((watch.secs(), flops, counters.get("moe_a2a_bytes")))
+            let bucket_bytes = counters.get("moe_bucket_rows") * layer.dm as u64 * 4;
+            Ok((
+                watch.secs(),
+                flops,
+                counters.get("moe_a2a_bytes"),
+                counters.get("moe_copy_bytes"),
+                counters.get("pool_alloc_bytes"),
+                bucket_bytes,
+            ))
         })?;
 
         // one core time-slices the workers: the group wall time is the
@@ -124,6 +140,12 @@ fn main() -> fastmoe::Result<()> {
         let total_flops: f64 = results.iter().map(|r| r.1).sum();
         let bytes_per_iter =
             results.iter().map(|r| r.2).max().unwrap_or(0) as usize / iters.max(1);
+        let copied_per_iter =
+            results.iter().map(|r| r.3).max().unwrap_or(0) as usize / iters.max(1);
+        let alloc_per_iter =
+            results.iter().map(|r| r.4).max().unwrap_or(0) as usize / iters.max(1);
+        let bucket_bytes_per_iter =
+            results.iter().map(|r| r.5).max().unwrap_or(0) as usize / iters.max(1);
         let compute_per_dev = wall / w as f64;
         let compute_per_iter = compute_per_dev / iters.max(1) as f64;
 
@@ -135,9 +157,13 @@ fn main() -> fastmoe::Result<()> {
             "ib-edr-scaled" => {
                 let ratio = device_gflops.unwrap() / PAPER_DEVICE_GFLOPS;
                 let base_net = NetModel::preset(NetPreset::IbEdr);
+                // host copy/alloc bandwidths scale with the device so
+                // the copy:compute ratio matches the paper's testbed
                 NetModel {
                     alpha: base_net.alpha / ratio.max(1e-9),
                     beta: base_net.beta * ratio,
+                    host_beta: base_net.host_beta * ratio,
+                    alloc_beta: base_net.alloc_beta * ratio,
                     enabled: true,
                 }
             }
@@ -145,12 +171,47 @@ fn main() -> fastmoe::Result<()> {
         };
 
         let wire_per_iter = net.all_to_all(w, bytes_per_iter);
-        let blocking_iter = net.moe_step_blocking(w, bytes_per_iter, compute_per_iter);
-        let overlap_iter =
-            net.moe_step_overlapped(w, bytes_per_iter, compute_per_iter, chunks);
+        let blocking_iter = net.moe_step_blocking_host(
+            w,
+            bytes_per_iter,
+            compute_per_iter,
+            copied_per_iter,
+            alloc_per_iter,
+        );
+        // the PR 2 overlapped schedule: per-chunk batches were rebuilt
+        // from the wire buffers AND cloned (padded) into the
+        // executable, with every container freshly allocated — one
+        // extra padded-bucket copy and one padded-bucket allocation
+        // per step beyond what the zero-copy schedule measures
+        let overlap_iter = net.moe_step_overlapped_host(
+            w,
+            bytes_per_iter,
+            compute_per_iter,
+            chunks,
+            copied_per_iter + bucket_bytes_per_iter,
+            alloc_per_iter + bucket_bytes_per_iter,
+        );
+        // the PR 3 schedule: rows land once, chunks compute on slice
+        // views, staging recycles through the pool — exactly the
+        // measured copy/alloc counters
+        let zerocopy_iter = net.moe_step_overlapped_host(
+            w,
+            bytes_per_iter,
+            compute_per_iter,
+            chunks,
+            copied_per_iter,
+            alloc_per_iter,
+        );
+        assert!(
+            zerocopy_iter <= overlap_iter,
+            "zero-copy must not score above the copy-heavy overlap \
+             (w={w}: {zerocopy_iter} vs {overlap_iter})"
+        );
         let speedup = blocking_iter / overlap_iter.max(1e-12);
+        let zc_speedup = blocking_iter / zerocopy_iter.max(1e-12);
         let agg = gflops(total_flops, blocking_iter * iters as f64);
         let agg_overlap = gflops(total_flops, overlap_iter * iters as f64);
+        let agg_zerocopy = gflops(total_flops, zerocopy_iter * iters as f64);
         let ne_global = rt
             .manifest
             .artifact(&format!("gate_fwd_w{w}"))
@@ -167,40 +228,64 @@ fn main() -> fastmoe::Result<()> {
             format!("{:.1}", wire_per_iter * 1e3),
             format!("{:.1}", blocking_iter * 1e3),
             format!("{:.1}", overlap_iter * 1e3),
+            format!("{:.1}", zerocopy_iter * 1e3),
             format!("{speedup:.2}x"),
+            format!("{zc_speedup:.2}x"),
             format!("{agg:.2}"),
             format!("{:.0}%", eff * 100.0),
             format!("{:.2}", bytes_per_iter as f64 / 1e6),
+            format!("{:.2}", copied_per_iter as f64 / 1e6),
         ]);
         csv.rowf(&[
             w as f64,
             agg,
             agg_overlap,
+            agg_zerocopy,
             compute_per_dev,
             wire_per_iter * 1e3,
             blocking_iter * 1e3,
             overlap_iter * 1e3,
+            zerocopy_iter * 1e3,
             bytes_per_iter as f64,
+            copied_per_iter as f64,
+            alloc_per_iter as f64,
         ])?;
         let mut row = BTreeMap::new();
         row.insert("workers".into(), Json::Num(w as f64));
         row.insert("chunks".into(), Json::Num(chunks as f64));
         row.insert("compute_s_per_iter".into(), Json::Num(compute_per_iter));
         row.insert("a2a_bytes_per_iter".into(), Json::Num(bytes_per_iter as f64));
+        row.insert(
+            "copied_bytes_per_iter".into(),
+            Json::Num(copied_per_iter as f64),
+        );
+        row.insert(
+            "alloc_bytes_per_iter".into(),
+            Json::Num(alloc_per_iter as f64),
+        );
         row.insert("wire_s_per_iter".into(), Json::Num(wire_per_iter));
         row.insert("blocking_s_per_iter".into(), Json::Num(blocking_iter));
         row.insert("overlapped_s_per_iter".into(), Json::Num(overlap_iter));
+        row.insert(
+            "zerocopy_overlapped_s_per_iter".into(),
+            Json::Num(zerocopy_iter),
+        );
         row.insert("speedup".into(), Json::Num(speedup));
+        row.insert("zerocopy_speedup".into(), Json::Num(zc_speedup));
         row.insert("agg_gflops_blocking".into(), Json::Num(agg));
         row.insert("agg_gflops_overlapped".into(), Json::Num(agg_overlap));
+        row.insert("agg_gflops_zerocopy".into(), Json::Num(agg_zerocopy));
         json_rows.push(Json::Object(row));
         println!(
             "  {w} workers: blocking {:.1} ms/iter vs overlapped {:.1} ms/iter \
-             ({speedup:.2}x; {:.1} ms wire, {:.0} ms compute)",
+             vs zero-copy {:.1} ms/iter ({speedup:.2}x / {zc_speedup:.2}x; \
+             {:.1} ms wire, {:.0} ms compute, {:.2} MB copied)",
             blocking_iter * 1e3,
             overlap_iter * 1e3,
+            zerocopy_iter * 1e3,
             wire_per_iter * 1e3,
             compute_per_iter * 1e3,
+            copied_per_iter as f64 / 1e6,
         );
     }
 

@@ -15,10 +15,14 @@
 //!
 //! * **Transport** — blocking `send`/`recv` plus the nonblocking
 //!   [`Comm::isend`]/[`Comm::irecv`], which return [`CommRequest`]
-//!   handles completed by [`Comm::wait`]/[`Comm::wait_all`], and
-//!   [`Comm::flush`] to push queued frames ahead of a long compute.
-//!   The handles are what lets the MoE layer keep tokens on the wire
-//!   while the expert shard computes (§4's overlap).
+//!   handles completed by [`Comm::wait`]/[`Comm::wait_all`],
+//!   [`Comm::flush`] to push queued frames ahead of a long compute,
+//!   and [`Comm::reclaim_spent`] to hand copied-out send buffers back
+//!   for pooling.  The handles are what lets the MoE layer keep tokens
+//!   on the wire while the expert shard computes (§4's overlap); the
+//!   TCP backend's optional *progress engine*
+//!   ([`tcp::TcpGroup::enable_progress`]) drains arrivals during that
+//!   compute and completes `wait_all` in true arrival order.
 //! * **Collectives** — [`Comm::all_to_all_v`] (the Figure-2 protocol:
 //!   phase 1 exchanges per-peer *counts*, phase 2 the data) decomposes
 //!   into per-peer requests via [`Comm::all_to_all_v_start`], so
@@ -221,6 +225,17 @@ pub trait Comm {
     /// run.  No-op on backends whose sends are immediately visible.
     fn flush(&mut self) -> Result<()> {
         Ok(())
+    }
+
+    /// Hand back send buffers the backend is finished with, so callers
+    /// can recycle them through a buffer pool instead of reallocating
+    /// next step.  A backend that *copies* payloads on `isend` (TCP
+    /// frames them into the socket writer) is done with the `Vec`
+    /// immediately; a backend that *moves* them (thread channels hand
+    /// the very buffer to the receiver) returns nothing here — the
+    /// receiving side recycles instead.  Default: nothing to reclaim.
+    fn reclaim_spent(&mut self) -> Vec<Vec<f32>> {
+        Vec::new()
     }
 
     /// Synchronisation barrier — dissemination algorithm: ⌈log₂ n⌉

@@ -17,20 +17,62 @@
 //! identifies itself with its rank. A connect loop with retries makes
 //! start-up order irrelevant.
 //!
-//! Nonblocking transport: `isend` writes the frame into the per-peer
-//! user-space buffer *without* flushing; the next blocking operation
-//! (`recv`, `wait`, `wait_all`, `barrier`) — or an explicit
-//! `Comm::flush` before a long compute — flushes every dirty writer
-//! in one batch, so a pipelined caller pays one syscall burst per
-//! chunk instead of one flush per message.
+//! Nonblocking transport, two modes:
+//!
+//! * **Deferred flush** (default): `isend` writes the frame into the
+//!   per-peer user-space buffer *without* flushing; the next blocking
+//!   operation (`recv`, `wait`, `wait_all`, `barrier`) — or an explicit
+//!   `Comm::flush` before a long compute — flushes every dirty writer
+//!   in one batch, so a pipelined caller pays one syscall burst per
+//!   chunk instead of one flush per message.
+//! * **Progress engine** ([`TcpGroup::enable_progress`], the
+//!   `[comm] progress` knob): one reader thread per peer drains socket
+//!   arrivals into a shared inbox *while the expert shard computes*,
+//!   and `isend` flushes eagerly so frames genuinely depart before the
+//!   next blocking op.  `wait_all` then completes requests in **true
+//!   arrival order** across peers (the default mode can only consume
+//!   out-of-order within what the kernel already buffered), and a
+//!   message whose receive hasn't even been posted yet still moves
+//!   wire → user space concurrently with compute.
+//!
+//! Either way the backend copies each `isend` payload into the socket
+//! writer and is then done with the caller's `Vec` — those buffers are
+//! handed back through [`Comm::reclaim_spent`] so the MoE layer's
+//! buffer pool can reuse them next step instead of reallocating.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::{Comm, CommRequest, Msg};
 use crate::error::{Error, Result};
 use crate::metrics::Counters;
+
+/// Spent-send buffers retained for [`Comm::reclaim_spent`]; beyond
+/// these caps they are dropped, so a caller that never drains cannot
+/// pin more than `SPENT_CAP_BYTES` of payload memory.  Only `isend`
+/// (the pooled hot path) retires buffers — blocking `send` frees its
+/// payload immediately, as before.
+const SPENT_CAP: usize = 256;
+const SPENT_CAP_BYTES: usize = 32 << 20;
+
+/// Shared state between a rank's main thread and its progress readers.
+struct ProgressShared {
+    inbox: Mutex<Inbox>,
+    cv: Condvar,
+}
+
+struct Inbox {
+    /// Messages drained off the sockets, in arrival order.
+    msgs: Vec<Msg>,
+    /// Per-peer: `Some(reason)` once the reader stopped — a clean
+    /// disconnect or the underlying I/O / corruption error, preserved
+    /// so callers don't misdiagnose a bad frame as a peer shutdown.
+    closed: Vec<Option<String>>,
+    /// Total messages ever drained by the engine.
+    arrivals: u64,
+}
 
 /// A rank's endpoint into a TCP full-mesh group.
 pub struct TcpGroup {
@@ -41,6 +83,12 @@ pub struct TcpGroup {
     parked: Vec<Msg>,
     /// `isend` frames buffered but not yet flushed to the kernel.
     flush_needed: bool,
+    /// Send buffers already framed into the writers (reclaimable).
+    spent: Vec<Vec<f32>>,
+    /// Capacity bytes currently held in `spent`.
+    spent_bytes: usize,
+    /// Progress engine state; `Some` after [`TcpGroup::enable_progress`].
+    progress: Option<Arc<ProgressShared>>,
     seq: u64,
     pub counters: Counters,
 }
@@ -101,6 +149,9 @@ impl TcpGroup {
             readers,
             parked: Vec::new(),
             flush_needed: false,
+            spent: Vec::new(),
+            spent_bytes: 0,
+            progress: None,
             seq: 0,
             counters: Counters::new(),
         })
@@ -119,6 +170,82 @@ impl TcpGroup {
                 }
             }
         }
+    }
+
+    /// Start the progress engine: one reader thread per peer socket,
+    /// draining arrivals into a shared inbox concurrently with the
+    /// caller's compute.  Call right after connecting, before the
+    /// first exchange (frames already buffered in this thread's
+    /// readers would otherwise be stranded).  Idempotent.
+    pub fn enable_progress(&mut self) {
+        if self.progress.is_some() {
+            return;
+        }
+        let shared = Arc::new(ProgressShared {
+            inbox: Mutex::new(Inbox {
+                msgs: Vec::new(),
+                closed: vec![None; self.size],
+                arrivals: 0,
+            }),
+            cv: Condvar::new(),
+        });
+        for (peer, slot) in self.readers.iter_mut().enumerate() {
+            let Some(mut reader) = slot.take() else { continue };
+            let sh = shared.clone();
+            // detached on purpose: the thread exits when the peer's
+            // socket closes; joining at drop could deadlock on a peer
+            // that outlives us.
+            std::thread::Builder::new()
+                .name(format!("tcp-progress-{}-{peer}", self.rank))
+                .spawn(move || loop {
+                    match read_frame(&mut reader) {
+                        Ok(msg) => {
+                            let mut inbox = sh.inbox.lock().unwrap();
+                            inbox.msgs.push(msg);
+                            inbox.arrivals += 1;
+                            sh.cv.notify_all();
+                        }
+                        Err(e) => {
+                            // keep the real cause: an eof at a frame
+                            // boundary is a normal shutdown, anything
+                            // else (I/O error, corrupt frame) is not
+                            let reason =
+                                if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                                    "connection closed".to_string()
+                                } else {
+                                    e.to_string()
+                                };
+                            sh.inbox.lock().unwrap().closed[peer] = Some(reason);
+                            sh.cv.notify_all();
+                            return;
+                        }
+                    }
+                })
+                .expect("spawn tcp progress reader");
+        }
+        self.progress = Some(shared);
+    }
+
+    /// Whether the progress engine is running.
+    pub fn progress_enabled(&self) -> bool {
+        self.progress.is_some()
+    }
+
+    /// Messages the progress engine has drained into user space that
+    /// no receive has claimed yet (the "drain during compute" signal).
+    pub fn pending_arrivals(&self) -> usize {
+        self.progress
+            .as_ref()
+            .map(|s| s.inbox.lock().unwrap().msgs.len())
+            .unwrap_or(0)
+    }
+
+    /// Total messages ever drained by the progress engine.
+    pub fn progress_arrivals(&self) -> u64 {
+        self.progress
+            .as_ref()
+            .map(|s| s.inbox.lock().unwrap().arrivals)
+            .unwrap_or(0)
     }
 
     /// Write one framed message into `dst`'s buffered writer (no flush).
@@ -151,27 +278,99 @@ impl TcpGroup {
         Ok(())
     }
 
-    /// Blocking read of one framed message from a specific peer socket.
+    /// The frame was copied into the writer; keep the caller's buffer
+    /// for [`Comm::reclaim_spent`] (dropped once either cap is hit).
+    fn retire(&mut self, data: Vec<f32>) {
+        let bytes = data.capacity() * 4;
+        if self.spent.len() < SPENT_CAP && self.spent_bytes + bytes <= SPENT_CAP_BYTES {
+            self.spent_bytes += bytes;
+            self.spent.push(data);
+        }
+    }
+
+    /// Blocking read of one framed message from a specific peer socket
+    /// (deferred-flush mode only; progress mode reads via the engine).
     fn read_msg_from(&mut self, peer: usize) -> Result<Msg> {
         let reader = self.readers[peer]
             .as_mut()
             .ok_or_else(|| Error::Comm(format!("no link to peer {peer}")))?;
-        let mut hdr = [0u8; 4 + 8 + 8];
-        reader.read_exact(&mut hdr).map_err(io_err)?;
-        let src = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
-        let tag = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
-        let len = u64::from_le_bytes(hdr[12..20].try_into().unwrap()) as usize;
-        if len > (1 << 31) {
-            return Err(Error::Comm(format!("implausible frame of {len} floats")));
-        }
-        let mut data = vec![0f32; len];
-        // Safety: reading LE f32 payload into the vec's byte view.
-        let bytes = unsafe {
-            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, len * 4)
-        };
-        reader.read_exact(bytes).map_err(io_err)?;
-        Ok(Msg { src, tag, data })
+        read_frame(reader).map_err(io_err)
     }
+
+    /// Progress-mode receive: wait on the shared inbox.
+    fn recv_progress(&mut self, src: usize, tag: u64) -> Result<Vec<f32>> {
+        let shared = self.progress.as_ref().expect("progress mode").clone();
+        let mut inbox = shared.inbox.lock().unwrap();
+        loop {
+            if let Some(i) = inbox
+                .msgs
+                .iter()
+                .position(|m| m.src == src && m.tag == tag)
+            {
+                return Ok(inbox.msgs.swap_remove(i).data);
+            }
+            if let Some(reason) = &inbox.closed[src] {
+                return Err(Error::Comm(format!(
+                    "tcp: peer {src} down before tag {tag} arrived ({reason})"
+                )));
+            }
+            inbox = shared.cv.wait(inbox).unwrap();
+        }
+    }
+}
+
+/// Parse one wire frame (see module docs for the format).
+///
+/// Error taxonomy matters to the progress engine's diagnostics: EOF
+/// *before any header byte* (a frame boundary) is the one clean
+/// shutdown and surfaces as `UnexpectedEof`; EOF mid-header or
+/// mid-payload is a truncated frame and surfaces as `InvalidData`, so
+/// a peer crash mid-exchange is never reported as a normal disconnect.
+fn read_frame(reader: &mut BufReader<TcpStream>) -> std::io::Result<Msg> {
+    let mut hdr = [0u8; 4 + 8 + 8];
+    let mut filled = 0usize;
+    while filled < hdr.len() {
+        let n = reader.read(&mut hdr[filled..])?;
+        if n == 0 {
+            return Err(if filled == 0 {
+                std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed at frame boundary",
+                )
+            } else {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("eof mid-header ({filled}/{} bytes)", hdr.len()),
+                )
+            });
+        }
+        filled += n;
+    }
+    let src = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+    let tag = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
+    let len = u64::from_le_bytes(hdr[12..20].try_into().unwrap()) as usize;
+    if len > (1 << 31) {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("implausible frame of {len} floats"),
+        ));
+    }
+    let mut data = vec![0f32; len];
+    // Safety: reading LE f32 payload into the vec's byte view.
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, len * 4)
+    };
+    reader.read_exact(bytes).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("eof mid-frame ({len}-float payload truncated)"),
+            )
+        } else {
+            e
+        }
+    })?;
+    Ok(Msg { src, tag, data })
 }
 
 fn io_err(e: std::io::Error) -> Error {
@@ -197,32 +396,47 @@ impl Comm for TcpGroup {
             return Ok(());
         }
         self.write_frame(dst, tag, &data)?;
+        // blocking send frees its payload here — only `isend`, whose
+        // callers pool their staging, retires buffers for reclaim
+        drop(data);
         let w = self.writers[dst].as_mut().expect("checked by write_frame");
         w.flush().map_err(io_err)?;
         Ok(())
     }
 
-    /// Nonblocking send: the frame lands in the per-peer user-space
-    /// buffer and is flushed in one syscall batch by the next blocking
-    /// operation (`recv`/`wait`/`wait_all`/`barrier` all flush first).
+    /// Nonblocking send.  Deferred-flush mode: the frame lands in the
+    /// per-peer user-space buffer and is flushed in one syscall batch
+    /// by the next blocking operation.  Progress mode: flushed eagerly,
+    /// so the frame departs while the caller computes and the peer's
+    /// engine drains it concurrently.
     fn isend(&mut self, dst: usize, tag: u64, data: Vec<f32>) -> Result<CommRequest> {
         if dst == self.rank {
             self.parked.push(Msg { src: dst, tag, data });
             return Ok(CommRequest::send_done());
         }
         self.write_frame(dst, tag, &data)?;
-        self.flush_needed = true;
+        self.retire(data);
+        if self.progress.is_some() {
+            let w = self.writers[dst].as_mut().expect("checked by write_frame");
+            w.flush().map_err(io_err)?;
+        } else {
+            self.flush_needed = true;
+        }
         Ok(CommRequest::send_done())
     }
 
     fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<f32>> {
         self.flush_pending()?;
+        // self-loopback (and pre-engine stragglers) park locally
         if let Some(i) = self
             .parked
             .iter()
             .position(|m| m.src == src && m.tag == tag)
         {
             return Ok(self.parked.swap_remove(i).data);
+        }
+        if self.progress.is_some() {
+            return self.recv_progress(src, tag);
         }
         loop {
             let msg = self.read_msg_from(src)?;
@@ -233,16 +447,82 @@ impl Comm for TcpGroup {
         }
     }
 
-    /// Flush buffered isends once, then complete in posted order (each
-    /// peer is its own ordered byte stream, so out-of-order arrivals
-    /// only happen across peers and land in the parked queue).
+    /// Deferred-flush mode: flush buffered isends once, then complete
+    /// in posted order (each peer is its own ordered byte stream, so
+    /// out-of-order arrivals only happen across peers and land in the
+    /// parked queue).  Progress mode: complete in **true arrival
+    /// order** — whichever pending message the engine drains first
+    /// fills its slot first, regardless of posted order.
     fn wait_all(&mut self, reqs: Vec<CommRequest>) -> Result<Vec<Option<Vec<f32>>>> {
         self.flush_pending()?;
-        reqs.into_iter().map(|r| self.wait(r)).collect()
+        if self.progress.is_none() {
+            return reqs.into_iter().map(|r| self.wait(r)).collect();
+        }
+        let mut out: Vec<Option<Vec<f32>>> = Vec::with_capacity(reqs.len());
+        let mut pending: Vec<(usize, usize, u64)> = Vec::new();
+        for (slot, req) in reqs.into_iter().enumerate() {
+            out.push(None);
+            if let Some((src, tag)) = req.pending_recv() {
+                pending.push((slot, src, tag));
+            }
+        }
+        // self-loopback messages first
+        pending.retain(|&(slot, src, tag)| {
+            match self
+                .parked
+                .iter()
+                .position(|m| m.src == src && m.tag == tag)
+            {
+                Some(i) => {
+                    out[slot] = Some(self.parked.swap_remove(i).data);
+                    false
+                }
+                None => true,
+            }
+        });
+        if pending.is_empty() {
+            return Ok(out);
+        }
+        let shared = self.progress.as_ref().expect("progress mode").clone();
+        let mut inbox = shared.inbox.lock().unwrap();
+        loop {
+            let msgs = &mut inbox.msgs;
+            let mut matched = false;
+            pending.retain(|&(slot, src, tag)| {
+                match msgs.iter().position(|m| m.src == src && m.tag == tag) {
+                    Some(i) => {
+                        out[slot] = Some(msgs.swap_remove(i).data);
+                        matched = true;
+                        false
+                    }
+                    None => true,
+                }
+            });
+            if pending.is_empty() {
+                return Ok(out);
+            }
+            if !matched {
+                if let Some(&(_, src, _)) = pending
+                    .iter()
+                    .find(|&&(_, src, _)| inbox.closed[src].is_some())
+                {
+                    let reason = inbox.closed[src].as_deref().unwrap_or("closed");
+                    return Err(Error::Comm(format!(
+                        "tcp: peer {src} down with receives outstanding ({reason})"
+                    )));
+                }
+                inbox = shared.cv.wait(inbox).unwrap();
+            }
+        }
     }
 
     fn flush(&mut self) -> Result<()> {
         self.flush_pending()
+    }
+
+    fn reclaim_spent(&mut self) -> Vec<Vec<f32>> {
+        self.spent_bytes = 0;
+        std::mem::take(&mut self.spent)
     }
 
     fn next_seq(&mut self) -> u64 {
@@ -325,6 +605,10 @@ mod tests {
             g.flush()?;
             assert!(!g.flush_needed, "flush must clear the dirty flag");
             assert_eq!(g.recv(other, tag2)?, vec![7.0]);
+            // both isend payloads were framed and are reclaimable
+            let spent = g.reclaim_spent();
+            assert_eq!(spent.len(), 2);
+            assert!(g.reclaim_spent().is_empty(), "reclaim drains");
             Ok(())
         });
     }
@@ -351,6 +635,29 @@ mod tests {
             let other = 1 - g.rank();
             assert_eq!(recv[other].len(), 200_000);
             assert!(recv[other].iter().all(|&x| x == other as f32));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tcp_progress_engine_basic_roundtrip() {
+        run_tcp(3, 47410, |mut g| {
+            g.enable_progress();
+            assert!(g.progress_enabled());
+            // the full collective stack must run unchanged on top of
+            // the engine's inbox path
+            let r = g.rank() as f32;
+            let send: Vec<Vec<f32>> =
+                (0..3).map(|p| vec![r * 10.0 + p as f32; p + 1]).collect();
+            let recv = g.all_to_all_v(send)?;
+            for (p, buf) in recv.iter().enumerate() {
+                assert_eq!(buf, &vec![p as f32 * 10.0 + r; g.rank() + 1]);
+            }
+            let mut buf = vec![g.rank() as f32 + 1.0; 5];
+            g.all_reduce_sum(&mut buf)?;
+            assert!(buf.iter().all(|&x| x == 6.0));
+            g.barrier()?;
+            assert!(g.progress_arrivals() > 0, "engine saw no traffic");
             Ok(())
         });
     }

@@ -160,8 +160,12 @@ impl MoeConfig {
 ///
 /// ```toml
 /// [comm]
-/// overlap = true  # pipeline dispatch / expert compute / combine
-/// chunks = 4      # ring-offset peer groups per exchange (1 = blocking)
+/// overlap = true   # pipeline dispatch / expert compute / combine
+/// chunks = 4       # ring-offset peer groups per exchange (1 = blocking,
+///                  # 0 = adaptive from the previous step's wire:compute ratio)
+/// pool = true      # step-persistent buffer pools on the MoE hot path
+/// progress = false # TCP progress engine (reader threads drain arrivals
+///                  # during expert compute; tcp backend only)
 /// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct CommConfig {
@@ -170,19 +174,34 @@ pub struct CommConfig {
     /// `chunks = 1` degenerate case of the pipelined one.
     pub overlap: bool,
     /// Ring-offset peer groups per exchange; clamped to the worker
-    /// count at layer-build time.  Ignored unless `overlap` is on.
+    /// count at layer-build time.  `0` picks the count adaptively each
+    /// step from the previously measured wire:compute ratio
+    /// (`moe::adaptive_chunks`).  Ignored unless `overlap` is on.
     pub chunks: usize,
+    /// Recycle padded batches, cotangent containers and per-peer
+    /// send/recv staging across steps through the layer's
+    /// `BufferPool`.  On by default; `false` is the A/B knob (outputs
+    /// are bit-identical either way).
+    pub pool: bool,
+    /// Run the TCP backend's progress engine (`TcpGroup::
+    /// enable_progress`): per-peer reader threads drain socket
+    /// arrivals while the expert shard computes, `isend` departs
+    /// eagerly, and `wait_all` completes in true arrival order.
+    /// Thread-channel workers ignore it.
+    pub progress: bool,
 }
 
 impl Default for CommConfig {
     fn default() -> Self {
-        Self { overlap: false, chunks: 4 }
+        Self { overlap: false, chunks: 4, pool: true, progress: false }
     }
 }
 
 impl CommConfig {
     /// The `[comm]` section of an optional `--config` file, with the
-    /// `--overlap` / `--no-overlap` flags and `--chunks N` overrides.
+    /// `--overlap` / `--no-overlap` / `--no-pool` / `--progress` /
+    /// `--no-progress` flags and `--chunks N` overrides
+    /// (`--chunks 0` = adaptive).
     pub fn from_args(args: &crate::cli::Args) -> Result<CommConfig> {
         let mut cfg = if let Some(path) = args.get("config") {
             ConfigFile::load(path)?.comm()?
@@ -195,10 +214,16 @@ impl CommConfig {
         if args.has_flag("no-overlap") {
             cfg.overlap = false;
         }
-        cfg.chunks = args.usize_or("chunks", cfg.chunks)?;
-        if cfg.chunks == 0 {
-            return Err(Error::Cli("--chunks must be >= 1".into()));
+        if args.has_flag("no-pool") {
+            cfg.pool = false;
         }
+        if args.has_flag("progress") {
+            cfg.progress = true;
+        }
+        if args.has_flag("no-progress") {
+            cfg.progress = false;
+        }
+        cfg.chunks = args.usize_or("chunks", cfg.chunks)?;
         Ok(cfg)
     }
 }
@@ -338,10 +363,10 @@ impl ConfigFile {
         let mut c = CommConfig::default();
         if let Some(s) = self.section("comm") {
             c.overlap = s.bool_or("overlap", c.overlap);
+            // 0 is meaningful: adaptive chunk count (moe::adaptive_chunks)
             c.chunks = s.usize_or("chunks", c.chunks);
-        }
-        if c.chunks == 0 {
-            return Err(Error::Config("comm.chunks must be >= 1".into()));
+            c.pool = s.bool_or("pool", c.pool);
+            c.progress = s.bool_or("progress", c.progress);
         }
         Ok(c)
     }
@@ -421,18 +446,24 @@ chunks = 2
 
     #[test]
     fn comm_section_defaults_and_validation() {
-        // no [comm] section at all → defaults (overlap off)
+        // no [comm] section at all → defaults (overlap off, pool on)
         let c = ConfigFile::parse("[train]\nsteps = 1\n").unwrap();
         assert_eq!(c.comm().unwrap(), CommConfig::default());
         assert!(!c.comm().unwrap().overlap);
-        // zero chunks rejected
+        assert!(c.comm().unwrap().pool);
+        assert!(!c.comm().unwrap().progress);
+        // zero chunks = adaptive (picked from the measured ratio)
         let c = ConfigFile::parse("[comm]\nchunks = 0\n").unwrap();
-        assert!(c.comm().is_err());
+        assert_eq!(c.comm().unwrap().chunks, 0);
+        // pool / progress knobs parse
+        let c = ConfigFile::parse("[comm]\npool = false\nprogress = true\n").unwrap();
+        assert!(!c.comm().unwrap().pool);
+        assert!(c.comm().unwrap().progress);
         // CLI merge: flags flip overlap, --chunks overrides
         let argv = |s: &str| {
             crate::cli::Args::parse(
                 s.split_whitespace().map(|x| x.to_string()),
-                &["overlap", "no-overlap"],
+                &["overlap", "no-overlap", "no-pool", "progress", "no-progress"],
             )
             .unwrap()
         };
@@ -441,7 +472,12 @@ chunks = 2
         assert_eq!(cfg.chunks, 8);
         let cfg = CommConfig::from_args(&argv("x")).unwrap();
         assert_eq!(cfg, CommConfig::default());
-        assert!(CommConfig::from_args(&argv("x --chunks 0")).is_err());
+        // 0 = adaptive through the CLI as well
+        let cfg = CommConfig::from_args(&argv("x --chunks 0")).unwrap();
+        assert_eq!(cfg.chunks, 0);
+        let cfg = CommConfig::from_args(&argv("x --no-pool --progress")).unwrap();
+        assert!(!cfg.pool);
+        assert!(cfg.progress);
     }
 
     #[test]

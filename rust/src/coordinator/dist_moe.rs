@@ -31,26 +31,73 @@
 //! and the return exchange streaming per chunk; the backward mirrors
 //! this and additionally hides the gate GEMM backward behind the
 //! cotangent flight.  `chunks = 1` (or `overlap = false`, the default)
-//! is the blocking path with bit-identical outputs.
+//! is the blocking path with bit-identical outputs; `chunks = 0` picks
+//! the count adaptively from the previous step's measured wire:compute
+//! ratio (exchanged on the count round, so ranks stay in lockstep).
+//!
+//! The hot path is *allocation-free and copy-minimal in steady state*:
+//! arriving rows land once in the pooled full-batch buffer, per-chunk
+//! compute gathers slice views of it into one recycled staging (never
+//! padded beyond the blocking bucket), the phase-1 count round rides
+//! chunk 0's flight, and every send/recv/cotangent container cycles
+//! through the layer's [`BufferPool`] ([`DistMoeLayer::recycle`]).
+//! Copy and pool traffic surface as `moe_copy_bytes` / `pool_*`
+//! counters; `rust/tests/zero_copy_regression.rs` pins zero
+//! steady-state misses and the exact copy budget.
 //!
 //! [`DistMoeLayer::init`] remains as the seed-compatible shorthand for
 //! the default top-k softmax gate + FFN shard (bit-identical routing
 //! and weights to the pre-trait layer).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
-use crate::comm::Comm;
+use crate::comm::{Comm, CommRequest};
 use crate::config::{CommConfig, MoeConfig};
 use crate::error::{Error, Result};
 use crate::metrics::Counters;
 use crate::model::Adam;
 use crate::moe::{
-    balance_loss, chunk_peer_groups, gate, post_chunk, wait_chunk, DispatchPlan,
-    ExpertBatch, ExpertShard, FfnExpertShard, Gate, GateAssign, PendingChunk,
+    adaptive_chunks, balance_loss, chunk_peer_groups, gate, post_chunk, wait_chunk,
+    DispatchPlan, ExpertBatch, ExpertShard, FfnExpertShard, Gate, GateAssign,
+    PendingChunk,
 };
 use crate::rng::Rng;
 use crate::runtime::Runtime;
-use crate::tensor::{ops, HostTensor, TensorF32};
+use crate::tensor::{ops, BufferPool, PoolStats, TensorF32};
+
+// Buffer-pool roles of the layer's step-persistent arena (see
+// `tensor::pool`): keying by job keeps wildly different size classes
+// from evicting each other.
+/// Per-peer send/recv staging — row payloads *and* the tiny count
+/// messages share this role on purpose: the comm backend's
+/// [`Comm::reclaim_spent`] cannot tell origins apart, and the pool's
+/// best-fit take + size-aware eviction make the mix safe (tiny
+/// buffers neither satisfy big requests nor displace big residents).
+const ROLE_WIRE: &str = "wire";
+/// The padded full-batch expert container (forward residual).
+const ROLE_BATCH: &str = "expert_batch";
+/// Per-chunk compute staging (slice-view gather target).
+const ROLE_STAGE: &str = "chunk_stage";
+/// Backward cotangent container shaped like the batch.
+const ROLE_COT: &str = "cotangent";
+/// Packed `[nb·k, dm]` row tensors (combine input / packed cotangents).
+const ROLE_PACKED: &str = "packed_rows";
+
+/// Adaptive-chunking state (`[comm] chunks = 0`): every rank's pick
+/// must stay in lockstep (the chunk schedule and tag reservations are
+/// part of the wire protocol), so the *measured* ratio is exchanged on
+/// the folded count round and the *agreed* count only ever derives
+/// from that shared data.
+#[derive(Clone, Copy, Debug)]
+struct AdaptState {
+    /// Chunk count every rank agreed to use for the next pipelined step.
+    chunks: usize,
+    /// This rank's wire:compute ratio measured on its previous
+    /// pipelined forward, f32-rounded (what peers will receive);
+    /// negative = no measurement yet.
+    my_ratio: f32,
+}
 
 /// Manifest-derived geometry shared by every layer built on a runtime.
 #[derive(Clone, Debug)]
@@ -150,9 +197,15 @@ impl MoeLayerBuilder {
         self
     }
 
-    /// Override the exchange chunk count directly.
+    /// Override the exchange chunk count directly (`0` = adaptive).
     pub fn chunks(mut self, chunks: usize) -> MoeLayerBuilder {
         self.comm.chunks = chunks;
+        self
+    }
+
+    /// Override the step-persistent buffer pool on/off directly.
+    pub fn pool(mut self, on: bool) -> MoeLayerBuilder {
+        self.comm.pool = on;
         self
     }
 
@@ -232,8 +285,17 @@ impl MoeLayerBuilder {
             gate,
             expert,
             overlap: self.comm.overlap,
-            chunks: self.comm.chunks.clamp(1, workers),
+            chunks: if self.comm.chunks == 0 {
+                0 // adaptive; resolved per step from AdaptState
+            } else {
+                self.comm.chunks.clamp(1, workers)
+            },
             balance_coef: self.cfg.balance_coef as f32,
+            pool: Mutex::new(BufferPool::new(self.comm.pool)),
+            adapt: Mutex::new(AdaptState {
+                chunks: CommConfig::default().chunks.clamp(1, workers),
+                my_ratio: -1.0,
+            }),
         })
     }
 
@@ -268,10 +330,18 @@ pub struct DistMoeLayer {
     expert: Box<dyn ExpertShard>,
     /// Pipeline the exchanges against expert compute (`[comm] overlap`).
     pub overlap: bool,
-    /// Ring-offset peer chunks per exchange (clamped to `workers`).
+    /// Ring-offset peer chunks per exchange (clamped to `workers`);
+    /// `0` = adaptive from the previous step's wire:compute ratio.
     pub chunks: usize,
     /// GShard balance-loss gradient weight (`[moe] balance_coef`).
     balance_coef: f32,
+    /// Step-persistent buffer arena (`[comm] pool`): padded batches,
+    /// cotangent containers and per-peer wire staging recycle across
+    /// steps instead of reallocating.  Mutex only for `&self` access —
+    /// a layer is driven by its one worker thread.
+    pool: Mutex<BufferPool>,
+    /// Adaptive chunk-count agreement (`[comm] chunks = 0`).
+    adapt: Mutex<AdaptState>,
 }
 
 /// Forward residuals needed by the backward chain.
@@ -382,16 +452,65 @@ impl DistMoeLayer {
         gate + self.expert.flops(rows)
     }
 
-    /// Whether forward/backward take the chunked overlap path.
-    fn pipelined(&self) -> bool {
-        self.overlap && self.chunks > 1 && self.workers > 1
+    /// The exchange schedule of the next collective: `(pipelined,
+    /// chunks)`.  Identical on every rank by construction — the
+    /// decision depends only on shared config and the adaptively
+    /// *agreed* chunk count (never on local measurements directly),
+    /// because the chunk schedule and its tag reservations are wire
+    /// protocol.
+    fn sched(&self) -> (bool, usize) {
+        if !self.overlap || self.workers <= 1 {
+            return (false, 1);
+        }
+        if self.chunks == 0 {
+            // adaptive: stay on the pipelined path even at 1 chunk so
+            // the ratio exchange keeps flowing and can raise it again
+            let c = self.adapt.lock().unwrap().chunks.clamp(1, self.workers);
+            (true, c)
+        } else {
+            let c = self.chunks.clamp(1, self.workers);
+            (c > 1, c)
+        }
+    }
+
+    /// Pool-counter deltas of one forward/backward, surfaced through
+    /// the step counters so benches and regression tests see them.
+    fn report_pool(&self, start: &PoolStats, counters: &mut Counters) {
+        let d = self.pool.lock().unwrap().stats().since(start);
+        counters.add("pool_hits", d.hits);
+        counters.add("pool_misses", d.misses);
+        counters.add("pool_alloc_bytes", d.alloc_bytes);
+    }
+
+    /// Hand the backend's spent send buffers back to the wire role
+    /// (counts and row payloads alike — see the [`ROLE_WIRE`] note).
+    fn drain_spent(&self, comm: &mut impl Comm, pool: &mut BufferPool) {
+        pool.give_all(ROLE_WIRE, comm.reclaim_spent());
+    }
+
+    /// Current pool counters (cumulative over the layer's lifetime).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.lock().unwrap().stats()
+    }
+
+    /// Return a finished step's step-persistent buffers — the padded
+    /// expert batch and the packed combine input — to the arena, so
+    /// the next iteration reuses them instead of allocating.  Call
+    /// after the backward pass is done with `state` (the trainer does).
+    pub fn recycle(&self, state: MoeLayerState) {
+        let mut pool = self.pool.lock().unwrap();
+        pool.give_tensor(ROLE_BATCH, state.eb.xs);
+        pool.give_tensor(ROLE_PACKED, state.y_slots);
     }
 
     /// Forward pass over this worker's `x: [nb, dm]`.
     ///
-    /// `counters` records exchange volumes for the net model.  With
-    /// `[comm] overlap` the phase-2 exchange and the expert shard run
-    /// pipelined ([`Self::dispatch_compute_overlapped`]); outputs are
+    /// `counters` records exchange volumes (`moe_a2a_bytes`), host row
+    /// copies (`moe_copy_bytes`) and pool traffic (`pool_*`) for the
+    /// net model.  With `[comm] overlap` the phase-1 count exchange is
+    /// folded into chunk 0's flight and the phase-2 exchange runs
+    /// pipelined against the expert shard
+    /// ([`Self::dispatch_compute_overlapped`]); outputs are
     /// bit-identical either way.
     pub fn forward(
         &self,
@@ -399,71 +518,33 @@ impl DistMoeLayer {
         x: TensorF32,
         counters: &mut Counters,
     ) -> Result<(TensorF32, MoeLayerState)> {
+        let pool_start = self.pool.lock().unwrap().stats();
         // ---- gate scores (L1 kernel via HLO) ----
         let gate = self.rt.executable(&format!("gate_fwd_w{}", self.workers))?;
-        let out = gate.run(&[
-            x.clone().into(),
-            self.wg.clone().into(),
-            self.bg.clone().into(),
-        ])?;
+        let out = gate.run_refs(&[(&x).into(), (&self.wg).into(), (&self.bg).into()])?;
         let scores = out.into_iter().next().unwrap().into_f32()?;
 
         // ---- host gating + plan (the paper's "local shuffle") ----
         let assign = self.gate.route(&scores, self.k)?;
         let plan = DispatchPlan::build(&assign, self.workers, self.ne_local)?;
 
-        // ---- Figure 2 phase 1: exchange per-expert counts ----
-        let count_bufs: Vec<Vec<f32>> = plan
-            .send_counts
-            .iter()
-            .map(|c| c.iter().map(|&x| x as f32).collect())
-            .collect();
-        let recv_count_bufs = comm.all_to_all_v(count_bufs)?;
-        let recv_counts: Vec<Vec<u32>> = recv_count_bufs
-            .iter()
-            .map(|b| b.iter().map(|&x| x as u32).collect())
-            .collect();
-
-        // ---- Figure 2 phase 2 + expert shard ----
-        let send = plan.pack(&x)?;
-        let sent_bytes: usize = send.iter().map(|b| b.len() * 4).sum();
-        counters.add("moe_a2a_bytes", sent_bytes as u64);
-        let (eb, y_slots) = if self.pipelined() {
-            self.dispatch_compute_overlapped(comm, &plan, send, recv_counts, counters)?
+        let (pipelined, chunks) = self.sched();
+        let (eb, y_slots) = if pipelined {
+            self.dispatch_compute_overlapped(comm, &plan, &x, chunks, counters)?
         } else {
-            // blocking path — the `chunks = 1` degenerate case
-            let recv = comm.all_to_all_v(send)?;
-            let eb = ExpertBatch::build(
-                recv_counts,
-                &recv,
-                self.ne_local,
-                self.dm,
-                &self.buckets,
-            )?;
-            counters.add("moe_bucket_rows", (eb.bucket * eb.ne_local) as u64);
-            counters.add(
-                "moe_real_rows",
-                eb.rows_per_expert.iter().sum::<usize>() as u64,
-            );
-            let ys = self.expert.forward(&eb)?;
-            let ret = eb.split_outputs(&ys)?;
-            counters.add(
-                "moe_a2a_bytes",
-                ret.iter().map(|b| b.len() * 4).sum::<usize>() as u64,
-            );
-            let back = comm.all_to_all_v(ret)?;
-            let y_slots = plan.unpack_returned(&back, self.dm)?;
-            (eb, y_slots)
+            self.dispatch_compute_blocking(comm, &plan, &x, counters)?
         };
 
         let combine = self.rt.executable("combine_fwd")?;
         let w_t = TensorF32::from_vec(&[self.nb, self.k], assign.w.clone())?;
-        let out = combine.run(&[
-            y_slots.clone().into(),
-            HostTensor::I32(plan.slots_i32()),
-            w_t.into(),
+        let slots = plan.slots_i32();
+        let out = combine.run_refs(&[
+            (&y_slots).into(),
+            (&slots).into(),
+            (&w_t).into(),
         ])?;
         let y = out.into_iter().next().unwrap().into_f32()?;
+        self.report_pool(&pool_start, counters);
 
         // ---- per-step routing metrics (monitor food) ----
         // Load metrics count only kept (weight > 0) assignments so
@@ -487,52 +568,144 @@ impl DistMoeLayer {
         ))
     }
 
-    /// Figure-2 phase 2 + expert execution, pipelined (the §4 overlap):
-    /// the exchange decomposes into ring-offset peer chunks; while
-    /// chunk `c`'s rows run through the expert shard, chunk `c+1`'s
-    /// tokens are already on the wire, and each chunk's outputs stream
-    /// back the moment they exist.  The combine input `y_slots` and the
-    /// saved full batch are assembled exactly as the blocking path
-    /// assembles them — expert math is row-independent — so outputs
-    /// stay bit-identical.
+    /// Figure-2 phases 1+2 + expert execution, blocking — the seed
+    /// schedule, now staged through the buffer pool: the count round,
+    /// then the full exchange strictly before one full-bucket expert
+    /// call.
+    fn dispatch_compute_blocking(
+        &self,
+        comm: &mut impl Comm,
+        plan: &DispatchPlan,
+        x: &TensorF32,
+        counters: &mut Counters,
+    ) -> Result<(ExpertBatch, TensorF32)> {
+        let mut pool = self.pool.lock().unwrap();
+
+        // ---- Figure 2 phase 1: exchange per-expert counts (pooled
+        // staging, like every other buffer on the hot path) ----
+        let count_bufs: Vec<Vec<f32>> = plan
+            .send_counts
+            .iter()
+            .map(|c| {
+                let mut b = pool.take_vec(ROLE_WIRE, c.len());
+                b.extend(c.iter().map(|&x| x as f32));
+                b
+            })
+            .collect();
+        let recv_count_bufs = comm.all_to_all_v(count_bufs)?;
+        self.drain_spent(comm, &mut pool);
+        let recv_counts: Vec<Vec<u32>> = recv_count_bufs
+            .iter()
+            .map(|b| b.iter().map(|&x| x as u32).collect())
+            .collect();
+        pool.give_all(ROLE_WIRE, recv_count_bufs);
+
+        // ---- Figure 2 phase 2, strictly before the expert shard ----
+        let send = plan.pack_into(x, &mut pool, ROLE_WIRE)?;
+        let sent_bytes: usize = send.iter().map(|b| b.len() * 4).sum();
+        counters.add("moe_a2a_bytes", sent_bytes as u64);
+        counters.add("moe_copy_bytes", sent_bytes as u64);
+        let recv = comm.all_to_all_v(send)?;
+        self.drain_spent(comm, &mut pool);
+
+        let mut eb = ExpertBatch::shell_pooled(
+            recv_counts,
+            self.ne_local,
+            self.dm,
+            &self.buckets,
+            &mut pool,
+            ROLE_BATCH,
+        )?;
+        let mut copied = 0u64;
+        for (p, part) in recv.iter().enumerate() {
+            copied += eb.fill_peer(p, part)? as u64;
+        }
+        pool.give_all(ROLE_WIRE, recv);
+        counters.add("moe_copy_bytes", copied);
+        counters.add("moe_bucket_rows", (eb.bucket * eb.ne_local) as u64);
+        counters.add(
+            "moe_real_rows",
+            eb.rows_per_expert.iter().sum::<usize>() as u64,
+        );
+        let ys = self.expert.forward(&eb)?;
+        let ret = eb.split_outputs_pooled(&ys, &mut pool, ROLE_WIRE)?;
+        let ret_bytes: usize = ret.iter().map(|b| b.len() * 4).sum();
+        counters.add("moe_a2a_bytes", ret_bytes as u64);
+        counters.add("moe_copy_bytes", ret_bytes as u64);
+        let back = comm.all_to_all_v(ret)?;
+        self.drain_spent(comm, &mut pool);
+        let mut y_slots = pool.take_tensor_filled(ROLE_PACKED, &[self.nb * self.k, self.dm])?;
+        let unpacked = plan.unpack_returned_into(&back, self.dm, &mut y_slots)?;
+        pool.give_all(ROLE_WIRE, back);
+        counters.add("moe_copy_bytes", unpacked as u64);
+        Ok((eb, y_slots))
+    }
+
+    /// Figure-2 phase 2 + expert execution, pipelined (the §4 overlap),
+    /// zero-copy edition: the exchange decomposes into ring-offset peer
+    /// chunks; while chunk `c`'s rows run through the expert shard,
+    /// chunk `c+1`'s tokens are already on the wire, and each chunk's
+    /// outputs stream back the moment they exist.  The combine input
+    /// `y_slots` and the saved full batch are assembled exactly as the
+    /// blocking path assembles them — expert math is row-independent —
+    /// so outputs stay bit-identical.
     ///
-    /// Host-work trade-off, accepted for wire time: rows are copied
-    /// twice (into the backward residual and into the chunk's compute
-    /// batch), and each chunk pads to its own bucket, so
-    /// `moe_bucket_rows` (and total padded compute) can exceed the
-    /// blocking path's single bucket.  The win is hiding the exchange;
-    /// on a free network (`--net none`, or the thread backend's memcpy
-    /// wire) prefer `overlap = false`.
+    /// Three zero-copy properties distinguish this from the PR 2
+    /// schedule it replaces:
+    ///
+    /// * **folded count round** — phase 1 (per-expert counts, plus the
+    ///   adaptive-chunking ratio) flies concurrently with chunk 0's
+    ///   data instead of as a serial α round before the pipeline;
+    /// * **single landing** — arriving rows are copied once, into the
+    ///   full-batch residual; each chunk's compute batch is *gathered
+    ///   from that buffer* ([`ExpertBatch::chunk_slice`]) into one
+    ///   pooled staging whose bucket never exceeds the blocking
+    ///   bucket, instead of re-copied from the wire buffers into a
+    ///   freshly allocated per-chunk batch;
+    /// * **pooled staging** — wire buffers, the residual, and the
+    ///   chunk staging all recycle through the arena, so a
+    ///   steady-state step allocates nothing.
     fn dispatch_compute_overlapped(
         &self,
         comm: &mut impl Comm,
         plan: &DispatchPlan,
-        mut send: Vec<Vec<f32>>,
-        recv_counts: Vec<Vec<u32>>,
+        x: &TensorF32,
+        chunks: usize,
         counters: &mut Counters,
     ) -> Result<(ExpertBatch, TensorF32)> {
         let w = self.workers;
         let rank = self.rank;
-        let chunks = self.chunks.clamp(1, w);
+        let chunks = chunks.clamp(1, w);
         let groups = chunk_peer_groups(rank, w, chunks);
         counters.add("moe_overlap_chunks", chunks as u64);
+        let mut pool = self.pool.lock().unwrap();
+        let mut wire_secs = 0f64;
+        let mut compute_secs = 0f64;
+
+        let mut send = plan.pack_into(x, &mut pool, ROLE_WIRE)?;
+        let sent_bytes: usize = send.iter().map(|b| b.len() * 4).sum();
+        counters.add("moe_a2a_bytes", sent_bytes as u64);
+        let mut copied = sent_bytes as u64;
 
         // Tag reservation order is part of the wire protocol: every
-        // rank takes 2·chunks seqs in the same sequence.
+        // rank takes 1 + 2·chunks seqs in the same sequence.
+        let count_tag = (comm.next_seq() << 8) | 2;
         let disp_tags: Vec<u64> =
             (0..chunks).map(|_| (comm.next_seq() << 8) | 1).collect();
         let ret_tags: Vec<u64> =
             (0..chunks).map(|_| (comm.next_seq() << 8) | 1).collect();
 
-        // full-batch residual for the backward pass, filled in place as
-        // chunks land (same bucket selection and row layout as the
-        // blocking path, so `state.eb` stays bit-identical)
-        let mut eb = ExpertBatch::shell(
-            recv_counts.clone(),
-            self.ne_local,
-            self.dm,
-            &self.buckets,
-        )?;
+        // ---- folded phase 1: counts (+ adaptive ratio) ride chunk
+        // 0's flight instead of a serial round before it ----
+        let my_ratio = self.adapt.lock().unwrap().my_ratio;
+        for p in 0..w {
+            if p != rank {
+                let mut buf = pool.take_vec(ROLE_WIRE, self.ne_local + 1);
+                buf.extend(plan.send_counts[p].iter().map(|&c| c as f32));
+                buf.push(my_ratio);
+                comm.isend(p, count_tag, buf)?;
+            }
+        }
 
         let mut recv_parts: Vec<Option<Vec<f32>>> = (0..w).map(|_| None).collect();
         let mut back_parts: Vec<Option<Vec<f32>>> = (0..w).map(|_| None).collect();
@@ -545,6 +718,61 @@ impl DistMoeLayer {
             comm, rank, &groups[0], disp_tags[0], &mut send, &mut recv_parts,
             &mut disp_pend[0],
         )?;
+        self.drain_spent(comm, &mut pool);
+
+        // counts are tiny; they complete while chunk 0's rows fly
+        let mut count_peers = Vec::with_capacity(w.saturating_sub(1));
+        let mut count_reqs: Vec<CommRequest> = Vec::with_capacity(w.saturating_sub(1));
+        for p in 0..w {
+            if p != rank {
+                count_peers.push(p);
+                count_reqs.push(comm.irecv(p, count_tag)?);
+            }
+        }
+        let t = Instant::now();
+        let count_datas = comm.wait_all(count_reqs)?;
+        wire_secs += t.elapsed().as_secs_f64();
+        let mut recv_counts: Vec<Vec<u32>> = vec![Vec::new(); w];
+        let mut ratios = vec![-1.0f32; w];
+        recv_counts[rank] = plan.send_counts[rank].clone();
+        ratios[rank] = my_ratio;
+        for (p, data) in count_peers.into_iter().zip(count_datas) {
+            let data = data.unwrap_or_default();
+            if data.len() != self.ne_local + 1 {
+                return Err(Error::Comm(format!(
+                    "folded count round: peer {p} sent {} floats, expected {}",
+                    data.len(),
+                    self.ne_local + 1
+                )));
+            }
+            recv_counts[p] = data[..self.ne_local].iter().map(|&v| v as u32).collect();
+            ratios[p] = data[self.ne_local];
+            pool.give(ROLE_WIRE, data);
+        }
+        // agree on the next step's adaptive chunk count from everyone's
+        // ratio (same data, same rank-ordered mean on every worker)
+        if self.chunks == 0 {
+            let valid: Vec<f64> =
+                ratios.iter().filter(|&&r| r >= 0.0).map(|&r| r as f64).collect();
+            if !valid.is_empty() {
+                let mean = valid.iter().sum::<f64>() / valid.len() as f64;
+                self.adapt.lock().unwrap().chunks = adaptive_chunks(mean, 1.0, w);
+            }
+        }
+
+        // full-batch residual for the backward pass, filled in place as
+        // chunks land (same bucket selection and row layout as the
+        // blocking path, so `state.eb` stays bit-identical); this is
+        // the rows' *only* landing — chunks compute on slices of it
+        let mut eb = ExpertBatch::shell_pooled(
+            recv_counts,
+            self.ne_local,
+            self.dm,
+            &self.buckets,
+            &mut pool,
+            ROLE_BATCH,
+        )?;
+
         for c in 0..chunks {
             // keep the next chunk's tokens in flight through this
             // chunk's expert execution
@@ -553,62 +781,88 @@ impl DistMoeLayer {
                     comm, rank, &groups[c + 1], disp_tags[c + 1], &mut send,
                     &mut recv_parts, &mut disp_pend[c + 1],
                 )?;
+                self.drain_spent(comm, &mut pool);
             }
+            let t = Instant::now();
             wait_chunk(comm, std::mem::take(&mut disp_pend[c]), &mut recv_parts)?;
+            wire_secs += t.elapsed().as_secs_f64();
 
-            // file this chunk's rows into the full-batch residual…
+            // single landing: this chunk's rows go straight into the
+            // full-batch residual, then the wire buffers recycle
             for &p in &groups[c].in_peers {
-                eb.fill_peer(p, recv_parts[p].as_deref().unwrap_or(&[]))?;
+                let part = recv_parts[p].take().unwrap_or_default();
+                copied += eb.fill_peer(p, &part)? as u64;
+                pool.give(ROLE_WIRE, part);
             }
-            // …and regroup them as this chunk's compute batch
-            let counts_c: Vec<Vec<u32>> = groups[c]
-                .in_peers
-                .iter()
-                .map(|&p| recv_counts[p].clone())
-                .collect();
-            let parts_c: Vec<&[f32]> = groups[c]
-                .in_peers
-                .iter()
-                .map(|&p| recv_parts[p].as_deref().unwrap_or(&[]))
-                .collect();
-            let eb_c = ExpertBatch::build_from(
-                counts_c, &parts_c, self.ne_local, self.dm, &self.buckets,
-            )?;
-            counters.add("moe_bucket_rows", (eb_c.bucket * eb_c.ne_local) as u64);
+            // slice view: gather the chunk's rows out of the shared
+            // buffer into one pooled staging (bucket ≤ the full one)
+            let slice = eb.chunk_slice(&groups[c].in_peers, &self.buckets)?;
+            debug_assert!(slice.bucket <= eb.bucket);
+            let mut staging =
+                pool.take_tensor(ROLE_STAGE, &[self.ne_local, slice.bucket, self.dm])?;
+            copied += eb.gather_chunk(&slice, &mut staging)? as u64;
+            counters.add("moe_bucket_rows", (slice.bucket * self.ne_local) as u64);
             counters.add(
                 "moe_real_rows",
-                eb_c.rows_per_expert.iter().sum::<usize>() as u64,
+                slice.rows_per_expert.iter().sum::<usize>() as u64,
             );
+            let eb_c = ExpertBatch::for_compute(
+                self.ne_local,
+                slice.bucket,
+                self.dm,
+                staging,
+                slice.rows_per_expert.clone(),
+            );
+            let t = Instant::now();
             let ys_c = self.expert.forward(&eb_c)?;
+            compute_secs += t.elapsed().as_secs_f64();
+            pool.give_tensor(ROLE_STAGE, eb_c.xs);
 
             // stream this chunk's outputs straight back
-            let ret_c = eb_c.split_outputs(&ys_c)?;
+            let (ret_c, ret_copied) =
+                slice.split_outputs_pooled(&ys_c, self.dm, &mut pool, ROLE_WIRE)?;
+            copied += ret_copied as u64;
             counters.add(
                 "moe_a2a_bytes",
                 ret_c.iter().map(|b| b.len() * 4).sum::<usize>() as u64,
             );
             let mut ret_abs: Vec<Vec<f32>> = (0..w).map(|_| Vec::new()).collect();
-            for (buf, &p) in ret_c.into_iter().zip(&groups[c].in_peers) {
+            for (buf, &p) in ret_c.into_iter().zip(&slice.peers) {
                 ret_abs[p] = buf;
             }
             post_chunk(
                 comm, rank, &groups[c].reversed(), ret_tags[c], &mut ret_abs,
                 &mut back_parts, &mut ret_pend[c],
             )?;
-            // wire buffers are copied out; free them inside the window
-            for &p in &groups[c].in_peers {
-                recv_parts[p] = None;
-            }
+            self.drain_spent(comm, &mut pool);
         }
+        let t = Instant::now();
         for pend in ret_pend {
             wait_chunk(comm, pend, &mut back_parts)?;
         }
+        wire_secs += t.elapsed().as_secs_f64();
 
         let back: Vec<Vec<f32>> = back_parts
             .into_iter()
             .map(|b| b.unwrap_or_default())
             .collect();
-        let y_slots = plan.unpack_returned(&back, self.dm)?;
+        let mut y_slots = pool.take_tensor_filled(ROLE_PACKED, &[self.nb * self.k, self.dm])?;
+        copied += plan.unpack_returned_into(&back, self.dm, &mut y_slots)? as u64;
+        pool.give_all(ROLE_WIRE, back);
+        counters.add("moe_copy_bytes", copied);
+
+        // feed the measured wire:compute balance into the next step's
+        // count round (f32-rounded: what peers will actually receive)
+        if self.chunks == 0 {
+            let ratio = if compute_secs > 1e-12 {
+                (wire_secs / compute_secs) as f32
+            } else if wire_secs > 0.0 {
+                1e3
+            } else {
+                -1.0
+            };
+            self.adapt.lock().unwrap().my_ratio = ratio;
+        }
         Ok((eb, y_slots))
     }
 
@@ -630,10 +884,10 @@ impl DistMoeLayer {
             &mut dscores,
         );
         let gbwd = self.rt.executable(&format!("gate_bwd_w{}", self.workers))?;
-        let out = gbwd.run(&[
-            state.x.clone().into(),
-            self.wg.clone().into(),
-            dscores.into(),
+        let out = gbwd.run_refs(&[
+            (&state.x).into(),
+            (&self.wg).into(),
+            (&dscores).into(),
         ])?;
         let mut it = out.into_iter();
         let dx = it.next().unwrap().into_f32()?;
@@ -674,27 +928,48 @@ impl DistMoeLayer {
         dy: &TensorF32,
         counters: &mut Counters,
     ) -> Result<LayerGrads> {
+        let pool_start = self.pool.lock().unwrap().stats();
         let plan = &state.plan;
 
         // ---- combine backward (L1 transpose) ----
         let cbwd = self.rt.executable("combine_bwd")?;
         let w_t = TensorF32::from_vec(&[self.nb, self.k], state.assign.w.clone())?;
-        let out = cbwd.run(&[
-            state.y_slots.clone().into(),
-            HostTensor::I32(plan.slots_i32()),
-            w_t.into(),
-            dy.clone().into(),
+        let slots = plan.slots_i32();
+        let out = cbwd.run_refs(&[
+            (&state.y_slots).into(),
+            (&slots).into(),
+            (&w_t).into(),
+            dy.into(),
         ])?;
         let mut it = out.into_iter();
         let dys = it.next().unwrap().into_f32()?; // [nb*k, dm] packed order
         let dw = it.next().unwrap().into_f32()?; // [nb, k]
 
-        if self.pipelined() {
-            return self.backward_overlapped(comm, state, dys, &dw, counters);
-        }
+        let (pipelined, chunks) = self.sched();
+        let grads = if pipelined {
+            self.backward_overlapped(comm, state, dys, &dw, chunks, counters)?
+        } else {
+            self.backward_blocking(comm, state, dys, &dw, counters)?
+        };
+        self.report_pool(&pool_start, counters);
+        Ok(grads)
+    }
+
+    /// The blocking backward chain (seed schedule), staged through the
+    /// buffer pool.
+    fn backward_blocking(
+        &self,
+        comm: &mut impl Comm,
+        state: &MoeLayerState,
+        dys: TensorF32,
+        dw: &TensorF32,
+        counters: &mut Counters,
+    ) -> Result<LayerGrads> {
+        let plan = &state.plan;
+        let mut pool = self.pool.lock().unwrap();
 
         // ---- gate backward: routing Jacobian + gate GEMM ----
-        let (mut dx, dwg, dbg) = self.gate_backward(state, &dw)?;
+        let (mut dx, dwg, dbg) = self.gate_backward(state, dw)?;
 
         // ---- reverse exchange of output cotangents ----
         // dys is already in packed order; split by destination rows.
@@ -702,29 +977,42 @@ impl DistMoeLayer {
         let mut pos = 0usize;
         for w in 0..self.workers {
             let rows = plan.send_rows[w];
-            send.push(dys.data[pos * self.dm..(pos + rows) * self.dm].to_vec());
+            let mut buf = pool.take_vec(ROLE_WIRE, rows * self.dm);
+            buf.extend_from_slice(&dys.data[pos * self.dm..(pos + rows) * self.dm]);
+            send.push(buf);
             pos += rows;
         }
-        counters.add(
-            "moe_a2a_bytes",
-            send.iter().map(|b| b.len() * 4).sum::<usize>() as u64,
-        );
+        let sent: usize = send.iter().map(|b| b.len() * 4).sum();
+        counters.add("moe_a2a_bytes", sent as u64);
+        let mut copied = sent as u64;
         let recv = comm.all_to_all_v(send)?;
-        let dys_in = state.eb.rebatch(&recv)?;
+        self.drain_spent(comm, &mut pool);
+        let mut dys_in = pool.take_tensor(
+            ROLE_COT,
+            &[self.ne_local, state.eb.bucket, self.dm],
+        )?;
+        copied += state.eb.rebatch_into(&recv, &mut dys_in)? as u64;
+        pool.give_all(ROLE_WIRE, recv);
 
         // ---- expert shard backward (recompute-style artifact) ----
-        let (dxs, expert_grads) = self.expert.backward(&state.eb, dys_in)?;
+        let (dxs, expert_grads) = self.expert.backward(&state.eb, &dys_in)?;
+        pool.give_tensor(ROLE_COT, dys_in);
 
         // ---- route input cotangents back to token owners ----
-        let ret = state.eb.split_outputs(&dxs)?;
-        counters.add(
-            "moe_a2a_bytes",
-            ret.iter().map(|b| b.len() * 4).sum::<usize>() as u64,
-        );
+        let ret = state.eb.split_outputs_pooled(&dxs, &mut pool, ROLE_WIRE)?;
+        let ret_bytes: usize = ret.iter().map(|b| b.len() * 4).sum();
+        counters.add("moe_a2a_bytes", ret_bytes as u64);
+        copied += ret_bytes as u64;
         let back = comm.all_to_all_v(ret)?;
-        let dx_packed = plan.unpack_returned(&back, self.dm)?;
+        self.drain_spent(comm, &mut pool);
+        let mut dx_packed =
+            pool.take_tensor_filled(ROLE_PACKED, &[self.nb * self.k, self.dm])?;
+        copied += plan.unpack_returned_into(&back, self.dm, &mut dx_packed)? as u64;
+        pool.give_all(ROLE_WIRE, back);
+        counters.add("moe_copy_bytes", copied);
 
         self.scatter_transpose(plan, &dx_packed, &mut dx);
+        pool.give_tensor(ROLE_PACKED, dx_packed);
 
         Ok(LayerGrads { dx, dwg, dbg, expert: expert_grads })
     }
@@ -735,31 +1023,43 @@ impl DistMoeLayer {
     /// then runs once over the full forward batch (keeping the
     /// parameter-gradient reduction order — and therefore the bits —
     /// identical to blocking), and the input-cotangent returns stream
-    /// back per chunk.
+    /// back per chunk.  All staging is pooled; the cotangent container
+    /// and the packed-gradient tensor recycle across steps.
     fn backward_overlapped(
         &self,
         comm: &mut impl Comm,
         state: &MoeLayerState,
         dys: TensorF32,
         dw: &TensorF32,
+        chunks: usize,
         counters: &mut Counters,
     ) -> Result<LayerGrads> {
         let plan = &state.plan;
         let w = self.workers;
         let rank = self.rank;
-        let chunks = self.chunks.clamp(1, w);
+        let chunks = chunks.clamp(1, w);
         let groups = chunk_peer_groups(rank, w, chunks);
         let offsets = plan.send_offsets();
         counters.add("moe_overlap_chunks", chunks as u64);
+        let mut pool = self.pool.lock().unwrap();
         let disp_tags: Vec<u64> =
             (0..chunks).map(|_| (comm.next_seq() << 8) | 1).collect();
         let ret_tags: Vec<u64> =
             (0..chunks).map(|_| (comm.next_seq() << 8) | 1).collect();
 
-        // queue every chunk of packed cotangent rows
-        counters.add("moe_a2a_bytes", (plan.nb * plan.k * self.dm * 4) as u64);
+        // queue every chunk of packed cotangent rows (pooled staging)
+        let sent = plan.nb * plan.k * self.dm * 4;
+        counters.add("moe_a2a_bytes", sent as u64);
+        let mut copied = sent as u64;
         let mut send: Vec<Vec<f32>> = (0..w)
-            .map(|p| dys.data[offsets[p] * self.dm..offsets[p + 1] * self.dm].to_vec())
+            .map(|p| {
+                let rows = offsets[p + 1] - offsets[p];
+                let mut buf = pool.take_vec(ROLE_WIRE, rows * self.dm);
+                buf.extend_from_slice(
+                    &dys.data[offsets[p] * self.dm..offsets[p + 1] * self.dm],
+                );
+                buf
+            })
             .collect();
         let mut recv_parts: Vec<Option<Vec<f32>>> = (0..w).map(|_| None).collect();
         let mut disp_pend: Vec<PendingChunk> =
@@ -773,8 +1073,9 @@ impl DistMoeLayer {
         // push queued frames to the kernel NOW — without this, a
         // deferred-flush backend (TCP) would hold every cotangent in
         // userspace through the gate GEMM and the overlap below would
-        // be fictional
+        // be fictional (the progress engine flushes eagerly anyway)
         comm.flush()?;
+        self.drain_spent(comm, &mut pool);
 
         // gate backward overlaps the cotangent flight
         let (mut dx, dwg, dbg) = self.gate_backward(state, dw)?;
@@ -786,17 +1087,22 @@ impl DistMoeLayer {
             .into_iter()
             .map(|p| p.unwrap_or_default())
             .collect();
-        let dys_in = state.eb.rebatch(&recv)?;
+        let mut dys_in = pool.take_tensor(
+            ROLE_COT,
+            &[self.ne_local, state.eb.bucket, self.dm],
+        )?;
+        copied += state.eb.rebatch_into(&recv, &mut dys_in)? as u64;
+        pool.give_all(ROLE_WIRE, recv);
 
         // full-batch expert backward: same reduction order as blocking
-        let (dxs, expert_grads) = self.expert.backward(&state.eb, dys_in)?;
+        let (dxs, expert_grads) = self.expert.backward(&state.eb, &dys_in)?;
+        pool.give_tensor(ROLE_COT, dys_in);
 
         // streamed return of input cotangents
-        let mut ret = state.eb.split_outputs(&dxs)?;
-        counters.add(
-            "moe_a2a_bytes",
-            ret.iter().map(|b| b.len() * 4).sum::<usize>() as u64,
-        );
+        let mut ret = state.eb.split_outputs_pooled(&dxs, &mut pool, ROLE_WIRE)?;
+        let ret_bytes: usize = ret.iter().map(|b| b.len() * 4).sum();
+        counters.add("moe_a2a_bytes", ret_bytes as u64);
+        copied += ret_bytes as u64;
         let mut back_parts: Vec<Option<Vec<f32>>> = (0..w).map(|_| None).collect();
         let mut ret_pend: Vec<PendingChunk> =
             (0..chunks).map(|_| Vec::new()).collect();
@@ -806,6 +1112,7 @@ impl DistMoeLayer {
                 &mut back_parts, &mut ret_pend[c],
             )?;
         }
+        self.drain_spent(comm, &mut pool);
         for pend in ret_pend {
             wait_chunk(comm, pend, &mut back_parts)?;
         }
@@ -813,8 +1120,13 @@ impl DistMoeLayer {
             .into_iter()
             .map(|b| b.unwrap_or_default())
             .collect();
-        let dx_packed = plan.unpack_returned(&back, self.dm)?;
+        let mut dx_packed =
+            pool.take_tensor_filled(ROLE_PACKED, &[self.nb * self.k, self.dm])?;
+        copied += plan.unpack_returned_into(&back, self.dm, &mut dx_packed)? as u64;
+        pool.give_all(ROLE_WIRE, back);
+        counters.add("moe_copy_bytes", copied);
         self.scatter_transpose(plan, &dx_packed, &mut dx);
+        pool.give_tensor(ROLE_PACKED, dx_packed);
         Ok(LayerGrads { dx, dwg, dbg, expert: expert_grads })
     }
 }
@@ -848,11 +1160,16 @@ mod tests {
 
     #[test]
     fn builder_adopts_comm_section() {
-        let comm = CommConfig { overlap: true, chunks: 2 };
+        let comm = CommConfig { overlap: true, chunks: 2, ..CommConfig::default() };
         let b = MoeLayerBuilder::new().comm_config(&comm);
         assert_eq!(b.comm, comm);
-        // defaults keep the seed-identical blocking schedule
+        // defaults keep the seed-identical blocking schedule, pool on
         let d = MoeLayerBuilder::new();
         assert!(!d.comm.overlap);
+        assert!(d.comm.pool);
+        // knobs thread through
+        let b = MoeLayerBuilder::new().pool(false).chunks(0);
+        assert!(!b.comm.pool);
+        assert_eq!(b.comm.chunks, 0, "0 = adaptive must survive the builder");
     }
 }

@@ -261,14 +261,18 @@ impl MoeLayerTrainer {
         }
         self.monitor.record(&state.counts_kept);
         self.layer.apply_grads(&mut self.opt, &grads)?;
-        Ok(MoeStepStats {
+        let stats = MoeStepStats {
             step: self.step,
             loss,
             balance: state.balance,
             imbalance: self.monitor.imbalance(),
             flops: 3.0 * self.layer.flops(&state),
             secs: t0.elapsed().as_secs_f64(),
-        })
+        };
+        // hand the step's padded batch + combine input back to the
+        // layer's arena so the next step allocates nothing
+        self.layer.recycle(state);
+        Ok(stats)
     }
 }
 

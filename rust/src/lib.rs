@@ -19,14 +19,14 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`runtime`] | PJRT client + artifact registry + executable cache |
-//! | [`comm`] | process groups: nonblocking `isend`/`irecv` + [`comm::CommRequest`] handles, decomposed all-to-all-v (consume arrivals as they land), ring all-reduce, dissemination barrier, … |
-//! | [`moe`] | the §3.1 hierarchy: [`moe::Gate`] policies (top-k / switch / noisy top-k, with the wired balance-loss gradient), [`moe::ExpertShard`] shards (FFN), over the fixed dispatch substrate (plans, ring-offset exchange chunks, capacity buckets, load monitor, balance loss) |
-//! | [`coordinator`] | workers, the distributed MoE layer + [`coordinator::MoeLayerBuilder`] (assembles gate/expert from `[moe]`, exchange schedule from `[comm]` — blocking or chunked dispatch/compute/combine overlap), grad sync, train loops |
+//! | [`runtime`] | PJRT client + artifact registry + executable cache; [`runtime::Executable::run_refs`] executes from *borrowed* host tensors (no owned-argument staging clone) |
+//! | [`comm`] | process groups: nonblocking `isend`/`irecv` + [`comm::CommRequest`] handles, decomposed all-to-all-v (consume arrivals as they land), spent-send reclaim for buffer pools, ring all-reduce, dissemination barrier; the TCP backend's *progress engine* drains socket arrivals during expert compute and completes `wait_all` in true arrival order |
+//! | [`moe`] | the §3.1 hierarchy: [`moe::Gate`] policies (top-k / switch / noisy top-k, with the wired balance-loss gradient), [`moe::ExpertShard`] shards (FFN), over the fixed dispatch substrate (plans, ring-offset exchange chunks, slice-view chunk staging ([`moe::ChunkSlice`]), capacity buckets, adaptive chunk picking, load monitor, balance loss) |
+//! | [`coordinator`] | workers, the distributed MoE layer + [`coordinator::MoeLayerBuilder`] (assembles gate/expert from `[moe]`, exchange schedule from `[comm]` — blocking, or zero-copy chunked dispatch/compute/combine overlap with the count round folded into chunk 0 and a step-persistent buffer pool), grad sync, train loops |
 //! | [`model`] | parameter store, Adam, checkpoints |
 //! | [`data`] | synthetic corpus, tokenizer, batching |
-//! | [`tensor`] | host tensors and the math used outside XLA |
-//! | [`sim`] | analytic network timing model (IB EDR / PCIe presets; scores overlapped steps as max(wire, compute) per chunk) |
+//! | [`tensor`] | host tensors, the step-persistent [`tensor::BufferPool`] arena, and the math used outside XLA |
+//! | [`sim`] | analytic network timing model (IB EDR / PCIe presets; scores overlapped steps as max(wire, compute) per chunk, with a host bytes-copied + allocation cost term for the zero-copy study) |
 //! | [`config`], [`cli`], [`metrics`], [`bench`], [`testing`], [`rng`], [`util`] | substrates (no external deps available offline) |
 
 pub mod bench;

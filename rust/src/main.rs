@@ -36,11 +36,14 @@ fn main() {
             ("info", "print artifact and model inventory"),
             ("train", "single-worker fused training loop (Figure 7)"),
             ("dist-train", "multi-worker training with tag-aware grad sync"),
-            ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk, --overlap --chunks N)"),
+            ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk, --overlap --chunks N [0=adaptive] --no-pool --progress)"),
             ("fmoefy", "Listing-1: dense config -> MoE config at equal FLOPs"),
         ],
     };
-    let args = match Args::from_env(&["verbose", "moe", "dense", "overlap", "no-overlap"]) {
+    let args = match Args::from_env(&[
+        "verbose", "moe", "dense", "overlap", "no-overlap", "no-pool", "progress",
+        "no-progress",
+    ]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n\n{}", usage.render());
@@ -227,6 +230,12 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
         if comm_cfg.overlap {
             argv.push("--overlap".into());
         }
+        if !comm_cfg.pool {
+            argv.push("--no-pool".into());
+        }
+        if comm_cfg.progress {
+            argv.push("--progress".into());
+        }
         children.push(std::process::Command::new(&exe).args(&argv).spawn()?);
     }
     let mut failed = false;
@@ -251,10 +260,15 @@ fn tcp_worker(args: &Args) -> Result<()> {
     let iters = args.usize_or("iters", 2)?;
     let seed = args.u64_or("seed", 7)?;
     let port = args.usize_or("port", 47500)? as u16;
+    let comm_cfg = CommConfig::from_args(args)?;
     let mut group = fastmoe::comm::tcp::TcpGroup::connect_local(rank, workers, port)?;
+    if comm_cfg.progress {
+        // drain socket arrivals during expert compute (reader threads)
+        group.enable_progress();
+    }
     let rt = Arc::new(Runtime::open_default()?);
     let layer = MoeLayerBuilder::from_config(&MoeConfig::from_args(args)?)
-        .comm_config(&CommConfig::from_args(args)?)
+        .comm_config(&comm_cfg)
         .seed(seed)
         .build(rt, workers, rank)?;
     layer.warm()?;
@@ -272,14 +286,25 @@ fn tcp_worker(args: &Args) -> Result<()> {
         if !y.data.iter().all(|v| v.is_finite()) {
             return Err(fastmoe::Error::msg("non-finite output"));
         }
+        layer.recycle(state);
     }
     group.barrier()?;
+    let pool = layer.pool_stats();
     println!(
-        "  [pid {}] tcp worker {rank}/{workers}: {:.2}s, {:.2} GFLOP/s, sent {}",
+        "  [pid {}] tcp worker {rank}/{workers}: {:.2}s, {:.2} GFLOP/s, sent {}, \
+         copied {}, pool {}/{} hit/miss{}",
         std::process::id(),
         watch.secs(),
         util::gflops(flops, watch.secs()),
         util::fmt_bytes(group.counters.get("bytes_sent") as usize),
+        util::fmt_bytes(counters.get("moe_copy_bytes") as usize),
+        pool.hits,
+        pool.misses,
+        if group.progress_enabled() {
+            format!(", progress drained {}", group.progress_arrivals())
+        } else {
+            String::new()
+        },
     );
     Ok(())
 }
@@ -329,11 +354,14 @@ fn dist_moe(args: &Args) -> Result<()> {
     })?;
     for (rank, secs, flops, counters, balance, imbalance) in &stats {
         println!(
-            "worker {rank}: {:.2}s  {:.2} GFLOP/s  a2a {}  padding {:.1}%  \
-             balance_loss {:.3}  imbalance {:.2}",
+            "worker {rank}: {:.2}s  {:.2} GFLOP/s  a2a {}  copied {}  \
+             pool {}/{} hit/miss  padding {:.1}%  balance_loss {:.3}  imbalance {:.2}",
             secs,
             util::gflops(*flops, *secs),
             util::fmt_bytes(counters.get("moe_a2a_bytes") as usize),
+            util::fmt_bytes(counters.get("moe_copy_bytes") as usize),
+            counters.get("pool_hits"),
+            counters.get("pool_misses"),
             100.0
                 * (1.0
                     - counters.get("moe_real_rows") as f64

@@ -43,10 +43,12 @@ pub trait ExpertShard: Send + Sync {
     /// Backward over the same batch: output cotangents
     /// `dys: [ne_local, bucket, dm]` → (input cotangents of the same
     /// shape, named parameter gradients in [`ExpertShard::params`] order).
+    /// Borrows `dys` so pooled cotangent containers can be recycled by
+    /// the caller afterwards.
     fn backward(
         &self,
         eb: &ExpertBatch,
-        dys: TensorF32,
+        dys: &TensorF32,
     ) -> Result<(TensorF32, Vec<(&'static str, TensorF32)>)>;
 
     /// Named parameter slots, in gradient order.
@@ -131,12 +133,15 @@ impl ExpertShard for FfnExpertShard {
             )));
         }
         let efwd = self.rt.executable(&format!("expert_fwd_b{}", eb.bucket))?;
-        let out = efwd.run(&[
-            eb.xs.clone().into(),
-            self.w1.clone().into(),
-            self.b1.clone().into(),
-            self.w2.clone().into(),
-            self.b2.clone().into(),
+        // run_refs: the padded batch and the (step-invariant) weights
+        // are borrowed, not cloned, on every call — the zero-copy PR's
+        // single-device win.
+        let out = efwd.run_refs(&[
+            (&eb.xs).into(),
+            (&self.w1).into(),
+            (&self.b1).into(),
+            (&self.w2).into(),
+            (&self.b2).into(),
         ])?;
         out.into_iter().next().unwrap().into_f32()
     }
@@ -144,15 +149,15 @@ impl ExpertShard for FfnExpertShard {
     fn backward(
         &self,
         eb: &ExpertBatch,
-        dys: TensorF32,
+        dys: &TensorF32,
     ) -> Result<(TensorF32, Vec<(&'static str, TensorF32)>)> {
         let ebwd = self.rt.executable(&format!("expert_bwd_b{}", eb.bucket))?;
-        let out = ebwd.run(&[
-            eb.xs.clone().into(),
-            self.w1.clone().into(),
-            self.b1.clone().into(),
-            self.w2.clone().into(),
-            self.b2.clone().into(),
+        let out = ebwd.run_refs(&[
+            (&eb.xs).into(),
+            (&self.w1).into(),
+            (&self.b1).into(),
+            (&self.w2).into(),
+            (&self.b2).into(),
             dys.into(),
         ])?;
         let mut it = out.into_iter();

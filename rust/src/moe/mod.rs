@@ -16,7 +16,11 @@
 //!   capacity [`bucket_for`] padding, and the reverse path.  For the
 //!   pipelined layer, [`chunk_peer_groups`] partitions the exchange
 //!   into ring-offset peer chunks so dispatch, expert compute, and the
-//!   return stream overlap (§4's hidden exchange).
+//!   return stream overlap (§4's hidden exchange); [`ChunkSlice`] is a
+//!   chunk's *slice view* of the full-batch buffer (rows land once,
+//!   chunks gather their segments into one pooled staging), and
+//!   [`adaptive_chunks`] picks the chunk count from a measured
+//!   wire:compute ratio (`[comm] chunks = 0`).
 //!
 //! Layers are assembled from the three levels by
 //! `coordinator::MoeLayerBuilder`, driven by the `[moe]` config section.
@@ -35,7 +39,7 @@ pub use monitor::{balance_loss, LoadMonitor};
 
 use crate::comm::{Comm, CommRequest};
 use crate::error::{Error, Result};
-use crate::tensor::{ops, TensorF32};
+use crate::tensor::{ops, BufferPool, TensorF32};
 
 /// Top-k gate selection + k-way softmax weights (matches
 /// `stages.topk_softmax`; ties toward the lower expert id).
@@ -204,6 +208,19 @@ impl DispatchPlan {
     /// Pack token features into per-destination-worker buffers in packed
     /// order (the scatter of §4, fused with the send staging).
     pub fn pack(&self, x: &TensorF32) -> Result<Vec<Vec<f32>>> {
+        let mut pool = BufferPool::new(false);
+        self.pack_into(x, &mut pool, "pack")
+    }
+
+    /// [`DispatchPlan::pack`] staging its per-peer buffers out of a
+    /// [`BufferPool`] role, so steady-state steps re-use last step's
+    /// send staging instead of allocating `workers` fresh vectors.
+    pub fn pack_into(
+        &self,
+        x: &TensorF32,
+        pool: &mut BufferPool,
+        role: &'static str,
+    ) -> Result<Vec<Vec<f32>>> {
         let (nb, dm) = x.dims2()?;
         if nb != self.nb {
             return Err(Error::Shape("pack: batch mismatch".into()));
@@ -211,7 +228,7 @@ impl DispatchPlan {
         let mut out: Vec<Vec<f32>> = self
             .send_rows
             .iter()
-            .map(|&r| Vec::with_capacity(r * dm))
+            .map(|&r| pool.take_vec(role, r * dm))
             .collect();
         let mut pos = 0usize;
         for wkr in 0..self.workers {
@@ -230,11 +247,29 @@ impl DispatchPlan {
     /// Reassemble per-peer returned buffers into `[nb*k, dm]` rows in
     /// packed order (the input expected by the combine kernel).
     pub fn unpack_returned(&self, parts: &[Vec<f32>], dm: usize) -> Result<TensorF32> {
+        let mut ys = TensorF32::zeros(&[self.nb * self.k, dm]);
+        self.unpack_returned_into(parts, dm, &mut ys)?;
+        Ok(ys)
+    }
+
+    /// [`DispatchPlan::unpack_returned`] into a caller-provided (pooled)
+    /// tensor; every row is overwritten.  Returns the bytes copied.
+    pub fn unpack_returned_into(
+        &self,
+        parts: &[Vec<f32>],
+        dm: usize,
+        ys: &mut TensorF32,
+    ) -> Result<usize> {
         if parts.len() != self.workers {
             return Err(Error::Shape("unpack: wrong peer count".into()));
         }
         let n_assign = self.nb * self.k;
-        let mut ys = TensorF32::zeros(&[n_assign, dm]);
+        if ys.shape != vec![n_assign, dm] {
+            return Err(Error::Shape(format!(
+                "unpack: destination is {:?}, expected [{n_assign}, {dm}]",
+                ys.shape
+            )));
+        }
         let mut pos = 0usize;
         for (wkr, part) in parts.iter().enumerate() {
             let rows = self.send_rows[wkr];
@@ -248,7 +283,7 @@ impl DispatchPlan {
             ys.data[pos * dm..(pos + rows) * dm].copy_from_slice(part);
             pos += rows;
         }
-        Ok(ys)
+        Ok(n_assign * dm * 4)
     }
 
     /// Slots as an `[nb, k]` i32 tensor (combine-kernel input).
@@ -325,6 +360,27 @@ pub fn chunk_peer_groups(rank: usize, workers: usize, chunks: usize) -> Vec<Chun
         .collect()
 }
 
+/// Pick an exchange chunk count from a measured wire:compute balance
+/// (`[comm] chunks = 0` — the adaptive satellite of the zero-copy PR).
+///
+/// Intuition from the α-β pipeline model (`sim::NetModel`): with all
+/// the time on the wire, every peer wants to be its own chunk
+/// (`workers`) so compute can start the moment the first rows land;
+/// with all the time in compute, chunking only adds padding and tag
+/// overhead (`1`).  In between the useful granularity scales with the
+/// *wire fraction* `wire / (wire + compute)` of a step.
+pub fn adaptive_chunks(wire: f64, compute: f64, workers: usize) -> usize {
+    let w = workers.max(1);
+    if !wire.is_finite() || wire <= 0.0 {
+        return 1;
+    }
+    if !compute.is_finite() || compute <= 0.0 {
+        return w;
+    }
+    let frac = wire / (wire + compute);
+    ((w as f64 * frac).round() as usize).clamp(1, w)
+}
+
 /// Receive requests of one in-flight exchange chunk, by absolute peer.
 pub type PendingChunk = Vec<(usize, CommRequest)>;
 
@@ -387,6 +443,27 @@ pub struct ExpertBatch {
     pub rows_per_expert: Vec<usize>,
 }
 
+/// Per-peer layout of an [`ExpertBatch`]: total rows per local expert
+/// and the capacity bucket those rows pad into.
+fn batch_layout(
+    recv_counts: &[Vec<u32>],
+    ne_local: usize,
+    buckets: &[usize],
+) -> Result<(Vec<usize>, usize)> {
+    let mut rows_per_expert = vec![0usize; ne_local];
+    for counts in recv_counts {
+        if counts.len() != ne_local {
+            return Err(Error::Shape("recv counts arity".into()));
+        }
+        for (e, &c) in counts.iter().enumerate() {
+            rows_per_expert[e] += c as usize;
+        }
+    }
+    let max_rows = rows_per_expert.iter().copied().max().unwrap_or(0);
+    let bucket = bucket_for(max_rows.max(1), buckets)?;
+    Ok((rows_per_expert, bucket))
+}
+
 impl ExpertBatch {
     /// Regroup incoming rows (grouped by expert *within* each peer
     /// buffer) into per-expert contiguous blocks across peers.
@@ -401,9 +478,9 @@ impl ExpertBatch {
         Self::build_from(recv_counts, &refs, ne_local, dm, buckets)
     }
 
-    /// [`ExpertBatch::build`] over borrowed per-peer slices — the
-    /// chunked exchange assembles batches from buffers it also keeps
-    /// for the full-batch backward residual, so it can't give them up.
+    /// [`ExpertBatch::build`] over borrowed per-peer slices — one
+    /// [`ExpertBatch::shell`] filled from every peer (identical layout
+    /// and bits by construction).
     pub fn build_from(
         recv_counts: Vec<Vec<u32>>,
         recv_parts: &[&[f32]],
@@ -411,43 +488,14 @@ impl ExpertBatch {
         dm: usize,
         buckets: &[usize],
     ) -> Result<ExpertBatch> {
-        let peers = recv_counts.len();
-        if recv_parts.len() != peers {
+        if recv_parts.len() != recv_counts.len() {
             return Err(Error::Shape("recv parts/counts mismatch".into()));
         }
-        let mut rows_per_expert = vec![0usize; ne_local];
-        for counts in &recv_counts {
-            if counts.len() != ne_local {
-                return Err(Error::Shape("recv counts arity".into()));
-            }
-            for (e, &c) in counts.iter().enumerate() {
-                rows_per_expert[e] += c as usize;
-            }
-        }
-        let max_rows = rows_per_expert.iter().copied().max().unwrap_or(0);
-        let bucket = bucket_for(max_rows.max(1), buckets)?;
-
-        let mut xs = TensorF32::zeros(&[ne_local, bucket, dm]);
-        let mut fill = vec![0usize; ne_local];
+        let mut eb = Self::shell(recv_counts, ne_local, dm, buckets)?;
         for (p, part) in recv_parts.iter().enumerate() {
-            let mut off = 0usize;
-            for e in 0..ne_local {
-                let rows = recv_counts[p][e] as usize;
-                let src = &part[off * dm..(off + rows) * dm];
-                let dst_start = (e * bucket + fill[e]) * dm;
-                xs.data[dst_start..dst_start + rows * dm].copy_from_slice(src);
-                fill[e] += rows;
-                off += rows;
-            }
-            if off * dm != part.len() {
-                return Err(Error::Shape(format!(
-                    "peer {p} buffer has {} floats, counts say {}",
-                    part.len(),
-                    off * dm
-                )));
-            }
+            eb.fill_peer(p, part)?;
         }
-        Ok(ExpertBatch { ne_local, bucket, dm, xs, recv_counts, rows_per_expert })
+        Ok(eb)
     }
 
     /// Allocate the padded batch for known per-peer counts with every
@@ -463,26 +511,47 @@ impl ExpertBatch {
         dm: usize,
         buckets: &[usize],
     ) -> Result<ExpertBatch> {
-        let mut rows_per_expert = vec![0usize; ne_local];
-        for counts in &recv_counts {
-            if counts.len() != ne_local {
-                return Err(Error::Shape("recv counts arity".into()));
-            }
-            for (e, &c) in counts.iter().enumerate() {
-                rows_per_expert[e] += c as usize;
-            }
-        }
-        let max_rows = rows_per_expert.iter().copied().max().unwrap_or(0);
-        let bucket = bucket_for(max_rows.max(1), buckets)?;
+        let (rows_per_expert, bucket) = batch_layout(&recv_counts, ne_local, buckets)?;
         let xs = TensorF32::zeros(&[ne_local, bucket, dm]);
         Ok(ExpertBatch { ne_local, bucket, dm, xs, recv_counts, rows_per_expert })
+    }
+
+    /// [`ExpertBatch::shell`] backed by a pooled buffer: the padded
+    /// full-batch container comes from (and later returns to) `pool`,
+    /// so steady-state steps never reallocate it.
+    pub fn shell_pooled(
+        recv_counts: Vec<Vec<u32>>,
+        ne_local: usize,
+        dm: usize,
+        buckets: &[usize],
+        pool: &mut BufferPool,
+        role: &'static str,
+    ) -> Result<ExpertBatch> {
+        let (rows_per_expert, bucket) = batch_layout(&recv_counts, ne_local, buckets)?;
+        let xs = pool.take_tensor(role, &[ne_local, bucket, dm])?;
+        Ok(ExpertBatch { ne_local, bucket, dm, xs, recv_counts, rows_per_expert })
+    }
+
+    /// Wrap an already-staged padded tensor as a compute batch (the
+    /// per-chunk slice-view staging of the pipelined path).  Only the
+    /// geometry and `xs` matter to an [`ExpertShard`]; `recv_counts`
+    /// is left empty — use the owning [`ChunkSlice`] for splitting.
+    pub fn for_compute(
+        ne_local: usize,
+        bucket: usize,
+        dm: usize,
+        xs: TensorF32,
+        rows_per_expert: Vec<usize>,
+    ) -> ExpertBatch {
+        ExpertBatch { ne_local, bucket, dm, xs, recv_counts: Vec::new(), rows_per_expert }
     }
 
     /// Copy one peer's buffer (rows grouped by expert, as sent) into
     /// its final rows of a [`ExpertBatch::shell`].  Positions depend
     /// only on the counts, so peers may be filled in any arrival
     /// order; filling the same peer twice just rewrites the same rows.
-    pub fn fill_peer(&mut self, p: usize, part: &[f32]) -> Result<()> {
+    /// Returns the bytes copied (copy-counter food).
+    pub fn fill_peer(&mut self, p: usize, part: &[f32]) -> Result<usize> {
         let expect: usize = self.recv_counts[p].iter().map(|&c| c as usize).sum();
         if part.len() != expect * self.dm {
             return Err(Error::Shape(format!(
@@ -506,12 +575,24 @@ impl ExpertBatch {
             self.xs.data[dst..dst + rows * self.dm].copy_from_slice(src);
             off += rows;
         }
-        Ok(())
+        Ok(part.len() * 4)
     }
 
     /// Split expert outputs `[ne_local, bucket, dm]` back into per-peer
     /// return buffers (inverse of `build`, same grouping as arrival).
     pub fn split_outputs(&self, ys: &TensorF32) -> Result<Vec<Vec<f32>>> {
+        let mut pool = BufferPool::new(false);
+        self.split_outputs_pooled(ys, &mut pool, "split")
+    }
+
+    /// [`ExpertBatch::split_outputs`] with the per-peer return buffers
+    /// staged out of a [`BufferPool`] role.
+    pub fn split_outputs_pooled(
+        &self,
+        ys: &TensorF32,
+        pool: &mut BufferPool,
+        role: &'static str,
+    ) -> Result<Vec<Vec<f32>>> {
         if ys.shape != vec![self.ne_local, self.bucket, self.dm] {
             return Err(Error::Shape(format!(
                 "split_outputs: got {:?}, expected [{}, {}, {}]",
@@ -519,7 +600,14 @@ impl ExpertBatch {
             )));
         }
         let peers = self.recv_counts.len();
-        let mut out: Vec<Vec<f32>> = (0..peers).map(|_| Vec::new()).collect();
+        let mut out: Vec<Vec<f32>> = self
+            .recv_counts
+            .iter()
+            .map(|cs| {
+                let rows: u32 = cs.iter().sum();
+                pool.take_vec(role, rows as usize * self.dm)
+            })
+            .collect();
         let mut taken = vec![0usize; self.ne_local];
         for p in 0..peers {
             for e in 0..self.ne_local {
@@ -541,10 +629,21 @@ impl ExpertBatch {
     /// on the backward pass) into this batch's exact layout — same
     /// counts, same bucket, padding rows zero.
     pub fn rebatch(&self, parts: &[Vec<f32>]) -> Result<TensorF32> {
+        let mut xs = self.zeros_like();
+        self.rebatch_into(parts, &mut xs)?;
+        Ok(xs)
+    }
+
+    /// [`ExpertBatch::rebatch`] into a caller-provided *zeroed* (pooled)
+    /// tensor shaped like `xs`.  Returns the bytes copied.
+    pub fn rebatch_into(&self, parts: &[Vec<f32>], xs: &mut TensorF32) -> Result<usize> {
         if parts.len() != self.recv_counts.len() {
             return Err(Error::Shape("rebatch: peer count".into()));
         }
-        let mut xs = self.zeros_like();
+        if xs.shape != vec![self.ne_local, self.bucket, self.dm] {
+            return Err(Error::Shape("rebatch: destination shape".into()));
+        }
+        let mut copied = 0usize;
         let mut fill = vec![0usize; self.ne_local];
         for (p, part) in parts.iter().enumerate() {
             let mut off = 0usize;
@@ -559,8 +658,131 @@ impl ExpertBatch {
             if off * self.dm != part.len() {
                 return Err(Error::Shape("rebatch: ragged buffer".into()));
             }
+            copied += part.len() * 4;
         }
-        Ok(xs)
+        Ok(copied)
+    }
+
+    /// The slice view of one exchange chunk: where the chunk peers'
+    /// (already landed) rows live inside this full-batch buffer, and
+    /// the compact layout they occupy in the chunk's compute staging.
+    ///
+    /// Rows are laid out by absolute peer inside each expert block (the
+    /// blocking layout, which parameter-gradient reduction order — and
+    /// therefore bitwise equivalence — depends on), so one chunk's rows
+    /// are a *set of segments* per expert, not a single range.
+    pub fn chunk_slice(&self, peers: &[usize], buckets: &[usize]) -> Result<ChunkSlice> {
+        let all = self.recv_counts.len();
+        let mut segs: Vec<Vec<SliceSeg>> =
+            (0..self.ne_local).map(|_| Vec::with_capacity(peers.len())).collect();
+        let mut rows_per_expert = vec![0usize; self.ne_local];
+        for e in 0..self.ne_local {
+            let mut dst = 0usize;
+            for &p in peers {
+                if p >= all {
+                    return Err(Error::Shape(format!("chunk peer {p} of {all}")));
+                }
+                let src: usize = self.recv_counts[..p]
+                    .iter()
+                    .map(|cs| cs[e] as usize)
+                    .sum();
+                let rows = self.recv_counts[p][e] as usize;
+                segs[e].push(SliceSeg { src, rows, dst });
+                dst += rows;
+            }
+            rows_per_expert[e] = dst;
+        }
+        let max_rows = rows_per_expert.iter().copied().max().unwrap_or(0);
+        let bucket = bucket_for(max_rows.max(1), buckets)?;
+        Ok(ChunkSlice { peers: peers.to_vec(), segs, rows_per_expert, bucket })
+    }
+
+    /// Gather a chunk's rows out of this full-batch buffer into the
+    /// compact padded staging `dst: [ne_local, slice.bucket, dm]` (the
+    /// bucketed executable's input).  `dst` must arrive zeroed; only
+    /// real rows are written.  Returns the bytes copied — the *single*
+    /// stage copy that replaced the PR 2 path's wire→chunk-batch copy
+    /// (the rows already landed here via [`ExpertBatch::fill_peer`]).
+    pub fn gather_chunk(&self, slice: &ChunkSlice, dst: &mut TensorF32) -> Result<usize> {
+        if dst.shape != vec![self.ne_local, slice.bucket, self.dm] {
+            return Err(Error::Shape(format!(
+                "gather_chunk: staging is {:?}, expected [{}, {}, {}]",
+                dst.shape, self.ne_local, slice.bucket, self.dm
+            )));
+        }
+        let mut copied = 0usize;
+        for e in 0..self.ne_local {
+            for seg in &slice.segs[e] {
+                if seg.rows == 0 {
+                    continue;
+                }
+                let src = (e * self.bucket + seg.src) * self.dm;
+                let to = (e * slice.bucket + seg.dst) * self.dm;
+                dst.data[to..to + seg.rows * self.dm]
+                    .copy_from_slice(&self.xs.data[src..src + seg.rows * self.dm]);
+                copied += seg.rows * self.dm * 4;
+            }
+        }
+        Ok(copied)
+    }
+}
+
+/// One per-expert row segment of a [`ChunkSlice`]: `rows` rows starting
+/// at `src` inside the full-batch expert block, landing at `dst` inside
+/// the chunk's compact staging block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SliceSeg {
+    pub src: usize,
+    pub rows: usize,
+    pub dst: usize,
+}
+
+/// Row-offset view of one exchange chunk inside a full-batch
+/// [`ExpertBatch`] — see [`ExpertBatch::chunk_slice`].  `segs[e][i]` is
+/// peer `peers[i]`'s segment in expert `e` (possibly zero rows, kept so
+/// indices align).
+#[derive(Clone, Debug)]
+pub struct ChunkSlice {
+    pub peers: Vec<usize>,
+    pub segs: Vec<Vec<SliceSeg>>,
+    pub rows_per_expert: Vec<usize>,
+    /// Compute bucket of the chunk (smallest that fits its rows; never
+    /// larger than the full batch's bucket, since chunk rows ⊆ rows).
+    pub bucket: usize,
+}
+
+impl ChunkSlice {
+    /// Split a chunk's expert outputs `[ne_local, bucket, dm]` into
+    /// per-peer return buffers (`peers` order, rows grouped by expert —
+    /// the grouping [`DispatchPlan::unpack_returned`] expects back).
+    pub fn split_outputs_pooled(
+        &self,
+        ys: &TensorF32,
+        dm: usize,
+        pool: &mut BufferPool,
+        role: &'static str,
+    ) -> Result<(Vec<Vec<f32>>, usize)> {
+        let ne_local = self.segs.len();
+        if ys.shape != vec![ne_local, self.bucket, dm] {
+            return Err(Error::Shape(format!(
+                "chunk split: got {:?}, expected [{}, {}, {}]",
+                ys.shape, ne_local, self.bucket, dm
+            )));
+        }
+        let mut copied = 0usize;
+        let mut out = Vec::with_capacity(self.peers.len());
+        for i in 0..self.peers.len() {
+            let rows: usize = self.segs.iter().map(|s| s[i].rows).sum();
+            let mut buf = pool.take_vec(role, rows * dm);
+            for (e, segs) in self.segs.iter().enumerate() {
+                let seg = segs[i];
+                let start = (e * self.bucket + seg.dst) * dm;
+                buf.extend_from_slice(&ys.data[start..start + seg.rows * dm]);
+            }
+            copied += buf.len() * 4;
+            out.push(buf);
+        }
+        Ok((out, copied))
     }
 }
 
@@ -929,6 +1151,115 @@ mod tests {
         assert_eq!(shell.xs.data, built.xs.data);
         // length validation
         assert!(shell.fill_peer(0, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn chunk_slice_gather_matches_per_chunk_build() {
+        // The zero-copy contract: gathering a chunk's rows out of the
+        // full-batch shell must reproduce, bit for bit, the batch the
+        // PR 2 path built from the raw wire buffers of those peers.
+        let dm = 2;
+        let buckets = [4usize, 8, 16];
+        let recv_counts =
+            vec![vec![2u32, 1], vec![1, 3], vec![0, 2], vec![2, 0]];
+        let parts: Vec<Vec<f32>> = recv_counts
+            .iter()
+            .enumerate()
+            .map(|(p, cs)| {
+                let rows: u32 = cs.iter().sum();
+                (0..rows as usize * dm).map(|i| (p * 100 + i) as f32).collect()
+            })
+            .collect();
+        let full =
+            ExpertBatch::build(recv_counts.clone(), &parts, 2, dm, &buckets).unwrap();
+        // two "chunks" with non-contiguous absolute peers
+        for peers in [vec![0usize, 2], vec![3usize, 1], vec![1usize], vec![0, 1, 2, 3]]
+        {
+            let slice = full.chunk_slice(&peers, &buckets).unwrap();
+            // chunk bucket never exceeds the full bucket
+            assert!(slice.bucket <= full.bucket, "peers {peers:?}");
+            let mut staging = TensorF32::zeros(&[2, slice.bucket, dm]);
+            let copied = full.gather_chunk(&slice, &mut staging).unwrap();
+            let rows: usize = slice.rows_per_expert.iter().sum();
+            assert_eq!(copied, rows * dm * 4);
+            // reference: the PR 2 per-chunk batch from wire buffers
+            let counts_c: Vec<Vec<u32>> =
+                peers.iter().map(|&p| recv_counts[p].clone()).collect();
+            let parts_c: Vec<&[f32]> =
+                peers.iter().map(|&p| parts[p].as_slice()).collect();
+            let eb_c =
+                ExpertBatch::build_from(counts_c, &parts_c, 2, dm, &buckets).unwrap();
+            assert_eq!(eb_c.bucket, slice.bucket);
+            assert_eq!(staging.data, eb_c.xs.data, "peers {peers:?}: staging bits");
+            // and the chunk split must reproduce the per-peer buffers
+            let mut pool = BufferPool::new(true);
+            let (back, _) = slice
+                .split_outputs_pooled(&staging, dm, &mut pool, "ret")
+                .unwrap();
+            for (i, &p) in peers.iter().enumerate() {
+                assert_eq!(back[i], parts[p], "peer {p} round trip");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_helpers_match_allocating_ones() {
+        let s = scores(30, 6, 8);
+        let a = topk_softmax(&s, 2).unwrap();
+        let plan = DispatchPlan::build(&a, 3, 2).unwrap();
+        let mut x = TensorF32::zeros(&[30, 4]);
+        Rng::new(5).fill_normal(&mut x.data, 1.0);
+        let mut pool = BufferPool::new(true);
+        let plain = plan.pack(&x).unwrap();
+        let pooled = plan.pack_into(&x, &mut pool, "wire").unwrap();
+        assert_eq!(plain, pooled);
+        // unpack into a pooled tensor == allocating unpack
+        let ys = plan.unpack_returned(&plain, 4).unwrap();
+        let mut dst = pool.take_tensor("y", &[60, 4]).unwrap();
+        let copied = plan.unpack_returned_into(&pooled, 4, &mut dst).unwrap();
+        assert_eq!(copied, 60 * 4 * 4);
+        assert_eq!(ys.data, dst.data);
+    }
+
+    #[test]
+    fn rebatch_into_matches_rebatch() {
+        let dm = 3;
+        let recv_counts = vec![vec![2u32, 1], vec![1, 2]];
+        let parts: Vec<Vec<f32>> = recv_counts
+            .iter()
+            .map(|cs| {
+                let rows: u32 = cs.iter().sum();
+                (0..rows as usize * dm).map(|i| i as f32 + 0.5).collect()
+            })
+            .collect();
+        let eb = ExpertBatch::build(recv_counts, &parts, 2, dm, &[4]).unwrap();
+        let plain = eb.rebatch(&parts).unwrap();
+        let mut dst = eb.zeros_like();
+        let copied = eb.rebatch_into(&parts, &mut dst).unwrap();
+        assert_eq!(plain.data, dst.data);
+        assert_eq!(copied, parts.iter().map(|p| p.len() * 4).sum::<usize>());
+    }
+
+    #[test]
+    fn adaptive_chunks_tracks_wire_fraction() {
+        // no wire → no pipelining; no compute → every peer its own chunk
+        assert_eq!(adaptive_chunks(0.0, 1.0, 8), 1);
+        assert_eq!(adaptive_chunks(1.0, 0.0, 8), 8);
+        assert_eq!(adaptive_chunks(f64::NAN, 1.0, 8), 1);
+        // balanced → about half the peers per chunk group
+        assert_eq!(adaptive_chunks(1.0, 1.0, 8), 4);
+        // monotone in the wire share, bounded by [1, workers]
+        let mut last = 0usize;
+        for wire in [0.01, 0.1, 0.5, 1.0, 5.0, 100.0] {
+            let c = adaptive_chunks(wire, 1.0, 8);
+            assert!((1..=8).contains(&c));
+            assert!(c >= last, "chunks must not shrink as wire grows");
+            last = c;
+        }
+        assert_eq!(last, 8);
+        // degenerate worker counts
+        assert_eq!(adaptive_chunks(1.0, 1.0, 1), 1);
+        assert_eq!(adaptive_chunks(1.0, 1.0, 0), 1);
     }
 
     #[test]

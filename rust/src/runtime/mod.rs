@@ -20,7 +20,7 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
-use crate::tensor::{HostTensor, TensorF32, TensorI32};
+use crate::tensor::{HostTensor, HostTensorRef, TensorF32, TensorI32};
 
 /// A compiled artifact with its ABI.
 pub struct Executable {
@@ -147,13 +147,24 @@ impl Runtime {
 impl Executable {
     /// Execute with positional host tensors; checks the ABI both ways.
     ///
+    /// Convenience over [`Executable::run_refs`] for callers that
+    /// already own their argument tensors.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<HostTensorRef> = inputs.iter().map(HostTensorRef::from).collect();
+        self.run_refs(&refs)
+    }
+
+    /// Execute with *borrowed* host tensors — the hot-path entry: no
+    /// caller-side clone just to build the argument list; each input
+    /// goes host→literal exactly once.
+    ///
     /// Arguments go through explicit device buffers + `execute_b`: the
     /// pinned xla_extension's literal-argument `execute` leaks its
     /// implicit transfer buffers (~40 KiB/call, which OOM-killed a
     /// 300-step training run — EXPERIMENTS.md §Perf iteration 2);
     /// the explicit-buffer path is leak-free and lets callers keep
     /// persistent state device-side.
-    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    pub fn run_refs(&self, inputs: &[HostTensorRef]) -> Result<Vec<HostTensor>> {
         self.check_inputs(inputs)?;
         let client = self.exe.client();
         // literals must outlive execution: the CPU PJRT host→device
@@ -161,7 +172,7 @@ impl Executable {
         let mut literals = Vec::with_capacity(inputs.len());
         let mut bufs = Vec::with_capacity(inputs.len());
         for t in inputs {
-            let lit = to_literal(t)?;
+            let lit = to_literal_ref(*t)?;
             bufs.push(client.buffer_from_host_literal(None, &lit)?);
             literals.push(lit);
         }
@@ -199,7 +210,7 @@ impl Executable {
         from_literal(lit, &self.meta.outputs[idx])
     }
 
-    fn check_inputs(&self, inputs: &[HostTensor]) -> Result<()> {
+    fn check_inputs(&self, inputs: &[HostTensorRef]) -> Result<()> {
         let spec = &self.meta.inputs;
         if inputs.len() != spec.len() {
             return Err(Error::Abi {
@@ -244,9 +255,15 @@ impl Executable {
 
 /// HostTensor -> PJRT literal.
 pub fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    to_literal_ref(t.into())
+}
+
+/// Borrowed host tensor -> PJRT literal (the bytes are copied into the
+/// literal here — the one unavoidable staging copy of the execute path).
+pub fn to_literal_ref(t: HostTensorRef) -> Result<xla::Literal> {
     let (ty, dims, bytes) = match t {
-        HostTensor::F32(t) => (xla::ElementType::F32, &t.shape, t.as_bytes()),
-        HostTensor::I32(t) => (xla::ElementType::S32, &t.shape, t.as_bytes()),
+        HostTensorRef::F32(t) => (xla::ElementType::F32, &t.shape, t.as_bytes()),
+        HostTensorRef::I32(t) => (xla::ElementType::S32, &t.shape, t.as_bytes()),
     };
     Ok(xla::Literal::create_from_shape_and_untyped_data(
         ty, dims, bytes,
@@ -319,6 +336,34 @@ mod tests {
         let before = rt.cached();
         let _ = rt.executable("quickstart_moe").unwrap();
         assert_eq!(rt.cached(), before);
+    }
+
+    #[test]
+    fn run_refs_matches_run_bitwise() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.executable("quickstart_moe").unwrap();
+        let mut rng = crate::rng::Rng::new(9);
+        let inputs: Vec<HostTensor> = exe
+            .meta
+            .inputs
+            .iter()
+            .map(|s| {
+                let mut t = TensorF32::zeros(&s.shape);
+                rng.fill_normal(&mut t.data, 0.3);
+                HostTensor::F32(t)
+            })
+            .collect();
+        let owned = exe.run(&inputs).unwrap();
+        let refs: Vec<HostTensorRef> = inputs.iter().map(HostTensorRef::from).collect();
+        let borrowed = exe.run_refs(&refs).unwrap();
+        assert_eq!(owned.len(), borrowed.len());
+        for (a, b) in owned.iter().zip(&borrowed) {
+            assert_eq!(
+                a.as_f32().unwrap().data,
+                b.as_f32().unwrap().data,
+                "run vs run_refs must be the same execution"
+            );
+        }
     }
 
     #[test]

@@ -43,13 +43,23 @@ impl NetPreset {
     }
 }
 
-/// The α-β model with per-collective helpers.
+/// The α-β model with per-collective helpers, plus a *host* cost term
+/// for the zero-copy study: staging copies move at `host_beta`
+/// (memcpy) and fresh padded allocations at `alloc_beta` (allocate +
+/// zero, slower than memcpy), so a schedule that copies or allocates
+/// more per step scores measurably worse even when its wire time is
+/// identical — the difference the PR-3 zero-copy hot path eliminates.
 #[derive(Clone, Copy, Debug)]
 pub struct NetModel {
     /// Per-message latency, seconds.
     pub alpha: f64,
     /// Link bandwidth, bytes/second.
     pub beta: f64,
+    /// Host memcpy bandwidth for staging copies, bytes/second.
+    pub host_beta: f64,
+    /// Effective allocate-and-zero bandwidth for fresh padded buffers,
+    /// bytes/second.
+    pub alloc_beta: f64,
     pub enabled: bool,
 }
 
@@ -59,14 +69,24 @@ impl NetModel {
             NetPreset::IbEdr => NetModel {
                 alpha: 1.5e-6,
                 beta: 12.5e9,
+                host_beta: 16.0e9,
+                alloc_beta: 6.0e9,
                 enabled: true,
             },
             NetPreset::Pcie3 => NetModel {
                 alpha: 5.0e-6,
                 beta: 12.0e9,
+                host_beta: 16.0e9,
+                alloc_beta: 6.0e9,
                 enabled: true,
             },
-            NetPreset::None => NetModel { alpha: 0.0, beta: f64::INFINITY, enabled: false },
+            NetPreset::None => NetModel {
+                alpha: 0.0,
+                beta: f64::INFINITY,
+                host_beta: f64::INFINITY,
+                alloc_beta: f64::INFINITY,
+                enabled: false,
+            },
         }
     }
 
@@ -131,6 +151,56 @@ impl NetModel {
             self.alpha * ((n - 1) as f64 / c) + bytes_out as f64 / self.beta / c;
         let comp_chunk = compute / c;
         wire_chunk + (c - 1.0) * wire_chunk.max(comp_chunk) + comp_chunk
+    }
+
+    /// Host-side overhead of one step: staging copies + fresh padded
+    /// allocations.  Zero when the model is disabled (`--net none`
+    /// ablates *all* simulated cost, host included).
+    pub fn host_overhead(&self, copied_bytes: usize, alloc_bytes: usize) -> f64 {
+        if !self.enabled {
+            return 0.0;
+        }
+        copied_bytes as f64 / self.host_beta + alloc_bytes as f64 / self.alloc_beta
+    }
+
+    /// [`NetModel::moe_step_blocking`] with the host cost term: copies
+    /// and allocations are serial host work on top of the exchange.
+    pub fn moe_step_blocking_host(
+        &self,
+        n: usize,
+        bytes_out: usize,
+        compute: f64,
+        copied_bytes: usize,
+        alloc_bytes: usize,
+    ) -> f64 {
+        self.moe_step_blocking(n, bytes_out, compute)
+            + self.host_overhead(copied_bytes, alloc_bytes)
+    }
+
+    /// [`NetModel::moe_step_overlapped`] with the host cost term folded
+    /// into the compute side of the pipeline (copies and allocations
+    /// happen on the same core that drives the expert shard, chunk by
+    /// chunk — they lengthen the compute stage, not the wire).
+    ///
+    /// Strictly monotone in both byte terms (at n > 1 with the model
+    /// enabled), which is the acceptance property: the zero-copy
+    /// schedule, having strictly fewer copied and allocated bytes than
+    /// the copy-heavy one, scores strictly lower at every
+    /// (workers, chunks) point.
+    pub fn moe_step_overlapped_host(
+        &self,
+        n: usize,
+        bytes_out: usize,
+        compute: f64,
+        chunks: usize,
+        copied_bytes: usize,
+        alloc_bytes: usize,
+    ) -> f64 {
+        let host = self.host_overhead(copied_bytes, alloc_bytes);
+        if !self.enabled || n <= 1 {
+            return compute + host;
+        }
+        self.moe_step_overlapped(n, bytes_out, compute + host, chunks)
     }
 }
 
@@ -221,5 +291,67 @@ mod tests {
         let m = NetModel::preset(NetPreset::None);
         assert_eq!(m.moe_step_overlapped(8, 1 << 30, 2.5, 4), 2.5);
         assert_eq!(m.moe_step_blocking(8, 1 << 30, 2.5), 2.5);
+        // host term ablated with the network
+        assert_eq!(m.host_overhead(1 << 30, 1 << 30), 0.0);
+        assert_eq!(m.moe_step_overlapped_host(8, 1 << 30, 2.5, 4, 1 << 30, 1 << 30), 2.5);
+    }
+
+    #[test]
+    fn host_overhead_prices_copies_and_allocs() {
+        let m = NetModel::preset(NetPreset::IbEdr);
+        let mb = 1usize << 20;
+        // allocation (allocate + zero) is dearer than a memcpy
+        assert!(m.host_overhead(0, mb) > m.host_overhead(mb, 0));
+        // additive and linear
+        let c = m.host_overhead(mb, 0);
+        assert!((m.host_overhead(2 * mb, 0) - 2.0 * c).abs() < 1e-12);
+        assert!(
+            (m.host_overhead(mb, mb) - m.host_overhead(mb, 0) - m.host_overhead(0, mb))
+                .abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn zero_copy_schedule_strictly_beats_copy_heavy_one() {
+        // The PR-3 acceptance property, at the model level: with the
+        // same wire bytes and raw compute, the schedule that copies
+        // each arrived row once and allocates nothing must score
+        // strictly below the PR-2 schedule (extra chunk-batch copy +
+        // fresh per-chunk buckets) on EVERY (workers, chunks) point.
+        let m = NetModel::preset(NetPreset::IbEdr);
+        for n in [2usize, 4, 8, 16] {
+            for chunks in [1usize, 2, 4, 8] {
+                for compute in [1e-4, 1e-2] {
+                    let wire_bytes = 4 << 20;
+                    let row_bytes = 2 << 20; // rows landed on this worker
+                    let zero_copy =
+                        m.moe_step_overlapped_host(n, wire_bytes, compute, chunks, 2 * row_bytes, 0);
+                    let copy_heavy = m.moe_step_overlapped_host(
+                        n,
+                        wire_bytes,
+                        compute,
+                        chunks,
+                        3 * row_bytes,   // extra wire→chunk-batch copy
+                        2 * row_bytes,   // fresh padded chunk buckets
+                    );
+                    assert!(
+                        zero_copy < copy_heavy,
+                        "n={n} chunks={chunks} compute={compute}: \
+                         {zero_copy} !< {copy_heavy}"
+                    );
+                    // the host term never makes overlap beat its bound
+                    assert!(zero_copy >= m.moe_step_overlapped(n, wire_bytes, compute, chunks) - 1e-15);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocking_host_adds_serial_overhead() {
+        let m = NetModel::preset(NetPreset::IbEdr);
+        let base = m.moe_step_blocking(4, 1 << 20, 1e-3);
+        let with = m.moe_step_blocking_host(4, 1 << 20, 1e-3, 1 << 20, 1 << 20);
+        assert!((with - base - m.host_overhead(1 << 20, 1 << 20)).abs() < 1e-15);
     }
 }

@@ -7,8 +7,10 @@
 //! reference matmuls for tests.
 
 pub mod ops;
+pub mod pool;
 
 pub use ops::*;
+pub use pool::{BufferPool, PoolStats};
 
 use crate::error::{Error, Result};
 
@@ -185,6 +187,65 @@ impl From<TensorI32> for HostTensor {
     }
 }
 
+/// A *borrowed* host tensor — the zero-clone argument type of
+/// `runtime::Executable::run_refs`.
+///
+/// `Executable::run` historically took owned [`HostTensor`]s, which
+/// forced every caller on the hot path to clone its (often large,
+/// step-invariant) inputs just to build the argument list; the PJRT
+/// literal construction copies the bytes again anyway.  A
+/// `HostTensorRef` borrows instead, so expert weights and padded
+/// batches go host→literal exactly once per call.
+#[derive(Clone, Copy, Debug)]
+pub enum HostTensorRef<'a> {
+    F32(&'a TensorF32),
+    I32(&'a TensorI32),
+}
+
+impl HostTensorRef<'_> {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensorRef::F32(t) => &t.shape,
+            HostTensorRef::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            HostTensorRef::F32(_) => "f32",
+            HostTensorRef::I32(_) => "i32",
+        }
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        match self {
+            HostTensorRef::F32(t) => t.as_bytes(),
+            HostTensorRef::I32(t) => t.as_bytes(),
+        }
+    }
+}
+
+impl<'a> From<&'a TensorF32> for HostTensorRef<'a> {
+    fn from(t: &'a TensorF32) -> Self {
+        HostTensorRef::F32(t)
+    }
+}
+
+impl<'a> From<&'a TensorI32> for HostTensorRef<'a> {
+    fn from(t: &'a TensorI32) -> Self {
+        HostTensorRef::I32(t)
+    }
+}
+
+impl<'a> From<&'a HostTensor> for HostTensorRef<'a> {
+    fn from(t: &'a HostTensor) -> Self {
+        match t {
+            HostTensor::F32(t) => HostTensorRef::F32(t),
+            HostTensor::I32(t) => HostTensorRef::I32(t),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,6 +277,18 @@ mod tests {
         assert!(f.as_f32().is_ok());
         assert!(f.as_i32().is_err());
         assert_eq!(f.dtype(), "f32");
+    }
+
+    #[test]
+    fn tensor_ref_borrows_without_copying() {
+        let t = TensorF32::from_vec(&[2], vec![1.0, 2.0]).unwrap();
+        let r: HostTensorRef = (&t).into();
+        assert_eq!(r.shape(), &[2]);
+        assert_eq!(r.dtype(), "f32");
+        assert_eq!(r.as_bytes().as_ptr(), t.as_bytes().as_ptr());
+        let h: HostTensor = t.clone().into();
+        let hr: HostTensorRef = (&h).into();
+        assert_eq!(hr.shape(), &[2]);
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! Step-persistent buffer pools — the allocation-free hot path's arena.
+//!
+//! Every MoE iteration used to allocate (and zero) the same family of
+//! buffers from scratch: the padded expert batch, the per-chunk compute
+//! staging, the cotangent container, and one send/receive staging `Vec`
+//! per peer.  [`BufferPool`] recycles all of them across steps: buffers
+//! are keyed by a `role` (a static str naming the buffer's job) and
+//! reused capacity-based — a request is a *hit* when some pooled buffer
+//! of that role already has enough capacity, a *miss* when the pool has
+//! to touch the allocator (fresh buffer or capacity growth).  After a
+//! warm-up step or two every steady-state request hits, which is what
+//! the `zero_copy_regression` test pins.
+//!
+//! The pool is deliberately dumb: no sizing classes, no cross-role
+//! sharing, best-fit within a role.  Roles keep buffers with very
+//! different size distributions from pessimising each other; where one
+//! role must host mixed sizes anyway (wire staging receives both row
+//! payloads and tiny count messages back from the comm backend),
+//! best-fit takes plus [`BufferPool::give`]'s size-aware eviction keep
+//! small buffers from starving large requests.
+//!
+//! Counters (`hits`/`misses`/`alloc_bytes`) are surfaced by
+//! `DistMoeLayer` through the per-step [`crate::metrics::Counters`]
+//! (`pool_hits` / `pool_misses` / `pool_alloc_bytes`), so benches and
+//! the regression tests read them with no extra plumbing.
+
+use std::collections::BTreeMap;
+
+use super::TensorF32;
+use crate::error::Result;
+
+/// Aggregate pool counters, cheap to snapshot (the per-step deltas the
+/// layer reports are differences of two of these).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Requests served entirely from pooled capacity.
+    pub hits: u64,
+    /// Requests that had to allocate (fresh buffer or growth).
+    pub misses: u64,
+    /// Bytes obtained from the allocator, cumulative.
+    pub alloc_bytes: u64,
+}
+
+impl PoolStats {
+    /// `self - earlier`, for per-step deltas.
+    pub fn since(&self, earlier: &PoolStats) -> PoolStats {
+        PoolStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            alloc_bytes: self.alloc_bytes - earlier.alloc_bytes,
+        }
+    }
+}
+
+/// Maximum free buffers retained per role; extras are dropped so a
+/// one-off burst (e.g. a huge ragged step) can't pin memory forever.
+const MAX_FREE_PER_ROLE: usize = 32;
+
+/// A role-keyed, capacity-based `Vec<f32>` arena (see module docs).
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    /// `false` turns every take into a plain allocation (the
+    /// `[comm] pool = false` A/B knob); give() drops.
+    enabled: bool,
+    free: BTreeMap<&'static str, Vec<Vec<f32>>>,
+    stats: PoolStats,
+}
+
+impl BufferPool {
+    pub fn new(enabled: bool) -> BufferPool {
+        BufferPool { enabled, ..Default::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    /// Bytes of pooled (free) capacity currently held for `role`.
+    pub fn resident_bytes(&self, role: &str) -> usize {
+        self.free
+            .get(role)
+            .map(|l| l.iter().map(|b| b.capacity() * 4).sum())
+            .unwrap_or(0)
+    }
+
+    /// Fetch a raw buffer for `role` with capacity ≥ `len`, counting
+    /// hit/miss/alloc; length and contents are whatever the pooled
+    /// buffer held — the `take_*` wrappers shape it.
+    fn obtain(&mut self, role: &'static str, len: usize) -> Vec<f32> {
+        if !self.enabled {
+            self.stats.misses += 1;
+            self.stats.alloc_bytes += (len * 4) as u64;
+            return Vec::with_capacity(len);
+        }
+        let list = self.free.entry(role).or_default();
+        // best fit: smallest pooled capacity that already covers `len`
+        let mut best: Option<(usize, usize)> = None;
+        for (i, b) in list.iter().enumerate() {
+            if b.capacity() >= len && best.map(|(_, c)| b.capacity() < c).unwrap_or(true) {
+                best = Some((i, b.capacity()));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                self.stats.hits += 1;
+                list.swap_remove(i)
+            }
+            None => {
+                // grow the largest candidate rather than hoarding a new
+                // one next to it; count only the capacity delta
+                self.stats.misses += 1;
+                match (0..list.len()).max_by_key(|&i| list[i].capacity()) {
+                    Some(i) => {
+                        let mut b = list.swap_remove(i);
+                        self.stats.alloc_bytes += ((len - b.capacity()) * 4) as u64;
+                        b.reserve(len.saturating_sub(b.len()));
+                        b
+                    }
+                    None => {
+                        self.stats.alloc_bytes += (len * 4) as u64;
+                        Vec::with_capacity(len)
+                    }
+                }
+            }
+        }
+    }
+
+    /// A zeroed buffer of exactly `len` floats — for padded containers
+    /// whose unwritten tail must read as zero.
+    pub fn take_zeroed(&mut self, role: &'static str, len: usize) -> Vec<f32> {
+        let mut buf = self.obtain(role, len);
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// A buffer of exactly `len` floats with *arbitrary* contents
+    /// (leftovers from its previous pooled life) — for destinations the
+    /// caller overwrites completely (packed-row unpack targets).  Skips
+    /// `take_zeroed`'s full memset; only capacity growth zero-fills.
+    pub fn take_filled(&mut self, role: &'static str, len: usize) -> Vec<f32> {
+        let mut buf = self.obtain(role, len);
+        if buf.len() > len {
+            buf.truncate(len);
+        } else {
+            buf.resize(len, 0.0);
+        }
+        buf
+    }
+
+    /// An *empty* buffer with capacity for at least `hint` floats —
+    /// for staging that is rebuilt with `extend_from_slice`.
+    pub fn take_vec(&mut self, role: &'static str, hint: usize) -> Vec<f32> {
+        let mut buf = self.obtain(role, hint);
+        buf.clear();
+        buf.reserve(hint);
+        buf
+    }
+
+    /// A zeroed tensor of `shape` backed by a pooled buffer.
+    pub fn take_tensor(&mut self, role: &'static str, shape: &[usize]) -> Result<TensorF32> {
+        let len = shape.iter().product();
+        TensorF32::from_vec(shape, self.take_zeroed(role, len))
+    }
+
+    /// A tensor of `shape` with arbitrary contents (see
+    /// [`BufferPool::take_filled`]) — every element must be written by
+    /// the caller before it is read.
+    pub fn take_tensor_filled(
+        &mut self,
+        role: &'static str,
+        shape: &[usize],
+    ) -> Result<TensorF32> {
+        let len = shape.iter().product();
+        TensorF32::from_vec(shape, self.take_filled(role, len))
+    }
+
+    /// Return a buffer to the role's free list.  When the list is at
+    /// capacity, the incoming buffer *replaces the smallest* pooled one
+    /// if it is larger (and is dropped otherwise) — so a stream of tiny
+    /// returns (e.g. count-round messages reclaimed from the comm
+    /// backend into a wire role) can never squat the slots that big
+    /// steady-state staging buffers need.
+    pub fn give(&mut self, role: &'static str, buf: Vec<f32>) {
+        if !self.enabled || buf.capacity() == 0 {
+            return;
+        }
+        let list = self.free.entry(role).or_default();
+        if list.len() < MAX_FREE_PER_ROLE {
+            list.push(buf);
+            return;
+        }
+        if let Some(i) = (0..list.len()).min_by_key(|&i| list[i].capacity()) {
+            if list[i].capacity() < buf.capacity() {
+                list[i] = buf;
+            }
+        }
+    }
+
+    /// Return a pooled tensor's backing buffer.
+    pub fn give_tensor(&mut self, role: &'static str, t: TensorF32) {
+        self.give(role, t.data);
+    }
+
+    /// Return a batch of buffers (per-peer staging).
+    pub fn give_all(&mut self, role: &'static str, bufs: impl IntoIterator<Item = Vec<f32>>) {
+        for b in bufs {
+            self.give(role, b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_state_is_all_hits() {
+        let mut p = BufferPool::new(true);
+        // warm-up: sizes ratchet the capacity up
+        for len in [10usize, 30, 20] {
+            let b = p.take_zeroed("t", len);
+            assert_eq!(b.len(), len);
+            assert!(b.iter().all(|&v| v == 0.0));
+            p.give("t", b);
+        }
+        let warm = p.stats();
+        assert!(warm.misses >= 1);
+        // steady state: any len ≤ the max seen is a hit, no allocation
+        for len in [30usize, 1, 20, 30, 7] {
+            let b = p.take_zeroed("t", len);
+            assert_eq!(b.len(), len);
+            p.give("t", b);
+        }
+        let d = p.stats().since(&warm);
+        assert_eq!(d.misses, 0, "steady state must not allocate");
+        assert_eq!(d.hits, 5);
+        assert_eq!(d.alloc_bytes, 0);
+    }
+
+    #[test]
+    fn growth_counts_only_the_delta() {
+        let mut p = BufferPool::new(true);
+        let b = p.take_zeroed("t", 100);
+        let cap = b.capacity();
+        p.give("t", b);
+        let b = p.take_zeroed("t", cap + 50);
+        p.give("t", b);
+        let s = p.stats();
+        assert_eq!(s.misses, 2);
+        // second miss grew the existing buffer: ≤ 50 new floats counted
+        assert!(s.alloc_bytes <= ((cap + 50 + 50) * 4) as u64);
+    }
+
+    #[test]
+    fn roles_are_isolated() {
+        let mut p = BufferPool::new(true);
+        let b = p.take_zeroed("a", 64);
+        p.give("a", b);
+        assert!(p.resident_bytes("a") >= 64 * 4);
+        assert_eq!(p.resident_bytes("b"), 0);
+        // role b cannot see role a's buffer
+        let _ = p.take_zeroed("b", 8);
+        assert_eq!(p.stats().misses, 2);
+    }
+
+    #[test]
+    fn reused_buffers_are_rezeroed() {
+        let mut p = BufferPool::new(true);
+        let mut b = p.take_zeroed("t", 8);
+        b.iter_mut().for_each(|v| *v = 7.0);
+        p.give("t", b);
+        let b = p.take_zeroed("t", 4);
+        assert!(b.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn disabled_pool_always_allocates() {
+        let mut p = BufferPool::new(false);
+        for _ in 0..3 {
+            let b = p.take_zeroed("t", 16);
+            p.give("t", b);
+        }
+        assert_eq!(p.stats().hits, 0);
+        assert_eq!(p.stats().misses, 3);
+        assert_eq!(p.resident_bytes("t"), 0);
+    }
+
+    #[test]
+    fn take_tensor_shapes_and_recycles() {
+        let mut p = BufferPool::new(true);
+        let t = p.take_tensor("x", &[2, 3]).unwrap();
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.numel(), 6);
+        p.give_tensor("x", t);
+        let t = p.take_tensor("x", &[3, 2]).unwrap();
+        assert_eq!(t.numel(), 6);
+        assert_eq!(p.stats().hits, 1);
+    }
+
+    #[test]
+    fn take_filled_skips_the_memset_but_has_exact_len() {
+        let mut p = BufferPool::new(true);
+        let mut b = p.take_zeroed("t", 8);
+        b.iter_mut().for_each(|v| *v = 9.0);
+        p.give("t", b);
+        // shrink: O(1) truncate, stale contents allowed
+        let b = p.take_filled("t", 4);
+        assert_eq!(b.len(), 4);
+        assert!(b.iter().all(|&v| v == 9.0), "truncate must not memset");
+        p.give("t", b);
+        // regrow within capacity: the tail beyond the old len zero-fills
+        let b = p.take_filled("t", 8);
+        assert_eq!(b.len(), 8);
+        assert_eq!(p.stats().misses, 1, "capacity was sufficient throughout");
+    }
+
+    #[test]
+    fn full_list_evicts_smaller_not_larger() {
+        let mut p = BufferPool::new(true);
+        // fill the role to capacity with tiny buffers
+        for _ in 0..MAX_FREE_PER_ROLE {
+            p.give("t", vec![0.0; 4]);
+        }
+        // a big buffer must displace a tiny one, not be dropped
+        p.give("t", vec![0.0; 1000]);
+        let b = p.take_zeroed("t", 1000);
+        assert_eq!(p.stats().misses, 0, "big buffer was dropped at the door");
+        p.give("t", b);
+        // and a tiny return cannot evict the big resident
+        p.give("t", vec![0.0; 2]);
+        let b = p.take_zeroed("t", 1000);
+        assert_eq!(p.stats().misses, 0, "tiny return evicted the big buffer");
+        drop(b);
+    }
+
+    #[test]
+    fn take_vec_is_empty_with_capacity() {
+        let mut p = BufferPool::new(true);
+        let mut b = p.take_vec("s", 32);
+        assert!(b.is_empty());
+        assert!(b.capacity() >= 32);
+        b.extend_from_slice(&[1.0; 32]);
+        p.give("s", b);
+        let b = p.take_vec("s", 16);
+        assert!(b.is_empty());
+        assert_eq!(p.stats().hits, 1);
+    }
+}

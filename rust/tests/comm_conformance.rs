@@ -11,6 +11,13 @@
 //! * the decomposed all-to-all (`all_to_all_v_start`, arrivals
 //!   consumed in any order)
 //! * both barrier algorithms (dissemination + legacy empty a2a)
+//!
+//! The TCP backend additionally runs the whole matrix under its
+//! *progress engine* (`[comm] progress`), plus engine-specific cases:
+//! `wait_all` completing in true arrival order, and arrivals draining
+//! into user space during a compute window with no blocking comm call.
+
+use std::time::Duration;
 
 use fastmoe::comm::tcp::TcpGroup;
 use fastmoe::comm::{run_workers, Comm};
@@ -163,6 +170,132 @@ fn conformance_over_tcp_mesh() {
             std::thread::spawn(move || {
                 let mut g = TcpGroup::connect_local(rank, WORKERS, 47710).unwrap();
                 conformance_suite(&mut g).unwrap();
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+#[test]
+fn conformance_over_tcp_mesh_with_progress_engine() {
+    // the entire matrix must hold unchanged when arrivals are drained
+    // by the reader threads instead of the caller's blocking reads
+    let joins: Vec<_> = (0..WORKERS)
+        .map(|rank| {
+            std::thread::spawn(move || {
+                let mut g = TcpGroup::connect_local(rank, WORKERS, 47750).unwrap();
+                g.enable_progress();
+                assert!(g.progress_enabled());
+                conformance_suite(&mut g).unwrap();
+                assert!(g.progress_arrivals() > 0, "engine drained nothing");
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+#[test]
+fn progress_engine_drains_during_compute() {
+    // Each rank isends to its ring successor, then "computes" (sleeps)
+    // WITHOUT issuing any blocking comm call.  With the progress
+    // engine the frame must cross wire → user space inside that
+    // window; pending_arrivals() observing it is exactly the
+    // "drain during compute" property the overlap path needs.
+    let joins: Vec<_> = (0..WORKERS)
+        .map(|rank| {
+            std::thread::spawn(move || {
+                let mut g = TcpGroup::connect_local(rank, WORKERS, 47770).unwrap();
+                g.enable_progress();
+                let next = (rank + 1) % WORKERS;
+                let prev = (rank + WORKERS - 1) % WORKERS;
+                let tag = (g.next_seq() << 8) | 1;
+                g.isend(next, tag, vec![rank as f32; 1024]).unwrap();
+                // compute window: no recv/wait/barrier on this thread
+                let mut waited = Duration::ZERO;
+                while g.pending_arrivals() == 0 && waited < Duration::from_secs(10) {
+                    std::thread::sleep(Duration::from_millis(5));
+                    waited += Duration::from_millis(5);
+                }
+                assert!(
+                    g.pending_arrivals() > 0,
+                    "rank {rank}: nothing drained during the compute window"
+                );
+                let data = g.recv(prev, tag).unwrap();
+                assert_eq!(data, vec![prev as f32; 1024]);
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+#[test]
+fn progress_wait_all_completes_in_arrival_order() {
+    // Rank 0 receives from every peer, posting the requests with the
+    // SLOW peer (1) first, while that peer withholds its send.  The
+    // discriminating observation: the fast peers' frames must be
+    // drained into user space (pending_arrivals) *before* peer 1 has
+    // sent anything — a posted-order implementation blocked reading
+    // peer 1's socket could never surface them.  wait_all must then
+    // map every result to the right request and leave nothing parked.
+    let joins: Vec<_> = (0..WORKERS)
+        .map(|rank| {
+            std::thread::spawn(move || {
+                let mut g = TcpGroup::connect_local(rank, WORKERS, 47790).unwrap();
+                g.enable_progress();
+                let seq = g.next_seq();
+                let tag = (seq << 8) | 3;
+                let go_tag = (seq << 8) | 4;
+                let done_tag = (seq << 8) | 5;
+                if rank == 0 {
+                    let mut reqs = Vec::new();
+                    let mut want = Vec::new();
+                    for p in 1..WORKERS {
+                        reqs.push(g.irecv(p, tag).unwrap());
+                        want.push(vec![p as f32; p]);
+                    }
+                    // the fast peers' frames land while the slow peer
+                    // (first posted!) hasn't sent — arrival precedes
+                    // posted order observably.  No peer may touch the
+                    // barrier yet (they wait on done_tag), so ONLY the
+                    // fast data frames can be in the inbox here.
+                    let mut waited = Duration::ZERO;
+                    while g.pending_arrivals() < WORKERS - 2
+                        && waited < Duration::from_secs(10)
+                    {
+                        std::thread::sleep(Duration::from_millis(5));
+                        waited += Duration::from_millis(5);
+                    }
+                    assert!(
+                        g.pending_arrivals() >= WORKERS - 2,
+                        "fast peers' frames not drained while slow peer pending"
+                    );
+                    // only now release the slow peer
+                    g.isend(1, go_tag, vec![1.0]).unwrap();
+                    let got = g.wait_all(reqs).unwrap();
+                    for (res, want) in got.iter().zip(&want) {
+                        assert_eq!(res.as_ref(), Some(want));
+                    }
+                    assert_eq!(g.pending_arrivals(), 0, "stray frames left behind");
+                    for p in 1..WORKERS {
+                        g.isend(p, done_tag, vec![0.0]).unwrap();
+                    }
+                } else {
+                    if rank == 1 {
+                        // withhold until rank 0 has observed the others
+                        let _ = g.recv(0, go_tag).unwrap();
+                    }
+                    g.isend(0, tag, vec![rank as f32; rank]).unwrap();
+                    // keep barrier traffic out of rank 0's inbox until
+                    // its assertions are done
+                    let _ = g.recv(0, done_tag).unwrap();
+                }
+                g.barrier().unwrap();
             })
         })
         .collect();

@@ -118,13 +118,14 @@ fn overlapped_layer_is_bit_identical_to_blocking() {
     {
         return;
     }
-    let run = |overlap: bool, chunks: usize| {
+    let run = |overlap: bool, chunks: usize, pool: bool| {
         let rt = rt.clone();
         run_workers(workers, move |mut h| {
             let layer = MoeLayerBuilder::new()
                 .seed(7)
                 .overlap(overlap)
                 .chunks(chunks)
+                .pool(pool)
                 .build(rt.clone(), workers, h.rank())?;
             let mut x = TensorF32::zeros(&[layer.nb, layer.dm]);
             Rng::new(2000 + h.rank() as u64).fill_normal(&mut x.data, 1.0);
@@ -140,9 +141,11 @@ fn overlapped_layer_is_bit_identical_to_blocking() {
         })
         .unwrap()
     };
-    let blocking = run(false, 1);
-    for chunks in [2usize, 4] {
-        let overlapped = run(true, chunks);
+    let blocking = run(false, 1, true);
+    // 0 = adaptive chunk count; false = pool disabled — the zero-copy
+    // machinery must be a pure schedule/staging change in every mode
+    for (chunks, pool) in [(2usize, true), (4, true), (4, false), (0, true)] {
+        let overlapped = run(true, chunks, pool);
         for (rank, (b, o)) in blocking.iter().zip(&overlapped).enumerate() {
             assert_eq!(b.0.data, o.0.data, "rank {rank}: forward bits");
             assert_eq!(b.1.dx.data, o.1.dx.data, "rank {rank}: dx bits");

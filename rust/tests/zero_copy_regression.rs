@@ -1,0 +1,286 @@
+//! The zero-copy PR's contract, pinned three ways:
+//!
+//! * **machinery level** (no artifacts needed) — the pooled dispatch
+//!   choreography (pooled shell → single landing → slice-view gather →
+//!   pooled split) reaches a zero-miss steady state after one warm-up
+//!   step, and the per-chunk staging bucket never exceeds the blocking
+//!   bucket (no Σ-bucket inflation);
+//! * **layer level, thread backend** (runtime-gated) — a real
+//!   `DistMoeLayer` step allocates nothing from the pool after warm-up
+//!   on both the blocking and the overlapped schedule, and the
+//!   overlapped forward's copy counter exceeds blocking by *exactly*
+//!   one stage copy of the landed rows (the ROADMAP "overlap padding
+//!   overhead" double-copy is gone); backward copy volumes are equal;
+//! * **layer level, TCP backend** (runtime-gated) — the same
+//!   steady-state property over real sockets with the progress engine
+//!   draining arrivals.
+
+use std::sync::Arc;
+
+use fastmoe::comm::tcp::TcpGroup;
+use fastmoe::comm::{run_workers, Comm};
+use fastmoe::coordinator::MoeLayerBuilder;
+use fastmoe::metrics::Counters;
+use fastmoe::moe::ExpertBatch;
+use fastmoe::rng::Rng;
+use fastmoe::runtime::Runtime;
+use fastmoe::tensor::{BufferPool, TensorF32};
+use fastmoe::testing::{check, prop_assert};
+
+fn runtime() -> Option<Arc<Runtime>> {
+    Runtime::open_default().ok().map(Arc::new)
+}
+
+#[test]
+fn pooled_dispatch_machinery_reaches_zero_miss_steady_state() {
+    let dm = 3usize;
+    let ne = 2usize;
+    let buckets = [8usize, 16, 32];
+    let recv_counts = vec![vec![3u32, 1], vec![2, 2], vec![0, 4]];
+    let chunk_groups = [vec![0usize], vec![1usize, 2]];
+    let full = ExpertBatch::shell(recv_counts.clone(), ne, dm, &buckets).unwrap();
+    let full_bucket_bytes = ne * full.bucket * dm * 4;
+
+    let mut pool = BufferPool::new(true);
+    let mut after_warmup = None;
+    for step in 0..5u32 {
+        // pretend wire arrivals (sizes repeat step over step)
+        let parts: Vec<Vec<f32>> = recv_counts
+            .iter()
+            .map(|cs| {
+                let rows: u32 = cs.iter().sum();
+                let mut b = pool.take_vec("wire", rows as usize * dm);
+                b.resize(rows as usize * dm, step as f32);
+                b
+            })
+            .collect();
+        // single landing into the pooled full-batch shell
+        let mut eb = ExpertBatch::shell_pooled(
+            recv_counts.clone(),
+            ne,
+            dm,
+            &buckets,
+            &mut pool,
+            "batch",
+        )
+        .unwrap();
+        for (p, part) in parts.iter().enumerate() {
+            eb.fill_peer(p, part).unwrap();
+        }
+        pool.give_all("wire", parts);
+        // per-chunk slice-view staging, recycled chunk over chunk
+        for peers in &chunk_groups {
+            let slice = eb.chunk_slice(peers, &buckets).unwrap();
+            assert!(
+                slice.bucket <= eb.bucket,
+                "chunk staging bucket must not exceed the blocking bucket"
+            );
+            let mut staging =
+                pool.take_tensor("stage", &[ne, slice.bucket, dm]).unwrap();
+            eb.gather_chunk(&slice, &mut staging).unwrap();
+            let (ret, _) = slice
+                .split_outputs_pooled(&staging, dm, &mut pool, "wire")
+                .unwrap();
+            pool.give_tensor("stage", staging);
+            pool.give_all("wire", ret);
+        }
+        pool.give_tensor("batch", eb.xs);
+        if step == 0 {
+            after_warmup = Some(pool.stats());
+        }
+    }
+    let d = pool.stats().since(&after_warmup.unwrap());
+    assert_eq!(d.misses, 0, "steady-state steps must not allocate");
+    assert_eq!(d.alloc_bytes, 0);
+    // no Σ-bucket inflation: the staging arena holds at most one
+    // blocking bucket's worth of padded bytes
+    assert!(
+        pool.resident_bytes("stage") <= full_bucket_bytes,
+        "staging arena ({} B) exceeds the blocking bucket ({} B)",
+        pool.resident_bytes("stage"),
+        full_bucket_bytes
+    );
+}
+
+#[test]
+fn prop_chunk_bucket_never_exceeds_full_bucket() {
+    check("chunk staging ≤ blocking bucket, all partitions", 40, |g| {
+        let peers = g.usize_in(1, 5);
+        let ne = g.usize_in(1, 4);
+        let dm = g.usize_in(1, 4);
+        let buckets = [4usize, 8, 16, 64, 256];
+        let counts: Vec<Vec<u32>> = (0..peers)
+            .map(|_| (0..ne).map(|_| g.usize_in(0, 60) as u32).collect())
+            .collect();
+        let eb = ExpertBatch::shell(counts, ne, dm, &buckets)
+            .map_err(|e| e.to_string())?;
+        // random contiguous partition of the peer list into chunks
+        let mut order: Vec<usize> = (0..peers).collect();
+        // rotate for some variety (peers need not be contiguous)
+        let rot = g.usize_in(0, peers - 1);
+        order.rotate_left(rot);
+        let cut = g.usize_in(1, peers);
+        let mut staged_rows = 0usize;
+        for part in [&order[..cut], &order[cut..]] {
+            if part.is_empty() {
+                continue;
+            }
+            let slice = eb.chunk_slice(part, &buckets).map_err(|e| e.to_string())?;
+            prop_assert(
+                slice.bucket <= eb.bucket,
+                format!("chunk bucket {} > full {}", slice.bucket, eb.bucket),
+            )?;
+            staged_rows += slice.rows_per_expert.iter().sum::<usize>();
+        }
+        // every landed row is staged exactly once across the partition
+        prop_assert(
+            staged_rows == eb.rows_per_expert.iter().sum::<usize>(),
+            format!("staged {staged_rows} rows, landed {:?}", eb.rows_per_expert),
+        )?;
+        Ok(())
+    });
+}
+
+/// One config's per-rank step record.
+#[allow(clippy::type_complexity)]
+fn run_layer_steps(
+    rt: Arc<Runtime>,
+    workers: usize,
+    overlap: bool,
+    chunks: usize,
+    pool_on: bool,
+    steps: usize,
+) -> Vec<(Vec<f32>, u64, u64, u64, u64, u64)> {
+    run_workers(workers, move |mut h| {
+        let layer = MoeLayerBuilder::new()
+            .seed(3)
+            .overlap(overlap)
+            .chunks(chunks)
+            .pool(pool_on)
+            .build(rt.clone(), workers, h.rank())?;
+        let mut x = TensorF32::zeros(&[layer.nb, layer.dm]);
+        Rng::new(77 + h.rank() as u64).fill_normal(&mut x.data, 1.0);
+        let mut y_bits = Vec::new();
+        let (mut cf_copy, mut cb_copy, mut rows_bytes) = (0u64, 0u64, 0u64);
+        let mut late_misses = 0u64;
+        for step in 0..steps {
+            let mut cf = Counters::new();
+            let (y, state) = layer.forward(&mut h, x.clone(), &mut cf)?;
+            let mut cb = Counters::new();
+            let dy = TensorF32::full(&[layer.nb, layer.dm], 1e-3);
+            let _ = layer.backward(&mut h, &state, &dy, &mut cb)?;
+            if step + 1 == steps {
+                y_bits = y.data.clone();
+                cf_copy = cf.get("moe_copy_bytes");
+                cb_copy = cb.get("moe_copy_bytes");
+                rows_bytes = state.eb.rows_per_expert.iter().sum::<usize>() as u64
+                    * layer.dm as u64
+                    * 4;
+            }
+            if step >= 2 {
+                late_misses += cf.get("pool_misses") + cb.get("pool_misses");
+            }
+            layer.recycle(state);
+        }
+        Ok((y_bits, cf_copy, cb_copy, rows_bytes, late_misses, layer.pool_stats().hits))
+    })
+    .unwrap()
+}
+
+#[test]
+fn layer_steady_state_and_copy_counters_thread_backend() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let workers = 4usize;
+    if rt
+        .manifest
+        .artifact(&format!("gate_fwd_w{workers}"))
+        .is_none()
+    {
+        return;
+    }
+    let steps = 4usize;
+    let blocking = run_layer_steps(rt.clone(), workers, false, 1, true, steps);
+    let overlapped = run_layer_steps(rt.clone(), workers, true, 4, true, steps);
+    let pool_off = run_layer_steps(rt.clone(), workers, true, 4, false, steps);
+    let adaptive = run_layer_steps(rt.clone(), workers, true, 0, true, steps);
+
+    for rank in 0..workers {
+        let b = &blocking[rank];
+        let o = &overlapped[rank];
+        // identical routing ⇒ identical bits, pool or no pool, any path
+        assert_eq!(b.0, o.0, "rank {rank}: overlapped forward bits");
+        assert_eq!(b.0, pool_off[rank].0, "rank {rank}: pool-off bits");
+        assert_eq!(b.0, adaptive[rank].0, "rank {rank}: adaptive bits");
+        // zero steady-state allocations on both schedules
+        assert_eq!(b.4, 0, "rank {rank}: blocking steady-state pool misses");
+        assert_eq!(o.4, 0, "rank {rank}: overlapped steady-state pool misses");
+        assert!(b.5 > 0 && o.5 > 0, "rank {rank}: pool never hit");
+        // the ROADMAP double-copy is gone: overlapped forward copies
+        // exactly one extra stage pass over the landed rows (the
+        // slice-view gather into the bucketed executable's staging),
+        // not two; backward copy volumes are identical
+        assert_eq!(
+            o.1,
+            b.1 + o.3,
+            "rank {rank}: overlapped fwd copies != blocking + one row pass"
+        );
+        assert_eq!(o.2, b.2, "rank {rank}: backward copy volumes diverged");
+    }
+}
+
+#[test]
+fn layer_steady_state_tcp_backend_with_progress() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let workers = 2usize;
+    if rt
+        .manifest
+        .artifact(&format!("gate_fwd_w{workers}"))
+        .is_none()
+    {
+        return;
+    }
+    let joins: Vec<_> = (0..workers)
+        .map(|rank| {
+            let rt = rt.clone();
+            std::thread::spawn(move || {
+                let mut g = TcpGroup::connect_local(rank, workers, 47810).unwrap();
+                g.enable_progress();
+                let layer = MoeLayerBuilder::new()
+                    .seed(3)
+                    .overlap(true)
+                    .chunks(2)
+                    .build(rt, workers, rank)
+                    .unwrap();
+                let mut x = TensorF32::zeros(&[layer.nb, layer.dm]);
+                Rng::new(90 + rank as u64).fill_normal(&mut x.data, 1.0);
+                for step in 0..4 {
+                    let mut cf = Counters::new();
+                    let (y, state) = layer.forward(&mut g, x.clone(), &mut cf).unwrap();
+                    let mut cb = Counters::new();
+                    let dy = TensorF32::full(&[layer.nb, layer.dm], 1e-3);
+                    let _ = layer.backward(&mut g, &state, &dy, &mut cb).unwrap();
+                    layer.recycle(state);
+                    assert!(y.data.iter().all(|v| v.is_finite()));
+                    if step >= 2 {
+                        assert_eq!(
+                            cf.get("pool_misses") + cb.get("pool_misses"),
+                            0,
+                            "rank {rank} step {step}: tcp steady state allocated"
+                        );
+                    }
+                }
+                g.barrier().unwrap();
+                assert!(g.progress_arrivals() > 0);
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
+}

@@ -1,16 +1,25 @@
 #!/usr/bin/env bash
-# Perf trajectory: run the sim-backed Figure-6 scaling bench with the
-# exchange/compute overlap scored on AND off, and record the result as
-# BENCH_pr2.json at the repo root.
+# Perf trajectory: run the sim-backed Figure-6 scaling bench and record
+# the result as BENCH_pr3.json at the repo root.
 #
 #   scripts/bench_report.sh            # default: 4 chunks, 4 iters
 #   CHUNKS=8 ITERS=8 scripts/bench_report.sh
 #
-# One bench invocation scores both modes (blocking `wire + compute` vs
-# overlapped `max(wire, compute)` per chunk) from the same measured
-# compute and exchange volume, so the comparison is apples-to-apples;
-# a second invocation actually *exercises* the pipelined layer path
-# (--overlap) as a correctness/perf sanity artifact under runs/.
+# One bench invocation scores THREE schedules from the same measured
+# compute, exchange volume and host copy/alloc counters:
+#   * blocking              — wire + compute + host term
+#   * overlapped (PR 2)     — max(wire, compute) per chunk, with the
+#                             copy-heavy host term (per-chunk batches
+#                             rebuilt from wire buffers, cloned padded
+#                             into the executable, freshly allocated)
+#   * zero-copy overlapped  — same pipeline with exactly the measured
+#                             moe_copy_bytes / pool_alloc_bytes (single
+#                             landing, slice-view staging, pooled
+#                             buffers); the bench asserts it never
+#                             scores above the copy-heavy schedule
+# so the comparison is apples-to-apples.  A second invocation actually
+# *exercises* the pipelined zero-copy layer path (--overlap) as a
+# correctness/perf sanity artifact under runs/.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -27,14 +36,14 @@ fi
 
 mkdir -p runs
 
-# 1. measured on the blocking path, scored both ways → the PR record
+# 1. measured on the blocking path, scored all three ways → the PR record
 cargo bench --bench fig6_scale -- \
-    --iters "$ITERS" --chunks "$CHUNKS" --json "$ROOT/BENCH_pr2.json"
+    --iters "$ITERS" --chunks "$CHUNKS" --json "$ROOT/BENCH_pr3.json"
 
-# 2. measured on the pipelined path (exercises chunked isend/irecv),
-#    kept as a side artifact
+# 2. measured on the zero-copy pipelined path (exercises chunked
+#    isend/irecv, slice-view staging, pools), kept as a side artifact
 cargo bench --bench fig6_scale -- \
     --iters "$ITERS" --chunks "$CHUNKS" --overlap \
     --json runs/fig6_overlap_measured.json
 
-echo "bench_report.sh: wrote $ROOT/BENCH_pr2.json (and runs/fig6_overlap_measured.json)"
+echo "bench_report.sh: wrote $ROOT/BENCH_pr3.json (and runs/fig6_overlap_measured.json)"
