@@ -26,6 +26,15 @@
 //! `sim::NetModel::moe_step_overlapped_host`; the bench asserts
 //! zero-copy ≤ overlapped at every point.
 //!
+//! A fourth pair of columns scores the *trainer tail* over the layer's
+//! parameter volume: the blocking full-gradient ring + host Adam vs
+//! the PR-4 bucketed nonblocking sync pipelined against backward and
+//! Adam (`sim::NetModel::grad_step_{blocking,overlapped}`, bucket
+//! count from `--bucket-kb`).  The overlapped number is the model's
+//! idealized pipeline bound (see `grad_step_overlapped`'s docs for
+//! what the runtime realises); the bench asserts overlapped ≤
+//! blocking at every scale point.
+//!
 //! ```bash
 //! cargo bench --bench fig6_scale                    # scaled IB-EDR (default)
 //! cargo bench --bench fig6_scale -- --overlap       # run the pipelined layer path
@@ -60,6 +69,7 @@ fn main() -> fastmoe::Result<()> {
     let iters = args.usize_or("iters", 4)?;
     let net_name = args.str_or("net", "ib-edr-scaled");
     let chunks = args.usize_or("chunks", 4)?.max(1);
+    let bucket_kb = args.usize_or("bucket-kb", 512)?.max(1);
     let overlap_path = args.has_flag("overlap");
     let json_path = args.get("json").map(|s| s.to_string());
     // V100 fp32 ≈ 14 TFLOP/s against 12.5 GB/s EDR (the paper's nodes)
@@ -85,6 +95,7 @@ fn main() -> fastmoe::Result<()> {
         "workers", "experts", "compute_s/dev", "wire_ms/iter", "blocking_ms/iter",
         "overlap_ms/iter", "zerocopy_ms/iter", "speedup", "zc_speedup",
         "agg_GFLOP/s", "efficiency", "a2a_MB/iter", "copied_MB/iter",
+        "gsync_blk_ms", "gsync_ovl_ms",
     ]);
     let mut csv = CsvWriter::create(
         "runs/fig6_scale.csv",
@@ -92,7 +103,8 @@ fn main() -> fastmoe::Result<()> {
             "workers", "agg_gflops", "agg_gflops_overlap", "agg_gflops_zerocopy",
             "compute_s_per_dev", "wire_ms_per_iter", "blocking_ms_per_iter",
             "overlap_ms_per_iter", "zerocopy_ms_per_iter", "a2a_bytes_per_iter",
-            "copied_bytes_per_iter", "alloc_bytes_per_iter",
+            "copied_bytes_per_iter", "alloc_bytes_per_iter", "grad_bytes",
+            "grad_step_blocking_ms", "grad_step_overlapped_ms",
         ],
     )?;
     let mut base: Option<f64> = None;
@@ -124,6 +136,11 @@ fn main() -> fastmoe::Result<()> {
             }
             h.barrier()?;
             let bucket_bytes = counters.get("moe_bucket_rows") * layer.dm as u64 * 4;
+            let grad_bytes: u64 = layer
+                .params()
+                .iter()
+                .map(|(_, t)| (t.numel() * 4) as u64)
+                .sum();
             Ok((
                 watch.secs(),
                 flops,
@@ -131,6 +148,7 @@ fn main() -> fastmoe::Result<()> {
                 counters.get("moe_copy_bytes"),
                 counters.get("pool_alloc_bytes"),
                 bucket_bytes,
+                grad_bytes,
             ))
         })?;
 
@@ -207,6 +225,28 @@ fn main() -> fastmoe::Result<()> {
             "zero-copy must not score above the copy-heavy overlap \
              (w={w}: {zerocopy_iter} vs {overlap_iter})"
         );
+        // PR-4 grad-sync column: the data-parallel trainer tail over
+        // this layer's parameter volume — the serial blocking ring +
+        // host Adam vs the bucketed nonblocking sync pipelined against
+        // backward and Adam.  Adam is priced as host traffic (≈7 float
+        // passes per element: read p/m/v/g, write p/m/v).
+        let grad_bytes = results.iter().map(|r| r.6).max().unwrap_or(0) as usize;
+        let opt_secs = net.host_overhead(7 * grad_bytes, 0);
+        let grad_buckets = grad_bytes.div_ceil(bucket_kb << 10).clamp(1, 32);
+        let gsync_block =
+            net.grad_step_blocking(w, grad_bytes, compute_per_iter, opt_secs);
+        let gsync_overlap = net.grad_step_overlapped(
+            w,
+            grad_bytes,
+            compute_per_iter,
+            opt_secs,
+            grad_buckets,
+        );
+        assert!(
+            gsync_overlap <= gsync_block,
+            "overlapped grad sync must not score above blocking \
+             (w={w}: {gsync_overlap} vs {gsync_block})"
+        );
         let speedup = blocking_iter / overlap_iter.max(1e-12);
         let zc_speedup = blocking_iter / zerocopy_iter.max(1e-12);
         let agg = gflops(total_flops, blocking_iter * iters as f64);
@@ -235,6 +275,8 @@ fn main() -> fastmoe::Result<()> {
             format!("{:.0}%", eff * 100.0),
             format!("{:.2}", bytes_per_iter as f64 / 1e6),
             format!("{:.2}", copied_per_iter as f64 / 1e6),
+            format!("{:.1}", gsync_block * 1e3),
+            format!("{:.1}", gsync_overlap * 1e3),
         ]);
         csv.rowf(&[
             w as f64,
@@ -249,6 +291,9 @@ fn main() -> fastmoe::Result<()> {
             bytes_per_iter as f64,
             copied_per_iter as f64,
             alloc_per_iter as f64,
+            grad_bytes as f64,
+            gsync_block * 1e3,
+            gsync_overlap * 1e3,
         ])?;
         let mut row = BTreeMap::new();
         row.insert("workers".into(), Json::Num(w as f64));
@@ -275,17 +320,28 @@ fn main() -> fastmoe::Result<()> {
         row.insert("agg_gflops_blocking".into(), Json::Num(agg));
         row.insert("agg_gflops_overlapped".into(), Json::Num(agg_overlap));
         row.insert("agg_gflops_zerocopy".into(), Json::Num(agg_zerocopy));
+        row.insert("grad_bytes".into(), Json::Num(grad_bytes as f64));
+        row.insert("grad_buckets".into(), Json::Num(grad_buckets as f64));
+        row.insert("grad_step_blocking_s".into(), Json::Num(gsync_block));
+        row.insert(
+            "grad_step_overlapped_s".into(),
+            Json::Num(gsync_overlap),
+        );
         json_rows.push(Json::Object(row));
         println!(
             "  {w} workers: blocking {:.1} ms/iter vs overlapped {:.1} ms/iter \
              vs zero-copy {:.1} ms/iter ({speedup:.2}x / {zc_speedup:.2}x; \
-             {:.1} ms wire, {:.0} ms compute, {:.2} MB copied)",
+             {:.1} ms wire, {:.0} ms compute, {:.2} MB copied; \
+             grad sync {:.1} -> {:.1} ms over {} buckets)",
             blocking_iter * 1e3,
             overlap_iter * 1e3,
             zerocopy_iter * 1e3,
             wire_per_iter * 1e3,
             compute_per_iter * 1e3,
             copied_per_iter as f64 / 1e6,
+            gsync_block * 1e3,
+            gsync_overlap * 1e3,
+            grad_buckets,
         );
     }
 

@@ -28,9 +28,22 @@
 //!   into per-peer requests via [`Comm::all_to_all_v_start`], so
 //!   callers can consume arrivals as they land; plus
 //!   [`Comm::all_reduce_sum`] (ring reduce-scatter + all-gather),
-//!   `all_gather`, `broadcast`, subgroup all-reduce, and `barrier`
-//!   (dissemination, ⌈log₂ n⌉ rounds; the legacy O(n²) empty
-//!   all-to-all survives as [`Comm::barrier_a2a`]).
+//!   its bucketed nonblocking decomposition
+//!   [`Comm::all_reduce_start`] → [`PendingAllReduce`] (one in-flight
+//!   ring per gradient bucket, completed in arrival order — the
+//!   trainers' overlapped gradient sync), `all_gather`, `broadcast`,
+//!   subgroup all-reduce, and `barrier` (dissemination, ⌈log₂ n⌉
+//!   rounds; the legacy O(n²) empty all-to-all survives as
+//!   [`Comm::barrier_a2a`]).
+//!
+//! Liveness: the thread backend's *receive paths* (`recv`,
+//! `wait`/`wait_all`, and every collective built on them) are
+//! death-aware — a worker whose closure fails drops its handle, and
+//! peers blocked on a message from it surface [`Error::Comm`] instead
+//! of hanging, so a crash mid-collective (e.g. mid-bucketed-sync) is
+//! contained as a typed [`Error::Worker`] by [`run_workers`].  The one
+//! exception is [`CommHandle`]'s OS-barrier fast path, which still
+//! requires every rank to arrive.
 //!
 //! Every handle records bytes sent per collective, which
 //! [`crate::sim::NetModel`] converts into simulated wire time for the
@@ -38,8 +51,10 @@
 
 pub mod tcp;
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Barrier};
+use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::metrics::Counters;
@@ -172,6 +187,223 @@ impl PendingA2a {
     }
 }
 
+/// Float range of ring chunk `i` for a buffer of `len` floats across
+/// `n` ranks — the exact split [`Comm::all_reduce_sum`] uses, so the
+/// bucketed nonblocking reduction reproduces its addition order (and
+/// therefore its bits).
+fn ring_chunk(len: usize, n: usize, i: usize) -> std::ops::Range<usize> {
+    let per = len / n;
+    let s = i * per;
+    let e = if i + 1 == n { len } else { s + per };
+    s..e
+}
+
+/// What one ring round of a bucket does: `(send_idx, recv_idx, tag,
+/// is_gather)` for completed-round count `round` — rounds `0..n-1` are
+/// the reduce-scatter, `n-1..2(n-1)` the all-gather, with the same tag
+/// scheme as the blocking ring.
+fn ring_round(n: usize, rank: usize, round: usize, seq: u64) -> (usize, usize, u64, bool) {
+    if round < n - 1 {
+        let send_idx = (rank + n - round) % n;
+        let recv_idx = (rank + n - round - 1) % n;
+        (send_idx, recv_idx, (seq << 8) | (2 + round as u64), false)
+    } else {
+        let s = round - (n - 1);
+        let send_idx = (rank + 1 + n - s) % n;
+        let recv_idx = (rank + n - s) % n;
+        (send_idx, recv_idx, (seq << 8) | (64 + s as u64), true)
+    }
+}
+
+/// One bucket's in-flight ring reduction.  Only the current round is
+/// ever on the wire, because round `r+1` sends the very chunk round
+/// `r` just updated — but across *buckets* every ring progresses
+/// concurrently, which is where the overlap comes from.
+struct ArBucket {
+    buf: Vec<f32>,
+    seq: u64,
+    /// Completed rounds, `0..2(n-1)`.
+    round: usize,
+    /// Outstanding receive of the current round.
+    req: Option<CommRequest>,
+}
+
+/// A bucketed [`Comm::all_reduce_sum`] whose rings are still in
+/// flight, returned by [`Comm::all_reduce_start`].  Each bucket is an
+/// independent ring reduction (reduce-scatter + all-gather, the same
+/// chunking and addition order as the blocking ring, so per-bucket
+/// results are **bit-identical** to [`Comm::all_reduce_sum`] on the
+/// same buffer).  Complete one bucket at a time with
+/// [`PendingAllReduce::wait_bucket`] — the hook that lets a trainer
+/// run the host optimiser on already-synced buckets while later ones
+/// are still on the wire — or all at once with
+/// [`PendingAllReduce::finish`], which drives every ring concurrently
+/// and consumes round arrivals in arrival order where the backend
+/// supports it.
+pub struct PendingAllReduce {
+    n: usize,
+    rank: usize,
+    /// Per-bucket ring state (`None` once reduced or handed out).
+    buckets: Vec<Option<ArBucket>>,
+    /// Reduced buffers not yet claimed by the caller.
+    done: Vec<Option<Vec<f32>>>,
+}
+
+impl PendingAllReduce {
+    /// Number of buckets this reduction was started with.
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// Buckets whose rings have not completed yet.
+    pub fn pending(&self) -> usize {
+        self.buckets.iter().filter(|b| b.is_some()).count()
+    }
+
+    /// Queue bucket `i`'s current round: isend the outgoing chunk to
+    /// the ring successor, bookmark the matching arrival.
+    fn post_round<C: Comm + ?Sized>(&mut self, comm: &mut C, i: usize) -> Result<()> {
+        let n = self.n;
+        let next = (self.rank + 1) % n;
+        let prev = (self.rank + n - 1) % n;
+        let b = self.buckets[i].as_mut().expect("bucket active");
+        let (send_idx, _, tag, _) = ring_round(n, self.rank, b.round, b.seq);
+        let payload = b.buf[ring_chunk(b.buf.len(), n, send_idx)].to_vec();
+        comm.isend(next, tag, payload)?;
+        b.req = Some(comm.irecv(prev, tag)?);
+        Ok(())
+    }
+
+    /// Apply one arrived round to bucket `i` (add on the scatter half,
+    /// copy on the gather half) and post its next round, if any.  The
+    /// spent round buffer is offered to the backend's receive freelist.
+    fn apply_round<C: Comm + ?Sized>(
+        &mut self,
+        comm: &mut C,
+        i: usize,
+        data: Vec<f32>,
+    ) -> Result<()> {
+        let n = self.n;
+        let b = self.buckets[i].as_mut().expect("bucket active");
+        let (_, recv_idx, _, gather) = ring_round(n, self.rank, b.round, b.seq);
+        let range = ring_chunk(b.buf.len(), n, recv_idx);
+        if data.len() != range.len() {
+            return Err(Error::Comm(format!(
+                "bucketed all-reduce: round payload {} floats, chunk is {}",
+                data.len(),
+                range.len()
+            )));
+        }
+        if gather {
+            b.buf[range].copy_from_slice(&data);
+        } else {
+            for (x, y) in b.buf[range].iter_mut().zip(&data) {
+                *x += y;
+            }
+        }
+        let _ = comm.recycle(vec![data]);
+        b.round += 1;
+        if b.round == 2 * (n - 1) {
+            let buf = self.buckets[i].take().expect("bucket active").buf;
+            self.done[i] = Some(buf);
+        } else {
+            self.post_round(comm, i)?;
+        }
+        Ok(())
+    }
+
+    /// Drive bucket `i`'s ring to completion and return the reduced
+    /// buffer.  Other buckets' in-flight rounds stay on the wire (their
+    /// out-of-order arrivals park in the backend).
+    ///
+    /// Like any collective, the completion sequence is wire protocol:
+    /// ring rounds only advance inside a rank's wait calls, so **every
+    /// rank must complete buckets in the same order** — a rank waiting
+    /// on bucket 0 while its neighbour waits on bucket 1 leaves both
+    /// rings without their next round and deadlocks.  The same rule
+    /// covers mixing styles: ranks must either all drain bucket-by-
+    /// bucket in one shared order, or all call
+    /// [`PendingAllReduce::finish`] (whose sweeps complete one round of
+    /// *every* bucket before the next) — one rank in `finish` against a
+    /// neighbour in `wait_bucket` deadlocks just the same.  The
+    /// trainers complete buckets in shared plan order.
+    pub fn wait_bucket<C: Comm + ?Sized>(
+        &mut self,
+        comm: &mut C,
+        i: usize,
+    ) -> Result<Vec<f32>> {
+        if let Some(buf) = self.done[i].take() {
+            return Ok(buf);
+        }
+        if self.buckets[i].is_none() {
+            return Err(Error::Comm(format!(
+                "all-reduce bucket {i} already consumed"
+            )));
+        }
+        while self.buckets[i].is_some() {
+            let Some(req) = self.buckets[i].as_mut().unwrap().req.take() else {
+                // an earlier wait errored after taking this round's
+                // request; the ring cannot be resumed coherently
+                return Err(Error::Comm(format!(
+                    "all-reduce bucket {i}: ring interrupted by an earlier error"
+                )));
+            };
+            let data = comm.wait(req)?.unwrap_or_default();
+            self.apply_round(comm, i, data)?;
+        }
+        Ok(self.done[i].take().expect("bucket completed"))
+    }
+
+    /// Complete every bucket and return the reduced buffers in bucket
+    /// order.  All rings progress concurrently: each sweep waits on one
+    /// outstanding round per active bucket (arrival order where the
+    /// backend supports it) and immediately posts that bucket's next
+    /// round.  Subject to the same cross-rank ordering rule as
+    /// [`PendingAllReduce::wait_bucket`]: every rank must drive its
+    /// buckets the same way.  Errors if a bucket was already drained
+    /// via `wait_bucket`, or if an earlier wait error left a ring
+    /// without its posted round.
+    pub fn finish<C: Comm + ?Sized>(mut self, comm: &mut C) -> Result<Vec<Vec<f32>>> {
+        loop {
+            let mut idx = Vec::new();
+            let mut reqs = Vec::new();
+            for (i, slot) in self.buckets.iter_mut().enumerate() {
+                if let Some(b) = slot {
+                    let Some(req) = b.req.take() else {
+                        return Err(Error::Comm(format!(
+                            "all-reduce bucket {i}: ring interrupted by an \
+                             earlier error"
+                        )));
+                    };
+                    idx.push(i);
+                    reqs.push(req);
+                }
+            }
+            if idx.is_empty() {
+                break;
+            }
+            let datas = comm.wait_all(reqs)?;
+            for (i, data) in idx.into_iter().zip(datas) {
+                self.apply_round(comm, i, data.unwrap_or_default())?;
+            }
+        }
+        let mut out = Vec::with_capacity(self.done.len());
+        for (i, slot) in self.done.iter_mut().enumerate() {
+            out.push(slot.take().ok_or_else(|| {
+                Error::Comm(format!(
+                    "all-reduce bucket {i} already consumed via wait_bucket; \
+                     finish cannot return its buffer"
+                ))
+            })?);
+        }
+        Ok(out)
+    }
+}
+
 /// The process-group interface: p2p primitives required, collectives
 /// provided (identical across backends).
 pub trait Comm {
@@ -236,6 +468,17 @@ pub trait Comm {
     /// receiving side recycles instead.  Default: nothing to reclaim.
     fn reclaim_spent(&mut self) -> Vec<Vec<f32>> {
         Vec::new()
+    }
+
+    /// Offer payload buffers the caller is finished with back to the
+    /// backend for its *receive* path, and return whatever the backend
+    /// declined so the caller can repool them itself.  The TCP backend
+    /// feeds its progress-engine readers from this freelist, making
+    /// steady-state frame reads allocation-free; the thread backend
+    /// declines everything — its received buffers *are* the peers' send
+    /// staging, which must flow back to the caller's arena instead.
+    fn recycle(&mut self, bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        bufs
     }
 
     /// Synchronisation barrier — dissemination algorithm: ⌈log₂ n⌉
@@ -346,8 +589,47 @@ pub trait Comm {
         pending.finish(self)
     }
 
+    /// Start a bucketed nonblocking all-reduce: one independent ring
+    /// reduction per bucket, round 0 of every ring queued (and flushed)
+    /// before this returns, so all buckets' first frames travel during
+    /// whatever compute the caller overlaps before waiting.  Complete
+    /// with [`PendingAllReduce::wait_bucket`] / [`PendingAllReduce::
+    /// finish`].  Per bucket, chunking, tags and addition order match
+    /// [`Comm::all_reduce_sum`] exactly, so each bucket's result is
+    /// bit-identical to the blocking ring over the same buffer.
+    fn all_reduce_start(&mut self, bufs: Vec<Vec<f32>>) -> Result<PendingAllReduce> {
+        let n = self.size();
+        let rank = self.rank();
+        let mut pending = PendingAllReduce {
+            n,
+            rank,
+            buckets: (0..bufs.len()).map(|_| None).collect(),
+            done: (0..bufs.len()).map(|_| None).collect(),
+        };
+        if n == 1 {
+            for (slot, buf) in pending.done.iter_mut().zip(bufs) {
+                *slot = Some(buf);
+            }
+            return Ok(pending);
+        }
+        self.counters().add("allreduce_buckets", pending.buckets.len() as u64);
+        for (i, buf) in bufs.into_iter().enumerate() {
+            let seq = self.next_seq();
+            self.counters().add("allreduce_calls", 1);
+            self.counters()
+                .add("allreduce_bytes", (buf.len() * 4 * 2 * (n - 1) / n) as u64);
+            pending.buckets[i] = Some(ArBucket { buf, seq, round: 0, req: None });
+            pending.post_round(self, i)?;
+        }
+        self.flush()?;
+        Ok(pending)
+    }
+
     /// Ring all-reduce (sum): reduce-scatter then all-gather, the
-    /// standard 2(n-1)/n-bandwidth algorithm NCCL uses.
+    /// standard 2(n-1)/n-bandwidth algorithm NCCL uses.  Round
+    /// geometry, tags and addition order come from [`ring_round`] /
+    /// [`ring_chunk`] — the *same* helpers the bucketed nonblocking
+    /// path uses, so the two stay bit-identical by construction.
     fn all_reduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {
         let n = self.size();
         let rank = self.rank();
@@ -358,35 +640,20 @@ pub trait Comm {
         self.counters().add("allreduce_calls", 1);
         self.counters()
             .add("allreduce_bytes", (buf.len() * 4 * 2 * (n - 1) / n) as u64);
-        let len = buf.len();
-        let chunk = |i: usize| -> std::ops::Range<usize> {
-            let per = len / n;
-            let s = i * per;
-            let e = if i + 1 == n { len } else { s + per };
-            s..e
-        };
         let next = (rank + 1) % n;
         let prev = (rank + n - 1) % n;
-
-        // Reduce-scatter.
-        for step in 0..n - 1 {
-            let send_idx = (rank + n - step) % n;
-            let recv_idx = (rank + n - step - 1) % n;
-            let tag = (seq << 8) | (2 + step as u64);
-            self.send(next, tag, buf[chunk(send_idx)].to_vec())?;
+        for round in 0..2 * (n - 1) {
+            let (send_idx, recv_idx, tag, gather) = ring_round(n, rank, round, seq);
+            self.send(next, tag, buf[ring_chunk(buf.len(), n, send_idx)].to_vec())?;
             let data = self.recv(prev, tag)?;
-            for (x, y) in buf[chunk(recv_idx)].iter_mut().zip(&data) {
-                *x += y;
+            let range = ring_chunk(buf.len(), n, recv_idx);
+            if gather {
+                buf[range].copy_from_slice(&data);
+            } else {
+                for (x, y) in buf[range].iter_mut().zip(&data) {
+                    *x += y;
+                }
             }
-        }
-        // All-gather.
-        for step in 0..n - 1 {
-            let send_idx = (rank + 1 + n - step) % n;
-            let recv_idx = (rank + n - step) % n;
-            let tag = (seq << 8) | (64 + step as u64);
-            self.send(next, tag, buf[chunk(send_idx)].to_vec())?;
-            let data = self.recv(prev, tag)?;
-            buf[chunk(recv_idx)].copy_from_slice(&data);
         }
         Ok(())
     }
@@ -460,7 +727,16 @@ pub trait Comm {
     }
 }
 
+/// How often a blocked thread-channel receive checks whether the peer
+/// it waits on has died (see [`CommHandle`]'s liveness notes).
+const DEATH_POLL: Duration = Duration::from_millis(50);
+
 /// One worker's endpoint into a thread-backed (single-process) group.
+///
+/// Receives are *death-aware*: dropping a handle (worker exit, clean
+/// or failed) marks its rank dead, and any peer blocked on a message
+/// from a dead rank surfaces [`Error::Comm`] instead of hanging — a
+/// worker crash mid-collective is contained, never a deadlock.
 pub struct CommHandle {
     rank: usize,
     size: usize,
@@ -469,6 +745,8 @@ pub struct CommHandle {
     /// Messages that arrived out of order (wrong tag/src), parked.
     parked: Vec<Msg>,
     barrier: Arc<Barrier>,
+    /// Per-rank liveness, flipped false by each handle's `Drop`.
+    alive: Arc<Vec<AtomicBool>>,
     seq: u64,
     pub counters: Counters,
 }
@@ -484,6 +762,8 @@ pub fn local_group(size: usize) -> Vec<CommHandle> {
         receivers.push(rx);
     }
     let barrier = Arc::new(Barrier::new(size));
+    let alive: Arc<Vec<AtomicBool>> =
+        Arc::new((0..size).map(|_| AtomicBool::new(true)).collect());
     receivers
         .into_iter()
         .enumerate()
@@ -494,10 +774,44 @@ pub fn local_group(size: usize) -> Vec<CommHandle> {
             receiver,
             parked: Vec::new(),
             barrier: barrier.clone(),
+            alive: alive.clone(),
             seq: 0,
             counters: Counters::new(),
         })
         .collect()
+}
+
+impl Drop for CommHandle {
+    fn drop(&mut self) {
+        self.alive[self.rank].store(false, Ordering::Release);
+    }
+}
+
+impl CommHandle {
+    /// Drain everything already delivered to this handle's channel into
+    /// the parked queue (closing the race between a death check and a
+    /// message that arrived just before the sender died).
+    fn park_delivered(&mut self) {
+        while let Ok(msg) = self.receiver.try_recv() {
+            self.parked.push(msg);
+        }
+    }
+
+    /// Claim a `(src, tag)` match from the parked queue, if present —
+    /// the one copy of the out-of-order match scan both `recv` and
+    /// `wait_all` use.
+    fn take_parked(&mut self, src: usize, tag: u64) -> Option<Vec<f32>> {
+        self.parked
+            .iter()
+            .position(|m| m.src == src && m.tag == tag)
+            .map(|i| self.parked.swap_remove(i).data)
+    }
+
+    fn dead_peer_err(src: usize, tag: u64) -> Error {
+        Error::Comm(format!(
+            "worker {src} died before its message (tag {tag}) arrived"
+        ))
+    }
 }
 
 impl Comm for CommHandle {
@@ -521,22 +835,32 @@ impl Comm for CommHandle {
     }
 
     fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<f32>> {
-        if let Some(i) = self
-            .parked
-            .iter()
-            .position(|m| m.src == src && m.tag == tag)
-        {
-            return Ok(self.parked.swap_remove(i).data);
+        if let Some(data) = self.take_parked(src, tag) {
+            return Ok(data);
         }
         loop {
-            let msg = self
-                .receiver
-                .recv()
-                .map_err(|_| Error::Comm("channel closed".into()))?;
-            if msg.src == src && msg.tag == tag {
-                return Ok(msg.data);
+            match self.receiver.recv_timeout(DEATH_POLL) {
+                Ok(msg) => {
+                    if msg.src == src && msg.tag == tag {
+                        return Ok(msg.data);
+                    }
+                    self.parked.push(msg);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if !self.alive[src].load(Ordering::Acquire) {
+                        // final sweep: the message may have raced in
+                        // just before the sender died
+                        self.park_delivered();
+                        if let Some(data) = self.take_parked(src, tag) {
+                            return Ok(data);
+                        }
+                        return Err(Self::dead_peer_err(src, tag));
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Comm("channel closed".into()))
+                }
             }
-            self.parked.push(msg);
         }
     }
 
@@ -558,33 +882,53 @@ impl Comm for CommHandle {
                 pending.push((slot, src, tag));
             }
         }
-        pending.retain(|&(slot, src, tag)| {
-            match self
-                .parked
-                .iter()
-                .position(|m| m.src == src && m.tag == tag)
-            {
-                Some(i) => {
-                    out[slot] = Some(self.parked.swap_remove(i).data);
-                    false
-                }
-                None => true,
+        pending.retain(|&(slot, src, tag)| match self.take_parked(src, tag) {
+            Some(data) => {
+                out[slot] = Some(data);
+                false
             }
+            None => true,
         });
         while !pending.is_empty() {
-            let msg = self
-                .receiver
-                .recv()
-                .map_err(|_| Error::Comm("channel closed".into()))?;
-            match pending
-                .iter()
-                .position(|&(_, src, tag)| src == msg.src && tag == msg.tag)
-            {
-                Some(i) => {
-                    let (slot, _, _) = pending.swap_remove(i);
-                    out[slot] = Some(msg.data);
+            match self.receiver.recv_timeout(DEATH_POLL) {
+                Ok(msg) => {
+                    match pending
+                        .iter()
+                        .position(|&(_, src, tag)| src == msg.src && tag == msg.tag)
+                    {
+                        Some(i) => {
+                            let (slot, _, _) = pending.swap_remove(i);
+                            out[slot] = Some(msg.data);
+                        }
+                        None => self.parked.push(msg),
+                    }
                 }
-                None => self.parked.push(msg),
+                Err(RecvTimeoutError::Timeout) => {
+                    if pending
+                        .iter()
+                        .any(|&(_, src, _)| !self.alive[src].load(Ordering::Acquire))
+                    {
+                        self.park_delivered();
+                        pending.retain(|&(slot, src, tag)| {
+                            match self.take_parked(src, tag) {
+                                Some(data) => {
+                                    out[slot] = Some(data);
+                                    false
+                                }
+                                None => true,
+                            }
+                        });
+                        if let Some(&(_, src, tag)) = pending
+                            .iter()
+                            .find(|&&(_, s, _)| !self.alive[s].load(Ordering::Acquire))
+                        {
+                            return Err(Self::dead_peer_err(src, tag));
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Comm("channel closed".into()))
+                }
             }
         }
         Ok(out)
@@ -882,6 +1226,123 @@ mod tests {
             Ok(())
         })
         .unwrap();
+    }
+
+    #[test]
+    fn bucketed_all_reduce_matches_blocking_ring_bitwise() {
+        run_workers(4, |mut h| {
+            let r = h.rank();
+            // empty, non-divisible, divisible, large-ish, tiny buckets
+            let lens = [0usize, 7, 64, 1000, 3];
+            let bufs: Vec<Vec<f32>> = lens
+                .iter()
+                .enumerate()
+                .map(|(b, &l)| {
+                    (0..l)
+                        .map(|i| (r + 1) as f32 * 1.1 + b as f32 * 0.3 + i as f32 * 0.01)
+                        .collect()
+                })
+                .collect();
+            let mut want = bufs.clone();
+            for w in want.iter_mut() {
+                h.all_reduce_sum(w)?;
+            }
+            // in-order finish
+            let pending = h.all_reduce_start(bufs.clone())?;
+            assert_eq!(pending.len(), lens.len());
+            let got = pending.finish(&mut h)?;
+            assert_eq!(got, want, "finish != blocking ring");
+            // reverse-order per-bucket completion: arrival order across
+            // buckets must not change any bucket's bits
+            let mut pending = h.all_reduce_start(bufs)?;
+            for b in (0..lens.len()).rev() {
+                assert_eq!(pending.wait_bucket(&mut h, b)?, want[b], "bucket {b}");
+            }
+            assert_eq!(pending.pending(), 0);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn bucketed_all_reduce_rejects_double_consume() {
+        run_workers(2, |mut h| {
+            let bufs = vec![vec![h.rank() as f32; 8], vec![1.0; 4]];
+            let mut pending = h.all_reduce_start(bufs)?;
+            let _ = pending.wait_bucket(&mut h, 0)?;
+            assert!(pending.wait_bucket(&mut h, 0).is_err());
+            // finish cannot return the already-drained bucket
+            assert!(pending.finish(&mut h).is_err());
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn bucketed_all_reduce_single_worker_is_identity() {
+        run_workers(1, |mut h| {
+            let bufs = vec![vec![1.5f32, -2.0], Vec::new()];
+            let pending = h.all_reduce_start(bufs.clone())?;
+            assert_eq!(pending.pending(), 0);
+            assert_eq!(pending.finish(&mut h)?, bufs);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn prop_bucket_completion_order_never_changes_sums() {
+        check("bucket completion order invariant", 15, |g| {
+            let n = *g.choose(&[2usize, 3, 4]);
+            let nb = g.usize_in(1, 5);
+            let lens: Vec<usize> = (0..nb).map(|_| g.usize_in(0, 40)).collect();
+            let data: Vec<Vec<Vec<f32>>> = (0..n)
+                .map(|_| lens.iter().map(|&l| g.vec_f32(l, -4.0, 4.0)).collect())
+                .collect();
+            // random completion order, same on every rank
+            let mut order: Vec<usize> = (0..nb).collect();
+            for i in (1..nb).rev() {
+                let j = g.usize_in(0, i);
+                order.swap(i, j);
+            }
+            let data2 = data.clone();
+            let order2 = order.clone();
+            let got = run_workers(n, move |mut h| {
+                let bufs = data2[h.rank()].clone();
+                let mut want = bufs.clone();
+                for w in want.iter_mut() {
+                    h.all_reduce_sum(w)?;
+                }
+                let mut pending = h.all_reduce_start(bufs)?;
+                let mut out: Vec<Vec<f32>> = vec![Vec::new(); want.len()];
+                for &b in &order2 {
+                    out[b] = pending.wait_bucket(&mut h, b)?;
+                }
+                Ok((out, want))
+            })
+            .map_err(|e| e.to_string())?;
+            for (r, (out, want)) in got.iter().enumerate() {
+                prop_assert(
+                    out == want,
+                    format!("rank {r}: order {order:?} changed bits"),
+                )?;
+            }
+            Ok(()) as PropResult
+        });
+    }
+
+    #[test]
+    fn recv_from_dead_worker_errors_instead_of_hanging() {
+        let res = run_workers(3, |mut h| {
+            if h.rank() == 1 {
+                return Err(Error::msg("injected death"));
+            }
+            // both survivors wait on rank 1 — must error, not hang
+            let err = h.recv(1, 12345).unwrap_err();
+            assert!(err.to_string().contains("died"), "{err}");
+            Err(err)
+        });
+        assert!(matches!(res, Err(Error::Worker { .. })), "{res:?}");
     }
 
     #[test]

@@ -39,9 +39,17 @@
 //! writer and is then done with the caller's `Vec` — those buffers are
 //! handed back through [`Comm::reclaim_spent`] so the MoE layer's
 //! buffer pool can reuse them next step instead of reallocating.
+//!
+//! The *receive* path is pooled symmetrically: every frame reader
+//! (the caller's blocking reads and the progress-engine threads alike)
+//! draws its payload buffer from an inbox-side freelist fed by
+//! [`Comm::recycle`], so a caller that hands consumed buffers back
+//! makes steady-state frame reads allocation-free
+//! ([`TcpGroup::recv_buffer_allocs`] pins it).
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -56,6 +64,102 @@ use crate::metrics::Counters;
 /// payload immediately, as before.
 const SPENT_CAP: usize = 256;
 const SPENT_CAP_BYTES: usize = 32 << 20;
+
+/// Pooled receive buffers retained for the frame readers; beyond these
+/// caps, [`Comm::recycle`] declines buffers (returning them to the
+/// caller) so an over-generous donor cannot pin unbounded memory.
+const FRAME_POOL_CAP: usize = 256;
+const FRAME_POOL_CAP_BYTES: usize = 32 << 20;
+
+/// Inbox-side freelist the frame readers draw payload buffers from,
+/// fed by [`Comm::recycle`].  Shared between the main thread and the
+/// progress-engine readers, hence the interior locking.
+///
+/// The pool only ever *accepts* as many buffers as it has handed out
+/// (`outstanding`): callers recycle every consumed receive buffer
+/// indiscriminately, but some of those (self-loopback messages) are
+/// really the caller's own send staging — keeping the balance at zero
+/// returns exactly that surplus to the caller, so its arena never
+/// drains into ours.
+#[derive(Default)]
+struct FramePool {
+    list: Mutex<FrameList>,
+    /// Frames whose payload had to touch the allocator.
+    allocs: AtomicU64,
+    /// Frames served entirely from recycled buffers.
+    hits: AtomicU64,
+    /// Buffers handed out minus recycles accepted.
+    outstanding: AtomicI64,
+}
+
+#[derive(Default)]
+struct FrameList {
+    bufs: Vec<Vec<f32>>,
+    /// Capacity bytes currently parked in `bufs`.
+    bytes: usize,
+}
+
+impl FramePool {
+    /// A buffer of exactly `len` floats with arbitrary contents (the
+    /// frame read overwrites every element): best-fit from the
+    /// freelist, falling back to (and counting) a fresh allocation.
+    fn take(&self, len: usize) -> Vec<f32> {
+        if len == 0 {
+            return Vec::new();
+        }
+        let mut l = self.list.lock().unwrap();
+        let mut best: Option<(usize, usize)> = None;
+        for (i, b) in l.bufs.iter().enumerate() {
+            if b.capacity() >= len && best.map(|(_, c)| b.capacity() < c).unwrap_or(true)
+            {
+                best = Some((i, b.capacity()));
+            }
+        }
+        let out = match best {
+            Some((i, _)) => {
+                let mut b = l.bufs.swap_remove(i);
+                l.bytes -= b.capacity() * 4;
+                drop(l);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                if b.len() > len {
+                    b.truncate(len);
+                } else {
+                    b.resize(len, 0.0);
+                }
+                b
+            }
+            None => {
+                drop(l);
+                self.allocs.fetch_add(1, Ordering::Relaxed);
+                vec![0f32; len]
+            }
+        };
+        self.outstanding.fetch_add(1, Ordering::Relaxed);
+        out
+    }
+
+    /// Park a buffer for reuse; `Some(buf)` hands it back when the
+    /// pool is owed nothing, is at capacity, or the buffer is
+    /// worthless.
+    fn give(&self, buf: Vec<f32>) -> Option<Vec<f32>> {
+        let cap = buf.capacity() * 4;
+        if cap == 0 {
+            return None;
+        }
+        if self.outstanding.fetch_sub(1, Ordering::Relaxed) <= 0 {
+            self.outstanding.fetch_add(1, Ordering::Relaxed);
+            return Some(buf);
+        }
+        let mut l = self.list.lock().unwrap();
+        if l.bufs.len() < FRAME_POOL_CAP && l.bytes + cap <= FRAME_POOL_CAP_BYTES {
+            l.bytes += cap;
+            l.bufs.push(buf);
+            None
+        } else {
+            Some(buf)
+        }
+    }
+}
 
 /// Shared state between a rank's main thread and its progress readers.
 struct ProgressShared {
@@ -89,6 +193,8 @@ pub struct TcpGroup {
     spent_bytes: usize,
     /// Progress engine state; `Some` after [`TcpGroup::enable_progress`].
     progress: Option<Arc<ProgressShared>>,
+    /// Pooled receive buffers shared with the frame readers.
+    frames: Arc<FramePool>,
     seq: u64,
     pub counters: Counters,
 }
@@ -152,6 +258,7 @@ impl TcpGroup {
             spent: Vec::new(),
             spent_bytes: 0,
             progress: None,
+            frames: Arc::new(FramePool::default()),
             seq: 0,
             counters: Counters::new(),
         })
@@ -192,13 +299,14 @@ impl TcpGroup {
         for (peer, slot) in self.readers.iter_mut().enumerate() {
             let Some(mut reader) = slot.take() else { continue };
             let sh = shared.clone();
+            let frames = self.frames.clone();
             // detached on purpose: the thread exits when the peer's
             // socket closes; joining at drop could deadlock on a peer
             // that outlives us.
             std::thread::Builder::new()
                 .name(format!("tcp-progress-{}-{peer}", self.rank))
                 .spawn(move || loop {
-                    match read_frame(&mut reader) {
+                    match read_frame(&mut reader, &frames) {
                         Ok(msg) => {
                             let mut inbox = sh.inbox.lock().unwrap();
                             inbox.msgs.push(msg);
@@ -291,10 +399,23 @@ impl TcpGroup {
     /// Blocking read of one framed message from a specific peer socket
     /// (deferred-flush mode only; progress mode reads via the engine).
     fn read_msg_from(&mut self, peer: usize) -> Result<Msg> {
+        let frames = self.frames.clone();
         let reader = self.readers[peer]
             .as_mut()
             .ok_or_else(|| Error::Comm(format!("no link to peer {peer}")))?;
-        read_frame(reader).map_err(io_err)
+        read_frame(reader, &frames).map_err(io_err)
+    }
+
+    /// Receive-path allocations: frames whose payload buffer had to
+    /// touch the allocator because the [`Comm::recycle`] freelist had
+    /// nothing big enough.  Flat in steady state when callers recycle.
+    pub fn recv_buffer_allocs(&self) -> u64 {
+        self.frames.allocs.load(Ordering::Relaxed)
+    }
+
+    /// Frames served entirely from recycled receive buffers.
+    pub fn recv_buffer_hits(&self) -> u64 {
+        self.frames.hits.load(Ordering::Relaxed)
     }
 
     /// Progress-mode receive: wait on the shared inbox.
@@ -319,14 +440,18 @@ impl TcpGroup {
     }
 }
 
-/// Parse one wire frame (see module docs for the format).
+/// Parse one wire frame (see module docs for the format), staging the
+/// payload in a buffer drawn from the recycle freelist.
 ///
 /// Error taxonomy matters to the progress engine's diagnostics: EOF
 /// *before any header byte* (a frame boundary) is the one clean
 /// shutdown and surfaces as `UnexpectedEof`; EOF mid-header or
 /// mid-payload is a truncated frame and surfaces as `InvalidData`, so
 /// a peer crash mid-exchange is never reported as a normal disconnect.
-fn read_frame(reader: &mut BufReader<TcpStream>) -> std::io::Result<Msg> {
+fn read_frame(
+    reader: &mut BufReader<TcpStream>,
+    frames: &FramePool,
+) -> std::io::Result<Msg> {
     let mut hdr = [0u8; 4 + 8 + 8];
     let mut filled = 0usize;
     while filled < hdr.len() {
@@ -355,21 +480,24 @@ fn read_frame(reader: &mut BufReader<TcpStream>) -> std::io::Result<Msg> {
             format!("implausible frame of {len} floats"),
         ));
     }
-    let mut data = vec![0f32; len];
+    let mut data = frames.take(len);
     // Safety: reading LE f32 payload into the vec's byte view.
     let bytes = unsafe {
         std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, len * 4)
     };
-    reader.read_exact(bytes).map_err(|e| {
-        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+    if let Err(e) = reader.read_exact(bytes) {
+        // rebalance the pool's hand-out/return accounting: this buffer
+        // never reaches a caller who could recycle it
+        let _ = frames.give(data);
+        return Err(if e.kind() == std::io::ErrorKind::UnexpectedEof {
             std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
                 format!("eof mid-frame ({len}-float payload truncated)"),
             )
         } else {
             e
-        }
-    })?;
+        });
+    }
     Ok(Msg { src, tag, data })
 }
 
@@ -525,6 +653,20 @@ impl Comm for TcpGroup {
         std::mem::take(&mut self.spent)
     }
 
+    /// Feed the receive freelist: frames the readers hand out come
+    /// back here once the caller has consumed them, closing the
+    /// allocation loop of the receive path.  Buffers the pool is too
+    /// full to keep are returned to the caller.
+    fn recycle(&mut self, bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        let mut declined = Vec::new();
+        for b in bufs {
+            if let Some(b) = self.frames.give(b) {
+                declined.push(b);
+            }
+        }
+        declined
+    }
+
     fn next_seq(&mut self) -> u64 {
         self.seq += 1;
         self.seq
@@ -637,6 +779,32 @@ mod tests {
             assert!(recv[other].iter().all(|&x| x == other as f32));
             Ok(())
         });
+    }
+
+    #[test]
+    fn frame_pool_best_fit_and_balance() {
+        let p = FramePool::default();
+        // empty pool: two allocations, counted
+        let big = p.take(16);
+        let small = p.take(4);
+        assert_eq!(big.len(), 16);
+        assert_eq!(p.allocs.load(Ordering::Relaxed), 2);
+        // both come back: accepted (the pool is owed two)
+        assert!(p.give(big).is_none());
+        assert!(p.give(small).is_none());
+        // a surplus give (never handed out) is declined — that buffer
+        // is the caller's own staging (e.g. a self-loopback send), and
+        // keeping it would drain the caller's arena into ours
+        assert!(p.give(vec![0.0; 8]).is_some());
+        // best fit: a small request must not burn the big buffer
+        let s = p.take(3);
+        assert!(s.capacity() < 16, "best fit took the big buffer");
+        assert_eq!(p.allocs.load(Ordering::Relaxed), 2);
+        assert_eq!(p.hits.load(Ordering::Relaxed), 1);
+        // zero-length frames never touch the pool or the allocator
+        assert_eq!(p.take(0).capacity(), 0);
+        assert_eq!(p.allocs.load(Ordering::Relaxed), 2);
+        let _ = p.give(s);
     }
 
     #[test]

@@ -160,12 +160,16 @@ impl MoeConfig {
 ///
 /// ```toml
 /// [comm]
-/// overlap = true   # pipeline dispatch / expert compute / combine
-/// chunks = 4       # ring-offset peer groups per exchange (1 = blocking,
-///                  # 0 = adaptive from the previous step's wire:compute ratio)
-/// pool = true      # step-persistent buffer pools on the MoE hot path
-/// progress = false # TCP progress engine (reader threads drain arrivals
-///                  # during expert compute; tcp backend only)
+/// overlap = true      # pipeline dispatch / expert compute / combine
+/// chunks = 4          # ring-offset peer groups per exchange (1 = blocking,
+///                     # 0 = adaptive from the previous step's wire:compute ratio)
+/// pool = true         # step-persistent buffer pools on the MoE hot path
+/// progress = false    # TCP progress engine (reader threads drain arrivals
+///                     # during expert compute; tcp backend only)
+/// grad_overlap = true # bucketed nonblocking gradient all-reduce in the
+///                     # trainers, overlapped with backward / host Adam
+/// bucket_kb = 512     # target gradient-bucket payload (KiB; tensors are
+///                     # never split across buckets)
 /// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct CommConfig {
@@ -189,19 +193,40 @@ pub struct CommConfig {
     /// eagerly, and `wait_all` completes in true arrival order.
     /// Thread-channel workers ignore it.
     pub progress: bool,
+    /// Overlapped gradient synchronisation in the trainers: the
+    /// data-parallel grads go through the bucketed nonblocking
+    /// all-reduce (`Comm::all_reduce_start`) instead of the serial
+    /// blocking ring — `MoeLayerTrainer` flies the gate-grad bucket
+    /// during the expert backward, `DistTrainer` pipelines bucket
+    /// completions against host Adam.  Off by default (the seed
+    /// schedule); results are bit-identical either way.
+    pub grad_overlap: bool,
+    /// Target gradient-bucket payload in KiB for `grad_overlap`.
+    /// Tensors are never split across buckets (that is what keeps the
+    /// bits identical to the per-tensor blocking rings), so a bucket
+    /// is a run of whole same-tag tensors up to this size.  Must be
+    /// ≥ 1.
+    pub bucket_kb: usize,
 }
 
 impl Default for CommConfig {
     fn default() -> Self {
-        Self { overlap: false, chunks: 4, pool: true, progress: false }
+        Self {
+            overlap: false,
+            chunks: 4,
+            pool: true,
+            progress: false,
+            grad_overlap: false,
+            bucket_kb: 512,
+        }
     }
 }
 
 impl CommConfig {
     /// The `[comm]` section of an optional `--config` file, with the
     /// `--overlap` / `--no-overlap` / `--no-pool` / `--progress` /
-    /// `--no-progress` flags and `--chunks N` overrides
-    /// (`--chunks 0` = adaptive).
+    /// `--no-progress` / `--grad-overlap` / `--no-grad-overlap` flags
+    /// and `--chunks N` (`0` = adaptive) / `--bucket-kb N` overrides.
     pub fn from_args(args: &crate::cli::Args) -> Result<CommConfig> {
         let mut cfg = if let Some(path) = args.get("config") {
             ConfigFile::load(path)?.comm()?
@@ -223,8 +248,26 @@ impl CommConfig {
         if args.has_flag("no-progress") {
             cfg.progress = false;
         }
+        if args.has_flag("grad-overlap") {
+            cfg.grad_overlap = true;
+        }
+        if args.has_flag("no-grad-overlap") {
+            cfg.grad_overlap = false;
+        }
         cfg.chunks = args.usize_or("chunks", cfg.chunks)?;
-        Ok(cfg)
+        cfg.bucket_kb = args.usize_or("bucket-kb", cfg.bucket_kb)?;
+        cfg.validate()
+    }
+
+    fn validate(self) -> Result<CommConfig> {
+        if self.bucket_kb == 0 {
+            return Err(Error::Config(
+                "comm.bucket_kb must be ≥ 1 (tensors are never split; \
+                 use grad_overlap = false to disable bucketing)"
+                    .into(),
+            ));
+        }
+        Ok(self)
     }
 }
 
@@ -367,8 +410,10 @@ impl ConfigFile {
             c.chunks = s.usize_or("chunks", c.chunks);
             c.pool = s.bool_or("pool", c.pool);
             c.progress = s.bool_or("progress", c.progress);
+            c.grad_overlap = s.bool_or("grad_overlap", c.grad_overlap);
+            c.bucket_kb = s.usize_or("bucket_kb", c.bucket_kb);
         }
-        Ok(c)
+        c.validate()
     }
 
     pub fn dist(&self) -> Result<DistConfig> {
@@ -459,11 +504,26 @@ chunks = 2
         let c = ConfigFile::parse("[comm]\npool = false\nprogress = true\n").unwrap();
         assert!(!c.comm().unwrap().pool);
         assert!(c.comm().unwrap().progress);
+        // grad-sync knobs parse, and bucket_kb = 0 is rejected
+        let c = ConfigFile::parse("[comm]\ngrad_overlap = true\nbucket_kb = 64\n")
+            .unwrap();
+        assert!(c.comm().unwrap().grad_overlap);
+        assert_eq!(c.comm().unwrap().bucket_kb, 64);
+        let c = ConfigFile::parse("[comm]\nbucket_kb = 0\n").unwrap();
+        assert!(c.comm().is_err());
         // CLI merge: flags flip overlap, --chunks overrides
         let argv = |s: &str| {
             crate::cli::Args::parse(
                 s.split_whitespace().map(|x| x.to_string()),
-                &["overlap", "no-overlap", "no-pool", "progress", "no-progress"],
+                &[
+                    "overlap",
+                    "no-overlap",
+                    "no-pool",
+                    "progress",
+                    "no-progress",
+                    "grad-overlap",
+                    "no-grad-overlap",
+                ],
             )
             .unwrap()
         };
@@ -472,12 +532,18 @@ chunks = 2
         assert_eq!(cfg.chunks, 8);
         let cfg = CommConfig::from_args(&argv("x")).unwrap();
         assert_eq!(cfg, CommConfig::default());
+        assert!(!cfg.grad_overlap, "grad overlap must default off (seed schedule)");
+        assert_eq!(cfg.bucket_kb, 512);
         // 0 = adaptive through the CLI as well
         let cfg = CommConfig::from_args(&argv("x --chunks 0")).unwrap();
         assert_eq!(cfg.chunks, 0);
         let cfg = CommConfig::from_args(&argv("x --no-pool --progress")).unwrap();
         assert!(!cfg.pool);
         assert!(cfg.progress);
+        let cfg = CommConfig::from_args(&argv("x --grad-overlap --bucket-kb 32")).unwrap();
+        assert!(cfg.grad_overlap);
+        assert_eq!(cfg.bucket_kb, 32);
+        assert!(CommConfig::from_args(&argv("x --bucket-kb 0")).is_err());
     }
 
     #[test]

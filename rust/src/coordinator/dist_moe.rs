@@ -52,7 +52,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::comm::{Comm, CommRequest};
+use crate::comm::{Comm, CommRequest, PendingAllReduce};
 use crate::config::{CommConfig, MoeConfig};
 use crate::error::{Error, Result};
 use crate::metrics::Counters;
@@ -209,6 +209,14 @@ impl MoeLayerBuilder {
         self
     }
 
+    /// Override overlapped gate-grad sync directly (`[comm]
+    /// grad_overlap`): the backward flies the replicated gate-grad
+    /// bucket during the expert backward and returns it pre-averaged.
+    pub fn grad_overlap(mut self, on: bool) -> MoeLayerBuilder {
+        self.comm.grad_overlap = on;
+        self
+    }
+
     /// Seed for parameter init (and the noisy gate's noise stream).
     pub fn seed(mut self, seed: u64) -> MoeLayerBuilder {
         self.seed = seed;
@@ -290,6 +298,7 @@ impl MoeLayerBuilder {
             } else {
                 self.comm.chunks.clamp(1, workers)
             },
+            grad_overlap: self.comm.grad_overlap,
             balance_coef: self.cfg.balance_coef as f32,
             pool: Mutex::new(BufferPool::new(self.comm.pool)),
             adapt: Mutex::new(AdaptState {
@@ -333,6 +342,10 @@ pub struct DistMoeLayer {
     /// Ring-offset peer chunks per exchange (clamped to `workers`);
     /// `0` = adaptive from the previous step's wire:compute ratio.
     pub chunks: usize,
+    /// Fly the replicated gate-grad bucket during the expert backward
+    /// (`[comm] grad_overlap`): the backward returns `dwg`/`dbg`
+    /// already world-averaged, flagged by `LayerGrads::gate_synced`.
+    pub grad_overlap: bool,
     /// GShard balance-loss gradient weight (`[moe] balance_coef`).
     balance_coef: f32,
     /// Step-persistent buffer arena (`[comm] pool`): padded batches,
@@ -376,6 +389,10 @@ pub struct LayerGrads {
     /// Expert-shard gradients as named slots, in
     /// [`ExpertShard::params`] order.
     pub expert: Vec<(&'static str, TensorF32)>,
+    /// `dwg`/`dbg` are already world-averaged: the backward flew the
+    /// gate-grad bucket during the expert backward (`[comm]
+    /// grad_overlap`), so the trainer must not reduce them again.
+    pub gate_synced: bool,
 }
 
 impl LayerGrads {
@@ -488,6 +505,68 @@ impl DistMoeLayer {
         pool.give_all(ROLE_WIRE, comm.reclaim_spent());
     }
 
+    /// Recycle consumed *received* buffers: offer them to the backend's
+    /// receive freelist first ([`Comm::recycle`] — the TCP frame
+    /// readers draw from it, keeping the receive path allocation-free),
+    /// and pool whatever the backend declines (the thread backend
+    /// declines everything: its received buffers are the peers' send
+    /// staging, which must return to the arena to keep it miss-free).
+    fn repool_wire(
+        &self,
+        comm: &mut impl Comm,
+        pool: &mut BufferPool,
+        bufs: impl IntoIterator<Item = Vec<f32>>,
+    ) {
+        pool.give_all(ROLE_WIRE, comm.recycle(bufs.into_iter().collect()));
+    }
+
+    /// Start the overlapped world-average of the replicated gate grads
+    /// (`[comm] grad_overlap`): both tensors fly as one bucket launch —
+    /// each through its own ring, the same per-tensor decomposition the
+    /// trainer's blocking reduction uses, so the bits cannot change.
+    /// The rings' round-0 frames travel during the expert backward;
+    /// the remaining rounds complete in [`Self::finish_gate_sync`]
+    /// (rounds advance inside waits, one outstanding round per ring).
+    fn start_gate_sync(
+        &self,
+        comm: &mut impl Comm,
+        dwg: &mut TensorF32,
+        dbg: &mut TensorF32,
+    ) -> Result<Option<PendingAllReduce>> {
+        if !self.grad_overlap || self.workers <= 1 {
+            return Ok(None);
+        }
+        let bufs = vec![
+            std::mem::take(&mut dwg.data),
+            std::mem::take(&mut dbg.data),
+        ];
+        Ok(Some(comm.all_reduce_start(bufs)?))
+    }
+
+    /// Complete the overlapped gate-grad sync and apply the `1/workers`
+    /// average (identical op order to the trainer's blocking path).
+    /// Returns whether the grads are now synced.
+    fn finish_gate_sync(
+        &self,
+        comm: &mut impl Comm,
+        pending: Option<PendingAllReduce>,
+        dwg: &mut TensorF32,
+        dbg: &mut TensorF32,
+    ) -> Result<bool> {
+        let Some(pending) = pending else { return Ok(false) };
+        let mut bufs = pending.finish(comm)?;
+        dbg.data = bufs.pop().expect("dbg bucket");
+        dwg.data = bufs.pop().expect("dwg bucket");
+        let scale = 1.0 / self.workers as f32;
+        for v in dwg.data.iter_mut() {
+            *v *= scale;
+        }
+        for v in dbg.data.iter_mut() {
+            *v *= scale;
+        }
+        Ok(true)
+    }
+
     /// Current pool counters (cumulative over the layer's lifetime).
     pub fn pool_stats(&self) -> PoolStats {
         self.pool.lock().unwrap().stats()
@@ -598,7 +677,7 @@ impl DistMoeLayer {
             .iter()
             .map(|b| b.iter().map(|&x| x as u32).collect())
             .collect();
-        pool.give_all(ROLE_WIRE, recv_count_bufs);
+        self.repool_wire(comm, &mut pool, recv_count_bufs);
 
         // ---- Figure 2 phase 2, strictly before the expert shard ----
         let send = plan.pack_into(x, &mut pool, ROLE_WIRE)?;
@@ -620,7 +699,7 @@ impl DistMoeLayer {
         for (p, part) in recv.iter().enumerate() {
             copied += eb.fill_peer(p, part)? as u64;
         }
-        pool.give_all(ROLE_WIRE, recv);
+        self.repool_wire(comm, &mut pool, recv);
         counters.add("moe_copy_bytes", copied);
         counters.add("moe_bucket_rows", (eb.bucket * eb.ne_local) as u64);
         counters.add(
@@ -636,7 +715,7 @@ impl DistMoeLayer {
         self.drain_spent(comm, &mut pool);
         let mut y_slots = pool.take_tensor_filled(ROLE_PACKED, &[self.nb * self.k, self.dm])?;
         let unpacked = plan.unpack_returned_into(&back, self.dm, &mut y_slots)?;
-        pool.give_all(ROLE_WIRE, back);
+        self.repool_wire(comm, &mut pool, back);
         counters.add("moe_copy_bytes", unpacked as u64);
         Ok((eb, y_slots))
     }
@@ -747,7 +826,7 @@ impl DistMoeLayer {
             }
             recv_counts[p] = data[..self.ne_local].iter().map(|&v| v as u32).collect();
             ratios[p] = data[self.ne_local];
-            pool.give(ROLE_WIRE, data);
+            self.repool_wire(comm, &mut pool, [data]);
         }
         // agree on the next step's adaptive chunk count from everyone's
         // ratio (same data, same rank-ordered mean on every worker)
@@ -792,7 +871,7 @@ impl DistMoeLayer {
             for &p in &groups[c].in_peers {
                 let part = recv_parts[p].take().unwrap_or_default();
                 copied += eb.fill_peer(p, &part)? as u64;
-                pool.give(ROLE_WIRE, part);
+                self.repool_wire(comm, &mut pool, [part]);
             }
             // slice view: gather the chunk's rows out of the shared
             // buffer into one pooled staging (bucket ≤ the full one)
@@ -848,7 +927,7 @@ impl DistMoeLayer {
             .collect();
         let mut y_slots = pool.take_tensor_filled(ROLE_PACKED, &[self.nb * self.k, self.dm])?;
         copied += plan.unpack_returned_into(&back, self.dm, &mut y_slots)? as u64;
-        pool.give_all(ROLE_WIRE, back);
+        self.repool_wire(comm, &mut pool, back);
         counters.add("moe_copy_bytes", copied);
 
         // feed the measured wire:compute balance into the next step's
@@ -969,7 +1048,11 @@ impl DistMoeLayer {
         let mut pool = self.pool.lock().unwrap();
 
         // ---- gate backward: routing Jacobian + gate GEMM ----
-        let (mut dx, dwg, dbg) = self.gate_backward(state, dw)?;
+        let (mut dx, mut dwg, mut dbg) = self.gate_backward(state, dw)?;
+        // overlapped grad sync: the replicated gate-grad bucket departs
+        // now and completes after the expert backward, its rounds
+        // hiding behind the cotangent exchange and the expert compute
+        let gate_sync = self.start_gate_sync(comm, &mut dwg, &mut dbg)?;
 
         // ---- reverse exchange of output cotangents ----
         // dys is already in packed order; split by destination rows.
@@ -992,11 +1075,12 @@ impl DistMoeLayer {
             &[self.ne_local, state.eb.bucket, self.dm],
         )?;
         copied += state.eb.rebatch_into(&recv, &mut dys_in)? as u64;
-        pool.give_all(ROLE_WIRE, recv);
+        self.repool_wire(comm, &mut pool, recv);
 
         // ---- expert shard backward (recompute-style artifact) ----
         let (dxs, expert_grads) = self.expert.backward(&state.eb, &dys_in)?;
         pool.give_tensor(ROLE_COT, dys_in);
+        let gate_synced = self.finish_gate_sync(comm, gate_sync, &mut dwg, &mut dbg)?;
 
         // ---- route input cotangents back to token owners ----
         let ret = state.eb.split_outputs_pooled(&dxs, &mut pool, ROLE_WIRE)?;
@@ -1008,13 +1092,13 @@ impl DistMoeLayer {
         let mut dx_packed =
             pool.take_tensor_filled(ROLE_PACKED, &[self.nb * self.k, self.dm])?;
         copied += plan.unpack_returned_into(&back, self.dm, &mut dx_packed)? as u64;
-        pool.give_all(ROLE_WIRE, back);
+        self.repool_wire(comm, &mut pool, back);
         counters.add("moe_copy_bytes", copied);
 
         self.scatter_transpose(plan, &dx_packed, &mut dx);
         pool.give_tensor(ROLE_PACKED, dx_packed);
 
-        Ok(LayerGrads { dx, dwg, dbg, expert: expert_grads })
+        Ok(LayerGrads { dx, dwg, dbg, expert: expert_grads, gate_synced })
     }
 
     /// Backward with comm/compute overlap: every chunk of output
@@ -1078,7 +1162,10 @@ impl DistMoeLayer {
         self.drain_spent(comm, &mut pool);
 
         // gate backward overlaps the cotangent flight
-        let (mut dx, dwg, dbg) = self.gate_backward(state, dw)?;
+        let (mut dx, mut dwg, mut dbg) = self.gate_backward(state, dw)?;
+        // the gate-grad bucket joins the wire now; its rounds complete
+        // behind the expert backward below
+        let gate_sync = self.start_gate_sync(comm, &mut dwg, &mut dbg)?;
 
         for pend in disp_pend {
             wait_chunk(comm, pend, &mut recv_parts)?;
@@ -1092,11 +1179,12 @@ impl DistMoeLayer {
             &[self.ne_local, state.eb.bucket, self.dm],
         )?;
         copied += state.eb.rebatch_into(&recv, &mut dys_in)? as u64;
-        pool.give_all(ROLE_WIRE, recv);
+        self.repool_wire(comm, &mut pool, recv);
 
         // full-batch expert backward: same reduction order as blocking
         let (dxs, expert_grads) = self.expert.backward(&state.eb, &dys_in)?;
         pool.give_tensor(ROLE_COT, dys_in);
+        let gate_synced = self.finish_gate_sync(comm, gate_sync, &mut dwg, &mut dbg)?;
 
         // streamed return of input cotangents
         let mut ret = state.eb.split_outputs_pooled(&dxs, &mut pool, ROLE_WIRE)?;
@@ -1123,11 +1211,11 @@ impl DistMoeLayer {
         let mut dx_packed =
             pool.take_tensor_filled(ROLE_PACKED, &[self.nb * self.k, self.dm])?;
         copied += plan.unpack_returned_into(&back, self.dm, &mut dx_packed)? as u64;
-        pool.give_all(ROLE_WIRE, back);
+        self.repool_wire(comm, &mut pool, back);
         counters.add("moe_copy_bytes", copied);
         self.scatter_transpose(plan, &dx_packed, &mut dx);
         pool.give_tensor(ROLE_PACKED, dx_packed);
-        Ok(LayerGrads { dx, dwg, dbg, expert: expert_grads })
+        Ok(LayerGrads { dx, dwg, dbg, expert: expert_grads, gate_synced })
     }
 }
 

@@ -16,7 +16,14 @@
 //! * [`GradSync`] — the heterogeneity-aware synchronisation module of
 //!   §3.2: parameters tagged `world` / `data_parallel` are averaged over
 //!   their groups, `none` (expert shards) are left alone in sharded
-//!   mode.
+//!   mode.  With `[comm] grad_overlap` the sync runs *bucketed and
+//!   nonblocking* ([`Comm::all_reduce_start`]): tag-homogeneous runs of
+//!   whole tensors form buckets of `[comm] bucket_kb`, every bucket's
+//!   first ring round is on the wire before anything blocks, and
+//!   [`GradSync::start_bucket`] / [`GradSync::finish_bucket`] let the
+//!   trainers overlap completion with backward compute and host Adam.
+//!   Tensors are never split across buckets, so overlapped results are
+//!   bit-identical to the blocking per-tensor rings.
 
 mod dist_moe;
 mod trainer;
@@ -24,7 +31,8 @@ mod trainer;
 pub use dist_moe::{DistMoeLayer, LayerGrads, MoeLayerBuilder, MoeLayerState};
 pub use trainer::{DistTrainer, MoeLayerTrainer, MoeStepStats, StepStats, Trainer};
 
-use crate::comm::Comm;
+use crate::comm::{Comm, PendingAllReduce};
+use crate::config::CommConfig;
 use crate::error::Result;
 use crate::runtime::SyncTag;
 use crate::tensor::TensorF32;
@@ -41,17 +49,206 @@ pub enum ExpertMode {
     Replicated,
 }
 
+/// How one gradient bucket is synchronised.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BucketScope {
+    /// Ring all-reduce over all ranks (bucketed + nonblocking in
+    /// overlapped mode).
+    World,
+    /// Subgroup all-reduce over `dp_group` — completed at launch time
+    /// (the gather-based subgroup reduction has no decomposed form).
+    Group,
+    /// No synchronisation (sharded expert grads are already final).
+    Local,
+}
+
+/// One bucket of the overlapped sync plan: a run of whole,
+/// consecutively-indexed tensors sharing a [`BucketScope`].
+#[derive(Clone, Debug)]
+pub struct GradBucket {
+    pub indices: Vec<usize>,
+    pub scope: BucketScope,
+}
+
 /// Tag-aware gradient synchroniser (the paper's customised DDP).
 pub struct GradSync {
     /// Ranks of this worker's data-parallel group (must include self).
     pub dp_group: Vec<usize>,
     pub mode: ExpertMode,
+    /// Bucketed nonblocking sync (`[comm] grad_overlap`); the blocking
+    /// per-tensor rings otherwise.  Results are bit-identical.
+    pub overlap: bool,
+    /// Target bucket payload in bytes (`[comm] bucket_kb`); tensors
+    /// are never split, so a bucket is a run of whole tensors.
+    pub bucket_bytes: usize,
 }
 
 impl GradSync {
-    /// Everyone in one DP group (pure data/expert parallelism).
+    /// Everyone in one DP group (pure data/expert parallelism),
+    /// blocking sync — the seed schedule.
     pub fn world(size: usize, mode: ExpertMode) -> GradSync {
-        GradSync { dp_group: (0..size).collect(), mode }
+        GradSync {
+            dp_group: (0..size).collect(),
+            mode,
+            overlap: false,
+            bucket_bytes: CommConfig::default().bucket_kb * 1024,
+        }
+    }
+
+    /// Adopt the `[comm]` section's grad-sync knobs.
+    pub fn comm_config(mut self, cfg: &CommConfig) -> GradSync {
+        self.overlap = cfg.grad_overlap;
+        self.bucket_bytes = cfg.bucket_kb.max(1) * 1024;
+        self
+    }
+
+    fn scope_of(&self, tag: SyncTag, world: usize) -> BucketScope {
+        match tag {
+            SyncTag::World => BucketScope::World,
+            SyncTag::DataParallel => {
+                if self.dp_group.len() == world {
+                    BucketScope::World
+                } else if self.dp_group.len() > 1 {
+                    BucketScope::Group
+                } else {
+                    BucketScope::Local
+                }
+            }
+            SyncTag::None => match self.mode {
+                ExpertMode::Sharded => BucketScope::Local,
+                ExpertMode::Replicated => BucketScope::World,
+            },
+        }
+    }
+
+    /// Partition the gradient list into buckets: consecutive same-scope
+    /// tensors group together, `World` runs splitting at
+    /// [`GradSync::bucket_bytes`].  The plan covers every index exactly
+    /// once, in order — the overlapped trainer steps the optimiser
+    /// bucket by bucket against it.
+    pub fn plan(
+        &self,
+        grads: &[TensorF32],
+        tags: &[SyncTag],
+        world: usize,
+    ) -> Vec<GradBucket> {
+        assert_eq!(grads.len(), tags.len());
+        let mut out: Vec<GradBucket> = Vec::new();
+        let mut bytes = 0usize;
+        for (i, &tag) in tags.iter().enumerate() {
+            let scope = self.scope_of(tag, world);
+            let sz = grads[i].data.len() * 4;
+            let split = match out.last() {
+                Some(b) if b.scope == scope => {
+                    scope == BucketScope::World && bytes + sz > self.bucket_bytes
+                }
+                _ => true,
+            };
+            if split {
+                out.push(GradBucket { indices: Vec::new(), scope });
+                bytes = 0;
+            }
+            out.last_mut().expect("bucket pushed").indices.push(i);
+            bytes += sz;
+        }
+        out
+    }
+
+    /// Launch one bucket: `World` buckets take the tensors' buffers and
+    /// start their nonblocking rings (round-0 frames depart before this
+    /// returns); `Group` buckets run the blocking subgroup reduction on
+    /// the spot (and scale); `Local` buckets do nothing.
+    pub fn start_bucket(
+        &self,
+        comm: &mut impl Comm,
+        grads: &mut [TensorF32],
+        bucket: &GradBucket,
+    ) -> Result<Option<PendingAllReduce>> {
+        match bucket.scope {
+            BucketScope::Local => Ok(None),
+            BucketScope::Group => {
+                let scale = 1.0 / self.dp_group.len() as f32;
+                for &i in &bucket.indices {
+                    comm.all_reduce_sum_group(&mut grads[i].data, &self.dp_group)?;
+                    for x in grads[i].data.iter_mut() {
+                        *x *= scale;
+                    }
+                }
+                Ok(None)
+            }
+            BucketScope::World => {
+                let bufs: Vec<Vec<f32>> = bucket
+                    .indices
+                    .iter()
+                    .map(|&i| std::mem::take(&mut grads[i].data))
+                    .collect();
+                Ok(Some(comm.all_reduce_start(bufs)?))
+            }
+        }
+    }
+
+    /// Complete a launched bucket: drive its rings to completion, scale
+    /// by the world size and hand the buffers back to the tensors.
+    pub fn finish_bucket(
+        &self,
+        comm: &mut impl Comm,
+        grads: &mut [TensorF32],
+        bucket: &GradBucket,
+        pending: Option<PendingAllReduce>,
+    ) -> Result<()> {
+        let Some(pending) = pending else { return Ok(()) };
+        let bufs = pending.finish(comm)?;
+        let world = comm.size();
+        let scale = 1.0 / world as f32;
+        for (&i, buf) in bucket.indices.iter().zip(bufs) {
+            grads[i].data = buf;
+            if world > 1 {
+                for x in grads[i].data.iter_mut() {
+                    *x *= scale;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The one copy of the overlapped launch/complete protocol: plan,
+    /// launch **every** bucket (so all round-0 frames share the wire),
+    /// then complete buckets in plan order — the order every rank must
+    /// share (see [`crate::comm::PendingAllReduce::wait_bucket`]) —
+    /// invoking `synced` after each bucket's grads land.  The hook is
+    /// where `DistTrainer` runs host Adam on the synced slice while
+    /// later buckets' current rounds are still in flight; plain
+    /// [`GradSync::sync`] passes a no-op.
+    pub fn sync_overlapped(
+        &self,
+        comm: &mut impl Comm,
+        grads: &mut [TensorF32],
+        tags: &[SyncTag],
+        mut synced: impl FnMut(&GradBucket, &[TensorF32]) -> Result<()>,
+    ) -> Result<()> {
+        let buckets = self.plan(grads, tags, comm.size());
+        // Every World ring launches before anything blocks — a Group
+        // bucket's subgroup reduction is a blocking gather, and running
+        // it first would keep later rings off the wire.  Two passes in
+        // the same order on every rank keep the protocol in lockstep;
+        // reordering is value-safe because tensors are independent.
+        let mut pend = Vec::with_capacity(buckets.len());
+        for b in &buckets {
+            pend.push(match b.scope {
+                BucketScope::World => self.start_bucket(comm, grads, b)?,
+                _ => None,
+            });
+        }
+        for b in &buckets {
+            if b.scope != BucketScope::World {
+                self.start_bucket(comm, grads, b)?;
+            }
+        }
+        for (b, p) in buckets.iter().zip(pend) {
+            self.finish_bucket(comm, grads, b, p)?;
+            synced(b, grads)?;
+        }
+        Ok(())
     }
 
     /// Average gradients according to their tags.
@@ -59,6 +256,11 @@ impl GradSync {
     /// * `world` — all-reduce over **all** ranks.
     /// * `data_parallel` — all-reduce over `dp_group`.
     /// * `none` — skipped (Sharded) or treated as `world` (Replicated).
+    ///
+    /// In overlapped mode every bucket is launched before the first is
+    /// completed, so all round-0 frames share the wire; the result is
+    /// bit-identical to the blocking path (same per-tensor rings, same
+    /// scale).
     pub fn sync(
         &self,
         comm: &mut impl Comm,
@@ -66,6 +268,9 @@ impl GradSync {
         tags: &[SyncTag],
     ) -> Result<()> {
         assert_eq!(grads.len(), tags.len());
+        if self.overlap && comm.size() > 1 {
+            return self.sync_overlapped(comm, grads, tags, |_, _| Ok(()));
+        }
         let world: Vec<usize> = (0..comm.size()).collect();
         for (g, &tag) in grads.iter_mut().zip(tags) {
             let group: Option<&[usize]> = match tag {
@@ -112,7 +317,8 @@ mod tests {
             let tags = [World, DataParallel, None];
             // dp groups: {0,1} and {2,3}
             let dp = if h.rank() < 2 { vec![0, 1] } else { vec![2, 3] };
-            let sync = GradSync { dp_group: dp, mode: ExpertMode::Sharded };
+            let mut sync = GradSync::world(4, ExpertMode::Sharded);
+            sync.dp_group = dp;
             sync.sync(&mut h, &mut grads, &tags)?;
             Ok((h.rank(), grads))
         })
@@ -139,5 +345,77 @@ mod tests {
         })
         .unwrap();
         assert_eq!(got, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn bucket_plan_groups_by_scope_and_bytes() {
+        let mut sync = GradSync::world(4, ExpertMode::Sharded);
+        sync.bucket_bytes = 56; // 14 floats: two 6-float tensors fit, not three
+        sync.dp_group = vec![0, 1];
+        let grads: Vec<TensorF32> = [6usize, 6, 6, 3, 2, 20, 1]
+            .iter()
+            .map(|&n| TensorF32::zeros(&[n]))
+            .collect();
+        let tags = [World, World, World, None, DataParallel, World, World];
+        let buckets = sync.plan(&grads, &tags, 4);
+        // world run 0..3 splits at the 56-byte budget: [0,1] then [2]
+        assert_eq!(buckets[0].indices, vec![0, 1]);
+        assert_eq!(buckets[0].scope, BucketScope::World);
+        assert_eq!(buckets[1].indices, vec![2]);
+        // sharded `none` is local, subgroup dp is its own scope
+        assert_eq!(buckets[2].indices, vec![3]);
+        assert_eq!(buckets[2].scope, BucketScope::Local);
+        assert_eq!(buckets[3].indices, vec![4]);
+        assert_eq!(buckets[3].scope, BucketScope::Group);
+        // an over-budget tensor gets its own bucket; the tail follows
+        assert_eq!(buckets[4].indices, vec![5]);
+        assert_eq!(buckets[5].indices, vec![6]);
+        // the plan covers every index exactly once, in order
+        let all: Vec<usize> = buckets.iter().flat_map(|b| b.indices.clone()).collect();
+        assert_eq!(all, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn overlapped_sync_matches_blocking_bitwise() {
+        for mode in [ExpertMode::Sharded, ExpertMode::Replicated] {
+            let got = run_workers(4, move |mut h| {
+                let r = h.rank();
+                // irrational-ish values so addition order shows in bits
+                let mk = |n: usize, s: u64| {
+                    TensorF32::from_vec(
+                        &[n],
+                        (0..n)
+                            .map(|i| {
+                                ((r as u64 * 31 + s * 7 + i as u64) % 97) as f32 * 0.013
+                                    - 0.4
+                            })
+                            .collect(),
+                    )
+                    .unwrap()
+                };
+                let grads: Vec<TensorF32> =
+                    vec![mk(130, 1), mk(7, 2), mk(64, 3), mk(3, 4), mk(200, 5)];
+                let tags = [World, None, DataParallel, World, World];
+                let dp = if r < 2 { vec![0, 1] } else { vec![2, 3] };
+                let mut blocking = GradSync::world(4, mode);
+                blocking.dp_group = dp.clone();
+                let mut overlapped = GradSync::world(4, mode);
+                overlapped.dp_group = dp;
+                overlapped.overlap = true;
+                overlapped.bucket_bytes = 256; // force several world buckets
+                let mut a = grads.clone();
+                blocking.sync(&mut h, &mut a, &tags)?;
+                let mut b = grads;
+                overlapped.sync(&mut h, &mut b, &tags)?;
+                for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                    assert_eq!(
+                        x.data, y.data,
+                        "mode {mode:?} tensor {i}: overlapped sync changed bits"
+                    );
+                }
+                Ok(())
+            });
+            got.unwrap();
+        }
     }
 }

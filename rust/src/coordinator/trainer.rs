@@ -13,6 +13,7 @@ use std::sync::Arc;
 
 use super::{DistMoeLayer, ExpertMode, GradSync};
 use crate::comm::Comm;
+use crate::config::CommConfig;
 use crate::data::Batch;
 use crate::error::{Error, Result};
 use crate::metrics::Counters;
@@ -138,6 +139,21 @@ impl DistTrainer {
         workers: usize,
         lr: f32,
     ) -> Result<DistTrainer> {
+        Self::with_comm(rt, model, seed, workers, lr, &CommConfig::default())
+    }
+
+    /// [`DistTrainer::new`] with the `[comm]` section's gradient-sync
+    /// knobs: `grad_overlap` switches the step to the bucketed
+    /// nonblocking all-reduce pipelined against host Adam, `bucket_kb`
+    /// sizes the buckets.  Parameters stay bit-identical either way.
+    pub fn with_comm(
+        rt: &Runtime,
+        model: &str,
+        seed: u64,
+        workers: usize,
+        lr: f32,
+        comm_cfg: &CommConfig,
+    ) -> Result<DistTrainer> {
         let entry = rt.manifest.model(model)?.clone();
         let params = ParamStore::init(&entry, seed)?;
         let opt = Adam::new(&params.tensors, lr);
@@ -145,7 +161,7 @@ impl DistTrainer {
         // In this fused-graph emulation every worker holds all experts,
         // so expert grads are averaged (mathematically identical to one
         // global expert fed all routed tokens — see coordinator docs).
-        let sync = GradSync::world(workers, ExpertMode::Replicated);
+        let sync = GradSync::world(workers, ExpertMode::Replicated).comm_config(comm_cfg);
         Ok(DistTrainer { entry, params, opt, grad_exe, sync, step: 0 })
     }
 
@@ -169,10 +185,25 @@ impl DistTrainer {
 
         // tag-aware gradient synchronisation (the paper's §3.2 module)
         let tags: Vec<_> = self.params.entries.iter().map(|e| e.tag).collect();
-        self.sync.sync(comm, &mut grads, &tags)?;
-
-        // host Adam (bit-compatible with the fused in-graph update)
-        self.opt.update(&mut self.params.tensors, &grads)?;
+        if self.sync.overlap && comm.size() > 1 {
+            // Overlapped: the shared launch/complete protocol, with
+            // host Adam as the per-bucket hook — while bucket i's
+            // parameters step, each later bucket has its current ring
+            // round in flight (rounds advance inside the waits, one
+            // outstanding round per bucket).
+            self.opt.begin_step();
+            let (opt, params) = (&mut self.opt, &mut self.params);
+            self.sync.sync_overlapped(comm, &mut grads, &tags, |b, grads| {
+                for &i in &b.indices {
+                    opt.update_slot(i, &mut params.tensors[i], &grads[i])?;
+                }
+                Ok(())
+            })?;
+        } else {
+            self.sync.sync(comm, &mut grads, &tags)?;
+            // host Adam (bit-compatible with the fused in-graph update)
+            self.opt.update(&mut self.params.tensors, &grads)?;
+        }
 
         // global mean loss for logging
         let mut loss_buf = vec![local_loss];
@@ -246,9 +277,12 @@ impl MoeLayerTrainer {
         // Gate params are replicated (tag: world): average their grads
         // across workers before stepping, or the replicas diverge.
         // Expert shards are `none`-tagged — each shard already saw every
-        // token routed to it, so its local grads are final.
+        // token routed to it, so its local grads are final.  With
+        // `[comm] grad_overlap` the backward already flew the gate-grad
+        // bucket during the expert backward (`grads.gate_synced`) —
+        // same rings, same scale, bit-identical result.
         let ws = comm.size();
-        if ws > 1 {
+        if ws > 1 && !grads.gate_synced {
             comm.all_reduce_sum(&mut grads.dwg.data)?;
             comm.all_reduce_sum(&mut grads.dbg.data)?;
             let scale = 1.0 / ws as f32;

@@ -35,14 +35,14 @@ fn main() {
         commands: vec![
             ("info", "print artifact and model inventory"),
             ("train", "single-worker fused training loop (Figure 7)"),
-            ("dist-train", "multi-worker training with tag-aware grad sync"),
-            ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk, --overlap --chunks N [0=adaptive] --no-pool --progress)"),
+            ("dist-train", "multi-worker training with tag-aware grad sync (--grad-overlap --bucket-kb N)"),
+            ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk, --overlap --chunks N [0=adaptive] --no-pool --progress --grad-overlap)"),
             ("fmoefy", "Listing-1: dense config -> MoE config at equal FLOPs"),
         ],
     };
     let args = match Args::from_env(&[
         "verbose", "moe", "dense", "overlap", "no-overlap", "no-pool", "progress",
-        "no-progress",
+        "no-progress", "grad-overlap", "no-grad-overlap",
     ]) {
         Ok(a) => a,
         Err(e) => {
@@ -172,14 +172,25 @@ fn train(args: &Args) -> Result<()> {
 fn dist_train(args: &Args) -> Result<()> {
     let cfg = train_config(args)?;
     let workers = args.usize_or("workers", 2)?;
+    let comm_cfg = CommConfig::from_args(args)?;
     let rt = Arc::new(Runtime::open_default()?);
-    println!("dist-train: {} workers, model {}, {} steps", workers, cfg.model, cfg.steps);
+    println!(
+        "dist-train: {} workers, model {}, {} steps, grad sync {}",
+        workers,
+        cfg.model,
+        cfg.steps,
+        if comm_cfg.grad_overlap {
+            format!("overlapped ({} KiB buckets)", comm_cfg.bucket_kb)
+        } else {
+            "blocking".into()
+        }
+    );
     let model = cfg.model.clone();
     let steps = cfg.steps;
     let lr = cfg.lr as f32;
     let seed = cfg.seed;
     let losses = comm::run_workers(workers, move |mut h| {
-        let mut tr = DistTrainer::new(&rt, &model, seed, workers, lr)?;
+        let mut tr = DistTrainer::with_comm(&rt, &model, seed, workers, lr, &comm_cfg)?;
         let vocab = tr.entry.config_usize("vocab").unwrap_or(256);
         let seq = tr.entry.config_usize("seq").unwrap_or(128);
         let batch = tr.entry.config_usize("batch").unwrap_or(4);
@@ -226,6 +237,7 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
             "--noise-std".into(), moe_cfg.noise_std.to_string(),
             "--balance-coef".into(), moe_cfg.balance_coef.to_string(),
             "--chunks".into(), comm_cfg.chunks.to_string(),
+            "--bucket-kb".into(), comm_cfg.bucket_kb.to_string(),
         ];
         if comm_cfg.overlap {
             argv.push("--overlap".into());
@@ -235,6 +247,9 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
         }
         if comm_cfg.progress {
             argv.push("--progress".into());
+        }
+        if comm_cfg.grad_overlap {
+            argv.push("--grad-overlap".into());
         }
         children.push(std::process::Command::new(&exe).args(&argv).spawn()?);
     }

@@ -50,30 +50,58 @@ impl Adam {
         if params.len() != self.m.len() || grads.len() != self.m.len() {
             return Err(Error::Shape("adam arity".into()));
         }
+        self.begin_step();
+        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            self.update_slot(i, p, g)?;
+        }
+        Ok(())
+    }
+
+    /// Advance the shared step counter: every [`Adam::update_slot`]
+    /// call until the next `begin_step` applies this step's bias
+    /// correction.  `update` / `update_refs` call it internally — use
+    /// it directly only when stepping disjoint parameter subsets as
+    /// their gradient buckets complete (the overlapped trainer path),
+    /// making sure each slot is updated exactly once per step.
+    pub fn begin_step(&mut self) {
         self.step += 1;
+    }
+
+    /// Update one parameter slot under the current step — bit-identical
+    /// to the same slot's update inside [`Adam::update_refs`].
+    pub fn update_slot(
+        &mut self,
+        slot: usize,
+        p: &mut TensorF32,
+        g: &TensorF32,
+    ) -> Result<()> {
+        if slot >= self.m.len() {
+            return Err(Error::Shape(format!(
+                "adam: slot {slot} of {}",
+                self.m.len()
+            )));
+        }
+        if self.step == 0 {
+            return Err(Error::Shape("adam: update_slot before begin_step".into()));
+        }
+        if p.shape != g.shape {
+            return Err(Error::Shape(format!(
+                "adam: param {:?} vs grad {:?}",
+                p.shape, g.shape
+            )));
+        }
         let t = self.step as f32;
         let bc1 = 1.0 - B1.powf(t);
         let bc2 = 1.0 - B2.powf(t);
-        for ((p, g), (m, v)) in params
-            .iter_mut()
-            .zip(grads)
-            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
-        {
-            if p.shape != g.shape {
-                return Err(Error::Shape(format!(
-                    "adam: param {:?} vs grad {:?}",
-                    p.shape, g.shape
-                )));
-            }
-            for i in 0..p.data.len() {
-                let gi = g.data[i];
-                m.data[i] = B1 * m.data[i] + (1.0 - B1) * gi;
-                v.data[i] = B2 * v.data[i] + (1.0 - B2) * gi * gi;
-                let mhat = m.data[i] / bc1;
-                let vhat = v.data[i] / bc2;
-                p.data[i] -= self.lr
-                    * (mhat / (vhat.sqrt() + EPS) + self.weight_decay * p.data[i]);
-            }
+        let (m, v) = (&mut self.m[slot], &mut self.v[slot]);
+        for i in 0..p.data.len() {
+            let gi = g.data[i];
+            m.data[i] = B1 * m.data[i] + (1.0 - B1) * gi;
+            v.data[i] = B2 * v.data[i] + (1.0 - B2) * gi * gi;
+            let mhat = m.data[i] / bc1;
+            let vhat = v.data[i] / bc2;
+            p.data[i] -=
+                self.lr * (mhat / (vhat.sqrt() + EPS) + self.weight_decay * p.data[i]);
         }
         Ok(())
     }
@@ -130,6 +158,43 @@ mod tests {
         assert_eq!(pa[0].data, pb[0].data);
         assert_eq!(pa[1].data, pb[1].data);
         assert_eq!(oa.step, ob.step);
+    }
+
+    #[test]
+    fn slotwise_update_matches_update_bitwise() {
+        // the overlapped trainer steps buckets out of order as they
+        // complete — per-slot updates under one begin_step must be
+        // bit-identical to the all-at-once update
+        let mut pa = vec![
+            TensorF32::from_vec(&[2], vec![1.0, -2.0]).unwrap(),
+            TensorF32::from_vec(&[3], vec![0.5, 0.0, -0.5]).unwrap(),
+            TensorF32::from_vec(&[1], vec![4.0]).unwrap(),
+        ];
+        let mut pb = pa.clone();
+        let g = vec![
+            TensorF32::from_vec(&[2], vec![0.5, -0.25]).unwrap(),
+            TensorF32::from_vec(&[3], vec![-0.1, 0.2, 0.3]).unwrap(),
+            TensorF32::from_vec(&[1], vec![-1.0]).unwrap(),
+        ];
+        let mut oa = Adam::new(&pa, 0.05);
+        let mut ob = oa.clone();
+        for _ in 0..3 {
+            oa.update(&mut pa, &g).unwrap();
+            ob.begin_step();
+            // buckets complete out of order
+            for i in [2usize, 0, 1] {
+                ob.update_slot(i, &mut pb[i], &g[i]).unwrap();
+            }
+        }
+        for (a, b) in pa.iter().zip(&pb) {
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(oa.step, ob.step);
+        // guard rails
+        let mut fresh = Adam::new(&pa, 0.05);
+        assert!(fresh.update_slot(0, &mut pa[0], &g[0]).is_err(), "no begin_step");
+        fresh.begin_step();
+        assert!(fresh.update_slot(9, &mut pa[0], &g[0]).is_err(), "slot range");
     }
 
     #[test]

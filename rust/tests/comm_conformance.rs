@@ -10,6 +10,11 @@
 //! * nonblocking request handles (`isend`/`irecv`/`wait_all`)
 //! * the decomposed all-to-all (`all_to_all_v_start`, arrivals
 //!   consumed in any order)
+//! * the bucketed nonblocking all-reduce (`all_reduce_start`): a
+//!   bucket-count × payload (empty / ragged / large / non-divisible)
+//!   matrix asserting **bitwise** equality with the blocking ring,
+//!   completed both in order (`finish`) and in reverse bucket order
+//!   (`wait_bucket`)
 //! * both barrier algorithms (dissemination + legacy empty a2a)
 //!
 //! The TCP backend additionally runs the whole matrix under its
@@ -33,6 +38,7 @@ fn conformance_suite<C: Comm>(h: &mut C) -> Result<()> {
     subgroup_all_reduce(h)?;
     request_handles(h)?;
     decomposed_a2a(h)?;
+    bucketed_all_reduce(h)?;
     barrier_variants(h)?;
     Ok(())
 }
@@ -147,6 +153,52 @@ fn decomposed_a2a<C: Comm>(h: &mut C) -> Result<()> {
         assert_eq!(pending.expected(p), p + r);
         let buf = pending.wait_peer(h, p)?;
         assert_eq!(buf, vec![(p * 10 + r) as f32; p + r]);
+    }
+    Ok(())
+}
+
+fn bucketed_all_reduce<C: Comm>(h: &mut C) -> Result<()> {
+    let r = h.rank();
+    // bucket-count × payload matrix: single bucket, an empty bucket,
+    // ragged sizes (incl. lengths not divisible by the worker count),
+    // many small buckets, one large payload through the framing layer
+    let sets: &[&[usize]] = &[
+        &[4],
+        &[0],
+        &[7, 0, 129],
+        &[1, 3, 2, 5, 8],
+        &[60_000],
+    ];
+    for (si, lens) in sets.iter().enumerate() {
+        // values whose sum depends on addition order, so a bitwise
+        // match really pins the ring's reduction order
+        let bufs: Vec<Vec<f32>> = lens
+            .iter()
+            .enumerate()
+            .map(|(b, &l)| {
+                (0..l)
+                    .map(|i| {
+                        (r + 1) as f32 * 1.1
+                            + b as f32 * 0.3
+                            + (i % 17) as f32 * 0.013
+                            + si as f32 * 0.07
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut want = bufs.clone();
+        for w in want.iter_mut() {
+            h.all_reduce_sum(w)?;
+        }
+        // completed all at once, rings progressing concurrently
+        let pending = h.all_reduce_start(bufs.clone())?;
+        let got = pending.finish(h)?;
+        assert_eq!(got, want, "set {si}: finish != blocking ring");
+        // completed bucket-by-bucket in reverse order
+        let mut pending = h.all_reduce_start(bufs)?;
+        for b in (0..lens.len()).rev() {
+            assert_eq!(pending.wait_bucket(h, b)?, want[b], "set {si} bucket {b}");
+        }
     }
     Ok(())
 }

@@ -3,6 +3,7 @@
 
 use std::sync::Arc;
 
+use fastmoe::comm::tcp::TcpGroup;
 use fastmoe::comm::{run_workers, Comm};
 use fastmoe::error::Error;
 use fastmoe::moe::bucket_for;
@@ -76,6 +77,69 @@ fn bucket_overflow_is_actionable_error() {
     let err = bucket_for(5000, &[64, 128]).unwrap_err();
     let msg = err.to_string();
     assert!(msg.contains("5000") && msg.contains("aot.py"), "{msg}");
+}
+
+#[test]
+fn worker_death_mid_bucketed_sync_is_contained() {
+    // A worker dying while its peers run the bucketed nonblocking
+    // all-reduce must surface as a typed error on the survivors (the
+    // thread backend's death-aware receives), contained by run_workers
+    // as Error::Worker — never a deadlock in the ring.
+    let res = run_workers(4, |mut h| {
+        if h.rank() == 2 {
+            return Err(Error::msg("injected death"));
+        }
+        let bufs: Vec<Vec<f32>> =
+            (0..3).map(|b| vec![h.rank() as f32 + b as f32; 129]).collect();
+        // survivors keep syncing until the dead ring edge surfaces
+        for _ in 0..8 {
+            let pending = h.all_reduce_start(bufs.clone())?;
+            let _ = pending.finish(&mut h)?;
+        }
+        Ok(())
+    });
+    match res {
+        Err(Error::Worker { .. }) => {}
+        other => panic!("expected contained worker failure, got {other:?}"),
+    }
+}
+
+#[test]
+fn tcp_worker_death_mid_bucketed_sync_errors_survivors() {
+    // Same failure over real sockets with the progress engine: the
+    // dead peer's reader marks the connection closed, and survivors'
+    // bucketed sync errors out instead of hanging.
+    const WORKERS: usize = 3;
+    let joins: Vec<_> = (0..WORKERS)
+        .map(|rank| {
+            std::thread::spawn(move || {
+                let mut g = TcpGroup::connect_local(rank, WORKERS, 47870).unwrap();
+                if rank == 1 {
+                    // connect (the mesh needs every rank), then die
+                    return true;
+                }
+                g.enable_progress();
+                let bufs: Vec<Vec<f32>> =
+                    (0..2).map(|b| vec![rank as f32 + b as f32; 65]).collect();
+                for _ in 0..4 {
+                    let pending = match g.all_reduce_start(bufs.clone()) {
+                        Ok(p) => p,
+                        Err(_) => return true, // send into the closed socket
+                    };
+                    if pending.finish(&mut g).is_err() {
+                        return true;
+                    }
+                }
+                false
+            })
+        })
+        .collect();
+    for (rank, j) in joins.into_iter().enumerate() {
+        assert!(
+            j.join().unwrap(),
+            "rank {rank}: survivor completed a sync through a dead peer"
+        );
+    }
 }
 
 #[test]

@@ -1,17 +1,280 @@
 //! The two training ABIs must agree: the fused in-graph train step
 //! (tokens→new params, Adam inside XLA) and the distributed path
 //! (grad_step artifact + GradSync + host Adam) are the same math.
+//!
+//! The PR-4 suite additionally pins the *overlapped* gradient sync
+//! (`[comm] grad_overlap`: bucketed nonblocking all-reduce) to be
+//! **bit-identical** to blocking — at the `GradSync` level over both
+//! comm backends and bucket sizes (runs without artifacts), and at the
+//! trainer level for `DistTrainer` (bucket completions pipelined
+//! against host Adam) and `MoeLayerTrainer` (the gate-grad bucket
+//! flying during the expert backward) when artifacts are present.
 
 use std::sync::Arc;
 
+use fastmoe::comm::tcp::TcpGroup;
 use fastmoe::comm::{run_workers, Comm};
-use fastmoe::coordinator::{DistTrainer, Trainer};
+use fastmoe::config::CommConfig;
+use fastmoe::coordinator::{
+    DistTrainer, ExpertMode, GradSync, MoeLayerBuilder, MoeLayerTrainer, Trainer,
+};
 use fastmoe::data::{BatchIter, Corpus};
-use fastmoe::runtime::Runtime;
-use fastmoe::tensor::ops;
+use fastmoe::metrics::Counters;
+use fastmoe::rng::Rng;
+use fastmoe::runtime::{Runtime, SyncTag};
+use fastmoe::tensor::{ops, TensorF32};
 
 fn runtime() -> Option<Arc<Runtime>> {
     Runtime::open_default().ok().map(Arc::new)
+}
+
+/// Synthetic per-rank gradient set whose sums are order-sensitive.
+fn synth_grads(rank: usize) -> Vec<TensorF32> {
+    [130usize, 7, 64, 3, 200, 1]
+        .iter()
+        .enumerate()
+        .map(|(t, &n)| {
+            TensorF32::from_vec(
+                &[n],
+                (0..n)
+                    .map(|i| {
+                        ((rank * 31 + t * 7 + i) % 97) as f32 * 0.013 - 0.4
+                    })
+                    .collect(),
+            )
+            .unwrap()
+        })
+        .collect()
+}
+
+const SYNTH_TAGS: [SyncTag; 6] = [
+    SyncTag::World,
+    SyncTag::None,
+    SyncTag::World,
+    SyncTag::DataParallel,
+    SyncTag::World,
+    SyncTag::World,
+];
+
+/// Blocking vs overlapped `GradSync` on one comm handle, asserting
+/// bitwise equality per tensor, across modes and bucket sizes.
+fn sync_equivalence_case(h: &mut impl Comm) -> fastmoe::Result<()> {
+    let grads = synth_grads(h.rank());
+    for mode in [ExpertMode::Sharded, ExpertMode::Replicated] {
+        for bucket_bytes in [4usize, 256, 1 << 20] {
+            let blocking = GradSync::world(h.size(), mode);
+            let mut overlapped = GradSync::world(h.size(), mode);
+            overlapped.overlap = true;
+            overlapped.bucket_bytes = bucket_bytes;
+            let mut a = grads.clone();
+            blocking.sync(h, &mut a, &SYNTH_TAGS)?;
+            let mut b = grads.clone();
+            overlapped.sync(h, &mut b, &SYNTH_TAGS)?;
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(
+                    x.data, y.data,
+                    "mode {mode:?} bucket_bytes {bucket_bytes} tensor {i}: \
+                     overlapped grad sync changed bits"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn overlapped_grad_sync_bitwise_thread_backend() {
+    run_workers(4, |mut h| sync_equivalence_case(&mut h)).unwrap();
+}
+
+#[test]
+fn overlapped_grad_sync_bitwise_tcp_backend() {
+    // once over plain sockets, once with the progress engine draining
+    for (port, progress) in [(47850u16, false), (47860u16, true)] {
+        let joins: Vec<_> = (0..3)
+            .map(|rank| {
+                std::thread::spawn(move || {
+                    let mut g = TcpGroup::connect_local(rank, 3, port).unwrap();
+                    if progress {
+                        g.enable_progress();
+                    }
+                    sync_equivalence_case(&mut g).unwrap();
+                    g.barrier().unwrap();
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+}
+
+#[test]
+fn overlapped_grad_sync_bit_identical_dist_trainer() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let workers = 2;
+    let run = |grad_overlap: bool| {
+        let rt = rt.clone();
+        run_workers(workers, move |mut h| {
+            let comm_cfg = CommConfig {
+                grad_overlap,
+                bucket_kb: 1, // force many buckets
+                ..CommConfig::default()
+            };
+            let mut tr =
+                DistTrainer::with_comm(&rt, "gpt_moe", 5, workers, 1e-3, &comm_cfg)?;
+            let vocab = tr.entry.config_usize("vocab").unwrap();
+            let seq = tr.entry.config_usize("seq").unwrap();
+            let batch = tr.entry.config_usize("batch").unwrap();
+            let corpus = Corpus::synthetic(vocab, 100_000, 8);
+            let mut it = BatchIter::shard(&corpus, batch, seq, 14, h.rank());
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                losses.push(tr.train_step(&mut h, &it.next_batch())?);
+            }
+            Ok((losses, tr.params))
+        })
+        .unwrap()
+    };
+    let blocking = run(false);
+    let overlapped = run(true);
+    for rank in 0..workers {
+        let (bl, bp) = &blocking[rank];
+        let (ol, op) = &overlapped[rank];
+        assert_eq!(bl, ol, "rank {rank}: losses diverged");
+        for (i, (a, b)) in bp.tensors.iter().zip(&op.tensors).enumerate() {
+            assert_eq!(
+                a.data, b.data,
+                "rank {rank} param {i} (`{}`): overlapped grad sync \
+                 changed parameter bits",
+                bp.entries[i].name
+            );
+        }
+    }
+}
+
+/// `MoeLayerTrainer` step loop for one config; returns final params.
+fn moe_trainer_params(
+    rt: Arc<Runtime>,
+    workers: usize,
+    grad_overlap: bool,
+    overlap: bool,
+) -> Vec<Vec<Vec<f32>>> {
+    run_workers(workers, move |mut h| {
+        let layer = MoeLayerBuilder::new()
+            .seed(3)
+            .overlap(overlap)
+            .chunks(2)
+            .grad_overlap(grad_overlap)
+            .build(rt.clone(), workers, h.rank())?;
+        let mut tr = MoeLayerTrainer::new(layer, 1e-2);
+        let mut counters = Counters::new();
+        for step in 0..4 {
+            let mut x = TensorF32::zeros(&[tr.layer.nb, tr.layer.dm]);
+            Rng::new(50 + step * 7 + h.rank() as u64).fill_normal(&mut x.data, 1.0);
+            tr.train_step(&mut h, x, &mut counters)?;
+        }
+        Ok(tr
+            .layer
+            .params()
+            .into_iter()
+            .map(|(_, t)| t.data.clone())
+            .collect::<Vec<_>>())
+    })
+    .unwrap()
+}
+
+#[test]
+fn overlapped_gate_sync_bit_identical_moe_layer_trainer() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let workers = 2;
+    if rt
+        .manifest
+        .artifact(&format!("gate_fwd_w{workers}"))
+        .is_none()
+    {
+        return;
+    }
+    let blocking = moe_trainer_params(rt.clone(), workers, false, false);
+    // grad_overlap on, over both exchange schedules
+    for overlap in [false, true] {
+        let got = moe_trainer_params(rt.clone(), workers, true, overlap);
+        for rank in 0..workers {
+            for (i, (a, b)) in blocking[rank].iter().zip(&got[rank]).enumerate() {
+                assert_eq!(
+                    a, b,
+                    "rank {rank} slot {i} (exchange overlap {overlap}): \
+                     gate-grad overlap changed parameter bits"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn overlapped_gate_sync_bit_identical_over_tcp_progress() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let workers = 2;
+    if rt
+        .manifest
+        .artifact(&format!("gate_fwd_w{workers}"))
+        .is_none()
+    {
+        return;
+    }
+    // thread-backend blocking reference vs tcp + progress + overlap-on
+    let reference = moe_trainer_params(rt.clone(), workers, false, false);
+    let joins: Vec<_> = (0..workers)
+        .map(|rank| {
+            let rt = rt.clone();
+            std::thread::spawn(move || {
+                let mut g = TcpGroup::connect_local(rank, workers, 47890).unwrap();
+                g.enable_progress();
+                let layer = MoeLayerBuilder::new()
+                    .seed(3)
+                    .overlap(true)
+                    .chunks(2)
+                    .grad_overlap(true)
+                    .build(rt, workers, rank)
+                    .unwrap();
+                let mut tr = MoeLayerTrainer::new(layer, 1e-2);
+                let mut counters = Counters::new();
+                for step in 0..4 {
+                    let mut x = TensorF32::zeros(&[tr.layer.nb, tr.layer.dm]);
+                    Rng::new(50 + step * 7 + rank as u64).fill_normal(&mut x.data, 1.0);
+                    tr.train_step(&mut g, x, &mut counters).unwrap();
+                }
+                g.barrier().unwrap();
+                (
+                    rank,
+                    tr.layer
+                        .params()
+                        .into_iter()
+                        .map(|(_, t)| t.data.clone())
+                        .collect::<Vec<_>>(),
+                )
+            })
+        })
+        .collect();
+    for j in joins {
+        let (rank, params) = j.join().unwrap();
+        for (i, (a, b)) in reference[rank].iter().zip(&params).enumerate() {
+            assert_eq!(
+                a, b,
+                "rank {rank} slot {i}: tcp overlapped trainer diverged \
+                 from the thread-backend blocking reference"
+            );
+        }
+    }
 }
 
 #[test]

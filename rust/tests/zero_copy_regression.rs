@@ -13,7 +13,12 @@
 //!   overhead" double-copy is gone); backward copy volumes are equal;
 //! * **layer level, TCP backend** (runtime-gated) — the same
 //!   steady-state property over real sockets with the progress engine
-//!   draining arrivals.
+//!   draining arrivals;
+//! * **pooled TCP receive path** (no artifacts needed) — frame readers
+//!   draw payload buffers from the [`Comm::recycle`]-fed freelist, so
+//!   a caller that recycles consumed buffers makes steady-state frame
+//!   reads allocation-free (zero `recv_buffer_allocs` growth after
+//!   warm-up).
 
 use std::sync::Arc;
 
@@ -139,6 +144,48 @@ fn prop_chunk_bucket_never_exceeds_full_bucket() {
         )?;
         Ok(())
     });
+}
+
+#[test]
+fn tcp_receive_path_is_allocation_free_in_steady_state() {
+    // Lock-step ping-pong with fixed payloads: each side recycles every
+    // consumed frame, so after warm-up (two rounds bound the in-flight
+    // window) the readers never touch the allocator again.
+    let workers = 2usize;
+    let joins: Vec<_> = (0..workers)
+        .map(|rank| {
+            std::thread::spawn(move || {
+                let mut g = TcpGroup::connect_local(rank, workers, 47910).unwrap();
+                g.enable_progress();
+                let other = 1 - rank;
+                let mut baseline = 0u64;
+                for round in 0..8 {
+                    let tag = (g.next_seq() << 8) | 1;
+                    g.isend(other, tag, vec![rank as f32; 2048]).unwrap();
+                    let data = g.recv(other, tag).unwrap();
+                    assert_eq!(data.len(), 2048);
+                    // hand the consumed frame back to the readers
+                    assert!(
+                        g.recycle(vec![data]).is_empty(),
+                        "tcp must keep frames it handed out"
+                    );
+                    if round == 2 {
+                        baseline = g.recv_buffer_allocs();
+                    }
+                }
+                assert_eq!(
+                    g.recv_buffer_allocs(),
+                    baseline,
+                    "rank {rank}: steady-state receive path allocated"
+                );
+                assert!(g.recv_buffer_hits() > 0, "rank {rank}: freelist never used");
+                g.barrier().unwrap();
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
 }
 
 /// One config's per-rank step record.
@@ -277,6 +324,12 @@ fn layer_steady_state_tcp_backend_with_progress() {
                 }
                 g.barrier().unwrap();
                 assert!(g.progress_arrivals() > 0);
+                // the layer recycles consumed receive buffers into the
+                // backend's freelist, so the readers reuse them
+                assert!(
+                    g.recv_buffer_hits() > 0,
+                    "rank {rank}: receive freelist never used by the layer path"
+                );
             })
         })
         .collect();

@@ -1,12 +1,13 @@
 #!/usr/bin/env bash
 # Perf trajectory: run the sim-backed Figure-6 scaling bench and record
-# the result as BENCH_pr3.json at the repo root.
+# the result as BENCH_pr4.json at the repo root.
 #
 #   scripts/bench_report.sh            # default: 4 chunks, 4 iters
-#   CHUNKS=8 ITERS=8 scripts/bench_report.sh
+#   CHUNKS=8 ITERS=8 BUCKET_KB=256 scripts/bench_report.sh
 #
-# One bench invocation scores THREE schedules from the same measured
-# compute, exchange volume and host copy/alloc counters:
+# One bench invocation scores FOUR schedules from the same measured
+# compute, exchange volume, host copy/alloc counters and parameter
+# volume:
 #   * blocking              — wire + compute + host term
 #   * overlapped (PR 2)     — max(wire, compute) per chunk, with the
 #                             copy-heavy host term (per-chunk batches
@@ -17,6 +18,11 @@
 #                             landing, slice-view staging, pooled
 #                             buffers); the bench asserts it never
 #                             scores above the copy-heavy schedule
+#   * grad sync (PR 4)      — the trainer tail: blocking full-gradient
+#                             ring + host Adam vs the bucketed
+#                             nonblocking sync pipelined against
+#                             backward and Adam; the bench asserts
+#                             overlapped ≤ blocking at every point
 # so the comparison is apples-to-apples.  A second invocation actually
 # *exercises* the pipelined zero-copy layer path (--overlap) as a
 # correctness/perf sanity artifact under runs/.
@@ -25,6 +31,7 @@ set -euo pipefail
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 CHUNKS="${CHUNKS:-4}"
 ITERS="${ITERS:-4}"
+BUCKET_KB="${BUCKET_KB:-512}"
 
 cd "$ROOT/rust"
 
@@ -36,14 +43,15 @@ fi
 
 mkdir -p runs
 
-# 1. measured on the blocking path, scored all three ways → the PR record
+# 1. measured on the blocking path, scored all four ways → the PR record
 cargo bench --bench fig6_scale -- \
-    --iters "$ITERS" --chunks "$CHUNKS" --json "$ROOT/BENCH_pr3.json"
+    --iters "$ITERS" --chunks "$CHUNKS" --bucket-kb "$BUCKET_KB" \
+    --json "$ROOT/BENCH_pr4.json"
 
 # 2. measured on the zero-copy pipelined path (exercises chunked
 #    isend/irecv, slice-view staging, pools), kept as a side artifact
 cargo bench --bench fig6_scale -- \
-    --iters "$ITERS" --chunks "$CHUNKS" --overlap \
+    --iters "$ITERS" --chunks "$CHUNKS" --bucket-kb "$BUCKET_KB" --overlap \
     --json runs/fig6_overlap_measured.json
 
-echo "bench_report.sh: wrote $ROOT/BENCH_pr3.json (and runs/fig6_overlap_measured.json)"
+echo "bench_report.sh: wrote $ROOT/BENCH_pr4.json (and runs/fig6_overlap_measured.json)"

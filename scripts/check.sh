@@ -19,5 +19,11 @@ else
     cargo fmt --check
 fi
 cargo clippy --all-targets -- -D warnings
+# fast-fail on the protocol suites first (comm conformance incl. the
+# bucketed all-reduce matrix, trainer equivalence incl. overlapped
+# grad sync, failure injection incl. death mid-bucketed-sync, and the
+# zero-copy/pooled-receive regressions), then the full tier-1 run
+cargo test -q --test comm_conformance --test trainer_equivalence \
+    --test failure_injection --test zero_copy_regression
 cargo test -q
 echo "check.sh: all green"
