@@ -8,6 +8,8 @@
 //! cargo run --release --example distributed_moe -- --gate noisy_topk --noise-std 0.5
 //! # pipeline the exchanges against expert compute (§4 overlap):
 //! cargo run --release --example distributed_moe -- --overlap --chunks 4
+//! # node-aware collectives (two nodes): hier a2a + tree all-reduce:
+//! cargo run --release --example distributed_moe -- --topology hier --nodes 2
 //! # or select everything from a config file's [moe]/[comm] sections:
 //! cargo run --release --example distributed_moe -- --config moe.toml
 //! ```
@@ -24,7 +26,7 @@ use std::sync::Arc;
 
 use fastmoe::bench::Table;
 use fastmoe::cli::Args;
-use fastmoe::comm::{run_workers, Comm};
+use fastmoe::comm::{run_workers, Comm, TopoComm};
 use fastmoe::config::{CommConfig, MoeConfig};
 use fastmoe::coordinator::{MoeLayerBuilder, MoeLayerTrainer};
 use fastmoe::metrics::{Counters, Stopwatch};
@@ -64,9 +66,13 @@ fn main() -> fastmoe::Result<()> {
     let builder = MoeLayerBuilder::from_config(&moe_cfg)
         .comm_config(&comm_cfg)
         .seed(seed);
+    let topo_cfg = comm_cfg.clone();
     let results = run_workers(workers, {
         let rt = rt.clone();
-        move |mut h| {
+        move |h| {
+            // the collective policy ([comm] topology) rides the comm
+            // wrapper; flat is a pure pass-through
+            let mut h = TopoComm::new(h, topo_cfg.topology_for(workers)?)?;
             let layer = builder.build_for(rt.clone(), &h)?;
             layer.warm()?;
             let mut tr = MoeLayerTrainer::new(layer, lr);
@@ -74,7 +80,7 @@ fn main() -> fastmoe::Result<()> {
             let mut rng = Rng::new(seed ^ (h.rank() as u64 + 1));
             let mut flops = 0.0f64;
             let mut balance = 0.0f64;
-            h.barrier();
+            h.barrier()?;
             let watch = Stopwatch::start();
             for _ in 0..iters {
                 let mut x = TensorF32::zeros(&[tr.layer.nb, tr.layer.dm]);
@@ -84,9 +90,9 @@ fn main() -> fastmoe::Result<()> {
                 balance += s.balance;
                 debug_assert!(s.loss.is_finite());
             }
-            h.barrier();
+            h.barrier()?;
             let secs = watch.secs();
-            counters.merge(&h.counters);
+            counters.merge(&h.inner().counters);
             let totals = tr.monitor.totals().to_vec();
             Ok((h.rank(), secs, flops, counters, balance / iters.max(1) as f64, totals))
         }

@@ -26,6 +26,15 @@
 //! `sim::NetModel::moe_step_overlapped_host`; the bench asserts
 //! zero-copy ≤ overlapped at every point.
 //!
+//! A `--nodes N` split (default 2) adds flat-vs-hier columns: the same
+//! measured compute, exchange volume and host counters scored under
+//! the `[comm] topology = "hier"` policies — leader-aggregated
+//! all-to-all, two-level tree all-reduce, locality-ordered chunks
+//! (`sim::NetModel::{moe_step_*_hier, grad_step_*_hier}` over the
+//! intra-node `alpha_local`/`beta_local` lane).  At every scale point
+//! where the model's inter-node bandwidth is the bottleneck
+//! (`NetModel::hier_favourable`), the bench asserts hier ≤ flat.
+//!
 //! A fourth pair of columns scores the *trainer tail* over the layer's
 //! parameter volume: the blocking full-gradient ring + host Adam vs
 //! the PR-4 bucketed nonblocking sync pipelined against backward and
@@ -70,6 +79,9 @@ fn main() -> fastmoe::Result<()> {
     let net_name = args.str_or("net", "ib-edr-scaled");
     let chunks = args.usize_or("chunks", 4)?.max(1);
     let bucket_kb = args.usize_or("bucket-kb", 512)?.max(1);
+    // node count of the flat-vs-hier comparison columns (worker counts
+    // that don't divide evenly fall back to flat, l = 1)
+    let nodes = args.usize_or("nodes", 2)?.max(1);
     let overlap_path = args.has_flag("overlap");
     let json_path = args.get("json").map(|s| s.to_string());
     // V100 fp32 ≈ 14 TFLOP/s against 12.5 GB/s EDR (the paper's nodes)
@@ -87,24 +99,27 @@ fn main() -> fastmoe::Result<()> {
     worker_counts.sort_unstable();
     println!(
         "Figure 6 — distributed MoE layer scalability \
-         (iters={iters}, net={net_name}, chunks={chunks}, measured path: {})\n",
+         (iters={iters}, net={net_name}, chunks={chunks}, hier nodes={nodes}, \
+         measured path: {})\n",
         if overlap_path { "overlapped" } else { "blocking" }
     );
 
     let mut table = Table::new(&[
         "workers", "experts", "compute_s/dev", "wire_ms/iter", "blocking_ms/iter",
-        "overlap_ms/iter", "zerocopy_ms/iter", "speedup", "zc_speedup",
-        "agg_GFLOP/s", "efficiency", "a2a_MB/iter", "copied_MB/iter",
-        "gsync_blk_ms", "gsync_ovl_ms",
+        "overlap_ms/iter", "zerocopy_ms/iter", "hier_blk_ms", "hier_ovl_ms",
+        "speedup", "zc_speedup", "agg_GFLOP/s", "efficiency", "a2a_MB/iter",
+        "copied_MB/iter", "gsync_blk_ms", "gsync_ovl_ms", "gsync_hier_ms",
     ]);
     let mut csv = CsvWriter::create(
         "runs/fig6_scale.csv",
         &[
             "workers", "agg_gflops", "agg_gflops_overlap", "agg_gflops_zerocopy",
             "compute_s_per_dev", "wire_ms_per_iter", "blocking_ms_per_iter",
-            "overlap_ms_per_iter", "zerocopy_ms_per_iter", "a2a_bytes_per_iter",
-            "copied_bytes_per_iter", "alloc_bytes_per_iter", "grad_bytes",
-            "grad_step_blocking_ms", "grad_step_overlapped_ms",
+            "overlap_ms_per_iter", "zerocopy_ms_per_iter", "hier_nodes",
+            "hier_blocking_ms_per_iter", "hier_overlap_ms_per_iter",
+            "a2a_bytes_per_iter", "copied_bytes_per_iter", "alloc_bytes_per_iter",
+            "grad_bytes", "grad_step_blocking_ms", "grad_step_overlapped_ms",
+            "grad_step_hier_ms",
         ],
     )?;
     let mut base: Option<f64> = None;
@@ -180,6 +195,10 @@ fn main() -> fastmoe::Result<()> {
                 NetModel {
                     alpha: base_net.alpha / ratio.max(1e-9),
                     beta: base_net.beta * ratio,
+                    // both links scale together, so the local:inter
+                    // ratio (what hier_favourable checks) is preserved
+                    alpha_local: base_net.alpha_local / ratio.max(1e-9),
+                    beta_local: base_net.beta_local * ratio,
                     host_beta: base_net.host_beta * ratio,
                     alloc_beta: base_net.alloc_beta * ratio,
                     enabled: true,
@@ -247,6 +266,56 @@ fn main() -> fastmoe::Result<()> {
             "overlapped grad sync must not score above blocking \
              (w={w}: {gsync_overlap} vs {gsync_block})"
         );
+        // PR-5 flat-vs-hier columns: the same measured compute, bytes
+        // and host counters scored under the node-aware policies
+        // (leader-aggregated a2a, tree all-reduce, locality-ordered
+        // chunks).  `l = 1` (a worker count the node split doesn't
+        // divide) falls back to flat exactly.
+        let l = if w % nodes == 0 { (w / nodes).max(1) } else { 1 };
+        let hier_blk = net.moe_step_blocking_hier_host(
+            w,
+            l,
+            bytes_per_iter,
+            compute_per_iter,
+            copied_per_iter,
+            alloc_per_iter,
+        );
+        let hier_ovl = net.moe_step_overlapped_hier_host(
+            w,
+            l,
+            bytes_per_iter,
+            compute_per_iter,
+            chunks,
+            copied_per_iter,
+            alloc_per_iter,
+        );
+        let gsync_hier = net.grad_step_overlapped_hier(
+            w,
+            l,
+            grad_bytes,
+            compute_per_iter,
+            opt_secs,
+            grad_buckets,
+        );
+        if net.hier_favourable(w, l) {
+            // the acceptance property: wherever the model's inter-node
+            // bandwidth is the bottleneck, hier scores ≤ flat
+            assert!(
+                hier_blk <= blocking_iter + 1e-15,
+                "hier blocking must not score above flat \
+                 (w={w} l={l}: {hier_blk} vs {blocking_iter})"
+            );
+            assert!(
+                hier_ovl <= zerocopy_iter + 1e-15,
+                "hier overlapped must not score above flat overlapped \
+                 (w={w} l={l}: {hier_ovl} vs {zerocopy_iter})"
+            );
+            assert!(
+                gsync_hier <= gsync_overlap + 1e-15,
+                "hier grad sync must not score above the flat rings \
+                 (w={w} l={l}: {gsync_hier} vs {gsync_overlap})"
+            );
+        }
         let speedup = blocking_iter / overlap_iter.max(1e-12);
         let zc_speedup = blocking_iter / zerocopy_iter.max(1e-12);
         let agg = gflops(total_flops, blocking_iter * iters as f64);
@@ -269,6 +338,8 @@ fn main() -> fastmoe::Result<()> {
             format!("{:.1}", blocking_iter * 1e3),
             format!("{:.1}", overlap_iter * 1e3),
             format!("{:.1}", zerocopy_iter * 1e3),
+            format!("{:.1}", hier_blk * 1e3),
+            format!("{:.1}", hier_ovl * 1e3),
             format!("{speedup:.2}x"),
             format!("{zc_speedup:.2}x"),
             format!("{agg:.2}"),
@@ -277,6 +348,7 @@ fn main() -> fastmoe::Result<()> {
             format!("{:.2}", copied_per_iter as f64 / 1e6),
             format!("{:.1}", gsync_block * 1e3),
             format!("{:.1}", gsync_overlap * 1e3),
+            format!("{:.1}", gsync_hier * 1e3),
         ]);
         csv.rowf(&[
             w as f64,
@@ -288,12 +360,16 @@ fn main() -> fastmoe::Result<()> {
             blocking_iter * 1e3,
             overlap_iter * 1e3,
             zerocopy_iter * 1e3,
+            if l > 1 { nodes as f64 } else { 1.0 },
+            hier_blk * 1e3,
+            hier_ovl * 1e3,
             bytes_per_iter as f64,
             copied_per_iter as f64,
             alloc_per_iter as f64,
             grad_bytes as f64,
             gsync_block * 1e3,
             gsync_overlap * 1e3,
+            gsync_hier * 1e3,
         ])?;
         let mut row = BTreeMap::new();
         row.insert("workers".into(), Json::Num(w as f64));
@@ -327,6 +403,11 @@ fn main() -> fastmoe::Result<()> {
             "grad_step_overlapped_s".into(),
             Json::Num(gsync_overlap),
         );
+        row.insert("hier_local_size".into(), Json::Num(l as f64));
+        row.insert("hier_favourable".into(), Json::Bool(net.hier_favourable(w, l)));
+        row.insert("hier_blocking_s_per_iter".into(), Json::Num(hier_blk));
+        row.insert("hier_overlapped_s_per_iter".into(), Json::Num(hier_ovl));
+        row.insert("grad_step_hier_s".into(), Json::Num(gsync_hier));
         json_rows.push(Json::Object(row));
         println!(
             "  {w} workers: blocking {:.1} ms/iter vs overlapped {:.1} ms/iter \

@@ -45,11 +45,24 @@
 //! exception is [`CommHandle`]'s OS-barrier fast path, which still
 //! requires every rank to arrive.
 //!
+//! Topology: [`topology::Topology`] maps ranks onto nodes, and
+//! [`Comm::split`] yields `{intra, inter}` [`topology::ProcessGroup`]
+//! sub-handles with their own rank/size/tag namespaces on which every
+//! collective above runs unchanged.  [`topology::TopoComm`] selects
+//! the collective policy (`[comm] topology`): flat — bit-for-bit
+//! today's behaviour — or hierarchical, which reroutes the all-to-all
+//! through node leaders and builds the two-level tree reduction as an
+//! alternate schedule under [`PendingAllReduce`], so the bucketed
+//! overlapped gradient sync composes with it unchanged.
+//!
 //! Every handle records bytes sent per collective, which
 //! [`crate::sim::NetModel`] converts into simulated wire time for the
 //! Figure-6 scalability study.
 
 pub mod tcp;
+pub mod topology;
+
+pub use topology::{BoundGroup, CommGroups, ProcessGroup, TopoComm, Topology};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -215,18 +228,49 @@ fn ring_round(n: usize, rank: usize, round: usize, seq: u64) -> (usize, usize, u
     }
 }
 
-/// One bucket's in-flight ring reduction.  Only the current round is
-/// ever on the wire, because round `r+1` sends the very chunk round
-/// `r` just updated — but across *buckets* every ring progresses
+/// One bucket's in-flight reduction.  Only the current round is ever
+/// on the wire, because round `r+1` sends the very chunk round `r`
+/// just updated — but across *buckets* every reduction progresses
 /// concurrently, which is where the overlap comes from.
 struct ArBucket {
+    /// The bucket's working buffer.  Hierarchical *members* ship their
+    /// buffer to the leader at start time and hold an empty `buf`
+    /// until the broadcast replaces it — `want` keeps the length the
+    /// result must have.
     buf: Vec<f32>,
+    /// Float count of the reduced result (== the caller's buffer).
+    want: usize,
     seq: u64,
-    /// Completed rounds, `0..2(n-1)`.
+    /// Completed rounds — flat ring: `0..2(n-1)`; hierarchical leader:
+    /// `0..(L-1) + 2(nodes-1)` (gathers then the leader ring);
+    /// hierarchical member: `0..1` (the broadcast).
     round: usize,
     /// Outstanding receive of the current round.
     req: Option<CommRequest>,
 }
+
+/// Which reduction schedule a [`PendingAllReduce`]'s buckets follow.
+///
+/// `Hier` is the two-level tree ([`topology::TopoComm`]'s policy):
+/// members send their buffers to the node leader, the leader adds them
+/// in **ascending local-rank order**, the leaders run the ordinary
+/// ring ([`ring_round`]/[`ring_chunk`] over the node count) on the
+/// node sums, and each leader broadcasts the result to its members.
+/// That reduction order is fixed and identical between the blocking
+/// and bucketed paths (hier-blocking == hier-bucketed bitwise by
+/// construction); it differs from the flat ring's order, so hier vs
+/// flat agree bitwise only where f32 addition is associative for the
+/// data (pinned on integer-valued payloads by the conformance matrix).
+#[derive(Clone, Copy, Debug)]
+enum ArSched {
+    Flat,
+    Hier(Topology),
+}
+
+/// Gather tag code of the hier schedule (member buffer → leader).
+const AR_TAG_GATHER: u64 = 130;
+/// Broadcast tag code of the hier schedule (leader result → member).
+const AR_TAG_BCAST: u64 = 131;
 
 /// A bucketed [`Comm::all_reduce_sum`] whose rings are still in
 /// flight, returned by [`Comm::all_reduce_start`].  Each bucket is an
@@ -243,6 +287,9 @@ struct ArBucket {
 pub struct PendingAllReduce {
     n: usize,
     rank: usize,
+    /// The schedule every bucket follows (flat ring, or the two-level
+    /// tree of a hierarchical [`Topology`]).
+    sched: ArSched,
     /// Per-bucket ring state (`None` once reduced or handed out).
     buckets: Vec<Option<ArBucket>>,
     /// Reduced buffers not yet claimed by the caller.
@@ -264,9 +311,33 @@ impl PendingAllReduce {
         self.buckets.iter().filter(|b| b.is_some()).count()
     }
 
-    /// Queue bucket `i`'s current round: isend the outgoing chunk to
-    /// the ring successor, bookmark the matching arrival.
+    /// Queue bucket `i`'s current round under the schedule: bookmark
+    /// the next arrival (and isend whatever that round owes the wire).
     fn post_round<C: Comm + ?Sized>(&mut self, comm: &mut C, i: usize) -> Result<()> {
+        match self.sched {
+            ArSched::Flat => self.post_round_flat(comm, i),
+            ArSched::Hier(topo) => self.post_round_hier(comm, i, topo),
+        }
+    }
+
+    /// Apply one arrived round to bucket `i` and post its next round,
+    /// if any.  The spent round buffer is offered to the backend's
+    /// receive freelist.
+    fn apply_round<C: Comm + ?Sized>(
+        &mut self,
+        comm: &mut C,
+        i: usize,
+        data: Vec<f32>,
+    ) -> Result<()> {
+        match self.sched {
+            ArSched::Flat => self.apply_round_flat(comm, i, data),
+            ArSched::Hier(topo) => self.apply_round_hier(comm, i, topo, data),
+        }
+    }
+
+    /// Flat ring: isend the outgoing chunk to the ring successor,
+    /// bookmark the matching arrival.
+    fn post_round_flat<C: Comm + ?Sized>(&mut self, comm: &mut C, i: usize) -> Result<()> {
         let n = self.n;
         let next = (self.rank + 1) % n;
         let prev = (self.rank + n - 1) % n;
@@ -278,10 +349,8 @@ impl PendingAllReduce {
         Ok(())
     }
 
-    /// Apply one arrived round to bucket `i` (add on the scatter half,
-    /// copy on the gather half) and post its next round, if any.  The
-    /// spent round buffer is offered to the backend's receive freelist.
-    fn apply_round<C: Comm + ?Sized>(
+    /// Flat ring: add on the scatter half, copy on the gather half.
+    fn apply_round_flat<C: Comm + ?Sized>(
         &mut self,
         comm: &mut C,
         i: usize,
@@ -313,6 +382,133 @@ impl PendingAllReduce {
         } else {
             self.post_round(comm, i)?;
         }
+        Ok(())
+    }
+
+    /// Two-level tree, posting side.  Members have exactly one wait
+    /// (the leader's broadcast; their contribution departed at start
+    /// time).  Leaders first gather members in ascending local-rank
+    /// order, then run the ordinary ring over the node leaders.
+    fn post_round_hier<C: Comm + ?Sized>(
+        &mut self,
+        comm: &mut C,
+        i: usize,
+        topo: Topology,
+    ) -> Result<()> {
+        let rank = self.rank;
+        let b = self.buckets[i].as_mut().expect("bucket active");
+        if !topo.is_leader(rank) {
+            let leader = topo.leader_of(topo.node_of(rank));
+            b.req = Some(comm.irecv(leader, (b.seq << 8) | AR_TAG_BCAST)?);
+            return Ok(());
+        }
+        let l_sz = topo.local_size();
+        if b.round < l_sz - 1 {
+            // gather member `round + 1` — waited one at a time, so the
+            // leader's additions happen in ascending local-rank order
+            b.req = Some(comm.irecv(rank + b.round + 1, (b.seq << 8) | AR_TAG_GATHER)?);
+            return Ok(());
+        }
+        // leader ring over the node sums (the flat machinery, with the
+        // node index as the ring rank)
+        let nodes = topo.nodes();
+        let s = topo.node_of(rank);
+        let rr = b.round - (l_sz - 1);
+        let (send_idx, _, tag, _) = ring_round(nodes, s, rr, b.seq);
+        let payload = b.buf[ring_chunk(b.buf.len(), nodes, send_idx)].to_vec();
+        comm.isend(topo.leader_of((s + 1) % nodes), tag, payload)?;
+        b.req = Some(comm.irecv(topo.leader_of((s + nodes - 1) % nodes), tag)?);
+        Ok(())
+    }
+
+    /// Two-level tree, arrival side.
+    fn apply_round_hier<C: Comm + ?Sized>(
+        &mut self,
+        comm: &mut C,
+        i: usize,
+        topo: Topology,
+        data: Vec<f32>,
+    ) -> Result<()> {
+        let rank = self.rank;
+        let l_sz = topo.local_size();
+        let nodes = topo.nodes();
+        let b = self.buckets[i].as_mut().expect("bucket active");
+        if !topo.is_leader(rank) {
+            // the broadcast: the reduced buffer IS the result (the
+            // member's own buffer departed to the leader at start time
+            // — no copy was kept)
+            if data.len() != b.want {
+                return Err(Error::Comm(format!(
+                    "hier all-reduce: broadcast payload {} floats, bucket is {}",
+                    data.len(),
+                    b.want
+                )));
+            }
+            b.buf = data;
+            let buf = self.buckets[i].take().expect("bucket active").buf;
+            self.done[i] = Some(buf);
+            return Ok(());
+        }
+        if b.round < l_sz - 1 {
+            if data.len() != b.buf.len() {
+                return Err(Error::Comm(format!(
+                    "hier all-reduce: member buffer {} floats, bucket is {}",
+                    data.len(),
+                    b.buf.len()
+                )));
+            }
+            for (x, y) in b.buf.iter_mut().zip(&data) {
+                *x += y;
+            }
+            let _ = comm.recycle(vec![data]);
+            b.round += 1;
+            if b.round == l_sz - 1 && nodes == 1 {
+                return self.finish_leader(comm, i, topo);
+            }
+            return self.post_round(comm, i);
+        }
+        let s = topo.node_of(rank);
+        let rr = b.round - (l_sz - 1);
+        let (_, recv_idx, _, gather) = ring_round(nodes, s, rr, b.seq);
+        let range = ring_chunk(b.buf.len(), nodes, recv_idx);
+        if data.len() != range.len() {
+            return Err(Error::Comm(format!(
+                "hier all-reduce: ring payload {} floats, chunk is {}",
+                data.len(),
+                range.len()
+            )));
+        }
+        if gather {
+            b.buf[range].copy_from_slice(&data);
+        } else {
+            for (x, y) in b.buf[range].iter_mut().zip(&data) {
+                *x += y;
+            }
+        }
+        let _ = comm.recycle(vec![data]);
+        b.round += 1;
+        if b.round == (l_sz - 1) + 2 * (nodes - 1) {
+            return self.finish_leader(comm, i, topo);
+        }
+        self.post_round(comm, i)
+    }
+
+    /// Leader completion: broadcast the reduced bucket to the node's
+    /// members (flushed — they are blocked on exactly these frames)
+    /// and retire the bucket.
+    fn finish_leader<C: Comm + ?Sized>(
+        &mut self,
+        comm: &mut C,
+        i: usize,
+        topo: Topology,
+    ) -> Result<()> {
+        let rank = self.rank;
+        let b = self.buckets[i].take().expect("bucket active");
+        for m in 1..topo.local_size() {
+            comm.isend(rank + m, (b.seq << 8) | AR_TAG_BCAST, b.buf.clone())?;
+        }
+        comm.flush()?;
+        self.done[i] = Some(b.buf);
         Ok(())
     }
 
@@ -402,6 +598,67 @@ impl PendingAllReduce {
         }
         Ok(out)
     }
+}
+
+/// Start a bucketed nonblocking all-reduce over the two-level tree of
+/// a hierarchical [`Topology`] — [`TopoComm`]'s alternate schedule
+/// under [`PendingAllReduce`], completed by the very same
+/// `wait_bucket`/`finish` calls (and therefore composing with
+/// `GradSync`'s bucketed overlap unchanged).  At start time every
+/// member's contribution is on the wire toward its node leader and
+/// every wait is posted, mirroring the flat path's round-0 guarantee.
+pub(crate) fn all_reduce_start_hier<C: Comm + ?Sized>(
+    comm: &mut C,
+    topo: &Topology,
+    bufs: Vec<Vec<f32>>,
+) -> Result<PendingAllReduce> {
+    let n = comm.size();
+    let rank = comm.rank();
+    debug_assert!(topo.world() == n && topo.hierarchical());
+    let mut pending = PendingAllReduce {
+        n,
+        rank,
+        sched: ArSched::Hier(*topo),
+        buckets: (0..bufs.len()).map(|_| None).collect(),
+        done: (0..bufs.len()).map(|_| None).collect(),
+    };
+    if n == 1 {
+        for (slot, buf) in pending.done.iter_mut().zip(bufs) {
+            *slot = Some(buf);
+        }
+        return Ok(pending);
+    }
+    comm.counters().add("allreduce_buckets", pending.buckets.len() as u64);
+    comm.counters().add("allreduce_hier_calls", 1);
+    for (i, buf) in bufs.into_iter().enumerate() {
+        let seq = comm.next_seq();
+        let want = buf.len();
+        comm.counters().add("allreduce_calls", 1);
+        // this rank's actual egress under the tree schedule: a member
+        // ships its buffer up once; a leader rings 2(nodes−1)/nodes of
+        // it with the other leaders and broadcasts it to each member
+        let sent = if topo.is_leader(rank) {
+            let nodes = topo.nodes();
+            let ring = if nodes > 1 { want * 4 * 2 * (nodes - 1) / nodes } else { 0 };
+            ring + (topo.local_size() - 1) * want * 4
+        } else {
+            want * 4
+        };
+        comm.counters().add("allreduce_bytes", sent as u64);
+        let buf = if topo.is_leader(rank) {
+            buf
+        } else {
+            // the member's contribution departs now — moved, not
+            // cloned; the broadcast will hand back the result buffer
+            let leader = topo.leader_of(topo.node_of(rank));
+            comm.isend(leader, (seq << 8) | AR_TAG_GATHER, buf)?;
+            Vec::new()
+        };
+        pending.buckets[i] = Some(ArBucket { buf, want, seq, round: 0, req: None });
+        pending.post_round(comm, i)?;
+    }
+    comm.flush()?;
+    Ok(pending)
 }
 
 /// The process-group interface: p2p primitives required, collectives
@@ -508,7 +765,9 @@ pub trait Comm {
 
     /// Legacy barrier: an empty all-to-all (every pair exchanges a
     /// count) — O(n²) messages, but a fixed and easily audited pattern
-    /// (bumps `a2a_calls` exactly once).
+    /// (bumps `a2a_calls` exactly once on a backend handle; policy
+    /// wrappers like [`TopoComm`] may nest sub-group collectives that
+    /// add their own).
     fn barrier_a2a(&mut self) -> Result<()> {
         let empties: Vec<Vec<f32>> = (0..self.size()).map(|_| Vec::new()).collect();
         let _ = self.all_to_all_v(empties)?;
@@ -603,6 +862,7 @@ pub trait Comm {
         let mut pending = PendingAllReduce {
             n,
             rank,
+            sched: ArSched::Flat,
             buckets: (0..bufs.len()).map(|_| None).collect(),
             done: (0..bufs.len()).map(|_| None).collect(),
         };
@@ -618,7 +878,8 @@ pub trait Comm {
             self.counters().add("allreduce_calls", 1);
             self.counters()
                 .add("allreduce_bytes", (buf.len() * 4 * 2 * (n - 1) / n) as u64);
-            pending.buckets[i] = Some(ArBucket { buf, seq, round: 0, req: None });
+            let want = buf.len();
+            pending.buckets[i] = Some(ArBucket { buf, want, seq, round: 0, req: None });
             pending.post_round(self, i)?;
         }
         self.flush()?;
@@ -708,6 +969,25 @@ pub trait Comm {
             out.extend_from_slice(&p);
         }
         Ok(out)
+    }
+
+    /// Split this handle's world under a [`Topology`] into the
+    /// `{intra, inter}` sub-group namespaces ([`CommGroups`]): the
+    /// intra-node group this rank belongs to, and — on node leaders —
+    /// the leaders' inter-node group.  Bind a group to the handle
+    /// ([`ProcessGroup::bind`]) to run any collective of this trait on
+    /// the sub-group.  Hold one split per handle lifetime: a second
+    /// split restarts the groups' tag sequences (safe only once the
+    /// first split's collectives have fully drained).
+    fn split(&self, topo: &Topology) -> Result<CommGroups> {
+        if topo.world() != self.size() {
+            return Err(Error::Comm(format!(
+                "split: topology is over {} ranks, comm has {}",
+                topo.world(),
+                self.size()
+            )));
+        }
+        CommGroups::new(topo, self.rank())
     }
 
     /// Broadcast from `root` (everyone returns root's buffer).

@@ -46,6 +46,15 @@
 //! [`Comm::recycle`], so a caller that hands consumed buffers back
 //! makes steady-state frame reads allocation-free
 //! ([`TcpGroup::recv_buffer_allocs`] pins it).
+//!
+//! Liveness: deferred-flush blocking reads tick every
+//! `KEEPALIVE_POLL`; an *idle* tick (no bytes at a frame boundary)
+//! writes an empty probe frame to the waited-on peer, and a failed
+//! probe write surfaces the peer's death as a typed error — without
+//! relying on the OS delivering EOF promptly.  Probe frames carry a
+//! reserved tag and are discarded transparently on every read path,
+//! and `keepalive_probes` counts them.  The progress engine keeps its
+//! EOF-based per-reader detection.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -70,6 +79,52 @@ const SPENT_CAP_BYTES: usize = 32 << 20;
 /// caller) so an over-generous donor cannot pin unbounded memory.
 const FRAME_POOL_CAP: usize = 256;
 const FRAME_POOL_CAP_BYTES: usize = 32 << 20;
+
+/// Reserved tag of keepalive probe frames (empty payload).  Discarded
+/// transparently on every read path; never collides with real traffic
+/// (collective tags are `seq << 8 | code`, sub-group tags add a high
+/// salt bit — none reach all-ones).
+const KEEPALIVE_TAG: u64 = u64::MAX;
+
+/// Socket read timeout of the deferred-flush receive path — the
+/// keepalive grace period.  A blocked `recv` that sees no bytes for
+/// this long writes a probe frame to the peer it waits on: writing
+/// into a dead connection fails at the socket layer long before the
+/// OS delivers a (possibly delayed) EOF, so peer death surfaces as a
+/// typed error instead of an indefinite hang.  An alive-but-slow peer
+/// simply discards the probes.  (The progress engine has dedicated
+/// reader threads per peer and keeps its EOF-based detection.)
+const KEEPALIVE_POLL: Duration = Duration::from_millis(500);
+
+/// Consecutive idle ticks tolerated *inside* a frame before the read
+/// gives up.  A peer that sent a partial frame and then vanished
+/// without FIN/RST (host death, partition) would otherwise retry
+/// forever — mid-frame there is no probe, so the bound is the liveness
+/// backstop.  Set generously high (1200 × 500 ms = ten minutes of
+/// *zero bytes mid-frame*) because a legitimate stall is possible —
+/// e.g. the sender blocked writing to a third rank whose socket buffer
+/// is full during a long compute window — and the bound must only fire
+/// when the connection is truly gone, orders of magnitude past any
+/// compute window this system schedules.
+const STALL_TICKS_MAX: u32 = 1200;
+
+/// Whether an I/O error is the read-timeout tick (both kinds appear
+/// across platforms) rather than a real failure.
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Typed mid-frame stall: surfaced as `InvalidData` (never a timeout
+/// kind, so callers error out instead of probing and retrying).
+fn stall_err(what: &str, got: usize, want: usize) -> std::io::Error {
+    std::io::Error::new(
+        std::io::ErrorKind::InvalidData,
+        format!("peer stalled mid-frame ({what}: {got}/{want} bytes)"),
+    )
+}
 
 /// Inbox-side freelist the frame readers draw payload buffers from,
 /// fed by [`Comm::recycle`].  Shared between the main thread and the
@@ -248,6 +303,15 @@ impl TcpGroup {
             readers[peer] = Some(r);
         }
 
+        // Keepalive: reads tick at the probe interval from here on
+        // (the handshake above ran on blocking sockets).  Frame reads
+        // retry through mid-frame ticks; only an idle frame boundary
+        // surfaces to the caller, which probes the peer (see
+        // `read_msg_from`).
+        for r in readers.iter().flatten() {
+            r.get_ref().set_read_timeout(Some(KEEPALIVE_POLL)).ok();
+        }
+
         Ok(TcpGroup {
             rank,
             size,
@@ -307,12 +371,17 @@ impl TcpGroup {
                 .name(format!("tcp-progress-{}-{peer}", self.rank))
                 .spawn(move || loop {
                     match read_frame(&mut reader, &frames) {
+                        Ok(msg) if msg.tag == KEEPALIVE_TAG => {} // discard
                         Ok(msg) => {
                             let mut inbox = sh.inbox.lock().unwrap();
                             inbox.msgs.push(msg);
                             inbox.arrivals += 1;
                             sh.cv.notify_all();
                         }
+                        // the engine has a dedicated blocked reader per
+                        // peer; idle ticks just spin it again (EOF is
+                        // its death signal)
+                        Err(e) if is_timeout(&e) => {}
                         Err(e) => {
                             // keep the real cause: an eof at a frame
                             // boundary is a normal shutdown, anything
@@ -398,12 +467,46 @@ impl TcpGroup {
 
     /// Blocking read of one framed message from a specific peer socket
     /// (deferred-flush mode only; progress mode reads via the engine).
+    ///
+    /// Liveness: an idle frame boundary (the keepalive tick) probes
+    /// the peer with an empty [`KEEPALIVE_TAG`] frame — a dead
+    /// connection fails the probe *write* without waiting for the OS
+    /// to deliver EOF, surfacing as a typed error instead of a hang.
     fn read_msg_from(&mut self, peer: usize) -> Result<Msg> {
         let frames = self.frames.clone();
-        let reader = self.readers[peer]
+        loop {
+            let res = {
+                let reader = self.readers[peer]
+                    .as_mut()
+                    .ok_or_else(|| Error::Comm(format!("no link to peer {peer}")))?;
+                read_frame(reader, &frames)
+            };
+            match res {
+                Ok(msg) => return Ok(msg),
+                Err(e) if is_timeout(&e) => self.probe_peer(peer)?,
+                Err(e) => return Err(io_err(e)),
+            }
+        }
+    }
+
+    /// Write one keepalive probe frame to `peer` and push it to the
+    /// kernel.  A failed write means the connection is dead even if
+    /// its EOF has not been delivered yet.
+    fn probe_peer(&mut self, peer: usize) -> Result<()> {
+        self.counters.add("keepalive_probes", 1);
+        let rank = self.rank;
+        let w = self.writers[peer]
             .as_mut()
             .ok_or_else(|| Error::Comm(format!("no link to peer {peer}")))?;
-        read_frame(reader, &frames).map_err(io_err)
+        let probe = (|| -> std::io::Result<()> {
+            w.write_all(&(rank as u32).to_le_bytes())?;
+            w.write_all(&KEEPALIVE_TAG.to_le_bytes())?;
+            w.write_all(&0u64.to_le_bytes())?;
+            w.flush()
+        })();
+        probe.map_err(|e| {
+            Error::Comm(format!("tcp: peer {peer} down (keepalive probe failed: {e})"))
+        })
     }
 
     /// Receive-path allocations: frames whose payload buffer had to
@@ -454,8 +557,26 @@ fn read_frame(
 ) -> std::io::Result<Msg> {
     let mut hdr = [0u8; 4 + 8 + 8];
     let mut filled = 0usize;
+    let mut stalled = 0u32;
     while filled < hdr.len() {
-        let n = reader.read(&mut hdr[filled..])?;
+        let n = match reader.read(&mut hdr[filled..]) {
+            Ok(n) => n,
+            // keepalive tick: an *idle boundary* surfaces (the caller
+            // probes and retries); mid-frame the peer was mid-send
+            // moments ago, so keep reading — up to the stall bound
+            Err(e) if is_timeout(&e) && filled == 0 => return Err(e),
+            Err(e) if is_timeout(&e) => {
+                stalled += 1;
+                if stalled > STALL_TICKS_MAX {
+                    return Err(stall_err("header", filled, hdr.len()));
+                }
+                continue;
+            }
+            // read_exact semantics: EINTR is retried, never fatal
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        stalled = 0;
         if n == 0 {
             return Err(if filled == 0 {
                 std::io::Error::new(
@@ -485,18 +606,39 @@ fn read_frame(
     let bytes = unsafe {
         std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, len * 4)
     };
-    if let Err(e) = reader.read_exact(bytes) {
-        // rebalance the pool's hand-out/return accounting: this buffer
-        // never reaches a caller who could recycle it
-        let _ = frames.give(data);
-        return Err(if e.kind() == std::io::ErrorKind::UnexpectedEof {
-            std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                format!("eof mid-frame ({len}-float payload truncated)"),
-            )
-        } else {
-            e
-        });
+    // read_exact semantics, riding through keepalive ticks (the header
+    // already arrived, so the peer was alive moments ago) up to the
+    // stall bound, and retrying EINTR
+    let mut got = 0usize;
+    let mut stalled = 0u32;
+    while got < bytes.len() {
+        match reader.read(&mut bytes[got..]) {
+            Ok(0) => {
+                // rebalance the pool's hand-out/return accounting: this
+                // buffer never reaches a caller who could recycle it
+                let _ = frames.give(data);
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("eof mid-frame ({len}-float payload truncated)"),
+                ));
+            }
+            Ok(n) => {
+                got += n;
+                stalled = 0;
+            }
+            Err(e) if is_timeout(&e) => {
+                stalled += 1;
+                if stalled > STALL_TICKS_MAX {
+                    let _ = frames.give(data);
+                    return Err(stall_err("payload", got, bytes.len()));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => {
+                let _ = frames.give(data);
+                return Err(e);
+            }
+        }
     }
     Ok(Msg { src, tag, data })
 }
@@ -568,6 +710,9 @@ impl Comm for TcpGroup {
         }
         loop {
             let msg = self.read_msg_from(src)?;
+            if msg.tag == KEEPALIVE_TAG {
+                continue; // a peer probing us while it waits — discard
+            }
             if msg.src == src && msg.tag == tag {
                 return Ok(msg.data);
             }
@@ -805,6 +950,36 @@ mod tests {
         assert_eq!(p.take(0).capacity(), 0);
         assert_eq!(p.allocs.load(Ordering::Relaxed), 2);
         let _ = p.give(s);
+    }
+
+    #[test]
+    fn keepalive_probes_are_transparent_and_counted() {
+        // Rank 1 withholds its send well past the keepalive interval;
+        // rank 0's blocking recv must probe (counter) and still return
+        // exactly the real payload once it arrives — the probe frames
+        // rank 0 wrote meanwhile are discarded by rank 1's reads.
+        let out = run_tcp(2, 47430, |mut g| {
+            let other = 1 - g.rank();
+            let tag = (g.next_seq() << 8) | 1;
+            if g.rank() == 1 {
+                std::thread::sleep(Duration::from_millis(1200));
+            }
+            g.isend(other, tag, vec![g.rank() as f32; 5])?;
+            g.flush()?;
+            let data = g.recv(other, tag)?;
+            assert_eq!(data, vec![other as f32; 5]);
+            // round 2 proves the stream survived the probe traffic
+            let tag2 = (g.next_seq() << 8) | 1;
+            g.isend(other, tag2, vec![7.0])?;
+            assert_eq!(g.recv(other, tag2)?, vec![7.0]);
+            Ok((g.rank(), g.counters.get("keepalive_probes")))
+        });
+        let probes: u64 = out
+            .iter()
+            .filter(|(r, _)| *r == 0)
+            .map(|(_, p)| *p)
+            .sum();
+        assert!(probes >= 1, "rank 0 never probed its slow peer");
     }
 
     #[test]

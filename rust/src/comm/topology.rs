@@ -1,0 +1,964 @@
+//! Topology-aware process groups — the node-locality layer of the comm
+//! substrate.
+//!
+//! FastMoE's scaling story is "more experts on more GPUs *across
+//! multiple nodes*", but a flat [`Comm`] ring treats every peer as
+//! equidistant.  This module adds the missing abstraction in three
+//! pieces:
+//!
+//! * [`Topology`] — the static rank → (node, local rank) mapping, from
+//!   the `[comm] nodes` / `local_size` config (node blocks are
+//!   contiguous: rank `r` lives on node `r / local_size`; the lowest
+//!   rank of a node is its *leader*).  `Topology::flat(w)` — one rank
+//!   per node — is the default and degenerates every policy below to
+//!   today's behaviour bit-for-bit.
+//! * [`ProcessGroup`] / [`BoundGroup`] — a sub-group handle over a
+//!   subset of world ranks with its **own rank/size/tag namespace**.
+//!   [`Comm::split`] builds the `{intra, inter}` pair for a topology;
+//!   [`ProcessGroup::bind`] borrows the world handle and yields a
+//!   [`BoundGroup`] that *implements [`Comm`]*, so every collective of
+//!   the trait (`all_to_all_v`, `all_reduce_sum`, `all_reduce_start`,
+//!   barriers, …) runs identically on the world group or any
+//!   sub-group — the seam the hierarchical policies are ~100 lines on
+//!   top of, instead of bespoke forks of every collective.
+//! * [`TopoComm`] — a transparent wrapper selecting the collective
+//!   *policy* (`[comm] topology = "flat" | "hier"`).  Flat is a pure
+//!   pass-through.  Hier reroutes:
+//!   * **all-to-all** (HetuMoE-style): members hand their
+//!     per-destination-*node* aggregates to the node leader, leaders
+//!     run ONE inter-node exchange (an ordinary `all_to_all_v` on the
+//!     inter sub-group), and leaders scatter arrivals to their
+//!     members — `n-1` per-rank wire messages become `nodes-1` leader
+//!     messages, and the intra share never touches the inter link.
+//!     Byte routing is exact, so results are **element-identical** to
+//!     the flat collective.
+//!   * **all-reduce** (two-level tree): intra-node reduce onto the
+//!     leader (member buffers added in ascending local-rank order),
+//!     one ring all-reduce over the leaders, intra-node broadcast —
+//!     the alternate ring builder under
+//!     [`PendingAllReduce`](super::PendingAllReduce), so the trainers'
+//!     bucketed overlapped `GradSync` composes with it for free.  The
+//!     reduction order is *fixed and documented* (members ascending,
+//!     then the leader ring's chunk order) and identical between the
+//!     blocking and bucketed paths, so hier-blocking == hier-bucketed
+//!     bitwise; it differs from the flat ring's order, so hier vs flat
+//!     agree exactly only where f32 addition happens to be associative
+//!     (the conformance matrix pins both properties).
+//!
+//! Namespace note: a [`ProcessGroup`]'s tags are salted into a band of
+//! the tag space and sequenced by its own counter, so concurrent intra
+//! groups on different nodes (disjoint members) and the world group
+//! never collide.  Two *separate* `ProcessGroup` instances over the
+//! same members (e.g. two `Comm::split` calls) restart the sequence:
+//! safe once the first group's collectives have fully drained, but
+//! do not interleave their in-flight collectives — hold one
+//! [`CommGroups`] per comm lifetime, as [`TopoComm`] does.
+
+use super::{all_reduce_start_hier, Comm, CommRequest, PendingA2a, PendingAllReduce};
+use crate::error::{Error, Result};
+use crate::metrics::Counters;
+
+/// Tag-space band of intra-node (same-node members) groups.
+const SALT_INTRA: u64 = 1 << 62;
+/// Tag-space band of the inter-node (leaders) group.
+const SALT_INTER: u64 = 1 << 61;
+
+/// Static node topology of a world of ranks: `world` ranks in
+/// contiguous blocks of `local_size` per node.  Rank `r` is local rank
+/// `r % local_size` on node `r / local_size`; local rank 0 is the
+/// node's *leader*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    world: usize,
+    local_size: usize,
+}
+
+impl Topology {
+    /// One rank per node — the flat (seed) topology every policy
+    /// degenerates to.
+    pub fn flat(world: usize) -> Topology {
+        Topology { world: world.max(1), local_size: 1 }
+    }
+
+    /// `world` ranks in nodes of `local_size`; `world` must be a
+    /// positive multiple of `local_size`.
+    pub fn new(world: usize, local_size: usize) -> Result<Topology> {
+        if world == 0 || local_size == 0 || world % local_size != 0 {
+            return Err(Error::Config(format!(
+                "topology: {world} ranks not divisible into nodes of {local_size}"
+            )));
+        }
+        Ok(Topology { world, local_size })
+    }
+
+    /// [`Topology::new`] from a node count instead of a node size.
+    pub fn from_nodes(world: usize, nodes: usize) -> Result<Topology> {
+        if nodes == 0 || world % nodes != 0 {
+            return Err(Error::Config(format!(
+                "topology: {world} ranks not divisible into {nodes} nodes"
+            )));
+        }
+        Topology::new(world, world / nodes)
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn local_size(&self) -> usize {
+        self.local_size
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.world / self.local_size
+    }
+
+    /// Whether any node holds more than one rank — the gate every
+    /// hierarchical policy checks before departing from flat.
+    pub fn hierarchical(&self) -> bool {
+        self.local_size > 1
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.local_size
+    }
+
+    pub fn local_of(&self, rank: usize) -> usize {
+        rank % self.local_size
+    }
+
+    /// World rank of node `t`'s leader (its lowest rank).
+    pub fn leader_of(&self, node: usize) -> usize {
+        node * self.local_size
+    }
+
+    pub fn is_leader(&self, rank: usize) -> bool {
+        self.local_of(rank) == 0
+    }
+
+    /// World ranks of node `t`, ascending.
+    pub fn node_ranks(&self, node: usize) -> std::ops::Range<usize> {
+        node * self.local_size..(node + 1) * self.local_size
+    }
+
+    /// World ranks of every node leader, ascending.
+    pub fn leaders(&self) -> Vec<usize> {
+        (0..self.nodes()).map(|t| self.leader_of(t)).collect()
+    }
+}
+
+/// A sub-group of world ranks with its own rank/size/tag namespace —
+/// the persistent half of the [`Comm::split`] result.  Bind it to the
+/// world handle ([`ProcessGroup::bind`]) to get a [`BoundGroup`] that
+/// implements [`Comm`]; the sequence counter lives here so tag
+/// allocation survives across binds.
+#[derive(Debug)]
+pub struct ProcessGroup {
+    /// Member world ranks in group-rank order (ascending).
+    ranks: Vec<usize>,
+    /// This rank's index in `ranks`.
+    my: usize,
+    /// Tag-space band of this group's collectives.
+    salt: u64,
+    /// The group's own collective sequence counter.
+    seq: u64,
+}
+
+impl ProcessGroup {
+    /// Build a group over `ranks` (must contain `me`); `salt` selects
+    /// the tag band (must be disjoint from the world band and from any
+    /// concurrently-active group sharing a member).
+    pub fn new(ranks: Vec<usize>, me: usize, salt: u64) -> Result<ProcessGroup> {
+        let my = ranks
+            .iter()
+            .position(|&r| r == me)
+            .ok_or_else(|| Error::Comm(format!("rank {me} not in group {ranks:?}")))?;
+        Ok(ProcessGroup { ranks, my, salt, seq: 0 })
+    }
+
+    /// Member world ranks, group-rank order.
+    pub fn ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    /// This rank's group rank.
+    pub fn rank(&self) -> usize {
+        self.my
+    }
+
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Borrow the world handle and expose this group as a [`Comm`]:
+    /// group ranks translate to world ranks, tags into the group's
+    /// salted band, everything else (wire, parking, arrival order,
+    /// pools, counters) is the backend's.
+    pub fn bind<'a, C: Comm + ?Sized>(&'a mut self, comm: &'a mut C) -> BoundGroup<'a, C> {
+        BoundGroup { pg: self, comm }
+    }
+}
+
+/// A [`ProcessGroup`] bound to the world handle — the view that
+/// implements [`Comm`], so every collective of the trait runs on the
+/// sub-group unchanged.
+pub struct BoundGroup<'a, C: Comm + ?Sized> {
+    pg: &'a mut ProcessGroup,
+    comm: &'a mut C,
+}
+
+impl<C: Comm + ?Sized> BoundGroup<'_, C> {
+    fn world(&self, p: usize) -> Result<usize> {
+        self.pg
+            .ranks
+            .get(p)
+            .copied()
+            .ok_or_else(|| Error::Comm(format!("group peer {p} of {}", self.pg.size())))
+    }
+
+    fn tag(&self, tag: u64) -> u64 {
+        self.pg.salt | tag
+    }
+}
+
+impl<C: Comm + ?Sized> Comm for BoundGroup<'_, C> {
+    fn rank(&self) -> usize {
+        self.pg.my
+    }
+
+    fn size(&self) -> usize {
+        self.pg.ranks.len()
+    }
+
+    fn counters(&mut self) -> &mut Counters {
+        self.comm.counters()
+    }
+
+    fn send(&mut self, dst: usize, tag: u64, data: Vec<f32>) -> Result<()> {
+        let dst = self.world(dst)?;
+        let tag = self.tag(tag);
+        self.comm.send(dst, tag, data)
+    }
+
+    fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<f32>> {
+        let src = self.world(src)?;
+        let tag = self.tag(tag);
+        self.comm.recv(src, tag)
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.pg.seq += 1;
+        self.pg.seq
+    }
+
+    fn isend(&mut self, dst: usize, tag: u64, data: Vec<f32>) -> Result<CommRequest> {
+        let dst = self.world(dst)?;
+        let tag = self.tag(tag);
+        self.comm.isend(dst, tag, data)
+    }
+
+    /// Requests carry *world* coordinates, so `wait`/`wait_all` can
+    /// delegate to the backend (and inherit its arrival-order
+    /// completion) without translation.
+    fn irecv(&mut self, src: usize, tag: u64) -> Result<CommRequest> {
+        let src = self.world(src)?;
+        let tag = self.tag(tag);
+        self.comm.irecv(src, tag)
+    }
+
+    fn wait(&mut self, req: CommRequest) -> Result<Option<Vec<f32>>> {
+        self.comm.wait(req)
+    }
+
+    fn wait_all(&mut self, reqs: Vec<CommRequest>) -> Result<Vec<Option<Vec<f32>>>> {
+        self.comm.wait_all(reqs)
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.comm.flush()
+    }
+
+    fn reclaim_spent(&mut self) -> Vec<Vec<f32>> {
+        self.comm.reclaim_spent()
+    }
+
+    fn recycle(&mut self, bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        self.comm.recycle(bufs)
+    }
+
+    // barrier() intentionally NOT overridden: the trait's dissemination
+    // default runs over the group's own send/recv translation, which is
+    // exactly the sub-group barrier (the backend's world barrier would
+    // wait on non-members).
+}
+
+/// The `{intra, inter}` pair of one topology split: the intra-node
+/// group every rank belongs to, and the leaders' inter-node group
+/// (`None` on non-leaders).
+#[derive(Debug)]
+pub struct CommGroups {
+    pub intra: ProcessGroup,
+    pub inter: Option<ProcessGroup>,
+}
+
+impl CommGroups {
+    /// Build both groups for `rank` under `topo` (pure rank math).
+    pub fn new(topo: &Topology, rank: usize) -> Result<CommGroups> {
+        let node = topo.node_of(rank);
+        let intra =
+            ProcessGroup::new(topo.node_ranks(node).collect(), rank, SALT_INTRA)?;
+        let inter = if topo.is_leader(rank) {
+            Some(ProcessGroup::new(topo.leaders(), rank, SALT_INTER)?)
+        } else {
+            None
+        };
+        Ok(CommGroups { intra, inter })
+    }
+}
+
+/// Policy-selecting wrapper: a [`Comm`] whose collectives route
+/// according to a [`Topology`].  Flat topologies delegate everything —
+/// bit-for-bit today's behaviour; hierarchical topologies reroute
+/// `all_to_all_v_start` (and therefore `all_to_all_v`, `all_gather`,
+/// `barrier_a2a`) through the node leaders and build two-level rings
+/// under `all_reduce_sum` / `all_reduce_start`.  Transport-level calls
+/// (`send`/`recv`/`isend`/`irecv`/`wait*`/`flush`/pools/barrier) always
+/// delegate, so the layer's chunked pipelines run unchanged on top.
+pub struct TopoComm<C: Comm> {
+    inner: C,
+    topo: Topology,
+    /// Persistent sub-group namespaces (`None` when flat).
+    groups: Option<CommGroups>,
+}
+
+impl<C: Comm> TopoComm<C> {
+    /// Wrap `inner` under `topo`; `topo.world()` must match the
+    /// handle's size.
+    pub fn new(inner: C, topo: Topology) -> Result<TopoComm<C>> {
+        if topo.world() != inner.size() {
+            return Err(Error::Comm(format!(
+                "topology is over {} ranks, comm has {}",
+                topo.world(),
+                inner.size()
+            )));
+        }
+        let groups = if topo.hierarchical() {
+            Some(CommGroups::new(&topo, inner.rank())?)
+        } else {
+            None
+        };
+        Ok(TopoComm { inner, topo, groups })
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// The wrapped backend handle (e.g. for backend-specific stats).
+    pub fn inner(&self) -> &C {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> C {
+        self.inner
+    }
+
+    /// The hierarchical all-to-all — the three-hop payload route:
+    /// member → leader aggregation, ONE leader exchange on the inter
+    /// group, leader → member scatter.  There is **no flat count
+    /// round**: every hop is self-describing (aggregates carry inline
+    /// length headers, the scatter carries per-source lengths), so a
+    /// rank's wire traffic really is one local message up, one local
+    /// message down, and — on leaders — `nodes − 1` inter-node
+    /// messages, which is the α-term shrinkage
+    /// [`crate::sim::NetModel::all_to_all_hier`] prices.  Exact byte
+    /// routing: every `send[q][d]` arrives at `d` intact and in
+    /// ascending-source order, so results are element-identical to the
+    /// flat collective.  Completes before returning (the pipelined
+    /// layer path overlaps via its chunk schedule instead), handing
+    /// back a pre-filled [`PendingA2a`].
+    ///
+    /// Counter note: the leaders' inner exchange is an ordinary
+    /// sub-group collective and records its own `a2a_*` counters on
+    /// top of this call's — a leader handle therefore logs two
+    /// `a2a_calls` per hier exchange.  `a2a_hier_calls` marks the
+    /// logical collective once per rank; the flat-vs-hier wire
+    /// accounting the benches consume lives in the layer's
+    /// `moe_a2a_bytes` and the backend's `bytes_sent`, not here.
+    fn a2a_start_hier(&mut self, send: Vec<Vec<f32>>) -> Result<PendingA2a> {
+        let w = self.inner.size();
+        let rank = self.inner.rank();
+        if send.len() != w {
+            return Err(Error::Comm(format!(
+                "all_to_all_v: {} buffers for {} peers",
+                send.len(),
+                w
+            )));
+        }
+        let topo = self.topo;
+        let l_sz = topo.local_size();
+        let nodes = topo.nodes();
+        let my_local = topo.local_of(rank);
+        self.inner.counters().add("a2a_calls", 1);
+        self.inner.counters().add("a2a_hier_calls", 1);
+
+        // ---- per-destination-node aggregates → leader ----
+        // A[t] = [len(send[d]) per d ∈ node t] ++ payloads; the member
+        // message prefixes each A[t] with its total length.
+        let mut msg: Vec<f32> = Vec::with_capacity(
+            nodes + nodes * l_sz + send.iter().map(|b| b.len()).sum::<usize>(),
+        );
+        for t in 0..nodes {
+            let total: usize =
+                topo.node_ranks(t).map(|d| send[d].len()).sum::<usize>() + l_sz;
+            // lengths ride the wire as f32 (the base protocol's count
+            // convention); a node *aggregate* sums local_size payloads
+            // and can hit the 2^24 exact-integer ceiling first — fail
+            // loudly instead of splicing a rounded offset
+            if total >= (1 << 24) {
+                return Err(Error::Comm(format!(
+                    "hier a2a: node {t} aggregate of {total} floats exceeds \
+                     the f32-exact length limit (2^24); shrink the batch or \
+                     use topology = \"flat\""
+                )));
+            }
+            msg.push(total as f32);
+        }
+        for t in 0..nodes {
+            for d in topo.node_ranks(t) {
+                msg.push(send[d].len() as f32);
+            }
+            for d in topo.node_ranks(t) {
+                msg.extend_from_slice(&send[d]);
+            }
+        }
+        drop(send);
+        self.inner
+            .counters()
+            .add("a2a_data_bytes", (msg.len() * 4) as u64);
+        let groups = self.groups.as_mut().expect("hier topology has groups");
+        let (gtag, stag) = {
+            let mut intra = groups.intra.bind(&mut self.inner);
+            let iseq = intra.next_seq();
+            let gtag = (iseq << 8) | 1;
+            let stag = (iseq << 8) | 2;
+            intra.isend(0, gtag, msg)?;
+            (gtag, stag)
+        };
+
+        // ---- phase 2b (leaders): assemble, exchange, scatter ----
+        if my_local == 0 {
+            // gather members ascending (self loops back through the
+            // backend's parking) and splice their aggregates per node
+            let mut b_out: Vec<Vec<f32>> = (0..nodes).map(|_| Vec::new()).collect();
+            {
+                let mut intra = groups.intra.bind(&mut self.inner);
+                for l in 0..l_sz {
+                    let m = intra.recv(l, gtag)?;
+                    if m.len() < nodes {
+                        return Err(Error::Comm(format!(
+                            "hier a2a: member {l} aggregate too short ({})",
+                            m.len()
+                        )));
+                    }
+                    let mut off = nodes;
+                    for (t, out) in b_out.iter_mut().enumerate() {
+                        let alen = m[t] as usize;
+                        if off + alen > m.len() {
+                            return Err(Error::Comm(format!(
+                                "hier a2a: member {l} aggregate for node {t} \
+                                 overruns its message"
+                            )));
+                        }
+                        out.extend_from_slice(&m[off..off + alen]);
+                        off += alen;
+                    }
+                    if off != m.len() {
+                        return Err(Error::Comm(format!(
+                            "hier a2a: member {l} aggregate has {} trailing floats",
+                            m.len() - off
+                        )));
+                    }
+                    // consumed: back to the backend's receive freelist
+                    // (keeps the FramePool hand-out/return balance flat)
+                    let _ = intra.recycle(vec![m]);
+                }
+            }
+            // the assembled per-node buffers ride the base protocol's
+            // f32 count phase — guard their lengths like the member
+            // aggregates above (a leader concatenates local_size of
+            // them, so it hits the ceiling first)
+            for (t, b) in b_out.iter().enumerate() {
+                if b.len() >= (1 << 24) {
+                    return Err(Error::Comm(format!(
+                        "hier a2a: assembled exchange for node {t} is {} floats, \
+                         past the f32-exact length limit (2^24); shrink the \
+                         batch or use topology = \"flat\"",
+                        b.len()
+                    )));
+                }
+            }
+            // ONE inter-node exchange — an ordinary collective on the
+            // leaders' sub-group (the ProcessGroup seam at work)
+            let b_in = {
+                let inter = groups.inter.as_mut().expect("leader has inter group");
+                inter.bind(&mut self.inner).all_to_all_v(b_out)?
+            };
+            // scatter: C[d] = [len(send[q][d]) per source q, ascending]
+            // ++ payloads in the same order (node-major · local-minor
+            // == world order) — self-describing, so members need no
+            // separate count round
+            let mut c_hdr: Vec<Vec<f32>> =
+                (0..l_sz).map(|_| Vec::with_capacity(w)).collect();
+            let mut c_out: Vec<Vec<f32>> = (0..l_sz).map(|_| Vec::new()).collect();
+            for (s, bs) in b_in.iter().enumerate() {
+                let mut off = 0usize;
+                for l in 0..l_sz {
+                    if off + l_sz > bs.len() {
+                        return Err(Error::Comm(format!(
+                            "hier a2a: node {s} member {l} header overruns"
+                        )));
+                    }
+                    let lens: Vec<usize> =
+                        bs[off..off + l_sz].iter().map(|&x| x as usize).collect();
+                    off += l_sz;
+                    for (d, out) in c_out.iter_mut().enumerate() {
+                        if off + lens[d] > bs.len() {
+                            return Err(Error::Comm(format!(
+                                "hier a2a: node {s} member {l} payload for \
+                                 local {d} overruns"
+                            )));
+                        }
+                        c_hdr[d].push(lens[d] as f32);
+                        out.extend_from_slice(&bs[off..off + lens[d]]);
+                        off += lens[d];
+                    }
+                }
+                if off != bs.len() {
+                    return Err(Error::Comm(format!(
+                        "hier a2a: node {s} buffer has {} trailing floats",
+                        bs.len() - off
+                    )));
+                }
+            }
+            // exchange buffers consumed: feed the receive freelist
+            let _ = self.inner.recycle(b_in);
+            let mut intra = groups.intra.bind(&mut self.inner);
+            for (d, (mut hdr, body)) in
+                c_hdr.into_iter().zip(c_out).enumerate()
+            {
+                if hdr.len() != w {
+                    return Err(Error::Comm(format!(
+                        "hier a2a: scatter for local {d} saw {} sources, \
+                         world is {w}",
+                        hdr.len()
+                    )));
+                }
+                hdr.extend(body);
+                intra.isend(d, stag, hdr)?;
+            }
+        }
+
+        // ---- everyone: receive the scatter, split by its header ----
+        let c = groups.intra.bind(&mut self.inner).recv(0, stag)?;
+        if c.len() < w {
+            return Err(Error::Comm(format!(
+                "hier a2a: scatter for rank {rank} too short ({} floats)",
+                c.len()
+            )));
+        }
+        let expected: Vec<usize> = c[..w].iter().map(|&x| x as usize).collect();
+        let total: usize = expected.iter().sum();
+        if c.len() != w + total {
+            return Err(Error::Comm(format!(
+                "hier a2a: scatter for rank {rank} has {} payload floats, \
+                 header says {total}",
+                c.len() - w
+            )));
+        }
+        let mut bufs: Vec<Option<Vec<f32>>> = (0..w).map(|_| None).collect();
+        let mut off = w;
+        for (q, slot) in bufs.iter_mut().enumerate() {
+            let n = expected[q];
+            *slot = Some(c[off..off + n].to_vec());
+            off += n;
+        }
+        let _ = self.inner.recycle(vec![c]);
+        Ok(PendingA2a {
+            reqs: (0..w).map(|_| None).collect(),
+            bufs,
+            expected,
+        })
+    }
+}
+
+impl<C: Comm> Comm for TopoComm<C> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn counters(&mut self) -> &mut Counters {
+        self.inner.counters()
+    }
+
+    fn send(&mut self, dst: usize, tag: u64, data: Vec<f32>) -> Result<()> {
+        self.inner.send(dst, tag, data)
+    }
+
+    fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<f32>> {
+        self.inner.recv(src, tag)
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.inner.next_seq()
+    }
+
+    fn isend(&mut self, dst: usize, tag: u64, data: Vec<f32>) -> Result<CommRequest> {
+        self.inner.isend(dst, tag, data)
+    }
+
+    fn irecv(&mut self, src: usize, tag: u64) -> Result<CommRequest> {
+        self.inner.irecv(src, tag)
+    }
+
+    fn wait(&mut self, req: CommRequest) -> Result<Option<Vec<f32>>> {
+        self.inner.wait(req)
+    }
+
+    fn wait_all(&mut self, reqs: Vec<CommRequest>) -> Result<Vec<Option<Vec<f32>>>> {
+        self.inner.wait_all(reqs)
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.inner.flush()
+    }
+
+    fn reclaim_spent(&mut self) -> Vec<Vec<f32>> {
+        self.inner.reclaim_spent()
+    }
+
+    fn recycle(&mut self, bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        self.inner.recycle(bufs)
+    }
+
+    /// The backend's barrier (e.g. the thread handles' OS barrier).
+    fn barrier(&mut self) -> Result<()> {
+        self.inner.barrier()
+    }
+
+    fn all_to_all_v_start(&mut self, send: Vec<Vec<f32>>) -> Result<PendingA2a> {
+        if self.topo.hierarchical() && self.inner.size() > 1 {
+            self.a2a_start_hier(send)
+        } else {
+            self.inner.all_to_all_v_start(send)
+        }
+    }
+
+    /// Hier: the two-level tree as `all_reduce_start` completed on the
+    /// spot, so blocking and bucketed results are bitwise-identical by
+    /// construction (one code path).  Costs one staging copy in and
+    /// one out versus the flat in-place ring — the documented price of
+    /// sharing the schedule; hot paths use the bucketed form, whose
+    /// buffers recycle through the backend freelist.
+    fn all_reduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {
+        if !self.topo.hierarchical() || self.inner.size() <= 1 {
+            return self.inner.all_reduce_sum(buf);
+        }
+        let pending = self.all_reduce_start(vec![buf.to_vec()])?;
+        let out = pending.finish(self)?.pop().expect("one bucket");
+        buf.copy_from_slice(&out);
+        let _ = self.inner.recycle(vec![out]);
+        Ok(())
+    }
+
+    fn all_reduce_start(&mut self, bufs: Vec<Vec<f32>>) -> Result<PendingAllReduce> {
+        if self.topo.hierarchical() && self.inner.size() > 1 {
+            let topo = self.topo;
+            all_reduce_start_hier(self, &topo, bufs)
+        } else {
+            self.inner.all_reduce_start(bufs)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_workers;
+
+    #[test]
+    fn topology_mapping_and_validation() {
+        let t = Topology::new(8, 2).unwrap();
+        assert_eq!(t.nodes(), 4);
+        assert!(t.hierarchical());
+        assert_eq!(t.node_of(5), 2);
+        assert_eq!(t.local_of(5), 1);
+        assert_eq!(t.leader_of(2), 4);
+        assert!(t.is_leader(4) && !t.is_leader(5));
+        assert_eq!(t.node_ranks(1).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(t.leaders(), vec![0, 2, 4, 6]);
+        assert_eq!(Topology::from_nodes(8, 2).unwrap().local_size(), 4);
+        assert!(!Topology::flat(8).hierarchical());
+        assert!(Topology::new(8, 3).is_err());
+        assert!(Topology::new(0, 1).is_err());
+        assert!(Topology::from_nodes(8, 3).is_err());
+    }
+
+    #[test]
+    fn split_builds_intra_and_inter_groups() {
+        run_workers(4, |h| {
+            let topo = Topology::new(4, 2).unwrap();
+            let g = h.split(&topo)?;
+            let node = h.rank() / 2;
+            assert_eq!(g.intra.ranks(), &[node * 2, node * 2 + 1]);
+            assert_eq!(g.intra.rank(), h.rank() % 2);
+            match (h.rank() % 2, &g.inter) {
+                (0, Some(inter)) => {
+                    assert_eq!(inter.ranks(), &[0, 2]);
+                    assert_eq!(inter.rank(), node);
+                }
+                (_, None) => {}
+                other => panic!("bad inter group for rank {}: {other:?}", h.rank()),
+            }
+            // size mismatch is rejected
+            assert!(h.split(&Topology::new(8, 2).unwrap()).is_err());
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn subgroup_collectives_run_unchanged() {
+        // The seam claim itself: the *same* trait collectives run on a
+        // sub-group — a2a within the node, all-reduce across leaders.
+        run_workers(4, |mut h| {
+            let topo = Topology::new(4, 2).unwrap();
+            let mut g = h.split(&topo)?;
+            let r = h.rank();
+            {
+                let mut intra = g.intra.bind(&mut h);
+                assert_eq!(intra.size(), 2);
+                let send: Vec<Vec<f32>> =
+                    (0..2).map(|p| vec![(r * 10 + p) as f32; p + 1]).collect();
+                let recv = intra.all_to_all_v(send)?;
+                let node = topo.node_of(r);
+                for (p, buf) in recv.iter().enumerate() {
+                    let peer = topo.node_ranks(node).nth(p).unwrap();
+                    assert_eq!(
+                        buf,
+                        &vec![(peer * 10 + topo.local_of(r)) as f32; topo.local_of(r) + 1]
+                    );
+                }
+                intra.barrier()?;
+            }
+            if let Some(inter) = g.inter.as_mut() {
+                let mut inter = inter.bind(&mut h);
+                let mut buf = vec![(r + 1) as f32; 5];
+                inter.all_reduce_sum(&mut buf)?;
+                // leaders are 0 and 2: 1 + 3
+                assert!(buf.iter().all(|&x| x == 4.0), "{buf:?}");
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn subgroup_nonblocking_requests_roundtrip() {
+        run_workers(4, |mut h| {
+            let topo = Topology::new(4, 2).unwrap();
+            let mut g = h.split(&topo)?;
+            let mut intra = g.intra.bind(&mut h);
+            let me = intra.rank();
+            let other = 1 - me;
+            let tag = (intra.next_seq() << 8) | 1;
+            intra.isend(other, tag, vec![me as f32; 3])?;
+            let req = intra.irecv(other, tag)?;
+            let data = intra.wait(req)?.unwrap();
+            assert_eq!(data, vec![other as f32; 3]);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn flat_topo_comm_is_pure_passthrough() {
+        run_workers(3, |h| {
+            let topo = Topology::flat(3);
+            let mut c = TopoComm::new(h, topo)?;
+            let r = c.rank() as f32;
+            let send: Vec<Vec<f32>> = (0..3).map(|p| vec![r, p as f32]).collect();
+            let recv = c.all_to_all_v(send)?;
+            for (p, buf) in recv.iter().enumerate() {
+                assert_eq!(buf, &vec![p as f32, r]);
+            }
+            let mut buf = vec![r + 1.0; 4];
+            c.all_reduce_sum(&mut buf)?;
+            assert!(buf.iter().all(|&x| x == 6.0));
+            assert_eq!(c.counters().get("a2a_hier_calls"), 0);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn hier_a2a_is_element_identical_to_flat() {
+        for (w, l) in [(4usize, 2usize), (6, 3), (4, 4), (8, 2)] {
+            run_workers(w, move |h| {
+                let r = h.rank();
+                // ragged payloads incl. empties
+                let send: Vec<Vec<f32>> = (0..w)
+                    .map(|p| {
+                        (0..(r * 3 + p * 5) % 7)
+                            .map(|i| (r * 1000 + p * 10 + i) as f32)
+                            .collect()
+                    })
+                    .collect();
+                let mut c = TopoComm::new(h, Topology::new(w, l).unwrap())?;
+                let recv = c.all_to_all_v(send)?;
+                for (p, buf) in recv.iter().enumerate() {
+                    let want: Vec<f32> = (0..(p * 3 + r * 5) % 7)
+                        .map(|i| (p * 1000 + r * 10 + i) as f32)
+                        .collect();
+                    assert_eq!(buf, &want, "w={w} l={l}: rank {r} from peer {p}");
+                }
+                assert!(c.counters().get("a2a_hier_calls") > 0);
+                Ok(())
+            })
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn hier_a2a_start_prefills_pending() {
+        run_workers(4, |h| {
+            let r = h.rank();
+            let send: Vec<Vec<f32>> =
+                (0..4).map(|p| vec![(r * 4 + p) as f32; p + 1]).collect();
+            let mut c = TopoComm::new(h, Topology::new(4, 2).unwrap())?;
+            let mut pending = c.all_to_all_v_start(send)?;
+            for p in (0..4).rev() {
+                assert_eq!(pending.expected(p), r + 1);
+                let buf = pending.wait_peer(&mut c, p)?;
+                assert_eq!(buf, vec![(p * 4 + r) as f32; r + 1]);
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn hier_all_reduce_sums_exactly_on_integer_data() {
+        // integer-valued f32s: addition is associative, so hier (whose
+        // documented reduction order differs from the flat ring) must
+        // match the flat result bitwise
+        for (w, l) in [(4usize, 2usize), (6, 3), (4, 4), (8, 4)] {
+            run_workers(w, move |mut h| {
+                let r = h.rank();
+                let mut flat: Vec<f32> =
+                    (0..37).map(|i| (r * 100 + i) as f32).collect();
+                h.all_reduce_sum(&mut flat)?;
+                let mut c = TopoComm::new(h, Topology::new(w, l).unwrap())?;
+                let mut buf: Vec<f32> = (0..37).map(|i| (r * 100 + i) as f32).collect();
+                c.all_reduce_sum(&mut buf)?;
+                assert_eq!(buf, flat, "w={w} l={l}");
+                Ok(())
+            })
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn hier_bucketed_matches_hier_blocking_bitwise() {
+        run_workers(4, |h| {
+            let r = h.rank();
+            let mut c = TopoComm::new(h, Topology::new(4, 2).unwrap())?;
+            // order-sensitive values: pins one shared reduction order
+            let lens = [0usize, 7, 64, 129, 3];
+            let bufs: Vec<Vec<f32>> = lens
+                .iter()
+                .enumerate()
+                .map(|(b, &n)| {
+                    (0..n)
+                        .map(|i| (r + 1) as f32 * 1.1 + b as f32 * 0.3 + i as f32 * 0.013)
+                        .collect()
+                })
+                .collect();
+            let mut want = bufs.clone();
+            for wbuf in want.iter_mut() {
+                c.all_reduce_sum(wbuf)?;
+            }
+            let got = c.all_reduce_start(bufs.clone())?.finish(&mut c)?;
+            assert_eq!(got, want, "finish != hier blocking");
+            let mut pending = c.all_reduce_start(bufs)?;
+            for b in (0..lens.len()).rev() {
+                assert_eq!(pending.wait_bucket(&mut c, b)?, want[b], "bucket {b}");
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn hier_all_reduce_single_node_is_gather_broadcast() {
+        // nodes == 1: the tree degenerates to reduce-onto-leader +
+        // broadcast; still must sum exactly on integer data
+        run_workers(3, |h| {
+            let r = h.rank();
+            let mut c = TopoComm::new(h, Topology::new(3, 3).unwrap())?;
+            let mut buf: Vec<f32> = (0..11).map(|i| (r * 10 + i) as f32).collect();
+            c.all_reduce_sum(&mut buf)?;
+            let want: Vec<f32> = (0..11)
+                .map(|i| (0..3).map(|q| (q * 10 + i) as f32).sum())
+                .collect();
+            assert_eq!(buf, want);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn hier_gradsync_composes_for_free() {
+        use crate::coordinator::{ExpertMode, GradSync};
+        use crate::runtime::SyncTag;
+        use crate::tensor::TensorF32;
+        // GradSync's overlapped bucketed sync over a hier TopoComm must
+        // be bitwise-identical to its blocking sync over the same hier
+        // TopoComm (one shared tree schedule underneath both).
+        run_workers(4, |h| {
+            let r = h.rank();
+            let mut c = TopoComm::new(h, Topology::new(4, 2).unwrap())?;
+            let grads: Vec<TensorF32> = [130usize, 7, 64, 3]
+                .iter()
+                .enumerate()
+                .map(|(t, &n)| {
+                    TensorF32::from_vec(
+                        &[n],
+                        (0..n)
+                            .map(|i| ((r * 31 + t * 7 + i) % 97) as f32 * 0.013 - 0.4)
+                            .collect(),
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let tags = [SyncTag::World; 4];
+            let blocking = GradSync::world(4, ExpertMode::Sharded);
+            let mut overlapped = GradSync::world(4, ExpertMode::Sharded);
+            overlapped.overlap = true;
+            overlapped.bucket_bytes = 256;
+            let mut a = grads.clone();
+            blocking.sync(&mut c, &mut a, &tags)?;
+            let mut b = grads;
+            overlapped.sync(&mut c, &mut b, &tags)?;
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.data, y.data, "tensor {i}: hier overlap changed bits");
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}

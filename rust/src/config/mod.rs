@@ -13,6 +13,7 @@ mod toml;
 
 pub use toml::TomlValue;
 
+use crate::comm::Topology;
 use crate::error::{Error, Result};
 
 /// Model hyper-parameters (mirrors `python/compile/gpt.py::GptConfig`).
@@ -163,6 +164,8 @@ impl MoeConfig {
 /// overlap = true      # pipeline dispatch / expert compute / combine
 /// chunks = 4          # ring-offset peer groups per exchange (1 = blocking,
 ///                     # 0 = adaptive from the previous step's wire:compute ratio)
+/// chunk_policy = "mean" # how ranks agree the adaptive chunk count from
+///                     # their measured ratios: "mean" | "max" (straggler-aware)
 /// pool = true         # step-persistent buffer pools on the MoE hot path
 /// progress = false    # TCP progress engine (reader threads drain arrivals
 ///                     # during expert compute; tcp backend only)
@@ -170,6 +173,12 @@ impl MoeConfig {
 ///                     # trainers, overlapped with backward / host Adam
 /// bucket_kb = 512     # target gradient-bucket payload (KiB; tensors are
 ///                     # never split across buckets)
+/// topology = "hier"   # collective routing policy: "flat" (default, the
+///                     # seed ring) | "hier" (node-aware: leader-aggregated
+///                     # all-to-all, two-level tree all-reduce)
+/// nodes = 2           # hier: number of nodes (0 = derive / default 2)
+/// local_size = 4      # hier: ranks per node (0 = derive from `nodes`;
+///                     # contiguous rank blocks, lowest rank = node leader)
 /// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct CommConfig {
@@ -207,6 +216,25 @@ pub struct CommConfig {
     /// is a run of whole same-tag tensors up to this size.  Must be
     /// ≥ 1.
     pub bucket_kb: usize,
+    /// How the ranks agree the *adaptive* chunk count (`chunks = 0`)
+    /// from their exchanged wire:compute ratios: `"mean"` (the
+    /// default — average balance) or `"max"` (straggler-aware: the
+    /// slowest rank's ratio decides, so a skewed-routing straggler
+    /// pulls everyone to finer chunks).
+    pub chunk_policy: String,
+    /// Collective routing policy: `"flat"` (the default — every peer
+    /// one ring, bit-for-bit the seed behaviour) or `"hier"` —
+    /// node-aware collectives over the [`crate::comm::Topology`] from
+    /// `nodes`/`local_size`: HetuMoE-style leader-aggregated
+    /// all-to-all, two-level tree all-reduce, and a locality-ordered
+    /// chunk schedule for the pipelined layer path.
+    pub topology: String,
+    /// Hier: node count.  `0` = derive from `local_size`, or default
+    /// to 2 nodes when neither is given.
+    pub nodes: usize,
+    /// Hier: ranks per node (contiguous blocks; the lowest rank of a
+    /// block is its leader).  `0` = derive from `nodes`.
+    pub local_size: usize,
 }
 
 impl Default for CommConfig {
@@ -218,6 +246,10 @@ impl Default for CommConfig {
             progress: false,
             grad_overlap: false,
             bucket_kb: 512,
+            chunk_policy: "mean".into(),
+            topology: "flat".into(),
+            nodes: 0,
+            local_size: 0,
         }
     }
 }
@@ -226,7 +258,9 @@ impl CommConfig {
     /// The `[comm]` section of an optional `--config` file, with the
     /// `--overlap` / `--no-overlap` / `--no-pool` / `--progress` /
     /// `--no-progress` / `--grad-overlap` / `--no-grad-overlap` flags
-    /// and `--chunks N` (`0` = adaptive) / `--bucket-kb N` overrides.
+    /// and `--chunks N` (`0` = adaptive) / `--chunk-policy mean|max` /
+    /// `--bucket-kb N` / `--topology flat|hier` / `--nodes N` /
+    /// `--local-size N` overrides.
     pub fn from_args(args: &crate::cli::Args) -> Result<CommConfig> {
         let mut cfg = if let Some(path) = args.get("config") {
             ConfigFile::load(path)?.comm()?
@@ -256,6 +290,11 @@ impl CommConfig {
         }
         cfg.chunks = args.usize_or("chunks", cfg.chunks)?;
         cfg.bucket_kb = args.usize_or("bucket-kb", cfg.bucket_kb)?;
+        cfg.chunk_policy =
+            args.choice_or("chunk-policy", CHUNK_POLICIES, &cfg.chunk_policy)?;
+        cfg.topology = args.choice_or("topology", TOPOLOGY_KINDS, &cfg.topology)?;
+        cfg.nodes = args.usize_or("nodes", cfg.nodes)?;
+        cfg.local_size = args.usize_or("local-size", cfg.local_size)?;
         cfg.validate()
     }
 
@@ -267,9 +306,67 @@ impl CommConfig {
                     .into(),
             ));
         }
+        if !CHUNK_POLICIES.contains(&self.chunk_policy.as_str()) {
+            return Err(Error::Config(format!(
+                "comm.chunk_policy must be one of {CHUNK_POLICIES:?}, got `{}`",
+                self.chunk_policy
+            )));
+        }
+        if !TOPOLOGY_KINDS.contains(&self.topology.as_str()) {
+            return Err(Error::Config(format!(
+                "comm.topology must be one of {TOPOLOGY_KINDS:?}, got `{}`",
+                self.topology
+            )));
+        }
         Ok(self)
     }
+
+    /// Resolve the configured [`Topology`] for a concrete world size:
+    /// `"flat"` ignores `nodes`/`local_size`; `"hier"` derives the
+    /// node size from whichever of the two is given (both must agree
+    /// if both are), defaulting to 2 nodes, and validates that the
+    /// world divides evenly into contiguous node blocks.
+    pub fn topology_for(&self, world: usize) -> Result<Topology> {
+        if world == 0 {
+            return Err(Error::Config("topology over an empty world".into()));
+        }
+        if self.topology == "flat" {
+            return Ok(Topology::flat(world));
+        }
+        let local = if self.local_size > 0 {
+            if self.nodes > 0 && self.nodes * self.local_size != world {
+                return Err(Error::Config(format!(
+                    "comm: nodes = {} × local_size = {} ≠ {} workers",
+                    self.nodes, self.local_size, world
+                )));
+            }
+            self.local_size
+        } else if self.nodes > 0 {
+            if world % self.nodes != 0 {
+                return Err(Error::Config(format!(
+                    "comm: {world} workers not divisible into {} nodes",
+                    self.nodes
+                )));
+            }
+            world / self.nodes
+        } else if world % 2 == 0 {
+            world / 2 // the default hier shape: two nodes
+        } else {
+            return Err(Error::Config(format!(
+                "comm: topology = \"hier\" with {world} workers needs an \
+                 explicit nodes / local_size split"
+            )));
+        };
+        Topology::new(world, local)
+    }
 }
+
+/// Valid `[comm] topology` values.
+pub const TOPOLOGY_KINDS: &[&str] = &["flat", "hier"];
+
+/// Valid `[comm] chunk_policy` values — aliased from
+/// [`crate::moe::ChunkPolicy::KINDS`], the single source of truth.
+pub const CHUNK_POLICIES: &[&str] = crate::moe::ChunkPolicy::KINDS;
 
 pub const GATE_KINDS: &[&str] = &["topk", "switch", "noisy_topk"];
 
@@ -412,6 +509,10 @@ impl ConfigFile {
             c.progress = s.bool_or("progress", c.progress);
             c.grad_overlap = s.bool_or("grad_overlap", c.grad_overlap);
             c.bucket_kb = s.usize_or("bucket_kb", c.bucket_kb);
+            c.chunk_policy = s.str_or("chunk_policy", &c.chunk_policy);
+            c.topology = s.str_or("topology", &c.topology);
+            c.nodes = s.usize_or("nodes", c.nodes);
+            c.local_size = s.usize_or("local_size", c.local_size);
         }
         c.validate()
     }
@@ -544,6 +645,58 @@ chunks = 2
         assert!(cfg.grad_overlap);
         assert_eq!(cfg.bucket_kb, 32);
         assert!(CommConfig::from_args(&argv("x --bucket-kb 0")).is_err());
+    }
+
+    #[test]
+    fn topology_knobs_parse_and_validate() {
+        // defaults: flat, auto split, mean policy — the seed behaviour
+        let c = ConfigFile::parse("[train]\nsteps = 1\n").unwrap();
+        let cfg = c.comm().unwrap();
+        assert_eq!(cfg.topology, "flat");
+        assert_eq!(cfg.chunk_policy, "mean");
+        assert_eq!((cfg.nodes, cfg.local_size), (0, 0));
+        assert!(!cfg.topology_for(4).unwrap().hierarchical());
+        // hier section parses; default split is two nodes
+        let c = ConfigFile::parse("[comm]\ntopology = \"hier\"\n").unwrap();
+        let cfg = c.comm().unwrap();
+        let t = cfg.topology_for(4).unwrap();
+        assert_eq!((t.nodes(), t.local_size()), (2, 2));
+        assert!(t.hierarchical());
+        // explicit local_size / nodes, and their consistency
+        let c = ConfigFile::parse("[comm]\ntopology = \"hier\"\nlocal_size = 4\n")
+            .unwrap();
+        assert_eq!(c.comm().unwrap().topology_for(8).unwrap().nodes(), 2);
+        let c = ConfigFile::parse("[comm]\ntopology = \"hier\"\nnodes = 4\n").unwrap();
+        assert_eq!(c.comm().unwrap().topology_for(8).unwrap().local_size(), 2);
+        let c = ConfigFile::parse(
+            "[comm]\ntopology = \"hier\"\nnodes = 2\nlocal_size = 3\n",
+        )
+        .unwrap();
+        assert!(c.comm().unwrap().topology_for(8).is_err()); // 2×3 ≠ 8
+        let c = ConfigFile::parse("[comm]\ntopology = \"hier\"\nnodes = 3\n").unwrap();
+        assert!(c.comm().unwrap().topology_for(8).is_err()); // 8 % 3
+        // odd world without an explicit split cannot default to 2 nodes
+        let c = ConfigFile::parse("[comm]\ntopology = \"hier\"\n").unwrap();
+        assert!(c.comm().unwrap().topology_for(3).is_err());
+        // bad enum values are rejected
+        let c = ConfigFile::parse("[comm]\ntopology = \"star\"\n").unwrap();
+        assert!(c.comm().is_err());
+        let c = ConfigFile::parse("[comm]\nchunk_policy = \"median\"\n").unwrap();
+        assert!(c.comm().is_err());
+        // CLI overrides
+        let argv = |s: &str| {
+            crate::cli::Args::parse(s.split_whitespace().map(|x| x.to_string()), &[])
+                .unwrap()
+        };
+        let cfg = CommConfig::from_args(&argv(
+            "x --topology hier --nodes 2 --local-size 2 --chunk-policy max",
+        ))
+        .unwrap();
+        assert_eq!(cfg.topology, "hier");
+        assert_eq!(cfg.chunk_policy, "max");
+        assert_eq!(cfg.topology_for(4).unwrap().local_size(), 2);
+        assert!(CommConfig::from_args(&argv("x --topology ring")).is_err());
+        assert!(CommConfig::from_args(&argv("x --chunk-policy min")).is_err());
     }
 
     #[test]

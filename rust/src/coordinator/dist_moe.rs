@@ -33,7 +33,15 @@
 //! cotangent flight.  `chunks = 1` (or `overlap = false`, the default)
 //! is the blocking path with bit-identical outputs; `chunks = 0` picks
 //! the count adaptively from the previous step's measured wire:compute
-//! ratio (exchanged on the count round, so ranks stay in lockstep).
+//! ratio (exchanged on the count round, so ranks stay in lockstep;
+//! `[comm] chunk_policy` selects the mean or the straggler-aware max
+//! reduction of those ratios).  Under a hierarchical `[comm] topology`
+//! the chunk schedule is ordered most-local-first
+//! ([`crate::moe::chunk_peer_groups_topo`]) and the blocking
+//! collectives route through the node leaders when the layer is driven
+//! over a [`crate::comm::TopoComm`] — both pure schedule changes, so
+//! outputs stay bit-identical to flat modulo the documented all-reduce
+//! ordering.
 //!
 //! The hot path is *allocation-free and copy-minimal in steady state*:
 //! arriving rows land once in the pooled full-batch buffer, per-chunk
@@ -52,15 +60,15 @@
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::comm::{Comm, CommRequest, PendingAllReduce};
+use crate::comm::{Comm, CommRequest, PendingAllReduce, Topology};
 use crate::config::{CommConfig, MoeConfig};
 use crate::error::{Error, Result};
 use crate::metrics::Counters;
 use crate::model::Adam;
 use crate::moe::{
-    adaptive_chunks, balance_loss, chunk_peer_groups, gate, post_chunk, wait_chunk,
-    DispatchPlan, ExpertBatch, ExpertShard, FfnExpertShard, Gate, GateAssign,
-    PendingChunk,
+    agree_chunks, balance_loss, chunk_peer_groups_topo, gate, post_chunk, wait_chunk,
+    ChunkPolicy, DispatchPlan, ExpertBatch, ExpertShard, FfnExpertShard, Gate,
+    GateAssign, PendingChunk,
 };
 use crate::rng::Rng;
 use crate::runtime::Runtime;
@@ -277,6 +285,19 @@ impl MoeLayerBuilder {
             rank,
         ));
         let gate = gate::from_config(&self.cfg, self.seed)?;
+        // the node topology orders the pipelined exchange's chunks
+        // most-local-first; flat (the default) reproduces the ring
+        // schedule bit-for-bit.  The *collective* policy (hier a2a /
+        // tree all-reduce) lives on the comm wrapper (`TopoComm`), not
+        // here — the layer is generic over whichever comm it is fed.
+        let topo = self.comm.topology_for(workers)?;
+        let chunk_policy =
+            ChunkPolicy::parse(&self.comm.chunk_policy).ok_or_else(|| {
+                Error::Config(format!(
+                    "comm.chunk_policy: unknown policy `{}`",
+                    self.comm.chunk_policy
+                ))
+            })?;
 
         Ok(DistMoeLayer {
             rt,
@@ -299,6 +320,8 @@ impl MoeLayerBuilder {
                 self.comm.chunks.clamp(1, workers)
             },
             grad_overlap: self.comm.grad_overlap,
+            topo,
+            chunk_policy,
             balance_coef: self.cfg.balance_coef as f32,
             pool: Mutex::new(BufferPool::new(self.comm.pool)),
             adapt: Mutex::new(AdaptState {
@@ -346,6 +369,13 @@ pub struct DistMoeLayer {
     /// (`[comm] grad_overlap`): the backward returns `dwg`/`dbg`
     /// already world-averaged, flagged by `LayerGrads::gate_synced`.
     pub grad_overlap: bool,
+    /// Node topology of the worker world (`[comm] topology/nodes/
+    /// local_size`): orders the pipelined exchange's chunks
+    /// most-local-first.  Flat = the ring schedule, bit-for-bit.
+    topo: Topology,
+    /// How ranks agree the adaptive chunk count from their exchanged
+    /// ratios (`[comm] chunk_policy`): mean, or straggler-aware max.
+    chunk_policy: ChunkPolicy,
     /// GShard balance-loss gradient weight (`[moe] balance_coef`).
     balance_coef: f32,
     /// Step-persistent buffer arena (`[comm] pool`): padded batches,
@@ -422,6 +452,11 @@ impl DistMoeLayer {
     /// The expert shard this layer was built with.
     pub fn expert(&self) -> &dyn ExpertShard {
         self.expert.as_ref()
+    }
+
+    /// The node topology the chunk schedule is ordered by.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
     }
 
     /// All trainable parameters as named slots: gate GEMM first
@@ -755,7 +790,7 @@ impl DistMoeLayer {
         let w = self.workers;
         let rank = self.rank;
         let chunks = chunks.clamp(1, w);
-        let groups = chunk_peer_groups(rank, w, chunks);
+        let groups = chunk_peer_groups_topo(rank, &self.topo, chunks);
         counters.add("moe_overlap_chunks", chunks as u64);
         let mut pool = self.pool.lock().unwrap();
         let mut wire_secs = 0f64;
@@ -829,13 +864,11 @@ impl DistMoeLayer {
             self.repool_wire(comm, &mut pool, [data]);
         }
         // agree on the next step's adaptive chunk count from everyone's
-        // ratio (same data, same rank-ordered mean on every worker)
+        // ratio (same data, same rank-ordered reduction — mean or the
+        // straggler-aware max — on every worker)
         if self.chunks == 0 {
-            let valid: Vec<f64> =
-                ratios.iter().filter(|&&r| r >= 0.0).map(|&r| r as f64).collect();
-            if !valid.is_empty() {
-                let mean = valid.iter().sum::<f64>() / valid.len() as f64;
-                self.adapt.lock().unwrap().chunks = adaptive_chunks(mean, 1.0, w);
+            if let Some(c) = agree_chunks(&ratios, self.chunk_policy, w) {
+                self.adapt.lock().unwrap().chunks = c;
             }
         }
 
@@ -1122,7 +1155,7 @@ impl DistMoeLayer {
         let w = self.workers;
         let rank = self.rank;
         let chunks = chunks.clamp(1, w);
-        let groups = chunk_peer_groups(rank, w, chunks);
+        let groups = chunk_peer_groups_topo(rank, &self.topo, chunks);
         let offsets = plan.send_offsets();
         counters.add("moe_overlap_chunks", chunks as u64);
         let mut pool = self.pool.lock().unwrap();
@@ -1259,5 +1292,15 @@ mod tests {
         let b = MoeLayerBuilder::new().pool(false).chunks(0);
         assert!(!b.comm.pool);
         assert_eq!(b.comm.chunks, 0, "0 = adaptive must survive the builder");
+        // topology + chunk policy ride the comm section into the build
+        let comm = CommConfig {
+            topology: "hier".into(),
+            nodes: 2,
+            chunk_policy: "max".into(),
+            ..CommConfig::default()
+        };
+        let b = MoeLayerBuilder::new().comm_config(&comm);
+        assert_eq!(b.comm.topology_for(4).unwrap().local_size(), 2);
+        assert_eq!(ChunkPolicy::parse(&b.comm.chunk_policy), Some(ChunkPolicy::Max));
     }
 }

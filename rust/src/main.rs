@@ -16,7 +16,7 @@
 use std::sync::Arc;
 
 use fastmoe::cli::{Args, Usage};
-use fastmoe::comm::{self, Comm};
+use fastmoe::comm::{self, Comm, TopoComm};
 use fastmoe::config::{fmoefy, CommConfig, ConfigFile, ModelConfig, MoeConfig, TrainConfig};
 use fastmoe::coordinator::{DistTrainer, MoeLayerBuilder, MoeLayerTrainer, Trainer};
 use fastmoe::data::{BatchIter, Corpus};
@@ -35,8 +35,8 @@ fn main() {
         commands: vec![
             ("info", "print artifact and model inventory"),
             ("train", "single-worker fused training loop (Figure 7)"),
-            ("dist-train", "multi-worker training with tag-aware grad sync (--grad-overlap --bucket-kb N)"),
-            ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk, --overlap --chunks N [0=adaptive] --no-pool --progress --grad-overlap)"),
+            ("dist-train", "multi-worker training with tag-aware grad sync (--grad-overlap --bucket-kb N --topology flat|hier --nodes N)"),
+            ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk, --overlap --chunks N [0=adaptive] --chunk-policy mean|max --no-pool --progress --grad-overlap --topology flat|hier --nodes N --local-size N)"),
             ("fmoefy", "Listing-1: dense config -> MoE config at equal FLOPs"),
         ],
     };
@@ -189,7 +189,10 @@ fn dist_train(args: &Args) -> Result<()> {
     let steps = cfg.steps;
     let lr = cfg.lr as f32;
     let seed = cfg.seed;
-    let losses = comm::run_workers(workers, move |mut h| {
+    let losses = comm::run_workers(workers, move |h| {
+        // [comm] topology selects the collective routing (hier = tree
+        // all-reduce under the bucketed sync); flat is a pass-through
+        let mut h = TopoComm::new(h, comm_cfg.topology_for(workers)?)?;
         let mut tr = DistTrainer::with_comm(&rt, &model, seed, workers, lr, &comm_cfg)?;
         let vocab = tr.entry.config_usize("vocab").unwrap_or(256);
         let seq = tr.entry.config_usize("seq").unwrap_or(128);
@@ -237,7 +240,11 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
             "--noise-std".into(), moe_cfg.noise_std.to_string(),
             "--balance-coef".into(), moe_cfg.balance_coef.to_string(),
             "--chunks".into(), comm_cfg.chunks.to_string(),
+            "--chunk-policy".into(), comm_cfg.chunk_policy.clone(),
             "--bucket-kb".into(), comm_cfg.bucket_kb.to_string(),
+            "--topology".into(), comm_cfg.topology.clone(),
+            "--nodes".into(), comm_cfg.nodes.to_string(),
+            "--local-size".into(), comm_cfg.local_size.to_string(),
         ];
         if comm_cfg.overlap {
             argv.push("--overlap".into());
@@ -281,6 +288,7 @@ fn tcp_worker(args: &Args) -> Result<()> {
         // drain socket arrivals during expert compute (reader threads)
         group.enable_progress();
     }
+    let mut group = TopoComm::new(group, comm_cfg.topology_for(workers)?)?;
     let rt = Arc::new(Runtime::open_default()?);
     let layer = MoeLayerBuilder::from_config(&MoeConfig::from_args(args)?)
         .comm_config(&comm_cfg)
@@ -311,12 +319,12 @@ fn tcp_worker(args: &Args) -> Result<()> {
         std::process::id(),
         watch.secs(),
         util::gflops(flops, watch.secs()),
-        util::fmt_bytes(group.counters.get("bytes_sent") as usize),
+        util::fmt_bytes(group.inner().counters.get("bytes_sent") as usize),
         util::fmt_bytes(counters.get("moe_copy_bytes") as usize),
         pool.hits,
         pool.misses,
-        if group.progress_enabled() {
-            format!(", progress drained {}", group.progress_arrivals())
+        if group.inner().progress_enabled() {
+            format!(", progress drained {}", group.inner().progress_arrivals())
         } else {
             String::new()
         },
@@ -344,7 +352,8 @@ fn dist_moe(args: &Args) -> Result<()> {
             "off".into()
         }
     );
-    let stats = comm::run_workers(workers, move |mut h| {
+    let stats = comm::run_workers(workers, move |h| {
+        let mut h = TopoComm::new(h, comm_cfg.topology_for(workers)?)?;
         let layer = MoeLayerBuilder::from_config(&moe_cfg)
             .comm_config(&comm_cfg)
             .seed(seed)

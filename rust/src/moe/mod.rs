@@ -37,7 +37,7 @@ pub use expert::{ExpertShard, FfnExpertShard};
 pub use gate::{Gate, NoisyTopKGate, SwitchGate, TopKSoftmaxGate};
 pub use monitor::{balance_loss, LoadMonitor};
 
-use crate::comm::{Comm, CommRequest};
+use crate::comm::{Comm, CommRequest, Topology};
 use crate::error::{Error, Result};
 use crate::tensor::{ops, BufferPool, TensorF32};
 
@@ -358,6 +358,108 @@ pub fn chunk_peer_groups(rank: usize, workers: usize, chunks: usize) -> Vec<Chun
             }
         })
         .collect()
+}
+
+/// [`chunk_peer_groups`] with node locality: under a hierarchical
+/// [`Topology`], ring offsets are ordered **most-local-first** before
+/// being split into chunks, so chunk 0 carries the offsets that are
+/// intra-node for the most ranks (self always first) and the
+/// inter-node offsets ride the later chunks — the cheap local rows
+/// compute while the expensive cross-node rows are still on the wire.
+///
+/// The offset → chunk assignment is *rank-independent* (offsets are
+/// scored by how many ranks they keep on-node, not by this rank's own
+/// view), which is what preserves the mirror property — `r` dispatches
+/// to `p` in chunk `c` exactly when `p` hosts `r` in its chunk `c` —
+/// and therefore the cross-rank tag lockstep of the pipeline.  Flat
+/// topologies reproduce [`chunk_peer_groups`] exactly (all offsets
+/// score alike, and the ascending-offset tie-break restores the ring
+/// order), so `topology = "flat"` stays bit-compatible.
+pub fn chunk_peer_groups_topo(
+    rank: usize,
+    topo: &Topology,
+    chunks: usize,
+) -> Vec<ChunkPeers> {
+    let w = topo.world().max(1);
+    let l = topo.local_size();
+    if l <= 1 || l >= w {
+        // flat, or a single node: every offset is equally local
+        return chunk_peer_groups(rank, w, chunks);
+    }
+    // score(o) = #ranks whose offset-o peer shares their node; with
+    // contiguous blocks of l that is max(0, l−o) forward plus the
+    // wrap-around max(0, l−(w−o)) — independent of the rank
+    let score = |o: usize| -> usize {
+        if o == 0 {
+            return l; // self
+        }
+        l.saturating_sub(o) + l.saturating_sub(w - o)
+    };
+    let mut offsets: Vec<usize> = (0..w).collect();
+    offsets.sort_by(|&a, &b| score(b).cmp(&score(a)).then(a.cmp(&b)));
+    let c = chunks.clamp(1, w);
+    (0..c)
+        .map(|i| {
+            let group = &offsets[i * w / c..(i + 1) * w / c];
+            ChunkPeers {
+                out_peers: group.iter().map(|&o| (rank + o) % w).collect(),
+                in_peers: group.iter().map(|&o| (rank + w - o) % w).collect(),
+            }
+        })
+        .collect()
+}
+
+/// How the ranks reduce their exchanged per-rank wire:compute ratios
+/// into one agreed adaptive chunk count (`[comm] chunk_policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkPolicy {
+    /// Average balance across ranks (the default).
+    Mean,
+    /// Straggler-aware: the rank with the most wire-bound step decides,
+    /// so one skewed-routing straggler pulls everyone to finer chunks
+    /// (its wire time is what the others end up waiting on anyway).
+    Max,
+}
+
+impl ChunkPolicy {
+    /// The valid `[comm] chunk_policy` spellings — the one list config
+    /// validation and the builder both consult (kept adjacent to
+    /// [`ChunkPolicy::parse`] so they cannot drift).
+    pub const KINDS: &'static [&'static str] = &["mean", "max"];
+
+    /// Parse a `[comm] chunk_policy` value.
+    pub fn parse(s: &str) -> Option<ChunkPolicy> {
+        match s {
+            "mean" => Some(ChunkPolicy::Mean),
+            "max" => Some(ChunkPolicy::Max),
+            _ => None,
+        }
+    }
+}
+
+/// Reduce the exchanged per-rank ratios (negative = no measurement
+/// yet) into the agreed chunk count for the next pipelined step, or
+/// `None` when nobody has measured anything.  Every rank holds the
+/// same rank-ordered ratio vector, so every rank derives the same
+/// count — the agreement invariant of `[comm] chunks = 0`.
+pub fn agree_chunks(
+    ratios: &[f32],
+    policy: ChunkPolicy,
+    workers: usize,
+) -> Option<usize> {
+    let valid: Vec<f64> = ratios
+        .iter()
+        .filter(|&&r| r >= 0.0)
+        .map(|&r| r as f64)
+        .collect();
+    if valid.is_empty() {
+        return None;
+    }
+    let agg = match policy {
+        ChunkPolicy::Mean => valid.iter().sum::<f64>() / valid.len() as f64,
+        ChunkPolicy::Max => valid.iter().cloned().fold(f64::MIN, f64::max),
+    };
+    Some(adaptive_chunks(agg, 1.0, workers))
 }
 
 /// Pick an exchange chunk count from a measured wire:compute balance
@@ -1238,6 +1340,112 @@ mod tests {
         let copied = eb.rebatch_into(&parts, &mut dst).unwrap();
         assert_eq!(plain.data, dst.data);
         assert_eq!(copied, parts.iter().map(|p| p.len() * 4).sum::<usize>());
+    }
+
+    #[test]
+    fn topo_chunk_groups_cover_mirror_and_prefer_local() {
+        for (w, l) in [(4usize, 2usize), (8, 2), (8, 4), (6, 3), (12, 4)] {
+            let topo = Topology::new(w, l).unwrap();
+            for chunks in [1usize, 2, 3, 4] {
+                for rank in 0..w {
+                    let groups = chunk_peer_groups_topo(rank, &topo, chunks);
+                    let flat = chunk_peer_groups(rank, w, chunks);
+                    assert_eq!(groups.len(), flat.len());
+                    // same chunk sizes as the flat split
+                    for (g, f) in groups.iter().zip(&flat) {
+                        assert_eq!(g.out_peers.len(), f.out_peers.len());
+                    }
+                    // self in chunk 0, both directions
+                    assert!(groups[0].out_peers.contains(&rank));
+                    assert!(groups[0].in_peers.contains(&rank));
+                    // every peer exactly once per direction
+                    let mut outs: Vec<usize> =
+                        groups.iter().flat_map(|g| g.out_peers.clone()).collect();
+                    let mut ins: Vec<usize> =
+                        groups.iter().flat_map(|g| g.in_peers.clone()).collect();
+                    outs.sort_unstable();
+                    ins.sort_unstable();
+                    assert_eq!(outs, (0..w).collect::<Vec<_>>());
+                    assert_eq!(ins, (0..w).collect::<Vec<_>>());
+                }
+                // mirror property survives the locality reordering
+                for r in 0..w {
+                    let gr = chunk_peer_groups_topo(r, &topo, chunks);
+                    for (c, g) in gr.iter().enumerate() {
+                        for &p in &g.out_peers {
+                            let gp = chunk_peer_groups_topo(p, &topo, chunks);
+                            assert!(
+                                gp[c].in_peers.contains(&r),
+                                "w={w} l={l} c={chunks}: {r}→{p} not mirrored"
+                            );
+                        }
+                    }
+                }
+                // locality: summed over ranks, chunk 0 keeps at least
+                // as many intra-node edges as the last chunk
+                if chunks >= 2 {
+                    let intra_edges = |c: usize| -> usize {
+                        (0..w)
+                            .map(|r| {
+                                chunk_peer_groups_topo(r, &topo, chunks)[c]
+                                    .out_peers
+                                    .iter()
+                                    .filter(|&&p| topo.node_of(p) == topo.node_of(r))
+                                    .count()
+                            })
+                            .sum()
+                    };
+                    let nc = chunk_peer_groups_topo(0, &topo, chunks).len();
+                    assert!(
+                        intra_edges(0) >= intra_edges(nc - 1),
+                        "w={w} l={l} chunks={chunks}: chunk 0 not most local"
+                    );
+                }
+            }
+        }
+        // flat topology reproduces the ring schedule exactly
+        let topo = Topology::flat(8);
+        for rank in 0..8 {
+            let a = chunk_peer_groups_topo(rank, &topo, 4);
+            let b = chunk_peer_groups(rank, 8, 4);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.out_peers, y.out_peers);
+                assert_eq!(x.in_peers, y.in_peers);
+            }
+        }
+    }
+
+    #[test]
+    fn agree_chunks_mean_vs_max_under_skew() {
+        // three balanced ranks and one wire-bound straggler: the mean
+        // barely moves, the max policy chases the straggler to finer
+        // chunks — the ROADMAP "beyond the mean" satellite
+        let ratios = [0.1f32, 0.1, 0.1, 4.0];
+        let mean = agree_chunks(&ratios, ChunkPolicy::Mean, 8).unwrap();
+        let max = agree_chunks(&ratios, ChunkPolicy::Max, 8).unwrap();
+        assert!(max > mean, "max {max} must exceed mean {mean} under skew");
+        assert_eq!(max, adaptive_chunks(4.0, 1.0, 8));
+        // unmeasured ranks (negative) are skipped by both policies
+        let ratios = [-1.0f32, 2.0, -1.0];
+        assert_eq!(
+            agree_chunks(&ratios, ChunkPolicy::Mean, 4),
+            agree_chunks(&ratios, ChunkPolicy::Max, 4),
+        );
+        // nobody measured: no agreement
+        assert_eq!(agree_chunks(&[-1.0, -1.0], ChunkPolicy::Max, 4), None);
+        // identical ratios: the policies coincide
+        let ratios = [1.5f32; 4];
+        assert_eq!(
+            agree_chunks(&ratios, ChunkPolicy::Mean, 8),
+            agree_chunks(&ratios, ChunkPolicy::Max, 8),
+        );
+        assert_eq!(ChunkPolicy::parse("mean"), Some(ChunkPolicy::Mean));
+        assert_eq!(ChunkPolicy::parse("max"), Some(ChunkPolicy::Max));
+        assert_eq!(ChunkPolicy::parse("median"), None);
+        // the advertised list and the parser cannot drift apart
+        for k in ChunkPolicy::KINDS {
+            assert!(ChunkPolicy::parse(k).is_some(), "KINDS entry `{k}` unparsable");
+        }
     }
 
     #[test]

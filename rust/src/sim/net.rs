@@ -25,6 +25,16 @@
 //! all-reduces against backward compute and the host optimiser,
 //! degenerating to the serial [`NetModel::grad_step_blocking`] at one
 //! bucket.
+//!
+//! Topology: the model carries a second, *intra-node* link
+//! (`alpha_local` / `beta_local` — NVLink class against the NIC), and
+//! every step has a `*_hier` variant scoring the node-aware policies
+//! (`[comm] topology = "hier"`): leader-aggregated all-to-all
+//! ([`NetModel::all_to_all_hier`]) and the two-level tree all-reduce
+//! ([`NetModel::all_reduce_hier`]).  [`NetModel::hier_favourable`]
+//! names the regime — inter-node bandwidth the bottleneck — in which
+//! hier ≤ flat holds at every byte count (unit-tested, and asserted by
+//! the fig-6 bench at every scale point in that regime).
 
 /// Preset link parameters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -56,10 +66,15 @@ impl NetPreset {
 /// identical — the difference the PR-3 zero-copy hot path eliminates.
 #[derive(Clone, Copy, Debug)]
 pub struct NetModel {
-    /// Per-message latency, seconds.
+    /// Per-message latency of the *inter-node* link, seconds.
     pub alpha: f64,
-    /// Link bandwidth, bytes/second.
+    /// Bandwidth of the *inter-node* link, bytes/second.
     pub beta: f64,
+    /// Per-message latency of the intra-node link (NVLink/shared
+    /// memory class — the hierarchical policies' fast lane), seconds.
+    pub alpha_local: f64,
+    /// Bandwidth of the intra-node link, bytes/second.
+    pub beta_local: f64,
     /// Host memcpy bandwidth for staging copies, bytes/second.
     pub host_beta: f64,
     /// Effective allocate-and-zero bandwidth for fresh padded buffers,
@@ -74,6 +89,9 @@ impl NetModel {
             NetPreset::IbEdr => NetModel {
                 alpha: 1.5e-6,
                 beta: 12.5e9,
+                // NVLink-class intra-node lane: ~300 GB/s, sub-µs
+                alpha_local: 0.4e-6,
+                beta_local: 300.0e9,
                 host_beta: 16.0e9,
                 alloc_beta: 6.0e9,
                 enabled: true,
@@ -81,6 +99,10 @@ impl NetModel {
             NetPreset::Pcie3 => NetModel {
                 alpha: 5.0e-6,
                 beta: 12.0e9,
+                // intra-host PCIe switch: faster than the NIC, but not
+                // by the margin the hier policies need at scale
+                alpha_local: 2.0e-6,
+                beta_local: 64.0e9,
                 host_beta: 16.0e9,
                 alloc_beta: 6.0e9,
                 enabled: true,
@@ -88,6 +110,8 @@ impl NetModel {
             NetPreset::None => NetModel {
                 alpha: 0.0,
                 beta: f64::INFINITY,
+                alpha_local: 0.0,
+                beta_local: f64::INFINITY,
                 host_beta: f64::INFINITY,
                 alloc_beta: f64::INFINITY,
                 enabled: false,
@@ -214,6 +238,203 @@ impl NetModel {
             let per_round = grad_bytes as f64 / b as f64 / n as f64;
             let w = steps as f64 * (self.alpha + per_round / self.beta);
             let t = g + w + a + (b as f64 - 1.0) * g.max(w).max(a);
+            best = best.min(t);
+        }
+        best
+    }
+
+    /// Hierarchical all-to-all among `w` ranks in nodes of `l`
+    /// ([`crate::comm::TopoComm`]'s hier policy): with uniform
+    /// destinations, the intra share `(l−1)/(w−1)` of this rank's
+    /// egress moves peer-to-peer on the local link, and the inter
+    /// share is staged through the node leader (one local gather, one
+    /// local scatter) to ride ONE leader exchange of `nodes−1`
+    /// messages — the per-rank `α·(w−1)` and the intra bytes leave the
+    /// inter link entirely, at the price of two local staging passes
+    /// over the inter share.  `l = 1` degenerates to
+    /// [`NetModel::all_to_all`] exactly.
+    pub fn all_to_all_hier(&self, w: usize, l: usize, bytes_out: usize) -> f64 {
+        if !self.enabled || w <= 1 {
+            return 0.0;
+        }
+        if l <= 1 || w % l != 0 {
+            return self.all_to_all(w, bytes_out);
+        }
+        if l >= w {
+            // single node: all traffic on the local link
+            return self.alpha_local * (w - 1) as f64
+                + bytes_out as f64 / self.beta_local;
+        }
+        let nodes = w / l;
+        let intra = bytes_out as f64 * (l - 1) as f64 / (w - 1) as f64;
+        let inter = bytes_out as f64 - intra;
+        let local = self.alpha_local * (l - 1) as f64 + intra / self.beta_local;
+        let staging = 2.0 * (self.alpha_local + inter / self.beta_local);
+        let leader = self.alpha * (nodes - 1) as f64 + inter / self.beta;
+        local + staging + leader
+    }
+
+    /// Two-level tree all-reduce (the hier schedule under
+    /// `PendingAllReduce`): members reduce onto the leader and receive
+    /// the broadcast on the local link (`2(l−1)` full-buffer local
+    /// hops), and only the leaders run the ring — over `nodes` instead
+    /// of `w` ranks.  `l = 1` degenerates to [`NetModel::all_reduce`]
+    /// exactly.
+    pub fn all_reduce_hier(&self, w: usize, l: usize, bytes: usize) -> f64 {
+        self.ar_hier_t(w, l, bytes as f64)
+    }
+
+    fn ar_hier_t(&self, w: usize, l: usize, bytes: f64) -> f64 {
+        if !self.enabled || w <= 1 {
+            return 0.0;
+        }
+        if l <= 1 || w % l != 0 {
+            let steps = 2 * (w - 1);
+            return steps as f64 * (self.alpha + bytes / w as f64 / self.beta);
+        }
+        let nodes = w / l;
+        let local =
+            2.0 * (l - 1) as f64 * (self.alpha_local + bytes / self.beta_local);
+        let ring = if nodes > 1 {
+            2.0 * (nodes - 1) as f64
+                * (self.alpha + bytes / nodes as f64 / self.beta)
+        } else {
+            0.0
+        };
+        local + ring
+    }
+
+    /// Whether this model's inter-node link is the bottleneck for a
+    /// `(w, l)` shape — the regime where the hierarchical policies pay
+    /// off at *every* byte count.  Sufficient conditions, both proven
+    /// in the step models' terms: (a2a) the local link absorbs the
+    /// intra share plus both leader staging passes cheaper than the
+    /// inter link moved the intra share, and the saved per-peer α
+    /// covers the aggregation α; (all-reduce) the two full-buffer
+    /// local hops per member cost less than the `w → nodes` ring
+    /// shrinkage, i.e. `beta_local ≥ w · beta`.  When this returns
+    /// true, every `*_hier` score is ≤ its flat counterpart (the fig-6
+    /// acceptance assertion); when false the aggregation overhead may
+    /// dominate and hier is not asserted cheaper.
+    pub fn hier_favourable(&self, w: usize, l: usize) -> bool {
+        if !self.enabled || l < 2 || w <= l || w % l != 0 {
+            return false;
+        }
+        let nodes = w / l;
+        let intra = (l - 1) as f64 / (w - 1) as f64;
+        let inter = 1.0 - intra;
+        let a2a_alpha =
+            self.alpha_local * (l as f64 + 1.0) <= self.alpha * (w - nodes) as f64;
+        let a2a_beta =
+            (intra + 2.0 * inter) / self.beta_local <= intra / self.beta;
+        let ar_alpha =
+            self.alpha_local * (l as f64 - 1.0) <= self.alpha * (w - nodes) as f64;
+        let ar_beta = self.beta_local >= self.beta * w as f64;
+        a2a_alpha && a2a_beta && ar_alpha && ar_beta
+    }
+
+    /// [`NetModel::moe_step_blocking`] with the hierarchical exchange.
+    pub fn moe_step_blocking_hier(
+        &self,
+        w: usize,
+        l: usize,
+        bytes_out: usize,
+        compute: f64,
+    ) -> f64 {
+        self.all_to_all_hier(w, l, bytes_out) + compute
+    }
+
+    /// [`NetModel::moe_step_blocking_hier`] plus the serial host term.
+    pub fn moe_step_blocking_hier_host(
+        &self,
+        w: usize,
+        l: usize,
+        bytes_out: usize,
+        compute: f64,
+        copied_bytes: usize,
+        alloc_bytes: usize,
+    ) -> f64 {
+        self.moe_step_blocking_hier(w, l, bytes_out, compute)
+            + self.host_overhead(copied_bytes, alloc_bytes)
+    }
+
+    /// [`NetModel::moe_step_overlapped`] with the hierarchical
+    /// exchange as the wire stage: the same fill/steady/drain pipeline
+    /// over `chunks`, each chunk's wire time `1/chunks` of the hier
+    /// exchange (the locality-ordered chunk schedule).  Monotone in
+    /// the wire term, so hier ≤ flat transfers from the exchange to
+    /// the whole pipelined step whenever [`NetModel::hier_favourable`].
+    pub fn moe_step_overlapped_hier(
+        &self,
+        w: usize,
+        l: usize,
+        bytes_out: usize,
+        compute: f64,
+        chunks: usize,
+    ) -> f64 {
+        if !self.enabled || w <= 1 {
+            return compute;
+        }
+        let c = chunks.clamp(1, w) as f64;
+        let wire_chunk = self.all_to_all_hier(w, l, bytes_out) / c;
+        let comp_chunk = compute / c;
+        wire_chunk + (c - 1.0) * wire_chunk.max(comp_chunk) + comp_chunk
+    }
+
+    /// [`NetModel::moe_step_overlapped_hier`] with the host term folded
+    /// into the compute stage (as in the flat host variant).
+    #[allow(clippy::too_many_arguments)]
+    pub fn moe_step_overlapped_hier_host(
+        &self,
+        w: usize,
+        l: usize,
+        bytes_out: usize,
+        compute: f64,
+        chunks: usize,
+        copied_bytes: usize,
+        alloc_bytes: usize,
+    ) -> f64 {
+        let host = self.host_overhead(copied_bytes, alloc_bytes);
+        if !self.enabled || w <= 1 {
+            return compute + host;
+        }
+        self.moe_step_overlapped_hier(w, l, bytes_out, compute + host, chunks)
+    }
+
+    /// [`NetModel::grad_step_blocking`] with the tree all-reduce.
+    pub fn grad_step_blocking_hier(
+        &self,
+        w: usize,
+        l: usize,
+        grad_bytes: usize,
+        compute: f64,
+        opt: f64,
+    ) -> f64 {
+        compute + self.all_reduce_hier(w, l, grad_bytes) + opt
+    }
+
+    /// [`NetModel::grad_step_overlapped`] with the tree all-reduce as
+    /// each bucket's wire stage — the bound for `GradSync`'s bucketed
+    /// overlap composed with the hier schedule.  `B = 1` equals
+    /// [`NetModel::grad_step_blocking_hier`] exactly.
+    pub fn grad_step_overlapped_hier(
+        &self,
+        w: usize,
+        l: usize,
+        grad_bytes: usize,
+        compute: f64,
+        opt: f64,
+        buckets: usize,
+    ) -> f64 {
+        if !self.enabled || w <= 1 {
+            return compute + opt;
+        }
+        let mut best = f64::INFINITY;
+        for b in 1..=buckets.max(1) {
+            let g = compute / b as f64;
+            let a = opt / b as f64;
+            let wire = self.ar_hier_t(w, l, grad_bytes as f64 / b as f64);
+            let t = g + wire + a + (b as f64 - 1.0) * g.max(wire).max(a);
             best = best.min(t);
         }
         best
@@ -407,6 +628,96 @@ mod tests {
         let m = NetModel::preset(NetPreset::None);
         assert_eq!(m.grad_step_blocking(8, 1 << 30, 2.0, 0.5), 2.5);
         assert_eq!(m.grad_step_overlapped(8, 1 << 30, 2.0, 0.5, 16), 2.5);
+    }
+
+    #[test]
+    fn hier_degenerates_to_flat_at_one_rank_per_node() {
+        let m = NetModel::preset(NetPreset::IbEdr);
+        let (w, bytes, compute, opt) = (8usize, 4 << 20, 3e-3, 1e-3);
+        assert_eq!(m.all_to_all_hier(w, 1, bytes), m.all_to_all(w, bytes));
+        assert_eq!(m.all_reduce_hier(w, 1, bytes), m.all_reduce(w, bytes));
+        // (same value, different association of the /chunks division)
+        let d = (m.moe_step_overlapped_hier(w, 1, bytes, compute, 4)
+            - m.moe_step_overlapped(w, bytes, compute, 4))
+        .abs();
+        assert!(d < 1e-12, "overlapped degenerate diff {d}");
+        assert_eq!(
+            m.grad_step_overlapped_hier(w, 1, bytes, compute, opt, 8),
+            m.grad_step_overlapped(w, bytes, compute, opt, 8)
+        );
+        // one-bucket hier grad step is the blocking hier step exactly
+        let one = m.grad_step_overlapped_hier(8, 2, bytes, compute, opt, 1);
+        let blk = m.grad_step_blocking_hier(8, 2, bytes, compute, opt);
+        assert!((one - blk).abs() < 1e-15);
+        // disabled net ablates the hier terms with everything else
+        let none = NetModel::preset(NetPreset::None);
+        assert_eq!(none.all_to_all_hier(8, 2, 1 << 30), 0.0);
+        assert_eq!(none.all_reduce_hier(8, 2, 1 << 30), 0.0);
+        assert!(!none.hier_favourable(8, 2));
+    }
+
+    #[test]
+    fn hier_beats_flat_whenever_inter_bandwidth_is_the_bottleneck() {
+        // The PR-5 acceptance property: in the hier_favourable regime
+        // (fast local lane, inter link the bottleneck) every hier
+        // score is ≤ its flat counterpart, at EVERY byte count, chunk
+        // count and bucket count — including α-dominated tiny messages.
+        let m = NetModel::preset(NetPreset::IbEdr);
+        let mut asserted = 0usize;
+        for w in [4usize, 6, 8, 16] {
+            for l in [2usize, 3, 4, 8] {
+                if !m.hier_favourable(w, l) {
+                    continue;
+                }
+                asserted += 1;
+                for bytes in [64usize, 1 << 16, 8 << 20, 256 << 20] {
+                    let a2a_f = m.all_to_all(w, bytes);
+                    let a2a_h = m.all_to_all_hier(w, l, bytes);
+                    assert!(
+                        a2a_h <= a2a_f + 1e-15,
+                        "a2a w={w} l={l} bytes={bytes}: {a2a_h} !<= {a2a_f}"
+                    );
+                    let ar_f = m.all_reduce(w, bytes);
+                    let ar_h = m.all_reduce_hier(w, l, bytes);
+                    assert!(
+                        ar_h <= ar_f + 1e-15,
+                        "ar w={w} l={l} bytes={bytes}: {ar_h} !<= {ar_f}"
+                    );
+                    for compute in [0.0, 1e-4, 1e-2] {
+                        for chunks in [1usize, 2, 4] {
+                            let f = m.moe_step_overlapped_host(
+                                w, bytes, compute, chunks, bytes, 0,
+                            );
+                            let h = m.moe_step_overlapped_hier_host(
+                                w, l, bytes, compute, chunks, bytes, 0,
+                            );
+                            assert!(
+                                h <= f + 1e-15,
+                                "moe w={w} l={l} bytes={bytes} c={chunks}: {h} !<= {f}"
+                            );
+                        }
+                        for buckets in [1usize, 4, 16] {
+                            let f = m.grad_step_overlapped(
+                                w, bytes, compute, 1e-3, buckets,
+                            );
+                            let h = m.grad_step_overlapped_hier(
+                                w, l, bytes, compute, 1e-3, buckets,
+                            );
+                            assert!(
+                                h <= f + 1e-15,
+                                "grad w={w} l={l} bytes={bytes} b={buckets}: \
+                                 {h} !<= {f}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        assert!(asserted >= 4, "regime too narrow: {asserted} shapes asserted");
+        // and outside the regime the predicate really gates: a model
+        // whose local link is no faster than the NIC is never favourable
+        let flat_local = NetModel { alpha_local: m.alpha, beta_local: m.beta, ..m };
+        assert!(!flat_local.hier_favourable(8, 2));
     }
 
     #[test]

@@ -21,11 +21,21 @@
 //! *progress engine* (`[comm] progress`), plus engine-specific cases:
 //! `wait_all` completing in true arrival order, and arrivals draining
 //! into user space during a compute window with no blocking comm call.
+//!
+//! A second, *topology* axis ([`topology_suite`]) runs on every
+//! backend under a hierarchical 2-node [`Topology`]: the sub-group
+//! seam (`Comm::split` — world collectives running unchanged on the
+//! intra/inter groups), the leader-aggregated `all_to_all_v`
+//! (element-identical to flat), and the two-level tree
+//! `all_reduce_sum` (exact sums on integer-valued data — where f32
+//! addition is associative, bitwise equal to flat — plus hier-blocking
+//! == hier-bucketed bitwise on order-sensitive data, completed both in
+//! order and in reverse bucket order).
 
 use std::time::Duration;
 
 use fastmoe::comm::tcp::TcpGroup;
-use fastmoe::comm::{run_workers, Comm};
+use fastmoe::comm::{run_workers, Comm, TopoComm, Topology};
 use fastmoe::Result;
 
 const WORKERS: usize = 4;
@@ -210,9 +220,162 @@ fn barrier_variants<C: Comm>(h: &mut C) -> Result<()> {
     Ok(())
 }
 
+/// The topology axis, run over a consumed backend handle (the policy
+/// wrapper owns it): sub-group collectives, hier a2a vs flat, hier
+/// all-reduce vs flat and vs its own bucketed decomposition.
+fn topology_suite<C: Comm>(mut h: C) -> Result<()> {
+    let w = h.size();
+    let r = h.rank();
+    let topo = Topology::new(w, 2)?; // 4 workers → two nodes of two
+
+    // ---- the sub-group seam: world collectives, unchanged, on the
+    // intra and inter groups ----
+    {
+        let mut g = h.split(&topo)?;
+        {
+            let mut intra = g.intra.bind(&mut h);
+            assert_eq!(intra.size(), 2);
+            assert_eq!(intra.rank(), topo.local_of(r));
+            let me = intra.rank();
+            let send: Vec<Vec<f32>> =
+                (0..2).map(|p| vec![(r * 10 + p) as f32; me + p + 1]).collect();
+            let recv = intra.all_to_all_v(send)?;
+            for (p, buf) in recv.iter().enumerate() {
+                let peer = topo.node_ranks(topo.node_of(r)).nth(p).unwrap();
+                assert_eq!(buf, &vec![(peer * 10 + me) as f32; p + me + 1]);
+            }
+            intra.barrier()?;
+        }
+        if let Some(inter) = g.inter.as_mut() {
+            let mut inter = inter.bind(&mut h);
+            assert_eq!(inter.size(), topo.nodes());
+            let mut buf = vec![(r + 1) as f32; 6];
+            inter.all_reduce_sum(&mut buf)?;
+            let want: f32 = (0..topo.nodes())
+                .map(|t| (topo.leader_of(t) + 1) as f32)
+                .sum();
+            assert!(buf.iter().all(|&x| x == want), "{buf:?} != {want}");
+        }
+    }
+    h.barrier()?;
+
+    // ---- hierarchical all-to-all: element-identical to flat ----
+    let mut c = TopoComm::new(h, topo)?;
+    // ragged (incl. empty) payloads with an analytic expectation
+    let send: Vec<Vec<f32>> = (0..w)
+        .map(|p| vec![(r * w + p) as f32; (r + 2 * p) % 5])
+        .collect();
+    let recv = c.all_to_all_v(send)?;
+    for (p, buf) in recv.iter().enumerate() {
+        assert_eq!(buf, &vec![(p * w + r) as f32; (p + 2 * r) % 5], "peer {p}");
+    }
+    // all-empty exchange
+    let recv = c.all_to_all_v((0..w).map(|_| Vec::new()).collect())?;
+    assert!(recv.iter().all(|b| b.is_empty()));
+    // large payloads through the leader route (framing layer)
+    let len = 60_000;
+    let send: Vec<Vec<f32>> = (0..w).map(|p| vec![(r * w + p) as f32; len]).collect();
+    let recv = c.all_to_all_v(send)?;
+    for (p, buf) in recv.iter().enumerate() {
+        assert_eq!(buf.len(), len);
+        assert!(buf.iter().all(|&v| v == (p * w + r) as f32));
+    }
+    // the decomposed entry point hands back a prefilled pending
+    let send: Vec<Vec<f32>> = (0..w).map(|p| vec![r as f32; p + 1]).collect();
+    let mut pending = c.all_to_all_v_start(send)?;
+    for p in (0..w).rev() {
+        assert_eq!(pending.expected(p), r + 1);
+        assert_eq!(pending.wait_peer(&mut c, p)?, vec![p as f32; r + 1]);
+    }
+
+    // ---- two-level tree all-reduce ----
+    // integer-valued data: f32 addition is associative here, so the
+    // tree's (documented, different) reduction order must still land
+    // on the flat ring's bits exactly
+    let mut buf: Vec<f32> = (0..37).map(|i| (r * 100 + i) as f32).collect();
+    c.all_reduce_sum(&mut buf)?;
+    let want: Vec<f32> = (0..37)
+        .map(|i| (0..w).map(|q| (q * 100 + i) as f32).sum())
+        .collect();
+    assert_eq!(buf, want, "hier all-reduce broke exact integer sums");
+    // order-sensitive data: blocking == bucketed bitwise, in-order
+    // finish and reverse wait_bucket alike, over the payload matrix
+    let sets: &[&[usize]] = &[&[4], &[0], &[7, 0, 129], &[1, 3, 2, 5, 8], &[60_000]];
+    for (si, lens) in sets.iter().enumerate() {
+        let bufs: Vec<Vec<f32>> = lens
+            .iter()
+            .enumerate()
+            .map(|(b, &l)| {
+                (0..l)
+                    .map(|i| {
+                        (r + 1) as f32 * 1.1
+                            + b as f32 * 0.3
+                            + (i % 17) as f32 * 0.013
+                            + si as f32 * 0.07
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut want = bufs.clone();
+        for wbuf in want.iter_mut() {
+            c.all_reduce_sum(wbuf)?;
+        }
+        // determinism: a second blocking pass lands on the same bits
+        let mut again = bufs.clone();
+        for wbuf in again.iter_mut() {
+            c.all_reduce_sum(wbuf)?;
+        }
+        assert_eq!(again, want, "set {si}: hier reduction not deterministic");
+        let got = c.all_reduce_start(bufs.clone())?.finish(&mut c)?;
+        assert_eq!(got, want, "set {si}: hier finish != hier blocking");
+        let mut pending = c.all_reduce_start(bufs)?;
+        for b in (0..lens.len()).rev() {
+            assert_eq!(pending.wait_bucket(&mut c, b)?, want[b], "set {si} bucket {b}");
+        }
+    }
+    c.barrier()?;
+    Ok(())
+}
+
 #[test]
 fn conformance_over_thread_channels() {
     run_workers(WORKERS, |mut h| conformance_suite(&mut h)).unwrap();
+}
+
+#[test]
+fn topology_conformance_over_thread_channels() {
+    run_workers(WORKERS, topology_suite).unwrap();
+}
+
+#[test]
+fn topology_conformance_over_tcp_mesh() {
+    let joins: Vec<_> = (0..WORKERS)
+        .map(|rank| {
+            std::thread::spawn(move || {
+                let g = TcpGroup::connect_local(rank, WORKERS, 47930).unwrap();
+                topology_suite(g).unwrap();
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+#[test]
+fn topology_conformance_over_tcp_mesh_with_progress_engine() {
+    let joins: Vec<_> = (0..WORKERS)
+        .map(|rank| {
+            std::thread::spawn(move || {
+                let mut g = TcpGroup::connect_local(rank, WORKERS, 47950).unwrap();
+                g.enable_progress();
+                topology_suite(g).unwrap();
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
 }
 
 #[test]

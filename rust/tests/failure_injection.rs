@@ -4,7 +4,7 @@
 use std::sync::Arc;
 
 use fastmoe::comm::tcp::TcpGroup;
-use fastmoe::comm::{run_workers, Comm};
+use fastmoe::comm::{run_workers, Comm, TopoComm, Topology};
 use fastmoe::error::Error;
 use fastmoe::moe::bucket_for;
 use fastmoe::runtime::{Manifest, Runtime};
@@ -138,6 +138,75 @@ fn tcp_worker_death_mid_bucketed_sync_errors_survivors() {
         assert!(
             j.join().unwrap(),
             "rank {rank}: survivor completed a sync through a dead peer"
+        );
+    }
+}
+
+/// Worker `victim` dies while the others drive the hierarchical
+/// (2-node) bucketed all-reduce; every survivor must error (the
+/// death-aware receives cascade through gather, ring and broadcast
+/// edges), contained by `run_workers` as `Error::Worker`.
+fn hier_death_is_contained(victim: usize) {
+    let res = run_workers(4, move |h| {
+        if h.rank() == victim {
+            return Err(Error::msg("injected death"));
+        }
+        let mut c = TopoComm::new(h, Topology::new(4, 2).unwrap())?;
+        let bufs: Vec<Vec<f32>> =
+            (0..3).map(|b| vec![c.rank() as f32 + b as f32; 129]).collect();
+        for _ in 0..8 {
+            let pending = c.all_reduce_start(bufs.clone())?;
+            let _ = pending.finish(&mut c)?;
+        }
+        Ok(())
+    });
+    match res {
+        Err(Error::Worker { .. }) => {}
+        other => panic!(
+            "victim {victim}: expected contained worker failure, got {other:?}"
+        ),
+    }
+}
+
+#[test]
+fn hier_leader_death_mid_tree_all_reduce_is_contained() {
+    // rank 0 leads node 0: its member starves on the broadcast, the
+    // other leader starves on the ring — both must error, not hang
+    hier_death_is_contained(0);
+}
+
+#[test]
+fn hier_member_death_mid_tree_all_reduce_is_contained() {
+    // rank 1 is a plain member: its leader starves on the gather, and
+    // the error cascades across the leader ring to the other node
+    hier_death_is_contained(1);
+}
+
+#[test]
+fn tcp_deferred_flush_death_is_detected() {
+    // No progress engine: the deferred-flush receive path must surface
+    // a dead peer as a typed error — via EOF when the OS delivers it,
+    // via the keepalive probe when it doesn't — never a hang.
+    const WORKERS: usize = 3;
+    let joins: Vec<_> = (0..WORKERS)
+        .map(|rank| {
+            std::thread::spawn(move || {
+                let mut g = TcpGroup::connect_local(rank, WORKERS, 47970).unwrap();
+                if rank == 1 {
+                    // connect (the mesh needs every rank), then die
+                    return true;
+                }
+                // survivors block on a message the dead peer never
+                // sends; the deferred-flush liveness machinery must
+                // error them out
+                g.recv(1, 12345).is_err()
+            })
+        })
+        .collect();
+    for (rank, j) in joins.into_iter().enumerate() {
+        assert!(
+            j.join().unwrap(),
+            "rank {rank}: survived a recv from a dead peer"
         );
     }
 }

@@ -15,10 +15,14 @@
 
 use std::sync::Arc;
 
-use fastmoe::comm::{run_workers, Comm};
+use fastmoe::comm::{run_workers, Comm, TopoComm};
+use fastmoe::config::CommConfig;
 use fastmoe::coordinator::MoeLayerBuilder;
 use fastmoe::metrics::Counters;
-use fastmoe::moe::{chunk_peer_groups, post_chunk, wait_chunk, PendingChunk};
+use fastmoe::comm::Topology;
+use fastmoe::moe::{
+    chunk_peer_groups, chunk_peer_groups_topo, post_chunk, wait_chunk, PendingChunk,
+};
 use fastmoe::rng::Rng;
 use fastmoe::runtime::Runtime;
 use fastmoe::tensor::TensorF32;
@@ -105,6 +109,52 @@ fn chunked_schedule_reproduces_blocking_all_to_all() {
 }
 
 #[test]
+fn topo_chunked_schedule_reproduces_blocking_all_to_all() {
+    // The locality-ordered (hier) chunk schedule is a pure reordering
+    // of the same per-chunk tag protocol: driven through the layer's
+    // own post_chunk / wait_chunk, it must reproduce a blocking
+    // all_to_all_v exactly — the mirror property across ranks is what
+    // keeps the tags in lockstep despite the reordering.
+    for (workers, local, chunks) in [(4usize, 2usize, 2usize), (8, 2, 4), (8, 4, 3), (6, 3, 2)]
+    {
+        run_workers(workers, move |mut h| {
+            let topo = Topology::new(workers, local).unwrap();
+            let r = h.rank();
+            let send: Vec<Vec<f32>> = (0..workers)
+                .map(|p| vec![(r * workers + p) as f32; (r + 2 * p) % 4 + 1])
+                .collect();
+            let recv_ref = h.all_to_all_v(send.clone())?;
+            let groups = chunk_peer_groups_topo(r, &topo, chunks);
+            let nc = groups.len();
+            let tags: Vec<u64> = (0..nc).map(|_| (h.next_seq() << 8) | 1).collect();
+            let mut outbox = send;
+            let mut parts: Vec<Option<Vec<f32>>> =
+                (0..workers).map(|_| None).collect();
+            let mut pend: Vec<PendingChunk> = (0..nc).map(|_| Vec::new()).collect();
+            post_chunk(&mut h, r, &groups[0], tags[0], &mut outbox, &mut parts, &mut pend[0])?;
+            for c in 0..nc {
+                if c + 1 < nc {
+                    post_chunk(
+                        &mut h, r, &groups[c + 1], tags[c + 1], &mut outbox,
+                        &mut parts, &mut pend[c + 1],
+                    )?;
+                }
+                wait_chunk(&mut h, std::mem::take(&mut pend[c]), &mut parts)?;
+            }
+            for (p, part) in parts.iter().enumerate() {
+                assert_eq!(
+                    part.as_ref().unwrap_or(&Vec::new()),
+                    &recv_ref[p],
+                    "w={workers} l={local} c={chunks}: peer {p} mismatch"
+                );
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}
+
+#[test]
 fn overlapped_layer_is_bit_identical_to_blocking() {
     let Some(rt) = Runtime::open_default().ok().map(Arc::new) else {
         eprintln!("skipping: no artifacts");
@@ -157,6 +207,95 @@ fn overlapped_layer_is_bit_identical_to_blocking() {
             }
             // same exchange volume: overlap is a schedule, not a diet
             assert_eq!(b.2, o.2, "rank {rank}: a2a byte accounting drifted");
+        }
+    }
+}
+
+#[test]
+fn hier_topology_layer_is_bit_identical_to_flat() {
+    // One hierarchical configuration end to end (PR 5): the layer over
+    // a 2-node `TopoComm`.  The blocking path routes its collectives
+    // through the node leaders, the pipelined path through the
+    // locality-ordered chunk schedule — both are pure *routing*
+    // changes (no cross-rank reduction happens inside the layer when
+    // grad_overlap is off), so outputs and every gradient must be
+    // bitwise identical to each other AND to the flat blocking layer.
+    let Some(rt) = Runtime::open_default().ok().map(Arc::new) else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let workers = 4usize;
+    if rt
+        .manifest
+        .artifact(&format!("gate_fwd_w{workers}"))
+        .is_none()
+    {
+        return;
+    }
+    let run_hier = |overlap: bool, chunks: usize| {
+        let rt = rt.clone();
+        run_workers(workers, move |h| {
+            let comm_cfg = CommConfig {
+                topology: "hier".into(),
+                nodes: 2,
+                overlap,
+                chunks,
+                ..CommConfig::default()
+            };
+            let mut h = TopoComm::new(h, comm_cfg.topology_for(workers)?)?;
+            let layer = MoeLayerBuilder::new()
+                .seed(7)
+                .comm_config(&comm_cfg)
+                .build(rt.clone(), workers, h.rank())?;
+            let mut x = TensorF32::zeros(&[layer.nb, layer.dm]);
+            Rng::new(2000 + h.rank() as u64).fill_normal(&mut x.data, 1.0);
+            let mut counters = Counters::new();
+            let (y, state) = layer.forward(&mut h, x, &mut counters)?;
+            let mut dy = y.clone();
+            let n = dy.data.len() as f32;
+            for v in dy.data.iter_mut() {
+                *v /= n;
+            }
+            let grads = layer.backward(&mut h, &state, &dy, &mut counters)?;
+            Ok((y, grads))
+        })
+        .unwrap()
+    };
+    // flat blocking reference, same seeds/inputs as the hier runs
+    let flat = run_workers(workers, {
+        let rt = rt.clone();
+        move |mut h| {
+            let layer = MoeLayerBuilder::new()
+                .seed(7)
+                .build(rt.clone(), workers, h.rank())?;
+            let mut x = TensorF32::zeros(&[layer.nb, layer.dm]);
+            Rng::new(2000 + h.rank() as u64).fill_normal(&mut x.data, 1.0);
+            let mut counters = Counters::new();
+            let (y, state) = layer.forward(&mut h, x, &mut counters)?;
+            let mut dy = y.clone();
+            let n = dy.data.len() as f32;
+            for v in dy.data.iter_mut() {
+                *v /= n;
+            }
+            let grads = layer.backward(&mut h, &state, &dy, &mut counters)?;
+            Ok((y, grads))
+        }
+    })
+    .unwrap();
+    for (which, chunks) in [("blocking", 1usize), ("chunks=2", 2), ("chunks=4", 4)] {
+        let hier = run_hier(which != "blocking", chunks);
+        for (rank, (f, o)) in flat.iter().zip(&hier).enumerate() {
+            assert_eq!(f.0.data, o.0.data, "{which} rank {rank}: forward bits");
+            assert_eq!(f.1.dx.data, o.1.dx.data, "{which} rank {rank}: dx bits");
+            assert_eq!(f.1.dwg.data, o.1.dwg.data, "{which} rank {rank}: dwg bits");
+            assert_eq!(f.1.dbg.data, o.1.dbg.data, "{which} rank {rank}: dbg bits");
+            for ((n1, g1), (n2, g2)) in f.1.expert.iter().zip(&o.1.expert) {
+                assert_eq!(n1, n2);
+                assert_eq!(
+                    g1.data, g2.data,
+                    "{which} rank {rank}: expert grad {n1} bits"
+                );
+            }
         }
     }
 }

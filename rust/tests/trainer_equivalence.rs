@@ -13,7 +13,7 @@
 use std::sync::Arc;
 
 use fastmoe::comm::tcp::TcpGroup;
-use fastmoe::comm::{run_workers, Comm};
+use fastmoe::comm::{run_workers, Comm, TopoComm};
 use fastmoe::config::CommConfig;
 use fastmoe::coordinator::{
     DistTrainer, ExpertMode, GradSync, MoeLayerBuilder, MoeLayerTrainer, Trainer,
@@ -272,6 +272,92 @@ fn overlapped_gate_sync_bit_identical_over_tcp_progress() {
                 a, b,
                 "rank {rank} slot {i}: tcp overlapped trainer diverged \
                  from the thread-backend blocking reference"
+            );
+        }
+    }
+}
+
+#[test]
+fn hier_topology_trainer_end_to_end() {
+    // One hierarchical configuration end to end (PR 5): the
+    // `MoeLayerTrainer` over a 2-node `TopoComm` — the layer's
+    // exchanges route through the node leaders, the gate-grad sync
+    // through the two-level tree.  Pinned two ways: hier blocking vs
+    // hier grad-overlap is BITWISE identical (one shared tree
+    // schedule), and hier vs the flat reference is element-close (the
+    // documented reduction-order difference is the only divergence).
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let workers = 4;
+    if rt
+        .manifest
+        .artifact(&format!("gate_fwd_w{workers}"))
+        .is_none()
+    {
+        return;
+    }
+    let run_hier = |grad_overlap: bool| {
+        let rt = rt.clone();
+        run_workers(workers, move |h| {
+            let comm_cfg = CommConfig {
+                topology: "hier".into(),
+                nodes: 2,
+                ..CommConfig::default()
+            };
+            let mut h = TopoComm::new(h, comm_cfg.topology_for(workers)?)?;
+            let layer = MoeLayerBuilder::new()
+                .seed(3)
+                .comm_config(&comm_cfg)
+                .grad_overlap(grad_overlap)
+                .build(rt.clone(), workers, h.rank())?;
+            let mut tr = MoeLayerTrainer::new(layer, 1e-2);
+            let mut counters = Counters::new();
+            let mut losses = Vec::new();
+            for step in 0..4 {
+                let mut x = TensorF32::zeros(&[tr.layer.nb, tr.layer.dm]);
+                Rng::new(50 + step * 7 + h.rank() as u64).fill_normal(&mut x.data, 1.0);
+                let s = tr.train_step(&mut h, x, &mut counters)?;
+                assert!(s.loss.is_finite(), "step {step}: non-finite loss");
+                losses.push(s.loss);
+            }
+            Ok((
+                losses,
+                tr.layer
+                    .params()
+                    .into_iter()
+                    .map(|(_, t)| t.data.clone())
+                    .collect::<Vec<_>>(),
+            ))
+        })
+        .unwrap()
+    };
+    let hier_blocking = run_hier(false);
+    let hier_overlap = run_hier(true);
+    for rank in 0..workers {
+        for (i, (a, b)) in hier_blocking[rank].1.iter().zip(&hier_overlap[rank].1).enumerate()
+        {
+            assert_eq!(
+                a, b,
+                "rank {rank} slot {i}: hier grad-overlap changed parameter bits"
+            );
+        }
+    }
+    // flat reference (same seeds, same steps, workers = 4): only the
+    // gate-grad reduction order differs, so parameters stay close
+    let flat = moe_trainer_params(rt.clone(), workers, false, false);
+    for rank in 0..workers {
+        for (i, (a, b)) in flat[rank].iter().zip(&hier_blocking[rank].1).enumerate() {
+            let scale =
+                1e-3 + a.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let diff = a
+                .iter()
+                .zip(b)
+                .fold(0.0f32, |m, (x, y)| m.max((x - y).abs()));
+            assert!(
+                diff < 2e-3 * scale,
+                "rank {rank} slot {i}: hier diverged from flat by {diff}"
             );
         }
     }

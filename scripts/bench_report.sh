@@ -1,9 +1,9 @@
 #!/usr/bin/env bash
 # Perf trajectory: run the sim-backed Figure-6 scaling bench and record
-# the result as BENCH_pr4.json at the repo root.
+# the result as BENCH_pr5.json at the repo root.
 #
 #   scripts/bench_report.sh            # default: 4 chunks, 4 iters
-#   CHUNKS=8 ITERS=8 BUCKET_KB=256 scripts/bench_report.sh
+#   CHUNKS=8 ITERS=8 BUCKET_KB=256 NODES=2 scripts/bench_report.sh
 #
 # One bench invocation scores FOUR schedules from the same measured
 # compute, exchange volume, host copy/alloc counters and parameter
@@ -23,6 +23,14 @@
 #                             nonblocking sync pipelined against
 #                             backward and Adam; the bench asserts
 #                             overlapped ≤ blocking at every point
+#   * flat vs hier (PR 5)   — the same measured counters scored under
+#                             the node-aware policies (NODES split,
+#                             default 2): leader-aggregated all-to-all,
+#                             two-level tree all-reduce, locality-
+#                             ordered chunks; the bench asserts
+#                             hier ≤ flat at every scale point where
+#                             the model's inter-node bandwidth is the
+#                             bottleneck (NetModel::hier_favourable)
 # so the comparison is apples-to-apples.  A second invocation actually
 # *exercises* the pipelined zero-copy layer path (--overlap) as a
 # correctness/perf sanity artifact under runs/.
@@ -32,6 +40,7 @@ ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 CHUNKS="${CHUNKS:-4}"
 ITERS="${ITERS:-4}"
 BUCKET_KB="${BUCKET_KB:-512}"
+NODES="${NODES:-2}"
 
 cd "$ROOT/rust"
 
@@ -45,13 +54,13 @@ mkdir -p runs
 
 # 1. measured on the blocking path, scored all four ways → the PR record
 cargo bench --bench fig6_scale -- \
-    --iters "$ITERS" --chunks "$CHUNKS" --bucket-kb "$BUCKET_KB" \
-    --json "$ROOT/BENCH_pr4.json"
+    --iters "$ITERS" --chunks "$CHUNKS" --bucket-kb "$BUCKET_KB" --nodes "$NODES" \
+    --json "$ROOT/BENCH_pr5.json"
 
 # 2. measured on the zero-copy pipelined path (exercises chunked
 #    isend/irecv, slice-view staging, pools), kept as a side artifact
 cargo bench --bench fig6_scale -- \
-    --iters "$ITERS" --chunks "$CHUNKS" --bucket-kb "$BUCKET_KB" --overlap \
+    --iters "$ITERS" --chunks "$CHUNKS" --bucket-kb "$BUCKET_KB" --nodes "$NODES" --overlap \
     --json runs/fig6_overlap_measured.json
 
-echo "bench_report.sh: wrote $ROOT/BENCH_pr4.json (and runs/fig6_overlap_measured.json)"
+echo "bench_report.sh: wrote $ROOT/BENCH_pr5.json (and runs/fig6_overlap_measured.json)"
