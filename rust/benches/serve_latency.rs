@@ -1,0 +1,216 @@
+//! Serving: continuous-batching throughput and request latency of the
+//! `fastmoe serve` daemon.
+//!
+//! Two sections share one JSON record:
+//!
+//! * **Modelled** (always runs): `sim::NetModel::serve_step` prices the
+//!   forward-only inference step against the full training step at the
+//!   same geometry (one exchange pair and one GEMM pass instead of two
+//!   and three — the serve step should be a small fraction), and
+//!   `sim::NetModel::serve_request_latency` quantises request latency
+//!   by the step clock: a request behind `q` queued tokens waits
+//!   `ceil((q + rows) / max_batch)` steps.  The modelled latency
+//!   distribution over a uniform queue-occupancy sweep feeds a
+//!   [`metrics::Histogram`], so `latency_p50/p95/p99` keys are present
+//!   in the JSON even where the runtime is absent.
+//! * **Measured** (runtime-gated): a real thread-backend daemon
+//!   ([`serve::run_thread_daemon`]) on port 48170, driven by
+//!   `--sessions` concurrent client sessions of `--requests` requests
+//!   each.  Reports daemon-side stats (step percentiles, rows/s) and
+//!   client-observed latency percentiles; the daemon-side numbers
+//!   overwrite the modelled percentile keys.
+//!
+//! ```bash
+//! cargo bench --bench serve_latency                      # both sections
+//! cargo bench --bench serve_latency -- --sessions 4 --requests 64
+//! cargo bench --bench serve_latency -- --max-batch 8     # tighter admission
+//! cargo bench --bench serve_latency -- --json out.json   # machine-readable
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use fastmoe::bench::Table;
+use fastmoe::cli::Args;
+use fastmoe::config::{CommConfig, MoeConfig, ServeConfig};
+use fastmoe::metrics::{Histogram, Stopwatch};
+use fastmoe::rng::Rng;
+use fastmoe::runtime::Runtime;
+use fastmoe::serve::{run_thread_daemon, ClientConn, Reply};
+use fastmoe::sim::{NetModel, NetPreset};
+use fastmoe::util::json::Json;
+
+/// Front-end port of the measured section (47870/47970/48070 belong to
+/// the failure tests, 48270.. to the integration tests).
+const BENCH_PORT: usize = 48170;
+
+fn main() -> fastmoe::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::parse(argv, &[])?;
+    let workers = args.usize_or("workers", 2)?.max(1);
+    let sessions = args.usize_or("sessions", 3)?.max(1);
+    let requests = args.usize_or("requests", 32)?.max(1);
+    let rows = args.usize_or("rows", 4)?.max(1);
+    let max_batch = args.usize_or("max-batch", 0)?;
+    let queue_depth = args.usize_or("queue-depth", 1024)?.max(1);
+    let idle_ms = args.u64_or("idle-ms", 5)?.max(1);
+    let seed = args.u64_or("seed", 17)?;
+    let net_name = args.str_or("net", "ib-edr");
+    let json_path = args.get("json").map(|s| s.to_string());
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("serve_latency".into()));
+    root.insert("workers".into(), Json::Num(workers as f64));
+    root.insert("sessions".into(), Json::Num(sessions as f64));
+    root.insert("rows_per_request".into(), Json::Num(rows as f64));
+
+    // ---- modelled section -------------------------------------------------
+    // nominal geometry: the preset's serving point (per-rank token
+    // bytes ≈ max_batch rows of a 1k-float model dim, 2 ms of expert
+    // compute per step — the shape, not the absolute scale, is what
+    // the section checks)
+    let net = NetModel::preset(NetPreset::parse(&net_name).unwrap_or(NetPreset::IbEdr));
+    let model_batch = if max_batch == 0 { 32 } else { max_batch };
+    let bytes = model_batch * 1024 * 4;
+    let compute = 2e-3;
+    let serve_step = net.serve_step(workers, bytes, compute);
+    let train_step = net.moe_step_blocking(workers, 2 * bytes, 3.0 * compute);
+    println!(
+        "serve latency — modelled ({net_name}, {workers} workers, \
+         max_batch {model_batch}): serve step {:.2} ms vs train step {:.2} ms \
+         ({:.0}% of training)\n",
+        serve_step * 1e3,
+        train_step * 1e3,
+        100.0 * serve_step / train_step.max(1e-12),
+    );
+    let mut table = Table::new(&["queued_rows", "steps_waited", "latency_ms"]);
+    let mut modelled = Histogram::latency();
+    // uniform queue-occupancy sweep: a request arriving behind q queued
+    // tokens — the modelled stand-in for the measured arrival process
+    for q in 0..=(2 * model_batch) {
+        let lat = net.serve_request_latency(q, rows, model_batch, serve_step);
+        modelled.record(lat);
+        if q % (model_batch / 4).max(1) == 0 {
+            table.row(vec![
+                q.to_string(),
+                format!("{:.0}", (lat / serve_step.max(1e-12)).round()),
+                format!("{:.2}", lat * 1e3),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "modelled request latency: p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms\n",
+        modelled.p50() * 1e3,
+        modelled.p95() * 1e3,
+        modelled.p99() * 1e3,
+    );
+    root.insert("modelled_serve_step_s".into(), Json::Num(serve_step));
+    root.insert("modelled_train_step_s".into(), Json::Num(train_step));
+    root.insert("latency_p50".into(), Json::Num(modelled.p50()));
+    root.insert("latency_p95".into(), Json::Num(modelled.p95()));
+    root.insert("latency_p99".into(), Json::Num(modelled.p99()));
+    root.insert("measured".into(), Json::Bool(false));
+
+    // ---- measured section (runtime-gated) ---------------------------------
+    if let Ok(rt) = Runtime::open_default() {
+        let rt = Arc::new(rt);
+        // probe the layer geometry from the gate artifact: the clients
+        // need `dm` to size payloads before any layer exists
+        let gate = rt
+            .manifest
+            .artifact(&format!("gate_fwd_w{workers}"))
+            .ok_or_else(|| fastmoe::Error::msg("no gate artifact for this worker count"))?;
+        let dm = gate.inputs[0].shape[1];
+        let cfg = ServeConfig {
+            port: BENCH_PORT,
+            max_batch,
+            queue_depth,
+            idle_ms,
+        };
+        println!(
+            "serve latency — measured: {workers} resident workers, \
+             {sessions} sessions x {requests} requests of {rows}x{dm} tokens"
+        );
+        let moe = MoeConfig::default();
+        let comm = CommConfig::default();
+        let daemon = std::thread::spawn(move || {
+            run_thread_daemon(rt, workers, seed, moe, comm, cfg)
+        });
+        let addr = format!("127.0.0.1:{BENCH_PORT}");
+        let drivers: Vec<_> = (0..sessions)
+            .map(|s| {
+                let addr = addr.clone();
+                std::thread::spawn(move || -> fastmoe::Result<(Histogram, u64)> {
+                    let mut conn = ClientConn::connect(&addr)?;
+                    let mut rng = Rng::new(seed ^ (s as u64) << 8);
+                    let mut lat = Histogram::latency();
+                    let mut rejected = 0u64;
+                    for i in 0..requests {
+                        let mut x = vec![0f32; rows * dm];
+                        rng.fill_normal(&mut x, 1.0);
+                        let t = Stopwatch::start();
+                        conn.request(i as u32, rows, &x)?;
+                        match conn.recv_reply()? {
+                            Reply::Ok { .. } => lat.record(t.secs()),
+                            Reply::Rejected { .. } => rejected += 1,
+                        }
+                    }
+                    Ok((lat, rejected))
+                })
+            })
+            .collect();
+        let mut client_lat = Histogram::latency();
+        let mut rejected = 0u64;
+        for d in drivers {
+            let (l, r) = d
+                .join()
+                .map_err(|_| fastmoe::Error::msg("bench session panicked"))??;
+            client_lat.merge(&l);
+            rejected += r;
+        }
+        let mut stop = ClientConn::connect(&addr)?;
+        stop.shutdown()?;
+        let stats = daemon
+            .join()
+            .map_err(|_| fastmoe::Error::msg("daemon thread panicked"))??;
+        println!(
+            "  daemon: {} steps, {} requests ({} rows) in {:.2} s — \
+             {:.0} rows/s, {} rejected, step p50 {:.2} ms",
+            stats.steps,
+            stats.requests,
+            stats.rows,
+            stats.elapsed_sec,
+            stats.rows as f64 / stats.elapsed_sec.max(1e-9),
+            stats.rejected,
+            stats.step_time.p50() * 1e3,
+        );
+        println!(
+            "  client-observed latency: p50 {:.2} ms, p95 {:.2} ms, \
+             p99 {:.2} ms ({} ok, {rejected} rejected)",
+            client_lat.p50() * 1e3,
+            client_lat.p95() * 1e3,
+            client_lat.p99() * 1e3,
+            client_lat.count(),
+        );
+        // the daemon-side record carries the percentile keys; keep the
+        // client view alongside for the queueing-delay comparison
+        if let Json::Object(stats_obj) = stats.to_json() {
+            for (k, v) in stats_obj {
+                root.insert(k, v);
+            }
+        }
+        root.insert("measured".into(), Json::Bool(true));
+        root.insert("client_latency_p50".into(), Json::Num(client_lat.p50()));
+        root.insert("client_latency_p95".into(), Json::Num(client_lat.p95()));
+        root.insert("client_latency_p99".into(), Json::Num(client_lat.p99()));
+        root.insert("client_rejected".into(), Json::Num(rejected as f64));
+    } else {
+        println!("(runtime unavailable — measured section skipped)");
+    }
+
+    if let Some(path) = json_path {
+        std::fs::write(&path, Json::Object(root).to_string())?;
+        println!("{path} written");
+    }
+    Ok(())
+}

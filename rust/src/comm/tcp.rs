@@ -647,6 +647,54 @@ fn io_err(e: std::io::Error) -> Error {
     Error::Comm(format!("tcp: {e}"))
 }
 
+/// Write one wire frame (module-docs format) to an arbitrary stream.
+///
+/// The serve front end's client protocol reuses the mesh framing on
+/// plain `TcpStream`s outside any `TcpGroup`: `src` carries a
+/// caller-chosen identifier (the mesh uses the sender rank; the serve
+/// protocol uses the client's request id) and `tag` carries the
+/// protocol code.  Flushes, so the frame genuinely departs.
+pub(crate) fn write_stream_frame(
+    w: &mut impl Write,
+    src: u32,
+    tag: u64,
+    data: &[f32],
+) -> std::io::Result<()> {
+    w.write_all(&src.to_le_bytes())?;
+    w.write_all(&tag.to_le_bytes())?;
+    w.write_all(&(data.len() as u64).to_le_bytes())?;
+    // Safety: LE byte view of the f32 payload, same as `write_frame`.
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+/// Read one wire frame from an arbitrary stream with plain blocking
+/// `read_exact` semantics (no keepalive machinery, no frame pool) —
+/// the client-protocol counterpart of [`write_stream_frame`].
+pub(crate) fn read_stream_frame(r: &mut impl Read) -> std::io::Result<Msg> {
+    let mut hdr = [0u8; 4 + 8 + 8];
+    r.read_exact(&mut hdr)?;
+    let src = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+    let tag = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
+    let len = u64::from_le_bytes(hdr[12..20].try_into().unwrap()) as usize;
+    if len > (1 << 31) {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("implausible frame of {len} floats"),
+        ));
+    }
+    let mut data = vec![0f32; len];
+    // Safety: reading LE f32 payload into the vec's byte view.
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, len * 4)
+    };
+    r.read_exact(bytes)?;
+    Ok(Msg { src, tag, data })
+}
+
 impl Comm for TcpGroup {
     fn rank(&self) -> usize {
         self.rank

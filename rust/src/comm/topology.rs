@@ -145,6 +145,49 @@ impl Topology {
     pub fn leaders(&self) -> Vec<usize> {
         (0..self.nodes()).map(|t| self.leader_of(t)).collect()
     }
+
+    /// Discover the topology from a multi-host `hosts` list (one
+    /// `addr[:port]` entry per rank, the `TcpGroup::connect` layout):
+    /// ranks whose entries share an address share a node.
+    ///
+    /// The contiguous-block invariant of [`Topology`] still applies, so
+    /// discovery succeeds only when same-address ranks form contiguous
+    /// runs of one uniform length — the natural way a hosts list is
+    /// written (`a,a,b,b`).  Anything else (ragged runs, an address
+    /// reappearing later, a single host) degrades to [`Topology::flat`]
+    /// rather than erroring: flat is always correct, just not
+    /// locality-aware.
+    pub fn from_hosts(hosts: &[String]) -> Result<Topology> {
+        if hosts.is_empty() {
+            return Err(Error::Config("topology: empty hosts list".into()));
+        }
+        let addr = |h: &String| -> String {
+            // strip an optional `:port`; bracketed IPv6 keeps its brackets
+            match h.rfind(':') {
+                Some(i) if !h[i + 1..].contains(']') => h[..i].to_string(),
+                _ => h.clone(),
+            }
+        };
+        // contiguous same-address runs, checking no address reappears
+        let mut runs: Vec<(String, usize)> = Vec::new();
+        for h in hosts {
+            let a = addr(h);
+            match runs.last_mut() {
+                Some((last, n)) if *last == a => *n += 1,
+                _ => {
+                    if runs.iter().any(|(seen, _)| *seen == a) {
+                        return Ok(Topology::flat(hosts.len()));
+                    }
+                    runs.push((a, 1));
+                }
+            }
+        }
+        let local = runs[0].1;
+        if runs.len() < 2 || runs.iter().any(|(_, n)| *n != local) {
+            return Ok(Topology::flat(hosts.len()));
+        }
+        Topology::new(hosts.len(), local)
+    }
 }
 
 /// A sub-group of world ranks with its own rank/size/tag namespace —
@@ -706,6 +749,37 @@ mod tests {
         assert!(Topology::new(8, 3).is_err());
         assert!(Topology::new(0, 1).is_err());
         assert!(Topology::from_nodes(8, 3).is_err());
+    }
+
+    #[test]
+    fn topology_discovery_from_hosts() {
+        let hosts = |list: &[&str]| -> Vec<String> {
+            list.iter().map(|s| s.to_string()).collect()
+        };
+        // the natural multi-host layout: contiguous uniform runs
+        let t = Topology::from_hosts(&hosts(&[
+            "10.0.0.1:5000",
+            "10.0.0.1:5001",
+            "10.0.0.2:5000",
+            "10.0.0.2:5001",
+        ]))
+        .unwrap();
+        assert_eq!((t.nodes(), t.local_size()), (2, 2));
+        // port-less entries group the same way
+        let t = Topology::from_hosts(&hosts(&["a", "a", "a", "b", "b", "b"])).unwrap();
+        assert_eq!((t.nodes(), t.local_size()), (2, 3));
+        // one host only → nothing to discover → flat
+        let t = Topology::from_hosts(&hosts(&["127.0.0.1:1", "127.0.0.1:2"])).unwrap();
+        assert!(!t.hierarchical());
+        // ragged runs violate the contiguous-block invariant → flat
+        let t = Topology::from_hosts(&hosts(&["a:1", "a:2", "b:1"])).unwrap();
+        assert!(!t.hierarchical());
+        assert_eq!(t.world(), 3);
+        // an address reappearing non-contiguously → flat, not a bad split
+        let t = Topology::from_hosts(&hosts(&["a:1", "b:1", "a:2", "b:2"])).unwrap();
+        assert!(!t.hierarchical());
+        // empty list is a config error
+        assert!(Topology::from_hosts(&[]).is_err());
     }
 
     #[test]

@@ -359,6 +359,26 @@ impl CommConfig {
         };
         Topology::new(world, local)
     }
+
+    /// Resolve the [`Topology`] for a concrete multi-host `hosts` list
+    /// (one `addr[:port]` entry per rank, as taken by
+    /// `TcpGroup::connect`).  When `topology = "hier"` and neither
+    /// `nodes` nor `local_size` is pinned explicitly, the node split
+    /// is *discovered* from the addresses — ranks on the same address
+    /// share a node ([`Topology::from_hosts`]) — so cross-machine
+    /// `--backend tcp` self-configures.  Explicit knobs (or `"flat"`)
+    /// keep their [`CommConfig::topology_for`] meaning.
+    pub fn topology_for_hosts(&self, hosts: &[String]) -> Result<Topology> {
+        if self.topology == "hier" && self.nodes == 0 && self.local_size == 0 {
+            let t = Topology::from_hosts(hosts)?;
+            if t.hierarchical() {
+                return Ok(t);
+            }
+            // a single host (or an undiscoverable layout) falls back to
+            // the explicit-knob path, which defaults to two nodes
+        }
+        self.topology_for(hosts.len())
+    }
 }
 
 /// Valid `[comm] topology` values.
@@ -369,6 +389,83 @@ pub const TOPOLOGY_KINDS: &[&str] = &["flat", "hier"];
 pub const CHUNK_POLICIES: &[&str] = crate::moe::ChunkPolicy::KINDS;
 
 pub const GATE_KINDS: &[&str] = &["topk", "switch", "noisy_topk"];
+
+/// Serving configuration — the `[serve]` config section, consumed by
+/// the `fastmoe serve` daemon (`crate::serve`).
+///
+/// ```toml
+/// [serve]
+/// port = 47800        # front-end listener port for client sessions
+/// max_batch = 0       # token rows admitted per step (0 = the layer batch)
+/// queue_depth = 1024  # queued-token bound; past it requests are rejected
+/// idle_ms = 50        # batcher wait for arrivals before an undersized step
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Front-end listener port for client sessions (the expert-parallel
+    /// mesh keeps its own `base_port + rank` range).
+    pub port: usize,
+    /// Token rows admitted into one forward step.  `0` (the default)
+    /// means the full layer batch `nb`; larger values are clamped to
+    /// `nb` at daemon start.
+    pub max_batch: usize,
+    /// Bound on tokens queued *beyond* the in-flight batch: a request
+    /// that would push the queue past this is rejected immediately
+    /// (admission control) instead of stalling every client behind it.
+    pub queue_depth: usize,
+    /// How long the batcher waits for more arrivals before running an
+    /// undersized step — continuous batching's latency/utilisation
+    /// knob, in milliseconds.
+    pub idle_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { port: 47800, max_batch: 0, queue_depth: 1024, idle_ms: 50 }
+    }
+}
+
+impl ServeConfig {
+    /// The `[serve]` section of an optional `--config` file, with
+    /// `--serve-port`, `--max-batch`, `--queue-depth` and `--idle-ms`
+    /// CLI overrides.  (`--port` stays the mesh base port, as in
+    /// `dist-moe`.)
+    pub fn from_args(args: &crate::cli::Args) -> Result<ServeConfig> {
+        let mut cfg = if let Some(path) = args.get("config") {
+            ConfigFile::load(path)?.serve()?
+        } else {
+            ServeConfig::default()
+        };
+        cfg.port = args.usize_or("serve-port", cfg.port)?;
+        cfg.max_batch = args.usize_or("max-batch", cfg.max_batch)?;
+        cfg.queue_depth = args.usize_or("queue-depth", cfg.queue_depth)?;
+        cfg.idle_ms = args.u64_or("idle-ms", cfg.idle_ms)?;
+        cfg.validate()
+    }
+
+    fn validate(self) -> Result<ServeConfig> {
+        if self.port == 0 || self.port > 65535 {
+            return Err(Error::Config(format!(
+                "serve.port must be in 1..=65535, got {}",
+                self.port
+            )));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::Config(
+                "serve.queue_depth must be ≥ 1 (a zero queue would reject \
+                 every request the batch cannot take immediately)"
+                    .into(),
+            ));
+        }
+        if self.idle_ms == 0 {
+            return Err(Error::Config(
+                "serve.idle_ms must be ≥ 1 (the batcher needs a wait bound)"
+                    .into(),
+            ));
+        }
+        Ok(self)
+    }
+}
 
 /// Distributed-runtime configuration.
 #[derive(Clone, Debug, PartialEq)]
@@ -515,6 +612,17 @@ impl ConfigFile {
             c.local_size = s.usize_or("local_size", c.local_size);
         }
         c.validate()
+    }
+
+    pub fn serve(&self) -> Result<ServeConfig> {
+        let mut v = ServeConfig::default();
+        if let Some(s) = self.section("serve") {
+            v.port = s.usize_or("port", v.port);
+            v.max_batch = s.usize_or("max_batch", v.max_batch);
+            v.queue_depth = s.usize_or("queue_depth", v.queue_depth);
+            v.idle_ms = s.usize_or("idle_ms", v.idle_ms as usize) as u64;
+        }
+        v.validate()
     }
 
     pub fn dist(&self) -> Result<DistConfig> {
@@ -697,6 +805,81 @@ chunks = 2
         assert_eq!(cfg.topology_for(4).unwrap().local_size(), 2);
         assert!(CommConfig::from_args(&argv("x --topology ring")).is_err());
         assert!(CommConfig::from_args(&argv("x --chunk-policy min")).is_err());
+    }
+
+    #[test]
+    fn serve_section_defaults_and_validation() {
+        // no [serve] section at all → defaults
+        let c = ConfigFile::parse("[train]\nsteps = 1\n").unwrap();
+        assert_eq!(c.serve().unwrap(), ServeConfig::default());
+        assert_eq!(c.serve().unwrap().port, 47800);
+        assert_eq!(c.serve().unwrap().max_batch, 0);
+        // section keys parse
+        let c = ConfigFile::parse(
+            "[serve]\nport = 48000\nmax_batch = 8\nqueue_depth = 32\nidle_ms = 5\n",
+        )
+        .unwrap();
+        let cfg = c.serve().unwrap();
+        assert_eq!(cfg.port, 48000);
+        assert_eq!(cfg.max_batch, 8);
+        assert_eq!(cfg.queue_depth, 32);
+        assert_eq!(cfg.idle_ms, 5);
+        // admission control needs a nonzero queue, and a real port
+        let c = ConfigFile::parse("[serve]\nqueue_depth = 0\n").unwrap();
+        assert!(c.serve().is_err());
+        let c = ConfigFile::parse("[serve]\nport = 0\n").unwrap();
+        assert!(c.serve().is_err());
+        let c = ConfigFile::parse("[serve]\nidle_ms = 0\n").unwrap();
+        assert!(c.serve().is_err());
+        // CLI merge: --serve-port (not --port, which stays the mesh base)
+        let argv = |s: &str| {
+            crate::cli::Args::parse(s.split_whitespace().map(|x| x.to_string()), &[])
+                .unwrap()
+        };
+        let cfg = ServeConfig::from_args(&argv(
+            "x --serve-port 48100 --max-batch 4 --queue-depth 16 --idle-ms 10",
+        ))
+        .unwrap();
+        assert_eq!(cfg.port, 48100);
+        assert_eq!(cfg.max_batch, 4);
+        assert_eq!(cfg.queue_depth, 16);
+        assert_eq!(cfg.idle_ms, 10);
+        assert_eq!(ServeConfig::from_args(&argv("x")).unwrap(), ServeConfig::default());
+        assert!(ServeConfig::from_args(&argv("x --queue-depth 0")).is_err());
+    }
+
+    #[test]
+    fn topology_discovered_from_hosts() {
+        let hosts = |list: &[&str]| -> Vec<String> {
+            list.iter().map(|s| s.to_string()).collect()
+        };
+        let hier = CommConfig { topology: "hier".into(), ..Default::default() };
+        // two addresses × two ranks each → discovered 2-node split
+        let t = hier
+            .topology_for_hosts(&hosts(&["10.0.0.1:5000", "10.0.0.1:5001", "10.0.0.2:5000", "10.0.0.2:5001"]))
+            .unwrap();
+        assert!(t.hierarchical());
+        assert_eq!((t.nodes(), t.local_size()), (2, 2));
+        // all ranks on one host → nothing to discover; falls back to the
+        // explicit-knob default (two nodes)
+        let t = hier
+            .topology_for_hosts(&hosts(&["127.0.0.1:1", "127.0.0.1:2", "127.0.0.1:3", "127.0.0.1:4"]))
+            .unwrap();
+        assert_eq!(t.nodes(), 2);
+        // explicit knobs win over discovery
+        let pinned = CommConfig {
+            topology: "hier".into(),
+            nodes: 4,
+            ..Default::default()
+        };
+        let t = pinned
+            .topology_for_hosts(&hosts(&["a:1", "a:2", "b:1", "b:2"]))
+            .unwrap();
+        assert_eq!(t.nodes(), 4);
+        // flat ignores the host layout entirely
+        let flat = CommConfig::default();
+        let t = flat.topology_for_hosts(&hosts(&["a:1", "a:2", "b:1", "b:2"])).unwrap();
+        assert!(!t.hierarchical());
     }
 
     #[test]

@@ -617,6 +617,23 @@ impl DistMoeLayer {
         pool.give_tensor(ROLE_PACKED, state.y_slots);
     }
 
+    /// Forward-only entry for the serving path: [`Self::forward`] with
+    /// the step residuals recycled immediately instead of carried into
+    /// a backward pass.  No cotangent containers are ever drawn (the
+    /// grad-side pool roles stay untouched), so a resident inference
+    /// daemon reuses exactly two step-persistent buffers per step and
+    /// never grows the arena with training-only state.
+    pub fn forward_infer(
+        &self,
+        comm: &mut impl Comm,
+        x: TensorF32,
+        counters: &mut Counters,
+    ) -> Result<TensorF32> {
+        let (y, state) = self.forward(comm, x, counters)?;
+        self.recycle(state);
+        Ok(y)
+    }
+
     /// Forward pass over this worker's `x: [nb, dm]`.
     ///
     /// `counters` records exchange volumes (`moe_a2a_bytes`), host row

@@ -24,11 +24,19 @@
 //!   trainers overlap completion with backward compute and host Adam.
 //!   Tensors are never split across buckets, so overlapped results are
 //!   bit-identical to the blocking per-tensor rings.
+//! * [`ServeLoop`] (`serve_loop`) — the inference-side sibling of the
+//!   trainers: keeps the expert-parallel workers resident between
+//!   requests, steps them in lockstep on a control tag when the front
+//!   end has a batch, and drives only the forward path
+//!   ([`DistMoeLayer::forward_infer`] — no gradients, no cotangent
+//!   pool roles).
 
 mod dist_moe;
+mod serve_loop;
 mod trainer;
 
 pub use dist_moe::{DistMoeLayer, LayerGrads, MoeLayerBuilder, MoeLayerState};
+pub use serve_loop::ServeLoop;
 pub use trainer::{DistTrainer, MoeLayerTrainer, MoeStepStats, StepStats, Trainer};
 
 use crate::comm::{Comm, PendingAllReduce};

@@ -1,0 +1,183 @@
+//! The serving-side coordinator: resident expert-parallel workers
+//! stepped in lockstep by a front end.
+//!
+//! Training drives every rank through the same loop with the same
+//! iteration count, so the collectives line up by construction.  A
+//! serving daemon is different: only rank 0 (the front end) knows when
+//! the next batch exists — requests arrive whenever clients send them —
+//! yet the MoE forward is collective, so *every* rank must enter
+//! `forward` together or the Figure-2 exchange deadlocks.
+//!
+//! [`ServeLoop`] closes that gap with a one-float control frame on a
+//! reserved point-to-point tag: before each forward, rank 0 sends
+//! every peer [`CTL_STEP`]; peers block on that tag
+//! ([`ServeLoop::serve_worker`]), then run the same forward-only step
+//! on an all-zero local batch (the daemon holds all client tokens on
+//! rank 0 — peers contribute capacity, not rows).  [`CTL_STOP`] shuts
+//! the loop down cleanly.  The data path is
+//! [`DistMoeLayer::forward_infer`]: forward + immediate recycle, no
+//! gradients, no cotangent pool roles — the PR 3 zero-copy machinery
+//! with the training half dormant.
+//!
+//! Tag-space note: collective tags are `seq << 8 | code` (far below
+//! [`CTL_TAG`] for any realistic sequence count), sub-group salts sit
+//! at `1 << 61` / `1 << 62`, and the TCP keepalive uses `u64::MAX` —
+//! the control band `1 << 59` collides with none of them.
+
+use crate::comm::Comm;
+use crate::coordinator::DistMoeLayer;
+use crate::error::{Error, Result};
+use crate::metrics::Counters;
+use crate::tensor::TensorF32;
+
+/// Reserved point-to-point tag of serve control frames.
+pub const CTL_TAG: u64 = (1 << 59) | 1;
+
+/// Control payload: run one forward step.
+pub const CTL_STEP: f32 = 1.0;
+
+/// Control payload: leave the serve loop.
+pub const CTL_STOP: f32 = 0.0;
+
+/// The inference-side sibling of the trainers: owns the resident
+/// [`DistMoeLayer`] and keeps all ranks' collective schedules aligned
+/// while batches arrive at the front end's pace.
+pub struct ServeLoop {
+    layer: DistMoeLayer,
+}
+
+impl ServeLoop {
+    pub fn new(layer: DistMoeLayer) -> ServeLoop {
+        ServeLoop { layer }
+    }
+
+    pub fn layer(&self) -> &DistMoeLayer {
+        &self.layer
+    }
+
+    /// An all-zero local batch of the layer's geometry — what peers
+    /// (and an idle front end) contribute to a step.
+    pub fn zero_batch(&self) -> TensorF32 {
+        TensorF32::zeros(&[self.layer.nb, self.layer.dm])
+    }
+
+    /// Front-end step (rank 0 only): release every peer into the
+    /// collective forward, then run it with the coalesced batch `x`
+    /// (`[nb, dm]`; unfilled rows zero).
+    pub fn step(
+        &self,
+        comm: &mut impl Comm,
+        x: TensorF32,
+        counters: &mut Counters,
+    ) -> Result<TensorF32> {
+        self.signal(comm, CTL_STEP)?;
+        self.layer.forward_infer(comm, x, counters)
+    }
+
+    /// Front-end shutdown (rank 0 only): release every peer out of
+    /// [`ServeLoop::serve_worker`].
+    pub fn stop(&self, comm: &mut impl Comm) -> Result<()> {
+        self.signal(comm, CTL_STOP)
+    }
+
+    fn signal(&self, comm: &mut impl Comm, code: f32) -> Result<()> {
+        if comm.rank() != 0 {
+            return Err(Error::Comm(
+                "serve: only rank 0 drives the control channel".into(),
+            ));
+        }
+        for peer in 1..comm.size() {
+            comm.send(peer, CTL_TAG, vec![code])?;
+        }
+        Ok(())
+    }
+
+    /// Worker loop (ranks > 0): block on the control tag, join each
+    /// step with a zero batch, leave on [`CTL_STOP`].  Returns the
+    /// number of steps served.
+    pub fn serve_worker(
+        &self,
+        comm: &mut impl Comm,
+        counters: &mut Counters,
+    ) -> Result<u64> {
+        let mut steps = 0u64;
+        loop {
+            let ctl = comm.recv(0, CTL_TAG)?;
+            match ctl.first().copied() {
+                Some(c) if c == CTL_STOP => return Ok(steps),
+                Some(c) if c == CTL_STEP => {
+                    self.layer.forward_infer(comm, self.zero_batch(), counters)?;
+                    steps += 1;
+                }
+                other => {
+                    return Err(Error::Comm(format!(
+                        "serve: bad control frame {other:?}"
+                    )))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_workers;
+    use crate::coordinator::MoeLayerBuilder;
+    use crate::runtime::Runtime;
+    use std::sync::Arc;
+
+    #[test]
+    fn control_tag_stays_clear_of_other_bands() {
+        // collective tags: seq << 8 | code — reaching the control band
+        // would take 2^51 collectives
+        assert!(CTL_TAG > (1u64 << 40) << 8);
+        // sub-group salt bands and the TCP keepalive sit above it
+        assert!(CTL_TAG < 1 << 61);
+        assert!(CTL_TAG < u64::MAX);
+    }
+
+    #[test]
+    fn serve_loop_steps_and_stops_workers() {
+        let Ok(rt) = Runtime::open_default() else { return };
+        let rt = Arc::new(rt);
+        const W: usize = 2;
+        const STEPS: u64 = 3;
+        let res = run_workers(W, move |mut h| {
+            let layer = MoeLayerBuilder::new().seed(5).build(rt.clone(), W, h.rank())?;
+            layer.warm()?;
+            let lp = ServeLoop::new(layer);
+            let mut counters = Counters::new();
+            if h.rank() == 0 {
+                for _ in 0..STEPS {
+                    let y = lp.step(&mut h, lp.zero_batch(), &mut counters)?;
+                    assert_eq!(y.shape, vec![lp.layer().nb, lp.layer().dm]);
+                }
+                lp.stop(&mut h)?;
+                Ok(STEPS)
+            } else {
+                lp.serve_worker(&mut h, &mut counters)
+            }
+        })
+        .unwrap();
+        assert!(res.iter().all(|&s| s == STEPS), "{res:?}");
+    }
+
+    #[test]
+    fn control_frames_travel_point_to_point() {
+        // the control band is plain p2p traffic — no collective
+        // machinery, so it can never desynchronise sequence counters,
+        // and ordering per peer pair is FIFO
+        run_workers(2, |mut h| {
+            if h.rank() == 0 {
+                h.send(1, CTL_TAG, vec![CTL_STEP])?;
+                h.send(1, CTL_TAG, vec![CTL_STOP])?;
+            } else {
+                assert_eq!(h.recv(0, CTL_TAG)?, vec![CTL_STEP]);
+                assert_eq!(h.recv(0, CTL_TAG)?, vec![CTL_STOP]);
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}

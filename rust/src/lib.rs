@@ -23,6 +23,7 @@
 //! | [`comm`] | process groups: nonblocking `isend`/`irecv` + [`comm::CommRequest`] handles, decomposed all-to-all-v (consume arrivals as they land), bucketed nonblocking all-reduce ([`comm::Comm::all_reduce_start`] → [`comm::PendingAllReduce`], per-bucket rings completed in arrival order, bit-identical to the blocking ring), spent-send reclaim + receive-buffer recycle ([`comm::Comm::recycle`]) for buffer pools, dissemination barrier, death-aware thread-channel receives (a crashed worker errors its peers instead of deadlocking them); the TCP backend's *progress engine* drains socket arrivals during expert compute, completes `wait_all` in true arrival order, and reads frames into recycled buffers (allocation-free receive path), while its deferred-flush mode keeps liveness with keepalive probe frames; the **topology layer** ([`comm::Topology`] + [`comm::Comm::split`] → [`comm::ProcessGroup`] sub-groups with their own rank/size/tag namespaces, on which every collective runs unchanged) and the policy wrapper [`comm::TopoComm`] (`[comm] topology = "hier"`: leader-aggregated all-to-all, two-level tree all-reduce as an alternate schedule under `PendingAllReduce`) |
 //! | [`moe`] | the §3.1 hierarchy: [`moe::Gate`] policies (top-k / switch / noisy top-k, with the wired balance-loss gradient), [`moe::ExpertShard`] shards (FFN), over the fixed dispatch substrate (plans, ring-offset exchange chunks — locality-ordered under a hierarchical topology ([`moe::chunk_peer_groups_topo`]), slice-view chunk staging ([`moe::ChunkSlice`]), capacity buckets, adaptive chunk picking with the mean/max agreement policies ([`moe::agree_chunks`]), load monitor, balance loss) |
 //! | [`coordinator`] | workers, the distributed MoE layer + [`coordinator::MoeLayerBuilder`] (assembles gate/expert from `[moe]`, exchange schedule from `[comm]` — blocking, or zero-copy chunked dispatch/compute/combine overlap with the count round folded into chunk 0 and a step-persistent buffer pool), tag-aware [`coordinator::GradSync`] (blocking, or `[comm] grad_overlap`: bucketed nonblocking sync — gate-grad buckets fly during the expert backward, `DistTrainer` pipelines bucket completions against host Adam; bit-identical either way), train loops |
+//! | [`serve`] | the `fastmoe serve` inference daemon: a rank-0 front end (TCP listener speaking the mesh frame format to lightweight client sessions) feeding a continuous-batching [`serve::Batcher`] (per-step `max_batch` admission, bounded `queue_depth`, explicit rejections), resident [`coordinator::ServeLoop`] workers on the forward-only zero-copy path, per-request latency [`metrics::Histogram`]s, and a thin [`serve::ClientConn`] for load generation |
 //! | [`model`] | parameter store, Adam, checkpoints |
 //! | [`data`] | synthetic corpus, tokenizer, batching |
 //! | [`tensor`] | host tensors, the step-persistent [`tensor::BufferPool`] arena, and the math used outside XLA |
@@ -41,6 +42,7 @@ pub mod model;
 pub mod moe;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tensor;
 pub mod testing;

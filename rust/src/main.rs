@@ -8,7 +8,20 @@
 //!                  [--overlap --chunks N] …
 //!                                      # expert-parallel layer demo
 //! fastmoe fmoefy --experts N           # Listing-1 config transform
+//! fastmoe serve [--workers W] [--serve-port P] [--max-batch N]
+//!               [--queue-depth N] [--idle-ms N] [--backend local|tcp]
+//!                                      # resident inference daemon
+//! fastmoe client [--addr host:port] [--requests N] [--rows R]
+//!                [--concurrency C] [--shutdown]
+//!                                      # load generator for `serve`
 //! ```
+//!
+//! `dist-moe --backend tcp` and `serve --backend tcp` accept
+//! `--hosts a:p,b:p,…` (one `host:port` per rank); repeated addresses
+//! mark ranks sharing a node, from which the hierarchical topology is
+//! discovered.  The launcher still spawns every worker process locally
+//! — on a real cluster, run `_tcp-worker` / `_serve-worker` with the
+//! same `--hosts` list and a distinct `--rank` on each machine.
 //!
 //! Benchmarks live under `cargo bench` (one binary per paper figure);
 //! examples under `cargo run --example …`.
@@ -17,11 +30,16 @@ use std::sync::Arc;
 
 use fastmoe::cli::{Args, Usage};
 use fastmoe::comm::{self, Comm, TopoComm};
-use fastmoe::config::{fmoefy, CommConfig, ConfigFile, ModelConfig, MoeConfig, TrainConfig};
-use fastmoe::coordinator::{DistTrainer, MoeLayerBuilder, MoeLayerTrainer, Trainer};
+use fastmoe::config::{
+    fmoefy, CommConfig, ConfigFile, ModelConfig, MoeConfig, ServeConfig, TrainConfig,
+};
+use fastmoe::coordinator::{
+    DistTrainer, MoeLayerBuilder, MoeLayerTrainer, ServeLoop, Trainer,
+};
 use fastmoe::data::{BatchIter, Corpus};
 use fastmoe::error::Result;
-use fastmoe::metrics::{Counters, CsvWriter, Stopwatch};
+use fastmoe::metrics::{Counters, CsvWriter, Histogram, Stopwatch};
+use fastmoe::serve::{run_thread_daemon, ClientConn, Reply, ServeDaemon};
 use fastmoe::model::save_checkpoint;
 use fastmoe::rng::Rng;
 use fastmoe::runtime::Runtime;
@@ -38,11 +56,13 @@ fn main() {
             ("dist-train", "multi-worker training with tag-aware grad sync (--grad-overlap --bucket-kb N --topology flat|hier --nodes N)"),
             ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk, --overlap --chunks N [0=adaptive] --chunk-policy mean|max --no-pool --progress --grad-overlap --topology flat|hier --nodes N --local-size N)"),
             ("fmoefy", "Listing-1: dense config -> MoE config at equal FLOPs"),
+            ("serve", "long-lived inference daemon: continuous batching over resident expert-parallel workers (--workers W --serve-port P --max-batch N --queue-depth N --idle-ms N --backend local|tcp --hosts a:p,b:p)"),
+            ("client", "load generator for `serve` (--addr host:port --requests N --rows R --dm D --concurrency C --shutdown)"),
         ],
     };
     let args = match Args::from_env(&[
         "verbose", "moe", "dense", "overlap", "no-overlap", "no-pool", "progress",
-        "no-progress", "grad-overlap", "no-grad-overlap",
+        "no-progress", "grad-overlap", "no-grad-overlap", "shutdown",
     ]) {
         Ok(a) => a,
         Err(e) => {
@@ -57,6 +77,9 @@ fn main() {
         "dist-train" => run(dist_train(&args)),
         "dist-moe" => run(dist_moe(&args)),
         "_tcp-worker" => run(tcp_worker(&args)),
+        "serve" => run(serve(&args)),
+        "_serve-worker" => run(serve_worker_proc(&args)),
+        "client" => run(client(&args)),
         "fmoefy" => run(cmd_fmoefy(&args)),
         _ => {
             println!("{}", usage.render());
@@ -214,11 +237,36 @@ fn dist_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--hosts a:p,b:p,…` into one `host:port` per rank (`None`
+/// when the flag is absent — callers fall back to localhost ports).
+fn hosts_arg(args: &Args) -> Option<Vec<String>> {
+    args.get("hosts").map(|h| {
+        h.split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    })
+}
+
+/// The mesh address list a TCP worker dials: the explicit `--hosts`
+/// ranks, or `127.0.0.1:base_port+rank` for localhost runs.
+fn mesh_hosts(args: &Args, workers: usize, port: u16) -> Vec<String> {
+    hosts_arg(args).unwrap_or_else(|| {
+        (0..workers)
+            .map(|r| format!("127.0.0.1:{}", port + r as u16))
+            .collect()
+    })
+}
+
 /// `dist-moe --backend tcp`: spawn one OS *process* per worker (the
 /// paper's multi-node topology on localhost); each child runs
 /// `_tcp-worker` and joins a TCP full mesh.
 fn dist_moe_tcp(args: &Args) -> Result<()> {
-    let workers = args.usize_or("workers", 2)?;
+    let hosts = hosts_arg(args);
+    let workers = match &hosts {
+        Some(h) => h.len(),
+        None => args.usize_or("workers", 2)?,
+    };
     let iters = args.usize_or("iters", 2)?;
     let seed = args.u64_or("seed", 7)?;
     let port = args.usize_or("port", 47500)? as u16;
@@ -246,6 +294,10 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
             "--nodes".into(), comm_cfg.nodes.to_string(),
             "--local-size".into(), comm_cfg.local_size.to_string(),
         ];
+        if let Some(h) = &hosts {
+            argv.push("--hosts".into());
+            argv.push(h.join(","));
+        }
         if comm_cfg.overlap {
             argv.push("--overlap".into());
         }
@@ -278,17 +330,20 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
 /// Hidden per-process worker entry point for `dist-moe --backend tcp`.
 fn tcp_worker(args: &Args) -> Result<()> {
     let rank = args.usize_or("rank", 0)?;
-    let workers = args.usize_or("workers", 2)?;
     let iters = args.usize_or("iters", 2)?;
     let seed = args.u64_or("seed", 7)?;
     let port = args.usize_or("port", 47500)? as u16;
     let comm_cfg = CommConfig::from_args(args)?;
-    let mut group = fastmoe::comm::tcp::TcpGroup::connect_local(rank, workers, port)?;
+    let hosts = mesh_hosts(args, args.usize_or("workers", 2)?, port);
+    let workers = hosts.len();
+    let mut group = fastmoe::comm::tcp::TcpGroup::connect(rank, &hosts)?;
     if comm_cfg.progress {
         // drain socket arrivals during expert compute (reader threads)
         group.enable_progress();
     }
-    let mut group = TopoComm::new(group, comm_cfg.topology_for(workers)?)?;
+    // same address twice in --hosts ⇒ same node: the hierarchical
+    // topology is discovered rather than hand-specified
+    let mut group = TopoComm::new(group, comm_cfg.topology_for_hosts(&hosts)?)?;
     let rt = Arc::new(Runtime::open_default()?);
     let layer = MoeLayerBuilder::from_config(&MoeConfig::from_args(args)?)
         .comm_config(&comm_cfg)
@@ -393,6 +448,212 @@ fn dist_moe(args: &Args) -> Result<()> {
             balance,
             imbalance,
         );
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    if args.str_or("backend", "local") == "tcp" {
+        return serve_tcp(args);
+    }
+    let workers = args.usize_or("workers", 2)?;
+    let seed = args.u64_or("seed", 7)?;
+    let moe_cfg = MoeConfig::from_args(args)?;
+    let comm_cfg = CommConfig::from_args(args)?;
+    let serve_cfg = ServeConfig::from_args(args)?;
+    let rt = Arc::new(Runtime::open_default()?);
+    println!(
+        "serve (local): {workers} resident workers, clients on :{}, \
+         max_batch {}, queue_depth {}, idle {}ms — send `fastmoe client \
+         --shutdown` to stop",
+        serve_cfg.port,
+        if serve_cfg.max_batch == 0 {
+            "layer-batch".into()
+        } else {
+            serve_cfg.max_batch.to_string()
+        },
+        serve_cfg.queue_depth,
+        serve_cfg.idle_ms,
+    );
+    let stats = run_thread_daemon(rt, workers, seed, moe_cfg, comm_cfg, serve_cfg)?;
+    println!("serve stats: {}", stats.to_json().to_string());
+    Ok(())
+}
+
+/// `serve --backend tcp`: one OS process per resident worker, exactly
+/// the `dist-moe --backend tcp` topology; rank 0's process carries the
+/// client-facing front end.
+fn serve_tcp(args: &Args) -> Result<()> {
+    let hosts = hosts_arg(args);
+    let workers = match &hosts {
+        Some(h) => h.len(),
+        None => args.usize_or("workers", 2)?,
+    };
+    let seed = args.u64_or("seed", 7)?;
+    let port = args.usize_or("port", 47500)?;
+    let moe_cfg = MoeConfig::from_args(args)?;
+    let comm_cfg = CommConfig::from_args(args)?;
+    let serve_cfg = ServeConfig::from_args(args)?;
+    let exe = std::env::current_exe()?;
+    println!(
+        "serve (tcp): spawning {workers} worker processes, mesh ports {port}.., \
+         clients on :{}",
+        serve_cfg.port
+    );
+    let mut children = Vec::new();
+    for rank in 0..workers {
+        let mut argv = vec![
+            "_serve-worker".to_string(),
+            "--rank".into(), rank.to_string(),
+            "--workers".into(), workers.to_string(),
+            "--seed".into(), seed.to_string(),
+            "--port".into(), port.to_string(),
+            "--serve-port".into(), serve_cfg.port.to_string(),
+            "--max-batch".into(), serve_cfg.max_batch.to_string(),
+            "--queue-depth".into(), serve_cfg.queue_depth.to_string(),
+            "--idle-ms".into(), serve_cfg.idle_ms.to_string(),
+            "--gate".into(), moe_cfg.gate.clone(),
+            "--capacity-factor".into(), moe_cfg.capacity_factor.to_string(),
+            "--noise-std".into(), moe_cfg.noise_std.to_string(),
+            "--balance-coef".into(), moe_cfg.balance_coef.to_string(),
+            "--chunks".into(), comm_cfg.chunks.to_string(),
+            "--chunk-policy".into(), comm_cfg.chunk_policy.clone(),
+            "--topology".into(), comm_cfg.topology.clone(),
+            "--nodes".into(), comm_cfg.nodes.to_string(),
+            "--local-size".into(), comm_cfg.local_size.to_string(),
+        ];
+        if let Some(h) = &hosts {
+            argv.push("--hosts".into());
+            argv.push(h.join(","));
+        }
+        if comm_cfg.overlap {
+            argv.push("--overlap".into());
+        }
+        if !comm_cfg.pool {
+            argv.push("--no-pool".into());
+        }
+        if comm_cfg.progress {
+            argv.push("--progress".into());
+        }
+        children.push(std::process::Command::new(&exe).args(&argv).spawn()?);
+    }
+    let mut failed = false;
+    for (rank, mut c) in children.into_iter().enumerate() {
+        let status = c.wait()?;
+        if !status.success() {
+            eprintln!("serve worker process {rank} failed: {status}");
+            failed = true;
+        }
+    }
+    if failed {
+        return Err(fastmoe::Error::msg("a serve worker process failed"));
+    }
+    println!("serve (tcp) OK — {workers} processes exited cleanly");
+    Ok(())
+}
+
+/// Hidden per-process worker entry point for `serve --backend tcp`.
+/// Rank 0 runs the front end (listener + drive loop); ranks > 0 sit in
+/// [`ServeLoop::serve_worker`] until the front end signals stop.
+fn serve_worker_proc(args: &Args) -> Result<()> {
+    let rank = args.usize_or("rank", 0)?;
+    let seed = args.u64_or("seed", 7)?;
+    let port = args.usize_or("port", 47500)? as u16;
+    let comm_cfg = CommConfig::from_args(args)?;
+    let serve_cfg = ServeConfig::from_args(args)?;
+    let hosts = mesh_hosts(args, args.usize_or("workers", 2)?, port);
+    let workers = hosts.len();
+    let mut group = fastmoe::comm::tcp::TcpGroup::connect(rank, &hosts)?;
+    if comm_cfg.progress {
+        group.enable_progress();
+    }
+    let mut group = TopoComm::new(group, comm_cfg.topology_for_hosts(&hosts)?)?;
+    let rt = Arc::new(Runtime::open_default()?);
+    let layer = MoeLayerBuilder::from_config(&MoeConfig::from_args(args)?)
+        .comm_config(&comm_cfg)
+        .seed(seed)
+        .build(rt, workers, rank)?;
+    layer.warm()?;
+    let lp = ServeLoop::new(layer);
+    let mut counters = Counters::new();
+    if rank == 0 {
+        let mut daemon = ServeDaemon::bind(&serve_cfg, lp.layer().nb, lp.layer().dm)?;
+        println!(
+            "  [pid {}] serve front end up: {workers}-rank mesh, clients on :{}",
+            std::process::id(),
+            daemon.port()
+        );
+        let stats = daemon.run(&lp, &mut group, &mut counters)?;
+        println!("serve stats: {}", stats.to_json().to_string());
+    } else {
+        let steps = lp.serve_worker(&mut group, &mut counters)?;
+        println!(
+            "  [pid {}] serve worker {rank}/{workers}: {steps} steps",
+            std::process::id()
+        );
+    }
+    Ok(())
+}
+
+/// `fastmoe client` — a thin load generator for the daemon: N sessions
+/// in parallel, each firing `--requests` of `--rows` tokens and
+/// reporting the client-observed latency percentiles.  `--dm` must
+/// match the served model's hidden size (a mismatch comes back as
+/// rejections, not a hang).
+fn client(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:47800");
+    let requests = args.usize_or("requests", 16)?;
+    let rows = args.usize_or("rows", 4)?;
+    let dm = args.usize_or("dm", 64)?;
+    let concurrency = args.usize_or("concurrency", 1)?.max(1);
+    let seed = args.u64_or("seed", 7)?;
+    println!(
+        "client: {concurrency} session(s) x {requests} request(s) of \
+         {rows}x{dm} tokens -> {addr}"
+    );
+    let sessions: Vec<_> = (0..concurrency)
+        .map(|s| {
+            let addr = addr.clone();
+            std::thread::spawn(move || -> Result<(Histogram, u64)> {
+                let mut conn = ClientConn::connect(&addr)?;
+                let mut rng = Rng::new(seed ^ s as u64);
+                let mut lat = Histogram::latency();
+                let mut rejected = 0u64;
+                for i in 0..requests {
+                    let mut x = vec![0f32; rows * dm];
+                    rng.fill_normal(&mut x, 1.0);
+                    let t = Stopwatch::start();
+                    conn.request(i as u32, rows, &x)?;
+                    match conn.recv_reply()? {
+                        Reply::Ok { .. } => lat.record(t.secs()),
+                        Reply::Rejected { .. } => rejected += 1,
+                    }
+                }
+                Ok((lat, rejected))
+            })
+        })
+        .collect();
+    let mut lat = Histogram::latency();
+    let mut rejected = 0u64;
+    for s in sessions {
+        let (l, r) = s
+            .join()
+            .map_err(|_| fastmoe::Error::msg("client session panicked"))??;
+        lat.merge(&l);
+        rejected += r;
+    }
+    println!(
+        "done: {} ok, {rejected} rejected; latency p50 {:.2}ms p95 {:.2}ms \
+         p99 {:.2}ms",
+        lat.count(),
+        1e3 * lat.p50(),
+        1e3 * lat.p95(),
+        1e3 * lat.p99(),
+    );
+    if args.has_flag("shutdown") {
+        let mut c = ClientConn::connect(&addr)?;
+        c.shutdown()?;
+        println!("shutdown frame sent");
     }
     Ok(())
 }

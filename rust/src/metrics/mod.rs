@@ -85,6 +85,132 @@ impl Summary {
     }
 }
 
+/// Fixed-bucket histogram with percentile extraction — the serving
+/// path's latency tracker.
+///
+/// Unlike [`Summary`] (which keeps every sample and sorts on demand —
+/// fine for a bench's few hundred step times), a histogram holds O(1)
+/// state per bucket no matter how many requests pass through, which is
+/// what a long-lived daemon needs.  Buckets are half-open ranges
+/// `(bounds[i-1], bounds[i]]` over ascending upper `bounds`, plus an
+/// implicit overflow bucket above the last bound.  Percentiles
+/// interpolate linearly inside the bucket the rank falls in (the
+/// overflow bucket reports its recorded maximum), so p50/p95/p99 come
+/// out smooth rather than snapped to bucket edges.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    n: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// Build over ascending upper bucket bounds (an overflow bucket is
+    /// implicit).  Panics on an empty or unsorted bound list — the
+    /// presets are compile-time constants, so this is a programmer
+    /// error, not input validation.
+    pub fn new(bounds: &[f64]) -> Self {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be ascending"
+        );
+        Self {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            n: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    /// Latency preset in seconds: exponential bounds from 100 µs to
+    /// ~52 s (20 buckets, ×1.9 steps) — covers sub-millisecond thread
+    /// backend steps through multi-second cold-start outliers.
+    pub fn latency() -> Self {
+        let mut bounds = Vec::with_capacity(20);
+        let mut b = 1e-4;
+        for _ in 0..20 {
+            bounds.push(b);
+            b *= 1.9;
+        }
+        Self::new(&bounds)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let i = self.bounds.partition_point(|&b| b < x);
+        self.counts[i] += 1;
+        self.n += 1;
+        self.sum += x;
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// The `p`-th percentile (0–100), linearly interpolated within the
+    /// bucket the rank lands in; `0.0` when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * self.n as f64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if (seen + c) as f64 >= rank {
+                if i == self.bounds.len() {
+                    // overflow bucket: no upper bound, report the max
+                    return self.max;
+                }
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = self.bounds[i];
+                let frac = (rank - seen as f64) / c as f64;
+                return lo + (hi - lo) * frac.clamp(0.0, 1.0);
+            }
+            seen += c;
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Merge another histogram recorded over the *same* bounds (e.g.
+    /// per-session trackers into the daemon total).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds, other.bounds, "merging mismatched histograms");
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
 /// Named counters (bytes sent, tokens dropped, …).
 #[derive(Default, Debug, Clone)]
 pub struct Counters {
@@ -177,6 +303,54 @@ mod tests {
         assert_eq!(s.p50(), 10.0);
         assert_eq!(s.p95(), 10.0);
         assert_eq!(Summary::new().p50(), 0.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_interpolate() {
+        // uniform 0..100 into 10 equal buckets: percentiles ≈ identity
+        let bounds: Vec<f64> = (1..=10).map(|i| i as f64 * 10.0).collect();
+        let mut h = Histogram::new(&bounds);
+        for i in 0..1000 {
+            h.record(i as f64 / 10.0 + 0.05);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.p50() - 50.0).abs() < 1.0, "p50 = {}", h.p50());
+        assert!((h.p95() - 95.0).abs() < 1.0, "p95 = {}", h.p95());
+        assert!((h.p99() - 99.0).abs() < 1.0, "p99 = {}", h.p99());
+        assert!((h.mean() - 50.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn histogram_edges_and_overflow() {
+        let mut h = Histogram::new(&[1.0, 2.0]);
+        assert_eq!(h.p50(), 0.0); // empty
+        h.record(0.5);
+        h.record(1.5);
+        h.record(10.0); // overflow bucket
+        assert_eq!(h.count(), 3);
+        // the overflow bucket reports its recorded max, not a bound
+        assert_eq!(h.percentile(100.0), 10.0);
+        assert!(h.p50() <= 2.0);
+        // ordering: percentiles are monotone in p
+        assert!(h.percentile(10.0) <= h.percentile(60.0));
+        assert!(h.percentile(60.0) <= h.percentile(99.0));
+    }
+
+    #[test]
+    fn histogram_merge_matches_combined_stream() {
+        let mut a = Histogram::latency();
+        let mut b = Histogram::latency();
+        let mut all = Histogram::latency();
+        for i in 1..=50 {
+            let x = i as f64 * 1e-3;
+            if i % 2 == 0 { a.record(x) } else { b.record(x) }
+            all.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        for p in [50.0, 95.0, 99.0] {
+            assert!((a.percentile(p) - all.percentile(p)).abs() < 1e-12);
+        }
     }
 
     #[test]

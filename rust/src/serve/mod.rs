@@ -1,0 +1,712 @@
+//! `fastmoe serve` — a long-lived MoE inference daemon with continuous
+//! batching over the expert-parallel workers.
+//!
+//! The training side drives [`DistMoeLayer`](crate::coordinator::
+//! DistMoeLayer) from a fixed-iteration loop; serving turns the same
+//! data path into a resident service:
+//!
+//! * **Front end** ([`ServeDaemon`], rank 0): a TCP listener accepting
+//!   lightweight client sessions that speak the mesh's existing frame
+//!   format (`src | tag | len | payload`) on plain sockets — `src`
+//!   carries the client's request id and the tag's low byte the
+//!   protocol code ([`CODE_REQ`], [`CODE_RESP`], [`CODE_REJECT`],
+//!   [`CODE_SHUTDOWN`]) with the row count above it.  One reader
+//!   thread per session feeds the batcher; responses are demultiplexed
+//!   back over per-session writers.
+//! * **Continuous batching** ([`Batcher`]): in-flight requests
+//!   coalesce into token batches *between* steps — up to
+//!   `[serve] max_batch` rows are admitted per step, the rest queue up
+//!   to `[serve] queue_depth` rows, and anything beyond that is
+//!   rejected immediately (admission control: the client gets a
+//!   [`CODE_REJECT`] frame, never a silent stall).  Packing is
+//!   whole-request FIFO, so a request's rows are contiguous in the
+//!   batch and ordering is fair.
+//! * **Workers** (ranks > 0): resident
+//!   [`ServeLoop`](crate::coordinator::ServeLoop) participants that
+//!   join each collective forward with zero batches.  The step is
+//!   forward-only (`forward_infer`) — the PR 3 zero-copy dispatch and
+//!   buffer pools run unchanged, the gradient machinery never wakes.
+//! * **Metrics**: per-request latency (arrival → response write) and
+//!   per-step time feed fixed-bucket [`Histogram`]s; [`ServeStats::
+//!   to_json`] exports p50/p95/p99 for the bench record.
+//!
+//! Why batching preserves per-request bits: with the default top-k
+//! gate every row's path — gate GEMM row, per-row top-k, expert FFN
+//! rows, weighted combine — is row-local, so a request's outputs are
+//! bitwise identical whether its rows share the batch with other
+//! requests or ride at the same offsets in an otherwise-zero batch
+//! (`serve_integration` pins exactly this against sequential
+//! single-request forwards).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::comm::tcp::{read_stream_frame, write_stream_frame};
+use crate::comm::{run_workers, Comm, TopoComm};
+use crate::config::{CommConfig, MoeConfig, ServeConfig};
+use crate::coordinator::{MoeLayerBuilder, ServeLoop};
+use crate::error::{Error, Result};
+use crate::metrics::{Counters, Histogram, Stopwatch};
+use crate::runtime::Runtime;
+use crate::tensor::TensorF32;
+use crate::util::json::Json;
+
+/// Protocol code (tag low byte): client → daemon token request; the
+/// row count rides in `tag >> 8` and the payload is `rows × dm`
+/// floats.
+pub const CODE_REQ: u64 = 1;
+/// Protocol code: daemon → client response rows for one request.
+pub const CODE_RESP: u64 = 2;
+/// Protocol code: daemon → client admission-control rejection (empty
+/// payload; `src` echoes the request id).
+pub const CODE_REJECT: u64 = 3;
+/// Protocol code: client → daemon orderly shutdown.
+pub const CODE_SHUTDOWN: u64 = 4;
+
+/// Compose a request/response tag from a code and row count.
+pub fn serve_tag(code: u64, rows: usize) -> u64 {
+    ((rows as u64) << 8) | code
+}
+
+fn tag_code(tag: u64) -> u64 {
+    tag & 0xff
+}
+
+fn tag_rows(tag: u64) -> usize {
+    (tag >> 8) as usize
+}
+
+/// One admitted client request, queued until a step has room for it.
+#[derive(Debug)]
+pub struct Request {
+    /// Client-chosen id, echoed in the response's `src` field.
+    pub id: u32,
+    /// Front-end session index — selects the response writer.
+    pub session: usize,
+    /// Token rows in this request.
+    pub rows: usize,
+    /// Row-major `[rows, dm]` activations.
+    pub data: Vec<f32>,
+    /// Arrival time, for the latency histogram.
+    pub arrived: Instant,
+}
+
+/// A request placed into a batch: the original request plus its row
+/// offset, for demultiplexing the step output.
+#[derive(Debug)]
+pub struct Pending {
+    pub req: Request,
+    pub row: usize,
+}
+
+/// Continuous-batching queue with admission control.
+///
+/// `admit` is called by the session readers as requests arrive;
+/// `take_batch` by the drive loop between steps.  Whole requests pack
+/// FIFO into each batch; the first queued request that does not fit
+/// ends the batch (no reordering — fairness and head-of-line latency
+/// stay predictable).  A request is rejected — handed back to the
+/// caller — when it could *never* be scheduled (`rows == 0` or
+/// `rows > max_batch`) or when the queue already holds `queue_depth`
+/// rows (overload: reject fast rather than stall every later client).
+#[derive(Debug)]
+pub struct Batcher {
+    max_batch: usize,
+    queue_depth: usize,
+    queue: VecDeque<Request>,
+    queued_rows: usize,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, queue_depth: usize) -> Batcher {
+        Batcher {
+            max_batch: max_batch.max(1),
+            queue_depth: queue_depth.max(1),
+            queue: VecDeque::new(),
+            queued_rows: 0,
+        }
+    }
+
+    /// Rows admitted into one step's batch.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Rows currently queued across all admitted requests.
+    pub fn queued_rows(&self) -> usize {
+        self.queued_rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Admit a request into the queue, or hand it back (`Err`) when
+    /// admission control rejects it.
+    pub fn admit(&mut self, req: Request) -> std::result::Result<(), Request> {
+        if req.rows == 0
+            || req.rows > self.max_batch
+            || self.queued_rows + req.rows > self.queue_depth
+        {
+            return Err(req);
+        }
+        self.queued_rows += req.rows;
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    /// Pack the longest FIFO prefix of the queue that fits into
+    /// `min(max_batch, nb)` rows of a zero-initialised `[nb, dm]`
+    /// batch.  `None` when the queue is empty.
+    pub fn take_batch(
+        &mut self,
+        nb: usize,
+        dm: usize,
+    ) -> Option<(TensorF32, Vec<Pending>)> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let budget = self.max_batch.min(nb);
+        let mut x = TensorF32::zeros(&[nb, dm]);
+        let mut pending = Vec::new();
+        let mut row = 0usize;
+        while let Some(head) = self.queue.front() {
+            if row + head.rows > budget {
+                break;
+            }
+            let req = self.queue.pop_front().unwrap();
+            let rows = req.rows;
+            self.queued_rows -= rows;
+            let n = (rows * dm).min(req.data.len());
+            x.data[row * dm..row * dm + n].copy_from_slice(&req.data[..n]);
+            pending.push(Pending { req, row });
+            row += rows;
+        }
+        debug_assert!(!pending.is_empty(), "head request exceeds the budget");
+        Some((x, pending))
+    }
+}
+
+/// Cumulative serving metrics, exported as the bench JSON record.
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    pub steps: u64,
+    pub requests: u64,
+    pub rows: u64,
+    pub rejected: u64,
+    pub disconnects: u64,
+    pub elapsed_sec: f64,
+    /// Request latency (arrival → response write), seconds.
+    pub latency: Histogram,
+    /// Collective forward step time, seconds.
+    pub step_time: Histogram,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats {
+            steps: 0,
+            requests: 0,
+            rows: 0,
+            rejected: 0,
+            disconnects: 0,
+            elapsed_sec: 0.0,
+            latency: Histogram::latency(),
+            step_time: Histogram::latency(),
+        }
+    }
+
+    /// The JSON record `bench_report.sh` archives: throughput plus the
+    /// latency percentiles the integration test asserts on.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("steps".into(), Json::Num(self.steps as f64));
+        m.insert("requests".into(), Json::Num(self.requests as f64));
+        m.insert("rows".into(), Json::Num(self.rows as f64));
+        m.insert("rejected".into(), Json::Num(self.rejected as f64));
+        m.insert("disconnects".into(), Json::Num(self.disconnects as f64));
+        m.insert("elapsed_sec".into(), Json::Num(self.elapsed_sec));
+        let tput = if self.elapsed_sec > 0.0 {
+            self.rows as f64 / self.elapsed_sec
+        } else {
+            0.0
+        };
+        m.insert("rows_per_sec".into(), Json::Num(tput));
+        m.insert("latency_p50".into(), Json::Num(self.latency.p50()));
+        m.insert("latency_p95".into(), Json::Num(self.latency.p95()));
+        m.insert("latency_p99".into(), Json::Num(self.latency.p99()));
+        m.insert("latency_mean".into(), Json::Num(self.latency.mean()));
+        m.insert("step_p50".into(), Json::Num(self.step_time.p50()));
+        m.insert("step_p95".into(), Json::Num(self.step_time.p95()));
+        m.insert("step_p99".into(), Json::Num(self.step_time.p99()));
+        Json::Object(m)
+    }
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Front-end state shared between the drive loop, the accept thread
+/// and the per-session readers.
+struct Front {
+    batcher: Batcher,
+    shutdown: bool,
+    rejected: u64,
+}
+
+struct Shared {
+    state: Mutex<Front>,
+    cv: Condvar,
+    /// Per-session response writers (socket clones; a write into a
+    /// dead session fails and is counted, never propagated).
+    writers: Mutex<Vec<Arc<Mutex<TcpStream>>>>,
+    dm: usize,
+}
+
+/// The rank-0 front end: listener, session readers, batcher, and the
+/// drive loop connecting them to a [`ServeLoop`].
+pub struct ServeDaemon {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<Vec<JoinHandle<()>>>>,
+    port: u16,
+    idle: Duration,
+}
+
+impl ServeDaemon {
+    /// Bind the front-end listener and start accepting sessions.
+    /// `nb`/`dm` are the layer geometry (`max_batch = 0` ⇒ the full
+    /// layer batch; larger values clamp to it).
+    pub fn bind(cfg: &ServeConfig, nb: usize, dm: usize) -> Result<ServeDaemon> {
+        let port = u16::try_from(cfg.port).map_err(|_| {
+            Error::Config(format!("serve.port {} out of range", cfg.port))
+        })?;
+        let max_batch = match cfg.max_batch {
+            0 => nb,
+            m => m.min(nb),
+        };
+        let shared = Arc::new(Shared {
+            state: Mutex::new(Front {
+                batcher: Batcher::new(max_batch, cfg.queue_depth),
+                shutdown: false,
+                rejected: 0,
+            }),
+            cv: Condvar::new(),
+            writers: Mutex::new(Vec::new()),
+            dm,
+        });
+        let listener = TcpListener::bind(("0.0.0.0", port))?;
+        listener.set_nonblocking(true)?;
+        let accept = {
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(listener, shared))
+        };
+        Ok(ServeDaemon {
+            shared,
+            accept: Some(accept),
+            port,
+            idle: Duration::from_millis(cfg.idle_ms),
+        })
+    }
+
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    /// Wait for work and coalesce it into one step batch.  Blocks
+    /// until the queue is non-empty (giving stragglers up to the idle
+    /// window to join an undersized batch) or shutdown; `None` means
+    /// an orderly shutdown with the queue drained.
+    pub fn next_batch(&self, nb: usize, dm: usize) -> Option<(TensorF32, Vec<Pending>)> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if !st.batcher.is_empty() {
+                // continuous batching's latency/utilisation trade: an
+                // undersized batch waits out the idle window for more
+                // arrivals, a full one departs immediately
+                if st.batcher.queued_rows() < st.batcher.max_batch() && !st.shutdown {
+                    let (guard, _) =
+                        self.shared.cv.wait_timeout(st, self.idle).unwrap();
+                    st = guard;
+                }
+                return st.batcher.take_batch(nb, dm);
+            }
+            if st.shutdown {
+                return None;
+            }
+            st = self.shared.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Demultiplex a step output back to the clients: each pending
+    /// request gets its `[rows, dm]` slice as a [`CODE_RESP`] frame.
+    /// A dead session's write failure is contained (counted in
+    /// `disconnects`) — the daemon keeps serving everyone else.
+    pub fn respond(&self, pending: Vec<Pending>, y: &TensorF32, stats: &mut ServeStats) {
+        let dm = self.shared.dm;
+        let writers = self.shared.writers.lock().unwrap();
+        for p in pending {
+            let rows = p.req.rows;
+            let slice = &y.data[p.row * dm..(p.row + rows) * dm];
+            let ok = match writers.get(p.req.session) {
+                Some(w) => {
+                    let mut w = w.lock().unwrap();
+                    write_stream_frame(
+                        &mut *w,
+                        p.req.id,
+                        serve_tag(CODE_RESP, rows),
+                        slice,
+                    )
+                    .is_ok()
+                }
+                None => false,
+            };
+            if ok {
+                stats.requests += 1;
+                stats.rows += rows as u64;
+                stats.latency.record(p.req.arrived.elapsed().as_secs_f64());
+            } else {
+                stats.disconnects += 1;
+            }
+        }
+    }
+
+    /// The resident drive loop: step whenever the batcher has work,
+    /// stop the workers and return the stats on client-initiated
+    /// shutdown.
+    pub fn run(
+        &mut self,
+        lp: &ServeLoop,
+        comm: &mut impl Comm,
+        counters: &mut Counters,
+    ) -> Result<ServeStats> {
+        let (nb, dm) = (lp.layer().nb, lp.layer().dm);
+        let mut stats = ServeStats::new();
+        let clock = Stopwatch::start();
+        while let Some((x, pending)) = self.next_batch(nb, dm) {
+            let t = Stopwatch::start();
+            let y = lp.step(comm, x, counters)?;
+            stats.step_time.record(t.secs());
+            stats.steps += 1;
+            self.respond(pending, &y, &mut stats);
+        }
+        lp.stop(comm)?;
+        stats.elapsed_sec = clock.secs();
+        stats.rejected = self.shared.state.lock().unwrap().rejected;
+        self.close();
+        Ok(stats)
+    }
+
+    /// Tear the front end down: unblock the accept thread, close every
+    /// session socket (which unblocks its reader), join everything.
+    pub fn close(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for w in self.shared.writers.lock().unwrap().iter() {
+            let _ = w.lock().unwrap().shutdown(Shutdown::Both);
+        }
+        if let Some(accept) = self.accept.take() {
+            if let Ok(readers) = accept.join() {
+                for r in readers {
+                    let _ = r.join();
+                }
+            }
+        }
+    }
+}
+
+impl Drop for ServeDaemon {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+/// Accept sessions until shutdown; returns the reader join handles so
+/// [`ServeDaemon::close`] can reap them.
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) -> Vec<JoinHandle<()>> {
+    let mut readers = Vec::new();
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let Ok(writer) = stream.try_clone() else { continue };
+                let session = {
+                    let mut writers = shared.writers.lock().unwrap();
+                    writers.push(Arc::new(Mutex::new(writer)));
+                    writers.len() - 1
+                };
+                let shared = shared.clone();
+                readers.push(std::thread::spawn(move || {
+                    session_reader(stream, session, shared)
+                }));
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if shared.state.lock().unwrap().shutdown {
+                    return readers;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => return readers,
+        }
+    }
+}
+
+/// One session's reader: parse frames, admit requests (rejecting over
+/// admission control *immediately*, so overload surfaces as a typed
+/// frame rather than back-pressure), flag shutdown.  Any read error —
+/// EOF, reset, truncated frame — ends the session; queued work from it
+/// is handled by the containment in [`ServeDaemon::respond`].
+fn session_reader(mut stream: TcpStream, session: usize, shared: Arc<Shared>) {
+    loop {
+        let msg = match read_stream_frame(&mut stream) {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        match tag_code(msg.tag) {
+            CODE_REQ => {
+                let rows = tag_rows(msg.tag);
+                let req = Request {
+                    id: msg.src as u32,
+                    session,
+                    rows,
+                    data: msg.data,
+                    arrived: Instant::now(),
+                };
+                let wrong_len = req.data.len() != rows * shared.dm;
+                let mut st = shared.state.lock().unwrap();
+                let verdict = if wrong_len { Err(req) } else { st.batcher.admit(req) };
+                match verdict {
+                    Ok(()) => shared.cv.notify_all(),
+                    Err(req) => {
+                        st.rejected += 1;
+                        drop(st);
+                        let writers = shared.writers.lock().unwrap();
+                        if let Some(w) = writers.get(session) {
+                            let _ = write_stream_frame(
+                                &mut *w.lock().unwrap(),
+                                req.id,
+                                serve_tag(CODE_REJECT, req.rows),
+                                &[],
+                            );
+                        }
+                    }
+                }
+            }
+            CODE_SHUTDOWN => {
+                shared.state.lock().unwrap().shutdown = true;
+                shared.cv.notify_all();
+            }
+            _ => break, // a client speaking garbage loses its session
+        }
+    }
+    // session end is not itself an error (an orderly client just left);
+    // wake the drive loop in case it was waiting on this session
+    shared.cv.notify_all();
+}
+
+/// A client's reply to one request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    /// The request's `[rows, dm]` output rows.
+    Ok { id: u32, data: Vec<f32> },
+    /// Admission control rejected the request (queue full or rows out
+    /// of range); resubmit later or with fewer rows.
+    Rejected { id: u32 },
+}
+
+/// A thin client session — the load generator (`fastmoe client`) and
+/// the integration tests speak through this.
+pub struct ClientConn {
+    stream: TcpStream,
+}
+
+impl ClientConn {
+    /// Connect to a daemon front end, retrying while it starts up.
+    pub fn connect(addr: &str) -> Result<ClientConn> {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    return Ok(ClientConn { stream });
+                }
+                Err(e) if Instant::now() >= deadline => {
+                    return Err(Error::Comm(format!("serve client connect {addr}: {e}")))
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    }
+
+    /// Submit `rows × dm` activation floats under a client-chosen id.
+    pub fn request(&mut self, id: u32, rows: usize, data: &[f32]) -> Result<()> {
+        write_stream_frame(&mut self.stream, id, serve_tag(CODE_REQ, rows), data)?;
+        Ok(())
+    }
+
+    /// Block for the next reply frame (replies to a session's pipelined
+    /// requests come back in step order; match on the echoed id).
+    pub fn recv_reply(&mut self) -> Result<Reply> {
+        let msg = read_stream_frame(&mut self.stream)?;
+        match tag_code(msg.tag) {
+            CODE_RESP => Ok(Reply::Ok { id: msg.src as u32, data: msg.data }),
+            CODE_REJECT => Ok(Reply::Rejected { id: msg.src as u32 }),
+            other => Err(Error::Comm(format!("serve client: bad reply code {other}"))),
+        }
+    }
+
+    /// Ask the daemon to shut down once its queue drains.
+    pub fn shutdown(&mut self) -> Result<()> {
+        write_stream_frame(&mut self.stream, 0, serve_tag(CODE_SHUTDOWN, 0), &[])?;
+        Ok(())
+    }
+}
+
+/// Run a complete daemon on the thread backend: rank 0 is the front
+/// end (listener + drive loop), ranks 1.. are resident serve workers.
+/// Returns the front end's stats once a client sends
+/// [`CODE_SHUTDOWN`].  Shared by `fastmoe serve --backend local`, the
+/// integration tests and the measured bench section.
+pub fn run_thread_daemon(
+    rt: Arc<Runtime>,
+    workers: usize,
+    seed: u64,
+    moe: MoeConfig,
+    comm_cfg: CommConfig,
+    cfg: ServeConfig,
+) -> Result<ServeStats> {
+    let out = run_workers(workers, move |h| {
+        let rank = h.rank();
+        let topo = comm_cfg.topology_for(workers)?;
+        let mut c = TopoComm::new(h, topo)?;
+        let layer = MoeLayerBuilder::from_config(&moe)
+            .comm_config(&comm_cfg)
+            .seed(seed)
+            .build(rt.clone(), workers, rank)?;
+        layer.warm()?;
+        let lp = ServeLoop::new(layer);
+        let mut counters = Counters::new();
+        if rank == 0 {
+            let mut daemon =
+                ServeDaemon::bind(&cfg, lp.layer().nb, lp.layer().dm)?;
+            Ok(Some(daemon.run(&lp, &mut c, &mut counters)?))
+        } else {
+            lp.serve_worker(&mut c, &mut counters)?;
+            Ok(None)
+        }
+    })?;
+    out.into_iter()
+        .flatten()
+        .next()
+        .ok_or_else(|| Error::msg("serve: no front-end stats"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u32, rows: usize, dm: usize) -> Request {
+        Request {
+            id,
+            session: 0,
+            rows,
+            data: vec![id as f32; rows * dm],
+            arrived: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn batcher_packs_fifo_with_offsets() {
+        let dm = 4;
+        let mut b = Batcher::new(8, 64);
+        b.admit(req(1, 3, dm)).unwrap();
+        b.admit(req(2, 2, dm)).unwrap();
+        b.admit(req(3, 5, dm)).unwrap(); // 3 + 2 + 5 > 8: next batch
+        assert_eq!(b.queued_rows(), 10);
+        let (x, pending) = b.take_batch(16, dm).unwrap();
+        assert_eq!(x.shape, vec![16, 4]);
+        assert_eq!(pending.len(), 2);
+        assert_eq!((pending[0].req.id, pending[0].row), (1, 0));
+        assert_eq!((pending[1].req.id, pending[1].row), (2, 3));
+        // rows landed at their offsets, the rest stayed zero
+        assert_eq!(x.data[0], 1.0);
+        assert_eq!(x.data[3 * dm], 2.0);
+        assert_eq!(x.data[5 * dm], 0.0);
+        // head-of-line request 3 is intact for the next batch
+        assert_eq!(b.queued_rows(), 5);
+        let (_, pending) = b.take_batch(16, dm).unwrap();
+        assert_eq!(pending[0].req.id, 3);
+        assert!(b.take_batch(16, dm).is_none());
+    }
+
+    #[test]
+    fn batcher_admission_control() {
+        let dm = 2;
+        let mut b = Batcher::new(4, 6);
+        // oversized for any step → immediate rejection
+        assert!(b.admit(req(1, 5, dm)).is_err());
+        // zero rows can never be scheduled
+        assert!(b.admit(req(2, 0, dm)).is_err());
+        // fill the queue to its depth…
+        b.admit(req(3, 4, dm)).unwrap();
+        b.admit(req(4, 2, dm)).unwrap();
+        assert_eq!(b.queued_rows(), 6);
+        // …then overflow rejects instead of queueing
+        assert!(b.admit(req(5, 1, dm)).is_err());
+        // draining a batch frees depth again
+        let _ = b.take_batch(8, dm).unwrap();
+        assert!(b.admit(req(6, 4, dm)).is_ok());
+    }
+
+    #[test]
+    fn batcher_budget_is_min_of_max_batch_and_nb() {
+        let dm = 1;
+        let mut b = Batcher::new(16, 64);
+        b.admit(req(1, 3, dm)).unwrap();
+        b.admit(req(2, 3, dm)).unwrap();
+        // nb = 4 < max_batch: only the first request fits
+        let (x, pending) = b.take_batch(4, dm).unwrap();
+        assert_eq!(x.shape, vec![4, 1]);
+        assert_eq!(pending.len(), 1);
+        assert_eq!(b.queued_rows(), 3);
+    }
+
+    #[test]
+    fn stats_json_has_latency_percentiles() {
+        let mut s = ServeStats::new();
+        s.latency.record(0.002);
+        s.latency.record(0.004);
+        s.steps = 1;
+        s.requests = 2;
+        let j = s.to_json();
+        for key in [
+            "latency_p50",
+            "latency_p95",
+            "latency_p99",
+            "rows_per_sec",
+            "step_p50",
+            "rejected",
+            "disconnects",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert!(j.get("latency_p99").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn tag_roundtrip() {
+        let t = serve_tag(CODE_REQ, 37);
+        assert_eq!(tag_code(t), CODE_REQ);
+        assert_eq!(tag_rows(t), 37);
+    }
+}

@@ -489,6 +489,38 @@ impl NetModel {
         }
         self.moe_step_overlapped(n, bytes_out, compute + host, chunks)
     }
+
+    /// One forward-only *serving* step: the Figure-2 dispatch exchange
+    /// (`bytes_out` egress) plus `compute` seconds of expert forward —
+    /// no backward exchange, no gradient ring, no optimiser, which is
+    /// why a serve step is a fraction of the training step over the
+    /// same layer (the training forward+backward runs ~3× the forward
+    /// GEMMs and twice the exchange volume, plus the grad-sync tail).
+    pub fn serve_step(&self, n: usize, bytes_out: usize, compute: f64) -> f64 {
+        if !self.enabled || n <= 1 {
+            return compute;
+        }
+        self.all_to_all(n, bytes_out) + compute
+    }
+
+    /// Modelled latency of a request of `rows` tokens arriving with
+    /// `queued_rows` already ahead of it, under continuous batching
+    /// that admits `max_batch` rows per step of `step_time` seconds:
+    /// the request completes with the batch that drains its last row,
+    /// i.e. after `ceil((queued_rows + rows) / max_batch)` steps.
+    /// Quantised by construction — the unit the measured percentiles
+    /// (`serve::ServeStats`) are compared against in the bench.
+    pub fn serve_request_latency(
+        &self,
+        queued_rows: usize,
+        rows: usize,
+        max_batch: usize,
+        step_time: f64,
+    ) -> f64 {
+        let total = queued_rows + rows;
+        let steps = total.div_ceil(max_batch.max(1)).max(1);
+        steps as f64 * step_time
+    }
 }
 
 #[cfg(test)]
@@ -718,6 +750,49 @@ mod tests {
         // whose local link is no faster than the NIC is never favourable
         let flat_local = NetModel { alpha_local: m.alpha, beta_local: m.beta, ..m };
         assert!(!flat_local.hier_favourable(8, 2));
+    }
+
+    #[test]
+    fn serve_step_is_a_fraction_of_the_training_step() {
+        let m = NetModel::preset(NetPreset::IbEdr);
+        for n in [2usize, 4, 8] {
+            for bytes in [1usize << 16, 4 << 20] {
+                for compute in [1e-4, 1e-2] {
+                    let serve = m.serve_step(n, bytes, compute);
+                    // a conservative training step over the same layer:
+                    // forward+backward exchanges and ~3× the forward
+                    // GEMMs, before any grad-sync tail
+                    let train = m.moe_step_blocking(n, 2 * bytes, 3.0 * compute);
+                    assert!(
+                        serve < train,
+                        "n={n} bytes={bytes} compute={compute}: {serve} !< {train}"
+                    );
+                }
+            }
+        }
+        // disabled net: pure compute
+        let none = NetModel::preset(NetPreset::None);
+        assert_eq!(none.serve_step(8, 1 << 30, 2.5), 2.5);
+    }
+
+    #[test]
+    fn serve_latency_quantises_by_steps_and_grows_with_queue() {
+        let m = NetModel::preset(NetPreset::IbEdr);
+        let step = 2e-3;
+        // an empty queue: one step, whatever the (admissible) size
+        assert_eq!(m.serve_request_latency(0, 1, 8, step), step);
+        assert_eq!(m.serve_request_latency(0, 8, 8, step), step);
+        // queue ahead pushes the request into later batches
+        assert_eq!(m.serve_request_latency(8, 1, 8, step), 2.0 * step);
+        assert_eq!(m.serve_request_latency(15, 1, 8, step), 2.0 * step);
+        assert_eq!(m.serve_request_latency(16, 1, 8, step), 3.0 * step);
+        // monotone in queue depth
+        let mut last = 0.0;
+        for q in 0..64 {
+            let t = m.serve_request_latency(q, 4, 8, step);
+            assert!(t >= last, "q={q}: {t} < {last}");
+            last = t;
+        }
     }
 
     #[test]

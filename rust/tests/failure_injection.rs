@@ -5,9 +5,12 @@ use std::sync::Arc;
 
 use fastmoe::comm::tcp::TcpGroup;
 use fastmoe::comm::{run_workers, Comm, TopoComm, Topology};
+use fastmoe::config::{CommConfig, MoeConfig, ServeConfig};
 use fastmoe::error::Error;
 use fastmoe::moe::bucket_for;
+use fastmoe::rng::Rng;
 use fastmoe::runtime::{Manifest, Runtime};
+use fastmoe::serve::{run_thread_daemon, ClientConn, Reply};
 
 #[test]
 fn worker_panic_is_contained_and_attributed() {
@@ -209,6 +212,81 @@ fn tcp_deferred_flush_death_is_detected() {
             "rank {rank}: survived a recv from a dead peer"
         );
     }
+}
+
+#[test]
+fn serve_client_disconnect_is_contained() {
+    // A client that vanishes mid-request must cost the daemon nothing
+    // but an accounting entry: its session reader exits on the socket
+    // error, its queued work's response write fails *contained* in
+    // `ServeDaemon::respond`, and every other session keeps getting
+    // served bitwise-normally until an orderly shutdown.
+    let Ok(rt) = Runtime::open_default() else { return };
+    let rt = Arc::new(rt);
+    const WORKERS: usize = 2;
+    let Some(gate) = rt.manifest.artifact(&format!("gate_fwd_w{WORKERS}")) else {
+        return;
+    };
+    let dm = gate.inputs[0].shape[1];
+    let cfg = ServeConfig { port: 48070, max_batch: 0, queue_depth: 1024, idle_ms: 20 };
+    let daemon = {
+        let rt = rt.clone();
+        std::thread::spawn(move || {
+            run_thread_daemon(
+                rt,
+                WORKERS,
+                5,
+                MoeConfig::default(),
+                CommConfig::default(),
+                cfg,
+            )
+        })
+    };
+    let addr = "127.0.0.1:48070";
+    let mut data = vec![0f32; dm];
+    Rng::new(11).fill_normal(&mut data, 1.0);
+
+    // all three sessions prove themselves live first
+    let mut victim = ClientConn::connect(addr).unwrap();
+    let mut survivors = [
+        ClientConn::connect(addr).unwrap(),
+        ClientConn::connect(addr).unwrap(),
+    ];
+    for (i, s) in survivors.iter_mut().enumerate() {
+        s.request(i as u32, 1, &data).unwrap();
+        assert!(matches!(s.recv_reply().unwrap(), Reply::Ok { .. }));
+    }
+    victim.request(100, 1, &data).unwrap();
+    assert!(matches!(victim.recv_reply().unwrap(), Reply::Ok { .. }));
+
+    // mid-request disconnect: fire a request and slam the socket shut
+    // without reading the reply
+    victim.request(101, 1, &data).unwrap();
+    drop(victim);
+
+    // the remaining sessions must keep round-tripping afterwards
+    for round in 0..3u32 {
+        for (i, s) in survivors.iter_mut().enumerate() {
+            let id = 10 + round * 2 + i as u32;
+            s.request(id, 1, &data).unwrap();
+            match s.recv_reply().unwrap() {
+                Reply::Ok { id: got, data: y } => {
+                    assert_eq!(got, id);
+                    assert_eq!(y.len(), dm);
+                    assert!(y.iter().all(|v| v.is_finite()));
+                }
+                Reply::Rejected { id } => panic!("request {id} rejected"),
+            }
+        }
+    }
+    let mut stop = ClientConn::connect(addr).unwrap();
+    stop.shutdown().unwrap();
+    let stats = daemon.join().unwrap().unwrap();
+    // 3 warm-ups + 6 survivor rounds answered for sure; the victim's
+    // in-flight request lands as either a served request (the response
+    // write won the race with the close) or a counted disconnect
+    assert!(stats.requests >= 9, "{stats:?}");
+    assert_eq!(stats.requests + stats.disconnects, 10, "{stats:?}");
 }
 
 #[test]

@@ -1,0 +1,354 @@
+//! Serving integration: the `fastmoe serve` daemon end to end.
+//!
+//! The load-bearing property is **batching transparency**: a request's
+//! output rows must be *bitwise* identical whether the request ran
+//! alone or was coalesced into a continuous batch with strangers.
+//! Under the top-k gate every per-row stage is row-local — the gate
+//! GEMM row, the per-row top-k, the expert FFN rows and the weighted
+//! combine all depend only on that row's values — and zero padding
+//! rows cannot perturb real rows' bits.  (The switch gate's capacity
+//! clipping *does* couple rows, which is why serving equivalence is
+//! pinned on `topk`.)
+//!
+//! Coverage:
+//! * batched-vs-sequential bitwise equivalence on the thread backend
+//!   and on real sockets, with and without the progress engine;
+//! * admission control over the wire without any runtime (oversized
+//!   and malformed requests are rejected as typed frames);
+//! * a full daemon run — three concurrent client sessions, replies
+//!   checked bitwise against an identically-seeded reference layer,
+//!   latency percentiles present in the stats JSON;
+//! * queue overflow under a saturating client: rejections, not stalls.
+//!
+//! Ports: 48270 (daemon), 48470/48570 (tcp equivalence ± progress),
+//! 48670 (runtime-free admission), 48770 (overflow).  The failure
+//! tests own 47870/47970/48070; the serve bench owns 48170.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fastmoe::comm::tcp::TcpGroup;
+use fastmoe::comm::{run_workers, Comm};
+use fastmoe::config::{CommConfig, MoeConfig, ServeConfig};
+use fastmoe::coordinator::{DistMoeLayer, MoeLayerBuilder};
+use fastmoe::metrics::Counters;
+use fastmoe::rng::Rng;
+use fastmoe::runtime::Runtime;
+use fastmoe::serve::{
+    run_thread_daemon, Batcher, ClientConn, Reply, Request, ServeDaemon,
+};
+use fastmoe::tensor::TensorF32;
+use fastmoe::util::json::Json;
+
+const WORKERS: usize = 2;
+
+fn request_data(seed: u64, n: usize) -> Vec<f32> {
+    let mut data = vec![0f32; n];
+    Rng::new(seed).fill_normal(&mut data, 1.0);
+    data
+}
+
+/// Drive one batched step (requests packed by a real [`Batcher`]) and
+/// then each request alone at rows `0..r` of a zero batch; assert the
+/// request's output rows are bitwise identical either way.  Every rank
+/// calls this (the forwards are collective); only rank 0 carries data.
+fn assert_batched_matches_sequential(
+    comm: &mut impl Comm,
+    layer: &DistMoeLayer,
+) -> fastmoe::Result<()> {
+    let (nb, dm) = (layer.nb, layer.dm);
+    let rank0 = comm.rank() == 0;
+    let r = (nb / 6).max(1);
+    let rows = [r, r, r];
+    let mut counters = Counters::new();
+    let mut reqs: Vec<Vec<f32>> = Vec::new();
+    let mut batcher = Batcher::new(nb, 16 * nb);
+    if rank0 {
+        for (i, &ri) in rows.iter().enumerate() {
+            let data = request_data(1000 + i as u64, ri * dm);
+            reqs.push(data.clone());
+            batcher
+                .admit(Request {
+                    id: i as u32,
+                    session: 0,
+                    rows: ri,
+                    data,
+                    arrived: Instant::now(),
+                })
+                .map_err(|_| fastmoe::Error::msg("admit failed"))?;
+        }
+    }
+    let (x, pending) = if rank0 {
+        batcher.take_batch(nb, dm).expect("non-empty queue")
+    } else {
+        (TensorF32::zeros(&[nb, dm]), Vec::new())
+    };
+    if rank0 {
+        assert_eq!(pending.len(), rows.len(), "all requests must co-batch");
+    }
+    let y_batch = layer.forward_infer(comm, x, &mut counters)?;
+    for (i, &ri) in rows.iter().enumerate() {
+        let mut x = TensorF32::zeros(&[nb, dm]);
+        if rank0 {
+            x.data[..ri * dm].copy_from_slice(&reqs[i]);
+        }
+        let y = layer.forward_infer(comm, x, &mut counters)?;
+        if rank0 {
+            let off = pending[i].row;
+            for (j, (a, b)) in y.data[..ri * dm]
+                .iter()
+                .zip(&y_batch.data[off * dm..(off + ri) * dm])
+                .enumerate()
+            {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "request {i} elem {j}: sequential {a} != batched {b}"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn batched_forward_is_bitwise_sequential_thread() {
+    let Ok(rt) = Runtime::open_default() else { return };
+    let rt = Arc::new(rt);
+    run_workers(WORKERS, move |mut h| {
+        let layer = MoeLayerBuilder::new()
+            .gate("topk")
+            .seed(31)
+            .build(rt.clone(), WORKERS, h.rank())?;
+        layer.warm()?;
+        assert_batched_matches_sequential(&mut h, &layer)
+    })
+    .unwrap();
+}
+
+fn tcp_equivalence(base_port: u16, progress: bool) {
+    let Ok(rt) = Runtime::open_default() else { return };
+    let rt = Arc::new(rt);
+    let joins: Vec<_> = (0..WORKERS)
+        .map(|rank| {
+            let rt = rt.clone();
+            std::thread::spawn(move || -> fastmoe::Result<()> {
+                let mut g = TcpGroup::connect_local(rank, WORKERS, base_port)?;
+                if progress {
+                    g.enable_progress();
+                }
+                let layer = MoeLayerBuilder::new()
+                    .gate("topk")
+                    .seed(31)
+                    .build(rt, WORKERS, rank)?;
+                layer.warm()?;
+                assert_batched_matches_sequential(&mut g, &layer)?;
+                g.barrier()
+            })
+        })
+        .collect();
+    for (rank, j) in joins.into_iter().enumerate() {
+        j.join().unwrap_or_else(|_| panic!("tcp rank {rank} panicked")).unwrap();
+    }
+}
+
+#[test]
+fn batched_forward_is_bitwise_sequential_tcp() {
+    tcp_equivalence(48470, false);
+}
+
+#[test]
+fn batched_forward_is_bitwise_sequential_tcp_progress() {
+    tcp_equivalence(48570, true);
+}
+
+#[test]
+fn admission_control_rejects_over_the_wire_without_runtime() {
+    // the front end alone — no workers, no artifacts: oversized and
+    // malformed requests must come back as typed REJECT frames before
+    // any batch forms
+    let cfg = ServeConfig { port: 48670, max_batch: 2, queue_depth: 8, idle_ms: 5 };
+    let (nb, dm) = (4usize, 3usize);
+    let mut daemon = ServeDaemon::bind(&cfg, nb, dm).unwrap();
+    let mut c = ClientConn::connect("127.0.0.1:48670").unwrap();
+    // rows > max_batch: can never be scheduled
+    c.request(7, 3, &[0.0; 9]).unwrap();
+    assert_eq!(c.recv_reply().unwrap(), Reply::Rejected { id: 7 });
+    // payload length disagrees with the row count
+    c.request(8, 2, &[0.0; 5]).unwrap();
+    assert_eq!(c.recv_reply().unwrap(), Reply::Rejected { id: 8 });
+    // zero rows
+    c.request(9, 0, &[]).unwrap();
+    assert_eq!(c.recv_reply().unwrap(), Reply::Rejected { id: 9 });
+    daemon.close();
+}
+
+#[test]
+fn daemon_serves_three_concurrent_sessions_bitwise() {
+    let Ok(rt) = Runtime::open_default() else { return };
+    let rt = Arc::new(rt);
+    let Some(gate) = rt.manifest.artifact(&format!("gate_fwd_w{WORKERS}")) else {
+        return;
+    };
+    let nb = gate.inputs[0].shape[0];
+    let dm = gate.inputs[0].shape[1];
+    let r = (nb / 4).max(1);
+    const SESSIONS: usize = 3;
+    const PER_SESSION: usize = 2;
+    let seed = 21u64;
+    let cfg = ServeConfig { port: 48270, max_batch: 0, queue_depth: 1024, idle_ms: 30 };
+    let daemon = {
+        let rt = rt.clone();
+        std::thread::spawn(move || {
+            run_thread_daemon(
+                rt,
+                WORKERS,
+                seed,
+                MoeConfig::default(),
+                CommConfig::default(),
+                cfg,
+            )
+        })
+    };
+
+    // three concurrent sessions, each with its own deterministic data
+    let sessions: Vec<_> = (0..SESSIONS)
+        .map(|s| {
+            std::thread::spawn(move || -> fastmoe::Result<Vec<(u32, Vec<f32>)>> {
+                let mut conn = ClientConn::connect("127.0.0.1:48270")?;
+                let mut got = Vec::new();
+                for i in 0..PER_SESSION {
+                    let id = (s * PER_SESSION + i) as u32;
+                    let data = request_data(500 + id as u64, r * dm);
+                    conn.request(id, r, &data)?;
+                    match conn.recv_reply()? {
+                        Reply::Ok { id, data } => got.push((id, data)),
+                        Reply::Rejected { id } => {
+                            panic!("request {id} rejected under an empty queue")
+                        }
+                    }
+                }
+                Ok(got)
+            })
+        })
+        .collect();
+    let mut replies: Vec<(u32, Vec<f32>)> = Vec::new();
+    for (s, j) in sessions.into_iter().enumerate() {
+        let got = j.join().unwrap_or_else(|_| panic!("session {s} panicked")).unwrap();
+        assert_eq!(got.len(), PER_SESSION);
+        replies.extend(got);
+    }
+    let mut stop = ClientConn::connect("127.0.0.1:48270").unwrap();
+    stop.shutdown().unwrap();
+    let stats = daemon.join().unwrap().unwrap();
+
+    // accounting: every request answered, nobody dropped
+    let total = (SESSIONS * PER_SESSION) as u64;
+    assert_eq!(stats.requests, total, "{stats:?}");
+    assert_eq!(stats.rows, total * r as u64);
+    assert_eq!(stats.disconnects, 0);
+    assert!(stats.steps >= 1 && stats.steps <= total, "{}", stats.steps);
+
+    // acceptance (d): the percentile keys ride in the stats JSON
+    let Json::Object(obj) = stats.to_json() else { panic!("stats not an object") };
+    for key in ["latency_p50", "latency_p95", "latency_p99", "rows_per_sec"] {
+        match obj.get(key) {
+            Some(Json::Num(v)) => assert!(*v >= 0.0, "{key} = {v}"),
+            other => panic!("missing numeric {key}: {other:?}"),
+        }
+    }
+    assert!(stats.latency.p99() >= stats.latency.p50());
+
+    // acceptance (a): every daemon reply is bitwise the sequential
+    // single-request forward of an identically-seeded layer
+    let expected: Vec<Vec<f32>> = {
+        let rt = rt.clone();
+        run_workers(WORKERS, move |mut h| {
+            let layer = MoeLayerBuilder::from_config(&MoeConfig::default())
+                .comm_config(&CommConfig::default())
+                .seed(seed)
+                .build(rt.clone(), WORKERS, h.rank())?;
+            layer.warm()?;
+            let mut counters = Counters::new();
+            let mut outs = Vec::new();
+            for id in 0..SESSIONS * PER_SESSION {
+                let mut x = TensorF32::zeros(&[layer.nb, layer.dm]);
+                if h.rank() == 0 {
+                    x.data[..r * dm]
+                        .copy_from_slice(&request_data(500 + id as u64, r * dm));
+                }
+                let y = layer.forward_infer(&mut h, x, &mut counters)?;
+                outs.push(y.data[..r * dm].to_vec());
+            }
+            Ok(outs)
+        })
+        .unwrap()
+        .swap_remove(0)
+    };
+    assert_eq!(replies.len(), SESSIONS * PER_SESSION);
+    for (id, data) in &replies {
+        let want = &expected[*id as usize];
+        assert_eq!(data.len(), want.len(), "request {id}");
+        for (j, (a, b)) in data.iter().zip(want).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "request {id} elem {j}: daemon {a} != reference {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn queue_overflow_rejects_instead_of_stalling() {
+    let Ok(rt) = Runtime::open_default() else { return };
+    let rt = Arc::new(rt);
+    // a one-row step with a one-row queue: a pipelined burst must
+    // overflow admission control while the collective forward runs
+    let cfg = ServeConfig { port: 48770, max_batch: 1, queue_depth: 1, idle_ms: 1 };
+    let Some(gate) = rt.manifest.artifact(&format!("gate_fwd_w{WORKERS}")) else {
+        return;
+    };
+    let dm = gate.inputs[0].shape[1];
+    let daemon = {
+        let rt = rt.clone();
+        std::thread::spawn(move || {
+            run_thread_daemon(
+                rt,
+                WORKERS,
+                3,
+                MoeConfig::default(),
+                CommConfig::default(),
+                cfg,
+            )
+        })
+    };
+    const BURST: usize = 6;
+    let mut conn = ClientConn::connect("127.0.0.1:48770").unwrap();
+    let data = request_data(9, dm);
+    // pipeline the whole burst before reading anything: the queue holds
+    // one row, so most of these arrive against a full queue
+    for id in 0..BURST as u32 {
+        conn.request(id, 1, &data).unwrap();
+    }
+    let (mut ok, mut rejected) = (0u64, 0u64);
+    for _ in 0..BURST {
+        // every request gets *some* reply — this loop completing is the
+        // "no stall" half of the property
+        match conn.recv_reply().unwrap() {
+            Reply::Ok { .. } => ok += 1,
+            Reply::Rejected { .. } => rejected += 1,
+        }
+    }
+    let mut stop = ClientConn::connect("127.0.0.1:48770").unwrap();
+    stop.shutdown().unwrap();
+    let stats = daemon.join().unwrap().unwrap();
+    assert_eq!(ok + rejected, BURST as u64);
+    assert!(ok >= 1, "the head request must be served");
+    assert!(
+        rejected >= 1,
+        "a {BURST}-deep burst into a 1-row queue must overflow"
+    );
+    assert_eq!(stats.requests, ok);
+    assert_eq!(stats.rejected, rejected, "{stats:?}");
+}

@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
-# Perf trajectory: run the sim-backed Figure-6 scaling bench and record
-# the result as BENCH_pr5.json at the repo root.
+# Perf trajectory: run the sim-backed Figure-6 scaling bench (recorded
+# as BENCH_pr5.json) and the serving latency bench (recorded as
+# BENCH_pr6.json) at the repo root.
 #
 #   scripts/bench_report.sh            # default: 4 chunks, 4 iters
 #   CHUNKS=8 ITERS=8 BUCKET_KB=256 NODES=2 scripts/bench_report.sh
+#   SESSIONS=4 REQUESTS=64 MAX_BATCH=8 scripts/bench_report.sh
 #
 # One bench invocation scores FOUR schedules from the same measured
 # compute, exchange volume, host copy/alloc counters and parameter
@@ -41,6 +43,9 @@ CHUNKS="${CHUNKS:-4}"
 ITERS="${ITERS:-4}"
 BUCKET_KB="${BUCKET_KB:-512}"
 NODES="${NODES:-2}"
+SESSIONS="${SESSIONS:-3}"
+REQUESTS="${REQUESTS:-32}"
+MAX_BATCH="${MAX_BATCH:-0}"
 
 cd "$ROOT/rust"
 
@@ -63,4 +68,16 @@ cargo bench --bench fig6_scale -- \
     --iters "$ITERS" --chunks "$CHUNKS" --bucket-kb "$BUCKET_KB" --nodes "$NODES" --overlap \
     --json runs/fig6_overlap_measured.json
 
-echo "bench_report.sh: wrote $ROOT/BENCH_pr5.json (and runs/fig6_overlap_measured.json)"
+# 3. serving (PR 6): continuous-batching throughput + request latency
+#    percentiles of the `fastmoe serve` daemon — the modelled section
+#    (forward-only serve step vs the training step, step-quantised
+#    request latency) always runs; a real thread-backend daemon driven
+#    by SESSIONS concurrent client sessions rides along where the
+#    runtime is available.  latency_p50/p95/p99 keys are guaranteed in
+#    the JSON either way.
+cargo bench --bench serve_latency -- \
+    --sessions "$SESSIONS" --requests "$REQUESTS" --max-batch "$MAX_BATCH" \
+    --json "$ROOT/BENCH_pr6.json"
+
+echo "bench_report.sh: wrote $ROOT/BENCH_pr5.json and $ROOT/BENCH_pr6.json" \
+     "(and runs/fig6_overlap_measured.json)"

@@ -21,9 +21,12 @@ fi
 cargo clippy --all-targets -- -D warnings
 # fast-fail on the protocol suites first (comm conformance incl. the
 # bucketed all-reduce matrix, trainer equivalence incl. overlapped
-# grad sync, failure injection incl. death mid-bucketed-sync, and the
-# zero-copy/pooled-receive regressions), then the full tier-1 run
+# grad sync, failure injection incl. death mid-bucketed-sync and the
+# serve client-disconnect containment, the zero-copy/pooled-receive
+# regressions, and the serve suite: batched==sequential bitwise
+# equivalence, admission control, queue overflow), then the full run
 cargo test -q --test comm_conformance --test trainer_equivalence \
-    --test failure_injection --test zero_copy_regression
+    --test failure_injection --test zero_copy_regression \
+    --test serve_integration
 cargo test -q
 echo "check.sh: all green"
