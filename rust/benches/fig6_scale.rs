@@ -44,12 +44,22 @@
 //! what the runtime realises); the bench asserts overlapped ≤
 //! blocking at every scale point.
 //!
+//! A `--skew` mode (PR 7) runs the *placement* scenario instead: an
+//! artifact-free analytic study of a skewed routing distribution (one
+//! hot expert, paper Fig. 5's pathology).  The static layout and the
+//! layout the [`fastmoe::placement::decide`] policy converges to
+//! (shadow replicas of the hot expert) are both scored with
+//! `sim::NetModel::moe_step_skewed` over the plan-modelled per-rank
+//! rows; the bench asserts the rebalanced layout scores strictly below
+//! static, and `--json` records both.
+//!
 //! ```bash
 //! cargo bench --bench fig6_scale                    # scaled IB-EDR (default)
 //! cargo bench --bench fig6_scale -- --overlap       # run the pipelined layer path
 //! cargo bench --bench fig6_scale -- --chunks 8      # overlap granularity
 //! cargo bench --bench fig6_scale -- --json out.json # machine-readable record
 //! cargo bench --bench fig6_scale -- --net none      # ablation: free network
+//! cargo bench --bench fig6_scale -- --skew          # PR-7 placement scenario
 //! ```
 //!
 //! Expected shape (paper Fig. 6): going 1→2 workers roughly *halves*
@@ -74,7 +84,7 @@ use fastmoe::util::json::Json;
 
 fn main() -> fastmoe::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
-    let args = Args::parse(argv, &["overlap"])?;
+    let args = Args::parse(argv, &["overlap", "skew"])?;
     let iters = args.usize_or("iters", 4)?;
     let net_name = args.str_or("net", "ib-edr-scaled");
     let chunks = args.usize_or("chunks", 4)?.max(1);
@@ -84,6 +94,11 @@ fn main() -> fastmoe::Result<()> {
     let nodes = args.usize_or("nodes", 2)?.max(1);
     let overlap_path = args.has_flag("overlap");
     let json_path = args.get("json").map(|s| s.to_string());
+    if args.has_flag("skew") {
+        // the PR-7 placement scenario is purely analytic — no artifacts
+        // or runtime needed, so it runs (and exits) before the open
+        return skew_scenario(&args, json_path);
+    }
     // V100 fp32 ≈ 14 TFLOP/s against 12.5 GB/s EDR (the paper's nodes)
     const PAPER_DEVICE_GFLOPS: f64 = 14_000.0;
     let rt = Arc::new(Runtime::open_default()?);
@@ -438,6 +453,114 @@ fn main() -> fastmoe::Result<()> {
         );
         root.insert("iters".into(), Json::Num(iters as f64));
         root.insert("rows".into(), Json::Array(json_rows));
+        std::fs::write(&path, Json::Object(root).to_string())?;
+        println!("{path} written");
+    }
+    Ok(())
+}
+
+/// The PR-7 `--skew` placement scenario: score a one-hot-expert routing
+/// distribution (paper Fig. 5's pathology) under the static seed layout
+/// and under the layout the shadow policy converges to, with
+/// `NetModel::moe_step_skewed` over the plan-modelled per-rank rows.
+/// Purely analytic — no artifacts, runtime, or wire traffic.
+fn skew_scenario(args: &Args, json_path: Option<String>) -> fastmoe::Result<()> {
+    use fastmoe::placement::{decide, PlacementPlan, PlacementPolicy, PlanDelta};
+
+    let workers = args.usize_or("workers", 4)?.max(2);
+    let ne_local = args.usize_or("ne-local", 2)?.max(1);
+    let threshold = args.f64_or("placement-threshold", 1.5)?;
+    let net_name = args.str_or("net", "ib-edr");
+    let net = NetModel::preset(NetPreset::parse(&net_name).unwrap_or(NetPreset::IbEdr));
+    // a forward row is dm floats each way on the wire; the per-row
+    // compute rate is arbitrary but fixed across layouts, so the
+    // static-vs-rebalanced comparison is scale-free
+    let dm = args.usize_or("dm", 1024)?;
+    let bytes_per_row = dm * 4;
+    let secs_per_row = 5e-6;
+
+    // skewed routing: expert 0 drains most of the batch, the rest cold
+    let ne_global = workers * ne_local;
+    let mut counts = vec![40u32; ne_global];
+    counts[0] = 600;
+
+    let mut plan = PlacementPlan::seed(workers, ne_local);
+    let static_rows = plan.rank_rows(&counts);
+    let static_secs = net.moe_step_skewed(&static_rows, bytes_per_row, secs_per_row);
+
+    // run the pure policy to convergence, exactly as every rank would
+    // at a window boundary (same counts -> same deltas)
+    let mut moves: Vec<String> = Vec::new();
+    for _ in 0..workers {
+        match decide(PlacementPolicy::Shadow, &plan, &counts, threshold) {
+            Some(PlanDelta::AddShadow { expert, host }) => {
+                plan.add_shadow(expert, host)?;
+                moves.push(format!("shadow e{expert} -> r{host}"));
+            }
+            // healthy (or no eligible move): the layout has converged
+            Some(PlanDelta::DropShadows) | Some(PlanDelta::Swap { .. }) | None => break,
+        }
+    }
+    let rebal_rows = plan.rank_rows(&counts);
+    let rebal_secs = net.moe_step_skewed(&rebal_rows, bytes_per_row, secs_per_row);
+
+    let hottest = |rows: &[f64]| rows.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "Figure 6 (skew) — dynamic placement vs static layout \
+         (workers={workers}, experts={ne_global}, hot expert 0: {} of {} rows, \
+         threshold={threshold}, net={net_name})\n",
+        counts[0],
+        counts.iter().map(|&c| c as u64).sum::<u64>(),
+    );
+    let mut table = Table::new(&["layout", "hottest_rows", "step_ms", "speedup", "moves"]);
+    table.row(vec![
+        "static".into(),
+        format!("{:.0}", hottest(&static_rows)),
+        format!("{:.2}", static_secs * 1e3),
+        "1.00x".into(),
+        "-".into(),
+    ]);
+    table.row(vec![
+        "rebalanced".into(),
+        format!("{:.0}", hottest(&rebal_rows)),
+        format!("{:.2}", rebal_secs * 1e3),
+        format!("{:.2}x", static_secs / rebal_secs.max(1e-12)),
+        moves.join(", "),
+    ]);
+    println!("{}", table.render());
+
+    // the acceptance property: rebalancing a skewed workload must score
+    // strictly below the static layout
+    assert!(
+        rebal_secs < static_secs,
+        "rebalanced layout must beat static on skewed routing \
+         ({rebal_secs} vs {static_secs})"
+    );
+
+    if let Some(path) = json_path {
+        let mut root = BTreeMap::new();
+        root.insert("bench".into(), Json::Str("fig6_scale".into()));
+        root.insert("mode".into(), Json::Str("skew".into()));
+        root.insert("net".into(), Json::Str(net_name));
+        root.insert("workers".into(), Json::Num(workers as f64));
+        root.insert("ne_global".into(), Json::Num(ne_global as f64));
+        root.insert("hot_expert_rows".into(), Json::Num(counts[0] as f64));
+        root.insert("threshold".into(), Json::Num(threshold));
+        root.insert("static_hottest_rows".into(), Json::Num(hottest(&static_rows)));
+        root.insert(
+            "rebalanced_hottest_rows".into(),
+            Json::Num(hottest(&rebal_rows)),
+        );
+        root.insert("static_s_per_iter".into(), Json::Num(static_secs));
+        root.insert("rebalanced_s_per_iter".into(), Json::Num(rebal_secs));
+        root.insert(
+            "speedup".into(),
+            Json::Num(static_secs / rebal_secs.max(1e-12)),
+        );
+        root.insert(
+            "moves".into(),
+            Json::Array(moves.into_iter().map(Json::Str).collect()),
+        );
         std::fs::write(&path, Json::Object(root).to_string())?;
         println!("{path} written");
     }

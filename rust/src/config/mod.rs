@@ -111,6 +111,11 @@ impl Default for TrainConfig {
 /// noise_std = 1.0        # noisy_topk gate: score-noise std dev
 /// balance_coef = 0.01    # GShard balance-loss gradient weight (0 = off)
 /// ```
+///
+/// `balance_coef` defaults to `0.01`: FastMoE-style training wants the
+/// gate nudged toward balanced routing out of the box.  Set it to `0`
+/// (config or `--balance-coef 0`) to reproduce the pre-balance seed
+/// gradients bit-for-bit.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MoeConfig {
     /// Gate kind: "topk" | "switch" | "noisy_topk".
@@ -122,7 +127,8 @@ pub struct MoeConfig {
     pub noise_std: f64,
     /// Weight of the GShard auxiliary balance-loss gradient added to
     /// the gate scores on the backward pass (`Gate::balance_grad`).
-    /// `0` (the default) disables it, preserving pre-wiring gradients.
+    /// Defaults to `0.01`; `0` disables it and restores the pre-wiring
+    /// gradients exactly.
     pub balance_coef: f64,
 }
 
@@ -132,7 +138,7 @@ impl Default for MoeConfig {
             gate: "topk".into(),
             capacity_factor: 1.25,
             noise_std: 1.0,
-            balance_coef: 0.0,
+            balance_coef: 0.01,
         }
     }
 }
@@ -467,6 +473,81 @@ impl ServeConfig {
     }
 }
 
+/// Dynamic expert placement — the `[placement]` config section,
+/// consumed by `coordinator::MoeLayerTrainer::with_placement` via
+/// [`crate::placement::Rebalancer::from_config`].
+///
+/// ```toml
+/// [placement]
+/// policy = "shadow"  # "static" (default) | "shadow" | "migrate"
+/// threshold = 1.5    # act when max/mean window row load exceeds this
+/// window = 8         # steps per decision window (and its load history)
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlacementConfig {
+    /// Re-sharding policy: `"static"` (never move anything — the seed
+    /// layout, no decision traffic), `"shadow"` (replicate the hottest
+    /// expert onto the least-loaded rank) or `"migrate"` (swap the
+    /// hottest expert with a cold rank's coldest one, Adam state and
+    /// all).
+    pub policy: String,
+    /// Max/mean per-rank row-load ratio above which the rebalancer
+    /// acts; at or below it, standing shadows are dropped.
+    pub threshold: f64,
+    /// Decision cadence in steps — also the sliding-window length of
+    /// the load history the decision is computed from.
+    pub window: usize,
+}
+
+impl Default for PlacementConfig {
+    fn default() -> Self {
+        Self { policy: "static".into(), threshold: 1.5, window: 8 }
+    }
+}
+
+impl PlacementConfig {
+    /// The `[placement]` section of an optional `--config` file, with
+    /// `--placement`, `--placement-threshold` and `--placement-window`
+    /// CLI overrides.
+    pub fn from_args(args: &crate::cli::Args) -> Result<PlacementConfig> {
+        let mut cfg = if let Some(path) = args.get("config") {
+            ConfigFile::load(path)?.placement()?
+        } else {
+            PlacementConfig::default()
+        };
+        cfg.policy = args.choice_or(
+            "placement",
+            crate::placement::PlacementPolicy::KINDS,
+            &cfg.policy,
+        )?;
+        cfg.threshold = args.f64_or("placement-threshold", cfg.threshold)?;
+        cfg.window = args.usize_or("placement-window", cfg.window)?;
+        cfg.validate()
+    }
+
+    fn validate(self) -> Result<PlacementConfig> {
+        if !crate::placement::PlacementPolicy::KINDS.contains(&self.policy.as_str()) {
+            return Err(Error::Config(format!(
+                "placement.policy must be one of {:?}, got `{}`",
+                crate::placement::PlacementPolicy::KINDS,
+                self.policy
+            )));
+        }
+        if !self.threshold.is_finite() || self.threshold < 1.0 {
+            return Err(Error::Config(format!(
+                "placement.threshold must be ≥ 1 (a max/mean ratio), got {}",
+                self.threshold
+            )));
+        }
+        if self.window == 0 {
+            return Err(Error::Config(
+                "placement.window must be ≥ 1 (steps per decision)".into(),
+            ));
+        }
+        Ok(self)
+    }
+}
+
 /// Distributed-runtime configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DistConfig {
@@ -625,6 +706,16 @@ impl ConfigFile {
         v.validate()
     }
 
+    pub fn placement(&self) -> Result<PlacementConfig> {
+        let mut p = PlacementConfig::default();
+        if let Some(s) = self.section("placement") {
+            p.policy = s.str_or("policy", &p.policy);
+            p.threshold = s.f64_or("threshold", p.threshold);
+            p.window = s.usize_or("window", p.window);
+        }
+        p.validate()
+    }
+
     pub fn dist(&self) -> Result<DistConfig> {
         let mut d = DistConfig::default();
         if let Some(s) = self.section("dist") {
@@ -672,6 +763,11 @@ balance_coef = 0.01
 [comm]
 overlap = true
 chunks = 2
+
+[placement]
+policy = "shadow"
+threshold = 2.0
+window = 4
 "#;
 
     #[test]
@@ -696,6 +792,42 @@ chunks = 2
         let comm = c.comm().unwrap();
         assert!(comm.overlap);
         assert_eq!(comm.chunks, 2);
+        let p = c.placement().unwrap();
+        assert_eq!(p.policy, "shadow");
+        assert!((p.threshold - 2.0).abs() < 1e-12);
+        assert_eq!(p.window, 4);
+    }
+
+    #[test]
+    fn placement_section_defaults_and_validation() {
+        // no [placement] section at all → static defaults
+        let c = ConfigFile::parse("[train]\nsteps = 1\n").unwrap();
+        assert_eq!(c.placement().unwrap(), PlacementConfig::default());
+        assert_eq!(c.placement().unwrap().policy, "static");
+        // bad policy name, sub-unity threshold, zero window
+        let c = ConfigFile::parse("[placement]\npolicy = \"teleport\"\n").unwrap();
+        assert!(c.placement().is_err());
+        let c = ConfigFile::parse("[placement]\nthreshold = 0.5\n").unwrap();
+        assert!(c.placement().is_err());
+        let c = ConfigFile::parse("[placement]\nwindow = 0\n").unwrap();
+        assert!(c.placement().is_err());
+        // CLI merge mirrors the other sections
+        let argv = |s: &str| {
+            crate::cli::Args::parse(s.split_whitespace().map(|x| x.to_string()), &[])
+                .unwrap()
+        };
+        let cfg = PlacementConfig::from_args(&argv(
+            "x --placement migrate --placement-threshold 1.25 --placement-window 2",
+        ))
+        .unwrap();
+        assert_eq!(cfg.policy, "migrate");
+        assert!((cfg.threshold - 1.25).abs() < 1e-12);
+        assert_eq!(cfg.window, 2);
+        assert_eq!(
+            PlacementConfig::from_args(&argv("x")).unwrap(),
+            PlacementConfig::default()
+        );
+        assert!(PlacementConfig::from_args(&argv("x --placement nowhere")).is_err());
     }
 
     #[test]

@@ -60,16 +60,17 @@
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::comm::{Comm, CommRequest, PendingAllReduce, Topology};
+use crate::comm::{Comm, CommRequest, PendingAllReduce, ProcessGroup, Topology};
 use crate::config::{CommConfig, MoeConfig};
 use crate::error::{Error, Result};
 use crate::metrics::Counters;
-use crate::model::Adam;
+use crate::model::{pack_expert_slot, unpack_expert_slot, Adam};
 use crate::moe::{
     agree_chunks, balance_loss, chunk_peer_groups_topo, gate, post_chunk, wait_chunk,
     ChunkPolicy, DispatchPlan, ExpertBatch, ExpertShard, FfnExpertShard, Gate,
     GateAssign, PendingChunk,
 };
+use crate::placement::{shadow_salt, PlacementPlan, PlanDelta};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::tensor::{ops, BufferPool, PoolStats, TensorF32};
@@ -91,6 +92,18 @@ const ROLE_STAGE: &str = "chunk_stage";
 const ROLE_COT: &str = "cotangent";
 /// Packed `[nb·k, dm]` row tensors (combine input / packed cotangents).
 const ROLE_PACKED: &str = "packed_rows";
+/// The shadow-replica compute batch (placement-aware forward only):
+/// its bucket tracks replica load, a different size class from the
+/// main batch, so it gets its own role.
+const ROLE_SHADOW: &str = "shadow_batch";
+
+/// Tag code for placement slot transfers (`(seq << 8) | PLACE_TAG`);
+/// the data/count/group/broadcast codes are 1/2/7/9.
+const PLACE_TAG: u64 = 11;
+
+/// Optimiser slot index where expert params start: the trainer's Adam
+/// covers `[wg, bg, <expert params>...]` (see `MoeLayerTrainer::new`).
+const GATE_OPT_SLOTS: usize = 2;
 
 /// Adaptive-chunking state (`[comm] chunks = 0`): every rank's pick
 /// must stay in lockstep (the chunk schedule and tag reservations are
@@ -328,6 +341,9 @@ impl MoeLayerBuilder {
                 chunks: CommConfig::default().chunks.clamp(1, workers),
                 my_ratio: -1.0,
             }),
+            placement: PlacementPlan::seed(workers, g.ne_local),
+            shadow: Mutex::new(None),
+            shadow_groups: Vec::new(),
         })
     }
 
@@ -339,6 +355,23 @@ impl MoeLayerBuilder {
     ) -> Result<DistMoeLayer> {
         self.build(rt, comm.size(), comm.rank())
     }
+}
+
+/// A host rank's shadow-replica state (placement policy `shadow`).
+///
+/// Replica `i` of this rank's hosted list computes in extended
+/// dispatch slot `ne_local + i`, on slot `i` of a second expert shard.
+/// The authoritative parameter copies are the *slice tensors* in
+/// `params` (4 per hosted expert, in [`ExpertShard::params`] slot
+/// order); `opt` is a real [`Adam`] over those slices whose moments
+/// were transferred from the owner and whose `step`/`lr` mirror the
+/// owner's optimiser each step — so a replica's update is the owner's
+/// update, bit for bit, and the shard tensors are refreshed from the
+/// slices after each step.
+struct ShadowStore {
+    shard: FfnExpertShard,
+    params: Vec<TensorF32>,
+    opt: Adam,
 }
 
 /// Per-worker gate parameters + pluggable gate/expert modules for one
@@ -385,6 +418,20 @@ pub struct DistMoeLayer {
     pool: Mutex<BufferPool>,
     /// Adaptive chunk-count agreement (`[comm] chunks = 0`).
     adapt: Mutex<AdaptState>,
+    /// Where every global expert lives (owner + shadow replicas).
+    /// Starts as the seed layout; mutated only by
+    /// [`Self::apply_delta`] at step boundaries.  While it *is* the
+    /// seed layout, dispatch takes the historical
+    /// `DispatchPlan::build` path, bit for bit.
+    placement: PlacementPlan,
+    /// This rank's shadow-replica params/optimiser, when it hosts any.
+    /// Mutex for `&self` access in the forward (one worker thread).
+    shadow: Mutex<Option<ShadowStore>>,
+    /// One grad-sync sub-group per shadowed expert this rank
+    /// participates in (owner or host), ascending expert order —
+    /// rebuilt on every applied delta, on all member ranks at the same
+    /// drained step boundary (their tag namespaces restart together).
+    shadow_groups: Vec<(usize, ProcessGroup)>,
 }
 
 /// Forward residuals needed by the backward chain.
@@ -511,7 +558,12 @@ impl DistMoeLayer {
     /// because the chunk schedule and its tag reservations are wire
     /// protocol.
     fn sched(&self) -> (bool, usize) {
-        if !self.overlap || self.workers <= 1 {
+        // Shadow replicas widen the dispatch slot space past ne_local;
+        // the chunked pipeline hardwires ne_local-arity count frames,
+        // so shadowed steps run the blocking placed path.  Migrated
+        // (owner-permuted, shadow-free) plans keep width == ne_local
+        // and stay fully pipelineable.
+        if !self.overlap || self.workers <= 1 || self.placement.has_shadows() {
             return (false, 1);
         }
         if self.chunks == 0 {
@@ -657,10 +709,22 @@ impl DistMoeLayer {
 
         // ---- host gating + plan (the paper's "local shuffle") ----
         let assign = self.gate.route(&scores, self.k)?;
-        let plan = DispatchPlan::build(&assign, self.workers, self.ne_local)?;
+        let plan = if self.placement.is_seed() {
+            // the historical static plan, bit for bit
+            DispatchPlan::build(&assign, self.workers, self.ne_local)?
+        } else {
+            // placement-aware: each expert's tokens go to its nearest
+            // replica; the slot space widens by the shadow width
+            let width = self.ne_local + self.placement.shadow_width();
+            DispatchPlan::build_routed(&assign, self.workers, self.ne_local, width, |e| {
+                self.placement.route(e, self.rank)
+            })?
+        };
 
         let (pipelined, chunks) = self.sched();
-        let (eb, y_slots) = if pipelined {
+        let (eb, y_slots) = if self.placement.has_shadows() {
+            self.dispatch_compute_placed(comm, &plan, &x, counters)?
+        } else if pipelined {
             self.dispatch_compute_overlapped(comm, &plan, &x, chunks, counters)?
         } else {
             self.dispatch_compute_blocking(comm, &plan, &x, counters)?
@@ -760,6 +824,141 @@ impl DistMoeLayer {
         );
         let ys = self.expert.forward(&eb)?;
         let ret = eb.split_outputs_pooled(&ys, &mut pool, ROLE_WIRE)?;
+        let ret_bytes: usize = ret.iter().map(|b| b.len() * 4).sum();
+        counters.add("moe_a2a_bytes", ret_bytes as u64);
+        counters.add("moe_copy_bytes", ret_bytes as u64);
+        let back = comm.all_to_all_v(ret)?;
+        self.drain_spent(comm, &mut pool);
+        let mut y_slots = pool.take_tensor_filled(ROLE_PACKED, &[self.nb * self.k, self.dm])?;
+        let unpacked = plan.unpack_returned_into(&back, self.dm, &mut y_slots)?;
+        self.repool_wire(comm, &mut pool, back);
+        counters.add("moe_copy_bytes", unpacked as u64);
+        Ok((eb, y_slots))
+    }
+
+    /// The blocking schedule over a shadow-widened slot space
+    /// (placement policy `shadow`): every peer frame carries
+    /// `ne_local + shadow_width` slots — the native experts first, then
+    /// this rank's hosted replicas.  Arriving buffers split at the
+    /// native row boundary into the main batch and a second
+    /// replica batch computed on the shadow shard; returns concatenate
+    /// per peer in the same slot order, so the sender's
+    /// `unpack_returned_into` sees exactly the layout its routed plan
+    /// promised.  The main batch is the step residual; the replica
+    /// batch dies here (the backward re-dispatches against owners).
+    fn dispatch_compute_placed(
+        &self,
+        comm: &mut impl Comm,
+        plan: &DispatchPlan,
+        x: &TensorF32,
+        counters: &mut Counters,
+    ) -> Result<(ExpertBatch, TensorF32)> {
+        let width = self.ne_local + self.placement.shadow_width();
+        let hosted = self.placement.hosted(self.rank).len();
+        let mut pool = self.pool.lock().unwrap();
+
+        // ---- phase 1: widened per-slot counts ----
+        let count_bufs: Vec<Vec<f32>> = plan
+            .send_counts
+            .iter()
+            .map(|c| {
+                let mut b = pool.take_vec(ROLE_WIRE, c.len());
+                b.extend(c.iter().map(|&x| x as f32));
+                b
+            })
+            .collect();
+        let recv_count_bufs = comm.all_to_all_v(count_bufs)?;
+        self.drain_spent(comm, &mut pool);
+        // split each width-wide count frame at ne_local: native prefix
+        // → main batch; shadow suffix (padded back to ne_local arity —
+        // a rank hosts at most ne_local replicas) → replica batch
+        let mut native_counts: Vec<Vec<u32>> = Vec::with_capacity(self.workers);
+        let mut shadow_counts: Vec<Vec<u32>> = Vec::with_capacity(self.workers);
+        for b in &recv_count_bufs {
+            if b.len() != width {
+                return Err(Error::Shape(format!(
+                    "placed count frame arity {} != {width}",
+                    b.len()
+                )));
+            }
+            native_counts.push(b[..self.ne_local].iter().map(|&v| v as u32).collect());
+            let mut sc: Vec<u32> = b[self.ne_local..].iter().map(|&v| v as u32).collect();
+            sc.resize(self.ne_local, 0);
+            shadow_counts.push(sc);
+        }
+        self.repool_wire(comm, &mut pool, recv_count_bufs);
+
+        // ---- phase 2: rows, ordered by extended slot per peer ----
+        let send = plan.pack_into(x, &mut pool, ROLE_WIRE)?;
+        let sent_bytes: usize = send.iter().map(|b| b.len() * 4).sum();
+        counters.add("moe_a2a_bytes", sent_bytes as u64);
+        counters.add("moe_copy_bytes", sent_bytes as u64);
+        let recv = comm.all_to_all_v(send)?;
+        self.drain_spent(comm, &mut pool);
+
+        let mut eb = ExpertBatch::shell_pooled(
+            native_counts,
+            self.ne_local,
+            self.dm,
+            &self.buckets,
+            &mut pool,
+            ROLE_BATCH,
+        )?;
+        // non-hosts receive no shadow rows (the plan never routes a
+        // replica slot at them), so they skip the replica batch
+        let mut sb = if hosted > 0 {
+            Some(ExpertBatch::shell_pooled(
+                shadow_counts,
+                self.ne_local,
+                self.dm,
+                &self.buckets,
+                &mut pool,
+                ROLE_SHADOW,
+            )?)
+        } else {
+            None
+        };
+        let mut copied = 0u64;
+        for (p, part) in recv.iter().enumerate() {
+            let native_len: usize =
+                eb.recv_counts[p].iter().map(|&c| c as usize).sum::<usize>() * self.dm;
+            copied += eb.fill_peer(p, &part[..native_len])? as u64;
+            if let Some(sb) = sb.as_mut() {
+                copied += sb.fill_peer(p, &part[native_len..])? as u64;
+            }
+        }
+        self.repool_wire(comm, &mut pool, recv);
+        counters.add("moe_copy_bytes", copied);
+        counters.add("moe_bucket_rows", (eb.bucket * eb.ne_local) as u64);
+        counters.add(
+            "moe_real_rows",
+            (eb.rows_per_expert.iter().sum::<usize>()
+                + sb.as_ref().map_or(0, |s| s.rows_per_expert.iter().sum::<usize>()))
+                as u64,
+        );
+
+        // ---- native experts, then this rank's replicas ----
+        let ys = self.expert.forward(&eb)?;
+        let mut ret = eb.split_outputs_pooled(&ys, &mut pool, ROLE_WIRE)?;
+        if let Some(sb) = sb.take() {
+            let sh_rows: usize = sb.rows_per_expert.iter().sum();
+            if sh_rows > 0 {
+                let shadow = self.shadow.lock().unwrap();
+                let st = shadow.as_ref().ok_or_else(|| {
+                    Error::Shape("shadow plan without a shadow store".into())
+                })?;
+                counters.add("moe_bucket_rows", (sb.bucket * sb.ne_local) as u64);
+                let ys_sh = st.shard.forward(&sb)?;
+                let ret_sh = sb.split_outputs_pooled(&ys_sh, &mut pool, ROLE_WIRE)?;
+                let mut spent = Vec::with_capacity(ret_sh.len());
+                for (p, extra) in ret_sh.into_iter().enumerate() {
+                    ret[p].extend_from_slice(&extra);
+                    spent.push(extra);
+                }
+                pool.give_all(ROLE_WIRE, spent);
+            }
+            pool.give_tensor(ROLE_SHADOW, sb.xs);
+        }
         let ret_bytes: usize = ret.iter().map(|b| b.len() * 4).sum();
         counters.add("moe_a2a_bytes", ret_bytes as u64);
         counters.add("moe_copy_bytes", ret_bytes as u64);
@@ -1075,7 +1274,9 @@ impl DistMoeLayer {
         let dw = it.next().unwrap().into_f32()?; // [nb, k]
 
         let (pipelined, chunks) = self.sched();
-        let grads = if pipelined {
+        let grads = if self.placement.has_shadows() {
+            self.backward_placed(comm, state, dys, &dw, counters)?
+        } else if pipelined {
             self.backward_overlapped(comm, state, dys, &dw, chunks, counters)?
         } else {
             self.backward_blocking(comm, state, dys, &dw, counters)?
@@ -1094,7 +1295,122 @@ impl DistMoeLayer {
         dw: &TensorF32,
         counters: &mut Counters,
     ) -> Result<LayerGrads> {
-        let plan = &state.plan;
+        self.backward_core(comm, state, &state.plan, &state.eb, dys, dw, counters)
+    }
+
+    /// Backward under shadow replicas.  Replicas are a *forward-only*
+    /// acceleration: the backward rebuilds the exact unreplicated
+    /// schedule, so every gradient bit matches the never-replicated
+    /// run.  Concretely: re-dispatch the saved input rows under the
+    /// owner-routed plan to rebuild the owner's full batch, re-pack the
+    /// combine cotangents from forward (replica-routed) packed order
+    /// into owner packed order, and run the blocking backward core over
+    /// them.  Owners end up holding the complete expert gradient;
+    /// [`Self::sync_shadows`] then broadcasts those bits to the
+    /// replicas so their parameter copies take the identical Adam step.
+    fn backward_placed(
+        &self,
+        comm: &mut impl Comm,
+        state: &MoeLayerState,
+        dys: TensorF32,
+        dw: &TensorF32,
+        counters: &mut Counters,
+    ) -> Result<LayerGrads> {
+        let plan_grad = DispatchPlan::build_routed(
+            &state.assign,
+            self.workers,
+            self.ne_local,
+            self.ne_local,
+            |e| self.placement.owner(e),
+        )?;
+        // permute the packed cotangents: forward slot → owner slot
+        let n = state.plan.nb * state.plan.k;
+        let mut dys_grad = TensorF32::zeros(&[n, self.dm]);
+        for a in 0..n {
+            let from = state.plan.slots[a] as usize;
+            let to = plan_grad.slots[a] as usize;
+            dys_grad.data[to * self.dm..(to + 1) * self.dm]
+                .copy_from_slice(&dys.data[from * self.dm..(from + 1) * self.dm]);
+        }
+        // rebuild the unreplicated batch (identical counts, pack order
+        // and bucket — the bits the owner's expert backward needs)
+        let eb_grad = self.redispatch(comm, &plan_grad, &state.x, counters)?;
+        let grads =
+            self.backward_core(comm, state, &plan_grad, &eb_grad, dys_grad, dw, counters)?;
+        self.pool.lock().unwrap().give_tensor(ROLE_BATCH, eb_grad.xs);
+        Ok(grads)
+    }
+
+    /// Count + row exchange of the blocking dispatch, without the
+    /// compute/return half: rebuilds the receiving batch a plan
+    /// implies.  Used by the shadowed backward to reconstruct the
+    /// owner-routed batch the forward skipped.
+    fn redispatch(
+        &self,
+        comm: &mut impl Comm,
+        plan: &DispatchPlan,
+        x: &TensorF32,
+        counters: &mut Counters,
+    ) -> Result<ExpertBatch> {
+        let mut pool = self.pool.lock().unwrap();
+        let count_bufs: Vec<Vec<f32>> = plan
+            .send_counts
+            .iter()
+            .map(|c| {
+                let mut b = pool.take_vec(ROLE_WIRE, c.len());
+                b.extend(c.iter().map(|&x| x as f32));
+                b
+            })
+            .collect();
+        let recv_count_bufs = comm.all_to_all_v(count_bufs)?;
+        self.drain_spent(comm, &mut pool);
+        let recv_counts: Vec<Vec<u32>> = recv_count_bufs
+            .iter()
+            .map(|b| b.iter().map(|&x| x as u32).collect())
+            .collect();
+        self.repool_wire(comm, &mut pool, recv_count_bufs);
+
+        let send = plan.pack_into(x, &mut pool, ROLE_WIRE)?;
+        let sent_bytes: usize = send.iter().map(|b| b.len() * 4).sum();
+        counters.add("moe_a2a_bytes", sent_bytes as u64);
+        counters.add("moe_copy_bytes", sent_bytes as u64);
+        let recv = comm.all_to_all_v(send)?;
+        self.drain_spent(comm, &mut pool);
+
+        let mut eb = ExpertBatch::shell_pooled(
+            recv_counts,
+            self.ne_local,
+            self.dm,
+            &self.buckets,
+            &mut pool,
+            ROLE_BATCH,
+        )?;
+        let mut copied = 0u64;
+        for (p, part) in recv.iter().enumerate() {
+            copied += eb.fill_peer(p, part)? as u64;
+        }
+        self.repool_wire(comm, &mut pool, recv);
+        counters.add("moe_copy_bytes", copied);
+        Ok(eb)
+    }
+
+    /// The blocking backward body over an explicit `(plan, eb)` pair —
+    /// `state.plan`/`state.eb` on the ordinary path, the rebuilt
+    /// owner-routed pair on the shadowed path.  Everything else
+    /// (gate backward, overlapped gate sync, cotangent exchanges,
+    /// scatter transpose) is byte-for-byte the historical blocking
+    /// chain.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_core(
+        &self,
+        comm: &mut impl Comm,
+        state: &MoeLayerState,
+        plan: &DispatchPlan,
+        eb: &ExpertBatch,
+        dys: TensorF32,
+        dw: &TensorF32,
+        counters: &mut Counters,
+    ) -> Result<LayerGrads> {
         let mut pool = self.pool.lock().unwrap();
 
         // ---- gate backward: routing Jacobian + gate GEMM ----
@@ -1122,18 +1438,18 @@ impl DistMoeLayer {
         self.drain_spent(comm, &mut pool);
         let mut dys_in = pool.take_tensor(
             ROLE_COT,
-            &[self.ne_local, state.eb.bucket, self.dm],
+            &[self.ne_local, eb.bucket, self.dm],
         )?;
-        copied += state.eb.rebatch_into(&recv, &mut dys_in)? as u64;
+        copied += eb.rebatch_into(&recv, &mut dys_in)? as u64;
         self.repool_wire(comm, &mut pool, recv);
 
         // ---- expert shard backward (recompute-style artifact) ----
-        let (dxs, expert_grads) = self.expert.backward(&state.eb, &dys_in)?;
+        let (dxs, expert_grads) = self.expert.backward(eb, &dys_in)?;
         pool.give_tensor(ROLE_COT, dys_in);
         let gate_synced = self.finish_gate_sync(comm, gate_sync, &mut dwg, &mut dbg)?;
 
         // ---- route input cotangents back to token owners ----
-        let ret = state.eb.split_outputs_pooled(&dxs, &mut pool, ROLE_WIRE)?;
+        let ret = eb.split_outputs_pooled(&dxs, &mut pool, ROLE_WIRE)?;
         let ret_bytes: usize = ret.iter().map(|b| b.len() * 4).sum();
         counters.add("moe_a2a_bytes", ret_bytes as u64);
         copied += ret_bytes as u64;
@@ -1266,6 +1582,319 @@ impl DistMoeLayer {
         self.scatter_transpose(plan, &dx_packed, &mut dx);
         pool.give_tensor(ROLE_PACKED, dx_packed);
         Ok(LayerGrads { dx, dwg, dbg, expert: expert_grads, gate_synced })
+    }
+
+    // ------------------------------------------------------------------
+    // Dynamic placement (see `crate::placement`): the layer executes
+    // agreed plan deltas and keeps shadow replicas bit-synchronised.
+    // ------------------------------------------------------------------
+
+    /// The current expert layout.
+    pub fn placement(&self) -> &PlacementPlan {
+        &self.placement
+    }
+
+    /// Floats in one expert's parameter slot (all shard tensors).
+    fn slot_len(&self) -> usize {
+        self.expert
+            .params()
+            .iter()
+            .map(|(_, t)| t.data.len() / self.ne_local)
+            .sum()
+    }
+
+    /// Wire payload of one expert slot: params, then Adam first and
+    /// second moments — the checkpoint slot format, flattened.
+    fn pack_slot_state(&self, opt: &Adam, slot: usize) -> Result<Vec<f32>> {
+        let ps = self.expert.params();
+        let ts: Vec<&TensorF32> = ps.iter().map(|(_, t)| *t).collect();
+        let mut payload = pack_expert_slot(&ts, slot)?;
+        let ms: Vec<&TensorF32> =
+            (0..ts.len()).map(|j| &opt.m[GATE_OPT_SLOTS + j]).collect();
+        payload.extend(pack_expert_slot(&ms, slot)?);
+        let vs: Vec<&TensorF32> =
+            (0..ts.len()).map(|j| &opt.v[GATE_OPT_SLOTS + j]).collect();
+        payload.extend(pack_expert_slot(&vs, slot)?);
+        Ok(payload)
+    }
+
+    /// Inverse of [`Self::pack_slot_state`]: land a migrated expert's
+    /// params + Adam moments in local `slot`.
+    fn unpack_slot_state(
+        &mut self,
+        opt: &mut Adam,
+        slot: usize,
+        payload: &[f32],
+    ) -> Result<()> {
+        let sl = self.slot_len();
+        if payload.len() != 3 * sl {
+            return Err(Error::Shape(format!(
+                "slot payload {} != {}",
+                payload.len(),
+                3 * sl
+            )));
+        }
+        let mut ts: Vec<&mut TensorF32> = self
+            .expert
+            .params_mut()
+            .into_iter()
+            .map(|(_, t)| t)
+            .collect();
+        unpack_expert_slot(&payload[..sl], &mut ts, slot)?;
+        let p_cnt = ts.len();
+        drop(ts);
+        let mut ms: Vec<&mut TensorF32> =
+            opt.m[GATE_OPT_SLOTS..GATE_OPT_SLOTS + p_cnt].iter_mut().collect();
+        unpack_expert_slot(&payload[sl..2 * sl], &mut ms, slot)?;
+        let mut vs: Vec<&mut TensorF32> =
+            opt.v[GATE_OPT_SLOTS..GATE_OPT_SLOTS + p_cnt].iter_mut().collect();
+        unpack_expert_slot(&payload[2 * sl..], &mut vs, slot)?;
+        Ok(())
+    }
+
+    /// Exchange two local expert slots (params + moments) — the
+    /// degenerate migration where one rank owns both experts.
+    fn swap_local_slots(&mut self, opt: &mut Adam, sa: usize, sb: usize) -> Result<()> {
+        let pa = self.pack_slot_state(opt, sa)?;
+        let pb = self.pack_slot_state(opt, sb)?;
+        self.unpack_slot_state(opt, sa, &pb)?;
+        self.unpack_slot_state(opt, sb, &pa)
+    }
+
+    /// Install a received replica on this host: authoritative slice
+    /// copies + transferred Adam moments in the replica optimiser, and
+    /// the params mirrored into the shadow compute shard's next slot.
+    fn install_replica(&mut self, expert: usize, payload: &[f32], lr: f32) -> Result<()> {
+        let sl = self.slot_len();
+        if payload.len() != 3 * sl {
+            return Err(Error::Shape(format!(
+                "replica payload {} != {}",
+                payload.len(),
+                3 * sl
+            )));
+        }
+        // slice shapes = shard param shapes minus the expert dim
+        let shapes: Vec<Vec<usize>> = self
+            .expert
+            .params()
+            .iter()
+            .map(|(_, t)| t.shape[1..].to_vec())
+            .collect();
+        let idx = self
+            .placement
+            .hosted(self.rank)
+            .iter()
+            .position(|&h| h == expert)
+            .ok_or_else(|| Error::Shape("install_replica: not a host".into()))?;
+        let shadow = self.shadow.get_mut().unwrap();
+        if shadow.is_none() {
+            // a second, initially-zero shard: only installed slots
+            // ever receive rows, so the other slots' values are inert
+            let mut shard = FfnExpertShard::init(
+                self.rt.clone(),
+                self.ne_local,
+                self.dm,
+                self.dh,
+                self.buckets.clone(),
+                0,
+                0,
+            );
+            for (_, t) in shard.params_mut() {
+                t.data.fill(0.0);
+            }
+            *shadow = Some(ShadowStore {
+                shard,
+                params: Vec::new(),
+                opt: Adam::new(&[], lr),
+            });
+        }
+        let st = shadow.as_mut().unwrap();
+        st.opt.lr = lr;
+        if st.params.len() != idx * shapes.len() {
+            return Err(Error::Shape("install_replica: hosting order skew".into()));
+        }
+        let mut pos = 0usize;
+        let mut slices = Vec::with_capacity(shapes.len());
+        for shp in &shapes {
+            let n: usize = shp.iter().product();
+            slices.push(TensorF32::from_vec(shp, payload[pos..pos + n].to_vec())?);
+            pos += n;
+        }
+        for shp in &shapes {
+            let n: usize = shp.iter().product();
+            st.opt.m.push(TensorF32::from_vec(shp, payload[pos..pos + n].to_vec())?);
+            pos += n;
+        }
+        for shp in &shapes {
+            let n: usize = shp.iter().product();
+            st.opt.v.push(TensorF32::from_vec(shp, payload[pos..pos + n].to_vec())?);
+            pos += n;
+        }
+        // mirror the params into the compute shard's slot `idx`
+        let ne_local = self.ne_local;
+        for ((_, dst), src) in st.shard.params_mut().iter_mut().zip(&slices) {
+            let stride = dst.data.len() / ne_local;
+            dst.data[idx * stride..(idx + 1) * stride].copy_from_slice(&src.data);
+        }
+        st.params.extend(slices);
+        Ok(())
+    }
+
+    /// Rebuild this rank's per-expert gradient sub-groups from the
+    /// plan.  Runs on every rank after every applied delta — all
+    /// members of a group recreate it at the same drained step
+    /// boundary, so the restarted tag namespaces stay aligned.
+    fn rebuild_shadow_groups(&mut self) -> Result<()> {
+        self.shadow_groups.clear();
+        for (e, members) in self.placement.shadow_groups() {
+            if members.contains(&self.rank) {
+                self.shadow_groups
+                    .push((e, ProcessGroup::new(members, self.rank, shadow_salt(e))?));
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an agreed [`PlanDelta`] at a step boundary.  Collective:
+    /// every rank calls it with the identical delta at the same step,
+    /// and world sequence numbers advance uniformly on all ranks even
+    /// when only two of them move payload.
+    pub fn apply_delta(
+        &mut self,
+        comm: &mut impl Comm,
+        delta: &PlanDelta,
+        opt: &mut Adam,
+    ) -> Result<()> {
+        match *delta {
+            PlanDelta::AddShadow { expert, host } => {
+                // validate + mutate the plan first (uniform error
+                // before any wire traffic), then move the slot
+                self.placement.add_shadow(expert, host)?;
+                let (orank, oslot) = self.placement.owner(expert);
+                let tag = (comm.next_seq() << 8) | PLACE_TAG;
+                if self.rank == orank {
+                    let payload = self.pack_slot_state(opt, oslot)?;
+                    let req = comm.isend(host, tag, payload)?;
+                    comm.wait(req)?;
+                } else if self.rank == host {
+                    let req = comm.irecv(orank, tag)?;
+                    let payload = comm
+                        .wait(req)?
+                        .ok_or_else(|| Error::Comm("empty replica payload".into()))?;
+                    self.install_replica(expert, &payload, opt.lr)?;
+                }
+            }
+            PlanDelta::DropShadows => {
+                self.placement.clear_shadows();
+                *self.shadow.get_mut().unwrap() = None;
+            }
+            PlanDelta::Swap { a, b } => {
+                if self.placement.has_shadows() {
+                    return Err(Error::Config(
+                        "apply_delta: drop shadows before migrating".into(),
+                    ));
+                }
+                let (ra, sa) = self.placement.owner(a);
+                let (rb, sb) = self.placement.owner(b);
+                // both transfer directions reserve a seq on every rank
+                let tag_a = (comm.next_seq() << 8) | PLACE_TAG;
+                let tag_b = (comm.next_seq() << 8) | PLACE_TAG;
+                if ra == rb {
+                    if self.rank == ra && sa != sb {
+                        self.swap_local_slots(opt, sa, sb)?;
+                    }
+                } else if self.rank == ra {
+                    let payload_a = self.pack_slot_state(opt, sa)?;
+                    let rx = comm.irecv(rb, tag_b)?;
+                    let tx = comm.isend(rb, tag_a, payload_a)?;
+                    let payload_b = comm
+                        .wait(rx)?
+                        .ok_or_else(|| Error::Comm("empty slot payload".into()))?;
+                    comm.wait(tx)?;
+                    self.unpack_slot_state(opt, sa, &payload_b)?;
+                } else if self.rank == rb {
+                    let payload_b = self.pack_slot_state(opt, sb)?;
+                    let rx = comm.irecv(ra, tag_a)?;
+                    let tx = comm.isend(ra, tag_b, payload_b)?;
+                    let payload_a = comm
+                        .wait(rx)?
+                        .ok_or_else(|| Error::Comm("empty slot payload".into()))?;
+                    comm.wait(tx)?;
+                    self.unpack_slot_state(opt, sb, &payload_a)?;
+                }
+                self.placement.swap_owners(a, b)?;
+            }
+        }
+        self.rebuild_shadow_groups()
+    }
+
+    /// Every-step shadow parameter sync (a no-op without shadows).
+    ///
+    /// For each shadowed expert — ascending id, identically on every
+    /// member — the owner contributes its freshly computed gradient
+    /// slot and every replica contributes zeros to the expert's
+    /// sub-group all-reduce, i.e. a broadcast of the owner's gradient
+    /// bits.  Each replica then applies the owner's exact Adam step
+    /// (mirrored `step`/`lr`/`weight_decay` over the transferred
+    /// moments) to its authoritative slice copies and refreshes the
+    /// compute shard.  Call right after `apply_grads`, on every rank,
+    /// every step, so the group collectives stay in lockstep.
+    pub fn sync_shadows(
+        &mut self,
+        comm: &mut impl Comm,
+        grads: &LayerGrads,
+        opt: &Adam,
+    ) -> Result<()> {
+        if self.shadow_groups.is_empty() {
+            return Ok(());
+        }
+        let slot_len = self.slot_len();
+        let p_cnt = grads.expert.len();
+        let rank = self.rank;
+        let ne_local = self.ne_local;
+        for (e, pg) in self.shadow_groups.iter_mut() {
+            let (orank, oslot) = self.placement.owner(*e);
+            let mut buf = if rank == orank {
+                let gs: Vec<&TensorF32> = grads.expert.iter().map(|(_, g)| g).collect();
+                pack_expert_slot(&gs, oslot)?
+            } else {
+                vec![0.0f32; slot_len]
+            };
+            pg.bind(comm).all_reduce_sum(&mut buf)?;
+            if rank == orank {
+                continue; // the owner already stepped in apply_grads
+            }
+            let idx = self
+                .placement
+                .hosted(rank)
+                .iter()
+                .position(|&h| h == *e)
+                .ok_or_else(|| Error::Shape("sync_shadows: not a host".into()))?;
+            let shadow = self.shadow.get_mut().unwrap();
+            let st = shadow
+                .as_mut()
+                .ok_or_else(|| Error::Shape("sync_shadows: no shadow store".into()))?;
+            let ShadowStore { shard, params, opt: sopt } = st;
+            sopt.step = opt.step;
+            sopt.lr = opt.lr;
+            sopt.weight_decay = opt.weight_decay;
+            let mut pos = 0usize;
+            for j in 0..p_cnt {
+                let t = &mut params[idx * p_cnt + j];
+                let n = t.data.len();
+                let shape = t.shape.clone();
+                let g = TensorF32::from_vec(&shape, buf[pos..pos + n].to_vec())?;
+                pos += n;
+                sopt.update_slot(idx * p_cnt + j, t, &g)?;
+            }
+            for ((_, dst), src) in
+                shard.params_mut().iter_mut().zip(&params[idx * p_cnt..(idx + 1) * p_cnt])
+            {
+                let stride = dst.data.len() / ne_local;
+                dst.data[idx * stride..(idx + 1) * stride].copy_from_slice(&src.data);
+            }
+        }
+        Ok(())
     }
 }
 

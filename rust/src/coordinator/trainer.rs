@@ -19,6 +19,7 @@ use crate::error::{Error, Result};
 use crate::metrics::Counters;
 use crate::model::{Adam, ParamStore};
 use crate::moe::LoadMonitor;
+use crate::placement::{PlanDelta, Rebalancer};
 use crate::runtime::{Executable, ModelEntry, Runtime};
 use crate::tensor::{HostTensor, TensorF32};
 
@@ -237,11 +238,20 @@ pub struct MoeStepStats {
 /// Every step records per-expert token counts into the [`LoadMonitor`]
 /// and reports the balance loss, so gate policies can be compared on
 /// load balance directly from the step log.
+///
+/// With [`MoeLayerTrainer::with_placement`] the trainer also closes the
+/// load→layout loop: a [`Rebalancer`] watches the same kept counts and,
+/// at window boundaries, agrees on a [`PlanDelta`] across ranks which
+/// the layer executes between steps (shadow replication or expert
+/// migration — see `crate::placement`).  `DistTrainer` has no placement
+/// surface by construction: its fused-graph emulation replicates every
+/// expert on every worker, so there is nothing to re-shard.
 pub struct MoeLayerTrainer {
     pub layer: DistMoeLayer,
     opt: Adam,
     pub monitor: LoadMonitor,
     pub step: u64,
+    rebalancer: Option<Rebalancer>,
 }
 
 impl MoeLayerTrainer {
@@ -253,7 +263,28 @@ impl MoeLayerTrainer {
             .collect();
         let opt = Adam::new(&shapes, lr);
         let monitor = LoadMonitor::new(layer.workers * layer.ne_local);
-        MoeLayerTrainer { layer, opt, monitor, step: 0 }
+        MoeLayerTrainer { layer, opt, monitor, step: 0, rebalancer: None }
+    }
+
+    /// Attach a placement [`Rebalancer`]; every rank must attach an
+    /// identically-configured one (the decision protocol is collective).
+    pub fn with_placement(mut self, rebalancer: Rebalancer) -> MoeLayerTrainer {
+        self.rebalancer = Some(rebalancer);
+        self
+    }
+
+    /// Apply a placement delta outside the rebalancer's own cadence —
+    /// the deterministic hook the equivalence tests drive (the trainer
+    /// owns the optimiser, whose Adam state migrates with the expert).
+    pub fn force_delta(&mut self, comm: &mut impl Comm, delta: &PlanDelta) -> Result<()> {
+        self.layer.apply_delta(comm, delta, &mut self.opt)
+    }
+
+    /// The trainer-owned optimiser, read-only — the placement
+    /// equivalence tests compare migrated Adam state bit-for-bit
+    /// against an unmigrated reference.
+    pub fn optimizer(&self) -> &Adam {
+        &self.opt
     }
 
     /// One forward + backward + optimiser step over `x: [nb, dm]`.
@@ -295,6 +326,17 @@ impl MoeLayerTrainer {
         }
         self.monitor.record(&state.counts_kept);
         self.layer.apply_grads(&mut self.opt, &grads)?;
+        // Keep shadow replicas bit-identical to their owners (a no-op
+        // without shadows), then let the rebalancer — if any — agree on
+        // and execute a layout change at this step boundary.
+        self.layer.sync_shadows(comm, &grads, &self.opt)?;
+        if let Some(reb) = self.rebalancer.as_mut() {
+            reb.observe(&state.counts_kept);
+            let delta = reb.maybe_rebalance(comm, self.layer.placement())?;
+            if let Some(delta) = delta {
+                self.layer.apply_delta(comm, &delta, &mut self.opt)?;
+            }
+        }
         let stats = MoeStepStats {
             step: self.step,
             loss,

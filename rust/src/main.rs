@@ -31,7 +31,8 @@ use std::sync::Arc;
 use fastmoe::cli::{Args, Usage};
 use fastmoe::comm::{self, Comm, TopoComm};
 use fastmoe::config::{
-    fmoefy, CommConfig, ConfigFile, ModelConfig, MoeConfig, ServeConfig, TrainConfig,
+    fmoefy, CommConfig, ConfigFile, ModelConfig, MoeConfig, PlacementConfig,
+    ServeConfig, TrainConfig,
 };
 use fastmoe::coordinator::{
     DistTrainer, MoeLayerBuilder, MoeLayerTrainer, ServeLoop, Trainer,
@@ -41,6 +42,7 @@ use fastmoe::error::Result;
 use fastmoe::metrics::{Counters, CsvWriter, Histogram, Stopwatch};
 use fastmoe::serve::{run_thread_daemon, ClientConn, Reply, ServeDaemon};
 use fastmoe::model::save_checkpoint;
+use fastmoe::placement::Rebalancer;
 use fastmoe::rng::Rng;
 use fastmoe::runtime::Runtime;
 use fastmoe::tensor::TensorF32;
@@ -54,7 +56,7 @@ fn main() {
             ("info", "print artifact and model inventory"),
             ("train", "single-worker fused training loop (Figure 7)"),
             ("dist-train", "multi-worker training with tag-aware grad sync (--grad-overlap --bucket-kb N --topology flat|hier --nodes N)"),
-            ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk, --overlap --chunks N [0=adaptive] --chunk-policy mean|max --no-pool --progress --grad-overlap --topology flat|hier --nodes N --local-size N)"),
+            ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk, --overlap --chunks N [0=adaptive] --chunk-policy mean|max --no-pool --progress --grad-overlap --topology flat|hier --nodes N --local-size N --placement static|shadow|migrate --placement-threshold R --placement-window N)"),
             ("fmoefy", "Listing-1: dense config -> MoE config at equal FLOPs"),
             ("serve", "long-lived inference daemon: continuous batching over resident expert-parallel workers (--workers W --serve-port P --max-batch N --queue-depth N --idle-ms N --backend local|tcp --hosts a:p,b:p)"),
             ("client", "load generator for `serve` (--addr host:port --requests N --rows R --dm D --concurrency C --shutdown)"),
@@ -272,6 +274,7 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
     let port = args.usize_or("port", 47500)? as u16;
     let moe_cfg = MoeConfig::from_args(args)?;
     let comm_cfg = CommConfig::from_args(args)?;
+    let place_cfg = PlacementConfig::from_args(args)?;
     let exe = std::env::current_exe()?;
     println!("dist-moe (tcp): spawning {workers} worker processes on ports {port}..");
     let mut children = Vec::new();
@@ -293,6 +296,10 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
             "--topology".into(), comm_cfg.topology.clone(),
             "--nodes".into(), comm_cfg.nodes.to_string(),
             "--local-size".into(), comm_cfg.local_size.to_string(),
+            "--placement".into(), place_cfg.policy.clone(),
+            "--placement-threshold".into(), place_cfg.threshold.to_string(),
+            "--placement-window".into(), place_cfg.window.to_string(),
+            "--lr".into(), args.f64_or("lr", 1e-3)?.to_string(),
         ];
         if let Some(h) = &hosts {
             argv.push("--hosts".into());
@@ -351,6 +358,35 @@ fn tcp_worker(args: &Args) -> Result<()> {
         .build(rt, workers, rank)?;
     layer.warm()?;
     let mut counters = Counters::new();
+    let place_cfg = PlacementConfig::from_args(args)?;
+    if place_cfg.policy != "static" {
+        // dynamic placement moves optimiser state with the experts, so
+        // it needs the trainer loop rather than the raw fwd/bwd demo
+        let lr = args.f64_or("lr", 1e-3)? as f32;
+        let n_expert = workers * layer.ne_local;
+        let mut tr = MoeLayerTrainer::new(layer, lr)
+            .with_placement(Rebalancer::from_config(&place_cfg, n_expert)?);
+        let mut rng = Rng::new(seed ^ rank as u64);
+        let watch = Stopwatch::start();
+        let mut flops = 0.0;
+        for _ in 0..iters {
+            let mut x = TensorF32::zeros(&[tr.layer.nb, tr.layer.dm]);
+            rng.fill_normal(&mut x.data, 1.0);
+            flops += tr.train_step(&mut group, x, &mut counters)?.flops;
+        }
+        group.barrier()?;
+        println!(
+            "  [pid {}] tcp worker {rank}/{workers}: {:.2}s, {:.2} GFLOP/s, \
+             placement `{}`, shadows {}, imbalance {:.2}",
+            std::process::id(),
+            watch.secs(),
+            util::gflops(flops, watch.secs()),
+            place_cfg.policy,
+            tr.layer.placement().shadow_width(),
+            tr.monitor.imbalance(),
+        );
+        return Ok(());
+    }
     let mut rng = Rng::new(seed ^ rank as u64);
     let watch = Stopwatch::start();
     let mut flops = 0.0;
@@ -397,15 +433,18 @@ fn dist_moe(args: &Args) -> Result<()> {
     let lr = args.f64_or("lr", 1e-3)? as f32;
     let moe_cfg = MoeConfig::from_args(args)?;
     let comm_cfg = CommConfig::from_args(args)?;
+    let place_cfg = PlacementConfig::from_args(args)?;
     let rt = Arc::new(Runtime::open_default()?);
     println!(
-        "dist-moe: {workers} workers, {iters} iterations, gate `{}`, overlap {}",
+        "dist-moe: {workers} workers, {iters} iterations, gate `{}`, overlap {}, \
+         placement `{}`",
         moe_cfg.gate,
         if comm_cfg.overlap {
             format!("on ({} chunks)", comm_cfg.chunks)
         } else {
             "off".into()
-        }
+        },
+        place_cfg.policy,
     );
     let stats = comm::run_workers(workers, move |h| {
         let mut h = TopoComm::new(h, comm_cfg.topology_for(workers)?)?;
@@ -414,7 +453,9 @@ fn dist_moe(args: &Args) -> Result<()> {
             .seed(seed)
             .build_for(rt.clone(), &h)?;
         layer.warm()?;
-        let mut tr = MoeLayerTrainer::new(layer, lr);
+        let n_expert = workers * layer.ne_local;
+        let mut tr = MoeLayerTrainer::new(layer, lr)
+            .with_placement(Rebalancer::from_config(&place_cfg, n_expert)?);
         let mut counters = Counters::new();
         let mut rng = Rng::new(seed ^ h.rank() as u64);
         let mut flops = 0.0;

@@ -100,6 +100,68 @@ pub fn load_checkpoint(path: impl AsRef<Path>, store: &mut ParamStore) -> Result
     Ok(())
 }
 
+/// Flatten one expert's dim-0 slot out of a set of shard tensors, in
+/// tensor order — the wire/migration format for moving a single
+/// expert's parameters (or Adam moments) between ranks.  Every tensor
+/// must be `[ne_local, ...]`-shaped with the same `ne_local`; the slot
+/// slice of tensor `[n, d...]` is its contiguous `numel / n` elements
+/// starting at `slot * numel / n`.
+pub fn pack_expert_slot(tensors: &[&TensorF32], slot: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    for t in tensors {
+        let n = *t.shape.first().ok_or_else(|| {
+            Error::Shape("pack_expert_slot: rank-0 tensor".into())
+        })?;
+        if slot >= n {
+            return Err(Error::Shape(format!(
+                "pack_expert_slot: slot {slot} of {n}"
+            )));
+        }
+        let stride = t.data.len() / n;
+        out.extend_from_slice(&t.data[slot * stride..(slot + 1) * stride]);
+    }
+    Ok(out)
+}
+
+/// Inverse of [`pack_expert_slot`]: scatter a packed payload back into
+/// the `slot` slice of each tensor, consuming the payload in tensor
+/// order.  The payload length must match the slot slices exactly.
+pub fn unpack_expert_slot(
+    payload: &[f32],
+    tensors: &mut [&mut TensorF32],
+    slot: usize,
+) -> Result<()> {
+    let mut pos = 0usize;
+    for t in tensors.iter_mut() {
+        let n = *t.shape.first().ok_or_else(|| {
+            Error::Shape("unpack_expert_slot: rank-0 tensor".into())
+        })?;
+        if slot >= n {
+            return Err(Error::Shape(format!(
+                "unpack_expert_slot: slot {slot} of {n}"
+            )));
+        }
+        let stride = t.data.len() / n;
+        if pos + stride > payload.len() {
+            return Err(Error::Shape(format!(
+                "unpack_expert_slot: payload too short ({} < {})",
+                payload.len(),
+                pos + stride
+            )));
+        }
+        t.data[slot * stride..(slot + 1) * stride]
+            .copy_from_slice(&payload[pos..pos + stride]);
+        pos += stride;
+    }
+    if pos != payload.len() {
+        return Err(Error::Shape(format!(
+            "unpack_expert_slot: {} payload floats left over",
+            payload.len() - pos
+        )));
+    }
+    Ok(())
+}
+
 fn read_u32(r: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
@@ -175,6 +237,26 @@ mod tests {
         let mut dst = store();
         assert!(load_checkpoint(&path, &mut dst).is_err());
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn expert_slot_roundtrip() {
+        // two shard tensors over 3 experts: [3, 2] and [3]
+        let a = TensorF32::from_vec(&[3, 2], (0..6).map(|i| i as f32).collect())
+            .unwrap();
+        let b = TensorF32::from_vec(&[3], vec![10.0, 11.0, 12.0]).unwrap();
+        let payload = pack_expert_slot(&[&a, &b], 1).unwrap();
+        assert_eq!(payload, vec![2.0, 3.0, 11.0]);
+        // scatter into a different slot of fresh tensors
+        let mut a2 = TensorF32::zeros(&[3, 2]);
+        let mut b2 = TensorF32::zeros(&[3]);
+        unpack_expert_slot(&payload, &mut [&mut a2, &mut b2], 2).unwrap();
+        assert_eq!(&a2.data[4..6], &[2.0, 3.0]);
+        assert_eq!(b2.data[2], 11.0);
+        assert_eq!(&a2.data[..4], &[0.0; 4]);
+        // guards: bad slot, short payload
+        assert!(pack_expert_slot(&[&a], 3).is_err());
+        assert!(unpack_expert_slot(&[1.0], &mut [&mut a2], 0).is_err());
     }
 
     #[test]

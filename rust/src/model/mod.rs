@@ -11,7 +11,9 @@ mod adam;
 mod checkpoint;
 
 pub use adam::Adam;
-pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use checkpoint::{
+    load_checkpoint, pack_expert_slot, save_checkpoint, unpack_expert_slot,
+};
 
 use crate::error::{Error, Result};
 use crate::rng::Rng;

@@ -73,7 +73,8 @@ pub trait Gate: Send + Sync {
     /// so descent drains probability from overloaded experts.  The
     /// default covers every gate that records `GateAssign::probs`; a
     /// gate without full probabilities inherits a no-op, as does
-    /// `coef == 0` (the config default, preserving pre-wiring runs).
+    /// `coef == 0` (reachable via `balance_coef = 0`, which preserves
+    /// pre-wiring runs bit-for-bit; the config default is `0.01`).
     fn balance_grad(
         &self,
         assign: &GateAssign,

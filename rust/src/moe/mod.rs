@@ -149,10 +149,50 @@ pub struct DispatchPlan {
 
 impl DispatchPlan {
     /// Build the plan from gate assignments.  Global expert `e` lives on
-    /// worker `e / ne_local` as local expert `e % ne_local`.
+    /// worker `e / ne_local` as local expert `e % ne_local` (the static
+    /// seed layout — `build_routed` with the identity route, bit for
+    /// bit).
     pub fn build(assign: &GateAssign, workers: usize, ne_local: usize) -> Result<Self> {
+        Self::build_routed(assign, workers, ne_local, ne_local, |e| {
+            (e / ne_local, e % ne_local)
+        })
+    }
+
+    /// Build the plan under an arbitrary expert → `(rank, slot)` route —
+    /// the placement-aware dispatch.  `width` is the number of compute
+    /// slots per destination rank (`ne_local` plus any shadow slots);
+    /// every `route(e)` must land in `rank < workers, slot < width`,
+    /// and distinct experts must map to distinct `(rank, slot)` pairs
+    /// (a [`crate::placement::PlacementPlan`] guarantees both).
+    ///
+    /// With the identity route and `width == ne_local` the counting
+    /// sort keys on `rank * ne_local + slot == e`, so the packed
+    /// order, slots, and send counts are identical to the historical
+    /// [`DispatchPlan::build`] — the bit-compat anchor the equivalence
+    /// suites pin.
+    pub fn build_routed<F>(
+        assign: &GateAssign,
+        workers: usize,
+        ne_local: usize,
+        width: usize,
+        route: F,
+    ) -> Result<Self>
+    where
+        F: Fn(usize) -> (usize, usize),
+    {
         let n_assign = assign.nb * assign.k;
         let ne_global = workers * ne_local;
+        // per-expert destination key = rank * width + slot
+        let mut dest = vec![0usize; ne_global];
+        for (e, d) in dest.iter_mut().enumerate() {
+            let (r, s) = route(e);
+            if r >= workers || s >= width {
+                return Err(Error::Shape(format!(
+                    "route({e}) = ({r}, {s}) outside {workers} x {width}"
+                )));
+            }
+            *d = r * width + s;
+        }
         for &e in &assign.idx {
             if e as usize >= ne_global {
                 return Err(Error::Shape(format!(
@@ -160,33 +200,34 @@ impl DispatchPlan {
                 )));
             }
         }
-        // counting sort by (worker, local expert) == by global expert id,
-        // stable in token order — O(n + E)
+        // counting sort by (worker, dest slot), stable in token order —
+        // O(n + E); with the identity route the key is the global
+        // expert id itself
         let mut counts_global = vec![0u32; ne_global];
+        let mut counts_key = vec![0u32; workers * width];
         for &e in &assign.idx {
             counts_global[e as usize] += 1;
+            counts_key[dest[e as usize]] += 1;
         }
-        let mut offsets = vec![0u32; ne_global + 1];
-        for e in 0..ne_global {
-            offsets[e + 1] = offsets[e] + counts_global[e];
+        let nkey = workers * width;
+        let mut offsets = vec![0u32; nkey + 1];
+        for key in 0..nkey {
+            offsets[key + 1] = offsets[key] + counts_key[key];
         }
         let mut order = vec![0u32; n_assign];
         let mut cursor = offsets.clone();
         for (a, &e) in assign.idx.iter().enumerate() {
-            let pos = cursor[e as usize];
+            let key = dest[e as usize];
+            let pos = cursor[key];
             order[pos as usize] = a as u32;
-            cursor[e as usize] += 1;
+            cursor[key] += 1;
         }
         let mut slots = vec![0i32; n_assign];
         for (pos, &a) in order.iter().enumerate() {
             slots[a as usize] = pos as i32;
         }
         let send_counts: Vec<Vec<u32>> = (0..workers)
-            .map(|wkr| {
-                (0..ne_local)
-                    .map(|e| counts_global[wkr * ne_local + e])
-                    .collect()
-            })
+            .map(|wkr| counts_key[wkr * width..(wkr + 1) * width].to_vec())
             .collect();
         let send_rows = send_counts
             .iter()

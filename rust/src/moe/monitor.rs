@@ -7,6 +7,7 @@
 //! the LM loss.
 
 use crate::tensor::TensorF32;
+use std::collections::VecDeque;
 
 /// Running per-expert load statistics.
 #[derive(Clone, Debug)]
@@ -18,6 +19,10 @@ pub struct LoadMonitor {
     total: Vec<u64>,
     decay: f64,
     iterations: u64,
+    /// Sliding-window length (0 = cumulative-only, no ring kept).
+    window: usize,
+    /// Ring of the most recent `window` recorded counts.
+    recent: VecDeque<Vec<u32>>,
 }
 
 impl LoadMonitor {
@@ -28,7 +33,20 @@ impl LoadMonitor {
             total: vec![0; n_expert],
             decay: 0.99,
             iterations: 0,
+            window: 0,
+            recent: VecDeque::new(),
         }
+    }
+
+    /// [`LoadMonitor::new`] plus a sliding window: the last `window`
+    /// records stay queryable for recency-weighted decisions (the
+    /// placement [`Rebalancer`] keys off these, not lifetime totals).
+    ///
+    /// [`Rebalancer`]: crate::placement::Rebalancer
+    pub fn windowed(n_expert: usize, window: usize) -> Self {
+        let mut m = Self::new(n_expert);
+        m.window = window.max(1);
+        m
     }
 
     /// Record one iteration's per-expert token counts.
@@ -36,6 +54,12 @@ impl LoadMonitor {
         assert_eq!(counts.len(), self.n_expert);
         let total: u64 = counts.iter().map(|&c| c as u64).sum();
         self.iterations += 1;
+        if self.window > 0 {
+            if self.recent.len() == self.window {
+                self.recent.pop_front();
+            }
+            self.recent.push_back(counts.to_vec());
+        }
         if total == 0 {
             return;
         }
@@ -88,6 +112,41 @@ impl LoadMonitor {
 
     pub fn iterations(&self) -> u64 {
         self.iterations
+    }
+
+    /// Records currently held in the sliding window.
+    pub fn window_len(&self) -> usize {
+        self.recent.len()
+    }
+
+    /// Per-expert counts summed over the sliding window (falls back to
+    /// lifetime totals for a non-windowed monitor).
+    pub fn window_totals(&self) -> Vec<u64> {
+        if self.window == 0 {
+            return self.total.clone();
+        }
+        let mut out = vec![0u64; self.n_expert];
+        for rec in &self.recent {
+            for (e, &c) in rec.iter().enumerate() {
+                out[e] += c as u64;
+            }
+        }
+        out
+    }
+
+    /// The expert with the most window load (ties: lowest id), or
+    /// `None` when the window saw no tokens at all.
+    pub fn hottest(&self) -> Option<usize> {
+        let totals = self.window_totals();
+        let (e, &c) = totals
+            .iter()
+            .enumerate()
+            .max_by_key(|&(e, &c)| (c, std::cmp::Reverse(e)))?;
+        if c == 0 {
+            None
+        } else {
+            Some(e)
+        }
     }
 }
 
@@ -146,6 +205,69 @@ mod tests {
         let mut m = LoadMonitor::new(2);
         m.record(&[0, 0]);
         assert!((m.imbalance() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn windowed_counts_roll_off() {
+        let mut m = LoadMonitor::windowed(2, 3);
+        m.record(&[100, 0]); // will age out
+        m.record(&[1, 2]);
+        m.record(&[3, 4]);
+        m.record(&[5, 6]);
+        assert_eq!(m.window_len(), 3);
+        assert_eq!(m.window_totals(), vec![9, 12]);
+        // lifetime totals still see everything
+        assert_eq!(m.totals(), &[109, 12]);
+        // an unwindowed monitor reports lifetime totals as its window
+        let mut u = LoadMonitor::new(2);
+        u.record(&[7, 1]);
+        assert_eq!(u.window_len(), 0);
+        assert_eq!(u.window_totals(), vec![7, 1]);
+    }
+
+    #[test]
+    fn hot_expert_detected_under_injected_skew() {
+        let mut m = LoadMonitor::windowed(4, 8);
+        // balanced warm-up that must NOT linger past the window
+        for _ in 0..50 {
+            m.record(&[10, 10, 10, 10]);
+        }
+        for _ in 0..8 {
+            m.record(&[2, 2, 40, 2]);
+        }
+        assert_eq!(m.hottest(), Some(2));
+        let w = m.window_totals();
+        assert_eq!(w, vec![16, 16, 320, 16]);
+        // empty window → no hot expert
+        let mut z = LoadMonitor::windowed(4, 2);
+        z.record(&[0, 0, 0, 0]);
+        assert_eq!(z.hottest(), None);
+        // ties resolve to the lowest id on every rank identically
+        let mut t = LoadMonitor::windowed(3, 2);
+        t.record(&[5, 5, 1]);
+        assert_eq!(t.hottest(), Some(0));
+    }
+
+    #[test]
+    fn capacity_dropped_tokens_are_not_load() {
+        use crate::moe::GateAssign;
+        // 4 assignments to expert 0 but two were capacity-dropped
+        // (zero gate weight): kept_counts excludes them, so the
+        // monitor never sees phantom load
+        let assign = GateAssign {
+            nb: 4,
+            k: 1,
+            idx: vec![0, 0, 1, 0],
+            w: vec![0.9, 0.0, 1.0, 0.0],
+            probs: None,
+        };
+        let kept = assign.kept_counts(2);
+        assert_eq!(kept, vec![1, 1]);
+        let mut m = LoadMonitor::windowed(2, 4);
+        m.record(&kept);
+        assert_eq!(m.window_totals(), vec![1, 1]);
+        assert_eq!(m.hottest(), Some(0));
+        assert!((m.imbalance() - 1.0).abs() < 1e-6);
     }
 
     #[test]

@@ -1,0 +1,583 @@
+//! Dynamic expert placement: shadow experts + load-driven re-sharding.
+//!
+//! FastMoE's linear expert scaling (paper §3.2) assumes routing stays
+//! balanced; at scale a few hot experts saturate one rank while others
+//! idle.  This module closes the loop from measured load to expert
+//! layout:
+//!
+//! * [`PlacementPlan`] — where every global expert lives: an owning
+//!   `(rank, slot)` plus optional *shadow* replicas hosted on other
+//!   ranks.  Starts as the static seed layout (`expert e` on rank
+//!   `e / ne_local`, slot `e % ne_local`), which is bit-compatible
+//!   with the plain `DispatchPlan::build` path.
+//! * [`PlanDelta`] — the three rebalancing moves: replicate a hot
+//!   expert onto an underloaded rank (`AddShadow`), drop all replicas
+//!   (`DropShadows`), or swap two experts' owners (`Swap`, executed by
+//!   moving checkpoint-format param + Adam slots between ranks).
+//! * [`decide`] — a *pure, deterministic* policy function from
+//!   (plan, global load counts, threshold) to an optional delta.  All
+//!   ranks call it on identical all-reduced counts and reach the same
+//!   decision — there is no coordinator.
+//! * [`Rebalancer`] — the step-boundary driver: feeds a windowed
+//!   [`LoadMonitor`], and every `window` steps all-reduces the window
+//!   totals and runs [`decide`].
+//!
+//! The execution half (routing tokens to the nearest replica, shadow
+//! gradient all-reduce over an on-the-fly [`ProcessGroup`], slot
+//! migration) lives in `coordinator::dist_moe`; this module is pure
+//! bookkeeping and therefore usable from the simulator and benches
+//! without a runtime or comm backend.
+//!
+//! [`ProcessGroup`]: crate::comm::topology::ProcessGroup
+//! [`LoadMonitor`]: crate::moe::LoadMonitor
+
+use crate::comm::Comm;
+use crate::moe::LoadMonitor;
+use crate::{Error, Result};
+
+/// Tag-namespace salt for per-expert shadow gradient sub-groups.
+///
+/// Disjoint from the topology salts (`SALT_INTRA = 1 << 62`,
+/// `SALT_INTER = 1 << 61`) and from all untagged world traffic; the
+/// expert id sits above the `(seq << 8) | code` bits every collective
+/// uses, so two shadowed experts never alias.
+pub fn shadow_salt(expert: usize) -> u64 {
+    (1u64 << 60) | ((expert as u64) << 32)
+}
+
+/// Rebalancing policy (`[placement] policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Never change the seed layout (the bit-compat default).
+    Static,
+    /// Replicate hot experts onto underloaded ranks.
+    Shadow,
+    /// Swap expert ownership between hot and cold ranks.
+    Migrate,
+}
+
+impl PlacementPolicy {
+    pub const KINDS: &'static [&'static str] = &["static", "shadow", "migrate"];
+
+    pub fn parse(s: &str) -> Result<PlacementPolicy> {
+        match s {
+            "static" => Ok(PlacementPolicy::Static),
+            "shadow" => Ok(PlacementPolicy::Shadow),
+            "migrate" => Ok(PlacementPolicy::Migrate),
+            other => Err(Error::Config(format!(
+                "unknown placement policy '{other}' (expected one of {:?})",
+                Self::KINDS
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::Static => "static",
+            PlacementPolicy::Shadow => "shadow",
+            PlacementPolicy::Migrate => "migrate",
+        }
+    }
+}
+
+/// One agreed-on change to the layout, applied at a step boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanDelta {
+    /// Replicate `expert`'s param slot onto `host`.
+    AddShadow { expert: usize, host: usize },
+    /// Remove every shadow replica (load went back to balanced).
+    DropShadows,
+    /// Exchange the owning `(rank, slot)` of experts `a` and `b`.
+    Swap { a: usize, b: usize },
+}
+
+/// Expert → rank layout: owner slots plus shadow replicas.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlacementPlan {
+    pub workers: usize,
+    pub ne_local: usize,
+    /// Owning `(rank, local slot)` per global expert, `[ne_global]`.
+    owner: Vec<(usize, usize)>,
+    /// Per rank, the global experts it hosts shadow replicas for, in
+    /// hosting order (replica `i` computes in extended slot
+    /// `ne_local + i`).
+    hosted: Vec<Vec<usize>>,
+}
+
+impl PlacementPlan {
+    /// The static layout the whole repo was built on: expert `e` owned
+    /// by rank `e / ne_local` in slot `e % ne_local`, no shadows.
+    pub fn seed(workers: usize, ne_local: usize) -> PlacementPlan {
+        let owner = (0..workers * ne_local)
+            .map(|e| (e / ne_local, e % ne_local))
+            .collect();
+        PlacementPlan { workers, ne_local, owner, hosted: vec![Vec::new(); workers] }
+    }
+
+    pub fn ne_global(&self) -> usize {
+        self.workers * self.ne_local
+    }
+
+    /// Owning `(rank, local slot)` of global expert `e`.
+    pub fn owner(&self, e: usize) -> (usize, usize) {
+        self.owner[e]
+    }
+
+    /// Whether this is still exactly the seed layout (no migrations,
+    /// no shadows) — the layer uses this to keep the bit-compatible
+    /// `DispatchPlan::build` fast path.
+    pub fn is_seed(&self) -> bool {
+        !self.has_shadows()
+            && self
+                .owner
+                .iter()
+                .enumerate()
+                .all(|(e, &(r, s))| r == e / self.ne_local && s == e % self.ne_local)
+    }
+
+    pub fn has_shadows(&self) -> bool {
+        self.hosted.iter().any(|h| !h.is_empty())
+    }
+
+    /// Extra compute slots needed beyond `ne_local`: the max number of
+    /// replicas any single rank hosts.  The plan-aware `DispatchPlan`
+    /// is built over `ne_local + shadow_width()` slots per rank.
+    pub fn shadow_width(&self) -> usize {
+        self.hosted.iter().map(|h| h.len()).max().unwrap_or(0)
+    }
+
+    /// Global experts rank `r` hosts shadow replicas for.
+    pub fn hosted(&self, r: usize) -> &[usize] {
+        &self.hosted[r]
+    }
+
+    /// Ranks holding a shadow replica of expert `e`, ascending.
+    pub fn shadow_hosts(&self, e: usize) -> Vec<usize> {
+        (0..self.workers).filter(|&r| self.hosted[r].contains(&e)).collect()
+    }
+
+    /// Route rank `from`'s tokens for expert `e` to the nearest replica
+    /// (owner or shadow host) by forward ring distance, ties to the
+    /// lowest rank.  Returns `(rank, extended slot)` where replicas
+    /// occupy slots `ne_local + hosting_index` on their host.
+    pub fn route(&self, e: usize, from: usize) -> (usize, usize) {
+        let (orank, oslot) = self.owner[e];
+        let mut best = (orank, oslot);
+        let dist = |r: usize| (r + self.workers - from) % self.workers;
+        let mut best_d = dist(orank);
+        for (r, hosted) in self.hosted.iter().enumerate() {
+            if let Some(i) = hosted.iter().position(|&h| h == e) {
+                let d = dist(r);
+                if d < best_d || (d == best_d && r < best.0) {
+                    best = (r, self.ne_local + i);
+                    best_d = d;
+                }
+            }
+        }
+        best
+    }
+
+    /// Expected rows per rank for the given per-expert token counts,
+    /// under the model that each expert's load splits evenly across
+    /// its replicas (every source rank routes to its nearest copy; for
+    /// uniformly spread sources that is an even split).
+    pub fn rank_rows(&self, counts: &[u32]) -> Vec<f64> {
+        let mut rows = vec![0.0f64; self.workers];
+        for (e, &c) in counts.iter().enumerate() {
+            let hosts = self.shadow_hosts(e);
+            let share = c as f64 / (1 + hosts.len()) as f64;
+            rows[self.owner[e].0] += share;
+            for r in hosts {
+                rows[r] += share;
+            }
+        }
+        rows
+    }
+
+    /// Per shadowed expert (ascending id), the world ranks over which
+    /// its gradient must be all-reduced: owner + hosts, ascending.
+    pub fn shadow_groups(&self) -> Vec<(usize, Vec<usize>)> {
+        let mut out = Vec::new();
+        for e in 0..self.ne_global() {
+            let hosts = self.shadow_hosts(e);
+            if hosts.is_empty() {
+                continue;
+            }
+            let mut members = hosts;
+            members.push(self.owner[e].0);
+            members.sort_unstable();
+            out.push((e, members));
+        }
+        out
+    }
+
+    /// Apply an agreed delta.  Pure plan surgery — parameter movement
+    /// is the layer's job.
+    pub fn apply(&mut self, delta: &PlanDelta) -> Result<()> {
+        match *delta {
+            PlanDelta::AddShadow { expert, host } => self.add_shadow(expert, host),
+            PlanDelta::DropShadows => {
+                self.clear_shadows();
+                Ok(())
+            }
+            PlanDelta::Swap { a, b } => self.swap_owners(a, b),
+        }
+    }
+
+    pub fn add_shadow(&mut self, e: usize, host: usize) -> Result<()> {
+        if e >= self.ne_global() || host >= self.workers {
+            return Err(Error::Config(format!(
+                "add_shadow({e}, {host}) out of range"
+            )));
+        }
+        if self.owner[e].0 == host {
+            return Err(Error::Config(format!(
+                "add_shadow: rank {host} already owns expert {e}"
+            )));
+        }
+        if self.hosted[host].contains(&e) {
+            return Err(Error::Config(format!(
+                "add_shadow: rank {host} already hosts expert {e}"
+            )));
+        }
+        // A host's replicas compute on a second ne_local-wide shard,
+        // so it can host at most ne_local of them.
+        if self.hosted[host].len() >= self.ne_local {
+            return Err(Error::Config(format!(
+                "add_shadow: rank {host} is full ({} replicas)",
+                self.hosted[host].len()
+            )));
+        }
+        self.hosted[host].push(e);
+        Ok(())
+    }
+
+    pub fn clear_shadows(&mut self) {
+        for h in &mut self.hosted {
+            h.clear();
+        }
+    }
+
+    pub fn swap_owners(&mut self, a: usize, b: usize) -> Result<()> {
+        if a >= self.ne_global() || b >= self.ne_global() {
+            return Err(Error::Config(format!("swap_owners({a}, {b}) out of range")));
+        }
+        if self.hosted.iter().any(|h| h.contains(&a) || h.contains(&b)) {
+            return Err(Error::Config(
+                "swap_owners: drop shadows before migrating".into(),
+            ));
+        }
+        self.owner.swap(a, b);
+        Ok(())
+    }
+}
+
+/// The pure rebalancing decision: identical inputs on every rank yield
+/// the identical `Option<PlanDelta>`.
+///
+/// `counts` are the *global* (all-reduced) per-expert token counts over
+/// the observation window.  Imbalance is max/mean of the plan-modelled
+/// per-rank rows; at or below `threshold` the layout is considered
+/// healthy (existing shadows are dropped), above it the policy picks
+/// one move:
+///
+/// * `Shadow` — replicate the hottest expert owned by the most loaded
+///   rank (ties: lowest id) onto the least-loaded eligible rank
+///   (ties: lowest rank).
+/// * `Migrate` — swap the hottest expert on the most loaded rank with
+///   the coldest expert on the least loaded rank, if that actually
+///   moves load.
+pub fn decide(
+    policy: PlacementPolicy,
+    plan: &PlacementPlan,
+    counts: &[u32],
+    threshold: f64,
+) -> Option<PlanDelta> {
+    if policy == PlacementPolicy::Static || counts.len() != plan.ne_global() {
+        return None;
+    }
+    let rows = plan.rank_rows(counts);
+    let total: f64 = rows.iter().sum();
+    if total <= 0.0 {
+        return None;
+    }
+    let mean = total / plan.workers as f64;
+    let max = rows.iter().cloned().fold(0.0, f64::max);
+    if max / mean <= threshold {
+        return if plan.has_shadows() { Some(PlanDelta::DropShadows) } else { None };
+    }
+    let hot_rank = argmax(&rows)?;
+    // Hottest expert *owned by* the bottleneck rank (ties: lowest id).
+    let e_hot = (0..plan.ne_global())
+        .filter(|&e| plan.owner(e).0 == hot_rank)
+        .max_by_key(|&e| (counts[e], std::cmp::Reverse(e)))?;
+    if counts[e_hot] == 0 {
+        return None;
+    }
+    match policy {
+        PlacementPolicy::Shadow => {
+            let host = (0..plan.workers)
+                .filter(|&r| {
+                    r != plan.owner(e_hot).0
+                        && !plan.hosted(r).contains(&e_hot)
+                        && plan.hosted(r).len() < plan.ne_local
+                })
+                .min_by(|&a, &b| {
+                    rows[a].partial_cmp(&rows[b]).unwrap().then(a.cmp(&b))
+                })?;
+            Some(PlanDelta::AddShadow { expert: e_hot, host })
+        }
+        PlacementPolicy::Migrate => {
+            if plan.has_shadows() {
+                return Some(PlanDelta::DropShadows);
+            }
+            let cold_rank = (0..plan.workers)
+                .min_by(|&a, &b| rows[a].partial_cmp(&rows[b]).unwrap().then(a.cmp(&b)))?;
+            if cold_rank == hot_rank {
+                return None;
+            }
+            let e_cold = (0..plan.ne_global())
+                .filter(|&e| plan.owner(e).0 == cold_rank)
+                .min_by_key(|&e| (counts[e], e))?;
+            if counts[e_hot] > counts[e_cold] {
+                Some(PlanDelta::Swap { a: e_hot, b: e_cold })
+            } else {
+                None
+            }
+        }
+        PlacementPolicy::Static => None,
+    }
+}
+
+fn argmax(xs: &[f64]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        match best {
+            Some(b) if xs[b] >= x => {}
+            _ => best = Some(i),
+        }
+    }
+    best
+}
+
+/// Step-boundary rebalancing driver.
+///
+/// Feed [`Rebalancer::observe`] this rank's kept per-expert counts each
+/// step; every `window` observations [`Rebalancer::maybe_rebalance`]
+/// all-reduces the window totals (exact in f32 for realistic windows)
+/// and runs [`decide`] on the agreed global counts.  Because every rank
+/// observes on the same step schedule, the collective stays in world
+/// sequence-number lockstep.
+#[derive(Debug)]
+pub struct Rebalancer {
+    pub policy: PlacementPolicy,
+    pub threshold: f64,
+    window: LoadMonitor,
+    every: usize,
+    steps: usize,
+}
+
+impl Rebalancer {
+    pub fn new(
+        policy: PlacementPolicy,
+        n_expert: usize,
+        threshold: f64,
+        window: usize,
+    ) -> Rebalancer {
+        let every = window.max(1);
+        Rebalancer {
+            policy,
+            threshold,
+            window: LoadMonitor::windowed(n_expert, every),
+            every,
+            steps: 0,
+        }
+    }
+
+    pub fn from_config(cfg: &crate::config::PlacementConfig, n_expert: usize) -> Result<Rebalancer> {
+        Ok(Rebalancer::new(
+            PlacementPolicy::parse(&cfg.policy)?,
+            n_expert,
+            cfg.threshold,
+            cfg.window,
+        ))
+    }
+
+    /// Record one step's kept per-expert counts (capacity-dropped
+    /// tokens are already excluded by `GateAssign::kept_counts`).
+    pub fn observe(&mut self, counts: &[u32]) {
+        self.window.record(counts);
+        self.steps += 1;
+    }
+
+    /// At a window boundary, agree on global counts and decide.  Must
+    /// be called on every rank at the same step — the all-reduce is a
+    /// collective.
+    pub fn maybe_rebalance<C: Comm + ?Sized>(
+        &mut self,
+        comm: &mut C,
+        plan: &PlacementPlan,
+    ) -> Result<Option<PlanDelta>> {
+        if self.steps == 0 || self.steps % self.every != 0 {
+            return Ok(None);
+        }
+        if self.policy == PlacementPolicy::Static {
+            return Ok(None);
+        }
+        let totals = self.window.window_totals();
+        let mut buf: Vec<f32> = totals.iter().map(|&c| c as f32).collect();
+        if comm.size() > 1 {
+            comm.all_reduce_sum(&mut buf)?;
+        }
+        let counts: Vec<u32> = buf.iter().map(|&x| x as u32).collect();
+        Ok(decide(self.policy, plan, &counts, self.threshold))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_plan_is_seed() {
+        let p = PlacementPlan::seed(4, 2);
+        assert!(p.is_seed());
+        assert!(!p.has_shadows());
+        assert_eq!(p.shadow_width(), 0);
+        assert_eq!(p.owner(5), (2, 1));
+        assert_eq!(p.route(5, 0), (2, 1));
+        assert_eq!(p.route(5, 3), (2, 1));
+    }
+
+    #[test]
+    fn shadow_routing_picks_nearest_replica() {
+        let mut p = PlacementPlan::seed(4, 2);
+        // expert 0 (owner rank 0) gets a replica on rank 2, slot 2+0
+        p.add_shadow(0, 2).unwrap();
+        assert!(p.has_shadows() && !p.is_seed());
+        assert_eq!(p.shadow_width(), 1);
+        // sources route to the nearest copy by forward ring distance
+        assert_eq!(p.route(0, 0), (0, 0)); // local owner
+        assert_eq!(p.route(0, 2), (2, 2)); // local replica, ext slot
+        assert_eq!(p.route(0, 1), (2, 2)); // dist 1 to host vs 3 to owner
+        assert_eq!(p.route(0, 3), (0, 0)); // dist 1 to owner vs 3 to host
+        // other experts untouched
+        assert_eq!(p.route(1, 1), (0, 1));
+        assert_eq!(p.shadow_groups(), vec![(0, vec![0, 2])]);
+        p.clear_shadows();
+        assert!(p.is_seed());
+    }
+
+    #[test]
+    fn shadow_capacity_and_ownership_guards() {
+        let mut p = PlacementPlan::seed(2, 1);
+        assert!(p.add_shadow(0, 0).is_err()); // owner can't host itself
+        p.add_shadow(0, 1).unwrap();
+        assert!(p.add_shadow(0, 1).is_err()); // duplicate replica
+        assert!(p.add_shadow(1, 0).is_ok());
+        assert!(p.add_shadow(0, 1).is_err()); // ne_local=1 → host full
+        assert!(p.swap_owners(0, 1).is_err()); // must drop shadows first
+    }
+
+    #[test]
+    fn swap_moves_owner_slots() {
+        let mut p = PlacementPlan::seed(2, 2);
+        p.swap_owners(0, 3).unwrap();
+        assert!(!p.is_seed());
+        assert_eq!(p.owner(0), (1, 1));
+        assert_eq!(p.owner(3), (0, 0));
+        assert_eq!(p.route(0, 0), (1, 1));
+        p.swap_owners(0, 3).unwrap();
+        assert!(p.is_seed());
+    }
+
+    #[test]
+    fn rank_rows_splits_across_replicas() {
+        let mut p = PlacementPlan::seed(2, 1);
+        assert_eq!(p.rank_rows(&[90, 10]), vec![90.0, 10.0]);
+        p.add_shadow(0, 1).unwrap();
+        assert_eq!(p.rank_rows(&[90, 10]), vec![45.0, 55.0]);
+    }
+
+    #[test]
+    fn decide_is_deterministic_and_balanced_is_noop() {
+        let p = PlacementPlan::seed(2, 2);
+        let balanced = [5u32, 5, 5, 5];
+        assert_eq!(decide(PlacementPolicy::Shadow, &p, &balanced, 1.5), None);
+        assert_eq!(decide(PlacementPolicy::Static, &p, &[100, 0, 0, 0], 1.5), None);
+        // skew → replicate the hot expert onto the cold rank, twice the
+        // same answer from the same inputs
+        let skew = [100u32, 5, 5, 5];
+        let d1 = decide(PlacementPolicy::Shadow, &p, &skew, 1.5);
+        let d2 = decide(PlacementPolicy::Shadow, &p, &skew, 1.5);
+        assert_eq!(d1, d2);
+        assert_eq!(d1, Some(PlanDelta::AddShadow { expert: 0, host: 1 }));
+    }
+
+    #[test]
+    fn decide_drops_shadows_when_balance_returns() {
+        let mut p = PlacementPlan::seed(2, 2);
+        p.add_shadow(0, 1).unwrap();
+        let balanced = [5u32, 5, 5, 5];
+        assert_eq!(
+            decide(PlacementPolicy::Shadow, &p, &balanced, 1.5),
+            Some(PlanDelta::DropShadows)
+        );
+    }
+
+    #[test]
+    fn decide_migrate_swaps_hot_and_cold() {
+        let p = PlacementPlan::seed(2, 2);
+        let skew = [100u32, 5, 1, 2];
+        assert_eq!(
+            decide(PlacementPolicy::Migrate, &p, &skew, 1.5),
+            Some(PlanDelta::Swap { a: 0, b: 2 })
+        );
+        // applying the swap rebalances the modelled rows
+        let mut q = p.clone();
+        q.swap_owners(0, 2).unwrap();
+        let before = p.rank_rows(&skew);
+        let after = q.rank_rows(&skew);
+        let imb = |r: &[f64]| {
+            let m = r.iter().sum::<f64>() / r.len() as f64;
+            r.iter().cloned().fold(0.0, f64::max) / m
+        };
+        assert!(imb(&after) < imb(&before));
+    }
+
+    #[test]
+    fn shadow_salts_are_disjoint() {
+        let a = shadow_salt(0);
+        let b = shadow_salt(1);
+        assert_ne!(a, b);
+        // clear of the topology salts and of the (seq << 8) | code bits
+        for s in [a, b] {
+            assert_eq!(s & (1 << 62), 0);
+            assert_eq!(s & (1 << 61), 0);
+            assert_eq!(s & 0xffff_ffff, 0);
+        }
+    }
+
+    #[test]
+    fn rebalancer_windows_and_fires_on_boundary() {
+        // two ranks observe complementary local skew; the all-reduced
+        // window totals agree, so both decide the same delta on the
+        // window boundary and nothing in between
+        crate::comm::run_workers(2, |mut h| {
+            let plan = PlacementPlan::seed(2, 1);
+            let mut rb = Rebalancer::new(PlacementPolicy::Shadow, 2, 1.5, 4);
+            for step in 0..8 {
+                let counts = if h.rank() == 0 { [12u32, 0] } else { [8, 0] };
+                rb.observe(&counts);
+                let d = rb.maybe_rebalance(&mut h, &plan)?;
+                if (step + 1) % 4 == 0 {
+                    assert_eq!(d, Some(PlanDelta::AddShadow { expert: 0, host: 1 }));
+                } else {
+                    assert_eq!(d, None);
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}

@@ -19,8 +19,10 @@
 //!   to `[serve] queue_depth` rows, and anything beyond that is
 //!   rejected immediately (admission control: the client gets a
 //!   [`CODE_REJECT`] frame, never a silent stall).  Packing is
-//!   whole-request FIFO, so a request's rows are contiguous in the
-//!   batch and ordering is fair.
+//!   whole-request (a request's rows stay contiguous in the batch) and
+//!   round-robins across sessions — one request per session per turn,
+//!   FIFO within a session — so a chatty session cannot starve the
+//!   others out of step after step.
 //! * **Workers** (ranks > 0): resident
 //!   [`ServeLoop`](crate::coordinator::ServeLoop) participants that
 //!   join each collective forward with zero batches.  The step is
@@ -106,9 +108,13 @@ pub struct Pending {
 ///
 /// `admit` is called by the session readers as requests arrive;
 /// `take_batch` by the drive loop between steps.  Whole requests pack
-/// FIFO into each batch; the first queued request that does not fit
-/// ends the batch (no reordering — fairness and head-of-line latency
-/// stay predictable).  A request is rejected — handed back to the
+/// round-robin across sessions — one request per session per turn,
+/// FIFO *within* a session, starting from a cursor that rotates every
+/// batch — so a single chatty session pipelining requests cannot
+/// monopolise the step while everyone else queues (a single session
+/// degenerates to plain FIFO, bit-identical to the old packing).  A
+/// session whose next request does not fit sits the batch out; its own
+/// order is preserved.  A request is rejected — handed back to the
 /// caller — when it could *never* be scheduled (`rows == 0` or
 /// `rows > max_batch`) or when the queue already holds `queue_depth`
 /// rows (overload: reject fast rather than stall every later client).
@@ -118,6 +124,9 @@ pub struct Batcher {
     queue_depth: usize,
     queue: VecDeque<Request>,
     queued_rows: usize,
+    /// Fairness cursor: the session id round-robin packing favours for
+    /// the next batch.
+    rr_next: usize,
 }
 
 impl Batcher {
@@ -127,6 +136,7 @@ impl Batcher {
             queue_depth: queue_depth.max(1),
             queue: VecDeque::new(),
             queued_rows: 0,
+            rr_next: 0,
         }
     }
 
@@ -158,9 +168,11 @@ impl Batcher {
         Ok(())
     }
 
-    /// Pack the longest FIFO prefix of the queue that fits into
-    /// `min(max_batch, nb)` rows of a zero-initialised `[nb, dm]`
-    /// batch.  `None` when the queue is empty.
+    /// Pack queued requests into `min(max_batch, nb)` rows of a
+    /// zero-initialised `[nb, dm]` batch: round-robin across sessions
+    /// (one whole request per session per turn, FIFO within a
+    /// session), starting from the rotating fairness cursor.  `None`
+    /// when the queue is empty.
     pub fn take_batch(
         &mut self,
         nb: usize,
@@ -173,19 +185,52 @@ impl Batcher {
         let mut x = TensorF32::zeros(&[nb, dm]);
         let mut pending = Vec::new();
         let mut row = 0usize;
-        while let Some(head) = self.queue.front() {
-            if row + head.rows > budget {
+        // the sessions with queued work, rotated so the cursor's
+        // session packs first this batch and a different one the next
+        let mut sessions: Vec<usize> = Vec::new();
+        for r in &self.queue {
+            if !sessions.contains(&r.session) {
+                sessions.push(r.session);
+            }
+        }
+        sessions.sort_unstable();
+        let pivot =
+            sessions.iter().position(|&s| s >= self.rr_next).unwrap_or(0);
+        sessions.rotate_left(pivot);
+        self.rr_next = sessions[0] + 1;
+        // a session leaves the rotation once drained, or once its next
+        // request does not fit (skipping *within* a session would
+        // reorder it)
+        let mut out = vec![false; sessions.len()];
+        loop {
+            let mut progress = false;
+            for (i, &s) in sessions.iter().enumerate() {
+                if out[i] {
+                    continue;
+                }
+                let Some(idx) = self.queue.iter().position(|r| r.session == s)
+                else {
+                    out[i] = true;
+                    continue;
+                };
+                if row + self.queue[idx].rows > budget {
+                    out[i] = true;
+                    continue;
+                }
+                let req = self.queue.remove(idx).unwrap();
+                let rows = req.rows;
+                self.queued_rows -= rows;
+                let n = (rows * dm).min(req.data.len());
+                x.data[row * dm..row * dm + n].copy_from_slice(&req.data[..n]);
+                pending.push(Pending { req, row });
+                row += rows;
+                progress = true;
+            }
+            if !progress {
                 break;
             }
-            let req = self.queue.pop_front().unwrap();
-            let rows = req.rows;
-            self.queued_rows -= rows;
-            let n = (rows * dm).min(req.data.len());
-            x.data[row * dm..row * dm + n].copy_from_slice(&req.data[..n]);
-            pending.push(Pending { req, row });
-            row += rows;
         }
-        debug_assert!(!pending.is_empty(), "head request exceeds the budget");
+        debug_assert!(!pending.is_empty(), "every queued head exceeds the budget");
         Some((x, pending))
     }
 }
@@ -647,6 +692,45 @@ mod tests {
         let (_, pending) = b.take_batch(16, dm).unwrap();
         assert_eq!(pending[0].req.id, 3);
         assert!(b.take_batch(16, dm).is_none());
+    }
+
+    fn sreq(id: u32, session: usize, rows: usize, dm: usize) -> Request {
+        Request { session, ..req(id, rows, dm) }
+    }
+
+    #[test]
+    fn batcher_round_robins_sessions() {
+        let dm = 1;
+        let mut b = Batcher::new(2, 64);
+        // a chatty session 0 floods four requests ahead of session 1's one
+        for id in 1..=4 {
+            b.admit(sreq(id, 0, 1, dm)).unwrap();
+        }
+        b.admit(sreq(9, 1, 1, dm)).unwrap();
+        // session 1 rides in the very first batch despite arriving last
+        let (_, p) = b.take_batch(2, dm).unwrap();
+        let ids: Vec<u32> = p.iter().map(|p| p.req.id).collect();
+        assert_eq!(ids, vec![1, 9]);
+        // the flood then drains FIFO within its session
+        let (_, p) = b.take_batch(2, dm).unwrap();
+        let ids: Vec<u32> = p.iter().map(|p| p.req.id).collect();
+        assert_eq!(ids, vec![2, 3]);
+    }
+
+    #[test]
+    fn batcher_cursor_rotates_across_batches() {
+        let dm = 1;
+        let mut b = Batcher::new(1, 64);
+        b.admit(sreq(1, 0, 1, dm)).unwrap();
+        b.admit(sreq(2, 0, 1, dm)).unwrap();
+        b.admit(sreq(9, 1, 1, dm)).unwrap();
+        // one-row budget: each batch holds a single request, and the
+        // cursor hands the slot to a different session each time
+        assert_eq!(b.take_batch(1, dm).unwrap().1[0].req.id, 1);
+        assert_eq!(b.take_batch(1, dm).unwrap().1[0].req.id, 9);
+        assert_eq!(b.take_batch(1, dm).unwrap().1[0].req.id, 2);
+        assert!(b.take_batch(1, dm).is_some());
+        assert!(b.take_batch(1, dm).is_none());
     }
 
     #[test]

@@ -490,6 +490,37 @@ impl NetModel {
         self.moe_step_overlapped(n, bytes_out, compute + host, chunks)
     }
 
+    /// One blocking expert-parallel step under *skewed* routing: rank
+    /// `r` computes `rank_rows[r]` expert rows this step (shadow
+    /// replicas split their expert's rows across its hosts — see
+    /// `crate::placement::PlacementPlan::rank_rows`).  The step is
+    /// synchronous, so every rank waits for the most-loaded one: full
+    /// exchange latency, the hottest rank's ingress, and the hottest
+    /// rank's compute:
+    ///
+    /// ```text
+    /// t = α·(n−1) + max_r(rows_r)·bytes_per_row/β + max_r(rows_r)·secs_per_row
+    /// ```
+    ///
+    /// Strictly increasing in the hottest rank's load — the fig-6 skew
+    /// assertion: any re-sharding that lowers `max_r(rows_r)` scores
+    /// strictly below the static layout.
+    pub fn moe_step_skewed(
+        &self,
+        rank_rows: &[f64],
+        bytes_per_row: usize,
+        secs_per_row: f64,
+    ) -> f64 {
+        let n = rank_rows.len();
+        let hottest = rank_rows.iter().cloned().fold(0.0, f64::max);
+        if !self.enabled || n <= 1 {
+            return hottest * secs_per_row;
+        }
+        self.alpha * (n - 1) as f64
+            + hottest * bytes_per_row as f64 / self.beta
+            + hottest * secs_per_row
+    }
+
     /// One forward-only *serving* step: the Figure-2 dispatch exchange
     /// (`bytes_out` egress) plus `compute` seconds of expert forward —
     /// no backward exchange, no gradient ring, no optimiser, which is
@@ -793,6 +824,26 @@ mod tests {
             assert!(t >= last, "q={q}: {t} < {last}");
             last = t;
         }
+    }
+
+    #[test]
+    fn skewed_step_scores_the_hottest_rank() {
+        let m = NetModel::preset(NetPreset::IbEdr);
+        let (bytes, spr) = (4096usize, 1e-6);
+        let balanced = m.moe_step_skewed(&[100.0, 100.0, 100.0, 100.0], bytes, spr);
+        let skewed = m.moe_step_skewed(&[250.0, 50.0, 50.0, 50.0], bytes, spr);
+        assert!(skewed > balanced, "{skewed} !> {balanced}");
+        // same totals: only the hottest rank matters
+        let spread = m.moe_step_skewed(&[100.0, 100.0, 100.0, 100.0], bytes, spr);
+        assert_eq!(spread, balanced);
+        // halving the hottest rank (a shadow splitting its rows)
+        // strictly lowers the score
+        let shadowed = m.moe_step_skewed(&[125.0, 125.0, 50.0, 50.0], bytes, spr);
+        assert!(shadowed < skewed, "{shadowed} !< {skewed}");
+        // degenerate cases: single rank / disabled net are pure compute
+        assert_eq!(m.moe_step_skewed(&[7.0], bytes, spr), 7.0 * spr);
+        let none = NetModel::preset(NetPreset::None);
+        assert_eq!(none.moe_step_skewed(&[9.0, 1.0], bytes, spr), 9.0 * spr);
     }
 
     #[test]

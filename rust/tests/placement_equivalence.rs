@@ -1,0 +1,286 @@
+//! Placement equivalence: dynamic expert placement must never change
+//! the math.
+//!
+//! The load-bearing properties of `placement` (PR 7):
+//!
+//! * **Shadow transparency** — a run with a hot expert shadow-replicated
+//!   onto another rank produces *bitwise* the same losses, parameters
+//!   and Adam moments as a never-replicated run, step after step.  The
+//!   forward may route rows to the nearest replica, but the backward
+//!   rebuilds the owner schedule (the owner accumulates the complete
+//!   gradient) and `sync_shadows` mirrors the owner's Adam update onto
+//!   every replica, so the layouts are indistinguishable in state.
+//!   Pinned on the thread backend and on real sockets.
+//! * **Migration fidelity** — swapping two experts' owners between
+//!   steps moves their parameter slots *and* Adam moments bit-for-bit
+//!   (the checkpoint-format `pack_expert_slot` payload), leaving every
+//!   expert's state identical to an unmigrated reference, just at a
+//!   different address; training continues without error afterwards.
+//! * **The point of it all** — on a skewed routing distribution the
+//!   `sim::NetModel` scores the rebalanced layout (shadow or migrate)
+//!   strictly below the static seed layout.
+//!
+//! Ports: 48970 (shadow equivalence over tcp).  See
+//! `serve_integration.rs` for the neighbouring allocations.
+
+use std::sync::Arc;
+
+use fastmoe::comm::tcp::TcpGroup;
+use fastmoe::comm::{run_workers, Comm};
+use fastmoe::coordinator::{MoeLayerBuilder, MoeLayerTrainer};
+use fastmoe::metrics::Counters;
+use fastmoe::placement::{decide, PlacementPlan, PlacementPolicy, PlanDelta};
+use fastmoe::rng::Rng;
+use fastmoe::runtime::Runtime;
+use fastmoe::sim::{NetModel, NetPreset};
+use fastmoe::tensor::TensorF32;
+
+const WORKERS: usize = 2;
+const STEPS: usize = 3;
+const LR: f32 = 1e-3;
+
+fn rt() -> Option<Arc<Runtime>> {
+    Runtime::open_default().ok().map(Arc::new)
+}
+
+fn build_trainer(rt: Arc<Runtime>, rank: usize) -> fastmoe::Result<MoeLayerTrainer> {
+    let layer = MoeLayerBuilder::new()
+        .gate("topk")
+        .seed(77)
+        .build(rt, WORKERS, rank)?;
+    layer.warm()?;
+    Ok(MoeLayerTrainer::new(layer, LR))
+}
+
+/// The same deterministic batch on every run for a given (rank, step).
+fn step_input(nb: usize, dm: usize, rank: usize, step: usize) -> TensorF32 {
+    let mut x = TensorF32::zeros(&[nb, dm]);
+    Rng::new(4000 + (step * WORKERS + rank) as u64).fill_normal(&mut x.data, 1.0);
+    x
+}
+
+fn assert_bits(what: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (j, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what} elem {j}: {x} != {y}"
+        );
+    }
+}
+
+/// Drive a shadowed and a never-replicated trainer in lockstep on the
+/// same comm handle and assert bit-identical losses, parameters and
+/// Adam moments after every step.  Every rank calls this.
+fn assert_shadow_bitwise(
+    comm: &mut impl Comm,
+    rt: Arc<Runtime>,
+) -> fastmoe::Result<()> {
+    let rank = comm.rank();
+    let mut base = build_trainer(rt.clone(), rank)?;
+    let mut shad = build_trainer(rt, rank)?;
+    let (mut c1, mut c2) = (Counters::new(), Counters::new());
+    // replicate expert 0 (owned by rank 0) onto rank 1 before any
+    // training: rank 1's rows for it will route to the local replica
+    shad.force_delta(comm, &PlanDelta::AddShadow { expert: 0, host: 1 })?;
+    assert_eq!(shad.layer.placement().shadow_width(), 1);
+    assert_eq!(shad.layer.placement().shadow_hosts(0), vec![1]);
+    for step in 0..STEPS {
+        let x = step_input(base.layer.nb, base.layer.dm, rank, step);
+        let s1 = base.train_step(comm, x.clone(), &mut c1)?;
+        let s2 = shad.train_step(comm, x, &mut c2)?;
+        assert_eq!(
+            s1.loss.to_bits(),
+            s2.loss.to_bits(),
+            "step {step} rank {rank}: loss {} != {}",
+            s1.loss,
+            s2.loss
+        );
+        for ((name, p1), (_, p2)) in
+            base.layer.params().iter().zip(shad.layer.params().iter())
+        {
+            assert_bits(&format!("step {step} rank {rank} {name}"), &p1.data, &p2.data);
+        }
+        for (i, (m1, m2)) in
+            base.optimizer().m.iter().zip(&shad.optimizer().m).enumerate()
+        {
+            assert_bits(&format!("step {step} rank {rank} adam.m[{i}]"), &m1.data, &m2.data);
+        }
+        for (i, (v1, v2)) in
+            base.optimizer().v.iter().zip(&shad.optimizer().v).enumerate()
+        {
+            assert_bits(&format!("step {step} rank {rank} adam.v[{i}]"), &v1.data, &v2.data);
+        }
+    }
+    // dropping the replicas is pure bookkeeping — still bit-identical
+    shad.force_delta(comm, &PlanDelta::DropShadows)?;
+    assert!(shad.layer.placement().is_seed());
+    let x = step_input(base.layer.nb, base.layer.dm, rank, STEPS);
+    let s1 = base.train_step(comm, x.clone(), &mut c1)?;
+    let s2 = shad.train_step(comm, x, &mut c2)?;
+    assert_eq!(s1.loss.to_bits(), s2.loss.to_bits());
+    Ok(())
+}
+
+#[test]
+fn shadow_run_is_bitwise_identical_thread() {
+    let Some(rt) = rt() else { return };
+    run_workers(WORKERS, move |mut h| assert_shadow_bitwise(&mut h, rt.clone()))
+        .unwrap();
+}
+
+#[test]
+fn shadow_run_is_bitwise_identical_tcp() {
+    let Some(rt) = rt() else { return };
+    let joins: Vec<_> = (0..WORKERS)
+        .map(|rank| {
+            let rt = rt.clone();
+            std::thread::spawn(move || -> fastmoe::Result<()> {
+                let mut g = TcpGroup::connect_local(rank, WORKERS, 48970)?;
+                assert_shadow_bitwise(&mut g, rt)?;
+                g.barrier()
+            })
+        })
+        .collect();
+    for (rank, j) in joins.into_iter().enumerate() {
+        j.join().unwrap_or_else(|_| panic!("tcp rank {rank} panicked")).unwrap();
+    }
+}
+
+/// Per rank, per expert-shard tensor: the full data plus its Adam
+/// moments (slots after the two gate slots), for cross-rank slot
+/// comparison on the main thread.
+type ExpertDump = Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>;
+
+fn dump_expert_state(tr: &MoeLayerTrainer) -> ExpertDump {
+    tr.layer
+        .params()
+        .iter()
+        .skip(2) // wg, bg
+        .enumerate()
+        .map(|(j, (_, p))| {
+            (
+                p.data.clone(),
+                tr.optimizer().m[2 + j].data.clone(),
+                tr.optimizer().v[2 + j].data.clone(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn migration_moves_params_and_adam_state_bitwise() {
+    let Some(rt) = rt() else { return };
+    // swap expert 0 (rank 0, slot 0) with rank 1's first expert
+    let out = run_workers(WORKERS, move |mut h| {
+        let rank = h.rank();
+        let mut reference = build_trainer(rt.clone(), rank)?;
+        let mut migrated = build_trainer(rt.clone(), rank)?;
+        let (mut c1, mut c2) = (Counters::new(), Counters::new());
+        // two warm-up steps populate Adam's moments with real values
+        for step in 0..2 {
+            let x = step_input(reference.layer.nb, reference.layer.dm, rank, step);
+            let s1 = reference.train_step(&mut h, x.clone(), &mut c1)?;
+            let s2 = migrated.train_step(&mut h, x, &mut c2)?;
+            assert_eq!(s1.loss.to_bits(), s2.loss.to_bits());
+        }
+        let ne_local = migrated.layer.ne_local;
+        let swap = PlanDelta::Swap { a: 0, b: ne_local };
+        migrated.force_delta(&mut h, &swap)?;
+        assert!(!migrated.layer.placement().is_seed());
+        assert_eq!(migrated.layer.placement().owner(0), (1, 0));
+        assert_eq!(migrated.layer.placement().owner(ne_local), (0, 0));
+        let owners: Vec<(usize, usize)> = (0..WORKERS * ne_local)
+            .map(|e| migrated.layer.placement().owner(e))
+            .collect();
+        let dump = (dump_expert_state(&reference), dump_expert_state(&migrated));
+        // the migrated layout must still train (collective schedules
+        // all agree on the new owner map)
+        let x = step_input(migrated.layer.nb, migrated.layer.dm, rank, 99);
+        let stats = migrated.train_step(&mut h, x, &mut c2)?;
+        assert!(stats.loss.is_finite());
+        Ok((ne_local, owners, dump.0, dump.1))
+    })
+    .unwrap();
+
+    let (ne_local, owners, _, _) = &out[0];
+    let slot = |dump: &ExpertDump, s: usize| -> Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        dump.iter()
+            .map(|(p, m, v)| {
+                let stride = p.len() / ne_local;
+                (
+                    p[s * stride..(s + 1) * stride].to_vec(),
+                    m[s * stride..(s + 1) * stride].to_vec(),
+                    v[s * stride..(s + 1) * stride].to_vec(),
+                )
+            })
+            .collect()
+    };
+    for e in 0..WORKERS * ne_local {
+        // reference: the seed layout; migrated: wherever the swap put it
+        let (rr, rs) = (e / ne_local, e % ne_local);
+        let (mr, ms) = owners[e];
+        let want = slot(&out[rr].2, rs);
+        let got = slot(&out[mr].3, ms);
+        for (t, ((wp, wm, wv), (gp, gm, gv))) in
+            want.iter().zip(got.iter()).enumerate()
+        {
+            assert_bits(&format!("expert {e} tensor {t} params"), gp, wp);
+            assert_bits(&format!("expert {e} tensor {t} adam.m"), gm, wm);
+            assert_bits(&format!("expert {e} tensor {t} adam.v"), gv, wv);
+        }
+    }
+}
+
+/// Acceptance (iii): on a skewed routing distribution the analytic step
+/// model must score the policy's rebalanced layout strictly below the
+/// static seed layout — the whole reason the subsystem exists.
+#[test]
+fn rebalanced_skew_scores_below_static() {
+    let net = NetModel::preset(NetPreset::IbEdr);
+    let (workers, ne_local) = (4, 2);
+    let (bytes_per_row, secs_per_row) = (4096, 5e-6);
+
+    // one runaway-hot expert: shadow replication spreads its rows
+    let mut counts = vec![40u32; workers * ne_local];
+    counts[0] = 600;
+    let mut plan = PlacementPlan::seed(workers, ne_local);
+    let static_secs =
+        net.moe_step_skewed(&plan.rank_rows(&counts), bytes_per_row, secs_per_row);
+    let mut moves = 0;
+    for _ in 0..workers {
+        match decide(PlacementPolicy::Shadow, &plan, &counts, 1.5) {
+            Some(delta @ PlanDelta::AddShadow { .. }) => {
+                plan.apply(&delta).unwrap();
+                moves += 1;
+            }
+            _ => break,
+        }
+    }
+    assert!(moves >= 1, "the skew must trigger at least one replication");
+    let shadow_secs =
+        net.moe_step_skewed(&plan.rank_rows(&counts), bytes_per_row, secs_per_row);
+    assert!(
+        shadow_secs < static_secs,
+        "shadowed layout must beat static ({shadow_secs} vs {static_secs})"
+    );
+
+    // two warm experts crowded onto one rank: migration separates them
+    let mut counts = vec![40u32; workers * ne_local];
+    counts[0] = 300;
+    counts[1] = 300;
+    let mut plan = PlacementPlan::seed(workers, ne_local);
+    let static_secs =
+        net.moe_step_skewed(&plan.rank_rows(&counts), bytes_per_row, secs_per_row);
+    let delta = decide(PlacementPolicy::Migrate, &plan, &counts, 1.5)
+        .expect("crowding must trigger a migration");
+    assert!(matches!(delta, PlanDelta::Swap { .. }), "{delta:?}");
+    plan.apply(&delta).unwrap();
+    let migrated_secs =
+        net.moe_step_skewed(&plan.rank_rows(&counts), bytes_per_row, secs_per_row);
+    assert!(
+        migrated_secs < static_secs,
+        "migrated layout must beat static ({migrated_secs} vs {static_secs})"
+    );
+}

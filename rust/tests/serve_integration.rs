@@ -18,14 +18,18 @@
 //! * a full daemon run — three concurrent client sessions, replies
 //!   checked bitwise against an identically-seeded reference layer,
 //!   latency percentiles present in the stats JSON;
-//! * queue overflow under a saturating client: rejections, not stalls.
+//! * queue overflow under a saturating client: rejections, not stalls;
+//! * per-session fairness: a chatty session pipelining a burst cannot
+//!   starve a quiet session's request out of the next batch (the PR-7
+//!   round-robin packing).
 //!
 //! Ports: 48270 (daemon), 48470/48570 (tcp equivalence ± progress),
-//! 48670 (runtime-free admission), 48770 (overflow).  The failure
-//! tests own 47870/47970/48070; the serve bench owns 48170.
+//! 48670 (runtime-free admission), 48770 (overflow), 48870
+//! (starvation).  The failure tests own 47870/47970/48070; the serve
+//! bench owns 48170.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use fastmoe::comm::tcp::TcpGroup;
 use fastmoe::comm::{run_workers, Comm};
@@ -180,6 +184,45 @@ fn admission_control_rejects_over_the_wire_without_runtime() {
     // zero rows
     c.request(9, 0, &[]).unwrap();
     assert_eq!(c.recv_reply().unwrap(), Reply::Rejected { id: 9 });
+    daemon.close();
+}
+
+#[test]
+fn round_robin_prevents_session_starvation_over_the_wire() {
+    // the front end alone, no runtime: a chatty session pipelines a
+    // six-request burst before a quiet session sends its single
+    // request.  Per-session round-robin packing must put the quiet
+    // session into the *first* two-row batch — under the old FIFO
+    // packing it would queue behind the entire burst.
+    let cfg = ServeConfig { port: 48870, max_batch: 2, queue_depth: 64, idle_ms: 5 };
+    let (nb, dm) = (4usize, 2usize);
+    let mut daemon = ServeDaemon::bind(&cfg, nb, dm).unwrap();
+    let mut chatty = ClientConn::connect("127.0.0.1:48870").unwrap();
+    for id in 0..6u32 {
+        chatty.request(id, 1, &[id as f32; 2]).unwrap();
+    }
+    let mut quiet = ClientConn::connect("127.0.0.1:48870").unwrap();
+    quiet.request(100, 1, &[7.0; 2]).unwrap();
+    // the session readers are free-running threads; give the whole
+    // burst ample time to be admitted before packing begins
+    std::thread::sleep(Duration::from_millis(500));
+
+    let (_, first) = daemon.next_batch(nb, dm).expect("queued work");
+    let first_ids: Vec<u32> = first.iter().map(|p| p.req.id).collect();
+    assert!(
+        first_ids.contains(&100),
+        "quiet session must ride in the first batch, got {first_ids:?}"
+    );
+    // the burst still drains completely, FIFO within its session
+    let mut burst_ids: Vec<u32> =
+        first_ids.iter().copied().filter(|&id| id < 100).collect();
+    while burst_ids.len() < 6 {
+        let (_, pending) = daemon.next_batch(nb, dm).expect("burst not drained");
+        burst_ids.extend(
+            pending.iter().map(|p| p.req.id).filter(|&id| id < 100),
+        );
+    }
+    assert_eq!(burst_ids, (0..6).collect::<Vec<u32>>());
     daemon.close();
 }
 

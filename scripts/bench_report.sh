@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Perf trajectory: run the sim-backed Figure-6 scaling bench (recorded
-# as BENCH_pr5.json) and the serving latency bench (recorded as
-# BENCH_pr6.json) at the repo root.
+# as BENCH_pr5.json), the serving latency bench (recorded as
+# BENCH_pr6.json) and the skewed-routing placement scenario (recorded
+# as BENCH_pr7.json) at the repo root.
 #
 #   scripts/bench_report.sh            # default: 4 chunks, 4 iters
 #   CHUNKS=8 ITERS=8 BUCKET_KB=256 NODES=2 scripts/bench_report.sh
@@ -79,5 +80,13 @@ cargo bench --bench serve_latency -- \
     --sessions "$SESSIONS" --requests "$REQUESTS" --max-batch "$MAX_BATCH" \
     --json "$ROOT/BENCH_pr6.json"
 
-echo "bench_report.sh: wrote $ROOT/BENCH_pr5.json and $ROOT/BENCH_pr6.json" \
-     "(and runs/fig6_overlap_measured.json)"
+# 4. placement (PR 7): the skewed-routing scenario — a runaway-hot
+#    expert scored under the static seed layout vs the layout the
+#    shadow policy converges to (sim::NetModel::moe_step_skewed over
+#    the plan-modelled per-rank rows).  Artifact-free and analytic;
+#    the bench asserts rebalanced < static before writing the record.
+cargo bench --bench fig6_scale -- --skew \
+    --json "$ROOT/BENCH_pr7.json"
+
+echo "bench_report.sh: wrote $ROOT/BENCH_pr5.json, $ROOT/BENCH_pr6.json" \
+     "and $ROOT/BENCH_pr7.json (and runs/fig6_overlap_measured.json)"

@@ -23,10 +23,12 @@ cargo clippy --all-targets -- -D warnings
 # bucketed all-reduce matrix, trainer equivalence incl. overlapped
 # grad sync, failure injection incl. death mid-bucketed-sync and the
 # serve client-disconnect containment, the zero-copy/pooled-receive
-# regressions, and the serve suite: batched==sequential bitwise
-# equivalence, admission control, queue overflow), then the full run
+# regressions, the serve suite: batched==sequential bitwise
+# equivalence, admission control, queue overflow, session fairness,
+# and the placement suite: shadow/migration bitwise equivalence plus
+# the skew-model acceptance), then the full run
 cargo test -q --test comm_conformance --test trainer_equivalence \
     --test failure_injection --test zero_copy_regression \
-    --test serve_integration
+    --test serve_integration --test placement_equivalence
 cargo test -q
 echo "check.sh: all green"
