@@ -53,6 +53,17 @@
 //! rows; the bench asserts the rebalanced layout scores strictly below
 //! static, and `--json` records both.
 //!
+//! A `--chaos` mode (PR 8) scores the *fault* scenarios: the same
+//! analytic step model over a uniform routing distribution, healthy vs
+//! degraded with one rank quarantined — once with every dead-owned
+//! expert shadow-covered (its rows redistribute to live replicas: no
+//! tokens lost, survivors pay the extra load) and once uncovered (the
+//! dead rank's share is score-masked away: cheap but lossy) — plus the
+//! α-β cost of the rejoin peer-transfer (three tensors-and-moments
+//! slots per covered expert).  The bench asserts covered conserves
+//! every row, uncovered drops exactly the dead rank's share, and
+//! degraded never scores below healthy.
+//!
 //! ```bash
 //! cargo bench --bench fig6_scale                    # scaled IB-EDR (default)
 //! cargo bench --bench fig6_scale -- --overlap       # run the pipelined layer path
@@ -60,6 +71,7 @@
 //! cargo bench --bench fig6_scale -- --json out.json # machine-readable record
 //! cargo bench --bench fig6_scale -- --net none      # ablation: free network
 //! cargo bench --bench fig6_scale -- --skew          # PR-7 placement scenario
+//! cargo bench --bench fig6_scale -- --chaos         # PR-8 fault scenario
 //! ```
 //!
 //! Expected shape (paper Fig. 6): going 1→2 workers roughly *halves*
@@ -84,7 +96,7 @@ use fastmoe::util::json::Json;
 
 fn main() -> fastmoe::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
-    let args = Args::parse(argv, &["overlap", "skew"])?;
+    let args = Args::parse(argv, &["overlap", "skew", "chaos"])?;
     let iters = args.usize_or("iters", 4)?;
     let net_name = args.str_or("net", "ib-edr-scaled");
     let chunks = args.usize_or("chunks", 4)?.max(1);
@@ -98,6 +110,10 @@ fn main() -> fastmoe::Result<()> {
         // the PR-7 placement scenario is purely analytic — no artifacts
         // or runtime needed, so it runs (and exits) before the open
         return skew_scenario(&args, json_path);
+    }
+    if args.has_flag("chaos") {
+        // the PR-8 fault scenario is likewise analytic-only
+        return chaos_scenario(&args, json_path);
     }
     // V100 fp32 ≈ 14 TFLOP/s against 12.5 GB/s EDR (the paper's nodes)
     const PAPER_DEVICE_GFLOPS: f64 = 14_000.0;
@@ -561,6 +577,138 @@ fn skew_scenario(args: &Args, json_path: Option<String>) -> fastmoe::Result<()> 
             "moves".into(),
             Json::Array(moves.into_iter().map(Json::Str).collect()),
         );
+        std::fs::write(&path, Json::Object(root).to_string())?;
+        println!("{path} written");
+    }
+    Ok(())
+}
+
+/// The PR-8 `--chaos` fault scenario: price what surviving a worker
+/// death costs.  A uniform routing distribution is scored healthy, then
+/// degraded with rank `--dead` quarantined under the two coverage
+/// regimes the trainer supports — every dead-owned expert
+/// shadow-covered (rows redistribute to live replicas) vs uncovered
+/// (the dead share is score-masked away) — and the rejoin
+/// peer-transfer is priced as α-β point-to-point traffic over the
+/// checkpoint-format expert slots.  Purely analytic — no artifacts,
+/// runtime, or wire traffic.
+fn chaos_scenario(args: &Args, json_path: Option<String>) -> fastmoe::Result<()> {
+    use fastmoe::placement::PlacementPlan;
+
+    let workers = args.usize_or("workers", 4)?.max(2);
+    let ne_local = args.usize_or("ne-local", 2)?.max(1);
+    let dead = args.usize_or("dead", 1)?.min(workers - 1);
+    let net_name = args.str_or("net", "ib-edr");
+    let net = NetModel::preset(NetPreset::parse(&net_name).unwrap_or(NetPreset::IbEdr));
+    let dm = args.usize_or("dm", 1024)?;
+    let dh = args.usize_or("dh", 4096)?;
+    let bytes_per_row = dm * 4;
+    let secs_per_row = 5e-6;
+
+    // uniform routing: every expert drains the same share, so the
+    // degraded deltas are purely the fault's doing
+    let ne_global = workers * ne_local;
+    let counts = vec![120u32; ne_global];
+    let total_rows: f64 = counts.iter().map(|&c| c as f64).sum();
+    let survivors: Vec<usize> = (0..workers).filter(|&r| r != dead).collect();
+
+    let healthy_plan = PlacementPlan::seed(workers, ne_local);
+    let healthy_rows = healthy_plan.rank_rows(&counts);
+    let healthy_secs = net.moe_step_skewed(&healthy_rows, bytes_per_row, secs_per_row);
+
+    // covered: every dead-owned expert has a live replica, spread
+    // round-robin over the survivors (what the rebalancer converges to)
+    let mut covered_plan = PlacementPlan::seed(workers, ne_local);
+    for (k, e) in (dead * ne_local..(dead + 1) * ne_local).enumerate() {
+        covered_plan.add_shadow(e, survivors[k % survivors.len()])?;
+    }
+    covered_plan.set_down(Some(dead))?;
+    let covered_rows = covered_plan.rank_rows(&counts);
+    let covered_secs = net.moe_step_skewed(&covered_rows, bytes_per_row, secs_per_row);
+
+    // uncovered: no replicas — the dead rank's experts are score-masked
+    // and their rows simply vanish from the step
+    let mut uncovered_plan = PlacementPlan::seed(workers, ne_local);
+    uncovered_plan.set_down(Some(dead))?;
+    let uncovered_rows = uncovered_plan.rank_rows(&counts);
+    let uncovered_secs =
+        net.moe_step_skewed(&uncovered_rows, bytes_per_row, secs_per_row);
+
+    // rejoin catch-up: per covered expert, params + both Adam moments
+    // of the w1/b1/w2/b2 slot stream back from the shadow host
+    // (`pack_expert_slot` layout), priced as one α-β message each
+    let slot_bytes = 3 * (2 * dm * dh + dm + dh) * 4;
+    let rejoin_bytes = ne_local * slot_bytes;
+    let rejoin_secs =
+        ne_local as f64 * (net.alpha + slot_bytes as f64 * net.beta);
+
+    let sum = |rows: &[f64]| rows.iter().sum::<f64>();
+    let hottest = |rows: &[f64]| rows.iter().cloned().fold(0.0f64, f64::max);
+    let dead_share = (ne_local * 120) as f64;
+    // conservation: coverage loses no tokens; masking loses exactly the
+    // dead rank's share
+    assert!(
+        (sum(&covered_rows) - total_rows).abs() < 1e-6,
+        "covered layout must conserve every row ({} vs {total_rows})",
+        sum(&covered_rows)
+    );
+    assert!(
+        (sum(&uncovered_rows) - (total_rows - dead_share)).abs() < 1e-6,
+        "uncovered layout must drop exactly the dead share ({} vs {})",
+        sum(&uncovered_rows),
+        total_rows - dead_share
+    );
+    // a degraded step never beats the healthy one
+    assert!(covered_secs >= healthy_secs - 1e-15, "{covered_secs} vs {healthy_secs}");
+    assert!(uncovered_secs >= healthy_secs - 1e-15, "{uncovered_secs} vs {healthy_secs}");
+
+    println!(
+        "Figure 6 (chaos) — degraded-mode cost of losing rank {dead} \
+         (workers={workers}, experts={ne_global}, uniform {} rows, net={net_name})\n",
+        total_rows as u64,
+    );
+    let mut table =
+        Table::new(&["layout", "live_rows", "hottest_rows", "step_ms", "slowdown"]);
+    let mut row = |name: &str, rows: &[f64], secs: f64| {
+        table.row(vec![
+            name.into(),
+            format!("{:.0}", sum(rows)),
+            format!("{:.0}", hottest(rows)),
+            format!("{:.2}", secs * 1e3),
+            format!("{:.2}x", secs / healthy_secs.max(1e-12)),
+        ]);
+    };
+    row("healthy", &healthy_rows, healthy_secs);
+    row("degraded/covered", &covered_rows, covered_secs);
+    row("degraded/uncovered", &uncovered_rows, uncovered_secs);
+    println!("{}", table.render());
+    println!(
+        "rejoin catch-up: {} covered experts, {:.2} MB peer-transfer, {:.2} ms",
+        ne_local,
+        rejoin_bytes as f64 / 1e6,
+        rejoin_secs * 1e3,
+    );
+
+    if let Some(path) = json_path {
+        let mut root = BTreeMap::new();
+        root.insert("bench".into(), Json::Str("fig6_scale".into()));
+        root.insert("mode".into(), Json::Str("chaos".into()));
+        root.insert("net".into(), Json::Str(net_name));
+        root.insert("workers".into(), Json::Num(workers as f64));
+        root.insert("ne_global".into(), Json::Num(ne_global as f64));
+        root.insert("dead_rank".into(), Json::Num(dead as f64));
+        root.insert("total_rows".into(), Json::Num(total_rows));
+        root.insert("healthy_s_per_iter".into(), Json::Num(healthy_secs));
+        root.insert("covered_s_per_iter".into(), Json::Num(covered_secs));
+        root.insert("uncovered_s_per_iter".into(), Json::Num(uncovered_secs));
+        root.insert("covered_rows".into(), Json::Num(sum(&covered_rows)));
+        root.insert("uncovered_rows".into(), Json::Num(sum(&uncovered_rows)));
+        root.insert(
+            "covered_slowdown".into(),
+            Json::Num(covered_secs / healthy_secs.max(1e-12)),
+        );
+        root.insert("rejoin_payload_bytes".into(), Json::Num(rejoin_bytes as f64));
+        root.insert("rejoin_transfer_s".into(), Json::Num(rejoin_secs));
         std::fs::write(&path, Json::Object(root).to_string())?;
         println!("{path} written");
     }

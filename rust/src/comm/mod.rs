@@ -744,23 +744,7 @@ pub trait Comm {
     /// legacy O(n²) empty all-to-all survives as
     /// [`Comm::barrier_a2a`] for tests that assert message counts.
     fn barrier(&mut self) -> Result<()> {
-        let n = self.size();
-        if n <= 1 {
-            return Ok(());
-        }
-        let rank = self.rank();
-        let seq = self.next_seq();
-        let mut dist = 1usize;
-        let mut round = 0u64;
-        while dist < n {
-            let tag = (seq << 8) | round;
-            self.send((rank + dist) % n, tag, Vec::new())?;
-            self.recv((rank + n - dist) % n, tag)?;
-            dist <<= 1;
-            round += 1;
-        }
-        self.counters().add("barrier_rounds", round);
-        Ok(())
+        dissemination_barrier(self)
     }
 
     /// Legacy barrier: an empty all-to-all (every pair exchanges a
@@ -1007,6 +991,30 @@ pub trait Comm {
     }
 }
 
+/// The message-based dissemination barrier [`Comm::barrier`] defaults
+/// to — a free function so backends that override `barrier` (the
+/// thread handle's OS barrier) can still fall back to it when a recv
+/// deadline is armed: an OS barrier cannot time out, messages can.
+pub fn dissemination_barrier<C: Comm + ?Sized>(c: &mut C) -> Result<()> {
+    let n = c.size();
+    if n <= 1 {
+        return Ok(());
+    }
+    let rank = c.rank();
+    let seq = c.next_seq();
+    let mut dist = 1usize;
+    let mut round = 0u64;
+    while dist < n {
+        let tag = (seq << 8) | round;
+        c.send((rank + dist) % n, tag, Vec::new())?;
+        c.recv((rank + n - dist) % n, tag)?;
+        dist <<= 1;
+        round += 1;
+    }
+    c.counters().add("barrier_rounds", round);
+    Ok(())
+}
+
 /// How often a blocked thread-channel receive checks whether the peer
 /// it waits on has died (see [`CommHandle`]'s liveness notes).
 const DEATH_POLL: Duration = Duration::from_millis(50);
@@ -1027,6 +1035,11 @@ pub struct CommHandle {
     barrier: Arc<Barrier>,
     /// Per-rank liveness, flipped false by each handle's `Drop`.
     alive: Arc<Vec<AtomicBool>>,
+    /// Optional deadline for blocking receives (`[fault]
+    /// recv_timeout_ms`): a peer silent past it surfaces
+    /// [`Error::Timeout`] instead of hanging the rank.  Checked at
+    /// [`DEATH_POLL`] granularity.  `None` (the default) waits forever.
+    recv_timeout: Option<Duration>,
     seq: u64,
     pub counters: Counters,
 }
@@ -1055,6 +1068,7 @@ pub fn local_group(size: usize) -> Vec<CommHandle> {
             parked: Vec::new(),
             barrier: barrier.clone(),
             alive: alive.clone(),
+            recv_timeout: None,
             seq: 0,
             counters: Counters::new(),
         })
@@ -1092,6 +1106,14 @@ impl CommHandle {
             "worker {src} died before its message (tag {tag}) arrived"
         ))
     }
+
+    /// Arm (or disarm, `None`) the blocking-receive deadline — the
+    /// `[fault] recv_timeout_ms` knob.  While armed, [`Comm::barrier`]
+    /// runs over messages instead of the OS barrier, so it times out
+    /// with everything else.
+    pub fn set_recv_timeout(&mut self, timeout: Option<Duration>) {
+        self.recv_timeout = timeout;
+    }
 }
 
 impl Comm for CommHandle {
@@ -1118,6 +1140,9 @@ impl Comm for CommHandle {
         if let Some(data) = self.take_parked(src, tag) {
             return Ok(data);
         }
+        let deadline = self
+            .recv_timeout
+            .map(|d| (std::time::Instant::now() + d, d.as_millis() as u64));
         loop {
             match self.receiver.recv_timeout(DEATH_POLL) {
                 Ok(msg) => {
@@ -1135,6 +1160,15 @@ impl Comm for CommHandle {
                             return Ok(data);
                         }
                         return Err(Self::dead_peer_err(src, tag));
+                    }
+                    if let Some((at, ms)) = deadline {
+                        if std::time::Instant::now() >= at {
+                            self.park_delivered();
+                            if let Some(data) = self.take_parked(src, tag) {
+                                return Ok(data);
+                            }
+                            return Err(Error::Timeout { peer: src, tag, ms });
+                        }
                     }
                 }
                 Err(RecvTimeoutError::Disconnected) => {
@@ -1169,6 +1203,9 @@ impl Comm for CommHandle {
             }
             None => true,
         });
+        let deadline = self
+            .recv_timeout
+            .map(|d| (std::time::Instant::now() + d, d.as_millis() as u64));
         while !pending.is_empty() {
             match self.receiver.recv_timeout(DEATH_POLL) {
                 Ok(msg) => {
@@ -1205,6 +1242,23 @@ impl Comm for CommHandle {
                             return Err(Self::dead_peer_err(src, tag));
                         }
                     }
+                    if let Some((at, ms)) = deadline {
+                        if std::time::Instant::now() >= at {
+                            self.park_delivered();
+                            pending.retain(|&(slot, src, tag)| {
+                                match self.take_parked(src, tag) {
+                                    Some(data) => {
+                                        out[slot] = Some(data);
+                                        false
+                                    }
+                                    None => true,
+                                }
+                            });
+                            if let Some(&(_, src, tag)) = pending.first() {
+                                return Err(Error::Timeout { peer: src, tag, ms });
+                            }
+                        }
+                    }
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     return Err(Error::Comm("channel closed".into()))
@@ -1214,8 +1268,13 @@ impl Comm for CommHandle {
         Ok(out)
     }
 
-    /// Threads share an OS barrier — cheaper than the message fallback.
+    /// Threads share an OS barrier — cheaper than the message fallback —
+    /// unless a recv deadline is armed: an OS barrier cannot time out,
+    /// so the deadline path runs the message-based dissemination rounds.
     fn barrier(&mut self) -> Result<()> {
+        if self.recv_timeout.is_some() {
+            return dissemination_barrier(self);
+        }
         self.barrier.wait();
         Ok(())
     }
@@ -1310,6 +1369,33 @@ mod tests {
             })
             .unwrap();
         }
+    }
+
+    #[test]
+    fn recv_deadline_surfaces_timeout() {
+        run_workers(2, |mut h| {
+            let peer = 1 - h.rank();
+            h.set_recv_timeout(Some(Duration::from_millis(100)));
+            // nothing was ever sent on this tag: both ranks must time
+            // out with the peer and tag attached, not hang
+            match h.recv(peer, (1u64 << 40) | 5) {
+                Err(Error::Timeout { peer: p, tag, ms }) => {
+                    assert_eq!(p, peer);
+                    assert_eq!(tag, (1u64 << 40) | 5);
+                    assert_eq!(ms, 100);
+                }
+                other => panic!("rank {}: {other:?}", h.rank()),
+            }
+            // an armed deadline routes barrier over messages, so it
+            // completes (both ranks participate) without the OS barrier
+            h.barrier()?;
+            // and the handle still works once disarmed
+            h.set_recv_timeout(None);
+            h.send(peer, 7, vec![h.rank() as f32])?;
+            assert_eq!(h.recv(peer, 7)?, vec![peer as f32]);
+            Ok(())
+        })
+        .unwrap();
     }
 
     #[test]

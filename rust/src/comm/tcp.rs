@@ -250,6 +250,12 @@ pub struct TcpGroup {
     progress: Option<Arc<ProgressShared>>,
     /// Pooled receive buffers shared with the frame readers.
     frames: Arc<FramePool>,
+    /// Optional deadline for blocking receives (`[fault]
+    /// recv_timeout_ms`): a peer silent past it surfaces
+    /// [`Error::Timeout`] instead of hanging.  Checked at
+    /// [`KEEPALIVE_POLL`] granularity on the deferred-flush path and
+    /// exactly on the progress path.  `None` (default) waits forever.
+    recv_timeout: Option<Duration>,
     seq: u64,
     pub counters: Counters,
 }
@@ -323,6 +329,7 @@ impl TcpGroup {
             spent_bytes: 0,
             progress: None,
             frames: Arc::new(FramePool::default()),
+            recv_timeout: None,
             seq: 0,
             counters: Counters::new(),
         })
@@ -465,6 +472,14 @@ impl TcpGroup {
         }
     }
 
+    /// Arm or disarm the receive deadline.  With a deadline set, a
+    /// blocking receive whose peer stays silent past it returns
+    /// [`Error::Timeout`] instead of waiting forever — the hook the
+    /// fault layer uses to turn a hung worker into a typed suspicion.
+    pub fn set_recv_timeout(&mut self, timeout: Option<Duration>) {
+        self.recv_timeout = timeout;
+    }
+
     /// Blocking read of one framed message from a specific peer socket
     /// (deferred-flush mode only; progress mode reads via the engine).
     ///
@@ -472,8 +487,14 @@ impl TcpGroup {
     /// the peer with an empty [`KEEPALIVE_TAG`] frame — a dead
     /// connection fails the probe *write* without waiting for the OS
     /// to deliver EOF, surfacing as a typed error instead of a hang.
-    fn read_msg_from(&mut self, peer: usize) -> Result<Msg> {
+    /// With a receive deadline armed, an idle peer past it surfaces
+    /// [`Error::Timeout`] for `want_tag` (checked at the keepalive
+    /// tick, so resolution is [`KEEPALIVE_POLL`]).
+    fn read_msg_from(&mut self, peer: usize, want_tag: u64) -> Result<Msg> {
         let frames = self.frames.clone();
+        let deadline = self
+            .recv_timeout
+            .map(|d| (Instant::now() + d, d.as_millis() as u64));
         loop {
             let res = {
                 let reader = self.readers[peer]
@@ -483,7 +504,14 @@ impl TcpGroup {
             };
             match res {
                 Ok(msg) => return Ok(msg),
-                Err(e) if is_timeout(&e) => self.probe_peer(peer)?,
+                Err(e) if is_timeout(&e) => {
+                    if let Some((at, ms)) = deadline {
+                        if Instant::now() >= at {
+                            return Err(Error::Timeout { peer, tag: want_tag, ms });
+                        }
+                    }
+                    self.probe_peer(peer)?;
+                }
                 Err(e) => return Err(io_err(e)),
             }
         }
@@ -521,9 +549,15 @@ impl TcpGroup {
         self.frames.hits.load(Ordering::Relaxed)
     }
 
-    /// Progress-mode receive: wait on the shared inbox.
+    /// Progress-mode receive: wait on the shared inbox.  An armed
+    /// receive deadline bounds the condvar wait exactly (no keepalive
+    /// tick on this path — the engine's reader threads own the
+    /// sockets).
     fn recv_progress(&mut self, src: usize, tag: u64) -> Result<Vec<f32>> {
         let shared = self.progress.as_ref().expect("progress mode").clone();
+        let deadline = self
+            .recv_timeout
+            .map(|d| (Instant::now() + d, d.as_millis() as u64));
         let mut inbox = shared.inbox.lock().unwrap();
         loop {
             if let Some(i) = inbox
@@ -538,7 +572,16 @@ impl TcpGroup {
                     "tcp: peer {src} down before tag {tag} arrived ({reason})"
                 )));
             }
-            inbox = shared.cv.wait(inbox).unwrap();
+            inbox = match deadline {
+                Some((at, ms)) => {
+                    let now = Instant::now();
+                    if now >= at {
+                        return Err(Error::Timeout { peer: src, tag, ms });
+                    }
+                    shared.cv.wait_timeout(inbox, at - now).unwrap().0
+                }
+                None => shared.cv.wait(inbox).unwrap(),
+            };
         }
     }
 }
@@ -757,7 +800,7 @@ impl Comm for TcpGroup {
             return self.recv_progress(src, tag);
         }
         loop {
-            let msg = self.read_msg_from(src)?;
+            let msg = self.read_msg_from(src, tag)?;
             if msg.tag == KEEPALIVE_TAG {
                 continue; // a peer probing us while it waits — discard
             }
@@ -805,6 +848,9 @@ impl Comm for TcpGroup {
             return Ok(out);
         }
         let shared = self.progress.as_ref().expect("progress mode").clone();
+        let deadline = self
+            .recv_timeout
+            .map(|d| (Instant::now() + d, d.as_millis() as u64));
         let mut inbox = shared.inbox.lock().unwrap();
         loop {
             let msgs = &mut inbox.msgs;
@@ -832,7 +878,18 @@ impl Comm for TcpGroup {
                         "tcp: peer {src} down with receives outstanding ({reason})"
                     )));
                 }
-                inbox = shared.cv.wait(inbox).unwrap();
+                inbox = match deadline {
+                    Some((at, ms)) => {
+                        let now = Instant::now();
+                        if now >= at {
+                            let &(_, src, tag) =
+                                pending.first().expect("pending nonempty");
+                            return Err(Error::Timeout { peer: src, tag, ms });
+                        }
+                        shared.cv.wait_timeout(inbox, at - now).unwrap().0
+                    }
+                    None => shared.cv.wait(inbox).unwrap(),
+                };
             }
         }
     }
@@ -970,6 +1027,52 @@ mod tests {
             let other = 1 - g.rank();
             assert_eq!(recv[other].len(), 200_000);
             assert!(recv[other].iter().all(|&x| x == other as f32));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tcp_recv_deadline_surfaces_timeout() {
+        // deferred-flush path: resolution is the keepalive tick, so
+        // any sub-tick deadline fires on the first idle boundary
+        run_tcp(2, 47450, |mut g| {
+            let other = 1 - g.rank();
+            g.set_recv_timeout(Some(Duration::from_millis(100)));
+            let unsent = (1u64 << 40) | 5;
+            match g.recv(other, unsent) {
+                Err(Error::Timeout { peer, tag, ms }) => {
+                    assert_eq!(peer, other);
+                    assert_eq!(tag, unsent);
+                    assert_eq!(ms, 100);
+                }
+                r => panic!("expected Timeout, got {r:?}"),
+            }
+            // link is still usable after a timeout, and disarming
+            // restores the wait-forever default
+            g.set_recv_timeout(None);
+            let tag = (g.next_seq() << 8) | 1;
+            g.isend(other, tag, vec![g.rank() as f32])?;
+            assert_eq!(g.recv(other, tag)?, vec![other as f32]);
+            Ok(())
+        });
+        // progress path: the condvar wait is bounded exactly
+        run_tcp(2, 47470, |mut g| {
+            g.enable_progress();
+            let other = 1 - g.rank();
+            g.set_recv_timeout(Some(Duration::from_millis(80)));
+            let unsent = (1u64 << 40) | 6;
+            match g.recv(other, unsent) {
+                Err(Error::Timeout { peer, tag, ms }) => {
+                    assert_eq!(peer, other);
+                    assert_eq!(tag, unsent);
+                    assert_eq!(ms, 80);
+                }
+                r => panic!("expected Timeout, got {r:?}"),
+            }
+            g.set_recv_timeout(None);
+            let tag = (g.next_seq() << 8) | 1;
+            g.isend(other, tag, vec![g.rank() as f32])?;
+            assert_eq!(g.recv(other, tag)?, vec![other as f32]);
             Ok(())
         });
     }

@@ -548,6 +548,77 @@ impl PlacementConfig {
     }
 }
 
+/// Elastic fault recovery — the `[fault]` config section, consumed by
+/// [`crate::fault::Recovery`] and the trainers' checkpoint hooks.
+///
+/// ```toml
+/// [fault]
+/// recover = "degrade"   # "abort" (default) | "degrade" | "rejoin"
+/// ckpt_interval = 50    # checkpoint every N steps (0 = off)
+/// ckpt_dir = "runs/ckpt" # per-rank rank<r>.fmoe files land here
+/// recv_timeout_ms = 0   # blocking-recv deadline (0 = wait forever)
+/// chaos = ""            # deterministic schedule, e.g. "kill@5:r1, rejoin@9:r1"
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// What to do when a rank is declared dead: `"abort"` (the seed
+    /// behaviour — fail the run), `"degrade"` (survivors continue with
+    /// shadow-replica failover + score-masked drops) or `"rejoin"`
+    /// (degrade, then restore the rank from checkpoint/peer transfer
+    /// when its `rejoin@…` event fires).
+    pub recover: String,
+    /// Periodic-checkpoint cadence in steps; `0` disables.
+    pub ckpt_interval: usize,
+    /// Directory for the per-rank `rank<r>.fmoe` checkpoint files.
+    pub ckpt_dir: String,
+    /// Deadline for blocking receives in milliseconds; a peer silent
+    /// past it surfaces as [`crate::error::Error::Timeout`] instead of
+    /// hanging the rank.  `0` (the default) waits forever.
+    pub recv_timeout_ms: u64,
+    /// Deterministic chaos schedule ([`crate::fault::ChaosSchedule`]):
+    /// comma-separated `kill@N:rR`, `delay@N:rR:MS`, `rejoin@N:rR`
+    /// events fired at step boundaries.  Empty = no injection.
+    pub chaos: String,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            recover: "abort".into(),
+            ckpt_interval: 0,
+            ckpt_dir: "runs/ckpt".into(),
+            recv_timeout_ms: 0,
+            chaos: String::new(),
+        }
+    }
+}
+
+impl FaultConfig {
+    /// The `[fault]` section of an optional `--config` file, with
+    /// `--recover`, `--ckpt-interval`, `--ckpt-dir`,
+    /// `--recv-timeout-ms` and `--chaos` CLI overrides.
+    pub fn from_args(args: &crate::cli::Args) -> Result<FaultConfig> {
+        let mut cfg = if let Some(path) = args.get("config") {
+            ConfigFile::load(path)?.fault()?
+        } else {
+            FaultConfig::default()
+        };
+        cfg.recover =
+            args.choice_or("recover", crate::fault::RecoverMode::KINDS, &cfg.recover)?;
+        cfg.ckpt_interval = args.usize_or("ckpt-interval", cfg.ckpt_interval)?;
+        cfg.ckpt_dir = args.str_or("ckpt-dir", &cfg.ckpt_dir);
+        cfg.recv_timeout_ms = args.u64_or("recv-timeout-ms", cfg.recv_timeout_ms)?;
+        cfg.chaos = args.str_or("chaos", &cfg.chaos);
+        cfg.validate()
+    }
+
+    fn validate(self) -> Result<FaultConfig> {
+        crate::fault::RecoverMode::parse(&self.recover)?;
+        crate::fault::ChaosSchedule::parse(&self.chaos)?;
+        Ok(self)
+    }
+}
+
 /// Distributed-runtime configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DistConfig {
@@ -714,6 +785,19 @@ impl ConfigFile {
             p.window = s.usize_or("window", p.window);
         }
         p.validate()
+    }
+
+    pub fn fault(&self) -> Result<FaultConfig> {
+        let mut f = FaultConfig::default();
+        if let Some(s) = self.section("fault") {
+            f.recover = s.str_or("recover", &f.recover);
+            f.ckpt_interval = s.usize_or("ckpt_interval", f.ckpt_interval);
+            f.ckpt_dir = s.str_or("ckpt_dir", &f.ckpt_dir);
+            f.recv_timeout_ms =
+                s.usize_or("recv_timeout_ms", f.recv_timeout_ms as usize) as u64;
+            f.chaos = s.str_or("chaos", &f.chaos);
+        }
+        f.validate()
     }
 
     pub fn dist(&self) -> Result<DistConfig> {
@@ -978,6 +1062,51 @@ window = 4
         assert_eq!(cfg.idle_ms, 10);
         assert_eq!(ServeConfig::from_args(&argv("x")).unwrap(), ServeConfig::default());
         assert!(ServeConfig::from_args(&argv("x --queue-depth 0")).is_err());
+    }
+
+    #[test]
+    fn fault_section_defaults_and_validation() {
+        // no [fault] section at all → abort, no checkpoints, no chaos
+        let c = ConfigFile::parse("[train]\nsteps = 1\n").unwrap();
+        assert_eq!(c.fault().unwrap(), FaultConfig::default());
+        assert_eq!(c.fault().unwrap().recover, "abort");
+        assert_eq!(c.fault().unwrap().ckpt_interval, 0);
+        assert_eq!(c.fault().unwrap().recv_timeout_ms, 0);
+        // section keys parse
+        let c = ConfigFile::parse(
+            "[fault]\nrecover = \"rejoin\"\nckpt_interval = 5\n\
+             ckpt_dir = \"tmp/ck\"\nrecv_timeout_ms = 250\n\
+             chaos = \"kill@3:r1, rejoin@6:r1\"\n",
+        )
+        .unwrap();
+        let cfg = c.fault().unwrap();
+        assert_eq!(cfg.recover, "rejoin");
+        assert_eq!(cfg.ckpt_interval, 5);
+        assert_eq!(cfg.ckpt_dir, "tmp/ck");
+        assert_eq!(cfg.recv_timeout_ms, 250);
+        assert!(!cfg.chaos.is_empty());
+        // bad recover mode / malformed chaos schedule are rejected
+        let c = ConfigFile::parse("[fault]\nrecover = \"panic\"\n").unwrap();
+        assert!(c.fault().is_err());
+        let c = ConfigFile::parse("[fault]\nchaos = \"explode@3:r1\"\n").unwrap();
+        assert!(c.fault().is_err());
+        // CLI merge mirrors the other sections
+        let argv = |s: &str| {
+            crate::cli::Args::parse(s.split_whitespace().map(|x| x.to_string()), &[])
+                .unwrap()
+        };
+        let cfg = FaultConfig::from_args(&argv(
+            "x --recover degrade --ckpt-interval 2 --ckpt-dir d \
+             --recv-timeout-ms 100 --chaos kill@5:r0",
+        ))
+        .unwrap();
+        assert_eq!(cfg.recover, "degrade");
+        assert_eq!(cfg.ckpt_interval, 2);
+        assert_eq!(cfg.ckpt_dir, "d");
+        assert_eq!(cfg.recv_timeout_ms, 100);
+        assert_eq!(cfg.chaos, "kill@5:r0");
+        assert_eq!(FaultConfig::from_args(&argv("x")).unwrap(), FaultConfig::default());
+        assert!(FaultConfig::from_args(&argv("x --recover never")).is_err());
     }
 
     #[test]

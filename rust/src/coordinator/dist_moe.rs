@@ -344,6 +344,8 @@ impl MoeLayerBuilder {
             placement: PlacementPlan::seed(workers, g.ne_local),
             shadow: Mutex::new(None),
             shadow_groups: Vec::new(),
+            masked: Vec::new(),
+            drained: false,
         })
     }
 
@@ -432,6 +434,19 @@ pub struct DistMoeLayer {
     /// rebuilt on every applied delta, on all member ranks at the same
     /// drained step boundary (their tag namespaces restart together).
     shadow_groups: Vec<(usize, ProcessGroup)>,
+    /// Degraded mode (`[fault] recover = "degrade"`): per-global-expert
+    /// score mask, set by [`Self::fail_rank`] on *every* rank for the
+    /// quarantined rank's shadow-uncovered experts.  Masked experts'
+    /// gate scores are floored to `-1e30` before routing (not `-inf` —
+    /// a softmax row of `-inf` NaNs under max-subtraction), so the gate
+    /// steers tokens away identically everywhere and its balance loss
+    /// keeps pushing load off them.  Empty = healthy.
+    masked: Vec<bool>,
+    /// Set on the quarantined rank itself: its own batch's assignment
+    /// weights are zeroed after routing, so the zombie's tokens transit
+    /// the (still world-sized, lockstep) exchange but contribute zero
+    /// output, zero loss and zero gradient.
+    drained: bool,
 }
 
 /// Forward residuals needed by the backward chain.
@@ -511,6 +526,15 @@ impl DistMoeLayer {
     pub fn params(&self) -> Vec<(&'static str, &TensorF32)> {
         let mut v = vec![("wg", &self.wg), ("bg", &self.bg)];
         v.extend(self.expert.params());
+        v
+    }
+
+    /// Mutable view of [`Self::params`], same slot order — the
+    /// checkpoint-restore entry (the trainers land saved tensors here).
+    pub fn params_mut(&mut self) -> Vec<(&'static str, &mut TensorF32)> {
+        let mut v: Vec<(&'static str, &mut TensorF32)> =
+            vec![("wg", &mut self.wg), ("bg", &mut self.bg)];
+        v.extend(self.expert.params_mut());
         v
     }
 
@@ -705,10 +729,33 @@ impl DistMoeLayer {
         // ---- gate scores (L1 kernel via HLO) ----
         let gate = self.rt.executable(&format!("gate_fwd_w{}", self.workers))?;
         let out = gate.run_refs(&[(&x).into(), (&self.wg).into(), (&self.bg).into()])?;
-        let scores = out.into_iter().next().unwrap().into_f32()?;
+        let mut scores = out.into_iter().next().unwrap().into_f32()?;
+
+        // ---- degraded-mode quarantine (see `crate::fault`) ----
+        // Uncovered experts of a down rank vanish from routing on every
+        // rank identically: their scores are floored so the gate never
+        // assigns them (and its balance loss steers load away).
+        if self.masked.iter().any(|&m| m) {
+            let ne_global = self.workers * self.ne_local;
+            for row in scores.data.chunks_mut(ne_global) {
+                for (e, &m) in self.masked.iter().enumerate() {
+                    if m {
+                        row[e] = -1e30;
+                    }
+                }
+            }
+        }
 
         // ---- host gating + plan (the paper's "local shuffle") ----
-        let assign = self.gate.route(&scores, self.k)?;
+        let mut assign = self.gate.route(&scores, self.k)?;
+        if self.drained {
+            // the zombie's own batch is weightless: its rows still ride
+            // the world-sized exchange (lockstep), but contribute zero
+            // output and zero gradient everywhere
+            for w in assign.w.iter_mut() {
+                *w = 0.0;
+            }
+        }
         let plan = if self.placement.is_seed() {
             // the historical static plan, bit for bit
             DispatchPlan::build(&assign, self.workers, self.ne_local)?
@@ -1892,6 +1939,121 @@ impl DistMoeLayer {
             {
                 let stride = dst.data.len() / ne_local;
                 dst.data[idx * stride..(idx + 1) * stride].copy_from_slice(&src.data);
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Elastic fault recovery (see `crate::fault`): quarantine a dead
+    // rank, route around it, and hand its state back on rejoin.
+    // ------------------------------------------------------------------
+
+    /// Per-global-expert quarantine mask (empty = healthy).
+    pub fn masked(&self) -> &[bool] {
+        &self.masked
+    }
+
+    /// Whether this rank is the quarantined zombie.
+    pub fn drained(&self) -> bool {
+        self.drained
+    }
+
+    /// Quarantine `dead` on this rank's view: routing steers to its
+    /// experts' live shadow replicas, its *uncovered* experts are
+    /// score-masked out of the gate everywhere, and — on the dead rank
+    /// itself — the local batch is drained to zero weight.  Called on
+    /// **every** rank at the same step boundary with the agreed
+    /// membership, so masks, plans and tag schedules stay identical.
+    pub fn fail_rank(&mut self, dead: usize) -> Result<()> {
+        self.placement.set_down(Some(dead))?;
+        let ne_global = self.workers * self.ne_local;
+        self.masked = vec![false; ne_global];
+        for e in 0..ne_global {
+            if self.placement.owner(e).0 == dead
+                && self.placement.shadow_hosts(e).is_empty()
+            {
+                self.masked[e] = true;
+            }
+        }
+        self.drained = self.rank == dead;
+        Ok(())
+    }
+
+    /// Lift the quarantine (the rejoin epilogue, on every rank).
+    pub fn restore_rank(&mut self) -> Result<()> {
+        self.placement.set_down(None)?;
+        self.masked.clear();
+        self.drained = false;
+        Ok(())
+    }
+
+    /// Wire payload of a *hosted replica's* slot — params then Adam
+    /// moments from the [`ShadowStore`]'s authoritative slices, laid
+    /// out exactly like [`Self::pack_slot_state`] packs an owned slot,
+    /// so the receiver lands it with [`Self::unpack_slot_state`].
+    fn pack_replica_slot(&self, expert: usize) -> Result<Vec<f32>> {
+        let idx = self
+            .placement
+            .hosted(self.rank)
+            .iter()
+            .position(|&h| h == expert)
+            .ok_or_else(|| Error::Shape("pack_replica_slot: not a host".into()))?;
+        let shadow = self.shadow.lock().unwrap();
+        let st = shadow
+            .as_ref()
+            .ok_or_else(|| Error::Shape("pack_replica_slot: no shadow store".into()))?;
+        let p_cnt = self.expert.params().len();
+        let mut payload = Vec::with_capacity(3 * self.slot_len());
+        for j in 0..p_cnt {
+            payload.extend_from_slice(&st.params[idx * p_cnt + j].data);
+        }
+        for j in 0..p_cnt {
+            payload.extend_from_slice(&st.opt.m[idx * p_cnt + j].data);
+        }
+        for j in 0..p_cnt {
+            payload.extend_from_slice(&st.opt.v[idx * p_cnt + j].data);
+        }
+        Ok(payload)
+    }
+
+    /// Rejoin catch-up, live-peer edition: for every expert the down
+    /// rank owns that has shadow replicas (which kept training past its
+    /// last checkpoint), the lowest-ranked host streams its replica's
+    /// params + Adam moments back to the owner slot over `PLACE_TAG`.
+    /// Collective like [`Self::apply_delta`]: every rank calls it at
+    /// the same boundary and burns one seq per transferred expert, so
+    /// world tag namespaces stay aligned; only two ranks move payload.
+    /// Call *before* [`Self::restore_rank`] (the down mark selects the
+    /// experts).
+    pub fn transfer_slots_from_shadows(
+        &mut self,
+        comm: &mut impl Comm,
+        opt: &mut Adam,
+    ) -> Result<()> {
+        let Some(dead) = self.placement.down() else {
+            return Err(Error::Config(
+                "transfer_slots_from_shadows: no rank is quarantined".into(),
+            ));
+        };
+        for e in 0..self.placement.ne_global() {
+            let (orank, oslot) = self.placement.owner(e);
+            if orank != dead {
+                continue;
+            }
+            let hosts = self.placement.shadow_hosts(e);
+            let Some(&src) = hosts.first() else { continue };
+            let tag = (comm.next_seq() << 8) | PLACE_TAG;
+            if self.rank == src {
+                let payload = self.pack_replica_slot(e)?;
+                let req = comm.isend(dead, tag, payload)?;
+                comm.wait(req)?;
+            } else if self.rank == dead {
+                let req = comm.irecv(src, tag)?;
+                let payload = comm.wait(req)?.ok_or_else(|| {
+                    Error::Comm("empty replica slot payload".into())
+                })?;
+                self.unpack_slot_state(opt, oslot, &payload)?;
             }
         }
         Ok(())

@@ -36,7 +36,7 @@ mod serve_loop;
 mod trainer;
 
 pub use dist_moe::{DistMoeLayer, LayerGrads, MoeLayerBuilder, MoeLayerState};
-pub use serve_loop::ServeLoop;
+pub use serve_loop::{ServeLoop, CTL_STEP, CTL_STOP, CTL_TAG};
 pub use trainer::{DistTrainer, MoeLayerTrainer, MoeStepStats, StepStats, Trainer};
 
 use crate::comm::{Comm, PendingAllReduce};

@@ -129,12 +129,24 @@ mod tests {
 
     #[test]
     fn control_tag_stays_clear_of_other_bands() {
+        use crate::fault::{gossip_tag, FAULT_SALT, FAULT_TAG};
         // collective tags: seq << 8 | code — reaching the control band
         // would take 2^51 collectives
         assert!(CTL_TAG > (1u64 << 40) << 8);
         // sub-group salt bands and the TCP keepalive sit above it
         assert!(CTL_TAG < 1 << 61);
         assert!(CTL_TAG < u64::MAX);
+        // the fault bands share bit 59 but never the exact tag: the
+        // gossip low byte is 2 (control is 1), and the survivor-group
+        // salt lives at bit 58
+        assert_ne!(FAULT_TAG, CTL_TAG);
+        assert_eq!(FAULT_TAG & CTL_TAG, 1 << 59);
+        for (epoch, round) in [(1u64, 0u64), (2, 3), (7, 11)] {
+            let t = gossip_tag(epoch, round);
+            assert_ne!(t, CTL_TAG);
+            assert_eq!(t & 0xff, 2, "gossip keeps its own low byte");
+        }
+        assert_eq!(FAULT_SALT & CTL_TAG, 0);
     }
 
     #[test]

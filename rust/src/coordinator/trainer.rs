@@ -9,6 +9,7 @@
 //! [`MoeLayerTrainer`] trains a builder-assembled expert-parallel
 //! [`DistMoeLayer`] directly, logging the load-balance loss per step.
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use super::{DistMoeLayer, ExpertMode, GradSync};
@@ -16,8 +17,9 @@ use crate::comm::Comm;
 use crate::config::CommConfig;
 use crate::data::Batch;
 use crate::error::{Error, Result};
+use crate::fault::Membership;
 use crate::metrics::Counters;
-use crate::model::{Adam, ParamStore};
+use crate::model::{load_tensors, save_tensors, Adam, ParamStore};
 use crate::moe::LoadMonitor;
 use crate::placement::{PlanDelta, Rebalancer};
 use crate::runtime::{Executable, ModelEntry, Runtime};
@@ -130,6 +132,9 @@ pub struct DistTrainer {
     grad_exe: Arc<Executable>,
     sync: GradSync,
     pub step: u64,
+    /// Checkpoint every this many steps (0 = off).
+    ckpt_interval: usize,
+    ckpt_dir: Option<String>,
 }
 
 impl DistTrainer {
@@ -163,7 +168,95 @@ impl DistTrainer {
         // so expert grads are averaged (mathematically identical to one
         // global expert fed all routed tokens — see coordinator docs).
         let sync = GradSync::world(workers, ExpertMode::Replicated).comm_config(comm_cfg);
-        Ok(DistTrainer { entry, params, opt, grad_exe, sync, step: 0 })
+        Ok(DistTrainer {
+            entry,
+            params,
+            opt,
+            grad_exe,
+            sync,
+            step: 0,
+            ckpt_interval: 0,
+            ckpt_dir: None,
+        })
+    }
+
+    /// Enable periodic checkpointing: every `interval` steps each rank
+    /// writes `rank<r>.fmoe` under `dir` atomically (`[fault]
+    /// ckpt_interval` / `ckpt_dir`).  `interval = 0` disables.
+    pub fn with_checkpointing(mut self, interval: usize, dir: &str) -> DistTrainer {
+        self.ckpt_interval = interval;
+        self.ckpt_dir = (!dir.is_empty()).then(|| dir.to_string());
+        self
+    }
+
+    /// Write this rank's full state — params, Adam moments, counters —
+    /// to `rank<r>.fmoe` under `dir` via the atomic tmp+rename writer.
+    pub fn save_checkpoint(&self, dir: &str, rank: usize) -> Result<()> {
+        let meta = TensorF32::from_vec(
+            &[2],
+            vec![self.opt.step as f32, self.step as f32],
+        )?;
+        let mut named: Vec<(String, &TensorF32)> =
+            Vec::with_capacity(3 * self.params.len() + 1);
+        for (e, t) in self.params.entries.iter().zip(&self.params.tensors) {
+            named.push((format!("p.{}", e.name), t));
+        }
+        for (i, t) in self.opt.m.iter().enumerate() {
+            named.push((format!("m{i}"), t));
+        }
+        for (i, t) in self.opt.v.iter().enumerate() {
+            named.push((format!("v{i}"), t));
+        }
+        named.push(("meta".into(), &meta));
+        save_tensors(MoeLayerTrainer::ckpt_path(dir, rank), &named)
+    }
+
+    /// Restore this rank's state from its `rank<r>.fmoe` under `dir`
+    /// (inverse of [`Self::save_checkpoint`]; the `--resume` path of
+    /// `fastmoe dist-moe`'s fused-trainer mode).
+    pub fn load_checkpoint(&mut self, dir: &str, rank: usize) -> Result<()> {
+        let path = MoeLayerTrainer::ckpt_path(dir, rank);
+        let tensors = load_tensors(&path)?;
+        let find = |key: &str| -> Result<&TensorF32> {
+            tensors
+                .iter()
+                .find(|(n, _)| n == key)
+                .map(|(_, t)| t)
+                .ok_or_else(|| {
+                    Error::Checkpoint(format!("`{key}` missing from {path:?}"))
+                })
+        };
+        let copy = |src: &TensorF32, dst: &mut TensorF32, key: &str| -> Result<()> {
+            if src.shape != dst.shape {
+                return Err(Error::Checkpoint(format!(
+                    "`{key}`: checkpoint shape {:?} vs model {:?}",
+                    src.shape, dst.shape
+                )));
+            }
+            dst.data.copy_from_slice(&src.data);
+            Ok(())
+        };
+        let names: Vec<String> =
+            self.params.entries.iter().map(|e| e.name.clone()).collect();
+        for (name, dst) in names.iter().zip(self.params.tensors.iter_mut()) {
+            let key = format!("p.{name}");
+            copy(find(&key)?, dst, &key)?;
+        }
+        for (i, dst) in self.opt.m.iter_mut().enumerate() {
+            let key = format!("m{i}");
+            copy(find(&key)?, dst, &key)?;
+        }
+        for (i, dst) in self.opt.v.iter_mut().enumerate() {
+            let key = format!("v{i}");
+            copy(find(&key)?, dst, &key)?;
+        }
+        let meta = find("meta")?;
+        if meta.data.len() != 2 {
+            return Err(Error::Checkpoint("bad meta tensor".into()));
+        }
+        self.opt.step = meta.data[0] as u64;
+        self.step = meta.data[1] as u64;
+        Ok(())
     }
 
     /// One synchronous distributed step. Returns the *global* mean loss.
@@ -204,6 +297,12 @@ impl DistTrainer {
             self.sync.sync(comm, &mut grads, &tags)?;
             // host Adam (bit-compatible with the fused in-graph update)
             self.opt.update(&mut self.params.tensors, &grads)?;
+        }
+
+        if self.ckpt_interval > 0 && self.step % self.ckpt_interval as u64 == 0 {
+            if let Some(dir) = self.ckpt_dir.clone() {
+                self.save_checkpoint(&dir, comm.rank())?;
+            }
         }
 
         // global mean loss for logging
@@ -252,6 +351,11 @@ pub struct MoeLayerTrainer {
     pub monitor: LoadMonitor,
     pub step: u64,
     rebalancer: Option<Rebalancer>,
+    /// Agreed membership while in degraded mode (`None` = full strength).
+    degraded: Option<Membership>,
+    /// Checkpoint every this many steps (0 = off).
+    ckpt_interval: usize,
+    ckpt_dir: Option<String>,
 }
 
 impl MoeLayerTrainer {
@@ -263,13 +367,31 @@ impl MoeLayerTrainer {
             .collect();
         let opt = Adam::new(&shapes, lr);
         let monitor = LoadMonitor::new(layer.workers * layer.ne_local);
-        MoeLayerTrainer { layer, opt, monitor, step: 0, rebalancer: None }
+        MoeLayerTrainer {
+            layer,
+            opt,
+            monitor,
+            step: 0,
+            rebalancer: None,
+            degraded: None,
+            ckpt_interval: 0,
+            ckpt_dir: None,
+        }
     }
 
     /// Attach a placement [`Rebalancer`]; every rank must attach an
     /// identically-configured one (the decision protocol is collective).
     pub fn with_placement(mut self, rebalancer: Rebalancer) -> MoeLayerTrainer {
         self.rebalancer = Some(rebalancer);
+        self
+    }
+
+    /// Enable periodic checkpointing: every `interval` steps each rank
+    /// writes `rank<r>.fmoe` under `dir` via the atomic tmp+rename path
+    /// (`[fault] ckpt_interval` / `ckpt_dir`).  `interval = 0` disables.
+    pub fn with_checkpointing(mut self, interval: usize, dir: &str) -> MoeLayerTrainer {
+        self.ckpt_interval = interval;
+        self.ckpt_dir = (!dir.is_empty()).then(|| dir.to_string());
         self
     }
 
@@ -311,18 +433,52 @@ impl MoeLayerTrainer {
         // token routed to it, so its local grads are final.  With
         // `[comm] grad_overlap` the backward already flew the gate-grad
         // bucket during the expert backward (`grads.gate_synced`) —
-        // same rings, same scale, bit-identical result.
+        // same rings, same scale, bit-identical result.  In degraded
+        // mode the reduction runs over the survivor sub-group instead,
+        // while the quarantined zombie burns the matching seqs (tag
+        // schedules stay world-aligned) and zeroes the balance-loss gate
+        // grads its drained forward still produced.
         let ws = comm.size();
-        if ws > 1 && !grads.gate_synced {
-            comm.all_reduce_sum(&mut grads.dwg.data)?;
-            comm.all_reduce_sum(&mut grads.dbg.data)?;
-            let scale = 1.0 / ws as f32;
-            for v in grads.dwg.data.iter_mut() {
-                *v *= scale;
+        match self.degraded.clone() {
+            Some(m) if m.is_dead(self.layer.rank) => {
+                // `all_reduce_sum_group` consumes one seq per call —
+                // except in the degenerate single-survivor group, where
+                // it early-returns before drawing any.
+                if m.survivors().len() > 1 {
+                    comm.next_seq();
+                    comm.next_seq();
+                }
+                for v in grads.dwg.data.iter_mut() {
+                    *v = 0.0;
+                }
+                for v in grads.dbg.data.iter_mut() {
+                    *v = 0.0;
+                }
             }
-            for v in grads.dbg.data.iter_mut() {
-                *v *= scale;
+            Some(m) => {
+                let g = m.survivors();
+                comm.all_reduce_sum_group(&mut grads.dwg.data, &g)?;
+                comm.all_reduce_sum_group(&mut grads.dbg.data, &g)?;
+                let scale = 1.0 / g.len() as f32;
+                for v in grads.dwg.data.iter_mut() {
+                    *v *= scale;
+                }
+                for v in grads.dbg.data.iter_mut() {
+                    *v *= scale;
+                }
             }
+            None if ws > 1 && !grads.gate_synced => {
+                comm.all_reduce_sum(&mut grads.dwg.data)?;
+                comm.all_reduce_sum(&mut grads.dbg.data)?;
+                let scale = 1.0 / ws as f32;
+                for v in grads.dwg.data.iter_mut() {
+                    *v *= scale;
+                }
+                for v in grads.dbg.data.iter_mut() {
+                    *v *= scale;
+                }
+            }
+            None => {}
         }
         self.monitor.record(&state.counts_kept);
         self.layer.apply_grads(&mut self.opt, &grads)?;
@@ -348,7 +504,212 @@ impl MoeLayerTrainer {
         // hand the step's padded batch + combine input back to the
         // layer's arena so the next step allocates nothing
         self.layer.recycle(state);
+        self.maybe_checkpoint()?;
         Ok(stats)
+    }
+
+    // ------------------------------------------------------------------
+    // Elastic fault recovery (`crate::fault`): degraded-mode entry,
+    // periodic checkpoints, and the rejoin choreography.
+    // ------------------------------------------------------------------
+
+    /// Current degraded-mode membership, if any.
+    pub fn degraded(&self) -> Option<&Membership> {
+        self.degraded.as_ref()
+    }
+
+    /// Enter degraded mode at a step boundary.  **Every rank** calls
+    /// this with the same agreed [`Membership`] (see
+    /// [`crate::fault::agree_membership`]): the layer quarantines the
+    /// dead rank (shadow-replica failover + score-masked drops), the
+    /// rebalancer freezes its windows and re-binds its all-reduce to the
+    /// survivor sub-group, and subsequent gate syncs run group-wise.
+    pub fn degrade(&mut self, m: &Membership) -> Result<()> {
+        if self.layer.grad_overlap {
+            return Err(Error::Config(
+                "degraded mode needs blocking gradient sync \
+                 ([comm] grad_overlap = false): the overlapped gate \
+                 bucket rings span the full world"
+                    .into(),
+            ));
+        }
+        if m.dead.len() != 1 {
+            return Err(Error::Config(format!(
+                "degraded mode supports exactly one dead rank, membership has {:?}",
+                m.dead
+            )));
+        }
+        self.layer.fail_rank(m.dead[0])?;
+        if let Some(reb) = self.rebalancer.as_mut() {
+            reb.freeze(true);
+            reb.bind_group(Some(m.survivors()));
+        }
+        self.degraded = Some(m.clone());
+        Ok(())
+    }
+
+    /// Per-rank checkpoint path under `dir`.
+    fn ckpt_path(dir: &str, rank: usize) -> PathBuf {
+        Path::new(dir).join(format!("rank{rank}.fmoe"))
+    }
+
+    /// Write this rank's full training state — layer params, Adam
+    /// moments, and the `[opt.step, trainer.step]` counters — to
+    /// `rank<r>.fmoe` under `dir` via the atomic tmp+rename writer.
+    pub fn save_checkpoint(&self, dir: &str) -> Result<()> {
+        let meta = TensorF32::from_vec(
+            &[2],
+            vec![self.opt.step as f32, self.step as f32],
+        )?;
+        let params = self.layer.params();
+        let mut named: Vec<(String, &TensorF32)> =
+            Vec::with_capacity(3 * params.len() + 1);
+        for (i, (name, t)) in params.iter().enumerate() {
+            named.push((format!("p{i}.{name}"), t));
+        }
+        for (i, t) in self.opt.m.iter().enumerate() {
+            named.push((format!("m{i}"), t));
+        }
+        for (i, t) in self.opt.v.iter().enumerate() {
+            named.push((format!("v{i}"), t));
+        }
+        named.push(("meta".into(), &meta));
+        save_tensors(Self::ckpt_path(dir, self.layer.rank), &named)
+    }
+
+    /// Restore this rank's state from its `rank<r>.fmoe` under `dir`
+    /// (inverse of [`Self::save_checkpoint`]; shapes must match).
+    pub fn load_checkpoint(&mut self, dir: &str) -> Result<()> {
+        let path = Self::ckpt_path(dir, self.layer.rank);
+        let tensors = load_tensors(&path)?;
+        let find = |key: &str| -> Result<&TensorF32> {
+            tensors
+                .iter()
+                .find(|(n, _)| n == key)
+                .map(|(_, t)| t)
+                .ok_or_else(|| {
+                    Error::Checkpoint(format!("`{key}` missing from {path:?}"))
+                })
+        };
+        let copy = |src: &TensorF32, dst: &mut TensorF32, key: &str| -> Result<()> {
+            if src.shape != dst.shape {
+                return Err(Error::Checkpoint(format!(
+                    "`{key}`: checkpoint shape {:?} vs model {:?}",
+                    src.shape, dst.shape
+                )));
+            }
+            dst.data.copy_from_slice(&src.data);
+            Ok(())
+        };
+        for (i, (name, dst)) in self.layer.params_mut().into_iter().enumerate() {
+            let key = format!("p{i}.{name}");
+            copy(find(&key)?, dst, &key)?;
+        }
+        for (i, dst) in self.opt.m.iter_mut().enumerate() {
+            let key = format!("m{i}");
+            copy(find(&key)?, dst, &key)?;
+        }
+        for (i, dst) in self.opt.v.iter_mut().enumerate() {
+            let key = format!("v{i}");
+            copy(find(&key)?, dst, &key)?;
+        }
+        let meta = find("meta")?;
+        if meta.data.len() != 2 {
+            return Err(Error::Checkpoint("bad meta tensor".into()));
+        }
+        // exact for any plausible step count (f32 is integral ≤ 2^24)
+        self.opt.step = meta.data[0] as u64;
+        self.step = meta.data[1] as u64;
+        Ok(())
+    }
+
+    /// Periodic-checkpoint hook, called at the end of every step.  A
+    /// quarantined zombie skips its turns: its drained state is not the
+    /// real training trajectory, and overwriting would destroy the
+    /// genuinely pre-death checkpoint its own rejoin restores from.
+    fn maybe_checkpoint(&mut self) -> Result<()> {
+        if self.ckpt_interval == 0 || self.step % self.ckpt_interval as u64 != 0 {
+            return Ok(());
+        }
+        let Some(dir) = self.ckpt_dir.clone() else { return Ok(()) };
+        if let Some(m) = &self.degraded {
+            if m.is_dead(self.layer.rank) {
+                return Ok(());
+            }
+        }
+        self.save_checkpoint(&dir)
+    }
+
+    /// The rejoin choreography — **every rank** calls this at the same
+    /// step boundary to bring the quarantined rank back and return to
+    /// full strength:
+    ///
+    /// 1. the dead rank restores params + Adam slots + counters from its
+    ///    latest periodic checkpoint (skipped when none exists yet);
+    /// 2. every shadow-covered expert the dead rank owns — whose
+    ///    replicas kept training past that checkpoint — streams back
+    ///    from its lowest live host
+    ///    ([`DistMoeLayer::transfer_slots_from_shadows`]);
+    /// 3. the replicated gate (+ its Adam slots + both step counters) is
+    ///    broadcast from the lowest survivor; only the dead rank applies
+    ///    it, fast-forwarding to the survivors' trajectory;
+    /// 4. the quarantine lifts everywhere: routing, masks, rebalancer
+    ///    windows and gate syncs return to the full world.
+    pub fn rejoin_restore(
+        &mut self,
+        comm: &mut impl Comm,
+        ckpt_dir: Option<&str>,
+    ) -> Result<()> {
+        let Some(m) = self.degraded.clone() else {
+            return Err(Error::Config("rejoin_restore: not in degraded mode".into()));
+        };
+        let dead = m.dead[0];
+        let me_dead = self.layer.rank == dead;
+        if me_dead {
+            if let Some(dir) = ckpt_dir {
+                if Self::ckpt_path(dir, self.layer.rank).exists() {
+                    self.load_checkpoint(dir)?;
+                }
+            }
+        }
+        self.layer.transfer_slots_from_shadows(comm, &mut self.opt)?;
+        // Gate broadcast: wg ++ bg ++ Adam m/v of both ++ counters.  All
+        // ranks run the collective (one seq); only the dead rank lands it.
+        let root = m.survivors()[0];
+        let mut buf: Vec<f32> = Vec::new();
+        buf.extend_from_slice(&self.layer.wg.data);
+        buf.extend_from_slice(&self.layer.bg.data);
+        for slot in 0..2 {
+            buf.extend_from_slice(&self.opt.m[slot].data);
+        }
+        for slot in 0..2 {
+            buf.extend_from_slice(&self.opt.v[slot].data);
+        }
+        buf.push(self.opt.step as f32);
+        buf.push(self.step as f32);
+        comm.broadcast(&mut buf, root)?;
+        if me_dead {
+            let mut pos = 0usize;
+            let mut take = |dst: &mut Vec<f32>| {
+                dst.copy_from_slice(&buf[pos..pos + dst.len()]);
+                pos += dst.len();
+            };
+            take(&mut self.layer.wg.data);
+            take(&mut self.layer.bg.data);
+            take(&mut self.opt.m[0].data);
+            take(&mut self.opt.m[1].data);
+            take(&mut self.opt.v[0].data);
+            take(&mut self.opt.v[1].data);
+            self.opt.step = buf[pos] as u64;
+            self.step = buf[pos + 1] as u64;
+        }
+        self.layer.restore_rank()?;
+        if let Some(reb) = self.rebalancer.as_mut() {
+            reb.freeze(false);
+            reb.bind_group(None);
+        }
+        self.degraded = None;
+        Ok(())
     }
 }
 

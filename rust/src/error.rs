@@ -35,6 +35,9 @@ pub enum Error {
     #[error("worker {rank} failed: {msg}")]
     Worker { rank: usize, msg: String },
 
+    #[error("recv timeout: no message from peer {peer} on tag {tag:#x} within {ms}ms")]
+    Timeout { peer: usize, tag: u64, ms: u64 },
+
     #[error("checkpoint error: {0}")]
     Checkpoint(String),
 

@@ -1,0 +1,624 @@
+//! Elastic fault recovery — from *contained* worker death to *survived*.
+//!
+//! The failure machinery built up through PRs 3–5 (TCP keepalive probes,
+//! death-aware receives, `Error::Worker` containment in
+//! [`run_workers`](crate::comm::run_workers)) only detects a dead rank
+//! and unwinds; every death still ends the run.  This module adds the
+//! recovery layer the ROADMAP names as the robustness north-star:
+//!
+//! * [`Membership`] + [`agree_membership`] — a dissemination-style
+//!   gossip of suspected-dead bitsets over the reserved [`FAULT_TAG`]
+//!   band.  Survivors exchange snapshots for a fixed `world` rounds
+//!   (monotone union ⇒ convergence in ≤ world−1), folding send *and*
+//!   recv failures into the suspected set as they happen, so organic
+//!   detection (a peer's handle is gone) and schedule-injected
+//!   suspicion (deterministic chaos) flow through one code path.  The
+//!   gossip runs on raw sends in a reserved band and consumes **zero**
+//!   collective sequence numbers — the world tag namespace stays in
+//!   lockstep across ranks that did and did not gossip.
+//! * [`RecoverMode`] — the `[fault] recover` policy: `abort` (today's
+//!   behaviour), `degrade` (quarantine the dead rank, reroute its
+//!   experts to shadow replicas or zero-weight drops, keep training),
+//!   `rejoin` (degrade, then restore the rank from checkpoint +
+//!   live peer-transfer and return to full strength).
+//! * [`ChaosSchedule`] — the deterministic fault harness: `kill@N:rR`,
+//!   `delay@N:rR:MS`, `rejoin@N:rR` events parsed from `[fault] chaos`
+//!   and fired at step boundaries by [`Recovery::poll`], identically on
+//!   the thread and tcp backends.  Events fire at the **start** of step
+//!   `N` (the step executes under the new membership) so recovery runs
+//!   are pinnable bit-for-bit against planned-handover references —
+//!   no sleeps-and-hope.
+//! * [`Recovery`] — the per-rank driver the trainers poll once per step
+//!   boundary: it merges schedule events with organically
+//!   [`suspect`](Recovery::suspect)ed ranks and emits the
+//!   [`RecoveryAction`] the trainer executes (degrade / rejoin /
+//!   abort).
+//!
+//! Failure model: a *quarantined* rank stays in the world-sized
+//! collectives as a drained zombie (its batch contributes zero weight
+//! and zero gradient) so that survivor tag namespaces never diverge —
+//! this models compute-level failure (accelerator loss, wedged expert)
+//! where the host process survives.  True process death on the thread
+//! backend is also survived: the gossip's death-aware receives fold the
+//! dropped handle into the suspected set and the survivors continue —
+//! but then the dead rank's own training loop is simply gone, and a
+//! full-strength return needs the `rejoin` path (fresh process,
+//! `--resume`).  False suspicion of a *live* rank is unsupported: the
+//! gossip skips suspected peers entirely, so a live-but-suspected rank
+//! would wait forever on peers that no longer talk to it.  On these
+//! backends sends to live peers do not fail transiently, so suspicion
+//! is always genuine (injected or observed).
+
+use crate::comm::{Comm, ProcessGroup};
+use crate::error::{Error, Result};
+
+/// Reserved tag band of the membership gossip.  Low byte `2` keeps the
+/// band disjoint from every collective code (low byte 0–9, 11, 64+,
+/// 130/131 all ride `(seq << 8) | code` with seq ≥ 1, so their bit 59
+/// is clear at any realistic seq), from the serve control band
+/// `CTL_TAG = (1 << 59) | 1`, from the shadow-group salts (bit 60), the
+/// topology salts (bits 61/62) and the keepalive tag (`u64::MAX`).
+pub const FAULT_TAG: u64 = (1 << 59) | 2;
+
+/// Tag-space salt of the survivor [`ProcessGroup`] a degraded run
+/// re-binds its collectives to — its own band, disjoint from the
+/// shadow (bit 60) and topology (bits 61/62) salts.
+pub const FAULT_SALT: u64 = 1 << 58;
+
+/// Tag of gossip round `round` in membership epoch `epoch`: rounds in
+/// bits 8–19, epochs in bits 20–58, the [`FAULT_TAG`] marker in bit 59
+/// + low byte.  Distinct epochs (successive failures) and rounds never
+/// collide, and parked stale messages can never be mistaken for a
+/// collective.
+pub fn gossip_tag(epoch: u64, round: u64) -> u64 {
+    debug_assert!(round < (1 << 12), "gossip round fits 12 bits");
+    FAULT_TAG | (epoch << 20) | (round << 8)
+}
+
+/// The `[fault] recover` policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoverMode {
+    /// Detect and unwind — the pre-fault behaviour.
+    Abort,
+    /// Quarantine the dead rank and keep training on the survivors.
+    Degrade,
+    /// Degrade, then restore the rank (checkpoint + peer-transfer) and
+    /// return to full strength at the scheduled reconnect step.
+    Rejoin,
+}
+
+impl RecoverMode {
+    pub const KINDS: &'static [&'static str] = &["abort", "degrade", "rejoin"];
+
+    pub fn parse(s: &str) -> Result<RecoverMode> {
+        match s {
+            "abort" => Ok(RecoverMode::Abort),
+            "degrade" => Ok(RecoverMode::Degrade),
+            "rejoin" => Ok(RecoverMode::Rejoin),
+            other => Err(Error::Config(format!(
+                "unknown recover mode {other:?} (expected one of {:?})",
+                Self::KINDS
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoverMode::Abort => "abort",
+            RecoverMode::Degrade => "degrade",
+            RecoverMode::Rejoin => "rejoin",
+        }
+    }
+}
+
+/// An agreed view of which ranks are dead, shared by every surviving
+/// rank (and assumed, identically, by a quarantined one).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Membership {
+    /// Full world size the view is over.
+    pub world: usize,
+    /// Dead ranks, ascending.
+    pub dead: Vec<usize>,
+}
+
+impl Membership {
+    /// Build the view without gossiping — the quarantined rank's (and
+    /// the chaos tests' reference runs') entry point.
+    pub fn assume(world: usize, dead: &[usize]) -> Membership {
+        let mut dead: Vec<usize> = dead.iter().copied().filter(|&r| r < world).collect();
+        dead.sort_unstable();
+        dead.dedup();
+        Membership { world, dead }
+    }
+
+    pub fn is_dead(&self, rank: usize) -> bool {
+        self.dead.binary_search(&rank).is_ok()
+    }
+
+    /// Live ranks, ascending.
+    pub fn survivors(&self) -> Vec<usize> {
+        (0..self.world).filter(|&r| !self.is_dead(r)).collect()
+    }
+
+    /// The survivor sub-group collectives re-bind to (`rank` must be a
+    /// survivor), salted into the [`FAULT_SALT`] band.
+    pub fn survivor_group(&self, rank: usize) -> Result<ProcessGroup> {
+        ProcessGroup::new(self.survivors(), rank, FAULT_SALT)
+    }
+}
+
+/// Dissemination-style membership agreement over the [`FAULT_TAG`]
+/// band: every rank snapshots its suspected-dead bitset as an f32 0/1
+/// vector, exchanges it with every peer it still believes alive, and
+/// folds arrivals (and send/recv *failures* — organic death detection)
+/// into its own set, for a fixed `world` rounds.  The union is
+/// monotone, so all survivors converge on the same set; suspected
+/// peers are skipped entirely, so a gossip round never blocks on a
+/// dead rank.  Consumes no collective sequence numbers.
+pub fn agree_membership<C: Comm + ?Sized>(
+    comm: &mut C,
+    suspected: &[usize],
+    epoch: u64,
+) -> Result<Membership> {
+    let world = comm.size();
+    let me = comm.rank();
+    let mut sus = vec![false; world];
+    for &r in suspected {
+        if r < world {
+            sus[r] = true;
+        }
+    }
+    if sus[me] {
+        return Err(Error::Comm(format!(
+            "membership: rank {me} gossiping while suspecting itself \
+             (a quarantined rank assumes, it does not agree)"
+        )));
+    }
+    for round in 0..world as u64 {
+        let tag = gossip_tag(epoch, round);
+        let snapshot: Vec<f32> =
+            sus.iter().map(|&d| if d { 1.0 } else { 0.0 }).collect();
+        // send first (failures mark the peer before we'd block on it)…
+        for p in 0..world {
+            if p == me || sus[p] {
+                continue;
+            }
+            if comm.send(p, tag, snapshot.clone()).is_err() {
+                sus[p] = true;
+            }
+        }
+        // …then fold arrivals; a recv failure (death-aware receive,
+        // tcp read error) is this round's detection of that peer
+        for p in 0..world {
+            if p == me || sus[p] {
+                continue;
+            }
+            match comm.recv(p, tag) {
+                Ok(bits) => {
+                    if bits.len() != world {
+                        return Err(Error::Comm(format!(
+                            "membership: rank {p} gossip of {} bits, world {world}",
+                            bits.len()
+                        )));
+                    }
+                    for (r, s) in sus.iter_mut().enumerate() {
+                        if r != me && bits[r] != 0.0 {
+                            *s = true;
+                        }
+                    }
+                }
+                Err(_) => sus[p] = true,
+            }
+        }
+    }
+    let dead: Vec<usize> =
+        (0..world).filter(|&r| sus[r]).collect();
+    Ok(Membership { world, dead })
+}
+
+/// One event of a deterministic fault schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ChaosEvent {
+    /// Rank `rank` dies at the start of step `step`.
+    Kill { rank: usize, step: u64 },
+    /// Rank `rank` sleeps `millis` ms at the start of step `step` —
+    /// a straggler/timeout probe, membership-neutral.
+    Delay { rank: usize, step: u64, millis: u64 },
+    /// Rank `rank` reconnects at the start of step `step` (meaningful
+    /// under [`RecoverMode::Rejoin`]).
+    Rejoin { rank: usize, step: u64 },
+}
+
+/// A parsed `[fault] chaos` schedule: comma-separated
+/// `kill@STEP:rRANK`, `delay@STEP:rRANK:MILLIS`, `rejoin@STEP:rRANK`
+/// events, e.g. `"kill@3:r1,rejoin@5:r1"`.  Purely data — the same
+/// schedule drives the thread and tcp backends identically.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChaosSchedule {
+    events: Vec<ChaosEvent>,
+}
+
+impl ChaosSchedule {
+    pub fn parse(spec: &str) -> Result<ChaosSchedule> {
+        let mut events = Vec::new();
+        for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (kind, rest) = item.split_once('@').ok_or_else(|| {
+                Error::Config(format!("chaos event {item:?}: expected KIND@STEP:rRANK"))
+            })?;
+            let mut parts = rest.split(':');
+            let step: u64 = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| {
+                    Error::Config(format!("chaos event {item:?}: bad step"))
+                })?;
+            let rank: usize = parts
+                .next()
+                .and_then(|r| r.strip_prefix('r'))
+                .and_then(|r| r.parse().ok())
+                .ok_or_else(|| {
+                    Error::Config(format!("chaos event {item:?}: bad rank (want rN)"))
+                })?;
+            let millis = parts.next();
+            let event = match (kind, millis) {
+                ("kill", None) => ChaosEvent::Kill { rank, step },
+                ("rejoin", None) => ChaosEvent::Rejoin { rank, step },
+                ("delay", Some(ms)) => ChaosEvent::Delay {
+                    rank,
+                    step,
+                    millis: ms.parse().map_err(|_| {
+                        Error::Config(format!("chaos event {item:?}: bad millis"))
+                    })?,
+                },
+                _ => {
+                    return Err(Error::Config(format!(
+                        "chaos event {item:?}: unknown kind or arity \
+                         (kill@N:rR, delay@N:rR:MS, rejoin@N:rR)"
+                    )))
+                }
+            };
+            if parts.next().is_some() {
+                return Err(Error::Config(format!(
+                    "chaos event {item:?}: trailing fields"
+                )));
+            }
+            events.push(event);
+        }
+        Ok(ChaosSchedule { events })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[ChaosEvent] {
+        &self.events
+    }
+
+    /// Ranks killed at the start of `step`, ascending.
+    pub fn kills_at(&self, step: u64) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                ChaosEvent::Kill { rank, step: s } if *s == step => Some(*rank),
+                _ => None,
+            })
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Ranks rejoining at the start of `step`, ascending.
+    pub fn rejoins_at(&self, step: u64) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                ChaosEvent::Rejoin { rank, step: s } if *s == step => Some(*rank),
+                _ => None,
+            })
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Total injected delay for `rank` at the start of `step`, if any.
+    pub fn delay_for(&self, rank: usize, step: u64) -> Option<u64> {
+        let ms: u64 = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                ChaosEvent::Delay { rank: r, step: s, millis }
+                    if *r == rank && *s == step =>
+                {
+                    Some(*millis)
+                }
+                _ => None,
+            })
+            .sum();
+        (ms > 0).then_some(ms)
+    }
+}
+
+/// What the trainer must do at this step boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RecoveryAction {
+    /// Agreed membership changed: quarantine the dead rank(s) and
+    /// continue on the survivors.
+    Degrade(Membership),
+    /// The named rank rejoins: restore it and return to full strength.
+    Rejoin(usize),
+    /// `recover = "abort"`: unwind with the named rank as the cause.
+    Abort(usize),
+}
+
+/// The per-rank recovery driver: polled once per step boundary, it
+/// merges [`ChaosSchedule`] events with organically
+/// [`suspect`](Recovery::suspect)ed ranks and emits the action the
+/// trainer executes.  Every rank polls with the same step, so schedule
+/// events fire on all ranks at the same boundary — the determinism the
+/// bitwise recovery pins stand on.
+#[derive(Debug)]
+pub struct Recovery {
+    pub mode: RecoverMode,
+    schedule: ChaosSchedule,
+    epoch: u64,
+    membership: Option<Membership>,
+    pending: Vec<usize>,
+}
+
+impl Recovery {
+    pub fn new(mode: RecoverMode, schedule: ChaosSchedule) -> Recovery {
+        Recovery { mode, schedule, epoch: 0, membership: None, pending: Vec::new() }
+    }
+
+    /// Build from the `[fault]` config section.
+    pub fn from_config(cfg: &crate::config::FaultConfig) -> Result<Recovery> {
+        Ok(Recovery::new(
+            RecoverMode::parse(&cfg.recover)?,
+            ChaosSchedule::parse(&cfg.chaos)?,
+        ))
+    }
+
+    /// The current degraded view, if any.
+    pub fn degraded(&self) -> Option<&Membership> {
+        self.membership.as_ref()
+    }
+
+    /// Fold an organically-detected failure (e.g. an
+    /// [`Error::Worker`]/[`Error::Timeout`] observed mid-step) into the
+    /// next [`poll`](Recovery::poll).
+    pub fn suspect(&mut self, rank: usize) {
+        if !self.pending.contains(&rank) {
+            self.pending.push(rank);
+        }
+    }
+
+    /// Fire the step-`step` boundary: injected delays sleep here,
+    /// rejoin events (under [`RecoverMode::Rejoin`], while degraded)
+    /// return [`RecoveryAction::Rejoin`], and kills — injected or
+    /// [`suspect`](Recovery::suspect)ed — run membership agreement
+    /// (survivors gossip, quarantined ranks assume) and return
+    /// [`RecoveryAction::Degrade`] / [`RecoveryAction::Abort`].
+    pub fn poll<C: Comm + ?Sized>(
+        &mut self,
+        comm: &mut C,
+        step: u64,
+    ) -> Result<Option<RecoveryAction>> {
+        if let Some(ms) = self.schedule.delay_for(comm.rank(), step) {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+        if self.membership.is_some() && self.mode == RecoverMode::Rejoin {
+            if let Some(&r) = self.schedule.rejoins_at(step).first() {
+                self.membership = None;
+                return Ok(Some(RecoveryAction::Rejoin(r)));
+            }
+        }
+        let mut suspects: Vec<usize> = self.pending.drain(..).collect();
+        suspects.extend(self.schedule.kills_at(step));
+        suspects.sort_unstable();
+        suspects.dedup();
+        if suspects.is_empty() {
+            return Ok(None);
+        }
+        if self.mode == RecoverMode::Abort {
+            return Ok(Some(RecoveryAction::Abort(suspects[0])));
+        }
+        self.epoch += 1;
+        let m = if suspects.contains(&comm.rank()) {
+            // the quarantined rank does not gossip — it assumes the
+            // same view the survivors will agree on
+            Membership::assume(comm.size(), &suspects)
+        } else {
+            agree_membership(comm, &suspects, self.epoch)?
+        };
+        self.membership = Some(m.clone());
+        Ok(Some(RecoveryAction::Degrade(m)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_workers;
+
+    #[test]
+    fn recover_mode_parses_and_names() {
+        for &k in RecoverMode::KINDS {
+            assert_eq!(RecoverMode::parse(k).unwrap().name(), k);
+        }
+        assert!(RecoverMode::parse("retry").is_err());
+    }
+
+    #[test]
+    fn fault_band_is_disjoint_from_every_other_band() {
+        // serve control band: (1 << 59) | 1 — same bit, different low byte
+        assert_eq!(FAULT_TAG & 0xff, 2);
+        assert_ne!(FAULT_TAG, (1 << 59) | 1);
+        // collective tags are (seq << 8) | code with code ≤ 131 and a
+        // seq far below 2^51, so bit 59 is never set on them
+        for code in [0u64, 1, 2, 7, 8, 9, 11, 64, 130, 131] {
+            assert_eq!(((1_000_000u64 << 8) | code) & (1 << 59), 0);
+        }
+        // gossip tags stay inside the bit-59 band for sane epochs/rounds
+        let t = gossip_tag(3, 2);
+        assert_eq!(t & (1 << 59), 1 << 59);
+        assert_eq!(t & 0xff, 2);
+        assert_eq!(t & (0b1111 << 60), 0, "clear of shadow/topology salts");
+        assert_ne!(gossip_tag(1, 0), gossip_tag(2, 0));
+        assert_ne!(gossip_tag(1, 0), gossip_tag(1, 1));
+        // the survivor-group salt is its own band too
+        assert_eq!(FAULT_SALT & FAULT_TAG, 0);
+        assert_eq!(FAULT_SALT & (0b111 << 60), 0);
+    }
+
+    #[test]
+    fn chaos_schedule_parses_and_queries() {
+        let s = ChaosSchedule::parse("kill@5:r1, delay@3:r0:20 ,rejoin@9:r1").unwrap();
+        assert_eq!(s.events().len(), 3);
+        assert_eq!(s.kills_at(5), vec![1]);
+        assert!(s.kills_at(3).is_empty());
+        assert_eq!(s.rejoins_at(9), vec![1]);
+        assert_eq!(s.delay_for(0, 3), Some(20));
+        assert_eq!(s.delay_for(1, 3), None);
+        assert!(ChaosSchedule::parse("").unwrap().is_empty());
+        // duplicate kills collapse
+        let s = ChaosSchedule::parse("kill@2:r3,kill@2:r1,kill@2:r3").unwrap();
+        assert_eq!(s.kills_at(2), vec![1, 3]);
+        for bad in [
+            "boom@1:r0",
+            "kill@x:r0",
+            "kill@1:q0",
+            "kill@1:r0:7",
+            "delay@1:r0",
+            "delay@1:r0:ms",
+            "rejoin@1:r0:9",
+            "kill@1:r0:1:2",
+        ] {
+            assert!(ChaosSchedule::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn membership_assume_and_queries() {
+        let m = Membership::assume(4, &[2, 2, 9]);
+        assert_eq!(m.dead, vec![2]);
+        assert!(m.is_dead(2) && !m.is_dead(1));
+        assert_eq!(m.survivors(), vec![0, 1, 3]);
+        let g = m.survivor_group(3).unwrap();
+        assert_eq!(g.ranks(), &[0, 1, 3]);
+        assert_eq!(g.rank(), 2);
+        assert!(m.survivor_group(2).is_err(), "dead rank has no group slot");
+    }
+
+    #[test]
+    fn injected_suspicion_agrees_without_touching_the_dead_rank() {
+        // the chaos path: every survivor starts from the same injected
+        // suspicion, so the dead rank is never sent to or waited on —
+        // here rank 3 is a quarantined zombie that only assumes
+        run_workers(4, |mut h| {
+            let m = if h.rank() == 3 {
+                Membership::assume(h.size(), &[3])
+            } else {
+                agree_membership(&mut h, &[3], 1)?
+            };
+            assert_eq!(m, Membership::assume(4, &[3]));
+            assert_eq!(m.survivors(), vec![0, 1, 2]);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn organic_death_is_detected_and_agreed() {
+        // rank 2 exits immediately (its handle drops); ranks 0 and 1
+        // start with NO suspicion and must still converge on {2} via
+        // send/recv failures folding into the gossip — the death-aware
+        // receive turns the dropped handle into suspicion within one
+        // round, and the next round spreads it
+        run_workers(3, |mut h| {
+            if h.rank() == 2 {
+                return Ok(());
+            }
+            let m = agree_membership(&mut h, &[], 1)?;
+            assert_eq!(m, Membership::assume(3, &[2]), "rank {}", h.rank());
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn gossip_consumes_no_collective_seqs() {
+        // the reserved band must leave the world tag namespace in
+        // lockstep: a collective issued *after* agreement still works
+        run_workers(4, |mut h| {
+            let m = if h.rank() == 1 {
+                Membership::assume(h.size(), &[1])
+            } else {
+                agree_membership(&mut h, &[1], 1)?
+            };
+            let survivors = m.survivors();
+            let mut buf = vec![(h.rank() + 1) as f32; 3];
+            if h.rank() != 1 {
+                h.all_reduce_sum_group(&mut buf, &survivors)?;
+                // 1 + 3 + 4 = 8
+                assert!(buf.iter().all(|&x| x == 8.0), "{buf:?}");
+            } else {
+                // the zombie burns the matching seq (survivor group > 1)
+                let _ = h.next_seq();
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn recovery_poll_fires_schedule_events() {
+        run_workers(2, |mut h| {
+            let sched = ChaosSchedule::parse("kill@3:r1,rejoin@5:r1").unwrap();
+            let mut rec = Recovery::new(RecoverMode::Rejoin, sched);
+            assert_eq!(rec.poll(&mut h, 0)?, None);
+            assert!(rec.degraded().is_none());
+            let want = Membership::assume(2, &[1]);
+            match rec.poll(&mut h, 3)? {
+                Some(RecoveryAction::Degrade(m)) => assert_eq!(m, want),
+                other => panic!("rank {}: {other:?}", h.rank()),
+            }
+            assert_eq!(rec.degraded(), Some(&want));
+            assert_eq!(rec.poll(&mut h, 4)?, None);
+            assert_eq!(rec.poll(&mut h, 5)?, Some(RecoveryAction::Rejoin(1)));
+            assert!(rec.degraded().is_none());
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn recovery_abort_mode_and_organic_suspicion() {
+        run_workers(2, |mut h| {
+            // abort mode: a kill returns Abort without gossiping
+            let sched = ChaosSchedule::parse("kill@2:r0").unwrap();
+            let mut rec = Recovery::new(RecoverMode::Abort, sched);
+            assert_eq!(rec.poll(&mut h, 2)?, Some(RecoveryAction::Abort(0)));
+            // organic suspicion folds into the next poll
+            let mut rec =
+                Recovery::new(RecoverMode::Degrade, ChaosSchedule::default());
+            rec.suspect(if h.rank() == 0 { 1 } else { 0 });
+            // each rank suspects the other, so each gossips over a
+            // world with no believed-alive peers — agreement degenerates
+            // to its own (asymmetric) view without blocking
+            let got = rec.poll(&mut h, 0)?;
+            match got {
+                Some(RecoveryAction::Degrade(m)) => {
+                    assert_eq!(m.dead, vec![1 - h.rank()]);
+                }
+                other => panic!("{other:?}"),
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}

@@ -31,14 +31,15 @@ use std::sync::Arc;
 use fastmoe::cli::{Args, Usage};
 use fastmoe::comm::{self, Comm, TopoComm};
 use fastmoe::config::{
-    fmoefy, CommConfig, ConfigFile, ModelConfig, MoeConfig, PlacementConfig,
-    ServeConfig, TrainConfig,
+    fmoefy, CommConfig, ConfigFile, FaultConfig, ModelConfig, MoeConfig,
+    PlacementConfig, ServeConfig, TrainConfig,
 };
 use fastmoe::coordinator::{
     DistTrainer, MoeLayerBuilder, MoeLayerTrainer, ServeLoop, Trainer,
 };
 use fastmoe::data::{BatchIter, Corpus};
 use fastmoe::error::Result;
+use fastmoe::fault::{Recovery, RecoveryAction};
 use fastmoe::metrics::{Counters, CsvWriter, Histogram, Stopwatch};
 use fastmoe::serve::{run_thread_daemon, ClientConn, Reply, ServeDaemon};
 use fastmoe::model::save_checkpoint;
@@ -55,8 +56,8 @@ fn main() {
         commands: vec![
             ("info", "print artifact and model inventory"),
             ("train", "single-worker fused training loop (Figure 7)"),
-            ("dist-train", "multi-worker training with tag-aware grad sync (--grad-overlap --bucket-kb N --topology flat|hier --nodes N)"),
-            ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk, --overlap --chunks N [0=adaptive] --chunk-policy mean|max --no-pool --progress --grad-overlap --topology flat|hier --nodes N --local-size N --placement static|shadow|migrate --placement-threshold R --placement-window N)"),
+            ("dist-train", "multi-worker training with tag-aware grad sync (--grad-overlap --bucket-kb N --topology flat|hier --nodes N --ckpt-interval N --ckpt-dir D --resume D)"),
+            ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk, --overlap --chunks N [0=adaptive] --chunk-policy mean|max --no-pool --progress --grad-overlap --topology flat|hier --nodes N --local-size N --placement static|shadow|migrate --placement-threshold R --placement-window N --recover abort|degrade|rejoin --ckpt-interval N --ckpt-dir D --resume D --recv-timeout-ms N --chaos \"kill@N:rR,…\")"),
             ("fmoefy", "Listing-1: dense config -> MoE config at equal FLOPs"),
             ("serve", "long-lived inference daemon: continuous batching over resident expert-parallel workers (--workers W --serve-port P --max-batch N --queue-depth N --idle-ms N --backend local|tcp --hosts a:p,b:p)"),
             ("client", "load generator for `serve` (--addr host:port --requests N --rows R --dm D --concurrency C --shutdown)"),
@@ -198,6 +199,8 @@ fn dist_train(args: &Args) -> Result<()> {
     let cfg = train_config(args)?;
     let workers = args.usize_or("workers", 2)?;
     let comm_cfg = CommConfig::from_args(args)?;
+    let fault_cfg = FaultConfig::from_args(args)?;
+    let resume = args.get("resume").map(String::from);
     let rt = Arc::new(Runtime::open_default()?);
     println!(
         "dist-train: {} workers, model {}, {} steps, grad sync {}",
@@ -218,7 +221,11 @@ fn dist_train(args: &Args) -> Result<()> {
         // [comm] topology selects the collective routing (hier = tree
         // all-reduce under the bucketed sync); flat is a pass-through
         let mut h = TopoComm::new(h, comm_cfg.topology_for(workers)?)?;
-        let mut tr = DistTrainer::with_comm(&rt, &model, seed, workers, lr, &comm_cfg)?;
+        let mut tr = DistTrainer::with_comm(&rt, &model, seed, workers, lr, &comm_cfg)?
+            .with_checkpointing(fault_cfg.ckpt_interval, &fault_cfg.ckpt_dir);
+        if let Some(dir) = &resume {
+            tr.load_checkpoint(dir, h.rank())?;
+        }
         let vocab = tr.entry.config_usize("vocab").unwrap_or(256);
         let seq = tr.entry.config_usize("seq").unwrap_or(128);
         let batch = tr.entry.config_usize("batch").unwrap_or(4);
@@ -275,6 +282,7 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
     let moe_cfg = MoeConfig::from_args(args)?;
     let comm_cfg = CommConfig::from_args(args)?;
     let place_cfg = PlacementConfig::from_args(args)?;
+    let fault_cfg = FaultConfig::from_args(args)?;
     let exe = std::env::current_exe()?;
     println!("dist-moe (tcp): spawning {workers} worker processes on ports {port}..");
     let mut children = Vec::new();
@@ -300,7 +308,19 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
             "--placement-threshold".into(), place_cfg.threshold.to_string(),
             "--placement-window".into(), place_cfg.window.to_string(),
             "--lr".into(), args.f64_or("lr", 1e-3)?.to_string(),
+            "--recover".into(), fault_cfg.recover.clone(),
+            "--ckpt-interval".into(), fault_cfg.ckpt_interval.to_string(),
+            "--ckpt-dir".into(), fault_cfg.ckpt_dir.clone(),
+            "--recv-timeout-ms".into(), fault_cfg.recv_timeout_ms.to_string(),
         ];
+        if !fault_cfg.chaos.is_empty() {
+            argv.push("--chaos".into());
+            argv.push(fault_cfg.chaos.clone());
+        }
+        if let Some(dir) = args.get("resume") {
+            argv.push("--resume".into());
+            argv.push(dir.to_string());
+        }
         if let Some(h) = &hosts {
             argv.push("--hosts".into());
             argv.push(h.join(","));
@@ -341,9 +361,16 @@ fn tcp_worker(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 7)?;
     let port = args.usize_or("port", 47500)? as u16;
     let comm_cfg = CommConfig::from_args(args)?;
+    let fault_cfg = FaultConfig::from_args(args)?;
     let hosts = mesh_hosts(args, args.usize_or("workers", 2)?, port);
     let workers = hosts.len();
     let mut group = fastmoe::comm::tcp::TcpGroup::connect(rank, &hosts)?;
+    if fault_cfg.recv_timeout_ms > 0 {
+        // a peer silent past the deadline surfaces Error::Timeout
+        group.set_recv_timeout(Some(std::time::Duration::from_millis(
+            fault_cfg.recv_timeout_ms,
+        )));
+    }
     if comm_cfg.progress {
         // drain socket arrivals during expert compute (reader threads)
         group.enable_progress();
@@ -359,17 +386,41 @@ fn tcp_worker(args: &Args) -> Result<()> {
     layer.warm()?;
     let mut counters = Counters::new();
     let place_cfg = PlacementConfig::from_args(args)?;
-    if place_cfg.policy != "static" {
-        // dynamic placement moves optimiser state with the experts, so
-        // it needs the trainer loop rather than the raw fwd/bwd demo
+    let fault_active = fault_cfg.recover != "abort"
+        || !fault_cfg.chaos.is_empty()
+        || fault_cfg.ckpt_interval > 0
+        || args.get("resume").is_some();
+    if place_cfg.policy != "static" || fault_active {
+        // dynamic placement moves optimiser state with the experts, and
+        // fault recovery needs checkpoints + degraded-mode gate syncs,
+        // so both need the trainer loop rather than the raw fwd/bwd demo
         let lr = args.f64_or("lr", 1e-3)? as f32;
         let n_expert = workers * layer.ne_local;
         let mut tr = MoeLayerTrainer::new(layer, lr)
-            .with_placement(Rebalancer::from_config(&place_cfg, n_expert)?);
+            .with_placement(Rebalancer::from_config(&place_cfg, n_expert)?)
+            .with_checkpointing(fault_cfg.ckpt_interval, &fault_cfg.ckpt_dir);
+        if let Some(dir) = args.get("resume") {
+            tr.load_checkpoint(dir)?;
+        }
+        let mut rec = Recovery::from_config(&fault_cfg)?;
         let mut rng = Rng::new(seed ^ rank as u64);
         let watch = Stopwatch::start();
         let mut flops = 0.0;
-        for _ in 0..iters {
+        for i in 0..iters {
+            // chaos/suspicion fires at the *start* of step i, so the
+            // step executes under the post-event membership
+            match rec.poll(&mut group, i as u64)? {
+                Some(RecoveryAction::Degrade(m)) => tr.degrade(&m)?,
+                Some(RecoveryAction::Rejoin(_)) => {
+                    tr.rejoin_restore(&mut group, Some(&fault_cfg.ckpt_dir))?
+                }
+                Some(RecoveryAction::Abort(r)) => {
+                    return Err(fastmoe::Error::msg(format!(
+                        "rank {r} declared dead at step {i} (recover = abort)"
+                    )));
+                }
+                None => {}
+            }
             let mut x = TensorF32::zeros(&[tr.layer.nb, tr.layer.dm]);
             rng.fill_normal(&mut x.data, 1.0);
             flops += tr.train_step(&mut group, x, &mut counters)?.flops;
@@ -377,13 +428,18 @@ fn tcp_worker(args: &Args) -> Result<()> {
         group.barrier()?;
         println!(
             "  [pid {}] tcp worker {rank}/{workers}: {:.2}s, {:.2} GFLOP/s, \
-             placement `{}`, shadows {}, imbalance {:.2}",
+             placement `{}`, shadows {}, imbalance {:.2}, recover `{}`{}",
             std::process::id(),
             watch.secs(),
             util::gflops(flops, watch.secs()),
             place_cfg.policy,
             tr.layer.placement().shadow_width(),
             tr.monitor.imbalance(),
+            fault_cfg.recover,
+            match tr.degraded() {
+                Some(m) => format!(", degraded (dead {:?})", m.dead),
+                None => String::new(),
+            },
         );
         return Ok(());
     }
@@ -434,10 +490,12 @@ fn dist_moe(args: &Args) -> Result<()> {
     let moe_cfg = MoeConfig::from_args(args)?;
     let comm_cfg = CommConfig::from_args(args)?;
     let place_cfg = PlacementConfig::from_args(args)?;
+    let fault_cfg = FaultConfig::from_args(args)?;
+    let resume = args.get("resume").map(String::from);
     let rt = Arc::new(Runtime::open_default()?);
     println!(
         "dist-moe: {workers} workers, {iters} iterations, gate `{}`, overlap {}, \
-         placement `{}`",
+         placement `{}`, recover `{}`",
         moe_cfg.gate,
         if comm_cfg.overlap {
             format!("on ({} chunks)", comm_cfg.chunks)
@@ -445,8 +503,14 @@ fn dist_moe(args: &Args) -> Result<()> {
             "off".into()
         },
         place_cfg.policy,
+        fault_cfg.recover,
     );
-    let stats = comm::run_workers(workers, move |h| {
+    let stats = comm::run_workers(workers, move |mut h| {
+        if fault_cfg.recv_timeout_ms > 0 {
+            h.set_recv_timeout(Some(std::time::Duration::from_millis(
+                fault_cfg.recv_timeout_ms,
+            )));
+        }
         let mut h = TopoComm::new(h, comm_cfg.topology_for(workers)?)?;
         let layer = MoeLayerBuilder::from_config(&moe_cfg)
             .comm_config(&comm_cfg)
@@ -455,13 +519,32 @@ fn dist_moe(args: &Args) -> Result<()> {
         layer.warm()?;
         let n_expert = workers * layer.ne_local;
         let mut tr = MoeLayerTrainer::new(layer, lr)
-            .with_placement(Rebalancer::from_config(&place_cfg, n_expert)?);
+            .with_placement(Rebalancer::from_config(&place_cfg, n_expert)?)
+            .with_checkpointing(fault_cfg.ckpt_interval, &fault_cfg.ckpt_dir);
+        if let Some(dir) = &resume {
+            tr.load_checkpoint(dir)?;
+        }
+        let mut rec = Recovery::from_config(&fault_cfg)?;
         let mut counters = Counters::new();
         let mut rng = Rng::new(seed ^ h.rank() as u64);
         let mut flops = 0.0;
         let mut balance = 0.0;
         let watch = Stopwatch::start();
-        for _ in 0..iters {
+        for i in 0..iters {
+            // chaos/suspicion fires at the *start* of step i, so the
+            // step executes under the post-event membership
+            match rec.poll(&mut h, i as u64)? {
+                Some(RecoveryAction::Degrade(m)) => tr.degrade(&m)?,
+                Some(RecoveryAction::Rejoin(_)) => {
+                    tr.rejoin_restore(&mut h, Some(&fault_cfg.ckpt_dir))?
+                }
+                Some(RecoveryAction::Abort(r)) => {
+                    return Err(fastmoe::Error::msg(format!(
+                        "rank {r} declared dead at step {i} (recover = abort)"
+                    )));
+                }
+                None => {}
+            }
             let mut x = TensorF32::zeros(&[tr.layer.nb, tr.layer.dm]);
             rng.fill_normal(&mut x.data, 1.0);
             let s = tr.train_step(&mut h, x, &mut counters)?;
@@ -535,6 +618,7 @@ fn serve_tcp(args: &Args) -> Result<()> {
     let moe_cfg = MoeConfig::from_args(args)?;
     let comm_cfg = CommConfig::from_args(args)?;
     let serve_cfg = ServeConfig::from_args(args)?;
+    let fault_cfg = FaultConfig::from_args(args)?;
     let exe = std::env::current_exe()?;
     println!(
         "serve (tcp): spawning {workers} worker processes, mesh ports {port}.., \
@@ -562,6 +646,7 @@ fn serve_tcp(args: &Args) -> Result<()> {
             "--topology".into(), comm_cfg.topology.clone(),
             "--nodes".into(), comm_cfg.nodes.to_string(),
             "--local-size".into(), comm_cfg.local_size.to_string(),
+            "--recv-timeout-ms".into(), fault_cfg.recv_timeout_ms.to_string(),
         ];
         if let Some(h) = &hosts {
             argv.push("--hosts".into());
@@ -602,9 +687,17 @@ fn serve_worker_proc(args: &Args) -> Result<()> {
     let port = args.usize_or("port", 47500)? as u16;
     let comm_cfg = CommConfig::from_args(args)?;
     let serve_cfg = ServeConfig::from_args(args)?;
+    let fault_cfg = FaultConfig::from_args(args)?;
     let hosts = mesh_hosts(args, args.usize_or("workers", 2)?, port);
     let workers = hosts.len();
     let mut group = fastmoe::comm::tcp::TcpGroup::connect(rank, &hosts)?;
+    if fault_cfg.recv_timeout_ms > 0 {
+        // a wedged peer surfaces as Error::Timeout; the front end then
+        // REJECT-drains its queue instead of hanging every client
+        group.set_recv_timeout(Some(std::time::Duration::from_millis(
+            fault_cfg.recv_timeout_ms,
+        )));
+    }
     if comm_cfg.progress {
         group.enable_progress();
     }

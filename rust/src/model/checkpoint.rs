@@ -19,25 +19,91 @@ const VERSION: u32 = 1;
 
 /// Write all parameters (names + shapes + data).
 pub fn save_checkpoint(path: impl AsRef<Path>, store: &ParamStore) -> Result<()> {
-    if let Some(dir) = path.as_ref().parent() {
+    let named: Vec<(String, &TensorF32)> = store
+        .entries
+        .iter()
+        .zip(&store.tensors)
+        .map(|(e, t)| (e.name.clone(), t))
+        .collect();
+    save_tensors(path, &named)
+}
+
+/// Write an arbitrary named-tensor set **atomically**: bytes stream to
+/// a `.tmp` sibling first and a single `fs::rename` publishes them, so
+/// a crash mid-save never corrupts the previous file at `path` — the
+/// property the periodic `[fault] ckpt_interval` checkpoints rely on.
+pub fn save_tensors(path: impl AsRef<Path>, tensors: &[(String, &TensorF32)]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    let mut w = BufWriter::new(std::fs::File::create(path)?);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&(store.len() as u32).to_le_bytes())?;
-    for (e, t) in store.entries.iter().zip(&store.tensors) {
-        let name = e.name.as_bytes();
-        w.write_all(&(name.len() as u32).to_le_bytes())?;
-        w.write_all(name)?;
-        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
-        for &d in &t.shape {
-            w.write_all(&(d as u64).to_le_bytes())?;
+    let tmp = path.with_extension("tmp");
+    {
+        let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in tensors {
+            let name = name.as_bytes();
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name)?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            w.write_all(t.as_bytes())?;
         }
-        w.write_all(t.as_bytes())?;
+        w.flush()?;
     }
-    w.flush()?;
+    std::fs::rename(&tmp, path)?;
     Ok(())
+}
+
+/// Read a named-tensor file written by [`save_tensors`] (or
+/// [`save_checkpoint`] — same format), tensors in file order.
+pub fn load_tensors(path: impl AsRef<Path>) -> Result<Vec<(String, TensorF32)>> {
+    let mut r = BufReader::new(std::fs::File::open(&path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Checkpoint("bad magic".into()));
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        return Err(Error::Checkpoint(format!("unsupported version {version}")));
+    }
+    let count = read_u32(&mut r)? as usize;
+    if count > 1 << 20 {
+        return Err(Error::Checkpoint("implausible tensor count".into()));
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            return Err(Error::Checkpoint("implausible name length".into()));
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)
+            .map_err(|_| Error::Checkpoint("bad name utf8".into()))?;
+        let rank = read_u32(&mut r)? as usize;
+        if rank > 16 {
+            return Err(Error::Checkpoint("implausible tensor rank".into()));
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u64(&mut r)? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0f32; numel];
+        // Safety: reading LE f32s into the vec's byte view.
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
+        };
+        r.read_exact(bytes)?;
+        out.push((name, TensorF32::from_vec(&shape, data)?));
+    }
+    Ok(out)
 }
 
 /// Load a checkpoint *into* an initialised store; names and shapes must
@@ -257,6 +323,28 @@ mod tests {
         // guards: bad slot, short payload
         assert!(pack_expert_slot(&[&a], 3).is_err());
         assert!(unpack_expert_slot(&[1.0], &mut [&mut a2], 0).is_err());
+    }
+
+    #[test]
+    fn named_tensor_roundtrip_is_atomic() {
+        let a = TensorF32::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = TensorF32::from_vec(&[3], vec![5.0, 6.0, 7.0]).unwrap();
+        let path = tmp("named");
+        save_tensors(&path, &[("x".into(), &a), ("meta".into(), &b)]).unwrap();
+        // a successful save leaves no tmp sibling behind
+        assert!(!path.with_extension("tmp").exists());
+        let got = load_tensors(&path).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, "x");
+        assert_eq!(got[0].1, a);
+        assert_eq!(got[1].0, "meta");
+        assert_eq!(got[1].1, b);
+        // overwriting through the same rename path keeps the file valid
+        save_tensors(&path, &[("x".into(), &b)]).unwrap();
+        let got = load_tensors(&path).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].1, b);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

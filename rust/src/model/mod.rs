@@ -12,7 +12,8 @@ mod checkpoint;
 
 pub use adam::Adam;
 pub use checkpoint::{
-    load_checkpoint, pack_expert_slot, save_checkpoint, unpack_expert_slot,
+    load_checkpoint, load_tensors, pack_expert_slot, save_checkpoint,
+    save_tensors, unpack_expert_slot,
 };
 
 use crate::error::{Error, Result};

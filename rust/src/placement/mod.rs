@@ -102,6 +102,12 @@ pub struct PlacementPlan {
     /// hosting order (replica `i` computes in extended slot
     /// `ne_local + i`).
     hosted: Vec<Vec<usize>>,
+    /// A quarantined (dead) rank, if any: [`PlacementPlan::route`]
+    /// steers around it to the nearest *live* replica, and
+    /// [`PlacementPlan::rank_rows`] models its uncovered experts'
+    /// tokens as dropped.  Ownership is untouched — the degraded
+    /// layout is reversible by [`PlacementPlan::set_down`]`(None)`.
+    down: Option<usize>,
 }
 
 impl PlacementPlan {
@@ -111,7 +117,33 @@ impl PlacementPlan {
         let owner = (0..workers * ne_local)
             .map(|e| (e / ne_local, e % ne_local))
             .collect();
-        PlacementPlan { workers, ne_local, owner, hosted: vec![Vec::new(); workers] }
+        PlacementPlan {
+            workers,
+            ne_local,
+            owner,
+            hosted: vec![Vec::new(); workers],
+            down: None,
+        }
+    }
+
+    /// Quarantine (or restore) a rank: while `Some(r)`, routing avoids
+    /// `r` and load modelling treats its uncovered experts as dropped.
+    pub fn set_down(&mut self, down: Option<usize>) -> Result<()> {
+        if let Some(r) = down {
+            if r >= self.workers {
+                return Err(Error::Config(format!(
+                    "set_down({r}) out of range for {} workers",
+                    self.workers
+                )));
+            }
+        }
+        self.down = down;
+        Ok(())
+    }
+
+    /// The quarantined rank, if any.
+    pub fn down(&self) -> Option<usize> {
+        self.down
     }
 
     pub fn ne_global(&self) -> usize {
@@ -127,7 +159,8 @@ impl PlacementPlan {
     /// no shadows) — the layer uses this to keep the bit-compatible
     /// `DispatchPlan::build` fast path.
     pub fn is_seed(&self) -> bool {
-        !self.has_shadows()
+        self.down.is_none()
+            && !self.has_shadows()
             && self
                 .owner
                 .iter()
@@ -156,38 +189,53 @@ impl PlacementPlan {
         (0..self.workers).filter(|&r| self.hosted[r].contains(&e)).collect()
     }
 
-    /// Route rank `from`'s tokens for expert `e` to the nearest replica
-    /// (owner or shadow host) by forward ring distance, ties to the
-    /// lowest rank.  Returns `(rank, extended slot)` where replicas
-    /// occupy slots `ne_local + hosting_index` on their host.
+    /// Route rank `from`'s tokens for expert `e` to the nearest *live*
+    /// replica (owner or shadow host, skipping a quarantined rank) by
+    /// forward ring distance, ties to the lowest rank.  Returns
+    /// `(rank, extended slot)` where replicas occupy slots
+    /// `ne_local + hosting_index` on their host.  If every copy sits on
+    /// the down rank the dead owner is returned unchanged: the layer
+    /// score-masks such experts, so no token actually lands there.
     pub fn route(&self, e: usize, from: usize) -> (usize, usize) {
         let (orank, oslot) = self.owner[e];
-        let mut best = (orank, oslot);
         let dist = |r: usize| (r + self.workers - from) % self.workers;
-        let mut best_d = dist(orank);
+        let live = |r: usize| self.down != Some(r);
+        // (rank, slot, dist); None until a live candidate is seen
+        let mut best = live(orank).then(|| (orank, oslot, dist(orank)));
         for (r, hosted) in self.hosted.iter().enumerate() {
+            if !live(r) {
+                continue;
+            }
             if let Some(i) = hosted.iter().position(|&h| h == e) {
                 let d = dist(r);
-                if d < best_d || (d == best_d && r < best.0) {
-                    best = (r, self.ne_local + i);
-                    best_d = d;
+                match best {
+                    Some((br, _, bd)) if bd < d || (bd == d && br < r) => {}
+                    _ => best = Some((r, self.ne_local + i, d)),
                 }
             }
         }
-        best
+        best.map_or((orank, oslot), |(r, s, _)| (r, s))
     }
 
     /// Expected rows per rank for the given per-expert token counts,
     /// under the model that each expert's load splits evenly across
-    /// its replicas (every source rank routes to its nearest copy; for
-    /// uniformly spread sources that is an even split).
+    /// its *live* replicas (every source rank routes to its nearest
+    /// copy; for uniformly spread sources that is an even split).
+    /// Under a quarantined rank, its covered experts' load shifts to
+    /// the surviving copies and its uncovered experts' tokens are
+    /// dropped (the degraded layer masks them out of the gate).
     pub fn rank_rows(&self, counts: &[u32]) -> Vec<f64> {
         let mut rows = vec![0.0f64; self.workers];
+        let live = |r: usize| self.down != Some(r);
         for (e, &c) in counts.iter().enumerate() {
-            let hosts = self.shadow_hosts(e);
-            let share = c as f64 / (1 + hosts.len()) as f64;
-            rows[self.owner[e].0] += share;
-            for r in hosts {
+            let mut copies = self.shadow_hosts(e);
+            copies.push(self.owner[e].0);
+            copies.retain(|&r| live(r));
+            if copies.is_empty() {
+                continue;
+            }
+            let share = c as f64 / copies.len() as f64;
+            for r in copies {
                 rows[r] += share;
             }
         }
@@ -375,6 +423,12 @@ pub struct Rebalancer {
     window: LoadMonitor,
     every: usize,
     steps: usize,
+    /// While frozen (a degraded run), window boundaries pass without
+    /// any decision *or collective* — every rank freezes at the same
+    /// step boundary, so tag lockstep is preserved by omission.
+    frozen: bool,
+    /// World ranks the boundary all-reduce runs over (`None` = world).
+    group: Option<Vec<usize>>,
 }
 
 impl Rebalancer {
@@ -391,7 +445,27 @@ impl Rebalancer {
             window: LoadMonitor::windowed(n_expert, every),
             every,
             steps: 0,
+            frozen: false,
+            group: None,
         }
+    }
+
+    /// Freeze (or thaw) rebalancing — the degraded-mode guard: a
+    /// quarantined layout must not be mutated under the survivors'
+    /// feet, and a frozen boundary runs no collective at all.
+    pub fn freeze(&mut self, frozen: bool) {
+        self.frozen = frozen;
+    }
+
+    pub fn is_frozen(&self) -> bool {
+        self.frozen
+    }
+
+    /// Re-bind the boundary all-reduce to a survivor sub-group
+    /// (`None` restores the full world).  Every participating rank
+    /// must bind the same group at the same boundary.
+    pub fn bind_group(&mut self, group: Option<Vec<usize>>) {
+        self.group = group;
     }
 
     pub fn from_config(cfg: &crate::config::PlacementConfig, n_expert: usize) -> Result<Rebalancer> {
@@ -418,6 +492,9 @@ impl Rebalancer {
         comm: &mut C,
         plan: &PlacementPlan,
     ) -> Result<Option<PlanDelta>> {
+        if self.frozen {
+            return Ok(None);
+        }
         if self.steps == 0 || self.steps % self.every != 0 {
             return Ok(None);
         }
@@ -426,8 +503,10 @@ impl Rebalancer {
         }
         let totals = self.window.window_totals();
         let mut buf: Vec<f32> = totals.iter().map(|&c| c as f32).collect();
-        if comm.size() > 1 {
-            comm.all_reduce_sum(&mut buf)?;
+        match &self.group {
+            Some(g) => comm.all_reduce_sum_group(&mut buf, g)?,
+            None if comm.size() > 1 => comm.all_reduce_sum(&mut buf)?,
+            None => {}
         }
         let counts: Vec<u32> = buf.iter().map(|&x| x as u32).collect();
         Ok(decide(self.policy, plan, &counts, self.threshold))
@@ -543,6 +622,70 @@ mod tests {
             r.iter().cloned().fold(0.0, f64::max) / m
         };
         assert!(imb(&after) < imb(&before));
+    }
+
+    #[test]
+    fn down_rank_routing_steers_to_live_replicas() {
+        let mut p = PlacementPlan::seed(4, 2);
+        p.add_shadow(6, 1).unwrap(); // expert 6 owned by rank 3, replica on 1
+        p.set_down(Some(3)).unwrap();
+        assert!(!p.is_seed(), "a quarantined seed layout is not seed-routable");
+        assert_eq!(p.down(), Some(3));
+        // covered expert: every source routes to the surviving replica
+        for from in 0..4 {
+            assert_eq!(p.route(6, from), (1, 2), "from {from}");
+        }
+        // uncovered expert on the dead rank: falls back to the dead
+        // owner (the layer masks it, so nothing actually routes there)
+        assert_eq!(p.route(7, 0), (3, 1));
+        // experts elsewhere are untouched
+        assert_eq!(p.route(0, 2), (0, 0));
+        // restore
+        p.set_down(None).unwrap();
+        assert_eq!(p.route(6, 3), (3, 0));
+        assert!(p.set_down(Some(9)).is_err());
+    }
+
+    #[test]
+    fn rank_rows_drops_uncovered_dead_load() {
+        let mut p = PlacementPlan::seed(2, 1);
+        p.add_shadow(1, 0).unwrap(); // expert 1 (rank 1) covered on rank 0
+        assert_eq!(p.rank_rows(&[10, 40]), vec![30.0, 20.0]);
+        p.set_down(Some(1)).unwrap();
+        // the covered expert's full load lands on its surviving copy;
+        // nothing lands on the dead rank
+        assert_eq!(p.rank_rows(&[10, 40]), vec![50.0, 0.0]);
+        // uncovered dead-owned load is dropped, not redistributed
+        let mut q = PlacementPlan::seed(2, 1);
+        q.set_down(Some(1)).unwrap();
+        assert_eq!(q.rank_rows(&[10, 40]), vec![10.0, 0.0]);
+    }
+
+    #[test]
+    fn frozen_rebalancer_runs_no_collective() {
+        // one frozen rank alone would deadlock the boundary all-reduce
+        // if freezing still issued it — freeze on both, observe a full
+        // window, and assert no decision and no hang
+        crate::comm::run_workers(2, |mut h| {
+            let plan = PlacementPlan::seed(2, 1);
+            let mut rb = Rebalancer::new(PlacementPolicy::Shadow, 2, 1.5, 2);
+            rb.freeze(true);
+            assert!(rb.is_frozen());
+            for _ in 0..4 {
+                rb.observe(&[20, 0]);
+                assert_eq!(rb.maybe_rebalance(&mut h, &plan)?, None);
+            }
+            // thawed + bound to a "survivor" group of one: decisions
+            // come back, now from local counts only
+            rb.freeze(false);
+            rb.bind_group(Some(vec![h.rank()]));
+            rb.observe(&[20, 0]);
+            rb.observe(&[20, 0]);
+            let d = rb.maybe_rebalance(&mut h, &plan)?;
+            assert_eq!(d, Some(PlanDelta::AddShadow { expert: 0, host: 1 }));
+            Ok(())
+        })
+        .unwrap();
     }
 
     #[test]

@@ -168,6 +168,16 @@ impl Batcher {
         Ok(())
     }
 
+    /// Empty the queue, handing every admitted-but-unserved request
+    /// back to the caller.  Fault containment uses this when a step
+    /// fails (worker death): each drained request gets an explicit
+    /// [`CODE_REJECT`] so its client sees a typed verdict instead of a
+    /// socket that never answers.
+    pub fn drain(&mut self) -> Vec<Request> {
+        self.queued_rows = 0;
+        self.queue.drain(..).collect()
+    }
+
     /// Pack queued requests into `min(max_batch, nb)` rows of a
     /// zero-initialised `[nb, dm]` batch: round-robin across sessions
     /// (one whole request per session per turn, FIFO within a
@@ -424,6 +434,12 @@ impl ServeDaemon {
     /// The resident drive loop: step whenever the batcher has work,
     /// stop the workers and return the stats on client-initiated
     /// shutdown.
+    ///
+    /// Worker-death containment: a failed collective step kills the
+    /// daemon, but never silently — the step's own batch and every
+    /// queued request get typed [`CODE_REJECT`] frames and the front
+    /// end closes its sockets before the error propagates, so no
+    /// client blocks forever on a response that cannot come.
     pub fn run(
         &mut self,
         lp: &ServeLoop,
@@ -435,7 +451,16 @@ impl ServeDaemon {
         let clock = Stopwatch::start();
         while let Some((x, pending)) = self.next_batch(nb, dm) {
             let t = Stopwatch::start();
-            let y = lp.step(comm, x, counters)?;
+            let y = match lp.step(comm, x, counters) {
+                Ok(y) => y,
+                Err(e) => {
+                    // no lp.stop(): the collective is already broken
+                    // and stopping would hang on the dead worker
+                    self.reject_drain(pending, &mut stats);
+                    self.close();
+                    return Err(e);
+                }
+            };
             stats.step_time.record(t.secs());
             stats.steps += 1;
             self.respond(pending, &y, &mut stats);
@@ -445,6 +470,34 @@ impl ServeDaemon {
         stats.rejected = self.shared.state.lock().unwrap().rejected;
         self.close();
         Ok(stats)
+    }
+
+    /// Reject the failed step's batch plus everything still queued:
+    /// one empty [`CODE_REJECT`] frame per request, write failures
+    /// ignored (a dead session cannot hang on a reject either).
+    fn reject_drain(&self, pending: Vec<Pending>, stats: &mut ServeStats) {
+        let queued = {
+            let mut st = self.shared.state.lock().unwrap();
+            let q = st.batcher.drain();
+            st.rejected += (pending.len() + q.len()) as u64;
+            stats.rejected = st.rejected;
+            q
+        };
+        let writers = self.shared.writers.lock().unwrap();
+        let reqs = pending
+            .iter()
+            .map(|p| (&p.req.id, p.req.session, p.req.rows))
+            .chain(queued.iter().map(|r| (&r.id, r.session, r.rows)));
+        for (&id, session, rows) in reqs {
+            if let Some(w) = writers.get(session) {
+                let _ = write_stream_frame(
+                    &mut *w.lock().unwrap(),
+                    id,
+                    serve_tag(CODE_REJECT, rows),
+                    &[],
+                );
+            }
+        }
     }
 
     /// Tear the front end down: unblock the accept thread, close every
@@ -763,6 +816,23 @@ mod tests {
         assert_eq!(x.shape, vec![4, 1]);
         assert_eq!(pending.len(), 1);
         assert_eq!(b.queued_rows(), 3);
+    }
+
+    #[test]
+    fn batcher_drain_hands_back_everything() {
+        let dm = 2;
+        let mut b = Batcher::new(4, 16);
+        b.admit(req(1, 2, dm)).unwrap();
+        b.admit(req(2, 3, dm)).unwrap();
+        let drained = b.drain();
+        assert_eq!(
+            drained.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+        assert_eq!(b.queued_rows(), 0);
+        assert!(b.is_empty());
+        // depth freed: admission works again after the drain
+        b.admit(req(3, 4, dm)).unwrap();
     }
 
     #[test]

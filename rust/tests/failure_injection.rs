@@ -1,16 +1,32 @@
 //! Failure injection: every operational failure mode must surface as a
-//! typed error (or a contained worker failure), never a hang or UB.
+//! typed error (or a contained worker failure), never a hang or UB —
+//! and, since PR 8, the elastic-recovery pins: an injected death under
+//! `recover = "degrade"` continues bitwise-deterministically on the
+//! survivors, and `rejoin` restores the full topology from checkpoints
+//! plus live shadow state.  All chaos is a deterministic
+//! [`ChaosSchedule`] — no sleeps-and-hope.
+//!
+//! Ports: 47870 / 47970 (worker-death containment over tcp), 48070
+//! (serve client disconnect), 49170 / 49190 (tcp degrade pins,
+//! deferred / progress), 49270 (recv timeout feeds suspicion), 49370
+//! (serve worker-death reject drain).
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use fastmoe::comm::tcp::TcpGroup;
 use fastmoe::comm::{run_workers, Comm, TopoComm, Topology};
 use fastmoe::config::{CommConfig, MoeConfig, ServeConfig};
+use fastmoe::coordinator::{MoeLayerBuilder, MoeLayerTrainer, ServeLoop, CTL_STEP, CTL_TAG};
 use fastmoe::error::Error;
+use fastmoe::fault::{ChaosSchedule, Membership, RecoverMode, Recovery, RecoveryAction};
+use fastmoe::metrics::Counters;
 use fastmoe::moe::bucket_for;
+use fastmoe::placement::PlanDelta;
 use fastmoe::rng::Rng;
 use fastmoe::runtime::{Manifest, Runtime};
-use fastmoe::serve::{run_thread_daemon, ClientConn, Reply};
+use fastmoe::serve::{run_thread_daemon, ClientConn, Reply, ServeDaemon};
+use fastmoe::tensor::TensorF32;
 
 #[test]
 fn worker_panic_is_contained_and_attributed() {
@@ -305,4 +321,352 @@ fn oversized_collective_disagreement_detected() {
         Ok(flags) => assert!(flags.iter().any(|&f| f)),
         Err(_) => {} // a contained worker error is also acceptable
     }
+}
+
+// ---------------------------------------------------------------------------
+// Elastic fault recovery (PR 8): the acceptance pins.
+// ---------------------------------------------------------------------------
+
+const FWORKERS: usize = 2;
+const FSTEPS: usize = 6;
+const KILL_AT: usize = 3;
+
+fn frt() -> Option<Arc<Runtime>> {
+    Runtime::open_default().ok().map(Arc::new)
+}
+
+fn fault_trainer(rt: Arc<Runtime>, rank: usize) -> fastmoe::Result<MoeLayerTrainer> {
+    let layer = MoeLayerBuilder::new()
+        .gate("topk")
+        .seed(91)
+        .build(rt, FWORKERS, rank)?;
+    layer.warm()?;
+    Ok(MoeLayerTrainer::new(layer, 1e-3))
+}
+
+/// The same deterministic batch on every run for a given (rank, step).
+fn fstep_input(nb: usize, dm: usize, rank: usize, step: usize) -> TensorF32 {
+    let mut x = TensorF32::zeros(&[nb, dm]);
+    Rng::new(6000 + (step * FWORKERS + rank) as u64).fill_normal(&mut x.data, 1.0);
+    x
+}
+
+/// Every trainable tensor's bits: the `P` layer params, then the `P`
+/// Adam first moments, then the `P` second moments (expert-shard
+/// tensors sit at indices `2..P` within each third).
+fn dump_bits(tr: &MoeLayerTrainer) -> Vec<Vec<u32>> {
+    let mut out: Vec<Vec<u32>> = tr
+        .layer
+        .params()
+        .iter()
+        .map(|(_, t)| t.data.iter().map(|v| v.to_bits()).collect())
+        .collect();
+    for t in tr.optimizer().m.iter().chain(tr.optimizer().v.iter()) {
+        out.push(t.data.iter().map(|v| v.to_bits()).collect());
+    }
+    out
+}
+
+/// The degrade acceptance pin, on any backend.  Three sequential runs
+/// on one comm handle, each with every rank-1 expert shadow-replicated
+/// onto rank 0 before training starts:
+///
+/// * run A never fails;
+/// * run B enters degraded mode by planned handover
+///   ([`Membership::assume`]) at the `KILL_AT` boundary;
+/// * run C is driven through [`Recovery::poll`] by the chaos schedule
+///   `kill@3:r1` — detection, membership agreement, quarantine.
+///
+/// Pins: the survivor's loss at the failover step matches the
+/// never-failed run bit-for-bit (every dead-owned expert has a
+/// bit-exact replica and expert math is row-independent, so routing
+/// around the corpse changes nothing), and run C matches run B bitwise
+/// in every loss and in the final params + Adam moments.
+fn assert_degrade_bitwise_pin(
+    comm: &mut impl Comm,
+    rt: Arc<Runtime>,
+) -> fastmoe::Result<()> {
+    let rank = comm.rank();
+    let mut run = |mode: u8| -> fastmoe::Result<(Vec<u32>, Vec<Vec<u32>>)> {
+        let mut tr = fault_trainer(rt.clone(), rank)?;
+        let ne_local = tr.layer.ne_local;
+        for e in ne_local..2 * ne_local {
+            tr.force_delta(comm, &PlanDelta::AddShadow { expert: e, host: 0 })?;
+        }
+        let mut rec = Recovery::new(
+            RecoverMode::Degrade,
+            ChaosSchedule::parse(&format!("kill@{KILL_AT}:r1"))?,
+        );
+        let mut counters = Counters::new();
+        let mut losses = Vec::with_capacity(FSTEPS);
+        for i in 0..FSTEPS {
+            match mode {
+                0 => {} // never fails
+                1 if i == KILL_AT => {
+                    tr.degrade(&Membership::assume(FWORKERS, &[1]))?;
+                }
+                1 => {}
+                _ => match rec.poll(comm, i as u64)? {
+                    Some(RecoveryAction::Degrade(m)) => tr.degrade(&m)?,
+                    Some(a) => panic!("unexpected recovery action {a:?}"),
+                    None => {}
+                },
+            }
+            let x = fstep_input(tr.layer.nb, tr.layer.dm, rank, i);
+            losses.push(tr.train_step(comm, x, &mut counters)?.loss.to_bits());
+        }
+        assert_eq!(tr.degraded().is_some(), mode != 0, "mode {mode}");
+        Ok((losses, dump_bits(&tr)))
+    };
+    let a = run(0)?;
+    let b = run(1)?;
+    let c = run(2)?;
+    // the pre-failure prefix is the same trajectory...
+    assert_eq!(a.0[..KILL_AT], b.0[..KILL_AT], "rank {rank}: prefix");
+    // ...and on the survivor the failover step itself is bit-identical
+    if rank == 0 {
+        assert_eq!(a.0[KILL_AT], b.0[KILL_AT], "survivor loss at failover step");
+    }
+    // chaos-driven detection ≡ planned handover, to the last bit
+    assert_eq!(b.0, c.0, "rank {rank}: losses");
+    assert_eq!(b.1, c.1, "rank {rank}: params + Adam moments");
+    Ok(())
+}
+
+#[test]
+fn degrade_with_shadow_cover_is_bitwise_pinned_thread() {
+    let Some(rt) = frt() else { return };
+    run_workers(FWORKERS, move |mut h| {
+        assert_degrade_bitwise_pin(&mut h, rt.clone())
+    })
+    .unwrap();
+}
+
+fn tcp_degrade_pin(port: u16, progress: bool) {
+    let Some(rt) = frt() else { return };
+    let joins: Vec<_> = (0..FWORKERS)
+        .map(|rank| {
+            let rt = rt.clone();
+            std::thread::spawn(move || -> fastmoe::Result<()> {
+                let mut g = TcpGroup::connect_local(rank, FWORKERS, port)?;
+                if progress {
+                    g.enable_progress();
+                }
+                assert_degrade_bitwise_pin(&mut g, rt)?;
+                g.barrier()
+            })
+        })
+        .collect();
+    for (rank, j) in joins.into_iter().enumerate() {
+        j.join()
+            .unwrap_or_else(|_| panic!("tcp rank {rank} panicked"))
+            .unwrap();
+    }
+}
+
+#[test]
+fn tcp_degrade_chaos_matches_planned_deferred() {
+    tcp_degrade_pin(49170, false);
+}
+
+#[test]
+fn tcp_degrade_chaos_matches_planned_progress() {
+    tcp_degrade_pin(49190, true);
+}
+
+/// The rejoin acceptance pin: `kill@3:r1,rejoin@5:r1` with interval-2
+/// checkpointing and rank 1's first expert shadow-covered.  After
+/// [`MoeLayerTrainer::rejoin_restore`] the rejoined rank must carry
+///
+/// * the covered expert's *live* pre-rejoin state (its replica kept
+///   training past the checkpoint and streamed back), strictly newer
+///   than the checkpoint;
+/// * every uncovered expert exactly as the step-2 checkpoint froze it;
+/// * the survivors' gate (+ its Adam slots and step counters)
+///   bit-for-bit, via the rejoin broadcast —
+///
+/// and training continues at full strength with finite losses.
+#[test]
+fn rejoin_restores_live_covered_state_and_checkpointed_rest() {
+    let Some(rt) = frt() else { return };
+    let dir = std::env::temp_dir().join(format!("fastmoe_rejoin_{}", std::process::id()));
+    let dir_s = dir.to_str().unwrap().to_string();
+    let out = run_workers(FWORKERS, move |mut h| {
+        let rank = h.rank();
+        let mut tr = fault_trainer(rt.clone(), rank)?.with_checkpointing(2, &dir_s);
+        let ne_local = tr.layer.ne_local;
+        tr.force_delta(&mut h, &PlanDelta::AddShadow { expert: ne_local, host: 0 })?;
+        let mut rec = Recovery::new(
+            RecoverMode::Rejoin,
+            ChaosSchedule::parse("kill@3:r1,rejoin@5:r1")?,
+        );
+        let mut counters = Counters::new();
+        let (mut ckpt, mut pre, mut post) = (Vec::new(), Vec::new(), Vec::new());
+        for i in 0..7u64 {
+            match rec.poll(&mut h, i)? {
+                Some(RecoveryAction::Degrade(m)) => tr.degrade(&m)?,
+                Some(RecoveryAction::Rejoin(r)) => {
+                    assert_eq!(r, 1);
+                    pre = dump_bits(&tr);
+                    tr.rejoin_restore(&mut h, Some(&dir_s))?;
+                    post = dump_bits(&tr);
+                    assert!(tr.degraded().is_none(), "quarantine must lift");
+                }
+                Some(RecoveryAction::Abort(r)) => panic!("unexpected abort of rank {r}"),
+                None => {}
+            }
+            let x = fstep_input(tr.layer.nb, tr.layer.dm, rank, i as usize);
+            let s = tr.train_step(&mut h, x, &mut counters)?;
+            assert!(s.loss.is_finite(), "step {i} rank {rank}");
+            if i == 1 {
+                // the interval-2 checkpoint just landed — remember the
+                // exact state it froze (maybe_checkpoint is the last
+                // state-touching op of a step)
+                ckpt = dump_bits(&tr);
+            }
+        }
+        Ok((ne_local, ckpt, pre, post, tr.optimizer().step))
+    })
+    .unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let ne = out[0].0;
+    let p = out[0].3.len() / 3; // tensor count per third
+    // the rejoined rank fast-forwarded to the survivors' gate trajectory
+    for slot in [0, 1, p, p + 1, 2 * p, 2 * p + 1] {
+        assert_eq!(out[0].3[slot], out[1].3[slot], "gate slot {slot}");
+    }
+    assert_eq!(out[0].4, out[1].4, "Adam step counters");
+    // rank 1's expert slots: covered == live pre-rejoin state (and it
+    // moved past the checkpoint), uncovered == the checkpoint
+    let (_, ckpt, pre, post, _) = &out[1];
+    let mut covered_advanced = false;
+    for t in 2..p {
+        for part in [t, p + t, 2 * p + t] {
+            let stride = post[part].len() / ne;
+            assert_eq!(
+                post[part][..stride],
+                pre[part][..stride],
+                "covered slot, tensor {part}"
+            );
+            covered_advanced |= post[part][..stride] != ckpt[part][..stride];
+            for s in 1..ne {
+                assert_eq!(
+                    post[part][s * stride..(s + 1) * stride],
+                    ckpt[part][s * stride..(s + 1) * stride],
+                    "uncovered slot {s}, tensor {part}"
+                );
+            }
+        }
+    }
+    assert!(covered_advanced, "the replica must have advanced past the checkpoint");
+}
+
+/// A recv deadline on a silent-but-alive peer surfaces as the typed,
+/// attributed [`Error::Timeout`], which feeds [`Recovery::suspect`]:
+/// the next poll runs membership agreement (the suspect is skipped in
+/// gossip, so a two-rank world degrades without any traffic) and hands
+/// the trainer a quarantine order.  Disarming the deadline restores a
+/// fully working link.
+#[test]
+fn tcp_recv_timeout_feeds_suspicion_into_recovery() {
+    const PORT: u16 = 49270;
+    let joins: Vec<_> = (0..2)
+        .map(|rank| {
+            std::thread::spawn(move || -> fastmoe::Result<()> {
+                let mut g = TcpGroup::connect_local(rank, 2, PORT)?;
+                if rank == 0 {
+                    g.set_recv_timeout(Some(Duration::from_millis(200)));
+                    let mut rec =
+                        Recovery::new(RecoverMode::Degrade, ChaosSchedule::parse("")?);
+                    match g.recv(1, (1u64 << 41) | 9) {
+                        Err(Error::Timeout { peer: 1, .. }) => rec.suspect(1),
+                        other => panic!("expected Timeout from peer 1, got {other:?}"),
+                    }
+                    match rec.poll(&mut g, 0)? {
+                        Some(RecoveryAction::Degrade(m)) => {
+                            assert_eq!(m.dead, vec![1]);
+                            assert_eq!(m.survivors(), vec![0]);
+                        }
+                        other => panic!("expected Degrade, got {other:?}"),
+                    }
+                    g.set_recv_timeout(None);
+                    g.send(1, 606, vec![1.0])?;
+                    assert_eq!(g.recv(1, 607)?, vec![2.0]);
+                } else {
+                    assert_eq!(g.recv(0, 606)?, vec![1.0]);
+                    g.send(0, 607, vec![2.0])?;
+                }
+                g.barrier()
+            })
+        })
+        .collect();
+    for (rank, j) in joins.into_iter().enumerate() {
+        j.join()
+            .unwrap_or_else(|_| panic!("tcp rank {rank} panicked"))
+            .unwrap();
+    }
+}
+
+/// Satellite pin: a worker dying mid-serve must never strand clients.
+/// Rank 1 runs a scripted worker — one good step, then it acks the next
+/// step signal and dies without joining the collective forward — so the
+/// daemon's step errors.  The client that caused that step must receive
+/// a typed reject (the `reject_drain` path), not hang on a response
+/// that cannot come, and `ServeDaemon::run` surfaces the error.
+#[test]
+fn serve_worker_death_rejects_queued_requests_not_hangs() {
+    let Ok(rt) = Runtime::open_default() else { return };
+    let rt = Arc::new(rt);
+    let Some(gate) = rt.manifest.artifact(&format!("gate_fwd_w{FWORKERS}")) else {
+        return;
+    };
+    let dm = gate.inputs[0].shape[1];
+    let cfg = ServeConfig { port: 49370, max_batch: 0, queue_depth: 64, idle_ms: 10 };
+    let daemon = {
+        let rt = rt.clone();
+        std::thread::spawn(move || {
+            run_workers(FWORKERS, move |mut h| {
+                let layer = MoeLayerBuilder::new()
+                    .seed(5)
+                    .build(rt.clone(), FWORKERS, h.rank())?;
+                layer.warm()?;
+                let mut counters = Counters::new();
+                if h.rank() == 0 {
+                    let lp = ServeLoop::new(layer);
+                    let mut d = ServeDaemon::bind(&cfg, lp.layer().nb, lp.layer().dm)?;
+                    assert!(d.run(&lp, &mut h, &mut counters).is_err());
+                    Ok(())
+                } else {
+                    // scripted worker: serve exactly one step, ack the
+                    // second step signal, then die without the forward
+                    assert_eq!(h.recv(0, CTL_TAG)?, vec![CTL_STEP]);
+                    let zero = TensorF32::zeros(&[layer.nb, layer.dm]);
+                    layer.forward_infer(&mut h, zero, &mut counters)?;
+                    assert_eq!(h.recv(0, CTL_TAG)?, vec![CTL_STEP]);
+                    Ok(())
+                }
+            })
+        })
+    };
+    let addr = "127.0.0.1:49370";
+    let mut c = ClientConn::connect(addr).unwrap();
+    let mut data = vec![0f32; dm];
+    Rng::new(17).fill_normal(&mut data, 1.0);
+    // request 1 round-trips while the worker lives
+    c.request(1, 1, &data).unwrap();
+    match c.recv_reply().unwrap() {
+        Reply::Ok { id, data: y } => {
+            assert_eq!(id, 1);
+            assert_eq!(y.len(), dm);
+        }
+        Reply::Rejected { id } => panic!("request {id} rejected while healthy"),
+    }
+    // request 2's step hits the dead worker: a typed reject, not a hang
+    c.request(2, 1, &data).unwrap();
+    match c.recv_reply() {
+        Ok(Reply::Rejected { id }) => assert_eq!(id, 2),
+        other => panic!("expected typed reject, got {other:?}"),
+    }
+    daemon.join().unwrap().unwrap();
 }

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Perf trajectory: run the sim-backed Figure-6 scaling bench (recorded
 # as BENCH_pr5.json), the serving latency bench (recorded as
-# BENCH_pr6.json) and the skewed-routing placement scenario (recorded
-# as BENCH_pr7.json) at the repo root.
+# BENCH_pr6.json), the skewed-routing placement scenario (recorded as
+# BENCH_pr7.json) and the fault/chaos scenario (recorded as
+# BENCH_pr8.json) at the repo root.
 #
 #   scripts/bench_report.sh            # default: 4 chunks, 4 iters
 #   CHUNKS=8 ITERS=8 BUCKET_KB=256 NODES=2 scripts/bench_report.sh
@@ -88,5 +89,16 @@ cargo bench --bench serve_latency -- \
 cargo bench --bench fig6_scale -- --skew \
     --json "$ROOT/BENCH_pr7.json"
 
-echo "bench_report.sh: wrote $ROOT/BENCH_pr5.json, $ROOT/BENCH_pr6.json" \
-     "and $ROOT/BENCH_pr7.json (and runs/fig6_overlap_measured.json)"
+# 5. fault recovery (PR 8): the chaos scenario — a uniform routing
+#    distribution scored healthy vs degraded with one rank quarantined,
+#    shadow-covered (rows conserve, survivors absorb the load) vs
+#    uncovered (the dead share is score-masked away), plus the α-β cost
+#    of the rejoin peer-transfer.  Artifact-free and analytic; the
+#    bench asserts row conservation and degraded ≥ healthy before
+#    writing the record.
+cargo bench --bench fig6_scale -- --chaos \
+    --json "$ROOT/BENCH_pr8.json"
+
+echo "bench_report.sh: wrote $ROOT/BENCH_pr5.json, $ROOT/BENCH_pr6.json," \
+     "$ROOT/BENCH_pr7.json and $ROOT/BENCH_pr8.json" \
+     "(and runs/fig6_overlap_measured.json)"

@@ -21,12 +21,14 @@ fi
 cargo clippy --all-targets -- -D warnings
 # fast-fail on the protocol suites first (comm conformance incl. the
 # bucketed all-reduce matrix, trainer equivalence incl. overlapped
-# grad sync, failure injection incl. death mid-bucketed-sync and the
-# serve client-disconnect containment, the zero-copy/pooled-receive
-# regressions, the serve suite: batched==sequential bitwise
-# equivalence, admission control, queue overflow, session fairness,
-# and the placement suite: shadow/migration bitwise equivalence plus
-# the skew-model acceptance), then the full run
+# grad sync, failure injection incl. death mid-bucketed-sync, the
+# serve containment pins, and the PR-8 recovery pins — chaos-driven
+# degrade bitwise-equal to planned handover on thread and tcp, rejoin
+# from checkpoint + live shadow transfer, recv-timeout-fed suspicion —
+# the zero-copy/pooled-receive regressions, the serve suite:
+# batched==sequential bitwise equivalence, admission control, queue
+# overflow, session fairness, and the placement suite: shadow/migration
+# bitwise equivalence plus the skew-model acceptance), then the full run
 cargo test -q --test comm_conformance --test trainer_equivalence \
     --test failure_injection --test zero_copy_regression \
     --test serve_integration --test placement_equivalence
