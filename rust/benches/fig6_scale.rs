@@ -42,7 +42,11 @@
 //! count from `--bucket-kb`).  The overlapped number is the model's
 //! idealized pipeline bound (see `grad_step_overlapped`'s docs for
 //! what the runtime realises); the bench asserts overlapped ≤
-//! blocking at every scale point.
+//! blocking at every scale point.  PR-9 adds the ZeRO-sharded columns
+//! (`[comm] grad_shard = "zero"`, `sim::NetModel::grad_step_zero` and
+//! the rail-aware `grad_step_zero_hier`): same ring volume, optimiser
+//! shrunk to the owned `1/w` shard — asserted ≤ blocking at every
+//! scale point, and ≤ the flat zero step wherever hier is favourable.
 //!
 //! A `--skew` mode (PR 7) runs the *placement* scenario instead: an
 //! artifact-free analytic study of a skewed routing distribution (one
@@ -140,6 +144,7 @@ fn main() -> fastmoe::Result<()> {
         "overlap_ms/iter", "zerocopy_ms/iter", "hier_blk_ms", "hier_ovl_ms",
         "speedup", "zc_speedup", "agg_GFLOP/s", "efficiency", "a2a_MB/iter",
         "copied_MB/iter", "gsync_blk_ms", "gsync_ovl_ms", "gsync_hier_ms",
+        "gsync_zero_ms", "gsync_zhier_ms",
     ]);
     let mut csv = CsvWriter::create(
         "runs/fig6_scale.csv",
@@ -150,7 +155,7 @@ fn main() -> fastmoe::Result<()> {
             "hier_blocking_ms_per_iter", "hier_overlap_ms_per_iter",
             "a2a_bytes_per_iter", "copied_bytes_per_iter", "alloc_bytes_per_iter",
             "grad_bytes", "grad_step_blocking_ms", "grad_step_overlapped_ms",
-            "grad_step_hier_ms",
+            "grad_step_hier_ms", "grad_step_zero_ms", "grad_step_zero_hier_ms",
         ],
     )?;
     let mut base: Option<f64> = None;
@@ -328,6 +333,20 @@ fn main() -> fastmoe::Result<()> {
             opt_secs,
             grad_buckets,
         );
+        // PR-9 ZeRO columns: the reduce-scatter → shard-Adam →
+        // all-gather schedule — same ring volume as blocking, the
+        // optimiser term shrunk to the owned 1/w shard (flat), and the
+        // rail-aware hier variant (each local rank rings its sub-slice
+        // across nodes with its peer rank).
+        let gsync_zero =
+            net.grad_step_zero(w, grad_bytes, compute_per_iter, opt_secs);
+        assert!(
+            gsync_zero <= gsync_block + 1e-15,
+            "zero-sharded grad step must not score above blocking \
+             (w={w}: {gsync_zero} vs {gsync_block})"
+        );
+        let gsync_zero_hier =
+            net.grad_step_zero_hier(w, l, grad_bytes, compute_per_iter, opt_secs);
         if net.hier_favourable(w, l) {
             // the acceptance property: wherever the model's inter-node
             // bandwidth is the bottleneck, hier scores ≤ flat
@@ -345,6 +364,11 @@ fn main() -> fastmoe::Result<()> {
                 gsync_hier <= gsync_overlap + 1e-15,
                 "hier grad sync must not score above the flat rings \
                  (w={w} l={l}: {gsync_hier} vs {gsync_overlap})"
+            );
+            assert!(
+                gsync_zero_hier <= gsync_zero + 1e-15,
+                "rail-sharded zero step must not score above the flat one \
+                 (w={w} l={l}: {gsync_zero_hier} vs {gsync_zero})"
             );
         }
         let speedup = blocking_iter / overlap_iter.max(1e-12);
@@ -380,6 +404,8 @@ fn main() -> fastmoe::Result<()> {
             format!("{:.1}", gsync_block * 1e3),
             format!("{:.1}", gsync_overlap * 1e3),
             format!("{:.1}", gsync_hier * 1e3),
+            format!("{:.1}", gsync_zero * 1e3),
+            format!("{:.1}", gsync_zero_hier * 1e3),
         ]);
         csv.rowf(&[
             w as f64,
@@ -401,6 +427,8 @@ fn main() -> fastmoe::Result<()> {
             gsync_block * 1e3,
             gsync_overlap * 1e3,
             gsync_hier * 1e3,
+            gsync_zero * 1e3,
+            gsync_zero_hier * 1e3,
         ])?;
         let mut row = BTreeMap::new();
         row.insert("workers".into(), Json::Num(w as f64));
@@ -439,12 +467,17 @@ fn main() -> fastmoe::Result<()> {
         row.insert("hier_blocking_s_per_iter".into(), Json::Num(hier_blk));
         row.insert("hier_overlapped_s_per_iter".into(), Json::Num(hier_ovl));
         row.insert("grad_step_hier_s".into(), Json::Num(gsync_hier));
+        row.insert("grad_step_zero_s".into(), Json::Num(gsync_zero));
+        row.insert(
+            "grad_step_zero_hier_s".into(),
+            Json::Num(gsync_zero_hier),
+        );
         json_rows.push(Json::Object(row));
         println!(
             "  {w} workers: blocking {:.1} ms/iter vs overlapped {:.1} ms/iter \
              vs zero-copy {:.1} ms/iter ({speedup:.2}x / {zc_speedup:.2}x; \
              {:.1} ms wire, {:.0} ms compute, {:.2} MB copied; \
-             grad sync {:.1} -> {:.1} ms over {} buckets)",
+             grad sync {:.1} -> {:.1} ms over {} buckets, zero {:.1} ms)",
             blocking_iter * 1e3,
             overlap_iter * 1e3,
             zerocopy_iter * 1e3,
@@ -454,6 +487,7 @@ fn main() -> fastmoe::Result<()> {
             gsync_block * 1e3,
             gsync_overlap * 1e3,
             grad_buckets,
+            gsync_zero * 1e3,
         );
     }
 

@@ -243,10 +243,19 @@ struct ArBucket {
     seq: u64,
     /// Completed rounds — flat ring: `0..2(n-1)`; hierarchical leader:
     /// `0..(L-1) + 2(nodes-1)` (gathers then the leader ring);
-    /// hierarchical member: `0..1` (the broadcast).
+    /// hierarchical member: `0..1` (the broadcast); zero:
+    /// `0..2(l-1) + 2(nodes-1)` (intra gather, rail ring scatter,
+    /// [pause], rail ring gather, intra exchange).
     round: usize,
     /// Outstanding receive of the current round.
     req: Option<CommRequest>,
+    /// Zero schedule only: this rank's own slice contribution, saved
+    /// when the intra gather's first arrival (local source 0) must
+    /// restart the fold so additions stay in ascending local order.
+    own: Vec<f32>,
+    /// Zero schedule only: reduce-scatter complete, waiting for the
+    /// caller's shard-local optimiser before the gather resumes.
+    paused: bool,
 }
 
 /// Which reduction schedule a [`PendingAllReduce`]'s buckets follow.
@@ -261,16 +270,66 @@ struct ArBucket {
 /// construction); it differs from the flat ring's order, so hier vs
 /// flat agree bitwise only where f32 addition is associative for the
 /// data (pinned on integer-valued payloads by the conformance matrix).
+/// `Zero` is the ZeRO-sharded schedule (reduce-scatter → shard-local
+/// optimiser pause → all-gather), parameterised by a [`Topology`] whose
+/// degenerate flat form (`local_size == 1`, every rank its own node) is
+/// the plain ring split over all ranks.  Under a hierarchical topology
+/// it is *rail-aware*: each local rank first aggregates its slice
+/// within the node (ascending local-rank order, the tree's fold), then
+/// rings across nodes with its peer rank (same local index) — all
+/// `local_size` NICs carry traffic instead of the tree's leader alone.
+/// The nested chunking (`ring_chunk` over nodes, then over local ranks
+/// within each node chunk) preserves the flat ring's / hier tree's
+/// per-element addition order, so zero partials are bit-identical to
+/// the matching replicated schedule by construction.
 #[derive(Clone, Copy, Debug)]
 enum ArSched {
     Flat,
     Hier(Topology),
+    Zero(Topology),
 }
 
 /// Gather tag code of the hier schedule (member buffer → leader).
 const AR_TAG_GATHER: u64 = 130;
 /// Broadcast tag code of the hier schedule (leader result → member).
 const AR_TAG_BCAST: u64 = 131;
+/// Intra-node slice gather tag code of the zero schedule.
+const AR_TAG_ZINTRA: u64 = 132;
+/// Intra-node updated-slice exchange tag code of the zero schedule.
+const AR_TAG_ZXCHG: u64 = 133;
+
+/// Absolute float ranges of rail sub-slice `loc` within every node
+/// chunk of a `len`-float buffer — the pieces rank `(node, loc)`
+/// aggregates in the zero schedule's intra phases.
+fn zero_slice_pieces(
+    len: usize,
+    nodes: usize,
+    l: usize,
+    loc: usize,
+) -> Vec<std::ops::Range<usize>> {
+    (0..nodes)
+        .map(|j| {
+            let c = ring_chunk(len, nodes, j);
+            let s = ring_chunk(c.len(), l, loc);
+            c.start + s.start..c.start + s.end
+        })
+        .collect()
+}
+
+/// The contiguous shard of a `len`-float bucket that `rank` owns (and
+/// shard-updates) under the zero schedule: rail sub-slice `local_of`
+/// of node chunk `(node+1) % nodes` — the chunk the inter-node ring
+/// leaves fully reduced on this rank's node.
+pub(crate) fn zero_shard_range(
+    topo: &Topology,
+    rank: usize,
+    len: usize,
+) -> std::ops::Range<usize> {
+    let nodes = topo.nodes();
+    let c = ring_chunk(len, nodes, (topo.node_of(rank) + 1) % nodes);
+    let s = ring_chunk(c.len(), topo.local_size(), topo.local_of(rank));
+    c.start + s.start..c.start + s.end
+}
 
 /// A bucketed [`Comm::all_reduce_sum`] whose rings are still in
 /// flight, returned by [`Comm::all_reduce_start`].  Each bucket is an
@@ -317,6 +376,7 @@ impl PendingAllReduce {
         match self.sched {
             ArSched::Flat => self.post_round_flat(comm, i),
             ArSched::Hier(topo) => self.post_round_hier(comm, i, topo),
+            ArSched::Zero(topo) => self.post_round_zero(comm, i, topo),
         }
     }
 
@@ -332,6 +392,7 @@ impl PendingAllReduce {
         match self.sched {
             ArSched::Flat => self.apply_round_flat(comm, i, data),
             ArSched::Hier(topo) => self.apply_round_hier(comm, i, topo, data),
+            ArSched::Zero(topo) => self.apply_round_zero(comm, i, topo, data),
         }
     }
 
@@ -512,6 +573,314 @@ impl PendingAllReduce {
         Ok(())
     }
 
+    /// Zero schedule, posting side.  Four phases of `round`, with
+    /// `intra = l-1` and `inter = nodes-1`:
+    ///
+    /// * `0..intra` — intra-node slice gather: every rank's foreign
+    ///   slices depart to their local owners at round 0; each round
+    ///   bookmarks one local source (ascending local-rank order, so the
+    ///   owner's fold matches the hier tree's leader fold).
+    /// * `intra..intra+inter` — rail ring reduce-scatter: the ordinary
+    ///   [`ring_round`] geometry over *node* indices, run between peer
+    ///   ranks (same local index) on each rail, restricted to this
+    ///   rail's sub-slice of each node chunk.
+    /// * **pause** — reduce-scatter complete; the caller runs its
+    ///   shard-local optimiser via
+    ///   [`PendingAllReduce::wait_bucket_shard`].
+    /// * `..intra+2*inter` — rail ring all-gather of the updated shards.
+    /// * `..2*intra+2*inter` — intra-node exchange: every rank's
+    ///   updated slice departs to all local peers at phase entry; each
+    ///   round bookmarks one local source's slice.
+    fn post_round_zero<C: Comm + ?Sized>(
+        &mut self,
+        comm: &mut C,
+        i: usize,
+        topo: Topology,
+    ) -> Result<()> {
+        let rank = self.rank;
+        let nodes = topo.nodes();
+        let l = topo.local_size();
+        let node = topo.node_of(rank);
+        let loc = topo.local_of(rank);
+        let (intra, inter) = (l - 1, nodes - 1);
+        let b = self.buckets[i].as_mut().expect("bucket active");
+        let len = b.buf.len();
+        let r = b.round;
+        if r < intra {
+            if r == 0 {
+                for m in 0..l {
+                    if m == loc {
+                        continue;
+                    }
+                    let mut payload = Vec::new();
+                    for p in zero_slice_pieces(len, nodes, l, m) {
+                        payload.extend_from_slice(&b.buf[p]);
+                    }
+                    comm.isend(node * l + m, (b.seq << 8) | AR_TAG_ZINTRA, payload)?;
+                }
+            }
+            let src = if r < loc { r } else { r + 1 };
+            b.req = Some(comm.irecv(node * l + src, (b.seq << 8) | AR_TAG_ZINTRA)?);
+        } else if r < intra + 2 * inter {
+            // both ring phases: ring_round over node indices (the zero
+            // ring's rounds line up 1:1 with the flat ring's)
+            let (send_idx, _, tag, _) = ring_round(nodes, node, r - intra, b.seq);
+            let c = ring_chunk(len, nodes, send_idx);
+            let s = ring_chunk(c.len(), l, loc);
+            let payload = b.buf[c.start + s.start..c.start + s.end].to_vec();
+            comm.isend(((node + 1) % nodes) * l + loc, tag, payload)?;
+            b.req =
+                Some(comm.irecv(((node + nodes - 1) % nodes) * l + loc, tag)?);
+        } else {
+            let rd = r - intra - 2 * inter;
+            if rd == 0 {
+                let mut payload = Vec::new();
+                for p in zero_slice_pieces(len, nodes, l, loc) {
+                    payload.extend_from_slice(&b.buf[p]);
+                }
+                for m in 0..l {
+                    if m != loc {
+                        comm.isend(
+                            node * l + m,
+                            (b.seq << 8) | AR_TAG_ZXCHG,
+                            payload.clone(),
+                        )?;
+                    }
+                }
+            }
+            let src = if rd < loc { rd } else { rd + 1 };
+            b.req = Some(comm.irecv(node * l + src, (b.seq << 8) | AR_TAG_ZXCHG)?);
+        }
+        Ok(())
+    }
+
+    /// Zero schedule, arrival side.  Mirrors [`Self::post_round_zero`]'s
+    /// phases; sets `paused` (instead of posting) once the
+    /// reduce-scatter half completes, and retires the bucket after the
+    /// final intra exchange.
+    fn apply_round_zero<C: Comm + ?Sized>(
+        &mut self,
+        comm: &mut C,
+        i: usize,
+        topo: Topology,
+        data: Vec<f32>,
+    ) -> Result<()> {
+        let rank = self.rank;
+        let nodes = topo.nodes();
+        let l = topo.local_size();
+        let node = topo.node_of(rank);
+        let loc = topo.local_of(rank);
+        let (intra, inter) = (l - 1, nodes - 1);
+        let b = self.buckets[i].as_mut().expect("bucket active");
+        let len = b.buf.len();
+        let r = b.round;
+        let add_pieces = |buf: &mut [f32], pieces: &[std::ops::Range<usize>], src: &[f32]| {
+            let mut off = 0;
+            for p in pieces {
+                for (x, y) in buf[p.clone()].iter_mut().zip(&src[off..off + p.len()]) {
+                    *x += *y;
+                }
+                off += p.len();
+            }
+        };
+        let copy_pieces = |buf: &mut [f32], pieces: &[std::ops::Range<usize>], src: &[f32]| {
+            let mut off = 0;
+            for p in pieces {
+                buf[p.clone()].copy_from_slice(&src[off..off + p.len()]);
+                off += p.len();
+            }
+        };
+        if r < intra {
+            let pieces = zero_slice_pieces(len, nodes, l, loc);
+            let want: usize = pieces.iter().map(|p| p.len()).sum();
+            if data.len() != want {
+                return Err(Error::Comm(format!(
+                    "zero all-reduce: intra payload {} floats, slice is {want}",
+                    data.len()
+                )));
+            }
+            if loc > 0 && r == 0 {
+                // local source 0 precedes this rank in the fold: save
+                // our own contribution and restart from the wire data
+                b.own = pieces
+                    .iter()
+                    .flat_map(|p| b.buf[p.clone()].iter().copied())
+                    .collect();
+                copy_pieces(&mut b.buf, &pieces, &data);
+            } else {
+                if r == loc && loc > 0 {
+                    // our own contribution folds in at position `loc`
+                    let own = std::mem::take(&mut b.own);
+                    add_pieces(&mut b.buf, &pieces, &own);
+                }
+                add_pieces(&mut b.buf, &pieces, &data);
+            }
+            let _ = comm.recycle(vec![data]);
+            b.round += 1;
+            if b.round == intra && loc + 1 == l && loc > 0 {
+                // this rank is the last local source: fold own last
+                let own = std::mem::take(&mut b.own);
+                add_pieces(&mut b.buf, &pieces, &own);
+            }
+            if b.round == intra + inter {
+                // single node: the reduce-scatter is already complete
+                b.paused = true;
+                return Ok(());
+            }
+            return self.post_round(comm, i);
+        }
+        if r < intra + 2 * inter {
+            let (_, recv_idx, _, gather) = ring_round(nodes, node, r - intra, b.seq);
+            let c = ring_chunk(len, nodes, recv_idx);
+            let s = ring_chunk(c.len(), l, loc);
+            let range = c.start + s.start..c.start + s.end;
+            if data.len() != range.len() {
+                return Err(Error::Comm(format!(
+                    "zero all-reduce: ring payload {} floats, sub-chunk is {}",
+                    data.len(),
+                    range.len()
+                )));
+            }
+            if gather {
+                b.buf[range].copy_from_slice(&data);
+            } else {
+                for (x, y) in b.buf[range].iter_mut().zip(&data) {
+                    *x += y;
+                }
+            }
+        } else {
+            let rd = r - intra - 2 * inter;
+            let src = if rd < loc { rd } else { rd + 1 };
+            let pieces = zero_slice_pieces(len, nodes, l, src);
+            let want: usize = pieces.iter().map(|p| p.len()).sum();
+            if data.len() != want {
+                return Err(Error::Comm(format!(
+                    "zero all-reduce: exchange payload {} floats, slice is {want}",
+                    data.len()
+                )));
+            }
+            copy_pieces(&mut b.buf, &pieces, &data);
+        }
+        let _ = comm.recycle(vec![data]);
+        b.round += 1;
+        if b.round == intra + inter {
+            b.paused = true;
+            return Ok(());
+        }
+        if b.round == 2 * (intra + inter) {
+            let buf = self.buckets[i].take().expect("bucket active").buf;
+            self.done[i] = Some(buf);
+            return Ok(());
+        }
+        self.post_round(comm, i)
+    }
+
+    /// Clear bucket `i`'s shard pause, if set, and post its gather
+    /// phase.  Returns whether a resume happened.
+    fn resume_if_paused<C: Comm + ?Sized>(
+        &mut self,
+        comm: &mut C,
+        i: usize,
+    ) -> Result<bool> {
+        let resumed = match self.buckets[i].as_mut() {
+            Some(b) if b.paused => {
+                b.paused = false;
+                true
+            }
+            _ => false,
+        };
+        if resumed {
+            self.post_round(comm, i)?;
+            comm.flush()?;
+        }
+        Ok(resumed)
+    }
+
+    /// Drive a zero-scheduled bucket to its shard point — reduce-
+    /// scatter complete, this rank's owned shard fully reduced — and
+    /// return `(range, buf)`: the shard's float range within the bucket
+    /// and the bucket's whole working buffer (only `buf[range]` holds
+    /// reduced data; the rest is partial sums in transit).  The caller
+    /// updates `buf[range]` in place (scale, shard-local optimiser,
+    /// write the *updated params* back into the range) and then calls
+    /// [`PendingAllReduce::gather_bucket`], which all-gathers exactly
+    /// those ranges from every rank.  Same cross-rank ordering rule as
+    /// [`PendingAllReduce::wait_bucket`].  Errors on non-zero
+    /// schedules; under a single-rank world the shard is the entire
+    /// (already final) buffer.
+    pub fn wait_bucket_shard<C: Comm + ?Sized>(
+        &mut self,
+        comm: &mut C,
+        i: usize,
+    ) -> Result<(std::ops::Range<usize>, &mut [f32])> {
+        let ArSched::Zero(topo) = self.sched else {
+            return Err(Error::Comm(
+                "wait_bucket_shard: not a zero-sharded reduction".into(),
+            ));
+        };
+        if self.done[i].is_some() {
+            // single-rank short-circuit: the bucket went straight to
+            // done and this rank owns all of it
+            let buf = self.done[i].as_mut().expect("done");
+            let len = buf.len();
+            return Ok((0..len, buf.as_mut_slice()));
+        }
+        if self.buckets[i].is_none() {
+            return Err(Error::Comm(format!(
+                "all-reduce bucket {i} already consumed"
+            )));
+        }
+        while !self.buckets[i].as_ref().expect("bucket active").paused {
+            let Some(req) = self.buckets[i].as_mut().expect("bucket active").req.take()
+            else {
+                return Err(Error::Comm(format!(
+                    "all-reduce bucket {i}: ring interrupted by an earlier error"
+                )));
+            };
+            let data = comm.wait(req)?.unwrap_or_default();
+            self.apply_round(comm, i, data)?;
+        }
+        let b = self.buckets[i].as_mut().expect("bucket active");
+        let range = zero_shard_range(&topo, self.rank, b.buf.len());
+        Ok((range, b.buf.as_mut_slice()))
+    }
+
+    /// Resume a zero-scheduled bucket past its shard pause: all-gather
+    /// every rank's updated shard and return the full buffer.  Must
+    /// follow [`PendingAllReduce::wait_bucket_shard`] on the same
+    /// bucket (on every rank, in the same shared bucket order).
+    pub fn gather_bucket<C: Comm + ?Sized>(
+        &mut self,
+        comm: &mut C,
+        i: usize,
+    ) -> Result<Vec<f32>> {
+        if !matches!(self.sched, ArSched::Zero(_)) {
+            return Err(Error::Comm(
+                "gather_bucket: not a zero-sharded reduction".into(),
+            ));
+        }
+        if let Some(buf) = self.done[i].take() {
+            return Ok(buf);
+        }
+        if self.buckets[i].is_none() {
+            return Err(Error::Comm(format!(
+                "all-reduce bucket {i} already consumed"
+            )));
+        }
+        self.resume_if_paused(comm, i)?;
+        while self.buckets[i].is_some() {
+            let Some(req) = self.buckets[i].as_mut().expect("bucket active").req.take()
+            else {
+                return Err(Error::Comm(format!(
+                    "all-reduce bucket {i}: ring interrupted by an earlier error"
+                )));
+            };
+            let data = comm.wait(req)?.unwrap_or_default();
+            self.apply_round(comm, i, data)?;
+        }
+        Ok(self.done[i].take().expect("bucket completed"))
+    }
+
     /// Drive bucket `i`'s ring to completion and return the reduced
     /// buffer.  Other buckets' in-flight rounds stay on the wire (their
     /// out-of-order arrivals park in the backend).
@@ -541,6 +910,12 @@ impl PendingAllReduce {
             )));
         }
         while self.buckets[i].is_some() {
+            // a zero-scheduled bucket driven as a plain all-reduce:
+            // skip the shard pause (no optimiser step, the gathered
+            // result is the ordinary reduced sum)
+            if self.resume_if_paused(comm, i)? {
+                continue;
+            }
             let Some(req) = self.buckets[i].as_mut().unwrap().req.take() else {
                 // an earlier wait errored after taking this round's
                 // request; the ring cannot be resumed coherently
@@ -565,6 +940,11 @@ impl PendingAllReduce {
     /// without its posted round.
     pub fn finish<C: Comm + ?Sized>(mut self, comm: &mut C) -> Result<Vec<Vec<f32>>> {
         loop {
+            // zero-scheduled buckets driven as a plain all-reduce skip
+            // their shard pause (see `wait_bucket`)
+            for i in 0..self.buckets.len() {
+                self.resume_if_paused(comm, i)?;
+            }
             let mut idx = Vec::new();
             let mut reqs = Vec::new();
             for (i, slot) in self.buckets.iter_mut().enumerate() {
@@ -654,7 +1034,80 @@ pub(crate) fn all_reduce_start_hier<C: Comm + ?Sized>(
             comm.isend(leader, (seq << 8) | AR_TAG_GATHER, buf)?;
             Vec::new()
         };
-        pending.buckets[i] = Some(ArBucket { buf, want, seq, round: 0, req: None });
+        pending.buckets[i] = Some(ArBucket {
+            buf,
+            want,
+            seq,
+            round: 0,
+            req: None,
+            own: Vec::new(),
+            paused: false,
+        });
+        pending.post_round(comm, i)?;
+    }
+    comm.flush()?;
+    Ok(pending)
+}
+
+/// Start a bucketed ZeRO-sharded reduction ([`ArSched::Zero`]):
+/// reduce-scatter each bucket so every rank owns a contiguous fully-
+/// reduced shard ([`zero_shard_range`]), pause for the caller's
+/// shard-local optimiser ([`PendingAllReduce::wait_bucket_shard`]),
+/// then all-gather the updated buffers
+/// ([`PendingAllReduce::gather_bucket`]).
+///
+/// `topo` picks the geometry.  A flat topology (`local_size == 1`) is
+/// the plain ring split over all ranks — partials bit-identical to
+/// [`Comm::all_reduce_sum`] by shared-helper construction.  A
+/// hierarchical topology is *rail-aware*: each local rank aggregates
+/// its slice within the node and rings across nodes with its peer
+/// rank, spreading the inter-node traffic over all `local_size` NICs
+/// where the tree funnels it through the leader — with partials
+/// bit-identical to the hier tree's (same fold order).
+pub(crate) fn all_reduce_zero_start<C: Comm + ?Sized>(
+    comm: &mut C,
+    topo: &Topology,
+    bufs: Vec<Vec<f32>>,
+) -> Result<PendingAllReduce> {
+    let n = comm.size();
+    let rank = comm.rank();
+    debug_assert_eq!(topo.world(), n);
+    let mut pending = PendingAllReduce {
+        n,
+        rank,
+        sched: ArSched::Zero(*topo),
+        buckets: (0..bufs.len()).map(|_| None).collect(),
+        done: (0..bufs.len()).map(|_| None).collect(),
+    };
+    if n == 1 {
+        for (slot, buf) in pending.done.iter_mut().zip(bufs) {
+            *slot = Some(buf);
+        }
+        return Ok(pending);
+    }
+    let nodes = topo.nodes();
+    let l = topo.local_size();
+    comm.counters().add("allreduce_buckets", pending.buckets.len() as u64);
+    comm.counters().add("allreduce_zero_calls", 1);
+    for (i, buf) in bufs.into_iter().enumerate() {
+        let seq = comm.next_seq();
+        let want = buf.len();
+        comm.counters().add("allreduce_calls", 1);
+        // egress: the intra gather + exchange each ship (l-1)/l of the
+        // buffer on the local links, the rail ring ships
+        // 2(nodes-1)/nodes of this rank's 1/l slice across nodes
+        let intra = if l > 1 { 2 * want * 4 * (l - 1) / l } else { 0 };
+        let ring = if nodes > 1 { (want / l) * 4 * 2 * (nodes - 1) / nodes } else { 0 };
+        comm.counters().add("allreduce_bytes", (intra + ring) as u64);
+        pending.buckets[i] = Some(ArBucket {
+            buf,
+            want,
+            seq,
+            round: 0,
+            req: None,
+            own: Vec::new(),
+            paused: false,
+        });
         pending.post_round(comm, i)?;
     }
     comm.flush()?;
@@ -863,11 +1316,39 @@ pub trait Comm {
             self.counters()
                 .add("allreduce_bytes", (buf.len() * 4 * 2 * (n - 1) / n) as u64);
             let want = buf.len();
-            pending.buckets[i] = Some(ArBucket { buf, want, seq, round: 0, req: None });
+            pending.buckets[i] = Some(ArBucket {
+                buf,
+                want,
+                seq,
+                round: 0,
+                req: None,
+                own: Vec::new(),
+                paused: false,
+            });
             pending.post_round(self, i)?;
         }
         self.flush()?;
         Ok(pending)
+    }
+
+    /// Start a bucketed ZeRO-sharded reduction on the flat geometry
+    /// (every rank its own "node" — the plain ring split over all
+    /// ranks).  [`TopoComm`] overrides this to the rail schedule of its
+    /// hierarchical topology.  Complete each bucket with
+    /// [`PendingAllReduce::wait_bucket_shard`] (shard-local optimiser)
+    /// then [`PendingAllReduce::gather_bucket`] — or `wait_bucket` /
+    /// `finish`, which skip the pause and yield the plain reduced sum.
+    fn all_reduce_zero(&mut self, bufs: Vec<Vec<f32>>) -> Result<PendingAllReduce> {
+        let topo = Topology::flat(self.size());
+        all_reduce_zero_start(self, &topo, bufs)
+    }
+
+    /// The contiguous float range of a `len`-float bucket this rank
+    /// owns (and shard-updates) under [`Comm::all_reduce_zero`]'s
+    /// schedule.  Deterministic in `(rank, size, len)`, so shard-sized
+    /// optimiser state can be laid out before any collective runs.
+    fn zero_shard(&self, len: usize) -> std::ops::Range<usize> {
+        zero_shard_range(&Topology::flat(self.size()), self.rank(), len)
     }
 
     /// Ring all-reduce (sum): reduce-scatter then all-gather, the
@@ -1742,5 +2223,186 @@ mod tests {
             let recv: usize = got.iter().map(|(_, r)| r).sum();
             prop_assert_eq(sent, recv)
         });
+    }
+
+    #[test]
+    fn zero_all_reduce_matches_blocking_ring_bitwise() {
+        // driven as a plain all-reduce (wait_bucket / finish skip the
+        // shard pause), the flat zero schedule must reproduce the
+        // blocking ring's bits — same chunking, same addition order
+        run_workers(4, |mut h| {
+            let r = h.rank();
+            let lens = [0usize, 7, 64, 1000, 3];
+            let bufs: Vec<Vec<f32>> = lens
+                .iter()
+                .enumerate()
+                .map(|(b, &l)| {
+                    (0..l)
+                        .map(|i| (r + 1) as f32 * 1.3 + b as f32 * 0.7 + i as f32 * 0.01)
+                        .collect()
+                })
+                .collect();
+            let mut want = bufs.clone();
+            for w in want.iter_mut() {
+                h.all_reduce_sum(w)?;
+            }
+            let pending = h.all_reduce_zero(bufs.clone())?;
+            let got = pending.finish(&mut h)?;
+            assert_eq!(got, want, "zero finish != blocking ring");
+            let mut pending = h.all_reduce_zero(bufs)?;
+            for b in (0..lens.len()).rev() {
+                assert_eq!(pending.wait_bucket(&mut h, b)?, want[b], "bucket {b}");
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn zero_shard_gather_roundtrip() {
+        // the real usage: wait to the shard point, check the owned
+        // range holds exactly the blocking ring's partial, overwrite it
+        // with position-coded values, gather — every rank must end with
+        // the full position-coded buffer (each float delivered by its
+        // one owner)
+        run_workers(4, |mut h| {
+            let r = h.rank();
+            let lens = [37usize, 256];
+            let bufs: Vec<Vec<f32>> = lens
+                .iter()
+                .map(|&l| (0..l).map(|i| (r * 100 + i) as f32).collect())
+                .collect();
+            let mut want = bufs.clone();
+            for w in want.iter_mut() {
+                h.all_reduce_sum(w)?;
+            }
+            let mut pending = h.all_reduce_zero(bufs)?;
+            for (b, &l) in lens.iter().enumerate() {
+                assert_eq!(h.zero_shard(l), zero_shard_range(&Topology::flat(4), r, l));
+                let (range, buf) = pending.wait_bucket_shard(&mut h, b)?;
+                assert_eq!(range, h.zero_shard(l), "bucket {b}");
+                assert_eq!(
+                    &buf[range.clone()],
+                    &want[b][range.clone()],
+                    "bucket {b}: shard partial != blocking ring"
+                );
+                for i in range.clone() {
+                    buf[i] = b as f32 * 10_000.0 + i as f32;
+                }
+                let full = pending.gather_bucket(&mut h, b)?;
+                let expect: Vec<f32> =
+                    (0..l).map(|i| b as f32 * 10_000.0 + i as f32).collect();
+                assert_eq!(full, expect, "bucket {b}: gathered updates");
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn zero_hier_matches_tree_bitwise() {
+        // the rail schedule's fold order (ascending local ranks within
+        // the node, then the node ring) is the hier tree's, so the two
+        // agree bitwise — and the rail shard/gather roundtrip covers
+        // every float exactly once
+        let topo = Topology::new(4, 2).unwrap();
+        run_workers(4, move |mut h| {
+            let r = h.rank();
+            let lens = [0usize, 7, 64, 500];
+            let bufs: Vec<Vec<f32>> = lens
+                .iter()
+                .enumerate()
+                .map(|(b, &l)| {
+                    (0..l)
+                        .map(|i| (r + 2) as f32 * 0.9 + b as f32 * 0.4 + i as f32 * 0.02)
+                        .collect()
+                })
+                .collect();
+            let want = all_reduce_start_hier(&mut h, &topo, bufs.clone())?
+                .finish(&mut h)?;
+            let got =
+                all_reduce_zero_start(&mut h, &topo, bufs.clone())?.finish(&mut h)?;
+            assert_eq!(got, want, "rail zero != hier tree");
+            // shard → position-coded update → gather under the rail
+            let mut pending = all_reduce_zero_start(&mut h, &topo, bufs)?;
+            for (b, &l) in lens.iter().enumerate() {
+                let (range, buf) = pending.wait_bucket_shard(&mut h, b)?;
+                assert_eq!(range, zero_shard_range(&topo, r, l), "bucket {b}");
+                assert_eq!(
+                    &buf[range.clone()],
+                    &want[b][range.clone()],
+                    "bucket {b}: rail shard partial != tree"
+                );
+                for i in range.clone() {
+                    buf[i] = b as f32 * 10_000.0 + i as f32;
+                }
+                let full = pending.gather_bucket(&mut h, b)?;
+                let expect: Vec<f32> =
+                    (0..l).map(|i| b as f32 * 10_000.0 + i as f32).collect();
+                assert_eq!(full, expect, "bucket {b}: rail gathered updates");
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn zero_shard_ranges_partition_the_buffer() {
+        // every (world, local_size, len) partition: shard ranges are
+        // disjoint, ordered by construction within each node chunk, and
+        // cover the buffer exactly
+        for (w, l) in [(1, 1), (2, 1), (4, 1), (4, 2), (6, 3), (8, 2), (8, 4)] {
+            let topo = if l == 1 {
+                Topology::flat(w)
+            } else {
+                Topology::new(w, l).unwrap()
+            };
+            for len in [0usize, 1, 7, 64, 1000] {
+                let mut covered = vec![0u8; len];
+                for rank in 0..w {
+                    for i in zero_shard_range(&topo, rank, len) {
+                        covered[i] += 1;
+                    }
+                }
+                assert!(
+                    covered.iter().all(|&c| c == 1),
+                    "w={w} l={l} len={len}: {covered:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_single_worker_owns_everything() {
+        run_workers(1, |mut h| {
+            let bufs = vec![vec![1.5f32, -2.0], Vec::new()];
+            let mut pending = h.all_reduce_zero(bufs.clone())?;
+            let (range, buf) = pending.wait_bucket_shard(&mut h, 0)?;
+            assert_eq!(range, 0..2);
+            buf[0] = 9.0;
+            assert_eq!(pending.gather_bucket(&mut h, 0)?, vec![9.0, -2.0]);
+            assert_eq!(pending.gather_bucket(&mut h, 1)?, Vec::<f32>::new());
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn zero_rejects_double_consume_and_wrong_schedule() {
+        run_workers(2, |mut h| {
+            let bufs = vec![vec![h.rank() as f32; 8]];
+            let mut pending = h.all_reduce_zero(bufs.clone())?;
+            let _ = pending.wait_bucket_shard(&mut h, 0)?;
+            let _ = pending.gather_bucket(&mut h, 0)?;
+            assert!(pending.gather_bucket(&mut h, 0).is_err());
+            assert!(pending.wait_bucket_shard(&mut h, 0).is_err());
+            // shard calls on a non-zero schedule are refused up front
+            let mut plain = h.all_reduce_start(bufs)?;
+            assert!(plain.wait_bucket_shard(&mut h, 0).is_err());
+            assert!(plain.gather_bucket(&mut h, 0).is_err());
+            let _ = plain.wait_bucket(&mut h, 0)?;
+            Ok(())
+        })
+        .unwrap();
     }
 }

@@ -726,6 +726,28 @@ impl<C: Comm> Comm for TopoComm<C> {
             self.inner.all_reduce_start(bufs)
         }
     }
+
+    /// Rail-aware ZeRO schedule: under a hierarchical topology each
+    /// local rank aggregates its slice within the node and rings across
+    /// nodes with its peer rank (same local index), so every NIC
+    /// carries inter-node traffic instead of the tree's leader alone.
+    /// Flat topologies fall through to the inner (plain-ring) schedule.
+    fn all_reduce_zero(&mut self, bufs: Vec<Vec<f32>>) -> Result<PendingAllReduce> {
+        if self.topo.hierarchical() && self.inner.size() > 1 {
+            let topo = self.topo;
+            crate::comm::all_reduce_zero_start(self, &topo, bufs)
+        } else {
+            self.inner.all_reduce_zero(bufs)
+        }
+    }
+
+    fn zero_shard(&self, len: usize) -> std::ops::Range<usize> {
+        if self.topo.hierarchical() && self.inner.size() > 1 {
+            crate::comm::zero_shard_range(&self.topo, self.inner.rank(), len)
+        } else {
+            self.inner.zero_shard(len)
+        }
+    }
 }
 
 #[cfg(test)]

@@ -179,6 +179,9 @@ impl MoeConfig {
 ///                     # trainers, overlapped with backward / host Adam
 /// bucket_kb = 512     # target gradient-bucket payload (KiB; tensors are
 ///                     # never split across buckets)
+/// grad_shard = "none" # ZeRO optimizer-state sharding: "none" | "zero"
+///                     # (reduce-scatter grads, shard-local Adam on the
+///                     # owned slice, all-gather the updated params)
 /// topology = "hier"   # collective routing policy: "flat" (default, the
 ///                     # seed ring) | "hier" (node-aware: leader-aggregated
 ///                     # all-to-all, two-level tree all-reduce)
@@ -222,6 +225,17 @@ pub struct CommConfig {
     /// is a run of whole same-tag tensors up to this size.  Must be
     /// ≥ 1.
     pub bucket_kb: usize,
+    /// ZeRO-style optimizer-state sharding over the replicated
+    /// (`world`-scope) parameters: `"none"` (the default — full Adam
+    /// state on every rank) or `"zero"` — each tensor reduce-scatters
+    /// so every rank owns one contiguous shard, Adam steps only the
+    /// owned slice (state cut ~`1/world`), and the *updated params*
+    /// all-gather back.  Bit-identical to the replicated path; under
+    /// `topology = "hier"` the schedule is rail-aware (every local
+    /// rank rings across nodes with its peer, no leader bottleneck).
+    /// Incompatible with `grad_overlap` (the zero schedule is already
+    /// bucketed and nonblocking).
+    pub grad_shard: String,
     /// How the ranks agree the *adaptive* chunk count (`chunks = 0`)
     /// from their exchanged wire:compute ratios: `"mean"` (the
     /// default — average balance) or `"max"` (straggler-aware: the
@@ -252,6 +266,7 @@ impl Default for CommConfig {
             progress: false,
             grad_overlap: false,
             bucket_kb: 512,
+            grad_shard: "none".into(),
             chunk_policy: "mean".into(),
             topology: "flat".into(),
             nodes: 0,
@@ -265,8 +280,9 @@ impl CommConfig {
     /// `--overlap` / `--no-overlap` / `--no-pool` / `--progress` /
     /// `--no-progress` / `--grad-overlap` / `--no-grad-overlap` flags
     /// and `--chunks N` (`0` = adaptive) / `--chunk-policy mean|max` /
-    /// `--bucket-kb N` / `--topology flat|hier` / `--nodes N` /
-    /// `--local-size N` overrides.
+    /// `--bucket-kb N` / `--grad-shard none|zero` /
+    /// `--topology flat|hier` / `--nodes N` / `--local-size N`
+    /// overrides.
     pub fn from_args(args: &crate::cli::Args) -> Result<CommConfig> {
         let mut cfg = if let Some(path) = args.get("config") {
             ConfigFile::load(path)?.comm()?
@@ -296,6 +312,8 @@ impl CommConfig {
         }
         cfg.chunks = args.usize_or("chunks", cfg.chunks)?;
         cfg.bucket_kb = args.usize_or("bucket-kb", cfg.bucket_kb)?;
+        cfg.grad_shard =
+            args.choice_or("grad-shard", GRAD_SHARD_KINDS, &cfg.grad_shard)?;
         cfg.chunk_policy =
             args.choice_or("chunk-policy", CHUNK_POLICIES, &cfg.chunk_policy)?;
         cfg.topology = args.choice_or("topology", TOPOLOGY_KINDS, &cfg.topology)?;
@@ -309,6 +327,19 @@ impl CommConfig {
             return Err(Error::Config(
                 "comm.bucket_kb must be ≥ 1 (tensors are never split; \
                  use grad_overlap = false to disable bucketing)"
+                    .into(),
+            ));
+        }
+        if !GRAD_SHARD_KINDS.contains(&self.grad_shard.as_str()) {
+            return Err(Error::Config(format!(
+                "comm.grad_shard must be one of {GRAD_SHARD_KINDS:?}, got `{}`",
+                self.grad_shard
+            )));
+        }
+        if self.grad_shard == "zero" && self.grad_overlap {
+            return Err(Error::Config(
+                "comm.grad_shard = \"zero\" is already a bucketed \
+                 nonblocking schedule — turn grad_overlap off"
                     .into(),
             ));
         }
@@ -389,6 +420,9 @@ impl CommConfig {
 
 /// Valid `[comm] topology` values.
 pub const TOPOLOGY_KINDS: &[&str] = &["flat", "hier"];
+
+/// Valid `[comm] grad_shard` values.
+pub const GRAD_SHARD_KINDS: &[&str] = &["none", "zero"];
 
 /// Valid `[comm] chunk_policy` values — aliased from
 /// [`crate::moe::ChunkPolicy::KINDS`], the single source of truth.
@@ -758,6 +792,7 @@ impl ConfigFile {
             c.progress = s.bool_or("progress", c.progress);
             c.grad_overlap = s.bool_or("grad_overlap", c.grad_overlap);
             c.bucket_kb = s.usize_or("bucket_kb", c.bucket_kb);
+            c.grad_shard = s.str_or("grad_shard", &c.grad_shard);
             c.chunk_policy = s.str_or("chunk_policy", &c.chunk_policy);
             c.topology = s.str_or("topology", &c.topology);
             c.nodes = s.usize_or("nodes", c.nodes);
@@ -969,6 +1004,21 @@ window = 4
         assert!(cfg.grad_overlap);
         assert_eq!(cfg.bucket_kb, 32);
         assert!(CommConfig::from_args(&argv("x --bucket-kb 0")).is_err());
+        // ZeRO sharding: off by default, togglable, validated
+        assert_eq!(cfg.grad_shard, "none");
+        let cfg = CommConfig::from_args(&argv("x --grad-shard zero")).unwrap();
+        assert_eq!(cfg.grad_shard, "zero");
+        assert!(CommConfig::from_args(&argv("x --grad-shard half")).is_err());
+        // the zero schedule is already bucketed+nonblocking: grad_overlap
+        // on top is rejected rather than silently ignored
+        assert!(
+            CommConfig::from_args(&argv("x --grad-shard zero --grad-overlap"))
+                .is_err()
+        );
+        let c = ConfigFile::parse("[comm]\ngrad_shard = \"zero\"\n").unwrap();
+        assert_eq!(c.comm().unwrap().grad_shard, "zero");
+        let c = ConfigFile::parse("[comm]\ngrad_shard = \"ddp\"\n").unwrap();
+        assert!(c.comm().is_err());
     }
 
     #[test]

@@ -238,6 +238,14 @@ impl MoeLayerBuilder {
         self
     }
 
+    /// Override ZeRO optimizer-state sharding directly (`[comm]
+    /// grad_shard = "zero"`): the gate's Adam state splits across
+    /// ranks and steps through [`DistMoeLayer::apply_grads_zero`].
+    pub fn grad_shard(mut self, on: bool) -> MoeLayerBuilder {
+        self.comm.grad_shard = if on { "zero" } else { "none" }.into();
+        self
+    }
+
     /// Seed for parameter init (and the noisy gate's noise stream).
     pub fn seed(mut self, seed: u64) -> MoeLayerBuilder {
         self.seed = seed;
@@ -282,6 +290,13 @@ impl MoeLayerBuilder {
     ) -> Result<DistMoeLayer> {
         let g = probe_geometry(&rt, workers)?;
         let ne_global = workers * g.ne_local;
+        if self.comm.grad_overlap && self.comm.grad_shard == "zero" {
+            return Err(Error::Config(
+                "comm.grad_shard = \"zero\" is already a bucketed \
+                 nonblocking schedule — turn grad_overlap off"
+                    .into(),
+            ));
+        }
 
         let mut gate_rng = Rng::new(self.seed ^ 0x6a7e);
         let mut wg = TensorF32::zeros(&[g.dm, ne_global]);
@@ -333,6 +348,7 @@ impl MoeLayerBuilder {
                 self.comm.chunks.clamp(1, workers)
             },
             grad_overlap: self.comm.grad_overlap,
+            grad_shard: self.comm.grad_shard == "zero",
             topo,
             chunk_policy,
             balance_coef: self.cfg.balance_coef as f32,
@@ -404,6 +420,13 @@ pub struct DistMoeLayer {
     /// (`[comm] grad_overlap`): the backward returns `dwg`/`dbg`
     /// already world-averaged, flagged by `LayerGrads::gate_synced`.
     pub grad_overlap: bool,
+    /// ZeRO-shard the replicated gate's optimizer state (`[comm]
+    /// grad_shard = "zero"`): the trainer steps the gate through
+    /// [`Self::apply_grads_zero`] — reduce-scatter, shard-local Adam
+    /// on the owned slice, all-gather of the updated params — instead
+    /// of the blocking grad reduce + full-state Adam.  Expert shards
+    /// keep full state (their grads are already local-final).
+    pub grad_shard: bool,
     /// Node topology of the worker world (`[comm] topology/nodes/
     /// local_size`): orders the pipelined exchange's chunks
     /// most-local-first.  Flat = the ring schedule, bit-for-bit.
@@ -555,6 +578,68 @@ impl DistMoeLayer {
         let mut ps: Vec<&mut TensorF32> = vec![&mut self.wg, &mut self.bg];
         ps.extend(self.expert.params_mut().into_iter().map(|(_, t)| t));
         opt.update_refs(&mut ps, &gs)
+    }
+
+    /// The ZeRO optimiser step ([`Self::grad_shard`]): the *raw* gate
+    /// grads ride one fused schedule — reduce-scatter so each rank's
+    /// owned slice is fully summed, scale + shard-local Adam on that
+    /// slice only, then all-gather of the **updated gate params** —
+    /// while the expert slots step locally with full state (their
+    /// grads are already final).  Replaces the trainer's blocking
+    /// gate reduce *and* [`Self::apply_grads`]; `opt` must hold
+    /// shard-sized state for slots 0/1 (see
+    /// [`MoeLayerTrainer::new`](super::MoeLayerTrainer)).  Bit-identical
+    /// to the replicated path: the shard's partial sums match the
+    /// blocking ring's by construction, and Adam's recurrence is
+    /// per-element.
+    pub fn apply_grads_zero(
+        &mut self,
+        comm: &mut impl Comm,
+        opt: &mut Adam,
+        grads: &LayerGrads,
+    ) -> Result<()> {
+        {
+            let pnames: Vec<&str> = self.expert.params().iter().map(|(n, _)| *n).collect();
+            let gnames: Vec<&str> = grads.expert.iter().map(|(n, _)| *n).collect();
+            if pnames != gnames {
+                return Err(Error::Shape(format!(
+                    "expert grad slots {gnames:?} do not match params {pnames:?}"
+                )));
+            }
+        }
+        if grads.gate_synced {
+            return Err(Error::Config(
+                "apply_grads_zero: gate grads arrived pre-averaged \
+                 (grad_overlap) — the zero schedule needs the raw sums"
+                    .into(),
+            ));
+        }
+        opt.begin_step();
+        let bufs = vec![grads.dwg.data.clone(), grads.dbg.data.clone()];
+        let mut pending = comm.all_reduce_zero(bufs)?;
+        let scale = 1.0 / self.workers as f32;
+        for (j, p) in [&mut self.wg, &mut self.bg].into_iter().enumerate() {
+            let (range, buf) = pending.wait_bucket_shard(comm, j)?;
+            if opt.shard.get(j) != Some(&Some(range.clone())) {
+                return Err(Error::Config(format!(
+                    "apply_grads_zero: slot {j} optimizer shard {:?} != comm \
+                     shard {range:?} (layer topology vs comm backend mismatch?)",
+                    opt.shard.get(j)
+                )));
+            }
+            if self.workers > 1 {
+                for x in buf[range.clone()].iter_mut() {
+                    *x *= scale;
+                }
+            }
+            opt.update_shard(j, &mut p.data[range.clone()], &buf[range.clone()])?;
+            buf[range.clone()].copy_from_slice(&p.data[range]);
+            p.data = pending.gather_bucket(comm, j)?;
+        }
+        for (i, (_, t)) in self.expert.params_mut().into_iter().enumerate() {
+            opt.update_slot(2 + i, t, &grads.expert[i].1)?;
+        }
+        Ok(())
     }
 
     /// Pre-compile every stage executable this layer can touch.

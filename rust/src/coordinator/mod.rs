@@ -39,9 +39,10 @@ pub use dist_moe::{DistMoeLayer, LayerGrads, MoeLayerBuilder, MoeLayerState};
 pub use serve_loop::{ServeLoop, CTL_STEP, CTL_STOP, CTL_TAG};
 pub use trainer::{DistTrainer, MoeLayerTrainer, MoeStepStats, StepStats, Trainer};
 
-use crate::comm::{Comm, PendingAllReduce};
+use crate::comm::{Comm, PendingAllReduce, Topology};
 use crate::config::CommConfig;
-use crate::error::Result;
+use crate::error::{Error, Result};
+use crate::model::Adam;
 use crate::runtime::SyncTag;
 use crate::tensor::TensorF32;
 
@@ -89,6 +90,13 @@ pub struct GradSync {
     /// Target bucket payload in bytes (`[comm] bucket_kb`); tensors
     /// are never split, so a bucket is a run of whole tensors.
     pub bucket_bytes: usize,
+    /// ZeRO-sharded optimiser mode (`[comm] grad_shard = "zero"`):
+    /// `World`-scope tensors reduce-scatter so each rank owns one
+    /// contiguous shard, Adam runs on the owned slice only, and the
+    /// updated params all-gather back ([`GradSync::sync_zero`]).  Takes
+    /// precedence over `overlap` — the zero schedule is already
+    /// bucketed and nonblocking.
+    pub shard: bool,
 }
 
 impl GradSync {
@@ -100,6 +108,7 @@ impl GradSync {
             mode,
             overlap: false,
             bucket_bytes: CommConfig::default().bucket_kb * 1024,
+            shard: false,
         }
     }
 
@@ -107,6 +116,7 @@ impl GradSync {
     pub fn comm_config(mut self, cfg: &CommConfig) -> GradSync {
         self.overlap = cfg.grad_overlap;
         self.bucket_bytes = cfg.bucket_kb.max(1) * 1024;
+        self.shard = cfg.grad_shard == "zero";
         self
     }
 
@@ -259,6 +269,136 @@ impl GradSync {
         Ok(())
     }
 
+    /// The owned shard range per slot under the zero schedule: `Some`
+    /// for `World`-scope slots (whose Adam state shrinks to the owned
+    /// range — pass the result to [`Adam::new_sharded`]), `None` for
+    /// `Group`/`Local` slots (full-tensor state).  Deterministic in
+    /// (shapes, tags, rank, topology), so the layout is fixed before
+    /// any collective runs — checkpoints persist exactly the owned
+    /// slices.
+    pub fn shard_plan(
+        &self,
+        params: &[TensorF32],
+        tags: &[SyncTag],
+        topo: &Topology,
+        rank: usize,
+    ) -> Vec<Option<std::ops::Range<usize>>> {
+        assert_eq!(params.len(), tags.len());
+        params
+            .iter()
+            .zip(tags)
+            .map(|(p, &t)| {
+                if self.scope_of(t, topo.world()) == BucketScope::World {
+                    Some(crate::comm::zero_shard_range(topo, rank, p.data.len()))
+                } else {
+                    Option::None
+                }
+            })
+            .collect()
+    }
+
+    /// The fused ZeRO sync + optimiser step (`grad_shard = "zero"`).
+    ///
+    /// `World` buckets all launch their zero schedules first (every
+    /// tensor is its own ring, so shard ranges are per-slot), then
+    /// complete in plan order: reduce-scatter pauses with this rank's
+    /// owned shard fully reduced, the shard is scaled by `1/world` and
+    /// fed to [`Adam::update_shard`] against the matching param slice,
+    /// the *updated params* are written back into the wire buffer, and
+    /// the all-gather half broadcasts them — so every rank ends the
+    /// step with identical full params while holding only `1/world` of
+    /// the optimizer state.  Later buckets' scatter rounds stay in
+    /// flight while earlier buckets run host Adam, preserving the
+    /// overlapped pipeline.  `Group` buckets run the blocking subgroup
+    /// reduction + full-tensor Adam; `Local` slots run full-tensor Adam
+    /// on their raw grads.
+    ///
+    /// On return, `World` slots' `grads` buffers are recycled scratch
+    /// (contents undefined); the optimiser must have been built with
+    /// [`GradSync::shard_plan`] over the *same* topology the comm
+    /// shards with, which is re-checked per bucket against
+    /// [`Comm::zero_shard`].
+    pub fn sync_zero(
+        &self,
+        comm: &mut impl Comm,
+        grads: &mut [TensorF32],
+        tags: &[SyncTag],
+        params: &mut [TensorF32],
+        opt: &mut Adam,
+    ) -> Result<()> {
+        assert_eq!(grads.len(), tags.len());
+        assert_eq!(params.len(), grads.len());
+        let world = comm.size();
+        let buckets = self.plan(grads, tags, world);
+        opt.begin_step();
+        // Same two-pass launch order as sync_overlapped: every zero
+        // schedule's round-0 frames hit the wire before a Group
+        // bucket's blocking gather can stall them.
+        let mut pend = Vec::with_capacity(buckets.len());
+        for b in &buckets {
+            pend.push(match b.scope {
+                BucketScope::World => {
+                    let bufs: Vec<Vec<f32>> = b
+                        .indices
+                        .iter()
+                        .map(|&i| std::mem::take(&mut grads[i].data))
+                        .collect();
+                    Some(comm.all_reduce_zero(bufs)?)
+                }
+                _ => Option::None,
+            });
+        }
+        for b in &buckets {
+            if b.scope != BucketScope::World {
+                self.start_bucket(comm, grads, b)?;
+            }
+        }
+        let scale = 1.0 / world as f32;
+        for (b, p) in buckets.iter().zip(pend) {
+            match b.scope {
+                BucketScope::World => {
+                    let mut pending = p.expect("world bucket launched");
+                    for (j, &i) in b.indices.iter().enumerate() {
+                        let (range, buf) = pending.wait_bucket_shard(comm, j)?;
+                        if opt.shard.get(i) != Some(&Some(range.clone())) {
+                            return Err(Error::msg(format!(
+                                "sync_zero: slot {i} optimizer shard {:?} != comm \
+                                 shard {range:?} (was the Adam built via shard_plan \
+                                 over the comm's topology?)",
+                                opt.shard.get(i)
+                            )));
+                        }
+                        if world > 1 {
+                            for x in buf[range.clone()].iter_mut() {
+                                *x *= scale;
+                            }
+                        }
+                        // Shard-local Adam updates the owned param slice
+                        // in place; the wire buffer then carries the
+                        // *updated params* into the all-gather half.
+                        opt.update_shard(
+                            i,
+                            &mut params[i].data[range.clone()],
+                            &buf[range.clone()],
+                        )?;
+                        buf[range.clone()].copy_from_slice(&params[i].data[range]);
+                        let full = pending.gather_bucket(comm, j)?;
+                        // The gathered buffer *is* the updated params;
+                        // hand the stale param buffer to grads so the
+                        // allocation pool stays warm.
+                        grads[i].data = std::mem::replace(&mut params[i].data, full);
+                    }
+                }
+                _ => {
+                    for &i in &b.indices {
+                        opt.update_slot(i, &mut params[i], &grads[i])?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Average gradients according to their tags.
     ///
     /// * `world` — all-reduce over **all** ranks.
@@ -381,6 +521,96 @@ mod tests {
         // the plan covers every index exactly once, in order
         let all: Vec<usize> = buckets.iter().flat_map(|b| b.indices.clone()).collect();
         assert_eq!(all, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_sync_matches_replicated_adam_bitwise() {
+        // Two bucket budgets: one forcing several World buckets, one
+        // putting the whole World run in a single bucket.
+        for bucket_bytes in [64usize, 1 << 20] {
+            let got = run_workers(4, move |mut h| {
+                let r = h.rank();
+                // grads vary per rank; params start identical everywhere
+                let mkg = |n: usize, s: u64| {
+                    TensorF32::from_vec(
+                        &[n],
+                        (0..n)
+                            .map(|i| {
+                                ((r as u64 * 31 + s * 7 + i as u64) % 97) as f32
+                                    * 0.013
+                                    - 0.4
+                            })
+                            .collect(),
+                    )
+                    .unwrap()
+                };
+                let mkp = |n: usize, s: u64| {
+                    TensorF32::from_vec(
+                        &[n],
+                        (0..n)
+                            .map(|i| {
+                                ((s * 13 + i as u64) % 89) as f32 * 0.017 - 0.7
+                            })
+                            .collect(),
+                    )
+                    .unwrap()
+                };
+                let shapes = [130usize, 7, 64, 3, 200];
+                let tags = [World, None, DataParallel, World, World];
+                let dp = if r < 2 { vec![0, 1] } else { vec![2, 3] };
+                let grads0: Vec<TensorF32> = shapes
+                    .iter()
+                    .zip(1u64..)
+                    .map(|(&n, s)| mkg(n, s))
+                    .collect();
+                let params0: Vec<TensorF32> = shapes
+                    .iter()
+                    .zip(1u64..)
+                    .map(|(&n, s)| mkp(n, s))
+                    .collect();
+
+                let mut refsync = GradSync::world(4, ExpertMode::Sharded);
+                refsync.dp_group = dp.clone();
+                let mut zsync = GradSync::world(4, ExpertMode::Sharded);
+                zsync.dp_group = dp;
+                zsync.shard = true;
+                zsync.bucket_bytes = bucket_bytes;
+
+                // replicated reference: blocking sync + full-state Adam
+                let mut pa = params0.clone();
+                let mut oa = Adam::new(&pa, 0.01);
+                // zero path: shard-sized state from the deterministic plan
+                let topo = Topology::flat(4);
+                let shard = zsync.shard_plan(&params0, &tags, &topo, r);
+                let mut pb = params0.clone();
+                let mut ob = Adam::new_sharded(&pb, 0.01, &shard)?;
+
+                for _ in 0..3 {
+                    let mut ga = grads0.clone();
+                    refsync.sync(&mut h, &mut ga, &tags)?;
+                    oa.update(&mut pa, &ga)?;
+                    let mut gb = grads0.clone();
+                    zsync.sync_zero(&mut h, &mut gb, &tags, &mut pb, &mut ob)?;
+                }
+                for (i, (a, b)) in pa.iter().zip(&pb).enumerate() {
+                    assert_eq!(
+                        a.data, b.data,
+                        "bucket_bytes {bucket_bytes} slot {i}: zero path changed bits"
+                    );
+                }
+                // World slots hold only the owned slice of moment state.
+                for (i, s) in shard.iter().enumerate() {
+                    if let Some(rg) = s {
+                        assert_eq!(ob.m[i].data.len(), rg.len());
+                        assert!(rg.len() < shapes[i].max(4));
+                    } else {
+                        assert_eq!(ob.m[i].data.len(), shapes[i]);
+                    }
+                }
+                Ok(())
+            });
+            got.unwrap();
+        }
     }
 
     #[test]

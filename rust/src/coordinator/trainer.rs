@@ -145,29 +145,46 @@ impl DistTrainer {
         workers: usize,
         lr: f32,
     ) -> Result<DistTrainer> {
-        Self::with_comm(rt, model, seed, workers, lr, &CommConfig::default())
+        Self::with_comm(rt, model, seed, workers, 0, lr, &CommConfig::default())
     }
 
     /// [`DistTrainer::new`] with the `[comm]` section's gradient-sync
     /// knobs: `grad_overlap` switches the step to the bucketed
     /// nonblocking all-reduce pipelined against host Adam, `bucket_kb`
-    /// sizes the buckets.  Parameters stay bit-identical either way.
+    /// sizes the buckets, `grad_shard = "zero"` shards the Adam state
+    /// (this rank holds only its owned slice of every world-replicated
+    /// tensor's moments — which is why the builder needs `rank`).
+    /// Parameters stay bit-identical in every mode.
     pub fn with_comm(
         rt: &Runtime,
         model: &str,
         seed: u64,
         workers: usize,
+        rank: usize,
         lr: f32,
         comm_cfg: &CommConfig,
     ) -> Result<DistTrainer> {
         let entry = rt.manifest.model(model)?.clone();
         let params = ParamStore::init(&entry, seed)?;
-        let opt = Adam::new(&params.tensors, lr);
         let grad_exe = rt.executable(&entry.grad_step)?;
         // In this fused-graph emulation every worker holds all experts,
         // so expert grads are averaged (mathematically identical to one
         // global expert fed all routed tokens — see coordinator docs).
         let sync = GradSync::world(workers, ExpertMode::Replicated).comm_config(comm_cfg);
+        let opt = if sync.shard {
+            // ZeRO: moment state shrinks to the owned shard of every
+            // World-scope slot.  The layout depends only on (shapes,
+            // tags, rank, topology) — it is fixed here, before any
+            // collective runs, and checkpoints persist exactly the
+            // owned slices (resume needs the same world + topology;
+            // anything else fails the load-time shape check loudly).
+            let tags: Vec<_> = params.entries.iter().map(|e| e.tag).collect();
+            let topo = comm_cfg.topology_for(workers.max(1))?;
+            let shard = sync.shard_plan(&params.tensors, &tags, &topo, rank);
+            Adam::new_sharded(&params.tensors, lr, &shard)?
+        } else {
+            Adam::new(&params.tensors, lr)
+        };
         Ok(DistTrainer {
             entry,
             params,
@@ -191,6 +208,13 @@ impl DistTrainer {
 
     /// Write this rank's full state — params, Adam moments, counters —
     /// to `rank<r>.fmoe` under `dir` via the atomic tmp+rename writer.
+    ///
+    /// Under `grad_shard = "zero"` the `m{i}`/`v{i}` tensors are this
+    /// rank's *owned slices* (flat `[shard_len]` tensors), so the set
+    /// of per-rank checkpoints together holds exactly one copy of the
+    /// optimizer state.  Resume needs the same world size and topology
+    /// — a mismatched shard layout fails the load-time shape check
+    /// rather than silently mis-slicing.
     pub fn save_checkpoint(&self, dir: &str, rank: usize) -> Result<()> {
         let meta = TensorF32::from_vec(
             &[2],
@@ -279,7 +303,19 @@ impl DistTrainer {
 
         // tag-aware gradient synchronisation (the paper's §3.2 module)
         let tags: Vec<_> = self.params.entries.iter().map(|e| e.tag).collect();
-        if self.sync.overlap && comm.size() > 1 {
+        if self.sync.shard {
+            // ZeRO: one fused schedule per bucket — reduce-scatter,
+            // shard-local Adam on the owned slice, all-gather of the
+            // *updated params* — with later buckets' rounds in flight
+            // while earlier buckets step (see GradSync::sync_zero).
+            self.sync.sync_zero(
+                comm,
+                &mut grads,
+                &tags,
+                &mut self.params.tensors,
+                &mut self.opt,
+            )?;
+        } else if self.sync.overlap && comm.size() > 1 {
             // Overlapped: the shared launch/complete protocol, with
             // host Adam as the per-bucket hook — while bucket i's
             // parameters step, each later bucket has its current ring
@@ -365,7 +401,32 @@ impl MoeLayerTrainer {
             .into_iter()
             .map(|(_, t)| TensorF32::zeros(&t.shape))
             .collect();
-        let opt = Adam::new(&shapes, lr);
+        let opt = if layer.grad_shard {
+            // ZeRO (`[comm] grad_shard = "zero"`): the replicated gate
+            // slots hold only this rank's owned slice of moment state;
+            // expert slots keep full state (their grads are local-final
+            // and never reduced).  The shard layout follows the layer's
+            // topology, which the comm wrapper shares by construction
+            // (both come from the same `[comm]` section); a mismatch
+            // fails loudly inside `apply_grads_zero`.
+            let shard: Vec<Option<std::ops::Range<usize>>> = shapes
+                .iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    (i < 2).then(|| {
+                        crate::comm::zero_shard_range(
+                            layer.topology(),
+                            layer.rank,
+                            t.data.len(),
+                        )
+                    })
+                })
+                .collect();
+            Adam::new_sharded(&shapes, lr, &shard)
+                .expect("gate shard ranges lie inside the params by construction")
+        } else {
+            Adam::new(&shapes, lr)
+        };
         let monitor = LoadMonitor::new(layer.workers * layer.ne_local);
         MoeLayerTrainer {
             layer,
@@ -467,7 +528,9 @@ impl MoeLayerTrainer {
                     *v *= scale;
                 }
             }
-            None if ws > 1 && !grads.gate_synced => {
+            // ZeRO gate sync happens inside `apply_grads_zero` below
+            // (reduce-scatter + shard Adam + gather, one schedule).
+            None if ws > 1 && !grads.gate_synced && !self.layer.grad_shard => {
                 comm.all_reduce_sum(&mut grads.dwg.data)?;
                 comm.all_reduce_sum(&mut grads.dbg.data)?;
                 let scale = 1.0 / ws as f32;
@@ -481,7 +544,11 @@ impl MoeLayerTrainer {
             None => {}
         }
         self.monitor.record(&state.counts_kept);
-        self.layer.apply_grads(&mut self.opt, &grads)?;
+        if self.layer.grad_shard {
+            self.layer.apply_grads_zero(comm, &mut self.opt, &grads)?;
+        } else {
+            self.layer.apply_grads(&mut self.opt, &grads)?;
+        }
         // Keep shadow replicas bit-identical to their owners (a no-op
         // without shadows), then let the rebalancer — if any — agree on
         // and execute a layout change at this step boundary.
@@ -530,6 +597,22 @@ impl MoeLayerTrainer {
                 "degraded mode needs blocking gradient sync \
                  ([comm] grad_overlap = false): the overlapped gate \
                  bucket rings span the full world"
+                    .into(),
+            ));
+        }
+        if self.layer.grad_shard {
+            // Survivors hold none of the dead rank's owned moment
+            // slices, so degraded-mode training would continue with a
+            // hole in the optimizer state.  Re-sharding those slices
+            // onto survivors at the degrade boundary is future work
+            // (see ROADMAP); until then ZeRO runs fail fast here and
+            // `[fault] recover = "abort"` restarts from checkpoints,
+            // which persist exactly the owned slices per rank.
+            return Err(Error::Config(
+                "degraded mode cannot re-shard ZeRO optimizer state \
+                 ([comm] grad_shard = \"none\", or [fault] recover = \
+                 \"abort\"): the dead rank's owned moment slices have \
+                 no surviving copy"
                     .into(),
             ));
         }

@@ -20,9 +20,9 @@
 //! | module | role |
 //! |---|---|
 //! | [`runtime`] | PJRT client + artifact registry + executable cache; [`runtime::Executable::run_refs`] executes from *borrowed* host tensors (no owned-argument staging clone) |
-//! | [`comm`] | process groups: nonblocking `isend`/`irecv` + [`comm::CommRequest`] handles, decomposed all-to-all-v (consume arrivals as they land), bucketed nonblocking all-reduce ([`comm::Comm::all_reduce_start`] → [`comm::PendingAllReduce`], per-bucket rings completed in arrival order, bit-identical to the blocking ring), spent-send reclaim + receive-buffer recycle ([`comm::Comm::recycle`]) for buffer pools, dissemination barrier, death-aware thread-channel receives (a crashed worker errors its peers instead of deadlocking them); the TCP backend's *progress engine* drains socket arrivals during expert compute, completes `wait_all` in true arrival order, and reads frames into recycled buffers (allocation-free receive path), while its deferred-flush mode keeps liveness with keepalive probe frames; the **topology layer** ([`comm::Topology`] + [`comm::Comm::split`] → [`comm::ProcessGroup`] sub-groups with their own rank/size/tag namespaces, on which every collective runs unchanged) and the policy wrapper [`comm::TopoComm`] (`[comm] topology = "hier"`: leader-aggregated all-to-all, two-level tree all-reduce as an alternate schedule under `PendingAllReduce`) |
+//! | [`comm`] | process groups: nonblocking `isend`/`irecv` + [`comm::CommRequest`] handles, decomposed all-to-all-v (consume arrivals as they land), bucketed nonblocking all-reduce ([`comm::Comm::all_reduce_start`] → [`comm::PendingAllReduce`], per-bucket rings completed in arrival order, bit-identical to the blocking ring; since PR 9 also the ZeRO schedule [`comm::Comm::all_reduce_zero`] — the same rings paused at their reduce-scatter midpoint ([`comm::PendingAllReduce::wait_bucket_shard`]) so a trainer can run shard-local Adam before the all-gather half carries the *updated parameters*, rail-aware across nodes under a hierarchical topology), spent-send reclaim + receive-buffer recycle ([`comm::Comm::recycle`]) for buffer pools, dissemination barrier, death-aware thread-channel receives (a crashed worker errors its peers instead of deadlocking them); the TCP backend's *progress engine* drains socket arrivals during expert compute, completes `wait_all` in true arrival order, and reads frames into recycled buffers (allocation-free receive path), while its deferred-flush mode keeps liveness with keepalive probe frames; the **topology layer** ([`comm::Topology`] + [`comm::Comm::split`] → [`comm::ProcessGroup`] sub-groups with their own rank/size/tag namespaces, on which every collective runs unchanged) and the policy wrapper [`comm::TopoComm`] (`[comm] topology = "hier"`: leader-aggregated all-to-all, two-level tree all-reduce as an alternate schedule under `PendingAllReduce`) |
 //! | [`moe`] | the §3.1 hierarchy: [`moe::Gate`] policies (top-k / switch / noisy top-k, with the wired balance-loss gradient), [`moe::ExpertShard`] shards (FFN), over the fixed dispatch substrate (plans, ring-offset exchange chunks — locality-ordered under a hierarchical topology ([`moe::chunk_peer_groups_topo`]), slice-view chunk staging ([`moe::ChunkSlice`]), capacity buckets, adaptive chunk picking with the mean/max agreement policies ([`moe::agree_chunks`]), load monitor, balance loss) |
-//! | [`coordinator`] | workers, the distributed MoE layer + [`coordinator::MoeLayerBuilder`] (assembles gate/expert from `[moe]`, exchange schedule from `[comm]` — blocking, or zero-copy chunked dispatch/compute/combine overlap with the count round folded into chunk 0 and a step-persistent buffer pool), tag-aware [`coordinator::GradSync`] (blocking, or `[comm] grad_overlap`: bucketed nonblocking sync — gate-grad buckets fly during the expert backward, `DistTrainer` pipelines bucket completions against host Adam; bit-identical either way), train loops |
+//! | [`coordinator`] | workers, the distributed MoE layer + [`coordinator::MoeLayerBuilder`] (assembles gate/expert from `[moe]`, exchange schedule from `[comm]` — blocking, or zero-copy chunked dispatch/compute/combine overlap with the count round folded into chunk 0 and a step-persistent buffer pool), tag-aware [`coordinator::GradSync`] (blocking, or `[comm] grad_overlap`: bucketed nonblocking sync — gate-grad buckets fly during the expert backward, `DistTrainer` pipelines bucket completions against host Adam; bit-identical either way; or `[comm] grad_shard = "zero"`: the ZeRO-sharded optimizer — reduce-scatter, shard-local Adam on ~1/workers of the state, all-gather of updated params, bit-identical to replicated Adam), train loops |
 //! | [`serve`] | the `fastmoe serve` inference daemon: a rank-0 front end (TCP listener speaking the mesh frame format to lightweight client sessions) feeding a continuous-batching [`serve::Batcher`] (per-step `max_batch` admission, bounded `queue_depth`, explicit rejections), resident [`coordinator::ServeLoop`] workers on the forward-only zero-copy path, per-request latency [`metrics::Histogram`]s, and a thin [`serve::ClientConn`] for load generation |
 //! | [`placement`] | dynamic expert placement (§6 "future work", closed-loop): [`placement::PlacementPlan`] (expert → owner + shadow replicas, plan-aware routing for [`moe::DispatchPlan::build_routed`]), the pure rank-symmetric [`placement::decide`] policy (`[placement] policy = "shadow" \| "migrate"`), and the [`placement::Rebalancer`] driving it from windowed load counts over an all-reduce — executed between steps by [`coordinator::DistMoeLayer::apply_delta`] (shadow replication with owner-broadcast Adam mirroring, or checkpoint-format expert migration with its optimiser state) |
 //! | [`fault`] | elastic fault recovery: dissemination-gossip membership agreement over the reserved [`fault::FAULT_TAG`] band, the `[fault] recover = "abort" \| "degrade" \| "rejoin"` policy (quarantine-zombie degraded mode with shadow-replica failover + score-masked zero-weight drops, checkpoint/peer-transfer rejoin), and the deterministic [`fault::ChaosSchedule`] harness (`kill@N:rR`, `delay@N:rR:MS`, `rejoin@N:rR`) fired at step boundaries by [`fault::Recovery::poll`] on both backends |

@@ -56,7 +56,7 @@ fn main() {
         commands: vec![
             ("info", "print artifact and model inventory"),
             ("train", "single-worker fused training loop (Figure 7)"),
-            ("dist-train", "multi-worker training with tag-aware grad sync (--grad-overlap --bucket-kb N --topology flat|hier --nodes N --ckpt-interval N --ckpt-dir D --resume D)"),
+            ("dist-train", "multi-worker training with tag-aware grad sync (--grad-overlap --bucket-kb N --grad-shard none|zero --topology flat|hier --nodes N --ckpt-interval N --ckpt-dir D --resume D)"),
             ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk, --overlap --chunks N [0=adaptive] --chunk-policy mean|max --no-pool --progress --grad-overlap --topology flat|hier --nodes N --local-size N --placement static|shadow|migrate --placement-threshold R --placement-window N --recover abort|degrade|rejoin --ckpt-interval N --ckpt-dir D --resume D --recv-timeout-ms N --chaos \"kill@N:rR,…\")"),
             ("fmoefy", "Listing-1: dense config -> MoE config at equal FLOPs"),
             ("serve", "long-lived inference daemon: continuous batching over resident expert-parallel workers (--workers W --serve-port P --max-batch N --queue-depth N --idle-ms N --backend local|tcp --hosts a:p,b:p)"),
@@ -207,7 +207,9 @@ fn dist_train(args: &Args) -> Result<()> {
         workers,
         cfg.model,
         cfg.steps,
-        if comm_cfg.grad_overlap {
+        if comm_cfg.grad_shard == "zero" {
+            format!("zero-sharded ({} KiB buckets)", comm_cfg.bucket_kb)
+        } else if comm_cfg.grad_overlap {
             format!("overlapped ({} KiB buckets)", comm_cfg.bucket_kb)
         } else {
             "blocking".into()
@@ -221,8 +223,9 @@ fn dist_train(args: &Args) -> Result<()> {
         // [comm] topology selects the collective routing (hier = tree
         // all-reduce under the bucketed sync); flat is a pass-through
         let mut h = TopoComm::new(h, comm_cfg.topology_for(workers)?)?;
-        let mut tr = DistTrainer::with_comm(&rt, &model, seed, workers, lr, &comm_cfg)?
-            .with_checkpointing(fault_cfg.ckpt_interval, &fault_cfg.ckpt_dir);
+        let mut tr =
+            DistTrainer::with_comm(&rt, &model, seed, workers, h.rank(), lr, &comm_cfg)?
+                .with_checkpointing(fault_cfg.ckpt_interval, &fault_cfg.ckpt_dir);
         if let Some(dir) = &resume {
             tr.load_checkpoint(dir, h.rank())?;
         }
@@ -301,6 +304,7 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
             "--chunks".into(), comm_cfg.chunks.to_string(),
             "--chunk-policy".into(), comm_cfg.chunk_policy.clone(),
             "--bucket-kb".into(), comm_cfg.bucket_kb.to_string(),
+            "--grad-shard".into(), comm_cfg.grad_shard.clone(),
             "--topology".into(), comm_cfg.topology.clone(),
             "--nodes".into(), comm_cfg.nodes.to_string(),
             "--local-size".into(), comm_cfg.local_size.to_string(),

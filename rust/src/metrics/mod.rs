@@ -29,6 +29,15 @@ impl Stopwatch {
 }
 
 /// Streaming summary statistics (Welford).
+///
+/// `n`/mean/std/min/max are exact for the whole stream.  Percentiles
+/// are served from a bounded, *deterministically seeded* reservoir
+/// ([`Summary::RESERVOIR`] samples, algorithm R with an inline
+/// xorshift64): exact while the stream fits the reservoir — every
+/// existing few-hundred-sample bench is unchanged — and an unbiased
+/// estimate beyond it, instead of the previous unbounded `samples`
+/// vector (a slow leak in any long-lived process that kept a `Summary`
+/// per metric).  The fixed seed keeps runs reproducible.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     pub n: u64,
@@ -37,11 +46,27 @@ pub struct Summary {
     pub min: f64,
     pub max: f64,
     samples: Vec<f64>,
+    /// xorshift64 state for reservoir eviction; lazily (re)seeded so a
+    /// `Default`-constructed summary never sticks at the zero state.
+    rng: u64,
 }
 
 impl Summary {
+    /// Reservoir capacity: percentiles are exact below this, sampled
+    /// above it.  4096 f64s ≈ 32 KiB per summary, a hard ceiling.
+    pub const RESERVOIR: usize = 4096;
+
     pub fn new() -> Self {
         Self { min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = if self.rng == 0 { 0x9E37_79B9_7F4A_7C15 } else { self.rng };
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng = x;
+        x
     }
 
     pub fn add(&mut self, x: f64) {
@@ -51,7 +76,16 @@ impl Summary {
         self.m2 += d * (x - self.mean);
         self.min = self.min.min(x);
         self.max = self.max.max(x);
-        self.samples.push(x);
+        if self.samples.len() < Self::RESERVOIR {
+            self.samples.push(x);
+        } else {
+            // algorithm R: the n-th sample replaces a reservoir slot
+            // with probability RESERVOIR/n
+            let j = (self.next_u64() % self.n) as usize;
+            if j < Self::RESERVOIR {
+                self.samples[j] = x;
+            }
+        }
     }
 
     pub fn mean(&self) -> f64 {
@@ -303,6 +337,42 @@ mod tests {
         assert_eq!(s.p50(), 10.0);
         assert_eq!(s.p95(), 10.0);
         assert_eq!(Summary::new().p50(), 0.0);
+    }
+
+    #[test]
+    fn summary_reservoir_is_bounded_and_deterministic() {
+        // Pre-fix, `samples` grew one f64 per `add` forever.  The
+        // reservoir must cap memory, keep the exact aggregates, stay
+        // a sane percentile estimate, and reproduce bit-for-bit across
+        // runs (fixed seed).
+        let feed = |s: &mut Summary| {
+            for i in 0..100_000u64 {
+                // a shuffled-looking but deterministic 0..1000 stream
+                s.add((i.wrapping_mul(7919) % 1000) as f64);
+            }
+        };
+        let mut s = Summary::new();
+        feed(&mut s);
+        assert_eq!(s.samples.len(), Summary::RESERVOIR);
+        assert_eq!(s.n, 100_000);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 999.0);
+        // uniform 0..1000: the sampled p50 lands near 500
+        let p50 = s.p50();
+        assert!((p50 - 500.0).abs() < 60.0, "p50 = {p50}");
+        assert!(s.percentile(95.0) > s.percentile(50.0));
+        // identical stream → identical reservoir → identical bits
+        let mut t = Summary::new();
+        feed(&mut t);
+        assert_eq!(s.p50().to_bits(), t.p50().to_bits());
+        assert_eq!(s.p95().to_bits(), t.p95().to_bits());
+        // below the cap the reservoir is the whole stream: exact
+        let mut small = Summary::new();
+        for i in 0..100 {
+            small.add(i as f64);
+        }
+        assert_eq!(small.samples.len(), 100);
+        assert_eq!(small.p50(), 50.0);
     }
 
     #[test]

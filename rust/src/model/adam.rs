@@ -11,6 +11,13 @@ pub const B2: f32 = 0.999;
 pub const EPS: f32 = 1e-8;
 
 /// Adam state for one parameter set.
+///
+/// Under ZeRO sharding (`[comm] grad_shard = "zero"`) a slot's moments
+/// cover only the contiguous shard this rank owns — `shard[slot]`
+/// records the owned float range within the full tensor, and the slot
+/// is stepped through [`Adam::update_shard`] instead of
+/// [`Adam::update_slot`].  Unsharded slots (`shard[slot] == None`, the
+/// only kind [`Adam::new`] makes) hold full-tensor moments.
 #[derive(Clone, Debug)]
 pub struct Adam {
     pub lr: f32,
@@ -18,6 +25,8 @@ pub struct Adam {
     pub m: Vec<TensorF32>,
     pub v: Vec<TensorF32>,
     pub step: u64,
+    /// Owned float range per slot (`None` = full tensor, replicated).
+    pub shard: Vec<Option<std::ops::Range<usize>>>,
 }
 
 impl Adam {
@@ -28,7 +37,47 @@ impl Adam {
             m: shapes.iter().map(|t| TensorF32::zeros(&t.shape)).collect(),
             v: shapes.iter().map(|t| TensorF32::zeros(&t.shape)).collect(),
             step: 0,
+            shard: shapes.iter().map(|_| None).collect(),
         }
+    }
+
+    /// Adam state with ZeRO-sharded slots: where `shard[i]` is `Some`,
+    /// slot `i`'s moments are sized to the owned range alone (the ~1/w
+    /// optimizer-memory cut), flat-shaped — checkpoints save them as
+    /// slice-sized `m{i}`/`v{i}` tensors, so a resume must use the same
+    /// world size and topology for the shapes to reconcile.
+    pub fn new_sharded(
+        shapes: &[TensorF32],
+        lr: f32,
+        shard: &[Option<std::ops::Range<usize>>],
+    ) -> Result<Adam> {
+        if shard.len() != shapes.len() {
+            return Err(Error::Shape("adam: shard arity".into()));
+        }
+        let moments = || -> Result<Vec<TensorF32>> {
+            shapes
+                .iter()
+                .zip(shard)
+                .map(|(t, s)| match s {
+                    None => Ok(TensorF32::zeros(&t.shape)),
+                    Some(r) if r.end <= t.data.len() && r.start <= r.end => {
+                        Ok(TensorF32::zeros(&[r.len()]))
+                    }
+                    Some(r) => Err(Error::Shape(format!(
+                        "adam: shard {r:?} outside param of {} floats",
+                        t.data.len()
+                    ))),
+                })
+                .collect()
+        };
+        Ok(Adam {
+            lr,
+            weight_decay: 0.0,
+            m: moments()?,
+            v: moments()?,
+            step: 0,
+            shard: shard.to_vec(),
+        })
     }
 
     /// Apply one update over all parameters given their gradients.
@@ -90,6 +139,11 @@ impl Adam {
                 p.shape, g.shape
             )));
         }
+        if self.shard[slot].is_some() {
+            return Err(Error::Shape(format!(
+                "adam: slot {slot} is ZeRO-sharded; use update_shard"
+            )));
+        }
         let t = self.step as f32;
         let bc1 = 1.0 - B1.powf(t);
         let bc2 = 1.0 - B2.powf(t);
@@ -102,6 +156,50 @@ impl Adam {
             let vhat = v.data[i] / bc2;
             p.data[i] -=
                 self.lr * (mhat / (vhat.sqrt() + EPS) + self.weight_decay * p.data[i]);
+        }
+        Ok(())
+    }
+
+    /// Update the owned shard of a ZeRO-sharded slot: `p` and `g` are
+    /// the parameter / reduced-gradient slices covering exactly
+    /// `shard[slot]`.  Bit-identical, element for element, to what
+    /// [`Adam::update_slot`] computes for those positions on a
+    /// replicated rank — the moment recurrence and bias correction are
+    /// per-element, so slicing changes nothing.
+    pub fn update_shard(&mut self, slot: usize, p: &mut [f32], g: &[f32]) -> Result<()> {
+        if slot >= self.m.len() {
+            return Err(Error::Shape(format!(
+                "adam: slot {slot} of {}",
+                self.m.len()
+            )));
+        }
+        if self.step == 0 {
+            return Err(Error::Shape("adam: update_shard before begin_step".into()));
+        }
+        let Some(range) = self.shard[slot].clone() else {
+            return Err(Error::Shape(format!(
+                "adam: slot {slot} is not ZeRO-sharded; use update_slot"
+            )));
+        };
+        if p.len() != range.len() || g.len() != range.len() {
+            return Err(Error::Shape(format!(
+                "adam: shard slices {}/{} floats, owned range is {}",
+                p.len(),
+                g.len(),
+                range.len()
+            )));
+        }
+        let t = self.step as f32;
+        let bc1 = 1.0 - B1.powf(t);
+        let bc2 = 1.0 - B2.powf(t);
+        let (m, v) = (&mut self.m[slot], &mut self.v[slot]);
+        for i in 0..p.len() {
+            let gi = g[i];
+            m.data[i] = B1 * m.data[i] + (1.0 - B1) * gi;
+            v.data[i] = B2 * v.data[i] + (1.0 - B2) * gi * gi;
+            let mhat = m.data[i] / bc1;
+            let vhat = v.data[i] / bc2;
+            p[i] -= self.lr * (mhat / (vhat.sqrt() + EPS) + self.weight_decay * p[i]);
         }
         Ok(())
     }
@@ -203,6 +301,60 @@ mod tests {
         let g = vec![TensorF32::zeros(&[3])];
         let mut opt = Adam::new(&p, 0.1);
         assert!(opt.update(&mut p, &g).is_err());
+    }
+
+    #[test]
+    fn sharded_update_matches_replicated_bitwise() {
+        // two "ranks" each own half the tensor's moments; stepping each
+        // owned slice must reproduce the replicated update's bits, over
+        // several steps (the moment recurrences are per-element)
+        let full = TensorF32::from_vec(&[6], vec![1.0, -2.0, 0.5, 3.0, -0.25, 0.75])
+            .unwrap();
+        let g =
+            TensorF32::from_vec(&[6], vec![0.5, -0.25, -0.1, 0.2, 0.3, -1.0]).unwrap();
+        let mut rep_p = vec![full.clone()];
+        let mut rep = Adam::new(&rep_p, 0.05);
+        let shards = [0usize..3, 3..6];
+        let mut owners: Vec<Adam> = shards
+            .iter()
+            .map(|r| {
+                Adam::new_sharded(
+                    std::slice::from_ref(&full),
+                    0.05,
+                    &[Some(r.clone())],
+                )
+                .unwrap()
+            })
+            .collect();
+        assert!(owners.iter().all(|o| o.m[0].data.len() == 3));
+        let mut p_sh = full.data.clone();
+        for _ in 0..3 {
+            rep.update(&mut rep_p, std::slice::from_ref(&g)).unwrap();
+            for (o, r) in owners.iter_mut().zip(&shards) {
+                o.begin_step();
+                o.update_shard(0, &mut p_sh[r.clone()], &g.data[r.clone()]).unwrap();
+            }
+        }
+        assert_eq!(rep_p[0].data, p_sh);
+        // guard rails: sharded slots refuse the full-tensor path and
+        // vice versa; slice lengths must match the owned range
+        let mut o = owners.pop().unwrap();
+        let mut pt = full.clone();
+        assert!(o.update_slot(0, &mut pt, &g).is_err(), "sharded via update_slot");
+        assert!(
+            o.update_shard(0, &mut p_sh[0..2], &g.data[0..2]).is_err(),
+            "wrong slice len"
+        );
+        rep.begin_step();
+        let mut buf = [0.0f32; 3];
+        assert!(
+            rep.update_shard(0, &mut buf, &[0.0; 3]).is_err(),
+            "unsharded via update_shard"
+        );
+        assert!(
+            Adam::new_sharded(std::slice::from_ref(&full), 0.1, &[Some(2..9)]).is_err(),
+            "shard outside param"
+        );
     }
 
     #[test]

@@ -42,6 +42,12 @@ impl LoadMonitor {
     /// records stay queryable for recency-weighted decisions (the
     /// placement [`Rebalancer`] keys off these, not lifetime totals).
     ///
+    /// `window = 0` would mean "windowed but remember nothing", which
+    /// no caller can want — it is a documented alias for `window = 1`
+    /// (only the latest record), NOT for the unwindowed
+    /// [`LoadMonitor::new`] (whose `window_totals` fall back to
+    /// lifetime totals).
+    ///
     /// [`Rebalancer`]: crate::placement::Rebalancer
     pub fn windowed(n_expert: usize, window: usize) -> Self {
         let mut m = Self::new(n_expert);
@@ -50,18 +56,26 @@ impl LoadMonitor {
     }
 
     /// Record one iteration's per-expert token counts.
+    ///
+    /// A zero-total iteration (every expert idle — a zombie rank's
+    /// zeroed batch, a drained serve step) counts toward
+    /// [`LoadMonitor::iterations`] but touches *nothing else*: not the
+    /// EMA, not the totals, and not the sliding ring — it previously
+    /// entered the ring while skipping the EMA/totals, silently
+    /// evicting a real record and skewing `window_totals` against the
+    /// cumulative view.
     pub fn record(&mut self, counts: &[u32]) {
         assert_eq!(counts.len(), self.n_expert);
         let total: u64 = counts.iter().map(|&c| c as u64).sum();
         self.iterations += 1;
+        if total == 0 {
+            return;
+        }
         if self.window > 0 {
             if self.recent.len() == self.window {
                 self.recent.pop_front();
             }
             self.recent.push_back(counts.to_vec());
-        }
-        if total == 0 {
-            return;
         }
         for (e, &c) in counts.iter().enumerate() {
             self.total[e] += c as u64;
@@ -223,6 +237,33 @@ mod tests {
         u.record(&[7, 1]);
         assert_eq!(u.window_len(), 0);
         assert_eq!(u.window_totals(), vec![7, 1]);
+    }
+
+    #[test]
+    fn zero_total_iterations_stay_out_of_the_ring() {
+        // Pre-fix, a zero-total record entered the sliding ring (while
+        // correctly skipping EMA/totals), evicting a real record: after
+        // [5,5], [7,7], [0,0] a window-2 monitor reported [7,7].
+        let mut m = LoadMonitor::windowed(2, 2);
+        m.record(&[5, 5]);
+        m.record(&[7, 7]);
+        m.record(&[0, 0]);
+        assert_eq!(m.iterations(), 3, "idle iterations still count");
+        assert_eq!(m.window_len(), 2);
+        assert_eq!(
+            m.window_totals(),
+            vec![12, 12],
+            "an idle iteration must not evict a real record"
+        );
+        assert_eq!(m.totals(), &[12, 12], "window and lifetime agree");
+        assert_eq!(m.hottest(), Some(0));
+        // windowed(n, 0) is the documented alias for window = 1 — the
+        // latest record, not the unwindowed lifetime fallback
+        let mut w = LoadMonitor::windowed(2, 0);
+        w.record(&[3, 1]);
+        w.record(&[1, 9]);
+        assert_eq!(w.window_len(), 1);
+        assert_eq!(w.window_totals(), vec![1, 9]);
     }
 
     #[test]

@@ -154,6 +154,14 @@ impl Batcher {
         self.queue.is_empty()
     }
 
+    /// Arrival time of the oldest queued request — the anchor the
+    /// drive loop's idle coalescing window counts down from (so
+    /// condvar wakeups cannot restart it).  `None` when the queue is
+    /// empty.
+    pub fn oldest_arrival(&self) -> Option<Instant> {
+        self.queue.iter().map(|r| r.arrived).min()
+    }
+
     /// Admit a request into the queue, or hand it back (`Err`) when
     /// admission control rejects it.
     pub fn admit(&mut self, req: Request) -> std::result::Result<(), Request> {
@@ -383,10 +391,27 @@ impl ServeDaemon {
             if !st.batcher.is_empty() {
                 // continuous batching's latency/utilisation trade: an
                 // undersized batch waits out the idle window for more
-                // arrivals, a full one departs immediately
-                if st.batcher.queued_rows() < st.batcher.max_batch() && !st.shutdown {
+                // arrivals, a full one departs immediately.  The window
+                // is an *absolute* deadline anchored at the oldest
+                // queued arrival: a wakeup mid-window (another request
+                // joining, or a spurious notify) neither restarts the
+                // countdown nor departs the batch early — it re-waits
+                // for whatever remains.
+                while st.batcher.queued_rows() < st.batcher.max_batch()
+                    && !st.shutdown
+                {
+                    let deadline = st
+                        .batcher
+                        .oldest_arrival()
+                        .expect("non-empty batcher has an oldest arrival")
+                        + self.idle;
+                    let Some(remaining) =
+                        deadline.checked_duration_since(Instant::now())
+                    else {
+                        break; // window expired: depart undersized
+                    };
                     let (guard, _) =
-                        self.shared.cv.wait_timeout(st, self.idle).unwrap();
+                        self.shared.cv.wait_timeout(st, remaining).unwrap();
                     st = guard;
                 }
                 return st.batcher.take_batch(nb, dm);
@@ -749,6 +774,82 @@ mod tests {
 
     fn sreq(id: u32, session: usize, rows: usize, dm: usize) -> Request {
         Request { session, ..req(id, rows, dm) }
+    }
+
+    #[test]
+    fn idle_window_is_absolute_across_mid_window_arrivals() {
+        // Pre-fix, `next_batch` handed the *fixed* idle duration to a
+        // single `wait_timeout`, so the first mid-window wakeup (a
+        // straggler joining the batch) departed the batch undersized
+        // after ~40 ms instead of holding the window open.  The window
+        // must be an absolute deadline anchored at the oldest arrival.
+        let cfg = ServeConfig {
+            port: 49570,
+            max_batch: 8,
+            queue_depth: 64,
+            idle_ms: 200,
+        };
+        let daemon = ServeDaemon::bind(&cfg, 8, 2).unwrap();
+        let shared = daemon.shared.clone();
+        let feeder = std::thread::spawn(move || {
+            // the first request opens the window; two stragglers
+            // notify mid-window
+            for (delay_ms, id) in [(0u64, 1u32), (40, 2), (80, 3)] {
+                std::thread::sleep(Duration::from_millis(delay_ms));
+                let mut st = shared.state.lock().unwrap();
+                st.batcher.admit(req(id, 1, 2)).unwrap();
+                drop(st);
+                shared.cv.notify_all();
+            }
+        });
+        let start = Instant::now();
+        let (_, pending) = daemon.next_batch(8, 2).unwrap();
+        let waited = start.elapsed();
+        feeder.join().unwrap();
+        assert_eq!(
+            pending.len(),
+            3,
+            "mid-window arrivals must coalesce into the departing batch"
+        );
+        assert!(
+            waited >= Duration::from_millis(150),
+            "undersized batch departed after {waited:?} — a wakeup cut \
+             the idle window short"
+        );
+        assert!(
+            waited < Duration::from_secs(5),
+            "idle window never expired ({waited:?})"
+        );
+    }
+
+    #[test]
+    fn full_batch_departs_without_waiting_out_the_window() {
+        let cfg = ServeConfig {
+            port: 49572,
+            max_batch: 4,
+            queue_depth: 64,
+            idle_ms: 1000,
+        };
+        let daemon = ServeDaemon::bind(&cfg, 4, 2).unwrap();
+        let shared = daemon.shared.clone();
+        let feeder = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            let mut st = shared.state.lock().unwrap();
+            for id in 1..=4u32 {
+                st.batcher.admit(req(id, 1, 2)).unwrap();
+            }
+            drop(st);
+            shared.cv.notify_all();
+        });
+        let start = Instant::now();
+        let (_, pending) = daemon.next_batch(4, 2).unwrap();
+        feeder.join().unwrap();
+        assert_eq!(pending.len(), 4);
+        assert!(
+            start.elapsed() < Duration::from_millis(500),
+            "a full batch must depart immediately, not wait out the \
+             idle window"
+        );
     }
 
     #[test]

@@ -440,6 +440,68 @@ impl NetModel {
         best
     }
 
+    /// One data-parallel step under the *ZeRO-sharded* schedule
+    /// (`[comm] grad_shard = "zero"`): the ring reduce-scatters the
+    /// grads so each rank owns a contiguous `1/n` shard, runs the
+    /// optimiser over only that shard, and all-gathers the updated
+    /// params.  The wire volume is the same `2(n−1)` rounds of
+    /// `bytes/n` as the plain ring (the scatter half carries grads,
+    /// the gather half carries updated params), so the win is the
+    /// optimiser term shrinking to `opt/n` — and, off-model, the
+    /// `~1/n` optimizer-state memory.
+    pub fn grad_step_zero(
+        &self,
+        n: usize,
+        grad_bytes: usize,
+        compute: f64,
+        opt: f64,
+    ) -> f64 {
+        if !self.enabled || n <= 1 {
+            return compute + opt;
+        }
+        compute + self.all_reduce(n, grad_bytes) + opt / n as f64
+    }
+
+    /// [`NetModel::grad_step_zero`] under the *rail-aware* hier
+    /// schedule: each local rank first gathers its rail's sub-slice
+    /// pieces from its `l−1` node neighbours (egress `bytes·(l−1)/l`
+    /// on the local link), then rings its `bytes/l` sub-slice across
+    /// nodes with its peer rank — `l` concurrent rails, each moving
+    /// `2(nodes−1)` rounds of `bytes/(l·nodes)` on the inter link —
+    /// and finally exchanges updated params back intra-node.  Every
+    /// rank owns `1/w` of the params, so the optimiser term is
+    /// `opt/w`.  `l = 1` (or a non-dividing shape) degenerates to the
+    /// flat [`NetModel::grad_step_zero`] exactly.
+    pub fn grad_step_zero_hier(
+        &self,
+        w: usize,
+        l: usize,
+        grad_bytes: usize,
+        compute: f64,
+        opt: f64,
+    ) -> f64 {
+        if !self.enabled || w <= 1 {
+            return compute + opt;
+        }
+        if l <= 1 || w % l != 0 {
+            return self.grad_step_zero(w, grad_bytes, compute, opt);
+        }
+        let nodes = w / l;
+        let bytes = grad_bytes as f64;
+        // phases A and D: intra gather-to-owner / updated-param exchange
+        let local = 2.0
+            * ((l - 1) as f64 * self.alpha_local
+                + bytes * (l - 1) as f64 / l as f64 / self.beta_local);
+        // phases B and C: l concurrent rail rings over the nodes
+        let rails = if nodes > 1 {
+            2.0 * (nodes - 1) as f64
+                * (self.alpha + bytes / (l * nodes) as f64 / self.beta)
+        } else {
+            0.0
+        };
+        compute + local + rails + opt / w as f64
+    }
+
     /// Host-side overhead of one step: staging copies + fresh padded
     /// allocations.  Zero when the model is disabled (`--net none`
     /// ablates *all* simulated cost, host included).
@@ -691,6 +753,70 @@ mod tests {
         let m = NetModel::preset(NetPreset::None);
         assert_eq!(m.grad_step_blocking(8, 1 << 30, 2.0, 0.5), 2.5);
         assert_eq!(m.grad_step_overlapped(8, 1 << 30, 2.0, 0.5, 16), 2.5);
+        assert_eq!(m.grad_step_zero(8, 1 << 30, 2.0, 0.5), 2.5);
+        assert_eq!(m.grad_step_zero_hier(8, 2, 1 << 30, 2.0, 0.5), 2.5);
+    }
+
+    #[test]
+    fn grad_step_zero_never_exceeds_blocking() {
+        // The PR-9 acceptance property: the ZeRO schedule moves the
+        // same ring volume (scatter grads, gather updated params) but
+        // pays only 1/n of the optimiser — so it scores ≤ blocking at
+        // EVERY point, strictly below whenever opt > 0 and n > 1.
+        let m = NetModel::preset(NetPreset::IbEdr);
+        for n in [2usize, 4, 8, 16] {
+            for bytes in [64usize, 1 << 20, 64 << 20] {
+                for compute in [0.0, 1e-4, 1e-2] {
+                    for opt in [0.0, 1e-4, 1e-2] {
+                        let blocking = m.grad_step_blocking(n, bytes, compute, opt);
+                        let zero = m.grad_step_zero(n, bytes, compute, opt);
+                        assert!(
+                            zero <= blocking + 1e-15,
+                            "n={n} bytes={bytes} compute={compute} opt={opt}: \
+                             {zero} !<= {blocking}"
+                        );
+                        if opt > 0.0 {
+                            assert!(zero < blocking, "{zero} !< {blocking}");
+                        }
+                    }
+                }
+            }
+        }
+        // single worker: nothing to shard, nothing on the wire
+        assert_eq!(m.grad_step_zero(1, 1 << 20, 2.0, 0.5), 2.5);
+    }
+
+    #[test]
+    fn grad_step_zero_hier_rails_never_exceed_the_tree() {
+        // The rail schedule wins the wire unconditionally when l | w:
+        // the intra phases move (l−1)/l of the buffer instead of the
+        // tree's (l−1) full-buffer hops, and each rail rings only its
+        // 1/l sub-slice across nodes — plus the opt/w shard term.
+        let m = NetModel::preset(NetPreset::IbEdr);
+        for (w, l) in [(4usize, 2usize), (8, 2), (8, 4), (16, 4), (16, 8)] {
+            for bytes in [64usize, 1 << 16, 8 << 20, 256 << 20] {
+                for opt in [0.0, 1e-3] {
+                    let tree = m.grad_step_blocking_hier(w, l, bytes, 1e-3, opt);
+                    let zero = m.grad_step_zero_hier(w, l, bytes, 1e-3, opt);
+                    assert!(
+                        zero <= tree + 1e-15,
+                        "w={w} l={l} bytes={bytes} opt={opt}: {zero} !<= {tree}"
+                    );
+                }
+            }
+        }
+        // l = 1 (and non-dividing shapes) degenerate to the flat zero step
+        assert_eq!(
+            m.grad_step_zero_hier(8, 1, 4 << 20, 1e-3, 1e-3),
+            m.grad_step_zero(8, 4 << 20, 1e-3, 1e-3)
+        );
+        assert_eq!(
+            m.grad_step_zero_hier(8, 3, 4 << 20, 1e-3, 1e-3),
+            m.grad_step_zero(8, 4 << 20, 1e-3, 1e-3)
+        );
+        // single node: no inter rails, just the intra phases + opt/w
+        let one_node = m.grad_step_zero_hier(4, 4, 4 << 20, 1e-3, 1e-3);
+        assert!(one_node < m.grad_step_zero(4, 4 << 20, 1e-3, 1e-3));
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //! Ports: 47870 / 47970 (worker-death containment over tcp), 48070
 //! (serve client disconnect), 49170 / 49190 (tcp degrade pins,
 //! deferred / progress), 49270 (recv timeout feeds suspicion), 49370
-//! (serve worker-death reject drain).
+//! (serve worker-death reject drain), 49470 / 49490 (mid-collective
+//! timeout recovery, deferred / progress).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -606,6 +607,124 @@ fn tcp_recv_timeout_feeds_suspicion_into_recovery() {
             .unwrap_or_else(|_| panic!("tcp rank {rank} panicked"))
             .unwrap();
     }
+}
+
+/// All-clear tag of the mid-collective timeout pin (bit 41: outside
+/// the `seq << 8 | code` collective band, the FAULT_TAG band and every
+/// salt bit, so it can never match a stale frame).
+const TMO_CLEAR: u64 = (1 << 41) | 77;
+
+/// The mid-collective timeout audit pin, on any backend.  Rank 2 is
+/// silent-but-alive: it joins the mesh, never enters the collective,
+/// and holds its link open until the survivors' all-clear.  Ranks 0/1
+/// arm the `recv_timeout_ms` deadline and start a two-bucket all-reduce
+/// that cannot complete: rank 0 starves directly on ring predecessor 2,
+/// rank 1 one hop later (round 1 from rank 0, which cannot forward what
+/// never arrived).  The abandoned [`PendingAllReduce`] is dropped with
+/// both rings mid-flight — outstanding requests, in-flight frames the
+/// peer never consumed, and world sequence counters advanced on the
+/// survivors only.
+///
+/// The audit's contract, pinned here: none of that leakage can deadlock
+/// or tag-collide recovery.  Membership gossip runs in the reserved
+/// `FAULT_TAG` band (rank 1's gossip receive parks the stale bucket-1
+/// round frame it never consumed), the survivor group re-binds
+/// collectives into the disjoint `FAULT_SALT` band with its *own*
+/// sequence counter (the world counters now disagree across ranks and
+/// are never used again in degraded mode), and plain tagged sends on
+/// the world handle still work — so a full bucketed all-reduce
+/// completes on the survivor group over the very link the dead
+/// collective still litters.
+///
+/// [`PendingAllReduce`]: fastmoe::comm::PendingAllReduce
+fn timeout_mid_collective_pin<C: Comm>(
+    g: &mut C,
+    arm: &dyn Fn(&mut C, Option<Duration>),
+) -> fastmoe::Result<()> {
+    let rank = g.rank();
+    if rank == 2 {
+        assert_eq!(g.recv(0, TMO_CLEAR)?, vec![9.0]);
+        return Ok(());
+    }
+    arm(g, Some(Duration::from_millis(200)));
+    let bufs: Vec<Vec<f32>> = (0..2).map(|b| vec![(rank + b) as f32; 67]).collect();
+    let mut pending = g.all_reduce_start(bufs)?;
+    match pending.wait_bucket(g, 0) {
+        Err(Error::Timeout { peer, .. }) => {
+            assert_eq!(peer, if rank == 0 { 2 } else { 0 }, "rank {rank} attribution");
+        }
+        other => panic!("rank {rank}: expected mid-collective Timeout, got {other:?}"),
+    }
+    assert_eq!(pending.pending(), 2, "both rings abandoned mid-flight");
+    drop(pending);
+    // deadline off before gossip: agreement runs between live survivors
+    // and must not race the 200ms budget under scheduler skew
+    arm(g, None);
+    let mut rec = Recovery::new(RecoverMode::Degrade, ChaosSchedule::parse("")?);
+    rec.suspect(2);
+    let m = match rec.poll(g, 0)? {
+        Some(RecoveryAction::Degrade(m)) => m,
+        other => panic!("rank {rank}: expected Degrade, got {other:?}"),
+    };
+    assert_eq!(m.dead, vec![2]);
+    assert_eq!(m.survivors(), vec![0, 1]);
+    let mut pg = m.survivor_group(rank)?;
+    let mut sg = pg.bind(&mut *g);
+    let sbufs: Vec<Vec<f32>> =
+        (0..2).map(|b| vec![(rank + 1) as f32 * (b + 1) as f32; 33]).collect();
+    let out = sg.all_reduce_start(sbufs)?.finish(&mut sg)?;
+    for (b, buf) in out.iter().enumerate() {
+        let want = 3.0 * (b + 1) as f32; // (1 + 2) · (b + 1)
+        assert!(
+            buf.iter().all(|&v| v == want),
+            "rank {rank} bucket {b}: survivor all-reduce corrupted"
+        );
+    }
+    drop(sg);
+    if rank == 0 {
+        // flush: the deferred tcp path buffers sends until a read, and
+        // rank 0 exits right after this all-clear
+        g.send(2, TMO_CLEAR, vec![9.0])?;
+        g.flush()?;
+    }
+    Ok(())
+}
+
+#[test]
+fn thread_timeout_mid_collective_degrades_to_survivor_group() {
+    run_workers(3, |mut h| {
+        timeout_mid_collective_pin(&mut h, &|h, t| h.set_recv_timeout(t))
+    })
+    .unwrap();
+}
+
+fn tcp_timeout_mid_collective_pin(port: u16, progress: bool) {
+    let joins: Vec<_> = (0..3)
+        .map(|rank| {
+            std::thread::spawn(move || -> fastmoe::Result<()> {
+                let mut g = TcpGroup::connect_local(rank, 3, port)?;
+                if progress {
+                    g.enable_progress();
+                }
+                timeout_mid_collective_pin(&mut g, &|g, t| g.set_recv_timeout(t))
+            })
+        })
+        .collect();
+    for (rank, j) in joins.into_iter().enumerate() {
+        j.join()
+            .unwrap_or_else(|_| panic!("tcp rank {rank} panicked"))
+            .unwrap();
+    }
+}
+
+#[test]
+fn tcp_timeout_mid_collective_recovers_deferred() {
+    tcp_timeout_mid_collective_pin(49470, false);
+}
+
+#[test]
+fn tcp_timeout_mid_collective_recovers_progress() {
+    tcp_timeout_mid_collective_pin(49490, true);
 }
 
 /// Satellite pin: a worker dying mid-serve must never strand clients.

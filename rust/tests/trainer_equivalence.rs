@@ -13,13 +13,14 @@
 use std::sync::Arc;
 
 use fastmoe::comm::tcp::TcpGroup;
-use fastmoe::comm::{run_workers, Comm, TopoComm};
+use fastmoe::comm::{run_workers, Comm, TopoComm, Topology};
 use fastmoe::config::CommConfig;
 use fastmoe::coordinator::{
     DistTrainer, ExpertMode, GradSync, MoeLayerBuilder, MoeLayerTrainer, Trainer,
 };
 use fastmoe::data::{BatchIter, Corpus};
 use fastmoe::metrics::Counters;
+use fastmoe::model::Adam;
 use fastmoe::rng::Rng;
 use fastmoe::runtime::{Runtime, SyncTag};
 use fastmoe::tensor::{ops, TensorF32};
@@ -87,6 +88,107 @@ fn overlapped_grad_sync_bitwise_thread_backend() {
     run_workers(4, |mut h| sync_equivalence_case(&mut h)).unwrap();
 }
 
+/// Rank-identical synthetic parameter set matching [`synth_grads`]'s
+/// shapes (the zero step needs params + optimizer, not just grads).
+fn synth_params() -> Vec<TensorF32> {
+    [130usize, 7, 64, 3, 200, 1]
+        .iter()
+        .enumerate()
+        .map(|(t, &n)| {
+            TensorF32::from_vec(
+                &[n],
+                (0..n)
+                    .map(|i| ((t * 13 + i) % 89) as f32 * 0.017 - 0.7)
+                    .collect(),
+            )
+            .unwrap()
+        })
+        .collect()
+}
+
+/// Replicated reference (blocking sync + full-state Adam) vs the zero
+/// path (reduce-scatter → shard-local Adam → all-gather of updated
+/// params) over 3 steps, asserting bitwise parameter equality across
+/// bucket sizes.  `topo` must match the comm's zero schedule: flat for
+/// plain handles, the `TopoComm` topology for rail-sharded hier.
+fn zero_equivalence_case(
+    h: &mut impl Comm,
+    topo: &Topology,
+) -> fastmoe::Result<()> {
+    let grads0 = synth_grads(h.rank());
+    let params0 = synth_params();
+    for bucket_bytes in [4usize, 256, 1 << 20] {
+        let reference = GradSync::world(h.size(), ExpertMode::Sharded);
+        let mut zero = GradSync::world(h.size(), ExpertMode::Sharded);
+        zero.shard = true;
+        zero.bucket_bytes = bucket_bytes;
+        let mut pa = params0.clone();
+        let mut oa = Adam::new(&pa, 0.01);
+        let shard = zero.shard_plan(&params0, &SYNTH_TAGS, topo, h.rank());
+        let mut pb = params0.clone();
+        let mut ob = Adam::new_sharded(&pb, 0.01, &shard)?;
+        for _ in 0..3 {
+            let mut ga = grads0.clone();
+            reference.sync(h, &mut ga, &SYNTH_TAGS)?;
+            oa.update(&mut pa, &ga)?;
+            let mut gb = grads0.clone();
+            zero.sync_zero(h, &mut gb, &SYNTH_TAGS, &mut pb, &mut ob)?;
+        }
+        for (i, (x, y)) in pa.iter().zip(&pb).enumerate() {
+            assert_eq!(
+                x.data, y.data,
+                "bucket_bytes {bucket_bytes} tensor {i}: zero-sharded \
+                 optimizer changed parameter bits"
+            );
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn zero_sharded_adam_bitwise_thread_backend() {
+    run_workers(4, |mut h| {
+        let topo = Topology::flat(h.size());
+        zero_equivalence_case(&mut h, &topo)
+    })
+    .unwrap();
+}
+
+#[test]
+fn zero_sharded_adam_bitwise_hier_rails() {
+    // Rail-sharded zero under a 2-node hier TopoComm: each local rank
+    // owns a sub-slice and rings across nodes with its peer rank.
+    run_workers(4, |h| {
+        let topo = Topology::new(4, 2)?;
+        let mut h = TopoComm::new(h, topo)?;
+        zero_equivalence_case(&mut h, &topo)
+    })
+    .unwrap();
+}
+
+#[test]
+fn zero_sharded_adam_bitwise_tcp_backend() {
+    // once over plain sockets, once with the progress engine draining
+    for (port, progress) in [(47852u16, false), (47862u16, true)] {
+        let joins: Vec<_> = (0..3)
+            .map(|rank| {
+                std::thread::spawn(move || {
+                    let mut g = TcpGroup::connect_local(rank, 3, port).unwrap();
+                    if progress {
+                        g.enable_progress();
+                    }
+                    let topo = Topology::flat(3);
+                    zero_equivalence_case(&mut g, &topo).unwrap();
+                    g.barrier().unwrap();
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+}
+
 #[test]
 fn overlapped_grad_sync_bitwise_tcp_backend() {
     // once over plain sockets, once with the progress engine draining
@@ -124,8 +226,9 @@ fn overlapped_grad_sync_bit_identical_dist_trainer() {
                 bucket_kb: 1, // force many buckets
                 ..CommConfig::default()
             };
-            let mut tr =
-                DistTrainer::with_comm(&rt, "gpt_moe", 5, workers, 1e-3, &comm_cfg)?;
+            let mut tr = DistTrainer::with_comm(
+                &rt, "gpt_moe", 5, workers, h.rank(), 1e-3, &comm_cfg,
+            )?;
             let vocab = tr.entry.config_usize("vocab").unwrap();
             let seq = tr.entry.config_usize("seq").unwrap();
             let batch = tr.entry.config_usize("batch").unwrap();
@@ -156,12 +259,61 @@ fn overlapped_grad_sync_bit_identical_dist_trainer() {
     }
 }
 
+#[test]
+fn zero_sharded_dist_trainer_matches_replicated() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let workers = 2;
+    let run = |grad_shard: &'static str| {
+        let rt = rt.clone();
+        run_workers(workers, move |mut h| {
+            let comm_cfg = CommConfig {
+                grad_shard: grad_shard.into(),
+                bucket_kb: 1, // force many buckets
+                ..CommConfig::default()
+            };
+            let mut tr = DistTrainer::with_comm(
+                &rt, "gpt_moe", 5, workers, h.rank(), 1e-3, &comm_cfg,
+            )?;
+            let vocab = tr.entry.config_usize("vocab").unwrap();
+            let seq = tr.entry.config_usize("seq").unwrap();
+            let batch = tr.entry.config_usize("batch").unwrap();
+            let corpus = Corpus::synthetic(vocab, 100_000, 8);
+            let mut it = BatchIter::shard(&corpus, batch, seq, 14, h.rank());
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                losses.push(tr.train_step(&mut h, &it.next_batch())?);
+            }
+            Ok((losses, tr.params))
+        })
+        .unwrap()
+    };
+    let replicated = run("none");
+    let zero = run("zero");
+    for rank in 0..workers {
+        let (rl, rp) = &replicated[rank];
+        let (zl, zp) = &zero[rank];
+        assert_eq!(rl, zl, "rank {rank}: losses diverged");
+        for (i, (a, b)) in rp.tensors.iter().zip(&zp.tensors).enumerate() {
+            assert_eq!(
+                a.data, b.data,
+                "rank {rank} param {i} (`{}`): ZeRO-sharded optimizer \
+                 changed parameter bits",
+                rp.entries[i].name
+            );
+        }
+    }
+}
+
 /// `MoeLayerTrainer` step loop for one config; returns final params.
 fn moe_trainer_params(
     rt: Arc<Runtime>,
     workers: usize,
     grad_overlap: bool,
     overlap: bool,
+    grad_shard: bool,
 ) -> Vec<Vec<Vec<f32>>> {
     run_workers(workers, move |mut h| {
         let layer = MoeLayerBuilder::new()
@@ -169,6 +321,7 @@ fn moe_trainer_params(
             .overlap(overlap)
             .chunks(2)
             .grad_overlap(grad_overlap)
+            .grad_shard(grad_shard)
             .build(rt.clone(), workers, h.rank())?;
         let mut tr = MoeLayerTrainer::new(layer, 1e-2);
         let mut counters = Counters::new();
@@ -201,10 +354,10 @@ fn overlapped_gate_sync_bit_identical_moe_layer_trainer() {
     {
         return;
     }
-    let blocking = moe_trainer_params(rt.clone(), workers, false, false);
+    let blocking = moe_trainer_params(rt.clone(), workers, false, false, false);
     // grad_overlap on, over both exchange schedules
     for overlap in [false, true] {
-        let got = moe_trainer_params(rt.clone(), workers, true, overlap);
+        let got = moe_trainer_params(rt.clone(), workers, true, overlap, false);
         for rank in 0..workers {
             for (i, (a, b)) in blocking[rank].iter().zip(&got[rank]).enumerate() {
                 assert_eq!(
@@ -213,6 +366,17 @@ fn overlapped_gate_sync_bit_identical_moe_layer_trainer() {
                      gate-grad overlap changed parameter bits"
                 );
             }
+        }
+    }
+    // ZeRO-sharded gate optimizer: same bits as the replicated path
+    let zero = moe_trainer_params(rt.clone(), workers, false, false, true);
+    for rank in 0..workers {
+        for (i, (a, b)) in blocking[rank].iter().zip(&zero[rank]).enumerate() {
+            assert_eq!(
+                a, b,
+                "rank {rank} slot {i}: ZeRO-sharded gate optimizer \
+                 changed parameter bits"
+            );
         }
     }
 }

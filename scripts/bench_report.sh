@@ -2,8 +2,9 @@
 # Perf trajectory: run the sim-backed Figure-6 scaling bench (recorded
 # as BENCH_pr5.json), the serving latency bench (recorded as
 # BENCH_pr6.json), the skewed-routing placement scenario (recorded as
-# BENCH_pr7.json) and the fault/chaos scenario (recorded as
-# BENCH_pr8.json) at the repo root.
+# BENCH_pr7.json), the fault/chaos scenario (recorded as
+# BENCH_pr8.json) and the ZeRO-sharded grad-sync record (recorded as
+# BENCH_pr9.json) at the repo root.
 #
 #   scripts/bench_report.sh            # default: 4 chunks, 4 iters
 #   CHUNKS=8 ITERS=8 BUCKET_KB=256 NODES=2 scripts/bench_report.sh
@@ -35,6 +36,11 @@
 #                             hier ≤ flat at every scale point where
 #                             the model's inter-node bandwidth is the
 #                             bottleneck (NetModel::hier_favourable)
+#   * ZeRO-sharded (PR 9)   — the grad_shard = "zero" trainer tail:
+#                             reduce-scatter, shard-local Adam (opt/w),
+#                             all-gather of updated params, flat and
+#                             rail-aware hier; the bench asserts
+#                             zero ≤ blocking at every scale point
 # so the comparison is apples-to-apples.  A second invocation actually
 # *exercises* the pipelined zero-copy layer path (--overlap) as a
 # correctness/perf sanity artifact under runs/.
@@ -99,6 +105,16 @@ cargo bench --bench fig6_scale -- --skew \
 cargo bench --bench fig6_scale -- --chaos \
     --json "$ROOT/BENCH_pr8.json"
 
+# 6. ZeRO-sharded grad sync (PR 9): a fresh measured pass whose record
+#    is read for the grad_step_zero_s / grad_step_zero_hier_s columns —
+#    the reduce-scatter → shard-Adam → all-gather schedule scored from
+#    the same counters; the bench asserts zero ≤ blocking at every
+#    scale point (and rail-zero ≤ flat-zero wherever hier is
+#    favourable) before writing the record.
+cargo bench --bench fig6_scale -- \
+    --iters "$ITERS" --chunks "$CHUNKS" --bucket-kb "$BUCKET_KB" --nodes "$NODES" \
+    --json "$ROOT/BENCH_pr9.json"
+
 echo "bench_report.sh: wrote $ROOT/BENCH_pr5.json, $ROOT/BENCH_pr6.json," \
-     "$ROOT/BENCH_pr7.json and $ROOT/BENCH_pr8.json" \
+     "$ROOT/BENCH_pr7.json, $ROOT/BENCH_pr8.json and $ROOT/BENCH_pr9.json" \
      "(and runs/fig6_overlap_measured.json)"
