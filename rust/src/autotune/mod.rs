@@ -1,0 +1,920 @@
+//! Online autotuning: α-β calibration + simulator-driven config search.
+//!
+//! Nine PRs of knobs (`overlap`, `chunks`, `chunk_policy`, `bucket_kb`,
+//! `grad_overlap`, `grad_shard`, `topology`, …) outgrew hand-tuning —
+//! the co-design burden the FastMoE paper says a well-tuned MoE system
+//! must absorb *for* the operator.  This module closes the loop from
+//! measured step counters back into the analytic cost model the benches
+//! already trust ([`crate::sim::NetModel`]), in three layers:
+//!
+//! 1. **Calibration** ([`Calibrator`]): a few instrumented steps
+//!    accumulate the scoped phase timers (`phase_dispatch_ns`,
+//!    `phase_compute_ns`, `phase_combine_ns`, `phase_gradsync_ns`,
+//!    `phase_opt_ns`) and byte counters (`moe_a2a_bytes`,
+//!    `grad_sync_bytes`, `moe_copy_bytes`) over a window
+//!    ([`crate::metrics::Counters::delta_since`], so lifetime totals
+//!    never leak in), then fit a [`ModelFit`].  One operating point
+//!    cannot separate α from β, so α (and `alpha_local`) stay **pinned
+//!    to the IB-EDR preset** and β is fitted from the residual wire
+//!    time; `beta_local` keeps the preset's local:inter ratio.  The
+//!    fitted parameters are **rank-agreed** by an all-reduce mean, so
+//!    every rank holds bit-identical numbers and tunes identically.
+//! 2. **Search** ([`search`]): a pure, deterministic enumeration of the
+//!    discrete config lattice — chunks ∈ {1, 2, 4, 8, 0 = adaptive} ×
+//!    chunk_policy × bucket_kb ∈ {64 … 4096} × flat/hier ×
+//!    overlap/grad_overlap/grad_shard, respecting the config-validation
+//!    rules (`zero` excludes `grad_overlap`; hier needs a dividing
+//!    local size) — scoring each candidate with the fitted model's
+//!    `moe_step_*` + `grad_step_*` variants and returning the strict
+//!    argmin as a typed [`TunedConfig`].  Fixed iteration order +
+//!    strict `<` ⇒ the same fit picks the same config on every rank.
+//! 3. **Execution** ([`Autotuner`]): the `[auto]` section
+//!    ([`crate::config::AutoConfig`]) drives the per-step state machine
+//!    the trainers call at each step boundary — calibrate, fit, search,
+//!    then monitor the rank-agreed measured step time and re-open a
+//!    calibration window when it drifts more than `retune_drift` from
+//!    the prediction.  `apply = "report"` logs the winner as a
+//!    pasteable `[comm]` snippet and changes nothing; `apply = "live"`
+//!    hands back the step-boundary-safe knobs (`chunks`,
+//!    `chunk_policy`, `bucket_kb`) for lockstep application, while
+//!    restart-only knobs (`topology`, `grad_shard`, `overlap` flags)
+//!    stay recommendations.
+//!
+//! The argmin ignores config-*independent* cost (gate GEMMs, host
+//! copies — identical under every candidate), and the drift anchor
+//! re-bases the model's predicted delta on the *measured* calibration
+//! step time, so systematic model offsets cancel out of both decisions.
+
+use crate::comm::Comm;
+use crate::config::{AutoConfig, CommConfig};
+use crate::error::{Error, Result};
+use crate::metrics::Counters;
+use crate::moe::ChunkPolicy;
+use crate::sim::{NetModel, NetPreset};
+
+/// Chunk counts the search scans under `overlap` (0 = adaptive, scored
+/// as the count `moe::adaptive_chunks` would settle on; listed last so
+/// a pinned count wins the tie against its adaptive equivalent).
+pub const CHUNK_LATTICE: &[usize] = &[1, 2, 4, 8, 0];
+
+/// Gradient-bucket sizes (KiB) the search scans under `grad_overlap`.
+pub const BUCKET_KB_LATTICE: &[usize] = &[64, 128, 256, 512, 1024, 2048, 4096];
+
+/// One point of the `[comm]` knob lattice — everything the search
+/// ranks, in the trainers' own terms.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KnobState {
+    /// Pipelined dispatch/compute/combine (`[comm] overlap`).
+    pub overlap: bool,
+    /// Exchange chunk count (`0` = adaptive).
+    pub chunks: usize,
+    /// Adaptive-chunk agreement policy.
+    pub chunk_policy: ChunkPolicy,
+    /// Bucketed nonblocking gradient sync (`[comm] grad_overlap`).
+    pub grad_overlap: bool,
+    /// ZeRO-sharded optimizer (`[comm] grad_shard = "zero"`).
+    pub zero: bool,
+    /// Gradient-bucket payload target, KiB.
+    pub bucket_kb: usize,
+    /// Hierarchical (node-aware) collectives (`[comm] topology`).
+    pub hier: bool,
+}
+
+impl KnobState {
+    /// Derive the current point from a validated [`CommConfig`].
+    pub fn from_comm(cfg: &CommConfig) -> KnobState {
+        KnobState {
+            overlap: cfg.overlap,
+            chunks: cfg.chunks,
+            chunk_policy: ChunkPolicy::parse(&cfg.chunk_policy)
+                .unwrap_or(ChunkPolicy::Mean),
+            grad_overlap: cfg.grad_overlap,
+            zero: cfg.grad_shard == "zero",
+            bucket_kb: cfg.bucket_kb,
+            hier: cfg.topology == "hier",
+        }
+    }
+
+    /// Whether `other` shares this point's restart-only knobs — the
+    /// ones live mode must not touch (they change the wire protocol or
+    /// optimizer-state layout, not just the step-boundary schedule).
+    pub fn same_restart_knobs(&self, other: &KnobState) -> bool {
+        self.overlap == other.overlap
+            && self.grad_overlap == other.grad_overlap
+            && self.zero == other.zero
+            && self.hier == other.hier
+    }
+}
+
+/// The fitted model parameters plus the measured per-step operating
+/// point they were fitted at — everything [`search`] needs, rank-agreed
+/// so every rank holds identical bits.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelFit {
+    /// Inter-node per-message latency, seconds (pinned to the preset:
+    /// one operating point cannot separate α from β).
+    pub alpha: f64,
+    /// Fitted inter-node bandwidth, bytes/second.
+    pub beta: f64,
+    /// Intra-node latency, seconds (pinned to the preset).
+    pub alpha_local: f64,
+    /// Intra-node bandwidth — `beta` scaled by the preset's
+    /// local:inter ratio.
+    pub beta_local: f64,
+    /// Host memcpy bandwidth (preset; staging copies are
+    /// config-independent, so this never decides the argmin).
+    pub host_beta: f64,
+    /// Expert compute seconds per step (measured).
+    pub compute: f64,
+    /// Host optimiser seconds per step (measured).
+    pub opt: f64,
+    /// Gradient-sync wire seconds per step (measured; diagnostic — the
+    /// grad tail is *scored* from `grad_bytes` and the fitted link).
+    pub gradsync: f64,
+    /// Exchange bytes per step (`moe_a2a_bytes`).
+    pub a2a_bytes: f64,
+    /// Synced gradient bytes per step (`grad_sync_bytes`).
+    pub grad_bytes: f64,
+    /// Host staging-copy bytes per step (`moe_copy_bytes`).
+    pub copy_bytes: f64,
+    /// Measured wall seconds per step — the drift anchor.
+    pub step_time: f64,
+    /// World size the window ran at.
+    pub workers: usize,
+    /// Ranks per node for the hier candidates (1 = hier not available).
+    pub local_size: usize,
+}
+
+impl ModelFit {
+    /// The preset every pinned parameter (and every unfittable one)
+    /// falls back to.
+    pub fn preset() -> NetModel {
+        NetModel::preset(NetPreset::IbEdr)
+    }
+
+    /// Build the scoring model from the fitted parameters.
+    pub fn net_model(&self) -> NetModel {
+        NetModel {
+            alpha: self.alpha,
+            beta: self.beta,
+            alpha_local: self.alpha_local,
+            beta_local: self.beta_local,
+            host_beta: self.host_beta,
+            alloc_beta: Self::preset().alloc_beta,
+            enabled: true,
+        }
+    }
+
+    /// Fit from rank-agreed per-step measurements.  α is pinned; β is
+    /// the bytes over the wire time *net of latency*, clamped to a sane
+    /// band (1 MB/s … 10 TB/s) so a degenerate window (zero bytes, or a
+    /// sub-latency wire time) falls back toward the preset instead of
+    /// producing an absurd link.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_measurements(
+        workers: usize,
+        local_size: usize,
+        step_time: f64,
+        wire: f64,
+        compute: f64,
+        opt: f64,
+        gradsync: f64,
+        a2a_bytes: f64,
+        grad_bytes: f64,
+        copy_bytes: f64,
+    ) -> ModelFit {
+        let p = Self::preset();
+        let alpha = p.alpha;
+        let alpha_local = p.alpha_local;
+        let wire_net = wire - alpha * workers.saturating_sub(1) as f64;
+        let beta = if workers > 1 && a2a_bytes > 0.0 && wire_net > 1e-9 {
+            (a2a_bytes / wire_net).clamp(1e6, 1e13)
+        } else {
+            p.beta
+        };
+        let beta_local = beta * (p.beta_local / p.beta);
+        ModelFit {
+            alpha,
+            beta,
+            alpha_local,
+            beta_local,
+            host_beta: p.host_beta,
+            compute: compute.max(0.0),
+            opt: opt.max(0.0),
+            gradsync: gradsync.max(0.0),
+            a2a_bytes: a2a_bytes.max(0.0),
+            grad_bytes: grad_bytes.max(0.0),
+            copy_bytes: copy_bytes.max(0.0),
+            step_time: step_time.max(0.0),
+            workers: workers.max(1),
+            local_size: local_size.max(1),
+        }
+    }
+}
+
+/// Score one lattice point under a fit: the modelled MoE exchange +
+/// compute phase, plus the gradient-sync tail (scored with zero compute
+/// — the backward is already inside the MoE term, so the tail adds only
+/// its wire and optimiser cost).  Pure; identical inputs give identical
+/// bits on every rank.
+pub fn score(fit: &ModelFit, k: &KnobState) -> f64 {
+    let m = fit.net_model();
+    let w = fit.workers;
+    let l = if k.hier { fit.local_size } else { 1 };
+    let ab = fit.a2a_bytes.round() as usize;
+    let gb = fit.grad_bytes.round() as usize;
+    let chunks = if k.chunks == 0 {
+        // adaptive settles on the wire-fraction count (moe::adaptive_chunks)
+        let wire = if k.hier {
+            m.all_to_all_hier(w, l, ab)
+        } else {
+            m.all_to_all(w, ab)
+        };
+        crate::moe::adaptive_chunks(wire, fit.compute, w)
+    } else {
+        k.chunks.clamp(1, w.max(1))
+    };
+    let moe = match (k.hier, k.overlap) {
+        (false, false) => m.moe_step_blocking(w, ab, fit.compute),
+        (false, true) => m.moe_step_overlapped(w, ab, fit.compute, chunks),
+        (true, false) => m.moe_step_blocking_hier(w, l, ab, fit.compute),
+        (true, true) => m.moe_step_overlapped_hier(w, l, ab, fit.compute, chunks),
+    };
+    let grad = if k.zero {
+        if k.hier {
+            m.grad_step_zero_hier(w, l, gb, 0.0, fit.opt)
+        } else {
+            m.grad_step_zero(w, gb, 0.0, fit.opt)
+        }
+    } else if k.grad_overlap && w > 1 {
+        // score the EXACT bucket count this bucket_kb yields (not the
+        // best-B relaxation NetModel::grad_step_overlapped takes —
+        // that would make every kb tie at the unconstrained optimum):
+        // t(B) = ring(bytes/B) + opt/B + (B−1)·max(ring, opt/B)
+        let b = (gb / (k.bucket_kb * 1024)).max(1);
+        let ring = if k.hier {
+            m.all_reduce_hier(w, l, gb / b)
+        } else {
+            m.all_reduce(w, gb / b)
+        };
+        let a = fit.opt / b as f64;
+        ring + a + (b as f64 - 1.0) * ring.max(a)
+    } else if k.hier {
+        m.grad_step_blocking_hier(w, l, gb, 0.0, fit.opt)
+    } else {
+        m.grad_step_blocking(w, gb, 0.0, fit.opt)
+    };
+    moe + grad
+}
+
+/// The search result: a lattice point and its modelled step time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TunedConfig {
+    pub knobs: KnobState,
+    /// Ranks per node the hier knob refers to (1 when flat).
+    pub local_size: usize,
+    /// Modelled seconds per step at this point.
+    pub predicted: f64,
+}
+
+impl TunedConfig {
+    /// The chosen config as a pasteable `[comm]` TOML snippet — the
+    /// exact spellings `ConfigFile::comm()` validates (round-tripped in
+    /// the unit tests, so a recommendation can never be un-launchable).
+    pub fn toml_snippet(&self) -> String {
+        let mut s = String::from("[comm]\n");
+        s.push_str(&format!("overlap = {}\n", self.knobs.overlap));
+        s.push_str(&format!("chunks = {}\n", self.knobs.chunks));
+        s.push_str(&format!(
+            "chunk_policy = \"{}\"\n",
+            self.knobs.chunk_policy.as_str()
+        ));
+        s.push_str(&format!("grad_overlap = {}\n", self.knobs.grad_overlap));
+        s.push_str(&format!("bucket_kb = {}\n", self.knobs.bucket_kb));
+        s.push_str(&format!(
+            "grad_shard = \"{}\"\n",
+            if self.knobs.zero { "zero" } else { "none" }
+        ));
+        s.push_str(&format!(
+            "topology = \"{}\"\n",
+            if self.knobs.hier { "hier" } else { "flat" }
+        ));
+        if self.knobs.hier {
+            s.push_str(&format!("local_size = {}\n", self.local_size));
+        }
+        s
+    }
+}
+
+/// Both answers one search produces: the global argmin (`best` — what a
+/// fresh launch should use) and the argmin *within the current
+/// restart-only knobs* (`live` — what live mode may apply at the next
+/// step boundary without changing wire protocol or state layout).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TuneOutcome {
+    pub best: TunedConfig,
+    pub live: TunedConfig,
+}
+
+/// Enumerate the candidate lattice for a fit, in the fixed documented
+/// order (current-config spellings lead their alternatives, so score
+/// ties never churn a knob).  Knobs that cannot matter at a point
+/// (chunks without `overlap`, bucket_kb without `grad_overlap`) keep
+/// their current values instead of multiplying the lattice.
+pub fn lattice(fit: &ModelFit, current: &KnobState) -> Vec<KnobState> {
+    let w = fit.workers;
+    let hier_ok = fit.local_size > 1 && w % fit.local_size == 0 && w > fit.local_size;
+    let topos: &[bool] = if hier_ok { &[false, true] } else { &[false] };
+    let policies: [ChunkPolicy; 2] = match current.chunk_policy {
+        ChunkPolicy::Mean => [ChunkPolicy::Mean, ChunkPolicy::Max],
+        ChunkPolicy::Max => [ChunkPolicy::Max, ChunkPolicy::Mean],
+    };
+    let mut out = Vec::new();
+    for &hier in topos {
+        for overlap in [false, true] {
+            // chunk values clamp to the world and dedupe in order
+            let mut chunk_opts: Vec<usize> = Vec::new();
+            if overlap {
+                for &c in CHUNK_LATTICE {
+                    let c = if c == 0 { 0 } else { c.clamp(1, w.max(1)) };
+                    if !chunk_opts.contains(&c) {
+                        chunk_opts.push(c);
+                    }
+                }
+            } else {
+                chunk_opts.push(current.chunks);
+            }
+            for &chunks in &chunk_opts {
+                let pols: &[ChunkPolicy] = if overlap && chunks == 0 {
+                    &policies
+                } else {
+                    &policies[..1]
+                };
+                for &chunk_policy in pols {
+                    // (grad_overlap, zero): "zero" excludes grad_overlap
+                    // (the config validation rule, baked into the lattice)
+                    for (grad_overlap, zero) in
+                        [(false, false), (true, false), (false, true)]
+                    {
+                        let buckets: &[usize] = if grad_overlap {
+                            BUCKET_KB_LATTICE
+                        } else {
+                            std::slice::from_ref(&current.bucket_kb)
+                        };
+                        for &bucket_kb in buckets {
+                            out.push(KnobState {
+                                overlap,
+                                chunks,
+                                chunk_policy,
+                                grad_overlap,
+                                zero,
+                                bucket_kb,
+                                hier,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Deterministic argmin over the lattice.  Strict `<` comparison over a
+/// fixed enumeration order means identical fits produce identical
+/// [`TuneOutcome`]s on every rank — the rank-symmetry invariant the
+/// equivalence suite pins on both backends.
+pub fn search(fit: &ModelFit, current: &KnobState) -> TuneOutcome {
+    let tuned = |k: KnobState| TunedConfig {
+        knobs: k,
+        local_size: if k.hier { fit.local_size } else { 1 },
+        predicted: score(fit, &k),
+    };
+    let mut best = tuned(*current);
+    let mut live = best;
+    for k in lattice(fit, current) {
+        let t = tuned(k);
+        if t.predicted < best.predicted {
+            best = t;
+        }
+        if k.same_restart_knobs(current) && t.predicted < live.predicted {
+            live = t;
+        }
+    }
+    TuneOutcome { best, live }
+}
+
+/// One calibration window: snapshots the counters at open, accumulates
+/// wall time per step, and at close fits a rank-agreed [`ModelFit`]
+/// from the window *delta* (never the lifetime totals).
+pub struct Calibrator {
+    workers: usize,
+    local_size: usize,
+    start: Counters,
+    steps: usize,
+    wall: f64,
+}
+
+impl Calibrator {
+    /// Open a window over `counters` as they stand right now.
+    pub fn begin(counters: &Counters, workers: usize, local_size: usize) -> Calibrator {
+        Calibrator {
+            workers: workers.max(1),
+            local_size: local_size.max(1),
+            start: counters.snapshot(),
+            steps: 0,
+            wall: 0.0,
+        }
+    }
+
+    /// Record one completed step's wall time.
+    pub fn record_step(&mut self, secs: f64) {
+        self.steps += 1;
+        self.wall += secs.max(0.0);
+    }
+
+    /// Steps recorded so far.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Close the window: difference the counters, normalise per step,
+    /// **rank-agree** the raw measurements (all-reduce mean — every
+    /// rank contributes its local view and every rank derives the same
+    /// bits), and fit.  The agreement is an ordinary world collective,
+    /// so it composes with the trainers' lockstep like any other.
+    pub fn finish(
+        &self,
+        comm: &mut impl Comm,
+        counters: &Counters,
+    ) -> Result<ModelFit> {
+        if self.steps == 0 {
+            return Err(Error::Config(
+                "autotune: calibration window closed with zero steps".into(),
+            ));
+        }
+        let d = counters.delta_since(&self.start);
+        let ns = |name: &str| d.get(name) as f64 / 1e9;
+        let per = 1.0 / self.steps as f64;
+        // raw per-step measurements, this rank's view
+        let mut v: Vec<f32> = vec![
+            (self.wall * per) as f32,
+            ((ns("phase_dispatch_ns") + ns("phase_combine_ns")) * per) as f32,
+            (ns("phase_compute_ns") * per) as f32,
+            (ns("phase_opt_ns") * per) as f32,
+            (ns("phase_gradsync_ns") * per) as f32,
+            (d.get("moe_a2a_bytes") as f64 * per) as f32,
+            (d.get("grad_sync_bytes") as f64 * per) as f32,
+            (d.get("moe_copy_bytes") as f64 * per) as f32,
+        ];
+        if comm.size() > 1 {
+            comm.all_reduce_sum(&mut v)?;
+            let inv = 1.0 / comm.size() as f32;
+            for x in v.iter_mut() {
+                *x *= inv;
+            }
+        }
+        Ok(ModelFit::from_measurements(
+            self.workers,
+            self.local_size,
+            v[0] as f64,
+            v[1] as f64,
+            v[2] as f64,
+            v[3] as f64,
+            v[4] as f64,
+            v[5] as f64,
+            v[6] as f64,
+            v[7] as f64,
+        ))
+    }
+}
+
+/// The per-step state machine the trainers drive at step boundaries:
+/// calibrate → fit + search → monitor drift → re-calibrate.  All
+/// decisions derive from rank-agreed data only (the fit and the
+/// monitored mean step time both cross an all-reduce), so every rank
+/// transitions identically — the lockstep invariant that makes live
+/// application safe.
+pub struct Autotuner {
+    cfg: AutoConfig,
+    workers: usize,
+    local_size: usize,
+    /// The knobs currently *running* (updated by live application).
+    current: KnobState,
+    /// The knobs the last calibration window ran under.
+    calib_knobs: KnobState,
+    /// Last fit (rank-identical).
+    pub fit: Option<ModelFit>,
+    /// Last search result (rank-identical).
+    pub outcome: Option<TuneOutcome>,
+    /// Open calibration window, if any.
+    cal: Option<Calibrator>,
+    window_steps: usize,
+    window_wall: f64,
+    /// How many drift-triggered re-calibrations have fired.
+    pub retunes: u64,
+}
+
+impl Autotuner {
+    /// Build from the `[auto]` section and the validated `[comm]`
+    /// config the run launched with.
+    pub fn new(cfg: AutoConfig, comm_cfg: &CommConfig, workers: usize) -> Result<Autotuner> {
+        let current = KnobState::from_comm(comm_cfg);
+        let local_size = if current.hier {
+            comm_cfg.topology_for(workers)?.local_size()
+        } else if comm_cfg.local_size > 1 && workers % comm_cfg.local_size == 0 {
+            // flat run on a known node layout: hier is a *candidate*
+            comm_cfg.local_size
+        } else {
+            1
+        };
+        Ok(Autotuner {
+            cfg,
+            workers: workers.max(1),
+            local_size,
+            current,
+            calib_knobs: current,
+            fit: None,
+            outcome: None,
+            cal: None,
+            window_steps: 0,
+            window_wall: 0.0,
+            retunes: 0,
+        })
+    }
+
+    /// Whether live application is configured (`apply = "live"`).
+    pub fn live(&self) -> bool {
+        self.cfg.apply == "live"
+    }
+
+    /// The knobs the tuner believes are running.
+    pub fn current(&self) -> &KnobState {
+        &self.current
+    }
+
+    /// Live mode applied `knobs` at a step boundary: re-base the drift
+    /// anchor on the new point.
+    pub fn note_applied(&mut self, knobs: KnobState) {
+        self.current = knobs;
+    }
+
+    /// The drift anchor: the calibration window's *measured* step time,
+    /// re-based by the modelled delta if the running knobs have changed
+    /// since — systematic model offsets (gate GEMMs, host copies)
+    /// cancel out of the subtraction.
+    fn anchor(&self) -> Option<f64> {
+        let fit = self.fit.as_ref()?;
+        Some(fit.step_time - score(fit, &self.calib_knobs) + score(fit, &self.current))
+    }
+
+    /// Observe one completed step (`secs` wall time, `counters` as the
+    /// trainer's step counters stand now).  Returns a fresh
+    /// [`TuneOutcome`] exactly when a calibration window just closed —
+    /// the caller reports it and, in live mode, applies
+    /// `outcome.live.knobs` then calls [`Autotuner::note_applied`].
+    pub fn observe(
+        &mut self,
+        comm: &mut impl Comm,
+        counters: &Counters,
+        secs: f64,
+    ) -> Result<Option<TuneOutcome>> {
+        if !self.cfg.enabled {
+            return Ok(None);
+        }
+        if self.cal.is_none() && self.fit.is_none() {
+            // first observed step opens the initial window; this step's
+            // counters are already in the snapshot base, so the window
+            // covers the *next* calib_steps steps exactly
+            self.calib_knobs = self.current;
+            self.cal =
+                Some(Calibrator::begin(counters, self.workers, self.local_size));
+            return Ok(None);
+        }
+        if let Some(cal) = self.cal.as_mut() {
+            cal.record_step(secs);
+            if cal.steps() < self.cfg.calib_steps {
+                return Ok(None);
+            }
+            let fit = cal.finish(comm, counters)?;
+            let outcome = search(&fit, &self.current);
+            self.fit = Some(fit);
+            self.outcome = Some(outcome);
+            self.cal = None;
+            self.window_steps = 0;
+            self.window_wall = 0.0;
+            return Ok(Some(outcome));
+        }
+        // monitoring: accumulate, and at each window boundary agree the
+        // mean measured step time and test it against the anchor
+        self.window_steps += 1;
+        self.window_wall += secs.max(0.0);
+        if self.window_steps < self.cfg.calib_steps {
+            return Ok(None);
+        }
+        let mut v = [(self.window_wall / self.window_steps as f64) as f32];
+        if comm.size() > 1 {
+            comm.all_reduce_sum(&mut v)?;
+            v[0] /= comm.size() as f32;
+        }
+        let measured = v[0] as f64;
+        self.window_steps = 0;
+        self.window_wall = 0.0;
+        if let Some(anchor) = self.anchor() {
+            if anchor > 0.0
+                && ((measured - anchor).abs() / anchor) > self.cfg.retune_drift
+            {
+                self.retunes += 1;
+                self.calib_knobs = self.current;
+                self.cal =
+                    Some(Calibrator::begin(counters, self.workers, self.local_size));
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_workers;
+    use crate::config::ConfigFile;
+
+    fn synthetic_fit(beta: f64, compute: f64, opt: f64, workers: usize) -> ModelFit {
+        let p = ModelFit::preset();
+        ModelFit {
+            alpha: p.alpha,
+            beta,
+            alpha_local: p.alpha_local,
+            beta_local: beta * (p.beta_local / p.beta),
+            host_beta: p.host_beta,
+            compute,
+            opt,
+            gradsync: 0.0,
+            a2a_bytes: 8.0 * (1 << 20) as f64,
+            grad_bytes: 4.0 * (1 << 20) as f64,
+            copy_bytes: 0.0,
+            step_time: 2e-3,
+            workers,
+            local_size: 2,
+        }
+    }
+
+    fn default_knobs() -> KnobState {
+        KnobState::from_comm(&CommConfig::default())
+    }
+
+    #[test]
+    fn search_is_deterministic() {
+        let fit = synthetic_fit(12.5e9, 1e-3, 2e-4, 8);
+        let current = default_knobs();
+        let first = search(&fit, &current);
+        for _ in 0..50 {
+            let again = search(&fit, &current);
+            assert_eq!(first, again, "same fit must give the same config");
+            assert_eq!(
+                first.best.predicted.to_bits(),
+                again.best.predicted.to_bits(),
+                "prediction must be bit-identical"
+            );
+        }
+        // the snippet is deterministic too
+        assert_eq!(first.best.toml_snippet(), search(&fit, &current).best.toml_snippet());
+    }
+
+    #[test]
+    fn search_prefers_overlap_when_wire_matches_compute() {
+        // wire ≈ compute: the pipelined step strictly beats blocking,
+        // so the argmin must turn overlap on with > 1 chunk
+        let fit = synthetic_fit(12.5e9, 1e-3, 1e-4, 8);
+        let wire = fit.net_model().all_to_all(8, fit.a2a_bytes as usize);
+        assert!(wire > 1e-4 && wire < 1e-2, "operating point sanity: {wire}");
+        let out = search(&fit, &default_knobs());
+        assert!(out.best.knobs.overlap, "overlap must win: {:?}", out.best);
+        let c = out.best.knobs.chunks;
+        assert!(c == 0 || c > 1, "expected multi-chunk or adaptive, got {c}");
+        // and the prediction really is the score of the chosen point
+        assert_eq!(out.best.predicted, score(&fit, &out.best.knobs));
+    }
+
+    #[test]
+    fn search_prefers_zero_when_optimiser_dominates() {
+        // a huge host-optimiser term: ZeRO's opt/n shard beats both the
+        // blocking tail and any bucket pipeline (which can only hide
+        // opt behind wire, not shrink it)
+        let fit = synthetic_fit(12.5e9, 1e-4, 50e-3, 8);
+        let out = search(&fit, &default_knobs());
+        assert!(out.best.knobs.zero, "zero must win: {:?}", out.best);
+        assert!(!out.best.knobs.grad_overlap, "zero excludes grad_overlap");
+    }
+
+    #[test]
+    fn live_respects_restart_only_knobs() {
+        let fit = synthetic_fit(12.5e9, 1e-3, 50e-3, 8);
+        let current = default_knobs(); // flat, no overlap, no grad_overlap
+        let out = search(&fit, &current);
+        // the live point may only move chunks / chunk_policy / bucket_kb
+        assert!(out.live.knobs.same_restart_knobs(&current), "{:?}", out.live);
+        // the global best here flips restart-only knobs (zero), so live
+        // must be the *constrained* optimum, not the global one
+        assert!(out.best.knobs.zero);
+        assert!(!out.live.knobs.zero);
+        assert!(out.live.predicted >= out.best.predicted);
+        // and live never scores worse than simply keeping the current
+        // config (current is in the constrained set)
+        assert!(out.live.predicted <= score(&fit, &current));
+    }
+
+    #[test]
+    fn every_candidate_snippet_round_trips_validation() {
+        // the lattice bakes in the config rules (zero ⊻ grad_overlap,
+        // hier spelling, policy names) — prove it by round-tripping
+        // EVERY candidate's snippet through the real validator
+        let fit = synthetic_fit(12.5e9, 1e-3, 1e-3, 8);
+        let current = default_knobs();
+        let cands = lattice(&fit, &current);
+        assert!(cands.len() > 50, "lattice too small: {}", cands.len());
+        assert!(cands.iter().any(|k| k.hier), "hier candidates missing");
+        assert!(cands.iter().any(|k| k.zero), "zero candidates missing");
+        for k in cands {
+            let t = TunedConfig {
+                knobs: k,
+                local_size: if k.hier { fit.local_size } else { 1 },
+                predicted: 0.0,
+            };
+            let cfg = ConfigFile::parse(&t.toml_snippet())
+                .unwrap_or_else(|e| panic!("snippet parse {k:?}: {e}"))
+                .comm()
+                .unwrap_or_else(|e| panic!("snippet validate {k:?}: {e}"));
+            assert_eq!(cfg.overlap, k.overlap);
+            assert_eq!(cfg.chunks, k.chunks);
+            assert_eq!(cfg.chunk_policy, k.chunk_policy.as_str());
+            assert_eq!(cfg.grad_overlap, k.grad_overlap);
+            assert_eq!(cfg.bucket_kb, k.bucket_kb);
+            assert_eq!(cfg.grad_shard, if k.zero { "zero" } else { "none" });
+            assert_eq!(cfg.topology, if k.hier { "hier" } else { "flat" });
+            if k.hier {
+                // the snippet pins the node split it was scored under
+                let topo = cfg.topology_for(fit.workers).unwrap();
+                assert_eq!(topo.local_size(), fit.local_size);
+            }
+        }
+    }
+
+    #[test]
+    fn hier_candidates_gated_by_divisibility() {
+        let mut fit = synthetic_fit(12.5e9, 1e-3, 1e-3, 8);
+        fit.local_size = 3; // 8 % 3 ≠ 0
+        assert!(lattice(&fit, &default_knobs()).iter().all(|k| !k.hier));
+        fit.local_size = 1; // flat-only world
+        assert!(lattice(&fit, &default_knobs()).iter().all(|k| !k.hier));
+    }
+
+    #[test]
+    fn calibrator_windows_use_deltas_and_agree_across_ranks() {
+        // Each rank measures a DIFFERENT operating point; the fits must
+        // come out rank-identical (all-reduce mean) and reflect only
+        // the window delta, not pre-window history.
+        let fits = run_workers(4, |mut h| {
+            let r = h.rank();
+            let mut c = Counters::new();
+            // pre-window noise that must NOT leak into the fit
+            c.add("moe_a2a_bytes", 999_999_999);
+            c.add("phase_dispatch_ns", 777_777_777);
+            let mut cal = Calibrator::begin(&c, 4, 2);
+            for _ in 0..4 {
+                // per-rank skew around a 1 GB/s link at 1 MiB/step
+                c.add("moe_a2a_bytes", (1 << 20) + r as u64 * 1024);
+                c.add("phase_dispatch_ns", 1_000_000 + r as u64 * 10_000);
+                c.add("phase_compute_ns", 2_000_000);
+                c.add("phase_opt_ns", 500_000);
+                c.add("grad_sync_bytes", 256 * 1024);
+                cal.record_step(3.5e-3);
+            }
+            cal.finish(&mut h, &c)
+        })
+        .unwrap();
+        for f in &fits[1..] {
+            assert_eq!(f, &fits[0], "fit must be rank-identical");
+            assert_eq!(f.beta.to_bits(), fits[0].beta.to_bits());
+        }
+        let f = &fits[0];
+        // delta, not lifetime: ~1 MiB/step, not ~1 GB
+        assert!(
+            f.a2a_bytes > 1e6 && f.a2a_bytes < 2e6,
+            "window leaked history: {} bytes/step",
+            f.a2a_bytes
+        );
+        // fitted link ≈ bytes / (wire − α(w−1)) ≈ 1 GiB/s
+        assert!(
+            f.beta > 0.5e9 && f.beta < 2e9,
+            "beta fit off: {:.3e} B/s",
+            f.beta
+        );
+        assert!((f.compute - 2e-3).abs() < 1e-4, "compute {}", f.compute);
+        assert!((f.opt - 5e-4).abs() < 1e-4, "opt {}", f.opt);
+        assert!((f.step_time - 3.5e-3).abs() < 1e-5);
+        // and the search over the agreed fit is identical everywhere
+        let outs: Vec<TuneOutcome> =
+            fits.iter().map(|f| search(f, &default_knobs())).collect();
+        for o in &outs[1..] {
+            assert_eq!(o, &outs[0]);
+        }
+    }
+
+    #[test]
+    fn degenerate_window_falls_back_to_preset_link() {
+        // zero traffic (single worker, nothing measured): the fit must
+        // come out at the preset, not a division blow-up
+        let fits = run_workers(1, |mut h| {
+            let c = Counters::new();
+            let mut cal = Calibrator::begin(&c, 1, 1);
+            cal.record_step(1e-3);
+            cal.finish(&mut h, &c)
+        })
+        .unwrap();
+        let p = ModelFit::preset();
+        assert_eq!(fits[0].beta, p.beta);
+        assert_eq!(fits[0].alpha, p.alpha);
+        // zero-step window is an error, not a NaN fit
+        let mut h_err = None;
+        run_workers(1, |mut h| {
+            let c = Counters::new();
+            let cal = Calibrator::begin(&c, 1, 1);
+            Ok(cal.finish(&mut h, &c).is_err())
+        })
+        .unwrap()
+        .into_iter()
+        .for_each(|e| h_err = Some(e));
+        assert_eq!(h_err, Some(true));
+    }
+
+    #[test]
+    fn autotuner_calibrates_monitors_and_retunes_on_drift() {
+        let outcomes = run_workers(2, |mut h| {
+            let auto = AutoConfig {
+                enabled: true,
+                calib_steps: 3,
+                retune_drift: 0.25,
+                apply: "report".into(),
+            };
+            let mut tuner = Autotuner::new(auto, &CommConfig::default(), 2)?;
+            let mut c = Counters::new();
+            let fed = |c: &mut Counters| {
+                c.add("moe_a2a_bytes", 1 << 20);
+                c.add("phase_dispatch_ns", 1_000_000);
+                c.add("phase_compute_ns", 1_000_000);
+            };
+            let mut first = None;
+            // steps 1..=4: open (1) + calibrate (2–4) → outcome at 4
+            for step in 1..=4 {
+                fed(&mut c);
+                let got = tuner.observe(&mut h, &c, 2e-3)?;
+                if got.is_some() {
+                    assert_eq!(step, 4, "outcome must land at window close");
+                    first = got;
+                }
+            }
+            let first = first.expect("calibration must produce an outcome");
+            assert!(tuner.fit.is_some());
+            assert_eq!(tuner.retunes, 0);
+            // steady monitoring at the calibrated step time: no retune
+            for _ in 0..6 {
+                fed(&mut c);
+                assert!(tuner.observe(&mut h, &c, 2e-3)?.is_none());
+            }
+            assert_eq!(tuner.retunes, 0, "steady state must not retune");
+            // a 5× slowdown blows the 25% drift budget → window reopens
+            // and the NEXT window close yields a fresh outcome
+            let mut retuned = None;
+            for _ in 0..12 {
+                fed(&mut c);
+                if let Some(o) = tuner.observe(&mut h, &c, 10e-3)? {
+                    retuned = Some(o);
+                    break;
+                }
+            }
+            assert!(retuned.is_some(), "drift must force a re-tune");
+            assert_eq!(tuner.retunes, 1);
+            Ok((first, retuned.unwrap()))
+        })
+        .unwrap();
+        // both ranks saw identical outcomes at both tunes
+        assert_eq!(outcomes[0], outcomes[1]);
+    }
+
+    #[test]
+    fn disabled_autotuner_is_inert() {
+        run_workers(1, |mut h| {
+            let mut tuner =
+                Autotuner::new(AutoConfig::default(), &CommConfig::default(), 1)?;
+            let c = Counters::new();
+            for _ in 0..20 {
+                assert!(tuner.observe(&mut h, &c, 1e-3)?.is_none());
+            }
+            assert!(tuner.fit.is_none() && tuner.outcome.is_none());
+            Ok(())
+        })
+        .unwrap();
+    }
+}

@@ -62,7 +62,9 @@
 pub mod tcp;
 pub mod topology;
 
-pub use topology::{BoundGroup, CommGroups, ProcessGroup, TopoComm, Topology};
+pub use topology::{
+    topology_fallbacks, BoundGroup, CommGroups, ProcessGroup, TopoComm, Topology,
+};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};

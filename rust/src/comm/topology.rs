@@ -63,6 +63,20 @@ const SALT_INTRA: u64 = 1 << 62;
 /// Tag-space band of the inter-node (leaders) group.
 const SALT_INTER: u64 = 1 << 61;
 
+/// Process-wide count of [`Topology::from_hosts`] flat fallbacks — a
+/// hosts list that *looked* multi-node but didn't satisfy the
+/// contiguous-uniform-runs invariant silently loses all locality
+/// routing, which operators should notice (see [`topology_fallbacks`]).
+static TOPOLOGY_FALLBACKS: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(0);
+
+/// How many times [`Topology::from_hosts`] has fallen back to a flat
+/// topology this process (each fallback also logs a one-line warning
+/// with the offending pattern).
+pub fn topology_fallbacks() -> u64 {
+    TOPOLOGY_FALLBACKS.load(std::sync::atomic::Ordering::Relaxed)
+}
+
 /// Static node topology of a world of ranks: `world` ranks in
 /// contiguous blocks of `local_size` per node.  Rank `r` is local rank
 /// `r % local_size` on node `r / local_size`; local rank 0 is the
@@ -156,7 +170,10 @@ impl Topology {
     /// written (`a,a,b,b`).  Anything else (ragged runs, an address
     /// reappearing later, a single host) degrades to [`Topology::flat`]
     /// rather than erroring: flat is always correct, just not
-    /// locality-aware.
+    /// locality-aware.  Every non-trivial fallback logs one warning
+    /// naming the offending pattern and bumps the process-wide
+    /// [`topology_fallbacks`] counter, so a mis-ordered hosts list
+    /// can't silently cost the hierarchical routing.
     pub fn from_hosts(hosts: &[String]) -> Result<Topology> {
         if hosts.is_empty() {
             return Err(Error::Config("topology: empty hosts list".into()));
@@ -168,6 +185,15 @@ impl Topology {
                 _ => h.clone(),
             }
         };
+        let fallback = |why: &str| -> Topology {
+            TOPOLOGY_FALLBACKS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            eprintln!(
+                "warning: topology discovery fell back to flat ({why}) — \
+                 hosts list [{}] loses hierarchical routing",
+                hosts.join(", ")
+            );
+            Topology::flat(hosts.len())
+        };
         // contiguous same-address runs, checking no address reappears
         let mut runs: Vec<(String, usize)> = Vec::new();
         for h in hosts {
@@ -176,15 +202,27 @@ impl Topology {
                 Some((last, n)) if *last == a => *n += 1,
                 _ => {
                     if runs.iter().any(|(seen, _)| *seen == a) {
-                        return Ok(Topology::flat(hosts.len()));
+                        return Ok(fallback(&format!(
+                            "address {a} reappears non-contiguously"
+                        )));
                     }
                     runs.push((a, 1));
                 }
             }
         }
         let local = runs[0].1;
-        if runs.len() < 2 || runs.iter().any(|(_, n)| *n != local) {
+        if runs.len() < 2 {
+            // a single distinct address is the *expected* one-node
+            // layout, not a malformed multi-node list: flat quietly
             return Ok(Topology::flat(hosts.len()));
+        }
+        if runs.iter().any(|(_, n)| *n != local) {
+            let shape: Vec<String> =
+                runs.iter().map(|(a, n)| format!("{a}×{n}")).collect();
+            return Ok(fallback(&format!(
+                "ragged node runs {}",
+                shape.join(", ")
+            )));
         }
         Topology::new(hosts.len(), local)
     }
@@ -790,16 +828,28 @@ mod tests {
         // port-less entries group the same way
         let t = Topology::from_hosts(&hosts(&["a", "a", "a", "b", "b", "b"])).unwrap();
         assert_eq!((t.nodes(), t.local_size()), (2, 3));
-        // one host only → nothing to discover → flat
+        // one host only → nothing to discover → flat, and *not* a
+        // fallback (single-node is the expected layout, no warning)
+        let c0 = topology_fallbacks();
         let t = Topology::from_hosts(&hosts(&["127.0.0.1:1", "127.0.0.1:2"])).unwrap();
         assert!(!t.hierarchical());
-        // ragged runs violate the contiguous-block invariant → flat
+        assert_eq!(topology_fallbacks(), c0, "single host must not warn");
+        // ragged runs violate the contiguous-block invariant → flat,
+        // counted (mixed host list: a×2 then b×1)
         let t = Topology::from_hosts(&hosts(&["a:1", "a:2", "b:1"])).unwrap();
         assert!(!t.hierarchical());
         assert_eq!(t.world(), 3);
-        // an address reappearing non-contiguously → flat, not a bad split
+        // an address reappearing non-contiguously → flat, counted
         let t = Topology::from_hosts(&hosts(&["a:1", "b:1", "a:2", "b:2"])).unwrap();
         assert!(!t.hierarchical());
+        // both degradations above surfaced on the counter (≥, not ==:
+        // other tests in the binary may also trip fallbacks in parallel)
+        assert!(
+            topology_fallbacks() >= c0 + 2,
+            "expected ≥ {} fallbacks, saw {}",
+            c0 + 2,
+            topology_fallbacks()
+        );
         // empty list is a config error
         assert!(Topology::from_hosts(&[]).is_err());
     }

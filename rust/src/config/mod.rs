@@ -653,6 +653,100 @@ impl FaultConfig {
     }
 }
 
+/// Online autotuning — the `[auto]` config section, consumed by
+/// [`crate::autotune::Autotuner`] through the trainers.
+///
+/// ```toml
+/// [auto]
+/// enabled = true       # calibrate + search at all (default off)
+/// calib_steps = 8      # instrumented steps per calibration window
+/// retune_drift = 0.25  # re-calibrate when the measured step time drifts
+///                      # more than this fraction from the prediction
+/// apply = "report"     # "report" (log the recommendation, change nothing)
+///                      # | "live" (apply safe-at-step-boundary knobs:
+///                      # chunks, chunk_policy, bucket_kb — in lockstep)
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutoConfig {
+    /// Master switch; off by default (the seed behaviour — no
+    /// calibration traffic, no recommendation logging).
+    pub enabled: bool,
+    /// Steps per calibration window: the tuner accumulates phase
+    /// timings and byte counters over this many steps before fitting
+    /// the model and (re)searching.  Must be ≥ 1.
+    pub calib_steps: usize,
+    /// Relative drift (|measured − predicted| / predicted) of the
+    /// rank-agreed mean step time above which a new calibration window
+    /// opens.  Must be > 0 and finite; larger = more tolerant.
+    pub retune_drift: f64,
+    /// What to do with the search result: `"report"` logs the chosen
+    /// config as a `[comm]` snippet and changes nothing (bit-identical
+    /// to `enabled = false`); `"live"` applies the step-boundary-safe
+    /// knobs (chunks, chunk_policy, bucket_kb) on every rank in
+    /// lockstep.
+    pub apply: String,
+}
+
+impl Default for AutoConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            calib_steps: 8,
+            retune_drift: 0.25,
+            apply: "report".into(),
+        }
+    }
+}
+
+impl AutoConfig {
+    /// The `[auto]` section of an optional `--config` file, with the
+    /// `--auto` / `--no-auto` flags and `--calib-steps N` /
+    /// `--retune-drift X` / `--auto-apply report|live` CLI overrides.
+    pub fn from_args(args: &crate::cli::Args) -> Result<AutoConfig> {
+        let mut cfg = if let Some(path) = args.get("config") {
+            ConfigFile::load(path)?.auto()?
+        } else {
+            AutoConfig::default()
+        };
+        if args.has_flag("auto") {
+            cfg.enabled = true;
+        }
+        if args.has_flag("no-auto") {
+            cfg.enabled = false;
+        }
+        cfg.calib_steps = args.usize_or("calib-steps", cfg.calib_steps)?;
+        cfg.retune_drift = args.f64_or("retune-drift", cfg.retune_drift)?;
+        cfg.apply = args.choice_or("auto-apply", AUTO_APPLY_KINDS, &cfg.apply)?;
+        cfg.validate()
+    }
+
+    fn validate(self) -> Result<AutoConfig> {
+        if self.calib_steps == 0 {
+            return Err(Error::Config(
+                "auto.calib_steps must be ≥ 1 (the fit needs at least one \
+                 measured step)"
+                    .into(),
+            ));
+        }
+        if !self.retune_drift.is_finite() || self.retune_drift <= 0.0 {
+            return Err(Error::Config(format!(
+                "auto.retune_drift must be a positive fraction, got {}",
+                self.retune_drift
+            )));
+        }
+        if !AUTO_APPLY_KINDS.contains(&self.apply.as_str()) {
+            return Err(Error::Config(format!(
+                "auto.apply must be one of {AUTO_APPLY_KINDS:?}, got `{}`",
+                self.apply
+            )));
+        }
+        Ok(self)
+    }
+}
+
+/// Valid `[auto] apply` values.
+pub const AUTO_APPLY_KINDS: &[&str] = &["report", "live"];
+
 /// Distributed-runtime configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DistConfig {
@@ -833,6 +927,17 @@ impl ConfigFile {
             f.chaos = s.str_or("chaos", &f.chaos);
         }
         f.validate()
+    }
+
+    pub fn auto(&self) -> Result<AutoConfig> {
+        let mut a = AutoConfig::default();
+        if let Some(s) = self.section("auto") {
+            a.enabled = s.bool_or("enabled", a.enabled);
+            a.calib_steps = s.usize_or("calib_steps", a.calib_steps);
+            a.retune_drift = s.f64_or("retune_drift", a.retune_drift);
+            a.apply = s.str_or("apply", &a.apply);
+        }
+        a.validate()
     }
 
     pub fn dist(&self) -> Result<DistConfig> {
@@ -1157,6 +1262,52 @@ window = 4
         assert_eq!(cfg.chaos, "kill@5:r0");
         assert_eq!(FaultConfig::from_args(&argv("x")).unwrap(), FaultConfig::default());
         assert!(FaultConfig::from_args(&argv("x --recover never")).is_err());
+    }
+
+    #[test]
+    fn auto_section_defaults_and_validation() {
+        // no [auto] section at all → disabled, report mode
+        let c = ConfigFile::parse("[train]\nsteps = 1\n").unwrap();
+        assert_eq!(c.auto().unwrap(), AutoConfig::default());
+        assert!(!c.auto().unwrap().enabled);
+        assert_eq!(c.auto().unwrap().apply, "report");
+        // section keys parse
+        let c = ConfigFile::parse(
+            "[auto]\nenabled = true\ncalib_steps = 4\nretune_drift = 0.5\n\
+             apply = \"live\"\n",
+        )
+        .unwrap();
+        let cfg = c.auto().unwrap();
+        assert!(cfg.enabled);
+        assert_eq!(cfg.calib_steps, 4);
+        assert!((cfg.retune_drift - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.apply, "live");
+        // zero calibration window, non-positive drift, bad apply mode
+        let c = ConfigFile::parse("[auto]\ncalib_steps = 0\n").unwrap();
+        assert!(c.auto().is_err());
+        let c = ConfigFile::parse("[auto]\nretune_drift = 0\n").unwrap();
+        assert!(c.auto().is_err());
+        let c = ConfigFile::parse("[auto]\napply = \"yolo\"\n").unwrap();
+        assert!(c.auto().is_err());
+        // CLI merge mirrors the other sections
+        let argv = |s: &str| {
+            crate::cli::Args::parse(
+                s.split_whitespace().map(|x| x.to_string()),
+                &["auto", "no-auto"],
+            )
+            .unwrap()
+        };
+        let cfg = AutoConfig::from_args(&argv(
+            "x --auto --calib-steps 3 --retune-drift 0.1 --auto-apply live",
+        ))
+        .unwrap();
+        assert!(cfg.enabled);
+        assert_eq!(cfg.calib_steps, 3);
+        assert!((cfg.retune_drift - 0.1).abs() < 1e-12);
+        assert_eq!(cfg.apply, "live");
+        assert_eq!(AutoConfig::from_args(&argv("x")).unwrap(), AutoConfig::default());
+        assert!(AutoConfig::from_args(&argv("x --auto-apply dryrun")).is_err());
+        assert!(AutoConfig::from_args(&argv("x --calib-steps 0")).is_err());
     }
 
     #[test]

@@ -25,6 +25,7 @@
 //! | `[serve]` | `port` (front-end listener for client sessions, default `47800`; the expert-parallel mesh keeps its own `base_port + rank` range), `max_batch` (token rows admitted into one forward step; `0` = the layer batch `nb`, larger values clamp to it), `queue_depth` (bound on tokens queued beyond the in-flight batch, default `1024`; a request that would exceed it is rejected immediately — admission control, not back-pressure), `idle_ms` (how long an undersized batch waits for more arrivals before stepping anyway, default `50` — continuous batching's latency/utilisation knob) |
 //! | `[comm]`  | `overlap` (pipeline the MoE dispatch/compute/combine against the wire, default `false`), `chunks` (ring-offset peer groups per exchange; `1` = blocking, `0` = adaptive from the previous step's measured wire:compute ratio, clamped to the worker count), `chunk_policy` (`"mean"` \| `"max"` — how ranks agree the adaptive chunk count from their exchanged ratios: the default mean, or the straggler-aware max where the slowest rank decides), `pool` (step-persistent buffer pools on the hot path, default `true`; `false` reallocates every step — A/B knob, bit-identical outputs), `progress` (TCP progress engine: per-peer reader threads drain arrivals during expert compute and `isend` departs eagerly, default `false`; thread-channel workers ignore it), `grad_overlap` (bucketed nonblocking gradient all-reduce in the trainers: `MoeLayerTrainer` flies the gate-grad bucket during the expert backward, `DistTrainer` pipelines bucket completions against host Adam; default `false`, bit-identical results either way), `bucket_kb` (target gradient-bucket payload in KiB, default `512`, must be ≥ 1; tensors are never split across buckets — that is what keeps the overlapped bits identical to the blocking per-tensor rings), `grad_shard` (`"none"` \| `"zero"` — ZeRO-style sharded optimizer under the bucketed sync, default `"none"` = every rank runs full Adam on the all-reduced gradients; `"zero"` reduce-scatters each per-tensor ring so every rank owns a contiguous gradient shard, runs Adam on *only* that shard (~1/workers optimizer memory and host math) and all-gathers the updated parameters — same wire volume as the plain ring, bit-identical parameters, rail-aware across nodes under `topology = "hier"`; mutually exclusive with `grad_overlap`), `topology` (`"flat"` \| `"hier"` — collective routing policy, default `"flat"` = the seed ring, bit-for-bit; `"hier"` routes the all-to-all through node leaders, builds the two-level tree all-reduce under the bucketed sync, and orders the pipelined layer's exchange chunks most-local-first), `nodes` / `local_size` (the hier node split: contiguous rank blocks of `local_size`, lowest rank = leader; give either — they must agree if both — default two nodes; `world % local_size` must be 0) |
 //! | `[fault]` | `recover` (`"abort"` \| `"degrade"` \| `"rejoin"` — what to do when a worker is declared dead, default `"abort"` = unwind with a typed error; `"degrade"` quarantines the dead rank at the next step boundary and keeps training on the survivors — shadow-covered experts fail over to their replicas, uncovered ones are score-masked; `"rejoin"` additionally restores a restarted rank from its latest checkpoint plus live shadow transfer and returns to full strength), `ckpt_interval` (periodic per-rank checkpoint cadence in steps, default `0` = off; atomic tmp+rename writes of params, Adam moments and counters), `ckpt_dir` (checkpoint directory, default `"ckpt"`), `recv_timeout_ms` (receive deadline in milliseconds on thread and tcp backends, default `0` = wait forever; an expiry surfaces as the typed, peer-attributed timeout error that feeds suspicion), `chaos` (deterministic fault schedule for testing, default empty; comma-separated `kill@N:rR`, `delay@N:rR:MS`, `rejoin@N:rR` events fired at step boundaries) |
+//! | `[auto]`  | `enabled` (online autotuning: calibrate an α-β cost model from measured phase timers and search the `[comm]` knob lattice for the modelled-fastest config, default `false` = no calibration traffic at all), `calib_steps` (instrumented steps per calibration window, default `8`, must be ≥ 1), `retune_drift` (relative drift of the rank-agreed measured step time from the prediction above which a fresh calibration window opens, default `0.25`, must be > 0), `apply` (`"report"` \| `"live"` — what to do with the search result, default `"report"` = log the winning config as a pasteable `[comm]` snippet and change nothing, bit-identical to disabled; `"live"` applies the step-boundary-safe knobs — `chunks`, `chunk_policy`, `bucket_kb` — on every rank in lockstep, leaving restart-only knobs like `topology`/`grad_shard` as recommendations) |
 
 use std::collections::BTreeMap;
 

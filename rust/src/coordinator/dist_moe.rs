@@ -919,7 +919,9 @@ impl DistMoeLayer {
                 b
             })
             .collect();
+        let t = Instant::now();
         let recv_count_bufs = comm.all_to_all_v(count_bufs)?;
+        counters.add("phase_dispatch_ns", t.elapsed().as_nanos() as u64);
         self.drain_spent(comm, &mut pool);
         let recv_counts: Vec<Vec<u32>> = recv_count_bufs
             .iter()
@@ -932,7 +934,9 @@ impl DistMoeLayer {
         let sent_bytes: usize = send.iter().map(|b| b.len() * 4).sum();
         counters.add("moe_a2a_bytes", sent_bytes as u64);
         counters.add("moe_copy_bytes", sent_bytes as u64);
+        let t = Instant::now();
         let recv = comm.all_to_all_v(send)?;
+        counters.add("phase_dispatch_ns", t.elapsed().as_nanos() as u64);
         self.drain_spent(comm, &mut pool);
 
         let mut eb = ExpertBatch::shell_pooled(
@@ -954,12 +958,16 @@ impl DistMoeLayer {
             "moe_real_rows",
             eb.rows_per_expert.iter().sum::<usize>() as u64,
         );
+        let t = Instant::now();
         let ys = self.expert.forward(&eb)?;
+        counters.add("phase_compute_ns", t.elapsed().as_nanos() as u64);
         let ret = eb.split_outputs_pooled(&ys, &mut pool, ROLE_WIRE)?;
         let ret_bytes: usize = ret.iter().map(|b| b.len() * 4).sum();
         counters.add("moe_a2a_bytes", ret_bytes as u64);
         counters.add("moe_copy_bytes", ret_bytes as u64);
+        let t = Instant::now();
         let back = comm.all_to_all_v(ret)?;
+        counters.add("phase_combine_ns", t.elapsed().as_nanos() as u64);
         self.drain_spent(comm, &mut pool);
         let mut y_slots = pool.take_tensor_filled(ROLE_PACKED, &[self.nb * self.k, self.dm])?;
         let unpacked = plan.unpack_returned_into(&back, self.dm, &mut y_slots)?;
@@ -1025,7 +1033,9 @@ impl DistMoeLayer {
         let sent_bytes: usize = send.iter().map(|b| b.len() * 4).sum();
         counters.add("moe_a2a_bytes", sent_bytes as u64);
         counters.add("moe_copy_bytes", sent_bytes as u64);
+        let t = Instant::now();
         let recv = comm.all_to_all_v(send)?;
+        counters.add("phase_dispatch_ns", t.elapsed().as_nanos() as u64);
         self.drain_spent(comm, &mut pool);
 
         let mut eb = ExpertBatch::shell_pooled(
@@ -1070,7 +1080,9 @@ impl DistMoeLayer {
         );
 
         // ---- native experts, then this rank's replicas ----
+        let t = Instant::now();
         let ys = self.expert.forward(&eb)?;
+        counters.add("phase_compute_ns", t.elapsed().as_nanos() as u64);
         let mut ret = eb.split_outputs_pooled(&ys, &mut pool, ROLE_WIRE)?;
         if let Some(sb) = sb.take() {
             let sh_rows: usize = sb.rows_per_expert.iter().sum();
@@ -1094,7 +1106,9 @@ impl DistMoeLayer {
         let ret_bytes: usize = ret.iter().map(|b| b.len() * 4).sum();
         counters.add("moe_a2a_bytes", ret_bytes as u64);
         counters.add("moe_copy_bytes", ret_bytes as u64);
+        let t = Instant::now();
         let back = comm.all_to_all_v(ret)?;
+        counters.add("phase_combine_ns", t.elapsed().as_nanos() as u64);
         self.drain_spent(comm, &mut pool);
         let mut y_slots = pool.take_tensor_filled(ROLE_PACKED, &[self.nb * self.k, self.dm])?;
         let unpacked = plan.unpack_returned_into(&back, self.dm, &mut y_slots)?;
@@ -1300,7 +1314,8 @@ impl DistMoeLayer {
         for pend in ret_pend {
             wait_chunk(comm, pend, &mut back_parts)?;
         }
-        wire_secs += t.elapsed().as_secs_f64();
+        let ret_wait = t.elapsed().as_secs_f64();
+        wire_secs += ret_wait;
 
         let back: Vec<Vec<f32>> = back_parts
             .into_iter()
@@ -1323,6 +1338,12 @@ impl DistMoeLayer {
             };
             self.adapt.lock().unwrap().my_ratio = ratio;
         }
+        // scoped phase view of the pipelined step for the calibrator:
+        // the pre-return waits are dispatch wire, the return waits are
+        // the combine direction, matching the blocking path's split
+        counters.add("phase_dispatch_ns", ((wire_secs - ret_wait) * 1e9) as u64);
+        counters.add("phase_combine_ns", (ret_wait * 1e9) as u64);
+        counters.add("phase_compute_ns", (compute_secs * 1e9) as u64);
         Ok((eb, y_slots))
     }
 
@@ -1494,7 +1515,9 @@ impl DistMoeLayer {
                 b
             })
             .collect();
+        let t = Instant::now();
         let recv_count_bufs = comm.all_to_all_v(count_bufs)?;
+        counters.add("phase_dispatch_ns", t.elapsed().as_nanos() as u64);
         self.drain_spent(comm, &mut pool);
         let recv_counts: Vec<Vec<u32>> = recv_count_bufs
             .iter()
@@ -1506,7 +1529,9 @@ impl DistMoeLayer {
         let sent_bytes: usize = send.iter().map(|b| b.len() * 4).sum();
         counters.add("moe_a2a_bytes", sent_bytes as u64);
         counters.add("moe_copy_bytes", sent_bytes as u64);
+        let t = Instant::now();
         let recv = comm.all_to_all_v(send)?;
+        counters.add("phase_dispatch_ns", t.elapsed().as_nanos() as u64);
         self.drain_spent(comm, &mut pool);
 
         let mut eb = ExpertBatch::shell_pooled(
@@ -1566,7 +1591,9 @@ impl DistMoeLayer {
         let sent: usize = send.iter().map(|b| b.len() * 4).sum();
         counters.add("moe_a2a_bytes", sent as u64);
         let mut copied = sent as u64;
+        let t = Instant::now();
         let recv = comm.all_to_all_v(send)?;
+        counters.add("phase_dispatch_ns", t.elapsed().as_nanos() as u64);
         self.drain_spent(comm, &mut pool);
         let mut dys_in = pool.take_tensor(
             ROLE_COT,
@@ -1576,7 +1603,9 @@ impl DistMoeLayer {
         self.repool_wire(comm, &mut pool, recv);
 
         // ---- expert shard backward (recompute-style artifact) ----
+        let t = Instant::now();
         let (dxs, expert_grads) = self.expert.backward(eb, &dys_in)?;
+        counters.add("phase_compute_ns", t.elapsed().as_nanos() as u64);
         pool.give_tensor(ROLE_COT, dys_in);
         let gate_synced = self.finish_gate_sync(comm, gate_sync, &mut dwg, &mut dbg)?;
 
@@ -1585,7 +1614,9 @@ impl DistMoeLayer {
         let ret_bytes: usize = ret.iter().map(|b| b.len() * 4).sum();
         counters.add("moe_a2a_bytes", ret_bytes as u64);
         copied += ret_bytes as u64;
+        let t = Instant::now();
         let back = comm.all_to_all_v(ret)?;
+        counters.add("phase_combine_ns", t.elapsed().as_nanos() as u64);
         self.drain_spent(comm, &mut pool);
         let mut dx_packed =
             pool.take_tensor_filled(ROLE_PACKED, &[self.nb * self.k, self.dm])?;
@@ -1665,9 +1696,11 @@ impl DistMoeLayer {
         // behind the expert backward below
         let gate_sync = self.start_gate_sync(comm, &mut dwg, &mut dbg)?;
 
+        let t = Instant::now();
         for pend in disp_pend {
             wait_chunk(comm, pend, &mut recv_parts)?;
         }
+        counters.add("phase_dispatch_ns", t.elapsed().as_nanos() as u64);
         let recv: Vec<Vec<f32>> = recv_parts
             .into_iter()
             .map(|p| p.unwrap_or_default())
@@ -1680,7 +1713,9 @@ impl DistMoeLayer {
         self.repool_wire(comm, &mut pool, recv);
 
         // full-batch expert backward: same reduction order as blocking
+        let t = Instant::now();
         let (dxs, expert_grads) = self.expert.backward(&state.eb, &dys_in)?;
+        counters.add("phase_compute_ns", t.elapsed().as_nanos() as u64);
         pool.give_tensor(ROLE_COT, dys_in);
         let gate_synced = self.finish_gate_sync(comm, gate_sync, &mut dwg, &mut dbg)?;
 
@@ -1699,9 +1734,11 @@ impl DistMoeLayer {
             )?;
         }
         self.drain_spent(comm, &mut pool);
+        let t = Instant::now();
         for pend in ret_pend {
             wait_chunk(comm, pend, &mut back_parts)?;
         }
+        counters.add("phase_combine_ns", t.elapsed().as_nanos() as u64);
         let back: Vec<Vec<f32>> = back_parts
             .into_iter()
             .map(|b| b.unwrap_or_default())
@@ -1724,6 +1761,19 @@ impl DistMoeLayer {
     /// The current expert layout.
     pub fn placement(&self) -> &PlacementPlan {
         &self.placement
+    }
+
+    /// The current adaptive-chunk agreement policy.
+    pub fn chunk_policy(&self) -> ChunkPolicy {
+        self.chunk_policy
+    }
+
+    /// Swap the adaptive-chunk agreement policy (autotune live mode).
+    /// Step-boundary safe in lockstep: the policy only shapes how the
+    /// *next* ratio exchange is reduced, identically on every rank —
+    /// it never touches the wire protocol.
+    pub fn set_chunk_policy(&mut self, p: ChunkPolicy) {
+        self.chunk_policy = p;
     }
 
     /// Floats in one expert's parameter slot (all shard tensors).

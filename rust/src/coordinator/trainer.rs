@@ -13,8 +13,9 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use super::{DistMoeLayer, ExpertMode, GradSync};
+use crate::autotune::Autotuner;
 use crate::comm::Comm;
-use crate::config::CommConfig;
+use crate::config::{AutoConfig, CommConfig};
 use crate::data::Batch;
 use crate::error::{Error, Result};
 use crate::fault::Membership;
@@ -135,6 +136,8 @@ pub struct DistTrainer {
     /// Checkpoint every this many steps (0 = off).
     ckpt_interval: usize,
     ckpt_dir: Option<String>,
+    /// `[auto]` online tuner, when attached (see `crate::autotune`).
+    autotuner: Option<Autotuner>,
 }
 
 impl DistTrainer {
@@ -194,7 +197,28 @@ impl DistTrainer {
             step: 0,
             ckpt_interval: 0,
             ckpt_dir: None,
+            autotuner: None,
         })
+    }
+
+    /// Attach the `[auto]` online tuner (see `crate::autotune`).  Every
+    /// rank must attach one built from identical config — the
+    /// calibrate/search protocol is collective.  In live mode this
+    /// trainer applies the step-boundary-safe knob it owns
+    /// (`bucket_kb`); everything else stays a logged recommendation.
+    pub fn with_autotune(
+        mut self,
+        auto: AutoConfig,
+        comm_cfg: &CommConfig,
+    ) -> Result<DistTrainer> {
+        let workers = self.sync.dp_group.len();
+        self.autotuner = Some(Autotuner::new(auto, comm_cfg, workers)?);
+        Ok(self)
+    }
+
+    /// The attached tuner, read-only (test + bench introspection).
+    pub fn autotuner(&self) -> Option<&Autotuner> {
+        self.autotuner.as_ref()
     }
 
     /// Enable periodic checkpointing: every `interval` steps each rank
@@ -285,6 +309,7 @@ impl DistTrainer {
 
     /// One synchronous distributed step. Returns the *global* mean loss.
     pub fn train_step(&mut self, comm: &mut impl Comm, batch: &Batch) -> Result<f32> {
+        let t0 = std::time::Instant::now();
         self.step += 1;
         let n = self.params.len();
         let mut inputs: Vec<HostTensor> = Vec::with_capacity(2 + n);
@@ -308,6 +333,7 @@ impl DistTrainer {
             // shard-local Adam on the owned slice, all-gather of the
             // *updated params* — with later buckets' rounds in flight
             // while earlier buckets step (see GradSync::sync_zero).
+            let t = std::time::Instant::now();
             self.sync.sync_zero(
                 comm,
                 &mut grads,
@@ -315,12 +341,15 @@ impl DistTrainer {
                 &mut self.params.tensors,
                 &mut self.opt,
             )?;
+            comm.counters()
+                .add("phase_gradsync_ns", t.elapsed().as_nanos() as u64);
         } else if self.sync.overlap && comm.size() > 1 {
             // Overlapped: the shared launch/complete protocol, with
             // host Adam as the per-bucket hook — while bucket i's
             // parameters step, each later bucket has its current ring
             // round in flight (rounds advance inside the waits, one
             // outstanding round per bucket).
+            let t = std::time::Instant::now();
             self.opt.begin_step();
             let (opt, params) = (&mut self.opt, &mut self.params);
             self.sync.sync_overlapped(comm, &mut grads, &tags, |b, grads| {
@@ -329,10 +358,23 @@ impl DistTrainer {
                 }
                 Ok(())
             })?;
+            comm.counters()
+                .add("phase_gradsync_ns", t.elapsed().as_nanos() as u64);
         } else {
+            let t = std::time::Instant::now();
             self.sync.sync(comm, &mut grads, &tags)?;
+            comm.counters()
+                .add("phase_gradsync_ns", t.elapsed().as_nanos() as u64);
             // host Adam (bit-compatible with the fused in-graph update)
+            let t = std::time::Instant::now();
             self.opt.update(&mut self.params.tensors, &grads)?;
+            comm.counters()
+                .add("phase_opt_ns", t.elapsed().as_nanos() as u64);
+        }
+        if comm.size() > 1 {
+            let bytes: usize =
+                self.params.tensors.iter().map(|t| t.data.len() * 4).sum();
+            comm.counters().add("grad_sync_bytes", bytes as u64);
         }
 
         if self.ckpt_interval > 0 && self.step % self.ckpt_interval as u64 == 0 {
@@ -344,7 +386,40 @@ impl DistTrainer {
         // global mean loss for logging
         let mut loss_buf = vec![local_loss];
         comm.all_reduce_sum(&mut loss_buf)?;
-        Ok(loss_buf[0] / comm.size() as f32)
+        let loss = loss_buf[0] / comm.size() as f32;
+        self.autotune_observe(comm, t0.elapsed().as_secs_f64())?;
+        Ok(loss)
+    }
+
+    /// Feed the completed step to the tuner; when a calibration window
+    /// just closed, report the recommendation (rank 0) and in live mode
+    /// apply the step-boundary-safe knob this trainer owns
+    /// (`bucket_kb`).  The tuner's outcome is rank-agreed, so every
+    /// rank re-buckets at the same boundary — and bucketing never
+    /// changes parameter bits, only the sync schedule.
+    fn autotune_observe(&mut self, comm: &mut impl Comm, secs: f64) -> Result<()> {
+        let Some(tuner) = self.autotuner.as_mut() else {
+            return Ok(());
+        };
+        let snap = comm.counters().clone();
+        let Some(outcome) = tuner.observe(comm, &snap, secs)? else {
+            return Ok(());
+        };
+        if tuner.live() {
+            let k = outcome.live.knobs;
+            self.sync.bucket_bytes = k.bucket_kb * 1024;
+            tuner.note_applied(k);
+        }
+        if comm.rank() == 0 {
+            eprintln!(
+                "[auto] dist step {}: predicted best {:.3} ms/step — \
+                 recommended [comm]:\n{}",
+                self.step,
+                outcome.best.predicted * 1e3,
+                outcome.best.toml_snippet()
+            );
+        }
+        Ok(())
     }
 }
 
@@ -392,6 +467,8 @@ pub struct MoeLayerTrainer {
     /// Checkpoint every this many steps (0 = off).
     ckpt_interval: usize,
     ckpt_dir: Option<String>,
+    /// `[auto]` online tuner, when attached (see `crate::autotune`).
+    autotuner: Option<Autotuner>,
 }
 
 impl MoeLayerTrainer {
@@ -437,7 +514,30 @@ impl MoeLayerTrainer {
             degraded: None,
             ckpt_interval: 0,
             ckpt_dir: None,
+            autotuner: None,
         }
+    }
+
+    /// Attach the `[auto]` online tuner (see `crate::autotune`): every
+    /// rank must attach one built from identical config — the
+    /// calibrate/search/apply protocol is collective, like the
+    /// rebalancer's.  `comm_cfg` must be the `[comm]` section the layer
+    /// was built from.  In live mode the trainer applies the
+    /// step-boundary-safe knobs (`chunks`, `chunk_policy`) in lockstep;
+    /// restart-only knobs stay logged recommendations.
+    pub fn with_autotune(
+        mut self,
+        auto: AutoConfig,
+        comm_cfg: &CommConfig,
+    ) -> Result<MoeLayerTrainer> {
+        self.autotuner =
+            Some(Autotuner::new(auto, comm_cfg, self.layer.workers)?);
+        Ok(self)
+    }
+
+    /// The attached tuner, read-only (test + bench introspection).
+    pub fn autotuner(&self) -> Option<&Autotuner> {
+        self.autotuner.as_ref()
     }
 
     /// Attach a placement [`Rebalancer`]; every rank must attach an
@@ -500,6 +600,8 @@ impl MoeLayerTrainer {
         // schedules stay world-aligned) and zeroes the balance-loss gate
         // grads its drained forward still produced.
         let ws = comm.size();
+        let gate_bytes = ((grads.dwg.data.len() + grads.dbg.data.len()) * 4) as u64;
+        let sync_t = crate::metrics::Phase::start();
         match self.degraded.clone() {
             Some(m) if m.is_dead(self.layer.rank) => {
                 // `all_reduce_sum_group` consumes one seq per call —
@@ -543,12 +645,23 @@ impl MoeLayerTrainer {
             }
             None => {}
         }
+        // visible (unhidden) gate-sync wire time; under grad_overlap
+        // the bucket flew during the expert backward, so ~0 lands here
+        // — exactly the phase view the autotune calibrator wants
+        sync_t.stop(counters, "phase_gradsync_ns");
+        if ws > 1 {
+            counters.add("grad_sync_bytes", gate_bytes);
+        }
         self.monitor.record(&state.counts_kept);
+        let opt_t = crate::metrics::Phase::start();
         if self.layer.grad_shard {
+            // the ZeRO schedule fuses its sync into the optimiser step,
+            // so its rings land in this phase rather than the one above
             self.layer.apply_grads_zero(comm, &mut self.opt, &grads)?;
         } else {
             self.layer.apply_grads(&mut self.opt, &grads)?;
         }
+        opt_t.stop(counters, "phase_opt_ns");
         // Keep shadow replicas bit-identical to their owners (a no-op
         // without shadows), then let the rebalancer — if any — agree on
         // and execute a layout change at this step boundary.
@@ -560,19 +673,73 @@ impl MoeLayerTrainer {
                 self.layer.apply_delta(comm, &delta, &mut self.opt)?;
             }
         }
+        let secs = t0.elapsed().as_secs_f64();
+        self.autotune_observe(comm, counters, secs)?;
         let stats = MoeStepStats {
             step: self.step,
             loss,
             balance: state.balance,
             imbalance: self.monitor.imbalance(),
             flops: 3.0 * self.layer.flops(&state),
-            secs: t0.elapsed().as_secs_f64(),
+            secs,
         };
         // hand the step's padded batch + combine input back to the
         // layer's arena so the next step allocates nothing
         self.layer.recycle(state);
         self.maybe_checkpoint()?;
         Ok(stats)
+    }
+
+    /// Feed the completed step to the tuner; when a calibration window
+    /// just closed, report the recommendation (rank 0) and in live mode
+    /// apply the step-boundary-safe knobs in lockstep.  Safe because
+    /// the tuner's outcome derives only from rank-agreed data (the same
+    /// invariant `moe::agree_chunks` and the rebalancer rely on):
+    /// every rank writes the same `chunks`/`chunk_policy` at the same
+    /// boundary, and the chunked schedule is bit-identical to blocking
+    /// for any chunk count by construction.
+    fn autotune_observe(
+        &mut self,
+        comm: &mut impl Comm,
+        counters: &Counters,
+        secs: f64,
+    ) -> Result<()> {
+        let Some(tuner) = self.autotuner.as_mut() else {
+            return Ok(());
+        };
+        let Some(outcome) = tuner.observe(comm, counters, secs)? else {
+            return Ok(());
+        };
+        let live = tuner.live();
+        if live {
+            let k = outcome.live.knobs;
+            self.layer.chunks = if k.chunks == 0 {
+                0 // adaptive: sched() resolves it per step
+            } else {
+                k.chunks.clamp(1, self.layer.workers)
+            };
+            self.layer.set_chunk_policy(k.chunk_policy);
+            tuner.note_applied(k);
+        }
+        if comm.rank() == 0 {
+            let applied = if live {
+                format!(
+                    " (applied: chunks = {}, chunk_policy = \"{}\")",
+                    outcome.live.knobs.chunks,
+                    outcome.live.knobs.chunk_policy.as_str()
+                )
+            } else {
+                String::new()
+            };
+            eprintln!(
+                "[auto] step {}: predicted best {:.3} ms/step{applied} — \
+                 recommended [comm]:\n{}",
+                self.step,
+                outcome.best.predicted * 1e3,
+                outcome.best.toml_snippet()
+            );
+        }
+        Ok(())
     }
 
     // ------------------------------------------------------------------

@@ -25,6 +25,7 @@
 //! | [`coordinator`] | workers, the distributed MoE layer + [`coordinator::MoeLayerBuilder`] (assembles gate/expert from `[moe]`, exchange schedule from `[comm]` — blocking, or zero-copy chunked dispatch/compute/combine overlap with the count round folded into chunk 0 and a step-persistent buffer pool), tag-aware [`coordinator::GradSync`] (blocking, or `[comm] grad_overlap`: bucketed nonblocking sync — gate-grad buckets fly during the expert backward, `DistTrainer` pipelines bucket completions against host Adam; bit-identical either way; or `[comm] grad_shard = "zero"`: the ZeRO-sharded optimizer — reduce-scatter, shard-local Adam on ~1/workers of the state, all-gather of updated params, bit-identical to replicated Adam), train loops |
 //! | [`serve`] | the `fastmoe serve` inference daemon: a rank-0 front end (TCP listener speaking the mesh frame format to lightweight client sessions) feeding a continuous-batching [`serve::Batcher`] (per-step `max_batch` admission, bounded `queue_depth`, explicit rejections), resident [`coordinator::ServeLoop`] workers on the forward-only zero-copy path, per-request latency [`metrics::Histogram`]s, and a thin [`serve::ClientConn`] for load generation |
 //! | [`placement`] | dynamic expert placement (§6 "future work", closed-loop): [`placement::PlacementPlan`] (expert → owner + shadow replicas, plan-aware routing for [`moe::DispatchPlan::build_routed`]), the pure rank-symmetric [`placement::decide`] policy (`[placement] policy = "shadow" \| "migrate"`), and the [`placement::Rebalancer`] driving it from windowed load counts over an all-reduce — executed between steps by [`coordinator::DistMoeLayer::apply_delta`] (shadow replication with owner-broadcast Adam mirroring, or checkpoint-format expert migration with its optimiser state) |
+//! | [`autotune`] | online autotuning (closes the paper's co-design loop): [`autotune::Calibrator`] fits the α-β [`sim::NetModel`] from a few instrumented steps (scoped phase timers + byte counters over a [`metrics::Counters::delta_since`] window, α pinned to the preset for identifiability, fit rank-agreed by an all-reduce mean), the pure deterministic [`autotune::search`] ranks the discrete `[comm]` knob lattice (chunks × chunk_policy × bucket_kb × flat/hier × overlap/grad_overlap/grad_shard) with the fitted model, and the [`autotune::Autotuner`] state machine drives `[auto]` at step boundaries — `apply = "report"` prints the winner as a pasteable `[comm]` snippet, `apply = "live"` applies the step-boundary-safe knobs in lockstep and re-calibrates when measured step time drifts past `retune_drift` |
 //! | [`fault`] | elastic fault recovery: dissemination-gossip membership agreement over the reserved [`fault::FAULT_TAG`] band, the `[fault] recover = "abort" \| "degrade" \| "rejoin"` policy (quarantine-zombie degraded mode with shadow-replica failover + score-masked zero-weight drops, checkpoint/peer-transfer rejoin), and the deterministic [`fault::ChaosSchedule`] harness (`kill@N:rR`, `delay@N:rR:MS`, `rejoin@N:rR`) fired at step boundaries by [`fault::Recovery::poll`] on both backends |
 //! | [`model`] | parameter store, Adam, checkpoints (+ the expert-slot pack/unpack wire format migrations and replicas ride on, and the atomic tmp+rename named-tensor files the periodic `[fault] ckpt_interval` checkpoints use) |
 //! | [`data`] | synthetic corpus, tokenizer, batching |
@@ -32,6 +33,7 @@
 //! | [`sim`] | analytic network timing model (IB EDR / PCIe presets; scores overlapped steps as max(wire, compute) per chunk, a host bytes-copied + allocation cost term for the zero-copy study, the bucketed grad-sync pipeline vs the serial blocking trainer tail, and a second intra-node link (`alpha_local`/`beta_local`) with `*_hier` step variants + the [`sim::NetModel::hier_favourable`] regime predicate for the flat-vs-hier study) |
 //! | [`config`], [`cli`], [`metrics`], [`bench`], [`testing`], [`rng`], [`util`] | substrates (no external deps available offline) |
 
+pub mod autotune;
 pub mod bench;
 pub mod cli;
 pub mod comm;

@@ -8,6 +8,9 @@
 //!                  [--overlap --chunks N] …
 //!                                      # expert-parallel layer demo
 //! fastmoe fmoefy --experts N           # Listing-1 config transform
+//! fastmoe tune [--workers W] [--calib-steps N] …
+//!                                      # calibrate α-β model, print the
+//!                                      # recommended [comm] settings
 //! fastmoe serve [--workers W] [--serve-port P] [--max-batch N]
 //!               [--queue-depth N] [--idle-ms N] [--backend local|tcp]
 //!                                      # resident inference daemon
@@ -31,8 +34,8 @@ use std::sync::Arc;
 use fastmoe::cli::{Args, Usage};
 use fastmoe::comm::{self, Comm, TopoComm};
 use fastmoe::config::{
-    fmoefy, CommConfig, ConfigFile, FaultConfig, ModelConfig, MoeConfig,
-    PlacementConfig, ServeConfig, TrainConfig,
+    fmoefy, AutoConfig, CommConfig, ConfigFile, FaultConfig, ModelConfig,
+    MoeConfig, PlacementConfig, ServeConfig, TrainConfig,
 };
 use fastmoe::coordinator::{
     DistTrainer, MoeLayerBuilder, MoeLayerTrainer, ServeLoop, Trainer,
@@ -56,16 +59,18 @@ fn main() {
         commands: vec![
             ("info", "print artifact and model inventory"),
             ("train", "single-worker fused training loop (Figure 7)"),
-            ("dist-train", "multi-worker training with tag-aware grad sync (--grad-overlap --bucket-kb N --grad-shard none|zero --topology flat|hier --nodes N --ckpt-interval N --ckpt-dir D --resume D)"),
-            ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk, --overlap --chunks N [0=adaptive] --chunk-policy mean|max --no-pool --progress --grad-overlap --topology flat|hier --nodes N --local-size N --placement static|shadow|migrate --placement-threshold R --placement-window N --recover abort|degrade|rejoin --ckpt-interval N --ckpt-dir D --resume D --recv-timeout-ms N --chaos \"kill@N:rR,…\")"),
+            ("dist-train", "multi-worker training with tag-aware grad sync (--grad-overlap --bucket-kb N --grad-shard none|zero --topology flat|hier --nodes N --ckpt-interval N --ckpt-dir D --resume D --auto --calib-steps N --retune-drift R --auto-apply report|live)"),
+            ("dist-moe", "expert-parallel MoE layer demo (Figure 2; --gate topk|switch|noisy_topk, --overlap --chunks N [0=adaptive] --chunk-policy mean|max --no-pool --progress --grad-overlap --topology flat|hier --nodes N --local-size N --placement static|shadow|migrate --placement-threshold R --placement-window N --recover abort|degrade|rejoin --ckpt-interval N --ckpt-dir D --resume D --recv-timeout-ms N --chaos \"kill@N:rR,…\" --auto --calib-steps N --retune-drift R --auto-apply report|live)"),
             ("fmoefy", "Listing-1: dense config -> MoE config at equal FLOPs"),
+            ("tune", "calibrate the α-β network model on a short instrumented run and print the recommended [comm] settings (--workers W --calib-steps N --gate …; all dist-moe knobs accepted)"),
             ("serve", "long-lived inference daemon: continuous batching over resident expert-parallel workers (--workers W --serve-port P --max-batch N --queue-depth N --idle-ms N --backend local|tcp --hosts a:p,b:p)"),
             ("client", "load generator for `serve` (--addr host:port --requests N --rows R --dm D --concurrency C --shutdown)"),
         ],
     };
     let args = match Args::from_env(&[
         "verbose", "moe", "dense", "overlap", "no-overlap", "no-pool", "progress",
-        "no-progress", "grad-overlap", "no-grad-overlap", "shutdown",
+        "no-progress", "grad-overlap", "no-grad-overlap", "shutdown", "auto",
+        "no-auto",
     ]) {
         Ok(a) => a,
         Err(e) => {
@@ -84,6 +89,7 @@ fn main() {
         "_serve-worker" => run(serve_worker_proc(&args)),
         "client" => run(client(&args)),
         "fmoefy" => run(cmd_fmoefy(&args)),
+        "tune" => run(tune(&args)),
         _ => {
             println!("{}", usage.render());
             0
@@ -200,6 +206,7 @@ fn dist_train(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", 2)?;
     let comm_cfg = CommConfig::from_args(args)?;
     let fault_cfg = FaultConfig::from_args(args)?;
+    let auto_cfg = AutoConfig::from_args(args)?;
     let resume = args.get("resume").map(String::from);
     let rt = Arc::new(Runtime::open_default()?);
     println!(
@@ -226,6 +233,9 @@ fn dist_train(args: &Args) -> Result<()> {
         let mut tr =
             DistTrainer::with_comm(&rt, &model, seed, workers, h.rank(), lr, &comm_cfg)?
                 .with_checkpointing(fault_cfg.ckpt_interval, &fault_cfg.ckpt_dir);
+        if auto_cfg.enabled {
+            tr = tr.with_autotune(auto_cfg.clone(), &comm_cfg)?;
+        }
         if let Some(dir) = &resume {
             tr.load_checkpoint(dir, h.rank())?;
         }
@@ -286,6 +296,7 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
     let comm_cfg = CommConfig::from_args(args)?;
     let place_cfg = PlacementConfig::from_args(args)?;
     let fault_cfg = FaultConfig::from_args(args)?;
+    let auto_cfg = AutoConfig::from_args(args)?;
     let exe = std::env::current_exe()?;
     println!("dist-moe (tcp): spawning {workers} worker processes on ports {port}..");
     let mut children = Vec::new();
@@ -316,7 +327,13 @@ fn dist_moe_tcp(args: &Args) -> Result<()> {
             "--ckpt-interval".into(), fault_cfg.ckpt_interval.to_string(),
             "--ckpt-dir".into(), fault_cfg.ckpt_dir.clone(),
             "--recv-timeout-ms".into(), fault_cfg.recv_timeout_ms.to_string(),
+            "--calib-steps".into(), auto_cfg.calib_steps.to_string(),
+            "--retune-drift".into(), auto_cfg.retune_drift.to_string(),
+            "--auto-apply".into(), auto_cfg.apply.clone(),
         ];
+        if auto_cfg.enabled {
+            argv.push("--auto".into());
+        }
         if !fault_cfg.chaos.is_empty() {
             argv.push("--chaos".into());
             argv.push(fault_cfg.chaos.clone());
@@ -390,19 +407,24 @@ fn tcp_worker(args: &Args) -> Result<()> {
     layer.warm()?;
     let mut counters = Counters::new();
     let place_cfg = PlacementConfig::from_args(args)?;
+    let auto_cfg = AutoConfig::from_args(args)?;
     let fault_active = fault_cfg.recover != "abort"
         || !fault_cfg.chaos.is_empty()
         || fault_cfg.ckpt_interval > 0
         || args.get("resume").is_some();
-    if place_cfg.policy != "static" || fault_active {
-        // dynamic placement moves optimiser state with the experts, and
+    if place_cfg.policy != "static" || fault_active || auto_cfg.enabled {
+        // dynamic placement moves optimiser state with the experts,
         // fault recovery needs checkpoints + degraded-mode gate syncs,
-        // so both need the trainer loop rather than the raw fwd/bwd demo
+        // and the tuner observes full train steps — all three need the
+        // trainer loop rather than the raw fwd/bwd demo
         let lr = args.f64_or("lr", 1e-3)? as f32;
         let n_expert = workers * layer.ne_local;
         let mut tr = MoeLayerTrainer::new(layer, lr)
             .with_placement(Rebalancer::from_config(&place_cfg, n_expert)?)
             .with_checkpointing(fault_cfg.ckpt_interval, &fault_cfg.ckpt_dir);
+        if auto_cfg.enabled {
+            tr = tr.with_autotune(auto_cfg, &comm_cfg)?;
+        }
         if let Some(dir) = args.get("resume") {
             tr.load_checkpoint(dir)?;
         }
@@ -495,6 +517,7 @@ fn dist_moe(args: &Args) -> Result<()> {
     let comm_cfg = CommConfig::from_args(args)?;
     let place_cfg = PlacementConfig::from_args(args)?;
     let fault_cfg = FaultConfig::from_args(args)?;
+    let auto_cfg = AutoConfig::from_args(args)?;
     let resume = args.get("resume").map(String::from);
     let rt = Arc::new(Runtime::open_default()?);
     println!(
@@ -525,6 +548,9 @@ fn dist_moe(args: &Args) -> Result<()> {
         let mut tr = MoeLayerTrainer::new(layer, lr)
             .with_placement(Rebalancer::from_config(&place_cfg, n_expert)?)
             .with_checkpointing(fault_cfg.ckpt_interval, &fault_cfg.ckpt_dir);
+        if auto_cfg.enabled {
+            tr = tr.with_autotune(auto_cfg.clone(), &comm_cfg)?;
+        }
         if let Some(dir) = &resume {
             tr.load_checkpoint(dir)?;
         }
@@ -793,6 +819,87 @@ fn client(args: &Args) -> Result<()> {
         c.shutdown()?;
         println!("shutdown frame sent");
     }
+    Ok(())
+}
+
+/// `fastmoe tune` — the offline entry point to the `[auto]` subsystem:
+/// run a short instrumented calibration on the thread backend, fit the
+/// α-β network model, search the `[comm]` knob lattice with it, and
+/// print the winner as a pasteable TOML snippet.  Accepts the same
+/// `[moe]`/`[comm]` knobs as `dist-moe`, so the calibration runs under
+/// the config you intend to tune *from*.
+fn tune(args: &Args) -> Result<()> {
+    let workers = args.usize_or("workers", 4)?.max(1);
+    let seed = args.u64_or("seed", 7)?;
+    let lr = args.f64_or("lr", 1e-3)? as f32;
+    let moe_cfg = MoeConfig::from_args(args)?;
+    let comm_cfg = CommConfig::from_args(args)?;
+    let mut auto_cfg = AutoConfig::from_args(args)?;
+    // `tune` IS the opt-in; report-only by definition (nothing runs on)
+    auto_cfg.enabled = true;
+    auto_cfg.apply = "report".into();
+    // one warm-up observe opens the window, then calib_steps fill it
+    let steps = args
+        .usize_or("iters", auto_cfg.calib_steps + 1)?
+        .max(auto_cfg.calib_steps + 1);
+    let rt = match Runtime::open_default() {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            println!(
+                "tune: runtime unavailable ({e}); build the AOT artifacts \
+                 first — nothing to calibrate"
+            );
+            return Ok(());
+        }
+    };
+    println!(
+        "tune: {workers} thread workers, {} calibration steps (fit α-β model, \
+         search the [comm] lattice)",
+        auto_cfg.calib_steps
+    );
+    let results = comm::run_workers(workers, move |h| {
+        let mut h = TopoComm::new(h, comm_cfg.topology_for(workers)?)?;
+        let layer = MoeLayerBuilder::from_config(&moe_cfg)
+            .comm_config(&comm_cfg)
+            .seed(seed)
+            .build_for(rt.clone(), &h)?;
+        layer.warm()?;
+        let mut tr = MoeLayerTrainer::new(layer, lr)
+            .with_autotune(auto_cfg.clone(), &comm_cfg)?;
+        let mut counters = Counters::new();
+        let mut rng = Rng::new(seed ^ h.rank() as u64);
+        for _ in 0..steps {
+            let mut x = TensorF32::zeros(&[tr.layer.nb, tr.layer.dm]);
+            rng.fill_normal(&mut x.data, 1.0);
+            tr.train_step(&mut h, x, &mut counters)?;
+        }
+        Ok(match tr.autotuner() {
+            Some(t) => (t.fit, t.outcome),
+            None => (None, None),
+        })
+    })?;
+    // fit + outcome are rank-agreed (all-reduced); rank 0's copy is the
+    // fleet's
+    let (fit, outcome) = results[0];
+    let Some(fit) = fit else {
+        return Err(fastmoe::Error::msg("calibration produced no model fit"));
+    };
+    let Some(outcome) = outcome else {
+        return Err(fastmoe::Error::msg("calibration produced no tuned config"));
+    };
+    println!(
+        "fitted: link {:.2} GB/s, compute {:.3} ms, optimiser {:.3} ms, \
+         measured step {:.3} ms",
+        fit.beta / 1e9,
+        fit.compute * 1e3,
+        fit.opt * 1e3,
+        fit.step_time * 1e3,
+    );
+    println!(
+        "predicted best: {:.3} ms/step — paste into your config:\n\n{}",
+        outcome.best.predicted * 1e3,
+        outcome.best.toml_snippet()
+    );
     Ok(())
 }
 

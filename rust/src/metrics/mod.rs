@@ -273,6 +273,62 @@ impl Counters {
             self.add(k, *v);
         }
     }
+
+    /// A point-in-time copy, for later differencing with
+    /// [`Counters::delta_since`].  Counters are process-lifetime
+    /// monotonic by design (benches report totals), so any *windowed*
+    /// consumer — the autotune `Calibrator`, Rebalancer-style loops —
+    /// must work on deltas or it silently mixes in all prior history.
+    pub fn snapshot(&self) -> Counters {
+        self.clone()
+    }
+
+    /// Per-key difference `self - earlier` (saturating: a key that
+    /// shrank — e.g. after an external reset — reads as 0 rather than
+    /// wrapping).  Keys absent from `earlier` count in full; keys only
+    /// in `earlier` are omitted (their delta is 0).
+    pub fn delta_since(&self, earlier: &Counters) -> Counters {
+        let mut out = Counters::new();
+        for (k, v) in &self.map {
+            let d = v.saturating_sub(earlier.get(k));
+            if d > 0 {
+                out.add(k, d);
+            }
+        }
+        out
+    }
+}
+
+/// Scoped phase timer: measures one instrumented region and records it
+/// as a nanosecond counter (`<name>` holds summed ns, u64).  An explicit
+/// `stop` call — not a Drop guard — so the region body keeps free use
+/// of `&mut Counters`:
+///
+/// ```ignore
+/// let t = Phase::start();
+/// /* ... dispatch wire ... */
+/// t.stop(counters, "phase_dispatch_ns");
+/// ```
+pub struct Phase {
+    start: Instant,
+}
+
+impl Phase {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Record the elapsed nanoseconds under `name` and consume the
+    /// timer.
+    pub fn stop(self, counters: &mut Counters, name: &str) {
+        counters.add(name, self.start.elapsed().as_nanos() as u64);
+    }
+
+    /// Elapsed seconds without recording (for callers that fold the
+    /// measurement into an existing accumulator).
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
 }
 
 /// CSV writer with a fixed header.
@@ -434,6 +490,47 @@ mod tests {
         assert_eq!(a.get("bytes"), 15);
         assert_eq!(a.get("drops"), 1);
         assert_eq!(a.get("missing"), 0);
+    }
+
+    #[test]
+    fn counter_windows_do_not_double_count() {
+        // The lifetime-monotonic counter bug: a windowed consumer that
+        // reads totals sees window 2 = window 1 + window 2.  Two
+        // back-to-back windows over snapshots must each report exactly
+        // their own traffic.
+        let mut c = Counters::new();
+        let w0 = c.snapshot();
+        c.add("bytes", 100);
+        c.add("steps", 1);
+        let w1 = c.snapshot();
+        let d1 = w1.delta_since(&w0);
+        assert_eq!(d1.get("bytes"), 100);
+        assert_eq!(d1.get("steps"), 1);
+        c.add("bytes", 40);
+        c.add("steps", 1);
+        c.add("late", 7); // key born inside window 2 counts in full
+        let d2 = c.delta_since(&w1);
+        assert_eq!(d2.get("bytes"), 40, "window 2 must not include window 1");
+        assert_eq!(d2.get("steps"), 1);
+        assert_eq!(d2.get("late"), 7);
+        // the lifetime total is untouched by snapshotting
+        assert_eq!(c.get("bytes"), 140);
+        // saturating: differencing against a *later* snapshot reads 0
+        assert_eq!(w1.delta_since(&c).get("bytes"), 0);
+    }
+
+    #[test]
+    fn phase_records_nanos() {
+        let mut c = Counters::new();
+        let t = Phase::start();
+        std::thread::sleep(Duration::from_millis(2));
+        t.stop(&mut c, "phase_test_ns");
+        let ns = c.get("phase_test_ns");
+        assert!(ns >= 1_000_000, "expected >= 1ms recorded, got {ns}ns");
+        // additive across stops, like every other counter
+        let t2 = Phase::start();
+        t2.stop(&mut c, "phase_test_ns");
+        assert!(c.get("phase_test_ns") >= ns);
     }
 
     #[test]

@@ -476,6 +476,15 @@ impl ChunkPolicy {
             _ => None,
         }
     }
+
+    /// The config spelling of this policy — [`ChunkPolicy::parse`]'s
+    /// inverse, for emitting `[comm]` snippets.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ChunkPolicy::Mean => "mean",
+            ChunkPolicy::Max => "max",
+        }
+    }
 }
 
 /// Reduce the exchanged per-rank ratios (negative = no measurement

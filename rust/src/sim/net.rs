@@ -1030,4 +1030,89 @@ mod tests {
         let with = m.moe_step_blocking_host(4, 1 << 20, 1e-3, 1 << 20, 1 << 20);
         assert!((with - base - m.host_overhead(1 << 20, 1 << 20)).abs() < 1e-15);
     }
+
+    #[test]
+    fn every_step_score_is_monotone_in_bytes_and_nonnegative() {
+        // The autotune sanity matrix: `autotune::search` ranks candidate
+        // configs by these scores, which is only meaningful if EVERY
+        // `*_step_*` variant is (a) non-negative and (b) strictly
+        // monotone increasing in its byte argument across the whole
+        // search lattice (workers × local_size × chunks × buckets ×
+        // compute/opt corners, both real presets).  A variant that
+        // plateaued or dipped with bytes would let the argmin pick a
+        // config on modelling noise instead of cost.
+        type Score = (&'static str, Box<dyn Fn(usize) -> f64>);
+        let ladder = [64usize, 1 << 12, 1 << 16, 1 << 20, 8 << 20, 64 << 20];
+        for preset in [NetPreset::IbEdr, NetPreset::Pcie3] {
+            let m = NetModel::preset(preset);
+            for w in [2usize, 4, 8, 16] {
+                for l in [1usize, 2, 4] {
+                    if w % l != 0 {
+                        continue;
+                    }
+                    for compute in [0.0, 1e-3] {
+                        for opt in [0.0, 5e-4] {
+                            for c in [1usize, 2, 4, 8] {
+                                for b in [1usize, 4, 16] {
+                                    // every variant the search scores, as
+                                    // bytes → score closures over one
+                                    // lattice point
+                                    let scores: Vec<Score> = vec![
+                                        ("moe_blocking", Box::new(move |x| m.moe_step_blocking(w, x, compute))),
+                                        ("moe_overlapped", Box::new(move |x| m.moe_step_overlapped(w, x, compute, c))),
+                                        ("moe_blocking_hier", Box::new(move |x| m.moe_step_blocking_hier(w, l, x, compute))),
+                                        ("moe_overlapped_hier", Box::new(move |x| m.moe_step_overlapped_hier(w, l, x, compute, c))),
+                                        ("moe_blocking_host", Box::new(move |x| m.moe_step_blocking_host(w, x, compute, x, x / 2))),
+                                        ("moe_overlapped_host", Box::new(move |x| m.moe_step_overlapped_host(w, x, compute, c, x, x / 2))),
+                                        ("moe_blocking_hier_host", Box::new(move |x| m.moe_step_blocking_hier_host(w, l, x, compute, x, x / 2))),
+                                        ("moe_overlapped_hier_host", Box::new(move |x| {
+                                            m.moe_step_overlapped_hier_host(w, l, x, compute, c, x, x / 2)
+                                        })),
+                                        ("grad_blocking", Box::new(move |x| m.grad_step_blocking(w, x, compute, opt))),
+                                        ("grad_overlapped", Box::new(move |x| m.grad_step_overlapped(w, x, compute, opt, b))),
+                                        ("grad_blocking_hier", Box::new(move |x| m.grad_step_blocking_hier(w, l, x, compute, opt))),
+                                        ("grad_overlapped_hier", Box::new(move |x| {
+                                            m.grad_step_overlapped_hier(w, l, x, compute, opt, b)
+                                        })),
+                                        ("grad_zero", Box::new(move |x| m.grad_step_zero(w, x, compute, opt))),
+                                        ("grad_zero_hier", Box::new(move |x| m.grad_step_zero_hier(w, l, x, compute, opt))),
+                                        ("serve_step", Box::new(move |x| m.serve_step(w, x, compute))),
+                                        ("moe_skewed", Box::new(move |x| {
+                                            m.moe_step_skewed(&vec![100.0; w], x, compute)
+                                        })),
+                                    ];
+                                    for (name, f) in &scores {
+                                        let mut last = -1.0f64;
+                                        for &bytes in &ladder {
+                                            let t = f(bytes);
+                                            assert!(
+                                                t.is_finite() && t >= 0.0,
+                                                "{preset:?} {name} w={w} l={l} c={c} b={b} \
+                                                 bytes={bytes}: score {t} not finite/≥0"
+                                            );
+                                            assert!(
+                                                t > last,
+                                                "{preset:?} {name} w={w} l={l} c={c} b={b} \
+                                                 compute={compute} opt={opt}: score not \
+                                                 strictly monotone at {bytes} bytes \
+                                                 ({t} !> {last})"
+                                            );
+                                            last = t;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // disabled model: scores stay non-negative (and byte-flat, which
+        // is why `search` requires a *fitted* — enabled — model)
+        let none = NetModel::preset(NetPreset::None);
+        for &bytes in &ladder {
+            assert!(none.moe_step_blocking(8, bytes, 1e-3) >= 0.0);
+            assert!(none.grad_step_overlapped(8, bytes, 1e-3, 1e-4, 4) >= 0.0);
+        }
+    }
 }

@@ -1,0 +1,275 @@
+//! Autotune equivalence: the `[auto]` subsystem must never change the
+//! math, and its decisions must be the same on every rank.
+//!
+//! The load-bearing properties of `autotune` (PR 10):
+//!
+//! * **Rank symmetry** — the calibrated fit is an all-reduced *mean* of
+//!   per-rank measurements, so even under deliberately skewed per-rank
+//!   timings every rank derives the same `ModelFit` bits, and the pure
+//!   `search` run on it returns the same `TuneOutcome` everywhere.
+//!   Pinned on the thread backend and on real sockets.
+//! * **Report transparency** — `apply = "report"` adds collectives (the
+//!   fit agreement) but touches no knob: losses, parameters and Adam
+//!   moments are *bitwise* identical to a run with the tuner disabled,
+//!   step after step.
+//! * **Live transparency** — `apply = "live"` may re-chunk the exchange
+//!   and re-bucket the grad sync at step boundaries, but every knob it
+//!   is allowed to touch is math-transparent by construction, so the
+//!   run stays bitwise identical to an untuned one — and the applied
+//!   knobs agree across ranks.
+//! * **Re-chunk == fresh launch** — flipping `chunks`/`chunk_policy`
+//!   mid-run at a step boundary (exactly what live apply does) produces
+//!   the same bits as a run launched with the new chunking from step 0.
+//!
+//! Ports: 49600 (calibration agreement over tcp).  See
+//! `placement_equivalence.rs` / `serve_integration.rs` for the
+//! neighbouring allocations.
+
+use std::sync::Arc;
+
+use fastmoe::autotune::{search, Calibrator, KnobState, ModelFit, TuneOutcome};
+use fastmoe::comm::tcp::TcpGroup;
+use fastmoe::comm::{run_workers, Comm};
+use fastmoe::config::{AutoConfig, CommConfig};
+use fastmoe::coordinator::{MoeLayerBuilder, MoeLayerTrainer};
+use fastmoe::metrics::Counters;
+use fastmoe::moe::ChunkPolicy;
+use fastmoe::rng::Rng;
+use fastmoe::runtime::Runtime;
+use fastmoe::tensor::TensorF32;
+
+const WORKERS: usize = 2;
+const LR: f32 = 1e-3;
+
+fn rt() -> Option<Arc<Runtime>> {
+    Runtime::open_default().ok().map(Arc::new)
+}
+
+fn assert_bits(what: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (j, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what} elem {j}: {x} != {y}");
+    }
+}
+
+fn assert_trainers_bitwise(what: &str, a: &MoeLayerTrainer, b: &MoeLayerTrainer) {
+    for ((name, p1), (_, p2)) in a.layer.params().iter().zip(b.layer.params().iter()) {
+        assert_bits(&format!("{what} {name}"), &p1.data, &p2.data);
+    }
+    for (i, (m1, m2)) in a.optimizer().m.iter().zip(&b.optimizer().m).enumerate() {
+        assert_bits(&format!("{what} adam.m[{i}]"), &m1.data, &m2.data);
+    }
+    for (i, (v1, v2)) in a.optimizer().v.iter().zip(&b.optimizer().v).enumerate() {
+        assert_bits(&format!("{what} adam.v[{i}]"), &v1.data, &v2.data);
+    }
+}
+
+/// The same deterministic batch on every run for a given (rank, step).
+fn step_input(nb: usize, dm: usize, rank: usize, step: usize) -> TensorF32 {
+    let mut x = TensorF32::zeros(&[nb, dm]);
+    Rng::new(6000 + (step * WORKERS + rank) as u64).fill_normal(&mut x.data, 1.0);
+    x
+}
+
+/// One synthetic instrumented step, deliberately skewed per rank: the
+/// all-reduce mean inside `Calibrator::finish` is what must restore
+/// agreement.
+fn feed_step(c: &mut Counters, rank: usize) {
+    let r = rank as u64;
+    c.add("phase_dispatch_ns", 1_000_000 + 60_000 * r);
+    c.add("phase_combine_ns", 500_000 + 30_000 * r);
+    c.add("phase_compute_ns", 2_000_000 + 100_000 * r);
+    c.add("phase_opt_ns", 400_000 + 20_000 * r);
+    c.add("phase_gradsync_ns", 300_000 + 10_000 * r);
+    c.add("moe_a2a_bytes", 8 << 20);
+    c.add("grad_sync_bytes", 4 << 20);
+    c.add("moe_copy_bytes", 8 << 20);
+}
+
+/// Calibrate over skewed synthetic counters and search; every rank must
+/// come back with the same bits.  Pure of the runtime — it exercises
+/// only the comm substrate, so it runs everywhere.
+fn calibrate_and_search(comm: &mut impl Comm) -> fastmoe::Result<(ModelFit, TuneOutcome)> {
+    let mut counters = Counters::new();
+    // pre-window noise the snapshot delta must exclude
+    counters.add("moe_a2a_bytes", 999_999_999);
+    counters.add("phase_compute_ns", 777);
+    let mut cal = Calibrator::begin(&counters, comm.size(), 2);
+    for _ in 0..5 {
+        feed_step(&mut counters, comm.rank());
+        cal.record_step(3.0e-3 + comm.rank() as f64 * 2.0e-4);
+    }
+    let fit = cal.finish(comm, &counters)?;
+    let outcome = search(&fit, &KnobState::from_comm(&CommConfig::default()));
+    // the search itself must be bit-stable under repetition
+    let again = search(&fit, &KnobState::from_comm(&CommConfig::default()));
+    assert!(outcome == again, "search must be deterministic");
+    Ok((fit, outcome))
+}
+
+fn assert_all_ranks_agree(results: &[(ModelFit, TuneOutcome)]) {
+    let (fit0, out0) = &results[0];
+    for (r, (fit, out)) in results.iter().enumerate() {
+        assert!(fit == fit0, "rank {r} fit diverged: {fit:?} vs {fit0:?}");
+        assert!(out == out0, "rank {r} outcome diverged");
+        // strict bit identity on the fields the drift check and the
+        // argmin hang off (PartialEq alone can't see -0.0 vs 0.0)
+        assert_eq!(fit.beta.to_bits(), fit0.beta.to_bits());
+        assert_eq!(fit.step_time.to_bits(), fit0.step_time.to_bits());
+        assert_eq!(
+            out.best.predicted.to_bits(),
+            out0.best.predicted.to_bits()
+        );
+        assert_eq!(out.live.predicted.to_bits(), out0.live.predicted.to_bits());
+    }
+}
+
+#[test]
+fn calibrated_search_is_rank_symmetric_thread() {
+    let results =
+        run_workers(4, |mut h| calibrate_and_search(&mut h)).unwrap();
+    assert_all_ranks_agree(&results);
+    assert_eq!(results[0].0.workers, 4);
+}
+
+#[test]
+fn calibrated_search_is_rank_symmetric_tcp() {
+    const TCP_WORKERS: usize = 3;
+    let joins: Vec<_> = (0..TCP_WORKERS)
+        .map(|rank| {
+            std::thread::spawn(move || -> fastmoe::Result<(ModelFit, TuneOutcome)> {
+                let mut g = TcpGroup::connect_local(rank, TCP_WORKERS, 49600)?;
+                let out = calibrate_and_search(&mut g)?;
+                g.barrier()?;
+                Ok(out)
+            })
+        })
+        .collect();
+    let results: Vec<_> = joins
+        .into_iter()
+        .enumerate()
+        .map(|(rank, j)| {
+            j.join()
+                .unwrap_or_else(|_| panic!("tcp rank {rank} panicked"))
+                .unwrap()
+        })
+        .collect();
+    assert_all_ranks_agree(&results);
+    assert_eq!(results[0].0.workers, TCP_WORKERS);
+}
+
+fn build_trainer(
+    rt: Arc<Runtime>,
+    rank: usize,
+    cfg: &CommConfig,
+    auto: Option<AutoConfig>,
+) -> fastmoe::Result<MoeLayerTrainer> {
+    let layer = MoeLayerBuilder::new()
+        .gate("topk")
+        .seed(77)
+        .comm_config(cfg)
+        .build(rt, WORKERS, rank)?;
+    layer.warm()?;
+    let mut tr = MoeLayerTrainer::new(layer, LR);
+    if let Some(a) = auto {
+        tr = tr.with_autotune(a, cfg)?;
+    }
+    Ok(tr)
+}
+
+/// Drive a tuned and an untuned trainer in lockstep on the same comm
+/// handle and assert bit-identical losses, parameters and Adam moments
+/// after every step.  Returns the knobs the tuner ended on.
+fn assert_tuned_bitwise(
+    comm: &mut impl Comm,
+    rt: Arc<Runtime>,
+    apply: &str,
+) -> fastmoe::Result<KnobState> {
+    let cfg = CommConfig::default();
+    let auto = AutoConfig {
+        enabled: true,
+        calib_steps: 2,
+        apply: apply.into(),
+        ..AutoConfig::default()
+    };
+    let rank = comm.rank();
+    let mut plain = build_trainer(rt.clone(), rank, &cfg, None)?;
+    let mut tuned = build_trainer(rt, rank, &cfg, Some(auto))?;
+    let (mut c1, mut c2) = (Counters::new(), Counters::new());
+    for step in 0..6 {
+        let x = step_input(plain.layer.nb, plain.layer.dm, rank, step);
+        let s1 = plain.train_step(comm, x.clone(), &mut c1)?;
+        let s2 = tuned.train_step(comm, x, &mut c2)?;
+        assert_eq!(
+            s1.loss.to_bits(),
+            s2.loss.to_bits(),
+            "step {step} rank {rank}: loss {} != {}",
+            s1.loss,
+            s2.loss
+        );
+        assert_trainers_bitwise(&format!("step {step} rank {rank}"), &plain, &tuned);
+    }
+    let tuner = tuned.autotuner().expect("tuner attached");
+    assert!(
+        tuner.outcome.is_some(),
+        "a 2-step window over 6 steps must have produced an outcome"
+    );
+    Ok(*tuner.current())
+}
+
+#[test]
+fn report_mode_is_bit_identical_to_disabled() {
+    let Some(rt) = rt() else { return };
+    run_workers(WORKERS, move |mut h| {
+        assert_tuned_bitwise(&mut h, rt.clone(), "report").map(|_| ())
+    })
+    .unwrap();
+}
+
+#[test]
+fn live_mode_is_bit_identical_and_applies_in_lockstep() {
+    let Some(rt) = rt() else { return };
+    let knobs =
+        run_workers(WORKERS, move |mut h| assert_tuned_bitwise(&mut h, rt.clone(), "live"))
+            .unwrap();
+    // whatever live mode applied, it applied the same thing everywhere
+    for (r, k) in knobs.iter().enumerate() {
+        assert!(k == &knobs[0], "rank {r} applied different knobs: {k:?}");
+    }
+}
+
+/// Re-chunking at a step boundary — exactly the writes live apply does
+/// (`layer.chunks`, `layer.set_chunk_policy`) — must match a run that
+/// launched with the new chunking from step 0, bit for bit.
+#[test]
+fn mid_run_rechunk_matches_fresh_launch() {
+    let Some(rt) = rt() else { return };
+    run_workers(WORKERS, move |mut h| {
+        let rank = h.rank();
+        let before = CommConfig { overlap: true, chunks: 2, ..CommConfig::default() };
+        let after = CommConfig { overlap: true, chunks: 4, ..CommConfig::default() };
+        let mut retuned = build_trainer(rt.clone(), rank, &before, None)?;
+        let mut fresh = build_trainer(rt.clone(), rank, &after, None)?;
+        let (mut c1, mut c2) = (Counters::new(), Counters::new());
+        for step in 0..4 {
+            if step == 2 {
+                // the step-boundary re-chunk live mode performs
+                retuned.layer.chunks = 4;
+                retuned.layer.set_chunk_policy(ChunkPolicy::Mean);
+            }
+            let x = step_input(retuned.layer.nb, retuned.layer.dm, rank, step);
+            let s1 = retuned.train_step(&mut h, x.clone(), &mut c1)?;
+            let s2 = fresh.train_step(&mut h, x, &mut c2)?;
+            assert_eq!(
+                s1.loss.to_bits(),
+                s2.loss.to_bits(),
+                "step {step} rank {rank}: loss {} != {}",
+                s1.loss,
+                s2.loss
+            );
+            assert_trainers_bitwise(&format!("step {step} rank {rank}"), &retuned, &fresh);
+        }
+        Ok(())
+    })
+    .unwrap();
+}

@@ -3,8 +3,9 @@
 # as BENCH_pr5.json), the serving latency bench (recorded as
 # BENCH_pr6.json), the skewed-routing placement scenario (recorded as
 # BENCH_pr7.json), the fault/chaos scenario (recorded as
-# BENCH_pr8.json) and the ZeRO-sharded grad-sync record (recorded as
-# BENCH_pr9.json) at the repo root.
+# BENCH_pr8.json), the ZeRO-sharded grad-sync record (recorded as
+# BENCH_pr9.json) and the autotune predicted-vs-measured study
+# (recorded as BENCH_pr10.json) at the repo root.
 #
 #   scripts/bench_report.sh            # default: 4 chunks, 4 iters
 #   CHUNKS=8 ITERS=8 BUCKET_KB=256 NODES=2 scripts/bench_report.sh
@@ -115,6 +116,17 @@ cargo bench --bench fig6_scale -- \
     --iters "$ITERS" --chunks "$CHUNKS" --bucket-kb "$BUCKET_KB" --nodes "$NODES" \
     --json "$ROOT/BENCH_pr9.json"
 
+# 7. autotune (PR 10): the predicted-vs-measured tuner study — the
+#    modelled section searches the [comm] knob lattice over synthetic
+#    comm-bound / balanced / optimiser-bound operating points (asserts
+#    the search is deterministic and never ranks the winner above the
+#    current config); where the runtime is available a real
+#    thread-backend calibration rides along, asserting the fitted model
+#    agrees bitwise across ranks and recording the model-predicted step
+#    time against the measured one plus the recommended [comm] snippet.
+cargo bench --bench fig6_scale -- --autotune \
+    --json "$ROOT/BENCH_pr10.json"
+
 echo "bench_report.sh: wrote $ROOT/BENCH_pr5.json, $ROOT/BENCH_pr6.json," \
-     "$ROOT/BENCH_pr7.json, $ROOT/BENCH_pr8.json and $ROOT/BENCH_pr9.json" \
-     "(and runs/fig6_overlap_measured.json)"
+     "$ROOT/BENCH_pr7.json, $ROOT/BENCH_pr8.json, $ROOT/BENCH_pr9.json" \
+     "and $ROOT/BENCH_pr10.json (and runs/fig6_overlap_measured.json)"

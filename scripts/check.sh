@@ -27,10 +27,14 @@ cargo clippy --all-targets -- -D warnings
 # from checkpoint + live shadow transfer, recv-timeout-fed suspicion —
 # the zero-copy/pooled-receive regressions, the serve suite:
 # batched==sequential bitwise equivalence, admission control, queue
-# overflow, session fairness, and the placement suite: shadow/migration
-# bitwise equivalence plus the skew-model acceptance), then the full run
+# overflow, session fairness, the placement suite: shadow/migration
+# bitwise equivalence plus the skew-model acceptance, and the PR-10
+# autotune suite: rank-symmetric calibration+search on thread and tcp,
+# report-mode bit-transparency, live re-chunk == fresh launch), then
+# the full run
 cargo test -q --test comm_conformance --test trainer_equivalence \
     --test failure_injection --test zero_copy_regression \
-    --test serve_integration --test placement_equivalence
+    --test serve_integration --test placement_equivalence \
+    --test autotune_equivalence
 cargo test -q
 echo "check.sh: all green"
